@@ -1,0 +1,57 @@
+//! Figures 1–3 as text: the optimal 2-bit partition (Fig. 1), the BST over
+//! the composite codes (Fig. 2), and the packed binary layout the GEMV
+//! kernel consumes (Fig. 3, right).
+//!
+//! Run: `cargo run --release --example quant_levels`
+
+use amq::quant::{alternating, bst};
+use amq::util::Rng;
+
+fn main() {
+    // Quantize a sample vector to get real coefficients.
+    let w = Rng::new(1).normal_vec(512, 0.5);
+    let q = alternating::quantize(&w, 2, 2);
+    let (a1, a2) = (q.alphas[0], q.alphas[1]);
+    println!("alternating 2-bit on 512 gaussians -> alpha1 = {a1:.4}, alpha2 = {a2:.4}\n");
+
+    // Fig. 1: codes and partition boundaries.
+    let codes = bst::enumerate_codes(&q.alphas);
+    let mids = bst::midpoints(&codes);
+    println!("Fig. 1 — the four composite codes and the optimal boundaries:");
+    for (i, c) in codes.iter().enumerate() {
+        let b1 = if c.pattern & 1 != 0 { "+1" } else { "-1" };
+        let b2 = if c.pattern & 2 != 0 { "+1" } else { "-1" };
+        println!("  code {i}: {:+.4}   (b1={b1}, b2={b2})", c.value);
+        if i < mids.len() {
+            println!("      boundary: {:+.4}", mids[i]);
+        }
+    }
+
+    // Fig. 2: the BST descent.
+    println!("\nFig. 2 — binary search tree (w compared against each node):");
+    println!("                 [{:+.4}]", mids[1]);
+    println!("                /        \\");
+    println!("        [{:+.4}]          [{:+.4}]", mids[0], mids[2]);
+    println!("        /      \\          /      \\");
+    println!(
+        "  {:+.3}    {:+.3}    {:+.3}    {:+.3}",
+        codes[0].value, codes[1].value, codes[2].value, codes[3].value
+    );
+
+    // Demonstrate k comparisons per entry.
+    for sample in [-1.0f32, -0.3, 0.2, 2.0] {
+        let idx = bst::assign_one(sample, &mids);
+        println!("  w = {sample:+.2} -> code {idx} ({:+.4})", codes[idx].value);
+    }
+
+    // Fig. 3: the packed layout.
+    println!("\nFig. 3 (right) — bit-packed planes fed to XNOR/popcount:");
+    for (i, plane) in q.planes.iter().enumerate().take(2) {
+        let word = plane.words()[0];
+        println!("  b{} (first 64 of 512 entries): {:064b}", i + 1, word);
+    }
+    println!(
+        "\n  dot(b1, b2) via popcount identity: {}  (n - 2*popcount(xor))",
+        q.planes[0].dot_i32(&q.planes[1])
+    );
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the paper's method in five minutes.
+//!
+//! 1. Quantize a weight vector with every method from §2 and compare errors.
+//! 2. Quantize a matrix row-by-row, run the XNOR/popcount GEMV, and check it
+//!    against the dense product.
+//! 3. Show the memory/compute savings the abstract claims.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use amq::kernels::{binary, cost, dense};
+use amq::quant::{self, Method, RowQuantized};
+use amq::util::Rng;
+
+fn main() {
+    // --- 1. Vector quantization, all methods --------------------------------
+    let mut rng = Rng::new(42);
+    let w = rng.laplace_vec(4096, 0.1); // trained-weight-like statistics
+    println!("Quantizing a 4096-dim weight vector (Laplace, scale 0.1):\n");
+    println!("{:<14}{:>12}{:>12}{:>12}", "method", "k=2 rMSE", "k=3 rMSE", "k=4 rMSE");
+    for m in Method::table_order() {
+        print!("{:<14}", m.name());
+        for k in [2, 3, 4] {
+            let q = quant::quantize(&w, k, m);
+            print!("{:>12.4}", quant::relative_mse(&w, &q.dequantize()));
+        }
+        println!();
+    }
+
+    // --- 2. Quantized GEMV vs dense -----------------------------------------
+    let (m, n) = (256, 512);
+    let wm = rng.normal_vec(m * n, 0.1);
+    let x = rng.normal_vec(n, 0.5);
+    let wq = RowQuantized::quantize(&wm, m, n, 2, Method::Alternating { t: 2 });
+    let mut y_q = vec![0.0; m];
+    binary::online_gemv(&wq, &x, 2, &mut y_q); // quantizes x online (T=2)
+    let mut y_fp = vec![0.0; m];
+    dense::gemv(&wm, m, n, &x, &mut y_fp);
+    let err: f64 = {
+        let num: f64 = y_q.iter().zip(&y_fp).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = y_fp.iter().map(|&v| (v as f64).powi(2)).sum();
+        num / den
+    };
+    println!("\n2-bit XNOR/popcount GEMV ({m}x{n}) vs dense: output rMSE {err:.4}");
+
+    // --- 3. The headline numbers --------------------------------------------
+    println!("\nPaper's headline savings at W_h in R^(4096x1024):");
+    for k in [2u64, 3] {
+        println!(
+            "  {k}-bit: ~{:.1}x memory saving, theoretical gamma {:.1}x",
+            cost::memory_saving(4096, 1024, k),
+            cost::theoretical_speedup(4096, 1024, k, k),
+        );
+    }
+    println!("\nNext: `cargo run --release --example train_lm` (end-to-end training)");
+}

@@ -1,0 +1,97 @@
+//! Serving example: start the coordinator with a quantized model, hammer it
+//! with concurrent clients over TCP, and print the latency/throughput
+//! profile — the paper's §1 server scenario.
+//!
+//! Run: `cargo run --release --example serve_lm -- [--clients 8] [--requests 5]`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use amq::cli::Cli;
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Work};
+use amq::server::tcp;
+use amq::util::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::parse(std::iter::once("run".to_string()).chain(std::env::args().skip(1)))?;
+    let clients = cli.get_usize("clients", 8)?;
+    let requests = cli.get_usize("requests", 5)?;
+    let new_tokens = cli.get_usize("tokens", 12)?;
+    let w_bits = cli.get_usize("w-bits", 2)?;
+    let a_bits = cli.get_usize("a-bits", 2)?;
+
+    // Trained checkpoint if available, else random weights (same code path).
+    let config = LmConfig { kind: RnnKind::Lstm, vocab: 2000, hidden: 200, layers: 1 };
+    let ckpt = std::path::Path::new("runs/lstm_fp.amqt");
+    let policy = if w_bits > 0 {
+        PrecisionPolicy::quantized(w_bits, a_bits)
+    } else {
+        PrecisionPolicy::full()
+    };
+    let model = if ckpt.exists() {
+        let c = amq::data::checkpoint::Checkpoint::load(ckpt)?;
+        let w = amq::train::trainer::weights_from_checkpoint(&c, &config)?;
+        println!("serving trained checkpoint {} (W{w_bits}A{a_bits})", ckpt.display());
+        RnnLm::from_weights(config, &w, policy)
+    } else {
+        println!("serving randomly initialized model (run train_lm for a trained one)");
+        RnnLm::random(config, 7, policy)
+    };
+    println!("model bytes: {}", model.bytes());
+
+    let server = InferenceServer::new(Arc::new(model), BatcherConfig::default());
+    let latency = server.latency.clone();
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    std::thread::spawn(move || server.run(work_rx));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let wt = work_tx.clone();
+    std::thread::spawn(move || {
+        let _ = tcp::serve("127.0.0.1:0", wt, move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv()?;
+    println!("listening on {addr}, {clients} clients x {requests} requests x {new_tokens} tokens");
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut lat = Summary::new();
+                for r in 0..requests {
+                    let t = Instant::now();
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    let prime = (c * 31 + r * 7 + 1) % 2000;
+                    writeln!(conn, "GEN {c} {new_tokens} {prime}").unwrap();
+                    let mut line = String::new();
+                    BufReader::new(conn).read_line(&mut line).unwrap();
+                    assert!(line.starts_with("OK GEN "), "{line}");
+                    lat.add(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Summary::new();
+    for h in handles {
+        let mut s = h.join().unwrap();
+        for p in [0.0, 50.0, 100.0] {
+            let _ = s.percentile(p); // consume
+        }
+        all.add(s.mean());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens = (clients * requests * new_tokens) as f64;
+    println!(
+        "done in {wall:.2}s: {:.0} tokens/s aggregate, mean client latency {:.1} ms",
+        total_tokens / wall,
+        all.mean()
+    );
+    println!("{}", latency.snapshot().report("server-side"));
+    let _ = work_tx.send(Work::Shutdown);
+    Ok(())
+}

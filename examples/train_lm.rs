@@ -1,0 +1,119 @@
+//! END-TO-END driver: the full three-layer stack on a real (synthetic-
+//! corpus) workload.
+//!
+//!   Layer 2/1: `make artifacts` lowered the JAX LSTM LM (with the Pallas
+//!              alternating-quantization kernel) to HLO text.
+//!   Layer 3:   this binary generates the ptb-like corpus, drives a few
+//!              hundred AOT train steps through PJRT with the paper's SGD
+//!              schedule, logs the loss curve, then quantizes the trained
+//!              weights with every method and reports the Table-1 panel
+//!              plus serving-side numbers.
+//!
+//! Run: `cargo run --release --example train_lm -- [--steps N] [--epochs E]`
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::path::Path;
+
+use amq::cli::Cli;
+use amq::data::{Corpus, DatasetSpec};
+use amq::exp::quant_tables;
+use amq::model::lm::{PrecisionPolicy, RnnLm};
+use amq::train::{LmTrainer, SgdSchedule};
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::parse(std::iter::once("run".to_string()).chain(std::env::args().skip(1)))?;
+    let epochs = cli.get_usize("epochs", 6)?;
+    let steps = cli.get_usize("steps", 60)?;
+    let eval_steps = cli.get_usize("eval-steps", 20)?;
+    let tag = cli.get_str("tag", "lstm_fp");
+    let artifacts = Path::new("artifacts");
+
+    // --- corpus --------------------------------------------------------------
+    let spec = DatasetSpec::ptb_like().scaled(cli.get_usize("scale", 8)?, 5);
+    let corpus = Corpus::generate(spec);
+    println!(
+        "corpus {}: {} train / {} valid / {} test tokens, vocab {}, unigram ppl {:.0}",
+        corpus.spec.name,
+        corpus.train.len(),
+        corpus.valid.len(),
+        corpus.test.len(),
+        corpus.spec.vocab,
+        corpus.unigram_perplexity()
+    );
+
+    // --- train through the AOT artifacts --------------------------------------
+    let mut trainer = LmTrainer::load(artifacts, &tag)?;
+    println!(
+        "training {tag} ({} params tensors, {} steps/epoch x {epochs} epochs, paper schedule)…",
+        trainer.manifest.params.len(),
+        steps
+    );
+    let t0 = std::time::Instant::now();
+    let schedule = SgdSchedule::new(cli.get_f64("lr", 20.0)?, 1.2, 1e-3, 80);
+    let report = trainer.fit(
+        &corpus.train,
+        &corpus.valid,
+        schedule,
+        epochs,
+        Some(steps),
+        Some(eval_steps),
+        |e, loss, val, lr| {
+            println!("  epoch {e:>2}  train-nll {loss:.4}  val-ppw {val:>8.1}  lr {lr:>6.3}")
+        },
+    )?;
+    let test_ppw = trainer.evaluate(&corpus.test, Some(eval_steps))?;
+    println!(
+        "trained {} steps in {:.1}s — best val ppw {:.1}, test ppw {:.1}",
+        report.steps,
+        t0.elapsed().as_secs_f64(),
+        report.best_val_ppw,
+        test_ppw
+    );
+    // Loss curve must actually go down (the E2E validation contract).
+    let first = *report.epoch_losses.first().unwrap();
+    let last = *report.epoch_losses.last().unwrap();
+    anyhow::ensure!(last < first, "loss curve did not descend: {first:.3} → {last:.3}");
+
+    // --- checkpoint + quantization panel --------------------------------------
+    std::fs::create_dir_all("runs")?;
+    let ckpt_path = Path::new("runs").join(format!("{tag}.amqt"));
+    trainer.checkpoint().save(&ckpt_path)?;
+    println!("checkpoint -> {}", ckpt_path.display());
+
+    let config = trainer.manifest.lm_config();
+    let (weights, source) =
+        quant_tables::load_or_surrogate_weights(Some(&ckpt_path), &config, 0);
+    anyhow::ensure!(source == "trained-checkpoint");
+    let bits = [2usize, 3, 4];
+    let eval_tokens = 2000.min(corpus.test.len());
+    let (rows, fp_ppw) =
+        quant_tables::table1_2(config.kind, &corpus, &config, &weights, &bits, eval_tokens);
+    print!("{}", quant_tables::render(config.kind, &rows, fp_ppw, &bits, source));
+    if let Err(e) = quant_tables::check_shape(&rows) {
+        println!("!! shape check: {e}");
+    }
+
+    // --- serving panel ---------------------------------------------------------
+    println!("\nserving the trained model (quantized 2/2 vs FP), 200 tokens:");
+    for (name, policy) in [
+        ("FP  ", PrecisionPolicy::full()),
+        ("W2A2", PrecisionPolicy::quantized(2, 2)),
+    ] {
+        let lm = RnnLm::from_weights(config, &weights, policy);
+        let t = std::time::Instant::now();
+        let mut state = lm.zero_state();
+        let mut tok = corpus.test[0];
+        for _ in 0..200 {
+            let logits = lm.step(tok, &mut state);
+            tok = amq::model::math::argmax(&logits);
+        }
+        let dt = t.elapsed().as_secs_f64();
+        println!(
+            "  {name}: {:>7.1} tokens/s, {:>9} weight bytes",
+            200.0 / dt,
+            lm.bytes()
+        );
+    }
+    println!("\nE2E OK");
+    Ok(())
+}

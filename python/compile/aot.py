@@ -1,0 +1,178 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the Rust PJRT runtime.
+
+Emits, per tag `{lstm,gru}_{fp,w2a2,w2a3,w3a3}`:
+    artifacts/<tag>_train.hlo.txt     one clipped-SGD STE step
+    artifacts/<tag>_eval.hlo.txt      forward NLL
+    artifacts/<tag>.manifest.txt      geometry + ordered parameter list
+    artifacts/<tag>_init.amqt         initial parameters
+
+HLO **text** (not ``lowered.compile()``/serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids that the crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Flat argument order (the contract with rust/src/train/trainer.rs):
+    params (PARAM_ORDER) | state (h0[, c0]) | x | y | [lr]
+Outputs (return_tuple=True):
+    train: params' | state' | mean_nll        eval: state' | sum_nll | count
+
+Usage: python -m compile.aot [--out DIR] [--tags a,b] [--vocab N] ...
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tensorio
+
+# Shared reduced geometry (DESIGN.md §4: one artifact set serves the three
+# vocab-scaled corpora).
+DEFAULTS = dict(vocab=2000, hidden=200, batch=20, bptt=30)
+
+SETTINGS = {
+    "fp": (0, 0),
+    "w2a2": (2, 2),
+    "w2a3": (2, 3),
+    "w3a3": (3, 3),
+}
+
+
+def all_tags():
+    return [f"{kind}_{s}" for kind in ("lstm", "gru") for s in SETTINGS]
+
+
+def spec_for_tag(tag, geo):
+    kind, setting = tag.split("_")
+    w_bits, a_bits = SETTINGS[setting]
+    return M.ModelSpec(
+        kind=kind, vocab=geo["vocab"], hidden=geo["hidden"], w_bits=w_bits, a_bits=a_bits
+    )
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flat_train_fn(spec):
+    nstate = 2 if spec.kind == "lstm" else 1
+
+    def fn(*args):
+        np_ = len(M.PARAM_ORDER)
+        params = dict(zip(M.PARAM_ORDER, args[:np_]))
+        state = args[np_ : np_ + nstate]
+        x, y, lr = args[np_ + nstate :]
+        new, carry, loss = M.make_train_step(spec)(params, state, x, y, lr)
+        return tuple(new[k] for k in M.PARAM_ORDER) + tuple(carry) + (loss,)
+
+    return fn
+
+
+def flat_eval_fn(spec):
+    nstate = 2 if spec.kind == "lstm" else 1
+
+    def fn(*args):
+        np_ = len(M.PARAM_ORDER)
+        params = dict(zip(M.PARAM_ORDER, args[:np_]))
+        state = args[np_ : np_ + nstate]
+        x, y = args[np_ + nstate :]
+        carry, total, count = M.make_eval_step(spec)(params, state, x, y)
+        return tuple(carry) + (total, count)
+
+    return fn
+
+
+def example_args(spec, geo, with_lr):
+    shapes = M.param_shapes(spec)
+    args = [jax.ShapeDtypeStruct(shapes[k], jnp.float32) for k in M.PARAM_ORDER]
+    nstate = 2 if spec.kind == "lstm" else 1
+    for _ in range(nstate):
+        args.append(jax.ShapeDtypeStruct((geo["batch"], geo["hidden"]), jnp.float32))
+    args.append(jax.ShapeDtypeStruct((geo["batch"], geo["bptt"]), jnp.int32))
+    args.append(jax.ShapeDtypeStruct((geo["batch"], geo["bptt"]), jnp.int32))
+    if with_lr:
+        args.append(jax.ShapeDtypeStruct((), jnp.float32))
+    return args
+
+
+def write_manifest(path, spec, geo):
+    shapes = M.param_shapes(spec)
+    with open(path, "w") as f:
+        f.write(f"kind {spec.kind}\n")
+        f.write(f"vocab {geo['vocab']}\nhidden {geo['hidden']}\n")
+        f.write(f"batch {geo['batch']}\nbptt {geo['bptt']}\n")
+        for name in M.PARAM_ORDER:
+            dims = ",".join(str(d) for d in shapes[name])
+            f.write(f"param {name} {dims}\n")
+
+
+def build_tag(tag, geo, out_dir, seed=1):
+    spec = spec_for_tag(tag, geo)
+    train = flat_train_fn(spec)
+    ev = flat_eval_fn(spec)
+
+    lowered_train = jax.jit(train).lower(*example_args(spec, geo, with_lr=True))
+    with open(os.path.join(out_dir, f"{tag}_train.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_train))
+
+    lowered_eval = jax.jit(ev).lower(*example_args(spec, geo, with_lr=False))
+    with open(os.path.join(out_dir, f"{tag}_eval.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_eval))
+
+    write_manifest(os.path.join(out_dir, f"{tag}.manifest.txt"), spec, geo)
+
+    params = M.init_params(spec, seed=seed)
+    tensorio.save(
+        os.path.join(out_dir, f"{tag}_init.amqt"),
+        {k: np.asarray(v) for k, v in params.items()},
+    )
+    print(f"  wrote {tag} (train+eval+manifest+init)")
+
+
+def build_quant_artifacts(out_dir, rows=64, cols=128, bits=(2, 3)):
+    """Standalone quantization artifacts (w -> dequantized w-hat) for the
+    cross-layer golden test: Rust quantizes the same matrix natively and
+    compares reconstruction error against the Pallas kernel's output."""
+    from .kernels import alt_quant
+
+    for k in bits:
+        fn = lambda w, k=k: (alt_quant.quantize_rows_dequant(w, k, 2),)
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((rows, cols), jnp.float32))
+        with open(os.path.join(out_dir, f"quant_k{k}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"  wrote quant_k{k} ({rows}x{cols})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tags", default=",".join(all_tags()))
+    for k, v in DEFAULTS.items():
+        ap.add_argument(f"--{k}", type=int, default=v)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+    geo = {k: getattr(args, k) for k in DEFAULTS}
+    os.makedirs(args.out, exist_ok=True)
+    tags = [t for t in args.tags.split(",") if t]
+    print(f"AOT lowering {len(tags)} tags to {args.out} (geometry {geo})")
+    for tag in tags:
+        if tag not in all_tags():
+            print(f"  unknown tag {tag}", file=sys.stderr)
+            return 2
+        build_tag(tag, geo, args.out, seed=args.seed)
+    build_quant_artifacts(args.out)
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

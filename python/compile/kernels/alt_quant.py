@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: row-wise alternating multi-bit quantization
+(Algorithms 1 + 2 of the paper) with STE-ready dequantized output.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CPU kernel walks a
+binary search tree per scalar; on a TPU that control flow becomes
+data-parallel mask arithmetic. One program instance owns a VMEM-resident
+block of rows; greedy init, the k x k least-squares refit (unrolled Gaussian
+elimination - k is a compile-time constant <= 4), and the optimal code
+assignment (argmin over the 2^k composite codes == the BST's answer, proven
+in tests against ``ref.bst_assign``) are all dense vector ops over the block.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel into plain HLO that the
+Rust runtime runs. Real-TPU execution would keep the same BlockSpecs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default rows-per-program. 64 rows x 1024 cols x 4B x (k+2 live tensors)
+# stays well under the ~16 MB VMEM budget of a TPU core.
+DEFAULT_BLOCK = 64
+
+
+def _solve_gauss(g, c, k):
+    """Unrolled Gaussian elimination (no pivoting; ridge added by caller)
+    over per-row k x k systems. g: list[list[(rows,)]], c: list[(rows,)]."""
+    g = [[g[i][j] for j in range(k)] for i in range(k)]
+    c = list(c)
+    for col in range(k):
+        for row in range(col + 1, k):
+            f = g[row][col] / g[col][col]
+            for j in range(col, k):
+                g[row][j] = g[row][j] - f * g[col][j]
+            c[row] = c[row] - f * c[col]
+    alphas = [None] * k
+    for row in reversed(range(k)):
+        s = c[row]
+        for j in range(row + 1, k):
+            s = s - g[row][j] * alphas[j]
+        alphas[row] = s / g[row][row]
+    return alphas
+
+
+def _alt_quant_block(w, k, cycles):
+    """Alternating quantization of a (rows, n) block; returns dequantized
+    (rows, n). Pure vector ops — runs inside the Pallas kernel."""
+    n = w.shape[1]
+    # Greedy init (Eq. 4), k static.
+    planes = []
+    alphas = []
+    r = w
+    for _ in range(k):
+        a = jnp.mean(jnp.abs(r), axis=1)  # (rows,)
+        b = jnp.where(r >= 0, 1.0, -1.0)  # (rows, n)
+        r = r - a[:, None] * b
+        alphas.append(a)
+        planes.append(b)
+
+    for _ in range(cycles):
+        # (a) least-squares refit (Eq. 5) with ridge for dependent planes.
+        g = [
+            [
+                jnp.sum(planes[i] * planes[j], axis=1)
+                + (1e-6 * n if i == j else 0.0)
+                for j in range(k)
+            ]
+            for i in range(k)
+        ]
+        c = [jnp.sum(planes[i] * w, axis=1) for i in range(k)]
+        alphas = _solve_gauss(g, c, k)
+        # (b) optimal code re-assignment (Algorithm 1 as argmin over all
+        # 2^k codes — identical answer, data-parallel form).
+        m = 1 << k
+        # values[:, p] = sum_i sign(p, i) * alpha_i
+        signs = (((jnp.arange(m)[:, None] >> jnp.arange(k)[None, :]) & 1) * 2 - 1).astype(
+            w.dtype
+        )  # (m, k)
+        values = sum(signs[None, :, i] * alphas[i][:, None] for i in range(k))  # (rows, m)
+        dist = jnp.abs(w[:, :, None] - values[:, None, :])  # (rows, n, m)
+        idx = jnp.argmin(dist, axis=2)  # (rows, n)
+        planes = [(((idx >> i) & 1) * 2 - 1).astype(w.dtype) for i in range(k)]
+
+    out = sum(alphas[i][:, None] * planes[i] for i in range(k))
+    return out
+
+
+def _kernel(w_ref, o_ref, *, k, cycles):
+    o_ref[...] = _alt_quant_block(w_ref[...], k, cycles)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def quantize_rows_dequant(w, k, cycles=2, block=DEFAULT_BLOCK):
+    """Row-wise alternating quantize + reconstruct of a (rows, n) matrix via
+    the Pallas kernel. Pads rows to a block multiple (zero rows quantize to
+    zero and are sliced off)."""
+    rows, n = w.shape
+    block = min(block, rows)
+    padded = ((rows + block - 1) // block) * block
+    wp = jnp.pad(w, ((0, padded - rows), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, cycles=cycles),
+        out_shape=jax.ShapeDtypeStruct((padded, n), w.dtype),
+        grid=(padded // block,),
+        in_specs=[pl.BlockSpec((block, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, n), lambda i: (i, 0)),
+        interpret=True,
+    )(wp)
+    return out[:rows]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def ste(w, k, cycles=2, block=DEFAULT_BLOCK):
+    """Straight-through estimator (Eq. 7): forward = quantized value,
+    backward = identity on w. A custom VJP (not ``stop_gradient``) because
+    interpret-mode ``pallas_call`` defines no JVP rule to linearize through.
+    """
+    return quantize_rows_dequant(w, k, cycles, block)
+
+
+def _ste_fwd(w, k, cycles, block):
+    return ste(w, k, cycles, block), None
+
+
+def _ste_bwd(k, cycles, block, _res, g):
+    return (g,)
+
+
+ste.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernel: quantized matrix product by per-tile
+reconstruction, the MXU-side analogue of the paper's Fig. 3 layout.
+
+On a real TPU the multi-bit product is evaluated as k_w * k_h rank-1-scaled
+binary contractions; the MXU has no XNOR/popcount datapath, so the efficient
+mapping is: keep the packed planes in VMEM, reconstruct a (BLOCK_R, BLOCK_N)
+weight tile as sum_i alpha_i * b_i (vector ops on the VPU), then feed the
+reconstructed tile to the MXU `dot`. HBM traffic stays at the packed (k-bit)
+footprint — the same bandwidth saving the CPU kernel gets — while the MXU
+runs dense. This kernel expresses that schedule with BlockSpecs;
+``interpret=True`` for CPU-PJRT execution (see alt_quant.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(alphas_ref, planes_ref, x_ref, o_ref, *, k):
+    # alphas (BR, k), planes (BR, k, n), x (n, BC) -> o (BR, BC)
+    alphas = alphas_ref[...]
+    planes = planes_ref[...]
+    x = x_ref[...]
+    # VPU: reconstruct the weight tile from its k binary planes.
+    w_tile = sum(alphas[:, i][:, None] * planes[:, i, :] for i in range(k))
+    # MXU: dense tile matmul.
+    o_ref[...] = jnp.dot(w_tile, x)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def quantized_matmul(alphas, planes, x, block_r=128):
+    """y = (sum_i alpha_i b_i) @ x from the quantized representation.
+
+    alphas: (rows, k), planes: (rows, k, n), x: (n, m) -> (rows, m).
+    """
+    rows, k = alphas.shape
+    n, m = x.shape
+    block_r = min(block_r, rows)
+    padded = ((rows + block_r - 1) // block_r) * block_r
+    ap = jnp.pad(alphas, ((0, padded - rows), (0, 0)))
+    pp = jnp.pad(planes, ((0, padded - rows), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((padded, m), x.dtype),
+        grid=(padded // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, k, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, m), lambda i: (i, 0)),
+        interpret=True,
+    )(ap, pp, x)
+    return out[:rows]

@@ -1,0 +1,118 @@
+"""Pure-jnp reference implementation (correctness oracle) of the paper's
+quantization algorithms.
+
+Everything here is straight-line jnp so it can be checked against the Pallas
+kernels at build time (pytest) and lowered into the L2 graphs when the
+kernels are disabled. Layouts mirror the Rust side: matrices are quantized
+row-by-row; planes use +1/-1 values.
+
+The BST of Algorithm 1 appears in two equivalent data-parallel forms:
+  * ``bst_assign``     — searchsorted against the midpoints of the sorted
+                         code vector (the literal Algorithm 1, k comparisons)
+  * ``argmin_assign``  — brute-force argmin over all 2^k codes (the
+                         TPU-idiomatic masked form used inside the kernel)
+``test_kernels.py`` proves they coincide.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Vector-level primitives, vmapped over rows.
+# ---------------------------------------------------------------------------
+
+
+def greedy_init(w, k):
+    """Eq. 4: residue-greedy initialization.
+
+    w: (n,) -> alphas (k,), planes (k, n) in {-1, +1}.
+    """
+
+    def step(r, _):
+        alpha = jnp.mean(jnp.abs(r))
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        return r - alpha * b, (alpha, b)
+
+    _, (alphas, planes) = jax.lax.scan(step, w, None, length=k)
+    return alphas, planes
+
+
+def lsq_refit(w, planes, ridge=1e-6):
+    """Eq. 5: alphas = (B^T B)^{-1} B^T w, with a tiny ridge for dependent
+    planes. planes: (k, n)."""
+    k, n = planes.shape
+    g = planes @ planes.T + ridge * n * jnp.eye(k, dtype=w.dtype)
+    c = planes @ w
+    return jnp.linalg.solve(g, c)
+
+
+def all_codes(alphas):
+    """All 2^k composite codes: values (2^k,), sign patterns (2^k, k)."""
+    k = alphas.shape[0]
+    patterns = ((jnp.arange(2**k)[:, None] >> jnp.arange(k)[None, :]) & 1) * 2.0 - 1.0
+    values = patterns @ alphas
+    return values, patterns
+
+
+def argmin_assign(w, alphas):
+    """Optimal code assignment by brute-force argmin over the 2^k codes
+    (identical to the BST by optimality). Returns planes (k, n)."""
+    values, patterns = all_codes(alphas)
+    idx = jnp.argmin(jnp.abs(w[None, :] - values[:, None]), axis=0)  # (n,)
+    return patterns[idx].T  # (k, n)
+
+
+def bst_assign(w, alphas):
+    """Algorithm 1 literally: sort the codes, binary-search each entry
+    against the midpoints of adjacent codes (k comparisons/entry)."""
+    values, patterns = all_codes(alphas)
+    order = jnp.argsort(values)
+    values = values[order]
+    patterns = patterns[order]
+    mids = 0.5 * (values[1:] + values[:-1])
+    idx = jnp.searchsorted(mids, w, side="right")
+    return patterns[idx].T
+
+
+def alternating_quantize(w, k, cycles=2):
+    """Algorithm 2: greedy init, then `cycles` x (refit alphas; reassign
+    codes). Returns (alphas (k,), planes (k, n))."""
+    alphas, planes = greedy_init(w, k)
+    for _ in range(cycles):  # static unroll: cycles is a compile-time const
+        alphas = lsq_refit(w, planes)
+        planes = argmin_assign(w, alphas)
+    return alphas, planes
+
+
+def dequantize(alphas, planes):
+    return alphas @ planes
+
+
+# Row-wise (matrix) forms ----------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def quantize_rows(w, k, cycles=2):
+    """Row-by-row alternating quantization of a (rows, n) matrix.
+    Returns (alphas (rows, k), planes (rows, k, n))."""
+    return jax.vmap(lambda row: alternating_quantize(row, k, cycles))(w)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def quantize_rows_dequant(w, k, cycles=2):
+    """Row-wise quantize + reconstruct: the STE forward value."""
+    alphas, planes = quantize_rows(w, k, cycles)
+    return jnp.einsum("rk,rkn->rn", alphas, planes)
+
+
+def relative_mse(w, w_hat):
+    return jnp.sum((w - w_hat) ** 2) / jnp.sum(w**2)
+
+
+def quantized_matmul(alphas, planes, x):
+    """y = (sum_i alpha_i b_i) @ x computed from the quantized representation
+    (the reconstruction contraction the inference kernel evaluates with
+    XNOR/popcount). alphas (r,k), planes (r,k,n), x (n,) or (n,m)."""
+    return jnp.einsum("rk,rkn->rn", alphas, planes) @ x

@@ -1,0 +1,183 @@
+"""Layer-2: quantized LSTM / GRU language models in JAX.
+
+The forward/backward graph implements the paper's bi-level training (Eq. 7)
+with the straight-through estimator: full-precision master weights are
+re-quantized every step by the Layer-1 Pallas kernel (``kernels.alt_quant``),
+activations (`h_t`) are quantized online inside the scan, gradients pass
+through both quantizers unchanged, weights are clipped to [-1, 1] after the
+SGD update (the paper's outlier control), and gradients are clipped to
+global norm 0.25.
+
+Weight layouts match the Rust inference engine exactly
+(`rust/src/model/{lstm,gru}.rs`): gate rows [i, f, o, g] (LSTM) / [r, z, n]
+(GRU); `wx, wh: (gates*H, H)`; row-major.
+
+NOTE dropout: the paper applies dropout 0.5. The AOT artifacts are
+deterministic (no RNG inputs), so dropout is omitted; at the reduced
+step budgets used on this testbed its regularization effect is immaterial.
+Documented in DESIGN.md §4.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import alt_quant
+
+
+class ModelSpec(NamedTuple):
+    kind: str  # "lstm" | "gru"
+    vocab: int
+    hidden: int
+    # 0 = full precision.
+    w_bits: int = 0
+    a_bits: int = 0
+
+    @property
+    def gates(self):
+        return 4 if self.kind == "lstm" else 3
+
+    @property
+    def quantized(self):
+        return self.w_bits > 0
+
+
+PARAM_ORDER = ["embedding", "wx", "wh", "bias", "softmax_w", "softmax_b"]
+
+
+def param_shapes(spec: ModelSpec):
+    g, v, h = spec.gates, spec.vocab, spec.hidden
+    return {
+        "embedding": (v, h),
+        "wx": (g * h, h),
+        "wh": (g * h, h),
+        "bias": (g * h,),
+        "softmax_w": (v, h),
+        "softmax_b": (v,),
+    }
+
+
+def init_params(spec: ModelSpec, seed: int = 0):
+    """U(-0.1, 0.1) init, the standard LM recipe (§5)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes(spec).items():
+        key, sub = jax.random.split(key)
+        if name.startswith("bias") or name == "softmax_b":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = jax.random.uniform(sub, shape, jnp.float32, -0.1, 0.1)
+    return params
+
+
+def _maybe_quantize_weights(params, spec: ModelSpec):
+    """STE row-wise quantization of every weight matrix (not biases)."""
+    if not spec.quantized:
+        return params
+    q = dict(params)
+    for name in ["embedding", "wx", "wh", "softmax_w"]:
+        q[name] = alt_quant.ste(params[name], spec.w_bits)
+    return q
+
+
+def _maybe_quantize_h(h, spec: ModelSpec):
+    """Online activation quantization of the hidden state (per sample)."""
+    if not spec.quantized or spec.a_bits == 0:
+        return h
+    return alt_quant.ste(h, spec.a_bits)
+
+
+def _cell_step(spec: ModelSpec, qp, carry, x_t):
+    """One recurrent step over a batch. x_t: (B, H) embedded input."""
+    h = spec.hidden
+    if spec.kind == "lstm":
+        hp, cp = carry
+        pre = x_t @ qp["wx"].T + hp @ qp["wh"].T + qp["bias"]  # (B, 4H)
+        i = jax.nn.sigmoid(pre[:, 0:h])
+        f = jax.nn.sigmoid(pre[:, h : 2 * h])
+        o = jax.nn.sigmoid(pre[:, 2 * h : 3 * h])
+        g = jnp.tanh(pre[:, 3 * h : 4 * h])
+        c = f * cp + i * g
+        hn = o * jnp.tanh(c)
+        hn = _maybe_quantize_h(hn, spec)
+        return (hn, c), hn
+    else:
+        (hp,) = carry
+        gx = x_t @ qp["wx"].T  # (B, 3H)
+        gh = hp @ qp["wh"].T
+        b = qp["bias"]
+        r = jax.nn.sigmoid(gx[:, 0:h] + gh[:, 0:h] + b[0:h])
+        z = jax.nn.sigmoid(gx[:, h : 2 * h] + gh[:, h : 2 * h] + b[h : 2 * h])
+        n = jnp.tanh(gx[:, 2 * h : 3 * h] + r * gh[:, 2 * h : 3 * h] + b[2 * h : 3 * h])
+        hn = (1.0 - z) * n + z * hp
+        hn = _maybe_quantize_h(hn, spec)
+        return (hn,), hn
+
+
+def forward(spec: ModelSpec, params, state, x):
+    """Run the LM over a window.
+
+    state: (h0,) or (h0, c0) each (B, H); x: (B, T) int32 tokens.
+    Returns (new_state, logits (T, B, V)).
+    """
+    qp = _maybe_quantize_weights(params, spec)
+    emb = jnp.take(qp["embedding"], x, axis=0)  # (B, T, H)
+    xs = jnp.swapaxes(emb, 0, 1)  # (T, B, H)
+    carry, hs = jax.lax.scan(functools.partial(_cell_step, spec, qp), tuple(state), xs)
+    logits = hs @ qp["softmax_w"].T + qp["softmax_b"]  # (T, B, V)
+    return carry, logits
+
+
+def _nll(logits, y):
+    """Sum negative log-likelihood. logits (T, B, V); y (B, T)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    yt = jnp.swapaxes(y, 0, 1)  # (T, B)
+    picked = jnp.take_along_axis(logp, yt[:, :, None], axis=-1)[..., 0]
+    return -jnp.sum(picked)
+
+
+def loss_fn(spec: ModelSpec, params, state, x, y):
+    carry, logits = forward(spec, params, state, x)
+    n = jnp.asarray(x.shape[0] * x.shape[1], jnp.float32)
+    return _nll(logits, y) / n, carry
+
+
+def clip_global_norm(grads, clip):
+    norm = jnp.sqrt(sum(jnp.sum(g**2) for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def make_train_step(spec: ModelSpec, clip=0.25):
+    """(params..., state..., x, y, lr) -> (params'..., state', mean_nll).
+
+    Flat-argument signature for AOT lowering (see aot.py for the order).
+    """
+
+    def step(params, state, x, y, lr):
+        (loss, carry), grads = jax.value_and_grad(
+            lambda p: loss_fn(spec, p, state, x, y), has_aux=True
+        )(params)
+        grads = clip_global_norm(grads, clip)
+        new = {k: params[k] - lr * grads[k] for k in params}
+        # Weight clipping to [-1, 1] (§4 Training).
+        new = {k: jnp.clip(v, -1.0, 1.0) for k, v in new.items()}
+        # Detach the carried state (truncated BPTT across windows).
+        carry = tuple(jax.lax.stop_gradient(c) for c in carry)
+        return new, carry, loss
+
+    return step
+
+
+def make_eval_step(spec: ModelSpec):
+    """(params..., state..., x, y) -> (state', sum_nll, count)."""
+
+    def step(params, state, x, y):
+        carry, logits = forward(spec, params, state, x)
+        total = _nll(logits, y)
+        count = jnp.asarray(x.shape[0] * x.shape[1], jnp.float32)
+        return carry, total, count
+
+    return step

@@ -1,0 +1,50 @@
+"""Named-tensor checkpoint IO — the Python half of the AMQT format shared
+with ``rust/src/data/checkpoint.rs``.
+
+Layout (little-endian):
+    magic "AMQT" | u32 version | u32 tensor_count
+    per tensor: u32 name_len | name | u32 ndim | u64 dims... | f32 data...
+Tensors are written in sorted-name order (matching the Rust BTreeMap).
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"AMQT"
+VERSION = 1
+
+
+def save(path, tensors):
+    """tensors: dict[str, np.ndarray] (float32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError("bad AMQT magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        out = {}
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = tuple(struct.unpack("<Q", f.read(8))[0] for _ in range(ndim))
+            numel = int(np.prod(shape)) if shape else 1
+            data = np.frombuffer(f.read(numel * 4), dtype="<f4")
+            out[name] = data.reshape(shape).copy()
+        return out

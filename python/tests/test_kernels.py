@@ -1,0 +1,133 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py),
+including hypothesis sweeps over shapes/bits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import alt_quant, quant_matmul, ref
+
+
+def rand(shape, seed=0, scale=1.0, heavy=False):
+    rng = np.random.default_rng(seed)
+    if heavy:
+        x = rng.laplace(0.0, scale, size=shape)
+    else:
+        x = rng.normal(0.0, scale, size=shape)
+    return jnp.asarray(x, jnp.float32)
+
+
+# --- reference algorithm invariants ----------------------------------------
+
+
+def test_greedy_init_k1_closed_form():
+    w = rand((64,), 1)
+    alphas, planes = ref.greedy_init(w, 1)
+    assert np.isclose(float(alphas[0]), float(jnp.mean(jnp.abs(w))), atol=1e-6)
+    np.testing.assert_array_equal(np.sign(np.asarray(planes[0])), np.sign(np.where(w >= 0, 1, -1)))
+
+
+def test_lsq_refit_recovers_exact_combination():
+    rng = np.random.default_rng(2)
+    planes = jnp.asarray(np.sign(rng.normal(size=(2, 200))), jnp.float32)
+    w = 0.6 * planes[0] + 0.25 * planes[1]
+    alphas = ref.lsq_refit(w, planes)
+    np.testing.assert_allclose(np.asarray(alphas), [0.6, 0.25], atol=1e-3)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_bst_equals_argmin(k):
+    """Algorithm 1 (BST/searchsorted) and the kernel's argmin form agree."""
+    w = rand((300,), 3 + k)
+    alphas = jnp.abs(rand((k,), 10 + k)) + 0.05
+    d_bst = ref.dequantize(alphas, ref.bst_assign(w, alphas))
+    d_arg = ref.dequantize(alphas, ref.argmin_assign(w, alphas))
+    # Optimal assignments achieve identical distance (patterns may differ on
+    # exact ties).
+    np.testing.assert_allclose(
+        np.abs(np.asarray(w - d_bst)), np.abs(np.asarray(w - d_arg)), atol=1e-5
+    )
+
+
+def test_alternating_monotone_error():
+    w = rand((512,), 5, heavy=True)
+    errs = []
+    for cycles in range(4):
+        alphas, planes = ref.alternating_quantize(w, 2, cycles)
+        errs.append(float(jnp.sum((w - ref.dequantize(alphas, planes)) ** 2)))
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-4
+
+
+def test_alternating_beats_greedy():
+    w = rand((2048,), 6, heavy=True)
+    ga, gp = ref.greedy_init(w, 3)
+    aa, ap = ref.alternating_quantize(w, 3, 2)
+    eg = float(jnp.sum((w - ref.dequantize(ga, gp)) ** 2))
+    ea = float(jnp.sum((w - ref.dequantize(aa, ap)) ** 2))
+    assert ea < eg
+
+
+# --- Pallas kernel vs oracle ------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+@pytest.mark.parametrize("rows,cols", [(4, 32), (64, 200), (130, 64)])
+def test_pallas_matches_ref(k, rows, cols):
+    w = rand((rows, cols), rows * 31 + k, scale=0.3, heavy=True)
+    got = alt_quant.quantize_rows_dequant(w, k, 2)
+    want = ref.quantize_rows_dequant(w, k, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 80),
+    cols=st.integers(2, 96),
+    k=st.integers(1, 3),
+    cycles=st.integers(0, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_matches_ref_hypothesis(rows, cols, k, cycles, seed):
+    w = rand((rows, cols), seed, scale=0.5)
+    got = alt_quant.quantize_rows_dequant(w, k, cycles, block=32)
+    want = ref.quantize_rows_dequant(w, k, cycles)
+    err_got = float(jnp.sum((w - got) ** 2))
+    err_want = float(jnp.sum((w - want) ** 2))
+    # Identical algorithm => identical reconstruction error (ties in the
+    # argmin may pick different-but-equidistant codes).
+    assert err_got <= err_want * (1 + 1e-4) + 1e-5
+    assert err_want <= err_got * (1 + 1e-4) + 1e-5
+
+
+def test_pallas_zero_rows_and_padding():
+    w = jnp.zeros((5, 16), jnp.float32)
+    out = alt_quant.quantize_rows_dequant(w, 2, 2, block=4)  # forces padding
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+def test_ste_gradient_is_identity():
+    w = rand((8, 32), 7)
+
+    def f(w):
+        return jnp.sum(alt_quant.ste(w, 2) ** 2)
+
+    g = jax.grad(f)(w)
+    # STE: d/dw sum(q(w)^2) == 2*q(w) (gradient flows as if q were identity).
+    q = alt_quant.quantize_rows_dequant(w, 2)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * q), atol=1e-4)
+
+
+# --- quantized matmul kernel -------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,n,m,k", [(16, 32, 8, 2), (100, 64, 4, 3)])
+def test_quant_matmul_matches_ref(rows, n, m, k):
+    w = rand((rows, n), 11, scale=0.2)
+    alphas, planes = ref.quantize_rows(w, k, 2)
+    x = rand((n, m), 13)
+    got = quant_matmul.quantized_matmul(alphas, planes, x, block_r=32)
+    want = ref.quantized_matmul(alphas, planes, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)

@@ -1,0 +1,127 @@
+"""Layer-2 checks: model shapes, training-step semantics, quantized variants,
+and the AOT manifest/init contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tensorio
+from compile.aot import SETTINGS, all_tags, example_args, spec_for_tag
+
+
+def tiny_spec(kind="lstm", w_bits=0, a_bits=0):
+    return M.ModelSpec(kind=kind, vocab=50, hidden=16, w_bits=w_bits, a_bits=a_bits)
+
+
+def zero_state(spec, batch):
+    n = 2 if spec.kind == "lstm" else 1
+    return tuple(jnp.zeros((batch, spec.hidden), jnp.float32) for _ in range(n))
+
+
+def toy_batch(spec, batch=4, bptt=6, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, spec.vocab, size=(batch, bptt)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, spec.vocab, size=(batch, bptt)), jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("kind", ["lstm", "gru"])
+def test_forward_shapes(kind):
+    spec = tiny_spec(kind)
+    params = M.init_params(spec)
+    x, _ = toy_batch(spec)
+    state, logits = M.forward(spec, params, zero_state(spec, 4), x)
+    assert logits.shape == (6, 4, 50)
+    assert all(s.shape == (4, 16) for s in state)
+
+
+@pytest.mark.parametrize("kind", ["lstm", "gru"])
+def test_untrained_loss_near_log_vocab(kind):
+    spec = tiny_spec(kind)
+    params = M.init_params(spec)
+    x, y = toy_batch(spec)
+    loss, _ = M.loss_fn(spec, params, zero_state(spec, 4), x, y)
+    assert abs(float(loss) - np.log(50)) < 0.5
+
+
+@pytest.mark.parametrize("kind,setting", [("lstm", "fp"), ("lstm", "w2a2"), ("gru", "w3a3")])
+def test_train_step_reduces_loss_on_repeated_batch(kind, setting):
+    w_bits, a_bits = SETTINGS[setting]
+    spec = tiny_spec(kind, w_bits, a_bits)
+    params = M.init_params(spec)
+    x, y = toy_batch(spec, seed=3)
+    step = jax.jit(M.make_train_step(spec))
+    state = zero_state(spec, 4)
+    losses = []
+    for _ in range(8):
+        params, _, loss = step(params, state, x, y, jnp.float32(2.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_weight_clip_applied():
+    spec = tiny_spec("lstm")
+    params = M.init_params(spec)
+    params["wx"] = params["wx"] + 10.0  # force out of range
+    x, y = toy_batch(spec)
+    step = jax.jit(M.make_train_step(spec))
+    new, _, _ = step(params, zero_state(spec, 4), x, y, jnp.float32(0.1))
+    assert float(jnp.max(jnp.abs(new["wx"]))) <= 1.0 + 1e-6
+
+
+def test_eval_step_counts():
+    spec = tiny_spec("gru")
+    params = M.init_params(spec)
+    x, y = toy_batch(spec)
+    ev = jax.jit(M.make_eval_step(spec))
+    state, total, count = ev(params, zero_state(spec, 4), x, y)
+    assert float(count) == 24.0
+    assert float(total) > 0.0
+
+
+def test_grad_clip_global_norm():
+    grads = {"a": jnp.full((4,), 10.0), "b": jnp.full((2,), -10.0)}
+    clipped = M.clip_global_norm(grads, 0.25)
+    norm = float(jnp.sqrt(sum(jnp.sum(g**2) for g in clipped.values())))
+    assert abs(norm - 0.25) < 1e-5
+
+
+def test_quantized_forward_matches_manual_quantization():
+    """STE forward must equal running the model on pre-quantized weights."""
+    from compile.kernels import alt_quant
+
+    spec_q = tiny_spec("lstm", w_bits=2, a_bits=0)
+    spec_fp = tiny_spec("lstm", w_bits=0, a_bits=0)
+    params = M.init_params(spec_q, seed=5)
+    x, _ = toy_batch(spec_q)
+    _, logits_q = M.forward(spec_q, params, zero_state(spec_q, 4), x)
+    manual = dict(params)
+    for name in ["embedding", "wx", "wh", "softmax_w"]:
+        manual[name] = alt_quant.quantize_rows_dequant(params[name], 2)
+    _, logits_m = M.forward(spec_fp, manual, zero_state(spec_fp, 4), x)
+    np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_m), atol=1e-4)
+
+
+def test_manifest_contract():
+    geo = dict(vocab=100, hidden=8, batch=2, bptt=3)
+    for tag in all_tags():
+        spec = spec_for_tag(tag, geo)
+        shapes = M.param_shapes(spec)
+        assert list(shapes) == M.PARAM_ORDER
+        n_args_train = len(M.PARAM_ORDER) + (2 if spec.kind == "lstm" else 1) + 3
+        assert len(example_args(spec, geo, with_lr=True)) == n_args_train
+
+
+def test_tensorio_roundtrip(tmp_path):
+    t = {
+        "w": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.array([-1.0, 2.0], np.float32),
+    }
+    p = tmp_path / "x.amqt"
+    tensorio.save(p, t)
+    back = tensorio.load(p)
+    assert set(back) == {"w", "b"}
+    np.testing.assert_array_equal(back["w"], t["w"])
+    np.testing.assert_array_equal(back["b"], t["b"])

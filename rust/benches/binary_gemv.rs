@@ -1,0 +1,35 @@
+//! Bench: Table 6 (Appendix A) — binary XNOR/popcount GEMV vs f32 GEMV at
+//! the paper's exact shapes (4096×1024 hidden product, 42000×1024 Text8
+//! softmax), with the online-quantization share broken out, plus the §4
+//! cost model comparison.
+//!
+//! Run: `cargo bench --bench binary_gemv` (full shapes; takes a minute).
+
+use amq::exp::{costmodel, kernel_tables, table6};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let shapes: &[(usize, usize)] = if quick {
+        &[(1024, 1024)]
+    } else {
+        &[(4096, 1024), (42000, 1024)]
+    };
+    let samples = if quick { 7 } else { 15 };
+    eprintln!("benchmarking binary GEMV at {shapes:?} …");
+    let rows = table6(shapes, samples);
+    print!("{}", kernel_tables::render_table6(&rows));
+    print!("{}", costmodel(shapes, &rows));
+
+    // Self-check: quantized must beat FP at every shape (the paper's
+    // headline 2-bit ≈ 6×, 3-bit ≈ 3× on the larger shape).
+    for r in rows.iter().filter(|r| r.bits.is_some()) {
+        assert!(
+            r.accel > 1.0,
+            "no acceleration at {}x{} k={:?}",
+            r.m,
+            r.n,
+            r.bits
+        );
+    }
+    eprintln!("ok");
+}

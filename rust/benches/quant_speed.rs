@@ -1,0 +1,66 @@
+//! Bench: the cost of quantization itself (§3's 2Tk²n + 2(T+1)kn op count
+//! and Table 6's "Quant" column): alternating-quantization throughput
+//! across n and k, compared across methods, plus the BST assignment in
+//! isolation.
+//!
+//! Run: `cargo bench --bench quant_speed`
+
+use amq::kernels::cost;
+use amq::quant::{self, bst, Method};
+use amq::util::timer::{bench_fn, black_box};
+use amq::util::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[1024] } else { &[1024, 4096, 16384] };
+    let samples = if quick { 5 } else { 11 };
+
+    println!("Online quantization cost (alternating, T=2) vs vector length:");
+    for &n in sizes {
+        let w = Rng::new(n as u64).normal_vec(n, 0.5);
+        for k in [1usize, 2, 3, 4] {
+            let r = bench_fn(&format!("alt n={n} k={k}"), samples, || {
+                black_box(quant::alternating::quantize(&w, k, 2));
+            });
+            let c = cost::quantization_cost(n as u64, k as u64, 2);
+            let ops = c.binary_ops as f64 / 32.0 + c.nonbinary_ops as f64;
+            println!(
+                "  n={n:>6} k={k}: {:>9.1} µs  ({:.2} model-ops/ns)",
+                r.median_ns / 1e3,
+                ops / r.median_ns
+            );
+        }
+    }
+
+    println!("\nMethod comparison at n=4096, k=2 (time to quantize):");
+    let w = Rng::new(7).laplace_vec(4096, 0.1);
+    for m in [
+        Method::Uniform,
+        Method::Balanced,
+        Method::Greedy,
+        Method::Refined,
+        Method::Alternating { t: 2 },
+    ] {
+        let r = bench_fn(m.name(), samples, || {
+            black_box(quant::quantize(&w, 2, m));
+        });
+        let q = quant::quantize(&w, 2, m);
+        let e = quant::relative_mse(&w, &q.dequantize());
+        println!("  {:<12} {:>9.1} µs  rMSE {:.4}", m.name(), r.median_ns / 1e3, e);
+    }
+
+    println!("\nBST code assignment alone (Algorithm 1), n=16384:");
+    let w = Rng::new(8).normal_vec(16384, 0.5);
+    for k in [2usize, 3, 4] {
+        let alphas: Vec<f32> = (0..k).map(|i| 0.5f32 / (1 << i) as f32).collect();
+        let r = bench_fn(&format!("bst k={k}"), samples, || {
+            black_box(bst::assign(&w, &alphas));
+        });
+        println!(
+            "  k={k}: {:>9.1} µs  ({:.1} ns/entry, {k} comparisons each)",
+            r.median_ns / 1e3,
+            r.median_ns / 16384.0
+        );
+    }
+    eprintln!("ok");
+}

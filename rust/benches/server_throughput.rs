@@ -1,0 +1,88 @@
+//! Bench: the serving coordinator — tokens/sec and per-request latency as a
+//! function of batch size, full precision vs 2/2 and 3/3 quantized models.
+//! This regenerates the paper's *motivating* claim (§1, abstract): quantized
+//! inference serves more concurrent requests per machine at lower latency.
+//!
+//! Run: `cargo bench --bench server_throughput`
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Request};
+
+fn run_batch(model: Arc<RnnLm>, batch: usize, new_tokens: usize) -> (f64, f64) {
+    let mut server = InferenceServer::new(
+        model,
+        BatcherConfig { max_batch: batch, ..Default::default() },
+    );
+    let mut rxs = Vec::new();
+    let mut reqs = Vec::new();
+    for i in 0..batch {
+        let (tx, rx) = mpsc::channel();
+        reqs.push(Request {
+            session: i as u64,
+            max_new: new_tokens,
+            prime: vec![(i * 13 + 1) % 500],
+            respond: tx,
+            enqueued: Instant::now(),
+        });
+        rxs.push(rx);
+    }
+    let t = Instant::now();
+    server.process_batch(reqs);
+    let elapsed = t.elapsed().as_secs_f64();
+    for rx in rxs {
+        assert_eq!(rx.recv().unwrap().tokens.len(), new_tokens);
+    }
+    let tokens = (batch * new_tokens) as f64;
+    (tokens / elapsed, elapsed * 1e3)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let config = LmConfig {
+        kind: RnnKind::Lstm,
+        vocab: if quick { 500 } else { 2000 },
+        hidden: if quick { 128 } else { 256 },
+        layers: 1,
+    };
+    let new_tokens = if quick { 8 } else { 16 };
+    println!(
+        "Serving throughput, LSTM vocab={} hidden={} ({} new tokens/request):",
+        config.vocab, config.hidden, new_tokens
+    );
+    println!(
+        "{:<10} {:>10} {:>14} {:>12} {:>10}",
+        "model", "batch", "tokens/s", "batch-ms", "bytes"
+    );
+    let variants: Vec<(&str, PrecisionPolicy)> = vec![
+        ("FP", PrecisionPolicy::full()),
+        ("W2A2", PrecisionPolicy::quantized(2, 2)),
+        ("W3A3", PrecisionPolicy::quantized(3, 3)),
+    ];
+    let batches: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+    let mut fp_tps_at_max = 0.0;
+    let mut q2_tps_at_max = 0.0;
+    for (name, policy) in variants {
+        let model = Arc::new(RnnLm::random(config, 99, policy));
+        let bytes = model.bytes();
+        for &b in batches {
+            let (tps, ms) = run_batch(model.clone(), b, new_tokens);
+            println!("{name:<10} {b:>10} {tps:>14.0} {ms:>12.2} {bytes:>10}");
+            if b == *batches.last().unwrap() {
+                if name == "FP" {
+                    fp_tps_at_max = tps;
+                }
+                if name == "W2A2" {
+                    q2_tps_at_max = tps;
+                }
+            }
+        }
+    }
+    let speedup = q2_tps_at_max / fp_tps_at_max;
+    println!("\nW2A2 vs FP serving speedup at max batch: {speedup:.2}x");
+    assert!(speedup > 1.0, "quantized serving must outperform FP");
+    eprintln!("ok");
+}

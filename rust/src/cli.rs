@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser (the vendored crate set has no `clap`):
+//! subcommand + `--key value` / `--flag` options with typed accessors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: `amq <subcommand> [--key value]...`.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut it = args.into_iter();
+        let subcommand = it.next().unwrap_or_default();
+        let mut options = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut pending: Option<String> = None;
+        for a in it {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some(prev) = pending.take() {
+                    options.insert(prev, "true".into()); // bare flag
+                }
+                pending = Some(key.to_string());
+            } else if let Some(key) = pending.take() {
+                options.insert(key, a);
+            } else {
+                positional.push(a);
+            }
+        }
+        if let Some(prev) = pending.take() {
+            options.insert(prev, "true".into());
+        }
+        if subcommand.starts_with("--") {
+            bail!("expected a subcommand before options");
+        }
+        Ok(Cli { subcommand, options, positional })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let c = Cli::parse(args("serve --addr 0.0.0.0:1234 --quantized --max-batch 8 pos1")).unwrap();
+        assert_eq!(c.subcommand, "serve");
+        assert_eq!(c.get("addr"), Some("0.0.0.0:1234"));
+        assert!(c.has("quantized"));
+        assert_eq!(c.get_usize("max-batch", 0).unwrap(), 8);
+        assert_eq!(c.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let c = Cli::parse(args("bench --steps abc")).unwrap();
+        assert!(c.get_usize("steps", 1).is_err());
+        assert!(Cli::parse(args("--oops first")).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Cli::parse(args("bench")).unwrap();
+        assert_eq!(c.get_usize("steps", 42).unwrap(), 42);
+        assert_eq!(c.get_str("out", "x"), "x");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let c = Cli::parse(args("serve --verbose")).unwrap();
+        assert!(c.has("verbose"));
+    }
+}

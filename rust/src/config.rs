@@ -1,0 +1,299 @@
+//! Configuration system: a small TOML-subset parser (sections, strings,
+//! ints, floats, bools) plus the typed configs for the launcher.
+//!
+//! The vendored crate set has no `serde`/`toml`, so the parser is in-tree.
+//! Supported grammar — enough for real deployment configs:
+//!
+//! ```toml
+//! [server]
+//! addr = "127.0.0.1:7860"
+//! max_batch = 16
+//!
+//! [model]
+//! kind = "lstm"       # or "gru"
+//! hidden = 300
+//! w_bits = 2
+//! a_bits = 2
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key → value` map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_int())
+            .map(|v| v as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.values.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.values.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Require a key to exist (for launcher-critical settings).
+    pub fn require(&self, key: &str) -> Result<&Value> {
+        self.values
+            .get(key)
+            .with_context(|| format!("config missing required key '{key}'"))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string {s}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value '{s}'")
+}
+
+// ---------------------------------------------------------------------------
+// Typed launcher configs.
+// ---------------------------------------------------------------------------
+
+use crate::model::{LmConfig, RnnKind};
+
+/// Serving configuration ([server] section).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub max_batch: usize,
+    /// Batching window: how long the batcher waits to fill a batch.
+    pub batch_wait_us: u64,
+    pub max_sessions: usize,
+    pub workers: usize,
+}
+
+impl ServerConfig {
+    pub fn from_config(c: &Config) -> Self {
+        ServerConfig {
+            addr: c.get_str("server.addr", "127.0.0.1:7860"),
+            max_batch: c.get_usize("server.max_batch", 16),
+            batch_wait_us: c.get_usize("server.batch_wait_us", 500) as u64,
+            max_sessions: c.get_usize("server.max_sessions", 1024),
+            workers: c.get_usize("server.workers", 1),
+        }
+    }
+}
+
+/// Model configuration ([model] section).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub lm: LmConfig,
+    pub w_bits: usize,
+    pub a_bits: usize,
+    /// 0 = full precision.
+    pub quantized: bool,
+    pub checkpoint: Option<String>,
+    pub seed: u64,
+}
+
+impl ModelConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let kind = match c.get_str("model.kind", "lstm").as_str() {
+            "lstm" => RnnKind::Lstm,
+            "gru" => RnnKind::Gru,
+            other => bail!("unknown model.kind '{other}' (lstm|gru)"),
+        };
+        let w_bits = c.get_usize("model.w_bits", 0);
+        let a_bits = c.get_usize("model.a_bits", 0);
+        Ok(ModelConfig {
+            lm: LmConfig {
+                kind,
+                vocab: c.get_usize("model.vocab", 10_000),
+                hidden: c.get_usize("model.hidden", 300),
+                layers: c.get_usize("model.layers", 1),
+            },
+            w_bits,
+            a_bits,
+            quantized: w_bits > 0,
+            checkpoint: c.values.get("model.checkpoint").and_then(|v| v.as_str()).map(String::from),
+            seed: c.get_usize("model.seed", 1) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[server]
+addr = "0.0.0.0:9999"   # bind
+max_batch = 32
+[model]
+kind = "gru"
+hidden = 512
+w_bits = 2
+a_bits = 3
+dropout = 0.5
+quantized = true
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("server.addr", ""), "0.0.0.0:9999");
+        assert_eq!(c.get_usize("server.max_batch", 0), 32);
+        assert_eq!(c.get_f64("model.dropout", 0.0), 0.5);
+        assert!(c.get_bool("model.quantized", false));
+    }
+
+    #[test]
+    fn typed_configs() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let s = ServerConfig::from_config(&c);
+        assert_eq!(s.max_batch, 32);
+        let m = ModelConfig::from_config(&c).unwrap();
+        assert_eq!(m.lm.kind, RnnKind::Gru);
+        assert_eq!(m.lm.hidden, 512);
+        assert!(m.quantized);
+        assert_eq!((m.w_bits, m.a_bits), (2, 3));
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let c = Config::parse("").unwrap();
+        let s = ServerConfig::from_config(&c);
+        assert_eq!(s.addr, "127.0.0.1:7860");
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(Config::parse("[]").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = \"unterminated").is_err());
+        let c = Config::parse("[model]\nkind = \"rnn\"").unwrap();
+        assert!(ModelConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("x = \"a#b\"").unwrap();
+        assert_eq!(c.get_str("x", ""), "a#b");
+    }
+}

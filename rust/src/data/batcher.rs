@@ -1,0 +1,113 @@
+//! Contiguous LM batching, exactly the Zaremba et al. recipe the paper
+//! follows: split the token stream into `batch` parallel streams, then walk
+//! windows of `bptt` tokens (paper: unroll 30, batch 20/100).
+
+/// Iterator state over (inputs, targets) windows.
+pub struct LmBatcher {
+    data: Vec<usize>, // batch streams laid out as batch × stream_len
+    batch: usize,
+    stream_len: usize,
+    bptt: usize,
+    cursor: usize,
+}
+
+impl LmBatcher {
+    pub fn new(tokens: &[usize], batch: usize, bptt: usize) -> Self {
+        assert!(batch >= 1 && bptt >= 1);
+        let stream_len = tokens.len() / batch;
+        assert!(
+            stream_len >= 2,
+            "corpus too small: {} tokens for batch {batch}",
+            tokens.len()
+        );
+        // Row-major batch × stream_len (truncates the tail like the reference impl).
+        let mut data = vec![0usize; batch * stream_len];
+        for b in 0..batch {
+            data[b * stream_len..(b + 1) * stream_len]
+                .copy_from_slice(&tokens[b * stream_len..(b + 1) * stream_len]);
+        }
+        LmBatcher { data, batch, stream_len, bptt, cursor: 0 }
+    }
+
+    /// Number of (x, y) windows per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.stream_len - 1).div_ceil(self.bptt)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Next window: `x, y` each `batch × len` (row-major), `y` shifted by
+    /// one. Returns `None` at epoch end (call [`Self::reset`]).
+    #[allow(clippy::type_complexity)]
+    pub fn next(&mut self) -> Option<(Vec<usize>, Vec<usize>, usize)> {
+        if self.cursor + 1 >= self.stream_len {
+            return None;
+        }
+        let len = self.bptt.min(self.stream_len - 1 - self.cursor);
+        let mut x = vec![0usize; self.batch * len];
+        let mut y = vec![0usize; self.batch * len];
+        for b in 0..self.batch {
+            let s = &self.data[b * self.stream_len..(b + 1) * self.stream_len];
+            x[b * len..(b + 1) * len].copy_from_slice(&s[self.cursor..self.cursor + len]);
+            y[b * len..(b + 1) * len].copy_from_slice(&s[self.cursor + 1..self.cursor + 1 + len]);
+        }
+        self.cursor += len;
+        Some((x, y, len))
+    }
+
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_stream_with_shift() {
+        let tokens: Vec<usize> = (0..23).collect();
+        let mut b = LmBatcher::new(&tokens, 2, 4);
+        // stream_len = 11; streams: [0..11), [11..22).
+        let (x, y, len) = b.next().unwrap();
+        assert_eq!(len, 4);
+        assert_eq!(&x[0..4], &[0, 1, 2, 3]);
+        assert_eq!(&y[0..4], &[1, 2, 3, 4]);
+        assert_eq!(&x[4..8], &[11, 12, 13, 14]);
+        assert_eq!(&y[4..8], &[12, 13, 14, 15]);
+        let mut windows = 1;
+        while b.next().is_some() {
+            windows += 1;
+        }
+        assert_eq!(windows, b.batches_per_epoch());
+    }
+
+    #[test]
+    fn reset_replays_identically() {
+        let tokens: Vec<usize> = (0..100).map(|i| i % 7).collect();
+        let mut b = LmBatcher::new(&tokens, 4, 5);
+        let first: Vec<_> = std::iter::from_fn(|| b.next()).collect();
+        b.reset();
+        let second: Vec<_> = std::iter::from_fn(|| b.next()).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn last_window_may_be_short() {
+        let tokens: Vec<usize> = (0..21).collect();
+        let mut b = LmBatcher::new(&tokens, 1, 6);
+        let mut lens = Vec::new();
+        while let Some((_, _, l)) = b.next() {
+            lens.push(l);
+        }
+        assert_eq!(lens, vec![6, 6, 6, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus too small")]
+    fn too_small_panics() {
+        LmBatcher::new(&[1, 2, 3], 4, 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Named-tensor binary checkpoint format, shared with the Layer-2 Python
+//! side (`python/compile/tensorio.py`).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "AMQT" | u32 version | u32 tensor_count
+//! per tensor: u32 name_len | name bytes | u32 ndim | u64 dims… | f32 data…
+//! ```
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"AMQT";
+const VERSION: u32 = 1;
+
+/// A named tensor: shape + row-major f32 data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A checkpoint: ordered map name → tensor.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+        self.tensors.insert(name.to_string(), Tensor::new(shape, data));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // Bulk write of f32 data.
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            w.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open checkpoint {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic {:?}", magic);
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut ckpt = Checkpoint::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            if name_len > 4096 {
+                bail!("tensor name too long ({name_len})");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf8")?;
+            let ndim = read_u32(&mut r)? as usize;
+            if ndim > 8 {
+                bail!("tensor rank too high ({ndim})");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut bytes = vec![0u8; numel * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            ckpt.tensors.insert(name, Tensor { shape, data });
+        }
+        Ok(ckpt)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new();
+        c.insert("w", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        c.insert("b", vec![3], vec![-1.0, 0.0, 1.0]);
+        let dir = std::env::temp_dir().join("amq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.amqt");
+        c.save(&path).unwrap();
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, l);
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let c = Checkpoint::new();
+        assert!(c.get("nope").is_err());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = std::env::temp_dir().join("amq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.amqt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_data_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Data substrates.
+//!
+//! The paper evaluates on PTB, WikiText-2, Text8 (language modeling) and
+//! MNIST / CIFAR-10 (images). None of those corpora are available in this
+//! offline environment, so per the substitution policy in DESIGN.md §4 we
+//! build deterministic synthetic equivalents that exercise the same code
+//! paths and preserve the statistics the experiments depend on:
+//!
+//! * [`synthetic`] — Zipf–Mandelbrot bigram-chain corpora (`ptb-like`,
+//!   `wt2-like`, `text8-like` presets with the papers' vocab sizes).
+//! * [`images`] — procedural 28×28 digit-like and 32×32 textured-class
+//!   image sets for the Appendix-B tables.
+//! * [`batcher`] — the standard contiguous LM batching (batch streams ×
+//!   BPTT windows), matching the paper's unroll of 30.
+//! * [`checkpoint`] — a minimal named-tensor binary format shared with the
+//!   Layer-2 Python side (`python/compile/tensorio.py`).
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod images;
+pub mod synthetic;
+
+pub use synthetic::{Corpus, DatasetSpec};

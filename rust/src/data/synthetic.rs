@@ -1,0 +1,316 @@
+//! Deterministic Zipf–Mandelbrot bigram-chain corpus generator.
+//!
+//! Natural-language token streams have (a) a heavy-tailed unigram
+//! distribution and (b) strong local (bigram) structure. Both properties
+//! are what the paper's LM experiments actually exercise: (a) shapes the
+//! softmax/embedding weight statistics that quantization must approximate,
+//! (b) gives the model something learnable so PPW improves with training.
+//!
+//! Generator: unigram probabilities `p(i) ∝ (i + q)^{-s}` (Zipf–Mandelbrot);
+//! each token `c` owns a small deterministic successor set `S(c)`; the next
+//! token is drawn from `S(c)` with probability `λ` and from the unigram
+//! distribution otherwise.
+
+use crate::util::Rng;
+
+/// Specification of a synthetic dataset (paper-matching presets below).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub train_tokens: usize,
+    pub valid_tokens: usize,
+    pub test_tokens: usize,
+    pub seed: u64,
+    /// Zipf exponent `s` (≈1 for natural text).
+    pub zipf_s: f64,
+    /// Mandelbrot shift `q`.
+    pub zipf_q: f64,
+    /// Bigram mixture weight λ.
+    pub bigram_lambda: f64,
+    /// Successor-set size per token.
+    pub successors: usize,
+}
+
+impl DatasetSpec {
+    /// PTB-sized: 929K/73K/82K tokens, 10K vocab (Marcus et al. 1993 split).
+    pub fn ptb_like() -> Self {
+        DatasetSpec {
+            name: "ptb-like".into(),
+            vocab: 10_000,
+            train_tokens: 929_000,
+            valid_tokens: 73_000,
+            test_tokens: 82_000,
+            seed: 1993,
+            zipf_s: 1.05,
+            zipf_q: 2.7,
+            bigram_lambda: 0.55,
+            successors: 4,
+        }
+    }
+
+    /// WikiText-2-sized: 2088K/217K/245K tokens, 33K vocab.
+    pub fn wt2_like() -> Self {
+        DatasetSpec {
+            name: "wt2-like".into(),
+            vocab: 33_000,
+            train_tokens: 2_088_000,
+            valid_tokens: 217_000,
+            test_tokens: 245_000,
+            seed: 2017,
+            zipf_s: 1.05,
+            zipf_q: 2.7,
+            bigram_lambda: 0.55,
+            successors: 4,
+        }
+    }
+
+    /// Text8-sized: 15.3M/848K/855K tokens, 42K vocab.
+    pub fn text8_like() -> Self {
+        DatasetSpec {
+            name: "text8-like".into(),
+            vocab: 42_000,
+            train_tokens: 15_300_000,
+            valid_tokens: 848_000,
+            test_tokens: 855_000,
+            seed: 2014,
+            zipf_s: 1.05,
+            zipf_q: 2.7,
+            bigram_lambda: 0.55,
+            successors: 4,
+        }
+    }
+
+    /// Force an exact vocabulary size (e.g. to match a fixed artifact
+    /// geometry; the generator then emits tokens in `[0, vocab)`).
+    pub fn with_vocab(mut self, vocab: usize) -> Self {
+        assert!(vocab >= 2);
+        self.vocab = vocab;
+        self
+    }
+
+    /// Scale token counts (and optionally vocab) by `1/div` for CPU-budgeted
+    /// runs; documented per run in EXPERIMENTS.md.
+    pub fn scaled(mut self, div: usize, vocab_div: usize) -> Self {
+        assert!(div >= 1 && vocab_div >= 1);
+        self.train_tokens = (self.train_tokens / div).max(1000);
+        self.valid_tokens = (self.valid_tokens / div).max(500);
+        self.test_tokens = (self.test_tokens / div).max(500);
+        self.vocab = (self.vocab / vocab_div).max(100);
+        self.name = format!("{}/{}x{}", self.name, div, vocab_div);
+        self
+    }
+}
+
+/// A generated corpus with the standard three splits.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub spec: DatasetSpec,
+    pub train: Vec<usize>,
+    pub valid: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+/// Sampler over the Zipf–Mandelbrot distribution by inverse-CDF binary
+/// search (exact, O(log V) per draw).
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(vocab: usize, s: f64, q: f64) -> Self {
+        let mut cdf = Vec::with_capacity(vocab);
+        let mut acc = 0.0f64;
+        for i in 0..vocab {
+            acc += (i as f64 + 1.0 + q).powf(-s);
+            cdf.push(acc);
+        }
+        let norm = acc;
+        for c in cdf.iter_mut() {
+            *c /= norm;
+        }
+        ZipfSampler { cdf }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    pub fn prob(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[i] - self.cdf[i - 1]
+        }
+    }
+}
+
+impl Corpus {
+    /// Generate all three splits deterministically from the spec seed.
+    pub fn generate(spec: DatasetSpec) -> Self {
+        let sampler = ZipfSampler::new(spec.vocab, spec.zipf_s, spec.zipf_q);
+        let mut rng = Rng::new(spec.seed);
+        // Deterministic successor sets: S(c) derived from a cheap hash so
+        // train/valid/test share the same transition structure.
+        let successor = |c: usize, j: usize| -> usize {
+            let mut h = (c as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(j as u64 + 1);
+            h ^= h >> 33;
+            h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            (h % spec.vocab as u64) as usize
+        };
+        let mut gen_split = |len: usize| -> Vec<usize> {
+            let mut out = Vec::with_capacity(len);
+            let mut cur = sampler.sample(&mut rng);
+            out.push(cur);
+            for _ in 1..len {
+                cur = if rng.f64() < spec.bigram_lambda {
+                    successor(cur, rng.below(spec.successors))
+                } else {
+                    sampler.sample(&mut rng)
+                };
+                out.push(cur);
+            }
+            out
+        };
+        let train = gen_split(spec.train_tokens);
+        let valid = gen_split(spec.valid_tokens);
+        let test = gen_split(spec.test_tokens);
+        Corpus { spec, train, valid, test }
+    }
+
+    /// Entropy-rate upper bound (unigram entropy, nats → perplexity): the
+    /// PPW a unigram-optimal model would reach; a trained bigram model goes
+    /// lower. Useful as a sanity anchor for trained-PPW numbers.
+    pub fn unigram_perplexity(&self) -> f64 {
+        let mut counts = vec![0usize; self.spec.vocab];
+        for &t in &self.train {
+            counts[t] += 1;
+        }
+        let n = self.train.len() as f64;
+        let mut h = 0.0f64;
+        for &c in &counts {
+            if c > 0 {
+                let p = c as f64 / n;
+                h -= p * p.ln();
+            }
+        }
+        h.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> DatasetSpec {
+        DatasetSpec {
+            name: "test".into(),
+            vocab: 200,
+            train_tokens: 20_000,
+            valid_tokens: 2_000,
+            test_tokens: 2_000,
+            seed: 7,
+            zipf_s: 1.05,
+            zipf_q: 2.7,
+            bigram_lambda: 0.55,
+            successors: 4,
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Corpus::generate(small_spec());
+        let b = Corpus::generate(small_spec());
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn tokens_in_vocab_and_sizes_match() {
+        let c = Corpus::generate(small_spec());
+        assert_eq!(c.train.len(), 20_000);
+        assert_eq!(c.valid.len(), 2_000);
+        assert!(c.train.iter().all(|&t| t < 200));
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let s = ZipfSampler::new(1000, 1.05, 2.7);
+        // Top-10 tokens should carry a large probability share.
+        let head: f64 = (0..10).map(|i| s.prob(i)).sum();
+        assert!(head > 0.15, "head mass {head}");
+        // And the CDF must be a proper distribution.
+        assert!((s.cdf.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zipf_sampling_matches_probabilities() {
+        let s = ZipfSampler::new(50, 1.05, 2.7);
+        let mut rng = Rng::new(9);
+        let mut counts = vec![0usize; 50];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        for i in 0..5 {
+            let emp = counts[i] as f64 / n as f64;
+            let p = s.prob(i);
+            assert!((emp - p).abs() < 0.02, "token {i}: emp {emp} vs p {p}");
+        }
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // The conditional entropy given the previous token must be clearly
+        // below the unigram entropy — otherwise there is nothing to learn.
+        let c = Corpus::generate(small_spec());
+        let v = c.spec.vocab;
+        let mut uni = vec![0f64; v];
+        let mut big = std::collections::HashMap::<(usize, usize), f64>::new();
+        for w in c.train.windows(2) {
+            uni[w[0]] += 1.0;
+            *big.entry((w[0], w[1])).or_insert(0.0) += 1.0;
+        }
+        let n = (c.train.len() - 1) as f64;
+        let h_uni: f64 = {
+            let mut counts = vec![0f64; v];
+            for &t in &c.train {
+                counts[t] += 1.0;
+            }
+            -counts
+                .iter()
+                .filter(|&&x| x > 0.0)
+                .map(|&x| (x / n) * (x / n).ln())
+                .sum::<f64>()
+        };
+        let h_big: f64 = -big
+            .iter()
+            .map(|(&(a, _), &cnt)| (cnt / n) * (cnt / uni[a]).ln())
+            .sum::<f64>();
+        assert!(
+            h_big < 0.8 * h_uni,
+            "bigram entropy {h_big} not far below unigram {h_uni}"
+        );
+    }
+
+    #[test]
+    fn presets_match_paper_sizes() {
+        let p = DatasetSpec::ptb_like();
+        assert_eq!((p.vocab, p.train_tokens), (10_000, 929_000));
+        let w = DatasetSpec::wt2_like();
+        assert_eq!((w.vocab, w.train_tokens), (33_000, 2_088_000));
+        let t = DatasetSpec::text8_like();
+        assert_eq!((t.vocab, t.train_tokens), (42_000, 15_300_000));
+    }
+
+    #[test]
+    fn scaling_reduces_sizes() {
+        let s = DatasetSpec::ptb_like().scaled(10, 5);
+        assert_eq!(s.train_tokens, 92_900);
+        assert_eq!(s.vocab, 2_000);
+    }
+}

@@ -1,0 +1,143 @@
+//! Tables 7–9 (Appendix B): image-classification tasks comparing
+//! full-precision, Refined, and Alternating quantized training (plus Greedy
+//! for Table 8, XNOR-style 1-bit for Table 9) on the synthetic image
+//! substrates.
+
+use crate::data::images::{cifar_like, mnist_like};
+use crate::model::mlp::QuantSpec;
+use crate::quant::Method;
+use crate::train::native::{CnnTrainer, MlpConfig, MlpTrainer, SeqLstmTrainer};
+
+/// A (method label, test error) result row.
+pub type ErrRow = (String, f64);
+
+/// Table 7: LSTM on sequential MNIST-like rows — 1-bit input, 2-bit
+/// weights, 2-bit activations. Full precision vs Refined vs Alternating.
+pub fn table7(train_n: usize, test_n: usize, hidden: usize, epochs: usize) -> Vec<ErrRow> {
+    let train = mnist_like(train_n, 701);
+    let test = mnist_like(test_n, 702);
+    let mut rows = Vec::new();
+    let runs: Vec<(&str, QuantSpec, Option<usize>)> = vec![
+        ("Full Precision", QuantSpec::full(), None),
+        ("Refined", QuantSpec::wa(2, 2, Method::Refined), Some(1)),
+        ("Alternating", QuantSpec::wa(2, 2, Method::Alternating { t: 2 }), Some(1)),
+    ];
+    for (name, spec, input_bits) in runs {
+        let mut t = SeqLstmTrainer::new(28, hidden, 10, spec, input_bits, 2e-3, 703);
+        let err = t.fit(&train, &test, epochs, 704);
+        rows.push((name.to_string(), err));
+    }
+    rows
+}
+
+/// Table 8: MLP on MNIST-like — 2-bit input, 2-bit weights, 1-bit
+/// activations. Full precision vs Greedy vs Refined vs Alternating.
+pub fn table8(train_n: usize, test_n: usize, hidden: usize, epochs: usize) -> Vec<ErrRow> {
+    let train = mnist_like(train_n, 801);
+    let test = mnist_like(test_n, 802);
+    let mut rows = Vec::new();
+    let runs: Vec<(&str, QuantSpec, Option<usize>)> = vec![
+        ("Full Precision", QuantSpec::full(), None),
+        ("Greedy", QuantSpec::wa(2, 1, Method::Greedy), Some(2)),
+        ("Refined", QuantSpec::wa(2, 1, Method::Refined), Some(2)),
+        ("Alternating", QuantSpec::wa(2, 1, Method::Alternating { t: 2 }), Some(2)),
+    ];
+    for (name, spec, input_bits) in runs {
+        let mut t = MlpTrainer::new(
+            MlpConfig {
+                // Paper: 3 hidden layers of 4096; scaled for the CPU budget.
+                layer_sizes: vec![784, hidden, hidden, hidden, 10],
+                spec,
+                input_bits,
+                lr: 1e-3,
+                batch: 50,
+            },
+            803,
+        );
+        let err = t.fit(&train, &test, epochs, 804);
+        rows.push((name.to_string(), err));
+    }
+    rows
+}
+
+/// Table 9: VGG-like CNN on CIFAR-like — 2-bit weights, 1-bit activations.
+/// Full precision vs XNOR (1-bit W/A) vs Refined vs Alternating.
+pub fn table9(train_n: usize, test_n: usize, base: usize, epochs: usize) -> Vec<ErrRow> {
+    let train = cifar_like(train_n, 901);
+    let test = cifar_like(test_n, 902);
+    let mut rows = Vec::new();
+    let runs: Vec<(&str, QuantSpec)> = vec![
+        ("Full Precision", QuantSpec::full()),
+        ("XNOR-Net (1-bit)", QuantSpec::wa(1, 1, Method::Greedy)),
+        ("Refined", QuantSpec::wa(2, 1, Method::Refined)),
+        ("Alternating", QuantSpec::wa(2, 1, Method::Alternating { t: 2 })),
+    ];
+    for (name, spec) in runs {
+        let mut t = CnnTrainer::new(base, 8 * base, spec, 1e-3, 903);
+        let err = t.fit(&train, &test, epochs, 904);
+        rows.push((name.to_string(), err));
+    }
+    rows
+}
+
+pub fn render(table: usize, rows: &[ErrRow], setting: &str) -> String {
+    let mut s = format!("Table {table} — {setting}\n");
+    for (name, err) in rows {
+        s.push_str(&format!("{name:<22} {:.2} %\n", err * 100.0));
+    }
+    s
+}
+
+/// The paper's qualitative claim for all three tables: Alternating beats
+/// the other quantized baselines (FP may or may not be beaten).
+pub fn check_alternating_best_quantized(rows: &[ErrRow]) -> Result<(), String> {
+    let alt = rows
+        .iter()
+        .find(|(n, _)| n.starts_with("Alternating"))
+        .ok_or("missing Alternating row")?
+        .1;
+    for (name, err) in rows {
+        if name.starts_with("Alternating") || name.starts_with("Full") {
+            continue;
+        }
+        if alt > *err + 1e-9 {
+            return Err(format!("Alternating ({alt}) worse than {name} ({err})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_tiny_runs_and_orders() {
+        // Tiny run: just verifies all four variants train and produce
+        // error rates in (0, 1); the ordering claim needs the bench-scale
+        // run (recorded in EXPERIMENTS.md).
+        let rows = table8(400, 100, 64, 2);
+        assert_eq!(rows.len(), 4);
+        for (n, e) in &rows {
+            assert!((0.0..=1.0).contains(e), "{n}: {e}");
+        }
+        let fp = rows[0].1;
+        assert!(fp < 0.6, "fp error {fp} suspicious");
+    }
+
+    #[test]
+    fn table7_tiny_runs() {
+        let rows = table7(80, 40, 24, 1);
+        assert_eq!(rows.len(), 3);
+        for (_, e) in &rows {
+            assert!((0.0..=1.0).contains(e));
+        }
+    }
+
+    #[test]
+    fn render_format() {
+        let rows = vec![("Full Precision".to_string(), 0.011)];
+        let s = render(7, &rows, "test");
+        assert!(s.contains("1.10 %"));
+    }
+}

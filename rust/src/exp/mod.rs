@@ -1,0 +1,17 @@
+//! Experiment harness: one entry point per table of the paper.
+//!
+//! Each `table*` function regenerates the corresponding table's rows on the
+//! synthetic substrates (DESIGN.md §4) and prints them in the paper's
+//! layout. Absolute values differ from the paper (different corpus/testbed);
+//! the *shape* — method ordering, gaps, crossovers — is the reproduction
+//! target and is what EXPERIMENTS.md records.
+
+pub mod quant_tables;
+pub mod image_tables;
+pub mod kernel_tables;
+pub mod lm_tables;
+
+pub use image_tables::{table7, table8, table9};
+pub use kernel_tables::{costmodel, table6};
+pub use lm_tables::{table3_4_5, train_tag};
+pub use quant_tables::table1_2;

@@ -1,0 +1,402 @@
+//! Binary XNOR/popcount matrix–vector kernels (Appendix A of the paper).
+//!
+//! The quantized product between a `k_w`-bit row-quantized matrix and a
+//! `k_h`-bit quantized vector decomposes into `k_w · k_h` binary dot
+//! products per row:
+//!
+//! ```text
+//! y_r = Σ_t Σ_s  α_w[r,t] · α_x[s] · ⟨b_w[r,t], b_x[s]⟩
+//! ⟨a, b⟩ = n − 2·popcount(a XOR b)        (the 1-bit identity)
+//! ```
+//!
+//! The paper implements XOR with `_mm256_xor_ps` and popcount with
+//! `_popcnt64`; on portable Rust the same dataflow is `u64 ^` +
+//! `count_ones`, which LLVM lowers to the identical instructions.
+//!
+//! Activations are quantized **online** with the alternating method
+//! (`T = 2`) — its cost is the "Quant" column of Table 6.
+
+use crate::quant::{alternating, Method, PackedBits, Quantized, RowQuantized};
+
+/// Quantize an activation vector online (paper setting: alternating, T=2).
+pub fn quantize_activations(x: &[f32], k: usize) -> Quantized {
+    alternating::quantize(x, k, 2)
+}
+
+/// Quantize activations with an arbitrary method (for ablations).
+pub fn quantize_activations_with(x: &[f32], k: usize, method: Method) -> Quantized {
+    crate::quant::quantize(x, k, method)
+}
+
+/// Max bit width the fused inner loop specializes for (the paper never
+/// exceeds 4 bits).
+const MAX_K: usize = 4;
+
+/// `y = Ŵ x̂` where both operands are already quantized.
+/// `y.len() == w.rows`; panics on shape mismatch.
+///
+/// Perf note (EXPERIMENTS.md §Perf): the k_w·k_x binary dot products of one
+/// row are evaluated in a **single fused pass** over the packed words — the
+/// activation plane words are loaded once per word index instead of k_w
+/// times, and the k_w·k_x XOR+POPCNT chains are independent so they pipeline.
+pub fn quantized_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
+    assert_eq!(w.cols, x.n, "inner dimension mismatch");
+    assert_eq!(y.len(), w.rows);
+    let kw = w.k;
+    let kx = x.k();
+    if kw <= MAX_K && kx <= MAX_K {
+        return fused_gemv(w, x, y);
+    }
+    // Fallback for exotic bit widths: plane-pair loop.
+    let n = w.cols as i32;
+    for (r, yr) in y.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for t in 0..kw {
+            let plane_w = &w.planes[r * kw + t];
+            let alpha_w = w.alphas[r * kw + t];
+            let mut inner = 0.0f32;
+            for s in 0..kx {
+                let dot = xor_popcount_dot(plane_w, &x.planes[s], n);
+                inner += x.alphas[s] * dot as f32;
+            }
+            acc += alpha_w * inner;
+        }
+        *yr = acc;
+    }
+}
+
+/// Serving-path matrix: the planes of [`RowQuantized`] repacked into one
+/// contiguous buffer, layout `[row][plane][word]`, so a row's entire k·words
+/// working set streams sequentially from memory (Perf iteration 2 — the
+/// per-plane `Vec`s of `RowQuantized` scatter across the heap).
+#[derive(Clone, Debug)]
+pub struct PreparedGemv {
+    pub rows: usize,
+    pub cols: usize,
+    pub k: usize,
+    words_per_plane: usize,
+    data: Vec<u64>,
+    alphas: Vec<f32>, // rows * k
+}
+
+impl PreparedGemv {
+    pub fn new(w: &RowQuantized) -> Self {
+        let wpp = w.cols.div_ceil(64);
+        let mut data = Vec::with_capacity(w.rows * w.k * wpp);
+        for plane in &w.planes {
+            data.extend_from_slice(plane.words());
+        }
+        PreparedGemv {
+            rows: w.rows,
+            cols: w.cols,
+            k: w.k,
+            words_per_plane: wpp,
+            data,
+            alphas: w.alphas.clone(),
+        }
+    }
+
+    /// Fused single-pass GEMV over the contiguous layout. Dispatches to a
+    /// const-generic body so the k_w×k_x popcount counters live in registers
+    /// and the plane loops fully unroll (Perf iteration 3).
+    pub fn gemv(&self, x: &Quantized, y: &mut [f32]) {
+        assert_eq!(self.cols, x.n, "inner dimension mismatch");
+        assert_eq!(y.len(), self.rows);
+        let (kw, kx) = (self.k, x.k());
+        assert!(kw <= MAX_K && kx <= MAX_K, "bit width beyond MAX_K");
+        match (kw, kx) {
+            (1, 1) => self.gemv_const::<1, 1>(x, y),
+            (2, 2) => self.gemv_const::<2, 2>(x, y),
+            (2, 3) => self.gemv_const::<2, 3>(x, y),
+            (3, 2) => self.gemv_const::<3, 2>(x, y),
+            (3, 3) => self.gemv_const::<3, 3>(x, y),
+            (4, 4) => self.gemv_const::<4, 4>(x, y),
+            _ => self.gemv_generic(x, y),
+        }
+    }
+
+    fn gemv_const<const KW: usize, const KX: usize>(&self, x: &Quantized, y: &mut [f32]) {
+        let n = self.cols as i32;
+        let wpp = self.words_per_plane;
+        let xw: [&[u64]; KX] = std::array::from_fn(|s| x.planes[s].words());
+        let row_words = KW * wpp;
+        for (r, yr) in y.iter_mut().enumerate() {
+            let row = &self.data[r * row_words..(r + 1) * row_words];
+            let mut counts = [[0u32; KX]; KW];
+            for i in 0..wpp {
+                for t in 0..KW {
+                    let ww = row[t * wpp + i];
+                    for s in 0..KX {
+                        counts[t][s] += (ww ^ xw[s][i]).count_ones();
+                    }
+                }
+            }
+            let mut acc = 0.0f32;
+            for (t, row_c) in counts.iter().enumerate() {
+                let mut inner = 0.0f32;
+                for (s, &c) in row_c.iter().enumerate() {
+                    inner += x.alphas[s] * (n - 2 * c as i32) as f32;
+                }
+                acc += self.alphas[r * KW + t] * inner;
+            }
+            *yr = acc;
+        }
+    }
+
+    fn gemv_generic(&self, x: &Quantized, y: &mut [f32]) {
+        let (kw, kx) = (self.k, x.k());
+        let n = self.cols as i32;
+        let wpp = self.words_per_plane;
+        let xw: [&[u64]; MAX_K] = {
+            let mut a: [&[u64]; MAX_K] = [&[]; MAX_K];
+            for (s, p) in x.planes.iter().enumerate() {
+                a[s] = p.words();
+            }
+            a
+        };
+        let row_words = kw * wpp;
+        for (r, yr) in y.iter_mut().enumerate() {
+            let row = &self.data[r * row_words..(r + 1) * row_words];
+            let mut counts = [[0u32; MAX_K]; MAX_K];
+            for i in 0..wpp {
+                for (t, cs) in counts.iter_mut().enumerate().take(kw) {
+                    let ww = row[t * wpp + i];
+                    for (s, c) in cs.iter_mut().enumerate().take(kx) {
+                        *c += (ww ^ xw[s][i]).count_ones();
+                    }
+                }
+            }
+            let mut acc = 0.0f32;
+            for (t, row_c) in counts.iter().enumerate().take(kw) {
+                let mut inner = 0.0f32;
+                for (s, &c) in row_c.iter().enumerate().take(kx) {
+                    inner += x.alphas[s] * (n - 2 * c as i32) as f32;
+                }
+                acc += self.alphas[r * kw + t] * inner;
+            }
+            *yr = acc;
+        }
+    }
+
+    /// Quantize the input online, then run the fused GEMV (the full
+    /// request-path operation of Table 6).
+    pub fn online_gemv(&self, x: &[f32], k_x: usize, y: &mut [f32]) {
+        let xq = quantize_activations(x, k_x);
+        self.gemv(&xq, y);
+    }
+
+    /// Dense reconstruction (for `Linear::to_dense` and eval paths).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let wpp = self.words_per_plane;
+        for r in 0..self.rows {
+            for t in 0..self.k {
+                let alpha = self.alphas[r * self.k + t];
+                let words = &self.data[(r * self.k + t) * wpp..(r * self.k + t + 1) * wpp];
+                let o = &mut out[r * self.cols..(r + 1) * self.cols];
+                for (j, v) in o.iter_mut().enumerate() {
+                    let bit = (words[j / 64] >> (j % 64)) & 1;
+                    *v += if bit == 1 { alpha } else { -alpha };
+                }
+            }
+        }
+        out
+    }
+
+    /// Packed footprint in bytes (planes + coefficients).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 8 + self.alphas.len() * 4
+    }
+}
+
+/// Fused single-pass kernel for k ≤ 4 (see `quantized_gemv`).
+fn fused_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
+    let kw = w.k;
+    let kx = x.k();
+    let n = w.cols as i32;
+    let nw = w.cols.div_ceil(64);
+    let xw: [&[u64]; MAX_K] = {
+        let mut a: [&[u64]; MAX_K] = [&[]; MAX_K];
+        for (s, p) in x.planes.iter().enumerate() {
+            a[s] = p.words();
+        }
+        a
+    };
+    for (r, yr) in y.iter_mut().enumerate() {
+        let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
+        for t in 0..kw {
+            wp[t] = w.planes[r * kw + t].words();
+        }
+        let mut counts = [[0u32; MAX_K]; MAX_K];
+        for i in 0..nw {
+            // One load of each plane word per index; k_w*k_x independent
+            // XOR+POPCNT chains.
+            for (t, wt) in wp.iter().enumerate().take(kw) {
+                let ww = wt[i];
+                for s in 0..kx {
+                    counts[t][s] += (ww ^ xw[s][i]).count_ones();
+                }
+            }
+        }
+        let mut acc = 0.0f32;
+        for (t, row) in counts.iter().enumerate().take(kw) {
+            let mut inner = 0.0f32;
+            for (s, &c) in row.iter().enumerate().take(kx) {
+                inner += x.alphas[s] * (n - 2 * c as i32) as f32;
+            }
+            acc += w.alphas[r * kw + t] * inner;
+        }
+        *yr = acc;
+    }
+}
+
+/// The innermost 1-bit dot product. Kept `#[inline]` and word-unrolled —
+/// this is the hot loop of the entire serving path.
+#[inline]
+fn xor_popcount_dot(a: &PackedBits, b: &PackedBits, n: i32) -> i32 {
+    let (wa, wb) = (a.words(), b.words());
+    debug_assert_eq!(wa.len(), wb.len());
+    let mut mism = 0u32;
+    let mut i = 0;
+    // 4-way unroll: popcount units pipeline across independent words.
+    while i + 4 <= wa.len() {
+        mism += (wa[i] ^ wb[i]).count_ones()
+            + (wa[i + 1] ^ wb[i + 1]).count_ones()
+            + (wa[i + 2] ^ wb[i + 2]).count_ones()
+            + (wa[i + 3] ^ wb[i + 3]).count_ones();
+        i += 4;
+    }
+    while i < wa.len() {
+        mism += (wa[i] ^ wb[i]).count_ones();
+        i += 1;
+    }
+    n - 2 * mism as i32
+}
+
+/// Full online path of Table 6: quantize `x` (the "Quant" share), then run
+/// the binary GEMV. Returns `(y, quant_fraction_estimate_unused)`.
+pub fn online_gemv(w: &RowQuantized, x: &[f32], k_x: usize, y: &mut [f32]) {
+    let xq = quantize_activations(x, k_x);
+    quantized_gemv(w, &xq, y);
+}
+
+/// Batched variant: `Y = Ŵ X̂` for `batch` activation vectors (columns of a
+/// row-major `batch × n` matrix). The weight planes are streamed once per
+/// batch — the concatenated layout of Fig. 3 (right).
+pub fn quantized_gemv_batch(
+    w: &RowQuantized,
+    xs: &[Quantized],
+    y: &mut [f32], // batch * rows, row-major per request
+) {
+    assert_eq!(y.len(), xs.len() * w.rows);
+    for (b, xq) in xs.iter().enumerate() {
+        quantized_gemv(w, xq, &mut y[b * w.rows..(b + 1) * w.rows]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense;
+    use crate::quant::Method;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    /// The core exactness property: the binary kernel must equal the dense
+    /// GEMV computed on the *dequantized* operands (the popcount identity is
+    /// exact; only float summation order differs).
+    #[test]
+    fn binary_gemv_equals_dense_on_dequantized_property() {
+        prop::check(
+            "binary-gemv-exact",
+            prop::Config { cases: 60, ..Default::default() },
+            |rng| {
+                let m = 1 + rng.below(24);
+                let n = 1 + rng.below(200);
+                let kw = 1 + rng.below(3);
+                let kx = 1 + rng.below(3);
+                let w: Vec<f32> = (0..m * n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                (m, n, kw, kx, w, x)
+            },
+            |_| vec![],
+            |(m, n, kw, kx, w, x)| {
+                let wq = RowQuantized::quantize(w, *m, *n, *kw, Method::Alternating { t: 2 });
+                let xq = quantize_activations(x, *kx);
+                let mut y = vec![0.0f32; *m];
+                quantized_gemv(&wq, &xq, &mut y);
+
+                let wd = wq.dequantize();
+                let xd = xq.dequantize();
+                let mut yd = vec![0.0f32; *m];
+                dense::gemv(&wd, *m, *n, &xd, &mut yd);
+                y.iter().zip(&yd).all(|(a, b)| (a - b).abs() < 1e-3 * (1.0 + b.abs()))
+            },
+        );
+    }
+
+    #[test]
+    fn approximates_full_precision_gemv() {
+        // End-to-end: quantized product should track the FP product within
+        // the quantization error budget.
+        let mut rng = Rng::new(101);
+        let (m, n) = (128, 512);
+        let w = rng.normal_vec(m * n, 0.1);
+        let x = rng.normal_vec(n, 0.5);
+        let wq = RowQuantized::quantize(&w, m, n, 3, Method::Alternating { t: 2 });
+        let mut y = vec![0.0; m];
+        online_gemv(&wq, &x, 3, &mut y);
+        let mut y_fp = vec![0.0; m];
+        dense::gemv(&w, m, n, &x, &mut y_fp);
+        // Relative output error is bounded by the combined weight+activation
+        // quantization error (~4–5% each at 3 bits, compounding in the product).
+        let num: f64 = y.iter().zip(&y_fp).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = y_fp.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!(num / den < 0.2, "output relative error {}", num / den);
+    }
+
+    #[test]
+    fn prepared_matches_quantized_gemv() {
+        let mut rng = Rng::new(103);
+        for (m, n, kw, kx) in [(17, 100, 2, 2), (8, 64, 3, 2), (5, 300, 4, 4)] {
+            let w = rng.normal_vec(m * n, 0.3);
+            let wq = RowQuantized::quantize(&w, m, n, kw, Method::Alternating { t: 2 });
+            let prep = PreparedGemv::new(&wq);
+            let xq = quantize_activations(&rng.normal_vec(n, 1.0), kx);
+            let mut y1 = vec![0.0; m];
+            let mut y2 = vec![0.0; m];
+            quantized_gemv(&wq, &xq, &mut y1);
+            prep.gemv(&xq, &mut y2);
+            assert_eq!(y1, y2, "m={m} n={n} kw={kw} kx={kx}");
+            // Dequantization also agrees.
+            assert_eq!(prep.dequantize(), wq.dequantize());
+        }
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let mut rng = Rng::new(102);
+        let (m, n, bsz) = (16, 96, 4);
+        let w = rng.normal_vec(m * n, 0.2);
+        let wq = RowQuantized::quantize(&w, m, n, 2, Method::Greedy);
+        let xs: Vec<Quantized> = (0..bsz)
+            .map(|_| quantize_activations(&rng.normal_vec(n, 1.0), 2))
+            .collect();
+        let mut y = vec![0.0; bsz * m];
+        quantized_gemv_batch(&wq, &xs, &mut y);
+        for (b, xq) in xs.iter().enumerate() {
+            let mut yb = vec![0.0; m];
+            quantized_gemv(&wq, xq, &mut yb);
+            assert_eq!(&y[b * m..(b + 1) * m], &yb[..]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension mismatch")]
+    fn shape_mismatch_panics() {
+        let w = RowQuantized::quantize(&[0.0; 12], 3, 4, 2, Method::Greedy);
+        let x = quantize_activations(&[0.0; 5], 2);
+        let mut y = vec![0.0; 3];
+        quantized_gemv(&w, &x, &mut y);
+    }
+}

@@ -1,0 +1,108 @@
+//! The analytic cost model of §3–§4 of the paper.
+//!
+//! For quantizing `w ∈ ℝⁿ` to `k` bits with `T` alternating cycles:
+//! `2Tk²n` binary + `2(T+1)kn` non-binary operations.
+//!
+//! For the quantized product between a `k_w`-bit `m×n` matrix and a
+//! `k_h`-bit vector: `2·k_w·k_h·m·n + 4·k_h²·n` binary and
+//! `6·k_h·n + 2·k_w·k_h·m` non-binary operations, giving the theoretical
+//! speedup over the `2mn`-op full-precision product (binary ops discounted
+//! 32×):
+//!
+//! ```text
+//! γ = 2mn / ( (2·k_w·k_h·m·n + 4·k_h²·n)/32 + 6·k_h·n + 2·k_w·k_h·m )
+//! ```
+
+/// Operation counts for quantizing a length-`n` vector to `k` bits with `T`
+/// alternating cycles (includes the greedy init's `2kn`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantCost {
+    pub binary_ops: u64,
+    pub nonbinary_ops: u64,
+}
+
+pub fn quantization_cost(n: u64, k: u64, t: u64) -> QuantCost {
+    QuantCost {
+        binary_ops: 2 * t * k * k * n,
+        nonbinary_ops: 2 * (t + 1) * k * n,
+    }
+}
+
+/// Operation counts for the quantized `m×n` GEMV (weights `k_w` bits,
+/// activations `k_h` bits, online activation quantization with `T = 2`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GemvCost {
+    pub binary_ops: u64,
+    pub nonbinary_ops: u64,
+}
+
+pub fn gemv_cost(m: u64, n: u64, k_w: u64, k_h: u64) -> GemvCost {
+    GemvCost {
+        binary_ops: 2 * k_w * k_h * m * n + 4 * k_h * k_h * n,
+        nonbinary_ops: 6 * k_h * n + 2 * k_w * k_h * m,
+    }
+}
+
+/// The paper's theoretical acceleration γ over a full-precision GEMV,
+/// counting one binary op as 1/32 of a non-binary op.
+pub fn theoretical_speedup(m: u64, n: u64, k_w: u64, k_h: u64) -> f64 {
+    let fp_ops = (2 * m * n) as f64;
+    let c = gemv_cost(m, n, k_w, k_h);
+    fp_ops / (c.binary_ops as f64 / 32.0 + c.nonbinary_ops as f64)
+}
+
+/// Memory saving factor for a `k`-bit row-quantized `m×n` f32 matrix
+/// (packed planes + per-row coefficients).
+pub fn memory_saving(m: u64, n: u64, k: u64) -> f64 {
+    let dense = (m * n * 32) as f64;
+    let packed = (m * k * n) as f64 + (m * k * 32) as f64;
+    dense / packed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_gamma_examples() {
+        // §4: for W_h ∈ R^{4096×1024}, γ ≈ 7.5 at (2,2) and ≈ 3.5 at (3,3).
+        let g22 = theoretical_speedup(4096, 1024, 2, 2);
+        let g33 = theoretical_speedup(4096, 1024, 3, 3);
+        assert!((7.0..8.0).contains(&g22), "γ(2,2) = {g22}");
+        assert!((3.2..3.8).contains(&g33), "γ(3,3) = {g33}");
+    }
+
+    #[test]
+    fn memory_saving_matches_abstract() {
+        // Abstract: ~16× at 2 bits, ~10.5× at 3 bits.
+        let m2 = memory_saving(4096, 1024, 2);
+        let m3 = memory_saving(4096, 1024, 3);
+        assert!((15.0..16.1).contains(&m2), "2-bit saving {m2}");
+        assert!((10.0..11.0).contains(&m3), "3-bit saving {m3}");
+    }
+
+    #[test]
+    fn quant_cost_formula() {
+        // §3: 2Tk²n binary, 2(T+1)kn non-binary.
+        let c = quantization_cost(1024, 2, 2);
+        assert_eq!(c.binary_ops, 2 * 2 * 4 * 1024);
+        assert_eq!(c.nonbinary_ops, 2 * 3 * 2 * 1024);
+    }
+
+    #[test]
+    fn speedup_decreases_with_bits() {
+        let mut prev = f64::INFINITY;
+        for k in 1..=4 {
+            let g = theoretical_speedup(4096, 1024, k, k);
+            assert!(g < prev);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn softmax_layer_shape_still_accelerates() {
+        // Table 6's larger case: 42000×1024.
+        let g = theoretical_speedup(42000, 1024, 2, 2);
+        assert!(g > 7.0, "γ = {g}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Full-precision f32 reference kernels.
+//!
+//! These are the FP baseline of Table 6. The paper compares against
+//! single-threaded MKL GEMV; we use a register-blocked, autovectorizable
+//! native GEMV — the honest portable equivalent (the reported quantity is
+//! the binary/FP *ratio*, not MKL's absolute numbers).
+
+/// `y = W x` for row-major `W (m×n)`. `y` must have length `m`.
+pub fn gemv(w: &[f32], m: usize, n: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(w.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for (r, yr) in y.iter_mut().enumerate() {
+        let row = &w[r * n..(r + 1) * n];
+        // 4 independent accumulators so LLVM vectorizes + pipelines.
+        let mut acc = [0.0f32; 4];
+        let chunks = n / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc[0] += row[i] * x[i];
+            acc[1] += row[i + 1] * x[i + 1];
+            acc[2] += row[i + 2] * x[i + 2];
+            acc[3] += row[i + 3] * x[i + 3];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for i in chunks * 4..n {
+            s += row[i] * x[i];
+        }
+        *yr = s;
+    }
+}
+
+/// `C = A B` for row-major `A (m×k)`, `B (k×n)`, `C (m×n)`, ikj loop order
+/// (streams B rows, keeps C row hot).
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+    }
+}
+
+/// `y += a * x` (axpy).
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x as f64 * y as f64;
+    }
+    s as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_gemv(w: &[f32], m: usize, n: usize, x: &[f32]) -> Vec<f32> {
+        (0..m)
+            .map(|r| (0..n).map(|c| w[r * n + c] * x[c]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = Rng::new(91);
+        for (m, n) in [(1, 1), (3, 5), (17, 33), (64, 127)] {
+            let w = rng.normal_vec(m * n, 1.0);
+            let x = rng.normal_vec(n, 1.0);
+            let mut y = vec![0.0; m];
+            gemv(&w, m, n, &x, &mut y);
+            let expect = naive_gemv(&w, m, n, &x);
+            for (a, b) in y.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_gemv_per_column() {
+        let mut rng = Rng::new(92);
+        let (m, k, n) = (5, 7, 3);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut c = vec![0.0; m * n];
+        gemm(&a, &b, m, k, n, &mut c);
+        for col in 0..n {
+            let x: Vec<f32> = (0..k).map(|p| b[p * n + col]).collect();
+            let mut y = vec![0.0; m];
+            gemv(&a, m, k, &x, &mut y);
+            for r in 0..m {
+                assert!((c[r * n + col] - y[r]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_and_dot() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        assert!((dot(&x, &x) - 14.0).abs() < 1e-6);
+    }
+}

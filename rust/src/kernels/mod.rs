@@ -1,0 +1,14 @@
+//! Compute kernels for the inference hot path.
+//!
+//! * [`dense`] — full-precision f32 GEMV/GEMM baselines (the stand-in for
+//!   the paper's MKL comparison, single-threaded like Appendix A).
+//! * [`binary`] — the paper's Appendix-A contribution: bit-packed
+//!   XNOR + popcount matrix–vector products over multi-bit quantized
+//!   operands, including the **online activation quantization** step whose
+//!   cost Table 6 breaks out.
+//! * [`cost`] — the analytic operation-count model of §3/§4 (binary vs
+//!   non-binary op counts, theoretical speedup γ).
+
+pub mod binary;
+pub mod cost;
+pub mod dense;

@@ -1,0 +1,48 @@
+//! # amq-rnn — Alternating Multi-bit Quantization for Recurrent Neural Networks
+//!
+//! A production-grade reproduction of *Xu et al., "Alternating Multi-bit
+//! Quantization for Recurrent Neural Networks", ICLR 2018*, built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — `python/compile/kernels/`: the
+//!   alternating quantization kernel (Algorithms 1 + 2 of the paper) and the
+//!   quantized matmul, checked against a pure-`jnp` oracle.
+//! * **Layer 2 (JAX, build time)** — `python/compile/model.py`: quantized
+//!   LSTM/GRU language models trained with the straight-through estimator
+//!   (the bi-level program of Eq. 7), AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate, request path)** — native implementations of every
+//!   quantization algorithm (Section 2 baselines + the paper's alternating
+//!   method), the bit-packed XNOR/popcount kernels of Appendix A, the RNN
+//!   inference stack, a serving coordinator (router + dynamic batcher +
+//!   session cache), the training driver with the paper's SGD schedule, and
+//!   the PJRT runtime that executes the Layer-2 artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! graphs once and the `amq` binary is self-contained afterwards.
+//!
+//! ## Quick tour
+//!
+//! ```
+//! use amq::quant::alternating;
+//!
+//! let w: Vec<f32> = (0..256).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect();
+//! // 2-bit alternating quantization, T = 2 cycles (the paper's setting).
+//! let q = alternating::quantize(&w, 2, 2);
+//! let err = amq::quant::relative_mse(&w, &q.dequantize());
+//! assert!(err < 0.2); // Table 1 reports ~0.125 on trained LSTM weights
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod kernels;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod train;
+pub mod util;
+
+pub use quant::Quantized;

@@ -1,0 +1,296 @@
+//! `amq` — launcher for the alternating-multi-bit-quantization stack.
+//!
+//! Subcommands:
+//! ```text
+//! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 ..]
+//! amq train    --tag lstm_fp [--dataset ptb|wt2|text8] [--epochs N] ...
+//! amq quantize --bits 2 [--method alternating] [--checkpoint f.amqt]
+//! amq bench    table1|table2|table3|table4|table5|table6|table7|table8|table9|costmodel
+//! amq stats    --addr host:port          (query a running server)
+//! ```
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use amq::cli::Cli;
+use amq::config::{Config, ModelConfig, ServerConfig};
+use amq::data::{Corpus, DatasetSpec};
+use amq::exp;
+use amq::model::lm::{PrecisionPolicy, RnnLm};
+use amq::quant::{self, Method};
+use amq::server::{tcp, BatcherConfig, InferenceServer};
+use amq::server::batcher::Work;
+use amq::util::Rng;
+use anyhow::{bail, Context, Result};
+
+fn main() {
+    let cli = match Cli::from_env() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match run(cli) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> &'static str {
+    "usage: amq <serve|train|quantize|bench|stats> [options]\n\
+     run `amq <subcommand> --help` conventions in README.md"
+}
+
+fn run(cli: Cli) -> Result<()> {
+    match cli.subcommand.as_str() {
+        "serve" => cmd_serve(&cli),
+        "train" => cmd_train(&cli),
+        "quantize" => cmd_quantize(&cli),
+        "bench" => cmd_bench(&cli),
+        "" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{}", usage()),
+    }
+}
+
+fn artifact_dir(cli: &Cli) -> PathBuf {
+    PathBuf::from(cli.get_str("artifacts", "artifacts"))
+}
+
+fn runs_dir(cli: &Cli) -> PathBuf {
+    let d = PathBuf::from(cli.get_str("runs", "runs"));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+fn dataset(cli: &Cli) -> Result<DatasetSpec> {
+    let scale = cli.get_usize("scale", 8)?;
+    Ok(match cli.get_str("dataset", "ptb").as_str() {
+        "ptb" => DatasetSpec::ptb_like().scaled(scale, 5),
+        "wt2" => DatasetSpec::wt2_like().scaled(scale * 2, 17),
+        "text8" => DatasetSpec::text8_like().scaled(scale * 16, 21),
+        other => bail!("unknown dataset '{other}' (ptb|wt2|text8)"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let (server_cfg, model_cfg) = if let Some(path) = cli.get("config") {
+        let c = Config::load(std::path::Path::new(path))?;
+        (ServerConfig::from_config(&c), ModelConfig::from_config(&c)?)
+    } else {
+        let c = Config::parse("")?;
+        let mut m = ModelConfig::from_config(&c)?;
+        m.w_bits = cli.get_usize("w-bits", 2)?;
+        m.a_bits = cli.get_usize("a-bits", 2)?;
+        m.quantized = m.w_bits > 0;
+        m.lm.vocab = cli.get_usize("vocab", 2000)?;
+        m.lm.hidden = cli.get_usize("hidden", 200)?;
+        let mut s = ServerConfig::from_config(&c);
+        s.addr = cli.get_str("addr", &s.addr);
+        s.max_batch = cli.get_usize("max-batch", s.max_batch)?;
+        (s, m)
+    };
+
+    let policy = if model_cfg.quantized {
+        PrecisionPolicy::quantized(model_cfg.w_bits, model_cfg.a_bits)
+    } else {
+        PrecisionPolicy::full()
+    };
+    let model = match &model_cfg.checkpoint {
+        Some(p) => {
+            let ckpt = amq::data::checkpoint::Checkpoint::load(std::path::Path::new(p))?;
+            let w = amq::train::trainer::weights_from_checkpoint(&ckpt, &model_cfg.lm)?;
+            RnnLm::from_weights(model_cfg.lm, &w, policy)
+        }
+        None => {
+            eprintln!("note: no checkpoint configured — serving a randomly initialized model");
+            RnnLm::random(model_cfg.lm, model_cfg.seed, policy)
+        }
+    };
+    eprintln!(
+        "model: {} vocab={} hidden={} {} ({} weight bytes)",
+        model.config.kind.name(),
+        model.config.vocab,
+        model.config.hidden,
+        if model_cfg.quantized {
+            format!("W{}A{}", model_cfg.w_bits, model_cfg.a_bits)
+        } else {
+            "FP".into()
+        },
+        model.bytes()
+    );
+
+    let server = InferenceServer::new(
+        Arc::new(model),
+        BatcherConfig {
+            max_batch: server_cfg.max_batch,
+            batch_wait: std::time::Duration::from_micros(server_cfg.batch_wait_us),
+            max_sessions: server_cfg.max_sessions,
+        },
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    std::thread::spawn(move || server.run(rx));
+    eprintln!("serving on {}", server_cfg.addr);
+    tcp::serve(&server_cfg.addr, tx, |a| eprintln!("bound {a}"))
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let tag = cli.get_str("tag", "lstm_fp");
+    let spec = dataset(cli)?;
+    let epochs = cli.get_usize("epochs", 4)?;
+    let steps = cli.get_usize("steps", 150)?;
+    let eval_steps = cli.get_usize("eval-steps", 40)?;
+    let lr = cli.get_f64("lr", 20.0)?;
+    eprintln!("generating corpus {} …", spec.name);
+    let corpus = Corpus::generate(spec);
+    eprintln!(
+        "train {} on {} ({} tokens, unigram ppl {:.0})",
+        tag,
+        corpus.spec.name,
+        corpus.train.len(),
+        corpus.unigram_perplexity()
+    );
+    let dir = artifact_dir(cli);
+    let mut trainer = amq::train::LmTrainer::load(&dir, &tag)
+        .with_context(|| "loading artifacts (run `make artifacts`)")?;
+    let schedule = amq::train::SgdSchedule::new(lr, 1.2, 1e-3, 80);
+    let report = trainer.fit(
+        &corpus.train,
+        &corpus.valid,
+        schedule,
+        epochs,
+        Some(steps),
+        Some(eval_steps),
+        |e, loss, val, lr| println!("epoch {e:>2}  train-nll {loss:.4}  val-ppw {val:.1}  lr {lr:.3}"),
+    )?;
+    let test = trainer.evaluate(&corpus.test, Some(eval_steps))?;
+    println!(
+        "done: {} steps, best val ppw {:.1}, test ppw {test:.1}",
+        report.steps, report.best_val_ppw
+    );
+    let out = runs_dir(cli).join(format!("{tag}.amqt"));
+    trainer.checkpoint().save(&out)?;
+    println!("checkpoint saved to {}", out.display());
+    Ok(())
+}
+
+fn cmd_quantize(cli: &Cli) -> Result<()> {
+    let bits = cli.get_usize("bits", 2)?;
+    let method = match cli.get_str("method", "alternating").as_str() {
+        "uniform" => Method::Uniform,
+        "balanced" => Method::Balanced,
+        "greedy" => Method::Greedy,
+        "refined" => Method::Refined,
+        "alternating" => Method::Alternating { t: cli.get_usize("cycles", 2)? },
+        "ternary" => Method::Ternary,
+        other => bail!("unknown method '{other}'"),
+    };
+    match cli.get("checkpoint") {
+        Some(path) => {
+            let ckpt = amq::data::checkpoint::Checkpoint::load(std::path::Path::new(path))?;
+            println!("{:<14} {:>10} {:>12} {:>9}", "tensor", "shape", "rel-MSE", "saving");
+            for (name, t) in &ckpt.tensors {
+                if t.shape.len() != 2 {
+                    continue;
+                }
+                let q = quant::RowQuantized::quantize(&t.data, t.shape[0], t.shape[1], bits, method);
+                println!(
+                    "{:<14} {:>4}x{:<5} {:>12.5} {:>8.1}x",
+                    name,
+                    t.shape[0],
+                    t.shape[1],
+                    q.relative_mse(&t.data),
+                    q.compression()
+                );
+            }
+        }
+        None => {
+            // Demo on a surrogate matrix.
+            let mut rng = Rng::new(1);
+            let w = rng.laplace_vec(1024 * 512, 0.1);
+            let q = quant::RowQuantized::quantize(&w, 1024, 512, bits, method);
+            println!(
+                "{}-bit {} on laplace 1024x512: rel-MSE {:.5}, memory saving {:.1}x",
+                bits,
+                method.name(),
+                q.relative_mse(&w),
+                q.compression()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    let which = cli.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let dir = artifact_dir(cli);
+    let scale = cli.get_usize("scale", 8)?;
+    match which {
+        "table1" | "table2" => {
+            let eval_tokens = cli.get_usize("eval-tokens", 3000)?;
+            print!("{}", exp::quant_tables::run_default(scale, 5, eval_tokens, &runs_dir(cli)));
+        }
+        "table3" | "table4" | "table5" => {
+            let t: usize = which[5..].parse().unwrap();
+            let epochs = cli.get_usize("epochs", 3)?;
+            let steps = cli.get_usize("steps", 60)?;
+            let eval_steps = cli.get_usize("eval-steps", 20)?;
+            let lr = cli.get_f64("lr", 20.0)?;
+            let out = exp::table3_4_5(t, &dir, scale, epochs, steps, eval_steps, lr, |l| {
+                eprintln!("{l}")
+            })?;
+            println!("{out}");
+        }
+        "table6" => {
+            let full = cli.has("full");
+            let shapes: &[(usize, usize)] =
+                if full { &[(4096, 1024), (42000, 1024)] } else { &[(4096, 1024)] };
+            let rows = exp::table6(shapes, cli.get_usize("samples", 15)?);
+            print!("{}", exp::kernel_tables::render_table6(&rows));
+            print!("{}", exp::costmodel(shapes, &rows));
+        }
+        "costmodel" => {
+            let shapes = [(4096usize, 1024usize), (42000, 1024)];
+            print!("{}", exp::costmodel(&shapes, &[]));
+        }
+        "table7" => {
+            let rows = exp::table7(
+                cli.get_usize("train-n", 800)?,
+                cli.get_usize("test-n", 300)?,
+                cli.get_usize("hidden", 64)?,
+                cli.get_usize("epochs", 3)?,
+            );
+            print!("{}", exp::image_tables::render(7, &rows, "seq-MNIST-like, 1-bit in / 2-bit W / 2-bit A"));
+        }
+        "table8" => {
+            let rows = exp::table8(
+                cli.get_usize("train-n", 2000)?,
+                cli.get_usize("test-n", 500)?,
+                cli.get_usize("hidden", 256)?,
+                cli.get_usize("epochs", 4)?,
+            );
+            print!("{}", exp::image_tables::render(8, &rows, "MNIST-like MLP, 2-bit in / 2-bit W / 1-bit A"));
+        }
+        "table9" => {
+            let rows = exp::table9(
+                cli.get_usize("train-n", 600)?,
+                cli.get_usize("test-n", 200)?,
+                cli.get_usize("base", 8)?,
+                cli.get_usize("epochs", 2)?,
+            );
+            print!("{}", exp::image_tables::render(9, &rows, "CIFAR-like VGG (scaled), 2-bit W / 1-bit A"));
+        }
+        other => bail!("unknown bench '{other}' (table1..table9|costmodel)"),
+    }
+    Ok(())
+}

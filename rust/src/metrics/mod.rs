@@ -1,0 +1,103 @@
+//! Serving/benchmark metrics: latency histograms, throughput counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::Summary;
+
+/// Latency recorder (µs), thread-safe, exact percentiles.
+#[derive(Default)]
+pub struct LatencyRecorder {
+    samples: Mutex<Summary>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.samples.lock().unwrap().add(d.as_secs_f64() * 1e6);
+    }
+
+    /// (count, mean_us, p50_us, p95_us, p99_us, max_us)
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let mut s = self.samples.lock().unwrap();
+        LatencySnapshot {
+            count: s.len(),
+            mean_us: s.mean(),
+            p50_us: s.percentile(50.0),
+            p95_us: s.percentile(95.0),
+            p99_us: s.percentile(99.0),
+            max_us: s.max(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySnapshot {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencySnapshot {
+    pub fn report(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs max={:.1}µs",
+            self.count, self.mean_us, self.p50_us, self.p95_us, self.p99_us, self.max_us
+        )
+    }
+}
+
+/// Monotonic event counters for the server.
+#[derive(Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub batches: AtomicU64,
+    pub evictions: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_snapshot() {
+        let r = LatencyRecorder::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            r.record(Duration::from_millis(ms));
+        }
+        let s = r.snapshot();
+        assert_eq!(s.count, 5);
+        assert!(s.p50_us >= 2000.0 && s.p50_us <= 4000.0);
+        assert!(s.max_us >= 99_000.0);
+    }
+
+    #[test]
+    fn counters() {
+        let c = Counters::new();
+        Counters::inc(&c.requests, 3);
+        assert_eq!(Counters::get(&c.requests), 3);
+    }
+}

@@ -1,0 +1,112 @@
+//! Token embedding table, optionally row-quantized.
+//!
+//! Paper §4: because inputs are one-hot, `x_t = W_eᵀ y*_{t−1}` is a row
+//! lookup — when `W_e` is row-quantized the looked-up row is *already* in
+//! multi-bit form, so it feeds the quantized gate products with **no online
+//! quantization cost**.
+
+use crate::quant::{Method, Quantized, RowQuantized};
+
+/// Embedding lookup result: dense, or a ready-made multi-bit activation.
+pub enum Embedded {
+    Dense(Vec<f32>),
+    Quant(Quantized),
+}
+
+impl Embedded {
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            Embedded::Dense(v) => v.clone(),
+            Embedded::Quant(q) => q.dequantize(),
+        }
+    }
+}
+
+/// `vocab × dim` embedding table.
+#[derive(Clone, Debug)]
+pub enum Embedding {
+    Dense { w: Vec<f32>, vocab: usize, dim: usize },
+    Quant { w: RowQuantized },
+}
+
+impl Embedding {
+    pub fn new_dense(w: Vec<f32>, vocab: usize, dim: usize) -> Self {
+        assert_eq!(w.len(), vocab * dim);
+        Embedding::Dense { w, vocab, dim }
+    }
+
+    /// Quantize each embedding row to `k` bits with the alternating method.
+    pub fn new_quantized(w: Vec<f32>, vocab: usize, dim: usize, k: usize) -> Self {
+        assert_eq!(w.len(), vocab * dim);
+        Embedding::Quant {
+            w: RowQuantized::quantize(&w, vocab, dim, k, Method::Alternating { t: 2 }),
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        match self {
+            Embedding::Dense { vocab, .. } => *vocab,
+            Embedding::Quant { w } => w.rows,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Embedding::Dense { dim, .. } => *dim,
+            Embedding::Quant { w } => w.cols,
+        }
+    }
+
+    /// Row lookup for token `id`.
+    pub fn lookup(&self, id: usize) -> Embedded {
+        match self {
+            Embedding::Dense { w, dim, vocab } => {
+                assert!(id < *vocab, "token {id} out of vocab {vocab}");
+                Embedded::Dense(w[id * dim..(id + 1) * dim].to_vec())
+            }
+            Embedding::Quant { w } => {
+                assert!(id < w.rows, "token {id} out of vocab {}", w.rows);
+                Embedded::Quant(w.row(id))
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            Embedding::Dense { w, .. } => w.len() * 4,
+            Embedding::Quant { w } => w.packed_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_lookup_returns_row() {
+        let w: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let e = Embedding::new_dense(w, 4, 3);
+        assert_eq!(e.lookup(2).to_dense(), vec![6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn quantized_lookup_matches_row_quantization() {
+        let mut rng = Rng::new(121);
+        let (v, d) = (10, 32);
+        let w = rng.normal_vec(v * d, 0.5);
+        let e = Embedding::new_quantized(w.clone(), v, d, 2);
+        let rq = RowQuantized::quantize(&w, v, d, 2, Method::Alternating { t: 2 });
+        for id in 0..v {
+            assert_eq!(e.lookup(id).to_dense(), rq.row(id).dequantize());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn oov_panics() {
+        let e = Embedding::new_dense(vec![0.0; 6], 2, 3);
+        e.lookup(2);
+    }
+}

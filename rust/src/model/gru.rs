@@ -1,0 +1,149 @@
+//! GRU cell (Cho et al. 2014) with swappable quantized gate products,
+//! mirroring [`super::lstm`].
+//!
+//! Gate layout `[r, z, n]` stacked along rows: `W_x ∈ R^{3h×in}`,
+//! `W_h ∈ R^{3h×h}`:
+//!
+//! ```text
+//! r = σ(Wx_r x + Wh_r h + b_r)        z = σ(Wx_z x + Wh_z h + b_z)
+//! ñ = tanh(Wx_n x + r ⊙ (Wh_n h) + b_n)
+//! h' = (1 − z) ⊙ ñ + z ⊙ h
+//! ```
+
+use super::linear::{Linear, Precision};
+use super::math::sigmoid;
+use crate::util::Rng;
+
+/// One GRU layer.
+pub struct GruCell {
+    pub wx: Linear, // 3h × in
+    pub wh: Linear, // 3h × h
+    pub bias: Vec<f32>, // 3h
+    pub hidden: usize,
+    pub input: usize,
+}
+
+impl GruCell {
+    pub fn init(input: usize, hidden: usize, scale: f32, rng: &mut Rng, precision: Precision) -> Self {
+        let wx: Vec<f32> = (0..3 * hidden * input).map(|_| rng.range_f32(-scale, scale)).collect();
+        let wh: Vec<f32> = (0..3 * hidden * hidden).map(|_| rng.range_f32(-scale, scale)).collect();
+        GruCell {
+            wx: Linear::new(wx, 3 * hidden, input, precision),
+            wh: Linear::new(wh, 3 * hidden, hidden, precision),
+            bias: vec![0.0; 3 * hidden],
+            hidden,
+            input,
+        }
+    }
+
+    pub fn from_dense(
+        wx: Vec<f32>,
+        wh: Vec<f32>,
+        bias: Vec<f32>,
+        input: usize,
+        hidden: usize,
+        precision: Precision,
+    ) -> Self {
+        assert_eq!(wx.len(), 3 * hidden * input);
+        assert_eq!(wh.len(), 3 * hidden * hidden);
+        assert_eq!(bias.len(), 3 * hidden);
+        GruCell {
+            wx: Linear::new(wx, 3 * hidden, input, precision),
+            wh: Linear::new(wh, 3 * hidden, hidden, precision),
+            bias,
+            hidden,
+            input,
+        }
+    }
+
+    /// One step: returns the new hidden state.
+    pub fn step(&self, x: &[f32], h: &[f32]) -> Vec<f32> {
+        let h3 = 3 * self.hidden;
+        let mut gx = vec![0.0f32; h3];
+        let mut gh = vec![0.0f32; h3];
+        self.wx.matvec(x, &mut gx);
+        self.wh.matvec(h, &mut gh);
+        self.combine(&gx, &gh, h)
+    }
+
+    /// One step with a pre-quantized input activation.
+    pub fn step_prequant(&self, xq: &crate::quant::Quantized, h: &[f32]) -> Vec<f32> {
+        let h3 = 3 * self.hidden;
+        let mut gx = vec![0.0f32; h3];
+        let mut gh = vec![0.0f32; h3];
+        self.wx.matvec_prequant(xq, &mut gx);
+        self.wh.matvec(h, &mut gh);
+        self.combine(&gx, &gh, h)
+    }
+
+    fn combine(&self, gx: &[f32], gh: &[f32], h: &[f32]) -> Vec<f32> {
+        let hd = self.hidden;
+        let mut out = vec![0.0f32; hd];
+        for j in 0..hd {
+            let r = sigmoid(gx[j] + gh[j] + self.bias[j]);
+            let z = sigmoid(gx[hd + j] + gh[hd + j] + self.bias[hd + j]);
+            let n = (gx[2 * hd + j] + r * gh[2 * hd + j] + self.bias[2 * hd + j]).tanh();
+            out[j] = (1.0 - z) * n + z * h[j];
+        }
+        out
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.wx.bytes() + self.wh.bytes() + self.bias.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_bounded_and_shaped() {
+        let mut rng = Rng::new(141);
+        let cell = GruCell::init(8, 16, 0.4, &mut rng, Precision::Full);
+        let x = rng.normal_vec(8, 1.0);
+        let mut h = vec![0.0f32; 16];
+        for _ in 0..10 {
+            h = cell.step(&x, &h);
+        }
+        assert_eq!(h.len(), 16);
+        // h is a convex combination of tanh values and previous h ⇒ |h| ≤ 1.
+        assert!(h.iter().all(|&v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn identity_when_update_gate_saturated() {
+        // Huge positive z-bias ⇒ z ≈ 1 ⇒ h' ≈ h.
+        let mut rng = Rng::new(142);
+        let mut cell = GruCell::init(4, 8, 0.2, &mut rng, Precision::Full);
+        for j in 0..8 {
+            cell.bias[8 + j] = 50.0;
+        }
+        let h: Vec<f32> = rng.normal_vec(8, 0.3);
+        let x = rng.normal_vec(4, 1.0);
+        let h2 = cell.step(&x, &h);
+        for (a, b) in h.iter().zip(&h2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quantized_tracks_full_precision() {
+        let mut rng = Rng::new(143);
+        let (input, hidden) = (32, 64);
+        let wx: Vec<f32> = (0..3 * hidden * input).map(|_| rng.range_f32(-0.2, 0.2)).collect();
+        let wh: Vec<f32> = (0..3 * hidden * hidden).map(|_| rng.range_f32(-0.2, 0.2)).collect();
+        let bias = vec![0.0; 3 * hidden];
+        let fp = GruCell::from_dense(wx.clone(), wh.clone(), bias.clone(), input, hidden, Precision::Full);
+        let q = GruCell::from_dense(wx, wh, bias, input, hidden, Precision::Quantized { k_w: 3, k_a: 3 });
+        let x = rng.normal_vec(input, 1.0);
+        let mut hf = vec![0.0f32; hidden];
+        let mut hq = vec![0.0f32; hidden];
+        for _ in 0..5 {
+            hf = fp.step(&x, &hf);
+            hq = q.step(&x, &hq);
+        }
+        let err: f32 = hf.iter().zip(&hq).map(|(a, b)| (a - b).abs()).sum::<f32>() / hidden as f32;
+        assert!(err < 0.1, "mean |Δh| = {err}");
+    }
+}

@@ -1,0 +1,176 @@
+//! A linear map that can be dense f32 or multi-bit quantized.
+//!
+//! This is the swap point that turns a full-precision model into the
+//! paper's quantized one: quantized layers run the XNOR/popcount kernel
+//! with online activation quantization (§4), dense layers run the blocked
+//! f32 GEMV.
+
+use crate::kernels::binary::PreparedGemv;
+use crate::kernels::{binary, dense};
+use crate::quant::{Method, Quantized, RowQuantized};
+
+/// Precision/bit-width policy for one linear layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Full,
+    /// Weights `k_w` bits, activations `k_a` bits (online).
+    Quantized { k_w: usize, k_a: usize },
+}
+
+/// A (possibly quantized) linear layer `y = W x (+ b)`.
+#[derive(Clone, Debug)]
+pub enum Linear {
+    Dense {
+        w: Vec<f32>,
+        rows: usize,
+        cols: usize,
+    },
+    Quant {
+        /// Contiguous serving-path layout (Perf iteration 2).
+        w: PreparedGemv,
+        /// Activation bit width for the online quantization step.
+        k_a: usize,
+    },
+}
+
+impl Linear {
+    /// Build from a dense row-major matrix under the given policy.
+    pub fn new(w: Vec<f32>, rows: usize, cols: usize, precision: Precision) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        match precision {
+            Precision::Full => Linear::Dense { w, rows, cols },
+            Precision::Quantized { k_w, k_a } => Linear::Quant {
+                w: PreparedGemv::new(&RowQuantized::quantize(
+                    &w,
+                    rows,
+                    cols,
+                    k_w,
+                    Method::Alternating { t: 2 },
+                )),
+                k_a,
+            },
+        }
+    }
+
+    /// Build a quantized layer with an explicit method (ablations).
+    pub fn new_with_method(
+        w: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        k_w: usize,
+        k_a: usize,
+        method: Method,
+    ) -> Self {
+        Linear::Quant { w: PreparedGemv::new(&RowQuantized::quantize(&w, rows, cols, k_w, method)), k_a }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Linear::Dense { rows, .. } => *rows,
+            Linear::Quant { w, .. } => w.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Linear::Dense { cols, .. } => *cols,
+            Linear::Quant { w, .. } => w.cols,
+        }
+    }
+
+    /// `y = W x`. For quantized layers this quantizes `x` online first.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Linear::Dense { w, rows, cols } => dense::gemv(w, *rows, *cols, x, y),
+            Linear::Quant { w, k_a } => w.online_gemv(x, *k_a, y),
+        }
+    }
+
+    /// `y = W x̂` with a pre-quantized activation (used when the activation
+    /// is shared across several layers, e.g. `h_{t-1}` feeding all gates, or
+    /// comes straight out of a quantized embedding row).
+    pub fn matvec_prequant(&self, xq: &Quantized, y: &mut [f32]) {
+        match self {
+            Linear::Dense { w, rows, cols } => {
+                let xd = xq.dequantize();
+                dense::gemv(w, *rows, *cols, &xd, y)
+            }
+            Linear::Quant { w, .. } => w.gemv(xq, y),
+        }
+    }
+
+    /// Quantize an activation with this layer's activation policy (identity
+    /// wrapper returning `None` for dense layers).
+    pub fn quantize_input(&self, x: &[f32]) -> Option<Quantized> {
+        match self {
+            Linear::Dense { .. } => None,
+            Linear::Quant { k_a, .. } => Some(binary::quantize_activations(x, *k_a)),
+        }
+    }
+
+    /// Bytes of weight storage.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Linear::Dense { w, .. } => w.len() * 4,
+            Linear::Quant { w, .. } => w.bytes(),
+        }
+    }
+
+    /// A dense snapshot (dequantized for quantized layers).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            Linear::Dense { w, .. } => w.clone(),
+            Linear::Quant { w, .. } => w.dequantize(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_and_quant_agree_within_budget() {
+        let mut rng = Rng::new(111);
+        let (m, n) = (64, 128);
+        let wv = rng.normal_vec(m * n, 0.2);
+        let x = rng.normal_vec(n, 1.0);
+        let d = Linear::new(wv.clone(), m, n, Precision::Full);
+        let q = Linear::new(wv, m, n, Precision::Quantized { k_w: 3, k_a: 3 });
+        let mut yd = vec![0.0; m];
+        let mut yq = vec![0.0; m];
+        d.matvec(&x, &mut yd);
+        q.matvec(&x, &mut yq);
+        let num: f64 = yd.iter().zip(&yq).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = yd.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!(num / den < 0.2, "{}", num / den);
+    }
+
+    #[test]
+    fn prequant_matches_online() {
+        let mut rng = Rng::new(112);
+        let (m, n) = (16, 64);
+        let q = Linear::new(
+            rng.normal_vec(m * n, 0.3),
+            m,
+            n,
+            Precision::Quantized { k_w: 2, k_a: 2 },
+        );
+        let x = rng.normal_vec(n, 1.0);
+        let xq = q.quantize_input(&x).unwrap();
+        let mut y1 = vec![0.0; m];
+        let mut y2 = vec![0.0; m];
+        q.matvec(&x, &mut y1);
+        q.matvec_prequant(&xq, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn quantized_layer_is_smaller() {
+        let w = vec![0.1f32; 256 * 512];
+        let d = Linear::new(w.clone(), 256, 512, Precision::Full);
+        let q = Linear::new(w, 256, 512, Precision::Quantized { k_w: 2, k_a: 2 });
+        assert!(q.bytes() * 10 < d.bytes(), "{} vs {}", q.bytes(), d.bytes());
+    }
+}

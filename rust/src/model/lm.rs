@@ -1,0 +1,338 @@
+//! The RNN language model of §4–§5: embedding → (LSTM | GRU) stack →
+//! softmax head, with a per-matrix precision policy.
+//!
+//! The model works both as the native inference engine behind the serving
+//! coordinator and as the evaluation harness for the paper's PPW tables
+//! (Tables 1–5): quantize a trained checkpoint's matrices and measure
+//! perplexity-per-word on a held-out stream.
+
+use super::embedding::{Embedded, Embedding};
+use super::gru::GruCell;
+use super::linear::{Linear, Precision};
+use super::lstm::{LstmCell, LstmState};
+use super::math::log_softmax_at;
+use crate::util::Rng;
+
+/// Which recurrent cell to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RnnKind {
+    Lstm,
+    Gru,
+}
+
+impl RnnKind {
+    pub fn gates(&self) -> usize {
+        match self {
+            RnnKind::Lstm => 4,
+            RnnKind::Gru => 3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RnnKind::Lstm => "LSTM",
+            RnnKind::Gru => "GRU",
+        }
+    }
+}
+
+/// Model hyper-parameters (paper §5: PTB h=300, WikiText-2 h=512,
+/// Text8 h=1024; one hidden layer).
+#[derive(Clone, Copy, Debug)]
+pub struct LmConfig {
+    pub kind: RnnKind,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+}
+
+impl LmConfig {
+    pub fn ptb_lstm() -> Self {
+        LmConfig { kind: RnnKind::Lstm, vocab: 10_000, hidden: 300, layers: 1 }
+    }
+
+    pub fn ptb_gru() -> Self {
+        LmConfig { kind: RnnKind::Gru, vocab: 10_000, hidden: 300, layers: 1 }
+    }
+}
+
+/// Per-matrix precision policy: the paper quantizes the gate products, the
+/// softmax layer and the embedding; biases stay full precision.
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionPolicy {
+    pub rnn: Precision,
+    pub softmax: Precision,
+    /// Embedding bits (`None` = dense). Rows are quantized offline; lookups
+    /// then feed the gate product pre-quantized at zero online cost (§4).
+    pub embedding_bits: Option<usize>,
+}
+
+impl PrecisionPolicy {
+    pub fn full() -> Self {
+        PrecisionPolicy { rnn: Precision::Full, softmax: Precision::Full, embedding_bits: None }
+    }
+
+    /// The paper's W/A setting: all weight matrices k_w bits, activations
+    /// k_a bits.
+    pub fn quantized(k_w: usize, k_a: usize) -> Self {
+        PrecisionPolicy {
+            rnn: Precision::Quantized { k_w, k_a },
+            softmax: Precision::Quantized { k_w, k_a },
+            embedding_bits: Some(k_w),
+        }
+    }
+}
+
+enum Cell {
+    Lstm(LstmCell),
+    Gru(GruCell),
+}
+
+/// Recurrent state for the whole stack.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LmState {
+    Lstm(Vec<LstmState>),
+    Gru(Vec<Vec<f32>>),
+}
+
+/// The language model.
+pub struct RnnLm {
+    pub config: LmConfig,
+    embedding: Embedding,
+    cells: Vec<Cell>,
+    softmax: Linear,
+    softmax_bias: Vec<f32>,
+}
+
+/// Dense parameter bundle (interchange with the Layer-2 JAX model and the
+/// checkpoint format).
+#[derive(Clone, Debug, Default)]
+pub struct LmWeights {
+    pub embedding: Vec<f32>,          // vocab × hidden
+    pub wx: Vec<Vec<f32>>,            // per layer: gates*h × in
+    pub wh: Vec<Vec<f32>>,            // per layer: gates*h × h
+    pub bias: Vec<Vec<f32>>,          // per layer: gates*h
+    pub softmax_w: Vec<f32>,          // vocab × hidden
+    pub softmax_b: Vec<f32>,          // vocab
+}
+
+impl LmWeights {
+    /// Random init with the standard `U(−0.1, 0.1)` LM scaling.
+    pub fn random(config: &LmConfig, rng: &mut Rng) -> Self {
+        let g = config.kind.gates();
+        let (v, h) = (config.vocab, config.hidden);
+        let mut wx = Vec::new();
+        let mut wh = Vec::new();
+        let mut bias = Vec::new();
+        for l in 0..config.layers {
+            let input = if l == 0 { h } else { h };
+            wx.push((0..g * h * input).map(|_| rng.range_f32(-0.1, 0.1)).collect());
+            wh.push((0..g * h * h).map(|_| rng.range_f32(-0.1, 0.1)).collect());
+            bias.push(vec![0.0; g * h]);
+        }
+        LmWeights {
+            embedding: (0..v * h).map(|_| rng.range_f32(-0.1, 0.1)).collect(),
+            wx,
+            wh,
+            bias,
+            softmax_w: (0..v * h).map(|_| rng.range_f32(-0.1, 0.1)).collect(),
+            softmax_b: vec![0.0; v],
+        }
+    }
+}
+
+impl RnnLm {
+    /// Assemble a model from dense weights under a precision policy.
+    pub fn from_weights(config: LmConfig, w: &LmWeights, policy: PrecisionPolicy) -> Self {
+        let (v, h) = (config.vocab, config.hidden);
+        let embedding = match policy.embedding_bits {
+            None => Embedding::new_dense(w.embedding.clone(), v, h),
+            Some(k) => Embedding::new_quantized(w.embedding.clone(), v, h, k),
+        };
+        let mut cells = Vec::new();
+        for l in 0..config.layers {
+            let input = h;
+            let cell = match config.kind {
+                RnnKind::Lstm => Cell::Lstm(LstmCell::from_dense(
+                    w.wx[l].clone(),
+                    w.wh[l].clone(),
+                    w.bias[l].clone(),
+                    input,
+                    h,
+                    policy.rnn,
+                )),
+                RnnKind::Gru => Cell::Gru(GruCell::from_dense(
+                    w.wx[l].clone(),
+                    w.wh[l].clone(),
+                    w.bias[l].clone(),
+                    input,
+                    h,
+                    policy.rnn,
+                )),
+            };
+            cells.push(cell);
+        }
+        RnnLm {
+            config,
+            embedding,
+            cells,
+            softmax: Linear::new(w.softmax_w.clone(), v, h, policy.softmax),
+            softmax_bias: w.softmax_b.clone(),
+        }
+    }
+
+    /// Random model (tests, cold starts).
+    pub fn random(config: LmConfig, seed: u64, policy: PrecisionPolicy) -> Self {
+        let mut rng = Rng::new(seed);
+        let w = LmWeights::random(&config, &mut rng);
+        Self::from_weights(config, &w, policy)
+    }
+
+    pub fn zero_state(&self) -> LmState {
+        match self.config.kind {
+            RnnKind::Lstm => {
+                LmState::Lstm(vec![LstmState::zeros(self.config.hidden); self.config.layers])
+            }
+            RnnKind::Gru => {
+                LmState::Gru(vec![vec![0.0; self.config.hidden]; self.config.layers])
+            }
+        }
+    }
+
+    /// One inference step: consume `token`, update `state`, return logits
+    /// over the vocabulary.
+    pub fn step(&self, token: usize, state: &mut LmState) -> Vec<f32> {
+        let emb = self.embedding.lookup(token);
+        let mut x: Vec<f32> = Vec::new();
+        let mut x_prequant: Option<crate::quant::Quantized> = None;
+        match emb {
+            Embedded::Dense(v) => x = v,
+            Embedded::Quant(q) => x_prequant = Some(q),
+        }
+        for (l, cell) in self.cells.iter().enumerate() {
+            match (cell, &mut *state) {
+                (Cell::Lstm(c), LmState::Lstm(states)) => {
+                    let s = if l == 0 {
+                        if let Some(q) = &x_prequant {
+                            c.step_prequant(q, &states[l])
+                        } else {
+                            c.step(&x, &states[l])
+                        }
+                    } else {
+                        c.step(&x, &states[l])
+                    };
+                    x = s.h.clone();
+                    states[l] = s;
+                }
+                (Cell::Gru(c), LmState::Gru(states)) => {
+                    let s = if l == 0 {
+                        if let Some(q) = &x_prequant {
+                            c.step_prequant(q, &states[l])
+                        } else {
+                            c.step(&x, &states[l])
+                        }
+                    } else {
+                        c.step(&x, &states[l])
+                    };
+                    x = s.clone();
+                    states[l] = s;
+                }
+                _ => unreachable!("state kind matches cell kind by construction"),
+            }
+        }
+        let mut logits = self.softmax_bias.clone();
+        let mut y = vec![0.0f32; self.config.vocab];
+        self.softmax.matvec(&x, &mut y);
+        for (l, v) in logits.iter_mut().zip(&y) {
+            *l += v;
+        }
+        logits
+    }
+
+    /// Perplexity per word over a token stream (the paper's metric):
+    /// `exp( −1/(N−1) Σ log p(tokenᵢ₊₁ | …) )`.
+    pub fn ppw(&self, tokens: &[usize]) -> f64 {
+        assert!(tokens.len() >= 2, "need at least two tokens");
+        let mut state = self.zero_state();
+        let mut nll = 0.0f64;
+        for i in 0..tokens.len() - 1 {
+            let logits = self.step(tokens[i], &mut state);
+            nll -= log_softmax_at(&logits, tokens[i + 1]) as f64;
+        }
+        (nll / (tokens.len() - 1) as f64).exp()
+    }
+
+    /// Total weight bytes (the memory-saving claims of the abstract).
+    pub fn bytes(&self) -> usize {
+        let cell_bytes: usize = self
+            .cells
+            .iter()
+            .map(|c| match c {
+                Cell::Lstm(c) => c.bytes(),
+                Cell::Gru(c) => c.bytes(),
+            })
+            .sum();
+        self.embedding.bytes() + cell_bytes + self.softmax.bytes() + self.softmax_bias.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(kind: RnnKind) -> LmConfig {
+        LmConfig { kind, vocab: 50, hidden: 32, layers: 1 }
+    }
+
+    #[test]
+    fn step_produces_vocab_logits() {
+        for kind in [RnnKind::Lstm, RnnKind::Gru] {
+            let lm = RnnLm::random(tiny(kind), 1, PrecisionPolicy::full());
+            let mut st = lm.zero_state();
+            let logits = lm.step(3, &mut st);
+            assert_eq!(logits.len(), 50);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn state_evolves() {
+        let lm = RnnLm::random(tiny(RnnKind::Lstm), 2, PrecisionPolicy::full());
+        let mut st = lm.zero_state();
+        lm.step(1, &mut st);
+        assert_ne!(st, lm.zero_state());
+    }
+
+    #[test]
+    fn random_model_ppw_near_vocab_size() {
+        // An untrained model is ~uniform ⇒ PPW ≈ |V|.
+        let lm = RnnLm::random(tiny(RnnKind::Lstm), 3, PrecisionPolicy::full());
+        let tokens: Vec<usize> = (0..300).map(|i| (i * 7) % 50).collect();
+        let ppw = lm.ppw(&tokens);
+        assert!((25.0..100.0).contains(&ppw), "ppw={ppw}");
+    }
+
+    #[test]
+    fn quantized_model_is_much_smaller_and_close_in_ppw() {
+        let config = tiny(RnnKind::Gru);
+        let mut rng = Rng::new(4);
+        let w = LmWeights::random(&config, &mut rng);
+        let fp = RnnLm::from_weights(config, &w, PrecisionPolicy::full());
+        let q3 = RnnLm::from_weights(config, &w, PrecisionPolicy::quantized(3, 3));
+        // At this toy size packing overhead dims the ratio; the realistic
+        // ~10.5× (3-bit) figure is asserted in quant::matrix at 4096×1024.
+        assert!(q3.bytes() * 3 < fp.bytes(), "{} vs {}", q3.bytes(), fp.bytes());
+        let tokens: Vec<usize> = (0..200).map(|i| (i * 13 + 5) % 50).collect();
+        let (p_fp, p_q) = (fp.ppw(&tokens), q3.ppw(&tokens));
+        let rel = (p_q - p_fp).abs() / p_fp;
+        assert!(rel < 0.25, "fp={p_fp} q={p_q}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = RnnLm::random(tiny(RnnKind::Lstm), 7, PrecisionPolicy::full());
+        let b = RnnLm::random(tiny(RnnKind::Lstm), 7, PrecisionPolicy::full());
+        let t: Vec<usize> = (0..50).map(|i| i % 50).collect();
+        assert_eq!(a.ppw(&t), b.ppw(&t));
+    }
+}

@@ -1,0 +1,336 @@
+//! LSTM cell (Hochreiter & Schmidhuber 1997), the paper's Eq. 6, with the
+//! two gate products `W_i x_t` and `W_h h_{t−1}` as swappable [`Linear`]s —
+//! quantizing those two matrices (plus the softmax and embedding) is
+//! exactly where the paper applies its method.
+//!
+//! Gate layout follows the paper's order `[i, f, o, g]` stacked along rows:
+//! `W_x ∈ R^{4h×in}`, `W_h ∈ R^{4h×h}`.
+
+use super::linear::{Linear, Precision};
+use super::math::{sigmoid, dtanh};
+use crate::util::Rng;
+
+/// LSTM recurrent state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LstmState {
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+impl LstmState {
+    pub fn zeros(hidden: usize) -> Self {
+        LstmState { h: vec![0.0; hidden], c: vec![0.0; hidden] }
+    }
+}
+
+/// One LSTM layer.
+pub struct LstmCell {
+    pub wx: Linear, // 4h × in
+    pub wh: Linear, // 4h × h
+    pub bias: Vec<f32>, // 4h
+    pub hidden: usize,
+    pub input: usize,
+}
+
+impl LstmCell {
+    /// Random initialization in `U(-scale, scale)` (the standard LM init).
+    pub fn init(input: usize, hidden: usize, scale: f32, rng: &mut Rng, precision: Precision) -> Self {
+        let wx: Vec<f32> = (0..4 * hidden * input).map(|_| rng.range_f32(-scale, scale)).collect();
+        let wh: Vec<f32> = (0..4 * hidden * hidden).map(|_| rng.range_f32(-scale, scale)).collect();
+        LstmCell {
+            wx: Linear::new(wx, 4 * hidden, input, precision),
+            wh: Linear::new(wh, 4 * hidden, hidden, precision),
+            bias: vec![0.0; 4 * hidden],
+            hidden,
+            input,
+        }
+    }
+
+    /// Build from dense weights (e.g. loaded from a Layer-2 checkpoint).
+    pub fn from_dense(
+        wx: Vec<f32>,
+        wh: Vec<f32>,
+        bias: Vec<f32>,
+        input: usize,
+        hidden: usize,
+        precision: Precision,
+    ) -> Self {
+        assert_eq!(wx.len(), 4 * hidden * input);
+        assert_eq!(wh.len(), 4 * hidden * hidden);
+        assert_eq!(bias.len(), 4 * hidden);
+        LstmCell {
+            wx: Linear::new(wx, 4 * hidden, input, precision),
+            wh: Linear::new(wh, 4 * hidden, hidden, precision),
+            bias,
+            hidden,
+            input,
+        }
+    }
+
+    /// One step: gates `i,f,o,g`; `c' = f⊙c + i⊙g`, `h' = o⊙tanh(c')`.
+    pub fn step(&self, x: &[f32], state: &LstmState) -> LstmState {
+        let h4 = 4 * self.hidden;
+        let mut gx = vec![0.0f32; h4];
+        let mut gh = vec![0.0f32; h4];
+        self.wx.matvec(x, &mut gx);
+        self.wh.matvec(&state.h, &mut gh);
+        self.combine(&gx, &gh, state)
+    }
+
+    /// One step with a pre-quantized input activation (embedding rows are
+    /// already multi-bit; see [`super::embedding`]).
+    pub fn step_prequant(&self, xq: &crate::quant::Quantized, state: &LstmState) -> LstmState {
+        let h4 = 4 * self.hidden;
+        let mut gx = vec![0.0f32; h4];
+        let mut gh = vec![0.0f32; h4];
+        self.wx.matvec_prequant(xq, &mut gx);
+        self.wh.matvec(&state.h, &mut gh);
+        self.combine(&gx, &gh, state)
+    }
+
+    fn combine(&self, gx: &[f32], gh: &[f32], state: &LstmState) -> LstmState {
+        let h = self.hidden;
+        let mut out = LstmState::zeros(h);
+        for j in 0..h {
+            let pre_i = gx[j] + gh[j] + self.bias[j];
+            let pre_f = gx[h + j] + gh[h + j] + self.bias[h + j];
+            let pre_o = gx[2 * h + j] + gh[2 * h + j] + self.bias[2 * h + j];
+            let pre_g = gx[3 * h + j] + gh[3 * h + j] + self.bias[3 * h + j];
+            let i = sigmoid(pre_i);
+            let f = sigmoid(pre_f);
+            let o = sigmoid(pre_o);
+            let g = pre_g.tanh();
+            let c = f * state.c[j] + i * g;
+            out.c[j] = c;
+            out.h[j] = o * c.tanh();
+        }
+        out
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.wx.bytes() + self.wh.bytes() + self.bias.len() * 4
+    }
+}
+
+/// Gradient-friendly dense LSTM step used by the native trainers
+/// (sequential-MNIST, Table 7): returns intermediate activations for BPTT.
+pub struct LstmTape {
+    pub i: Vec<f32>,
+    pub f: Vec<f32>,
+    pub o: Vec<f32>,
+    pub g: Vec<f32>,
+    pub c: Vec<f32>,
+    pub tanh_c: Vec<f32>,
+    pub h: Vec<f32>,
+}
+
+/// Dense forward with tape (weights given as raw slices, layout as above).
+pub fn step_dense_tape(
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    input: usize,
+    hidden: usize,
+    x: &[f32],
+    prev_h: &[f32],
+    prev_c: &[f32],
+) -> LstmTape {
+    let h4 = 4 * hidden;
+    let mut pre = bias.to_vec();
+    for r in 0..h4 {
+        let mut s = 0.0f32;
+        let row = &wx[r * input..(r + 1) * input];
+        for (a, b) in row.iter().zip(x) {
+            s += a * b;
+        }
+        let rowh = &wh[r * hidden..(r + 1) * hidden];
+        for (a, b) in rowh.iter().zip(prev_h) {
+            s += a * b;
+        }
+        pre[r] += s;
+    }
+    let mut t = LstmTape {
+        i: vec![0.0; hidden],
+        f: vec![0.0; hidden],
+        o: vec![0.0; hidden],
+        g: vec![0.0; hidden],
+        c: vec![0.0; hidden],
+        tanh_c: vec![0.0; hidden],
+        h: vec![0.0; hidden],
+    };
+    for j in 0..hidden {
+        t.i[j] = sigmoid(pre[j]);
+        t.f[j] = sigmoid(pre[hidden + j]);
+        t.o[j] = sigmoid(pre[2 * hidden + j]);
+        t.g[j] = pre[3 * hidden + j].tanh();
+        t.c[j] = t.f[j] * prev_c[j] + t.i[j] * t.g[j];
+        t.tanh_c[j] = t.c[j].tanh();
+        t.h[j] = t.o[j] * t.tanh_c[j];
+    }
+    t
+}
+
+/// Backward through one dense step; accumulates weight grads and returns
+/// `(dx, dh_prev, dc_prev)`.
+#[allow(clippy::too_many_arguments)]
+pub fn step_dense_backward(
+    wx: &[f32],
+    wh: &[f32],
+    input: usize,
+    hidden: usize,
+    x: &[f32],
+    prev_h: &[f32],
+    prev_c: &[f32],
+    tape: &LstmTape,
+    dh: &[f32],
+    dc_in: &[f32],
+    gwx: &mut [f32],
+    gwh: &mut [f32],
+    gbias: &mut [f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dpre = vec![0.0f32; 4 * hidden];
+    let mut dc_prev = vec![0.0f32; hidden];
+    for j in 0..hidden {
+        let dho = dh[j];
+        let dc = dc_in[j] + dho * tape.o[j] * dtanh(tape.tanh_c[j]);
+        let do_ = dho * tape.tanh_c[j];
+        let di = dc * tape.g[j];
+        let dg = dc * tape.i[j];
+        let df = dc * prev_c[j];
+        dc_prev[j] = dc * tape.f[j];
+        dpre[j] = di * super::math::dsigmoid(tape.i[j]);
+        dpre[hidden + j] = df * super::math::dsigmoid(tape.f[j]);
+        dpre[2 * hidden + j] = do_ * super::math::dsigmoid(tape.o[j]);
+        dpre[3 * hidden + j] = dg * dtanh(tape.g[j]);
+    }
+    let mut dx = vec![0.0f32; input];
+    let mut dh_prev = vec![0.0f32; hidden];
+    for r in 0..4 * hidden {
+        let d = dpre[r];
+        if d == 0.0 {
+            continue;
+        }
+        gbias[r] += d;
+        let rowx = &wx[r * input..(r + 1) * input];
+        let growx = &mut gwx[r * input..(r + 1) * input];
+        for c in 0..input {
+            growx[c] += d * x[c];
+            dx[c] += d * rowx[c];
+        }
+        let rowh = &wh[r * hidden..(r + 1) * hidden];
+        let growh = &mut gwh[r * hidden..(r + 1) * hidden];
+        for c in 0..hidden {
+            growh[c] += d * prev_h[c];
+            dh_prev[c] += d * rowh[c];
+        }
+    }
+    (dx, dh_prev, dc_prev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::linear::Precision;
+
+    fn cell(precision: Precision, seed: u64) -> LstmCell {
+        let mut rng = Rng::new(seed);
+        LstmCell::init(8, 16, 0.4, &mut rng, precision)
+    }
+
+    #[test]
+    fn step_shapes_and_bounds() {
+        let c = cell(Precision::Full, 131);
+        let mut rng = Rng::new(7);
+        let x = rng.normal_vec(8, 1.0);
+        let s = c.step(&x, &LstmState::zeros(16));
+        assert_eq!(s.h.len(), 16);
+        assert_eq!(s.c.len(), 16);
+        // h = o * tanh(c) is bounded by 1 in magnitude.
+        assert!(s.h.iter().all(|&v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn zero_input_zero_state_gives_bias_driven_output() {
+        let c = cell(Precision::Full, 132);
+        let s = c.step(&vec![0.0; 8], &LstmState::zeros(16));
+        // With zero bias, gates are at 0.5/0.0 ⇒ c = 0.5*0 + 0.5*tanh(0) = 0.
+        assert!(s.c.iter().all(|&v| v.abs() < 1e-6));
+        assert!(s.h.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn quantized_cell_tracks_full_precision() {
+        let mut rng = Rng::new(133);
+        let (input, hidden) = (32, 64);
+        let wx: Vec<f32> = (0..4 * hidden * input).map(|_| rng.range_f32(-0.2, 0.2)).collect();
+        let wh: Vec<f32> = (0..4 * hidden * hidden).map(|_| rng.range_f32(-0.2, 0.2)).collect();
+        let bias = vec![0.0; 4 * hidden];
+        let fp = LstmCell::from_dense(wx.clone(), wh.clone(), bias.clone(), input, hidden, Precision::Full);
+        let q = LstmCell::from_dense(wx, wh, bias, input, hidden, Precision::Quantized { k_w: 3, k_a: 3 });
+        let x = rng.normal_vec(input, 1.0);
+        let mut sf = LstmState::zeros(hidden);
+        let mut sq = LstmState::zeros(hidden);
+        for _ in 0..5 {
+            sf = fp.step(&x, &sf);
+            sq = q.step(&x, &sq);
+        }
+        let err: f32 = sf.h.iter().zip(&sq.h).map(|(a, b)| (a - b).abs()).sum::<f32>() / hidden as f32;
+        assert!(err < 0.1, "mean |Δh| over 5 steps = {err}");
+    }
+
+    #[test]
+    fn dense_tape_matches_cell_step() {
+        let mut rng = Rng::new(134);
+        let (input, hidden) = (8, 12);
+        let wx: Vec<f32> = (0..4 * hidden * input).map(|_| rng.range_f32(-0.3, 0.3)).collect();
+        let wh: Vec<f32> = (0..4 * hidden * hidden).map(|_| rng.range_f32(-0.3, 0.3)).collect();
+        let bias: Vec<f32> = (0..4 * hidden).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        let cell = LstmCell::from_dense(wx.clone(), wh.clone(), bias.clone(), input, hidden, Precision::Full);
+        let x = rng.normal_vec(input, 1.0);
+        let h0 = rng.normal_vec(hidden, 0.5);
+        let c0 = rng.normal_vec(hidden, 0.5);
+        let s = cell.step(&x, &LstmState { h: h0.clone(), c: c0.clone() });
+        let tape = step_dense_tape(&wx, &wh, &bias, input, hidden, &x, &h0, &c0);
+        for j in 0..hidden {
+            assert!((s.h[j] - tape.h[j]).abs() < 1e-5);
+            assert!((s.c[j] - tape.c[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::new(135);
+        let (input, hidden) = (3, 4);
+        let mut wx: Vec<f32> = (0..4 * hidden * input).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let wh: Vec<f32> = (0..4 * hidden * hidden).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let bias: Vec<f32> = (0..4 * hidden).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        let x = rng.normal_vec(input, 1.0);
+        let h0 = rng.normal_vec(hidden, 0.5);
+        let c0 = rng.normal_vec(hidden, 0.5);
+        // Loss = sum(h).
+        let loss = |wx: &[f32]| -> f32 {
+            let t = step_dense_tape(wx, &wh, &bias, input, hidden, &x, &h0, &c0);
+            t.h.iter().sum()
+        };
+        let tape = step_dense_tape(&wx, &wh, &bias, input, hidden, &x, &h0, &c0);
+        let dh = vec![1.0f32; hidden];
+        let dc = vec![0.0f32; hidden];
+        let mut gwx = vec![0.0f32; wx.len()];
+        let mut gwh = vec![0.0f32; wh.len()];
+        let mut gb = vec![0.0f32; bias.len()];
+        step_dense_backward(
+            &wx, &wh, input, hidden, &x, &h0, &c0, &tape, &dh, &dc, &mut gwx, &mut gwh, &mut gb,
+        );
+        for idx in [0usize, 5, 11, wx.len() - 1] {
+            let eps = 1e-3;
+            let orig = wx[idx];
+            wx[idx] = orig + eps;
+            let lp = loss(&wx);
+            wx[idx] = orig - eps;
+            let lm = loss(&wx);
+            wx[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - gwx[idx]).abs() < 2e-2 * (1.0 + fd.abs()), "idx {idx}: fd {fd} vs {}", gwx[idx]);
+        }
+    }
+}

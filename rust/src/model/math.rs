@@ -1,0 +1,95 @@
+//! Elementwise math shared by the cells and heads.
+
+/// Numerically stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+pub fn dsigmoid(y: f32) -> f32 {
+    // derivative in terms of the output y = σ(x)
+    y * (1.0 - y)
+}
+
+#[inline]
+pub fn dtanh(y: f32) -> f32 {
+    // derivative in terms of the output y = tanh(x)
+    1.0 - y * y
+}
+
+/// In-place softmax with max-subtraction.
+pub fn softmax(x: &mut [f32]) {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// `log(softmax(x)[target])` without materializing the softmax — the
+/// negative of the per-token cross-entropy used for PPW.
+pub fn log_softmax_at(x: &[f32], target: usize) -> f32 {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f32 = x.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+    x[target] - lse
+}
+
+/// Argmax index (first on ties).
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in x.iter().enumerate().skip(1) {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(30.0) > 0.999_999);
+        assert!(sigmoid(-30.0) < 1e-6);
+        // Stability at extremes.
+        assert!(sigmoid(-1e4).is_finite() && sigmoid(1e4).is_finite());
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, 1000.0];
+        softmax(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(x[3] > 0.99);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let x = vec![0.3f32, -1.2, 2.0, 0.0];
+        let mut s = x.clone();
+        softmax(&mut s);
+        for t in 0..x.len() {
+            assert!((log_softmax_at(&x, t) - s[t].ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

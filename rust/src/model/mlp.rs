@@ -1,0 +1,419 @@
+//! Feed-forward MLP with quantization-aware (STE) training — the substrate
+//! for Table 8 (MNIST MLP) and the dense layers of the CNN (Table 9).
+//!
+//! Training follows the paper's bi-level scheme (Eq. 7): full-precision
+//! master weights accumulate gradients; the forward pass re-quantizes every
+//! mini-batch; the backward pass applies the straight-through estimator
+//! `∂f/∂w = ∂f/∂ŵ`. Optimizer is Adam (Appendix B setting), with optional
+//! batch normalization between layers.
+
+use crate::quant::{self, Method};
+use crate::util::Rng;
+
+/// Quantization spec for the forward pass of a layer (`None` = full
+/// precision). Activations are quantized with `k_a` bits after the
+/// nonlinearity; `k_a = 1` means pure sign binarization (Appendix B runs
+/// 1-bit activations).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSpec {
+    pub k_w: Option<usize>,
+    pub k_a: Option<usize>,
+    pub method: Method,
+}
+
+impl QuantSpec {
+    pub fn full() -> Self {
+        QuantSpec { k_w: None, k_a: None, method: Method::Alternating { t: 2 } }
+    }
+
+    pub fn wa(k_w: usize, k_a: usize, method: Method) -> Self {
+        QuantSpec { k_w: Some(k_w), k_a: Some(k_a), method }
+    }
+}
+
+/// Quantize a weight matrix row-wise for the forward pass (returns the
+/// dequantized dense matrix — the STE makes the packed form unnecessary
+/// during training; inference uses [`crate::model::linear::Linear`]).
+pub fn ste_quantize_matrix(w: &[f32], rows: usize, cols: usize, k: usize, method: Method) -> Vec<f32> {
+    quant::RowQuantized::quantize(w, rows, cols, k, method).dequantize()
+}
+
+/// Quantize an activation batch in place (per-sample, the online path).
+pub fn ste_quantize_activations(a: &mut [f32], batch: usize, dim: usize, k: usize, method: Method) {
+    for b in 0..batch {
+        let row = &mut a[b * dim..(b + 1) * dim];
+        let q = quant::quantize(row, k, method);
+        row.copy_from_slice(&q.dequantize());
+    }
+}
+
+/// One dense layer with master weights + Adam state.
+pub struct DenseLayer {
+    pub w: Vec<f32>, // rows × cols master (full precision)
+    pub b: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    // Adam moments.
+    mw: Vec<f32>,
+    vw: Vec<f32>,
+    mb: Vec<f32>,
+    vb: Vec<f32>,
+}
+
+impl DenseLayer {
+    pub fn init(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let scale = (2.0 / cols as f32).sqrt();
+        DenseLayer {
+            w: rng.normal_vec(rows * cols, scale),
+            b: vec![0.0; rows],
+            rows,
+            cols,
+            mw: vec![0.0; rows * cols],
+            vw: vec![0.0; rows * cols],
+            mb: vec![0.0; rows],
+            vb: vec![0.0; rows],
+        }
+    }
+
+    /// Forward-pass weights under the spec (quantized or master).
+    pub fn effective_w(&self, spec: &QuantSpec) -> Vec<f32> {
+        match spec.k_w {
+            Some(k) => ste_quantize_matrix(&self.w, self.rows, self.cols, k, spec.method),
+            None => self.w.clone(),
+        }
+    }
+
+    /// `y[b] = W x[b] + bias` for a batch (row-major `batch × cols`).
+    pub fn forward(&self, wq: &[f32], x: &[f32], batch: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; batch * self.rows];
+        for bi in 0..batch {
+            let xb = &x[bi * self.cols..(bi + 1) * self.cols];
+            let yb = &mut y[bi * self.rows..(bi + 1) * self.rows];
+            for r in 0..self.rows {
+                let row = &wq[r * self.cols..(r + 1) * self.cols];
+                let mut s = self.b[r];
+                for (a, v) in row.iter().zip(xb) {
+                    s += a * v;
+                }
+                yb[r] = s;
+            }
+        }
+        y
+    }
+
+    /// Backward: given `dy`, accumulate `(gw, gb)` and return `dx`.
+    /// Gradients flow through the *quantized* weights (STE on the weights
+    /// themselves: `∂f/∂w := ∂f/∂ŵ`, but `dx` uses `ŵ`).
+    pub fn backward(
+        &self,
+        wq: &[f32],
+        x: &[f32],
+        dy: &[f32],
+        batch: usize,
+        gw: &mut [f32],
+        gb: &mut [f32],
+    ) -> Vec<f32> {
+        let mut dx = vec![0.0f32; batch * self.cols];
+        for bi in 0..batch {
+            let xb = &x[bi * self.cols..(bi + 1) * self.cols];
+            let dyb = &dy[bi * self.rows..(bi + 1) * self.rows];
+            let dxb = &mut dx[bi * self.cols..(bi + 1) * self.cols];
+            for r in 0..self.rows {
+                let d = dyb[r];
+                if d == 0.0 {
+                    continue;
+                }
+                gb[r] += d;
+                let row = &wq[r * self.cols..(r + 1) * self.cols];
+                let grow = &mut gw[r * self.cols..(r + 1) * self.cols];
+                for c in 0..self.cols {
+                    grow[c] += d * xb[c];
+                    dxb[c] += d * row[c];
+                }
+            }
+        }
+        dx
+    }
+
+    /// Adam update on the master weights (STE), with weight clipping to
+    /// `[-1, 1]` as the paper does to control outliers.
+    pub fn adam_step(&mut self, gw: &[f32], gb: &[f32], lr: f32, t: usize) {
+        adam_update(&mut self.w, &mut self.mw, &mut self.vw, gw, lr, t);
+        adam_update(&mut self.b, &mut self.mb, &mut self.vb, gb, lr, t);
+        for v in self.w.iter_mut() {
+            *v = v.clamp(-1.0, 1.0);
+        }
+    }
+}
+
+/// Adam with the standard (β₁, β₂, ε) = (0.9, 0.999, 1e-8).
+pub fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, t: usize) {
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+    for i in 0..p.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+/// Batch normalization (Ioffe & Szegedy 2015) over a `batch × dim` tensor,
+/// with running statistics for inference.
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub dim: usize,
+    pub momentum: f32,
+}
+
+pub struct BnTape {
+    pub xhat: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+impl BatchNorm {
+    pub fn new(dim: usize) -> Self {
+        BatchNorm {
+            gamma: vec![1.0; dim],
+            beta: vec![0.0; dim],
+            running_mean: vec![0.0; dim],
+            running_var: vec![1.0; dim],
+            dim,
+            momentum: 0.1,
+        }
+    }
+
+    pub fn forward_train(&mut self, x: &[f32], batch: usize) -> (Vec<f32>, BnTape) {
+        let d = self.dim;
+        let mut mean = vec![0.0f32; d];
+        let mut var = vec![0.0f32; d];
+        for bi in 0..batch {
+            for j in 0..d {
+                mean[j] += x[bi * d + j];
+            }
+        }
+        for mj in mean.iter_mut() {
+            *mj /= batch as f32;
+        }
+        for bi in 0..batch {
+            for j in 0..d {
+                let c = x[bi * d + j] - mean[j];
+                var[j] += c * c;
+            }
+        }
+        for vj in var.iter_mut() {
+            *vj /= batch as f32;
+        }
+        let mut y = vec![0.0f32; x.len()];
+        let mut xhat = vec![0.0f32; x.len()];
+        for bi in 0..batch {
+            for j in 0..d {
+                let xh = (x[bi * d + j] - mean[j]) / (var[j] + 1e-5).sqrt();
+                xhat[bi * d + j] = xh;
+                y[bi * d + j] = self.gamma[j] * xh + self.beta[j];
+            }
+        }
+        for j in 0..d {
+            self.running_mean[j] =
+                (1.0 - self.momentum) * self.running_mean[j] + self.momentum * mean[j];
+            self.running_var[j] =
+                (1.0 - self.momentum) * self.running_var[j] + self.momentum * var[j];
+        }
+        (y, BnTape { xhat, mean, var })
+    }
+
+    pub fn forward_eval(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let d = self.dim;
+        let mut y = vec![0.0f32; x.len()];
+        for bi in 0..batch {
+            for j in 0..d {
+                let xh = (x[bi * d + j] - self.running_mean[j])
+                    / (self.running_var[j] + 1e-5).sqrt();
+                y[bi * d + j] = self.gamma[j] * xh + self.beta[j];
+            }
+        }
+        y
+    }
+
+    /// Backward; updates gamma/beta in place with plain SGD (lr) and returns dx.
+    pub fn backward(&mut self, tape: &BnTape, dy: &[f32], batch: usize, lr: f32) -> Vec<f32> {
+        let d = self.dim;
+        let n = batch as f32;
+        let mut dgamma = vec![0.0f32; d];
+        let mut dbeta = vec![0.0f32; d];
+        for bi in 0..batch {
+            for j in 0..d {
+                dgamma[j] += dy[bi * d + j] * tape.xhat[bi * d + j];
+                dbeta[j] += dy[bi * d + j];
+            }
+        }
+        // dx = (1/n)·inv_std·(n·dxhat − Σdxhat − x̂·Σ(dxhat·x̂)).
+        let mut dx = vec![0.0f32; dy.len()];
+        let mut sum_dxhat = vec![0.0f32; d];
+        let mut sum_dxhat_xhat = vec![0.0f32; d];
+        for bi in 0..batch {
+            for j in 0..d {
+                let dxhat = dy[bi * d + j] * self.gamma[j];
+                sum_dxhat[j] += dxhat;
+                sum_dxhat_xhat[j] += dxhat * tape.xhat[bi * d + j];
+            }
+        }
+        for j in 0..d {
+            let inv_std = 1.0 / (tape.var[j] + 1e-5).sqrt();
+            for bi in 0..batch {
+                let dxhat = dy[bi * d + j] * self.gamma[j];
+                dx[bi * d + j] = inv_std / n
+                    * (n * dxhat - sum_dxhat[j] - tape.xhat[bi * d + j] * sum_dxhat_xhat[j]);
+            }
+        }
+        for j in 0..d {
+            self.gamma[j] -= lr * dgamma[j];
+            self.beta[j] -= lr * dbeta[j];
+        }
+        dx
+    }
+}
+
+/// ReLU forward (returns mask for backward).
+pub fn relu(x: &mut [f32]) -> Vec<bool> {
+    x.iter_mut()
+        .map(|v| {
+            if *v > 0.0 {
+                true
+            } else {
+                *v = 0.0;
+                false
+            }
+        })
+        .collect()
+}
+
+/// Squared-hinge (L2-SVM) loss over one-vs-all margins — the output layer
+/// the paper uses for the MNIST MLP and the CIFAR CNN. Returns (loss, dlogits).
+pub fn l2svm_loss(logits: &[f32], labels: &[usize], batch: usize, classes: usize) -> (f32, Vec<f32>) {
+    let mut loss = 0.0f32;
+    let mut dl = vec![0.0f32; logits.len()];
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let y = labels[bi];
+        for c in 0..classes {
+            let t = if c == y { 1.0 } else { -1.0 };
+            let margin = 1.0 - t * row[c];
+            if margin > 0.0 {
+                loss += margin * margin;
+                dl[bi * classes + c] = -2.0 * t * margin;
+            }
+        }
+    }
+    let n = (batch * classes) as f32;
+    for d in dl.iter_mut() {
+        *d /= n;
+    }
+    (loss / n, dl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_layer_grad_check() {
+        let mut rng = Rng::new(151);
+        let layer = DenseLayer::init(3, 4, &mut rng);
+        let x = rng.normal_vec(2 * 4, 1.0);
+        let spec = QuantSpec::full();
+        let wq = layer.effective_w(&spec);
+        let y = layer.forward(&wq, &x, 2);
+        // Loss = sum(y²)/2, dy = y.
+        let mut gw = vec![0.0f32; 12];
+        let mut gb = vec![0.0f32; 3];
+        layer.backward(&wq, &x, &y, 2, &mut gw, &mut gb);
+        // Finite differences on a few weights.
+        for idx in [0usize, 5, 11] {
+            let eps = 1e-3;
+            let mut lp = layer.w.clone();
+            lp[idx] += eps;
+            let mut lm = layer.w.clone();
+            lm[idx] -= eps;
+            let f = |w: &[f32]| -> f32 {
+                let y = layer.forward(w, &x, 2);
+                y.iter().map(|v| v * v).sum::<f32>() / 2.0
+            };
+            let fd = (f(&lp) - f(&lm)) / (2.0 * eps);
+            assert!((fd - gw[idx]).abs() < 1e-2 * (1.0 + fd.abs()), "{fd} vs {}", gw[idx]);
+        }
+    }
+
+    #[test]
+    fn bn_normalizes_batch() {
+        let mut bn = BatchNorm::new(3);
+        let mut rng = Rng::new(152);
+        let x: Vec<f32> = (0..30).map(|_| rng.range_f32(5.0, 9.0)).collect();
+        let (y, _) = bn.forward_train(&x, 10);
+        for j in 0..3 {
+            let col: Vec<f32> = (0..10).map(|b| y[b * 3 + j]).collect();
+            let mean: f32 = col.iter().sum::<f32>() / 10.0;
+            let var: f32 = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 10.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn bn_backward_grad_check() {
+        let mut rng = Rng::new(153);
+        let x = rng.normal_vec(8 * 2, 1.5);
+        let f = |x: &[f32]| -> f32 {
+            let mut bn = BatchNorm::new(2);
+            let (y, _) = bn.forward_train(x, 8);
+            y.iter().map(|v| v * v).sum::<f32>() / 2.0
+        };
+        let mut bn = BatchNorm::new(2);
+        let (y, tape) = bn.forward_train(&x, 8);
+        let dx = bn.backward(&tape, &y, 8, 0.0);
+        for idx in [0usize, 7, 15] {
+            let eps = 1e-3;
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((fd - dx[idx]).abs() < 2e-2 * (1.0 + fd.abs()), "idx {idx}: {fd} vs {}", dx[idx]);
+        }
+    }
+
+    #[test]
+    fn l2svm_zero_loss_when_margins_met() {
+        let logits = vec![2.0, -2.0, -2.0, 2.0]; // batch 2, classes 2
+        let (loss, d) = l2svm_loss(&logits, &[0, 1], 2, 2);
+        assert_eq!(loss, 0.0);
+        assert!(d.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn adam_decreases_quadratic() {
+        let mut p = vec![5.0f32];
+        let mut m = vec![0.0];
+        let mut v = vec![0.0];
+        for t in 1..=500 {
+            let g = vec![2.0 * p[0]];
+            adam_update(&mut p, &mut m, &mut v, &g, 0.05, t);
+        }
+        assert!(p[0].abs() < 0.5, "{}", p[0]);
+    }
+
+    #[test]
+    fn ste_quantize_matrix_is_rowwise() {
+        let mut rng = Rng::new(154);
+        let w = rng.normal_vec(4 * 16, 1.0);
+        let q = ste_quantize_matrix(&w, 4, 16, 2, Method::Greedy);
+        let rq = crate::quant::RowQuantized::quantize(&w, 4, 16, 2, Method::Greedy);
+        assert_eq!(q, rq.dequantize());
+    }
+}

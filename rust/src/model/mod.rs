@@ -1,0 +1,19 @@
+//! Native model zoo for the request path.
+//!
+//! Inference runs entirely in Rust (Python is build-time only): LSTM / GRU
+//! language models whose weight matrices can be swapped between
+//! full-precision and multi-bit quantized forms ([`linear::Linear`]), plus
+//! the feed-forward models of Appendix B (MLP, VGG-style CNN) with native
+//! STE training for the image-task tables.
+
+pub mod cnn;
+pub mod embedding;
+pub mod gru;
+pub mod linear;
+pub mod lm;
+pub mod lstm;
+pub mod math;
+pub mod mlp;
+
+pub use linear::Linear;
+pub use lm::{LmConfig, RnnKind, RnnLm};

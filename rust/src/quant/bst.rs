@@ -1,0 +1,199 @@
+//! Algorithm 1 — optimal binary-code assignment by binary search tree.
+//!
+//! Key observation of the paper: with coefficients `{αᵢ}` fixed, the `2^k`
+//! composite codes `v = {Σᵢ ±αᵢ}` are known, and the optimal code for each
+//! weight entry is simply the nearest `v` — found in `k` comparisons by
+//! descending the balanced BST over the sorted code vector (equivalently, a
+//! binary search against the midpoints of adjacent codes).
+
+use super::packed::PackedBits;
+
+/// A composite code: its real value and the sign pattern that produced it
+/// (`pattern` bit `i` set ⇔ `bᵢ = +1`).
+#[derive(Clone, Copy, Debug)]
+pub struct Code {
+    pub value: f32,
+    pub pattern: u32,
+}
+
+/// Enumerate all `2^k` composite codes `Σᵢ ±αᵢ` in ascending order.
+///
+/// Coefficients may be negative or unordered (they come out of an
+/// unconstrained least-squares refit); enumeration + sort handles any sign.
+/// Panics if `k > 16` (the representation is pointless beyond a few bits).
+pub fn enumerate_codes(alphas: &[f32]) -> Vec<Code> {
+    let k = alphas.len();
+    assert!(k >= 1 && k <= 16, "k = {k} out of range");
+    let m = 1usize << k;
+    let mut codes = Vec::with_capacity(m);
+    for pattern in 0..m as u32 {
+        let mut v = 0.0f32;
+        for (i, &a) in alphas.iter().enumerate() {
+            if (pattern >> i) & 1 == 1 {
+                v += a;
+            } else {
+                v -= a;
+            }
+        }
+        codes.push(Code { value: v, pattern });
+    }
+    codes.sort_by(|a, b| a.value.total_cmp(&b.value));
+    codes
+}
+
+/// The decision boundaries: midpoints of adjacent sorted codes
+/// (`(vᵢ + vᵢ₊₁)/2`, Fig. 1 of the paper).
+pub fn midpoints(codes: &[Code]) -> Vec<f32> {
+    codes
+        .windows(2)
+        .map(|w| 0.5 * (w[0].value + w[1].value))
+        .collect()
+}
+
+/// Assign one entry: index into `codes` of the nearest composite code.
+///
+/// `mids` must be `midpoints(codes)`. This is the BST descent of
+/// Algorithm 1: `partition_point` performs exactly the `k` comparisons of a
+/// balanced binary search (`w ≥ midpoint → right subtree`).
+#[inline]
+pub fn assign_one(w: f32, mids: &[f32]) -> usize {
+    mids.partition_point(|&mp| w >= mp)
+}
+
+/// Assign every entry of `w` to its optimal code and return the `k` binary
+/// planes (bit `1 → +1`), given fixed coefficients `alphas`.
+pub fn assign(w: &[f32], alphas: &[f32]) -> Vec<PackedBits> {
+    let k = alphas.len();
+    let codes = enumerate_codes(alphas);
+    let mids = midpoints(&codes);
+    let mut planes = vec![PackedBits::zeros(w.len()); k];
+    for (j, &x) in w.iter().enumerate() {
+        let idx = assign_one(x, &mids);
+        let pattern = codes[idx].pattern;
+        for (i, plane) in planes.iter_mut().enumerate() {
+            if (pattern >> i) & 1 == 1 {
+                plane.set(j, true);
+            }
+        }
+    }
+    planes
+}
+
+/// Reconstruction from planes + alphas at a single index (test helper).
+pub fn reconstruct_at(planes: &[PackedBits], alphas: &[f32], j: usize) -> f32 {
+    planes
+        .iter()
+        .zip(alphas)
+        .map(|(p, &a)| a * p.sign(j))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    #[test]
+    fn enumerate_is_sorted_and_complete() {
+        let codes = enumerate_codes(&[0.7, 0.3, 0.1]);
+        assert_eq!(codes.len(), 8);
+        for w in codes.windows(2) {
+            assert!(w[0].value <= w[1].value);
+        }
+        // Patterns are a permutation of 0..8.
+        let mut pats: Vec<u32> = codes.iter().map(|c| c.pattern).collect();
+        pats.sort_unstable();
+        assert_eq!(pats, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn fig1_example_2bit() {
+        // Fig. 1: with α1 ≥ α2 the codes are {−α1−α2, −α1+α2, α1−α2, α1+α2}
+        // and the boundaries are −α1, 0, α1.
+        let codes = enumerate_codes(&[0.8, 0.3]);
+        let vals: Vec<f32> = codes.iter().map(|c| c.value).collect();
+        assert_eq!(vals, vec![-1.1, -0.5, 0.5, 1.1]);
+        let mids = midpoints(&codes);
+        assert_eq!(mids, vec![-0.8, 0.0, 0.8]);
+        // Entries quantize to the nearest code.
+        assert_eq!(assign_one(-0.9, &mids), 0);
+        assert_eq!(assign_one(-0.6, &mids), 1);
+        assert_eq!(assign_one(0.1, &mids), 2);
+        assert_eq!(assign_one(2.0, &mids), 3);
+    }
+
+    #[test]
+    fn closed_form_2bit_matches_bst() {
+        // Paper §3: for k=2 with α1 ≥ α2 ≥ 0 the optimum is
+        // b1 = sign(w), b2 = sign(w − α1·b1).
+        let alphas = [0.9f32, 0.4];
+        let mut rng = Rng::new(11);
+        let w: Vec<f32> = (0..500).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+        let planes = assign(&w, &alphas);
+        for (j, &x) in w.iter().enumerate() {
+            let b1 = if x >= 0.0 { 1.0 } else { -1.0 };
+            let b2 = if x - alphas[0] * b1 >= 0.0 { 1.0 } else { -1.0 };
+            let expect = alphas[0] * b1 + alphas[1] * b2;
+            let got = reconstruct_at(&planes, &alphas, j);
+            // Both must achieve the same distance (tie patterns may differ).
+            assert!(
+                ((x - got).abs() - (x - expect).abs()).abs() < 1e-6,
+                "j={j} x={x} got={got} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn bst_is_argmin_over_all_codes_property() {
+        // Property: BST assignment achieves the minimal |w − v| over ALL 2^k
+        // codes, for arbitrary (possibly negative/unsorted) alphas.
+        prop::check(
+            "bst-argmin",
+            prop::Config { cases: 200, ..Default::default() },
+            |rng| {
+                let k = 1 + rng.below(4);
+                let alphas: Vec<f32> = (0..k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                let w: Vec<f32> = (0..17).map(|_| rng.range_f32(-3.0, 3.0)).collect();
+                (alphas, w)
+            },
+            |_| vec![],
+            |(alphas, w)| {
+                let codes = enumerate_codes(alphas);
+                let mids = midpoints(&codes);
+                w.iter().all(|&x| {
+                    let idx = assign_one(x, &mids);
+                    let got = (x - codes[idx].value).abs();
+                    let best = codes
+                        .iter()
+                        .map(|c| (x - c.value).abs())
+                        .fold(f32::INFINITY, f32::min);
+                    (got - best).abs() <= 1e-5 * (1.0 + best)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn assign_planes_reconstruct_to_codes() {
+        let alphas = [0.5f32, -0.2, 0.05];
+        let mut rng = Rng::new(12);
+        let w: Vec<f32> = (0..200).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let planes = assign(&w, &alphas);
+        let codes = enumerate_codes(&alphas);
+        let mids = midpoints(&codes);
+        for (j, &x) in w.iter().enumerate() {
+            let expect = codes[assign_one(x, &mids)].value;
+            let got = reconstruct_at(&planes, &alphas, j);
+            assert!((got - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn k1_is_sign() {
+        let mids = midpoints(&enumerate_codes(&[0.5]));
+        assert_eq!(mids, vec![0.0]);
+        assert_eq!(assign_one(-0.1, &mids), 0);
+        assert_eq!(assign_one(0.1, &mids), 1);
+    }
+}

@@ -1,0 +1,81 @@
+//! Greedy approximation (Guo et al. 2017; Eq. 3–4 of the paper):
+//! sequentially minimize the residue, one bit at a time:
+//! `αᵢ = ‖rᵢ₋₁‖₁ / n`, `bᵢ = sign(rᵢ₋₁)`.
+
+use super::packed::PackedBits;
+use super::Quantized;
+
+/// One greedy step on a residue: the closed-form k=1 optimum
+/// (Rastegari et al. 2016).
+pub(crate) fn step(residue: &[f32]) -> (f32, PackedBits) {
+    let n = residue.len();
+    let alpha = if n == 0 {
+        0.0
+    } else {
+        residue.iter().map(|x| x.abs()).sum::<f32>() / n as f32
+    };
+    (alpha, PackedBits::from_signs(residue))
+}
+
+/// k-bit greedy quantization.
+pub fn quantize(w: &[f32], k: usize) -> Quantized {
+    let mut residue = w.to_vec();
+    let mut alphas = Vec::with_capacity(k);
+    let mut planes = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (alpha, plane) = step(&residue);
+        for (j, r) in residue.iter_mut().enumerate() {
+            *r -= alpha * plane.sign(j);
+        }
+        alphas.push(alpha);
+        planes.push(plane);
+    }
+    Quantized { n: w.len(), alphas, planes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::relative_mse;
+    use crate::util::prop::check_f32_vec;
+    use crate::util::Rng;
+
+    #[test]
+    fn k1_closed_form() {
+        let w = [0.5f32, -1.5, 2.0, -0.25];
+        let q = quantize(&w, 1);
+        let expect = w.iter().map(|x| x.abs()).sum::<f32>() / 4.0;
+        assert!((q.alphas[0] - expect).abs() < 1e-6);
+        let deq = q.dequantize();
+        for (x, d) in w.iter().zip(&deq) {
+            assert_eq!(d.signum(), x.signum());
+        }
+    }
+
+    #[test]
+    fn alphas_nonincreasing_on_symmetric_data() {
+        // Greedy residues shrink, so coefficients decrease for well-spread data.
+        let mut rng = Rng::new(31);
+        let w: Vec<f32> = (0..2048).map(|_| rng.normal()).collect();
+        let q = quantize(&w, 4);
+        for pair in q.alphas.windows(2) {
+            assert!(pair[0] >= pair[1] - 1e-6, "{:?}", q.alphas);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_k_property() {
+        check_f32_vec("greedy-monotone-k", 200, 2.0, |w| {
+            let e2 = relative_mse(w, &quantize(w, 2).dequantize());
+            let e3 = relative_mse(w, &quantize(w, 3).dequantize());
+            e3 <= e2 + 1e-6
+        });
+    }
+
+    #[test]
+    fn constant_vector_is_exact_at_k1() {
+        let w = vec![0.37f32; 129];
+        let q = quantize(&w, 1);
+        assert!(q.sq_error(&w) < 1e-10);
+    }
+}

@@ -1,0 +1,180 @@
+//! Least-squares refit of the coefficients (Eq. 5 of the paper):
+//! `[α₁…α_k] = (BᵀB)⁻¹ Bᵀ w` with `B = [b₁ … b_k] ∈ {−1,+1}^{n×k}`.
+//!
+//! `BᵀB` entries are integer dot products of binary planes, computed with
+//! the same XOR/popcount identity as the inference kernels. The k×k system
+//! is solved by Gaussian elimination with partial pivoting in f64; a tiny
+//! ridge is added if the planes are linearly dependent (which happens when
+//! two planes coincide, e.g. after aggressive re-assignment).
+
+use super::packed::PackedBits;
+
+/// Solve the k×k linear system `G x = c` in-place. Returns `None` when the
+/// matrix is numerically singular even after pivoting.
+fn solve(mut g: Vec<Vec<f64>>, mut c: Vec<f64>) -> Option<Vec<f64>> {
+    let k = c.len();
+    for col in 0..k {
+        // Partial pivot.
+        let piv = (col..k).max_by(|&a, &b| g[a][col].abs().total_cmp(&g[b][col].abs()))?;
+        if g[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        g.swap(col, piv);
+        c.swap(col, piv);
+        for row in col + 1..k {
+            let f = g[row][col] / g[col][col];
+            for j in col..k {
+                g[row][j] -= f * g[col][j];
+            }
+            c[row] -= f * c[col];
+        }
+    }
+    let mut x = vec![0.0; k];
+    for row in (0..k).rev() {
+        let mut s = c[row];
+        for j in row + 1..k {
+            s -= g[row][j] * x[j];
+        }
+        x[row] = s / g[row][row];
+    }
+    Some(x)
+}
+
+/// Refit coefficients for fixed binary planes: the exact minimizer of
+/// `‖w − Σᵢ αᵢ bᵢ‖²`.
+pub fn refit(w: &[f32], planes: &[PackedBits]) -> Vec<f32> {
+    let k = planes.len();
+    let n = w.len();
+    assert!(planes.iter().all(|p| p.len() == n));
+    if n == 0 {
+        return vec![0.0; k];
+    }
+
+    // Gram matrix G[i][j] = <b_i, b_j> via XOR/popcount; rhs c[i] = <b_i, w>.
+    let mut g = vec![vec![0.0f64; k]; k];
+    for i in 0..k {
+        g[i][i] = n as f64;
+        for j in i + 1..k {
+            let d = planes[i].dot_i32(&planes[j]) as f64;
+            g[i][j] = d;
+            g[j][i] = d;
+        }
+    }
+    let c: Vec<f64> = planes
+        .iter()
+        .map(|p| w.iter().enumerate().map(|(j, &x)| x as f64 * p.sign(j) as f64).sum())
+        .collect();
+
+    // Try the exact system; fall back to a ridge for dependent planes.
+    if let Some(x) = solve(g.clone(), c.clone()) {
+        if x.iter().all(|v| v.is_finite()) {
+            return x.iter().map(|&v| v as f32).collect();
+        }
+    }
+    let mut gr = g;
+    for (i, row) in gr.iter_mut().enumerate() {
+        row[i] += 1e-6 * n as f64;
+    }
+    solve(gr, c)
+        .map(|x| x.iter().map(|&v| v as f32).collect())
+        .unwrap_or_else(|| vec![0.0; k])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn rand_planes(rng: &mut Rng, k: usize, n: usize) -> Vec<PackedBits> {
+        (0..k)
+            .map(|_| {
+                let signs: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                PackedBits::from_signs(&signs)
+            })
+            .collect()
+    }
+
+    fn residual(w: &[f32], planes: &[PackedBits], alphas: &[f32]) -> f64 {
+        w.iter()
+            .enumerate()
+            .map(|(j, &x)| {
+                let hat: f32 = planes.iter().zip(alphas).map(|(p, &a)| a * p.sign(j)).sum();
+                ((x - hat) as f64).powi(2)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn exact_recovery_when_w_in_span() {
+        // If w = 0.7*b1 + 0.2*b2 exactly, refit must recover (0.7, 0.2).
+        let mut rng = Rng::new(21);
+        let planes = rand_planes(&mut rng, 2, 333);
+        let w: Vec<f32> = (0..333)
+            .map(|j| 0.7 * planes[0].sign(j) + 0.2 * planes[1].sign(j))
+            .collect();
+        let a = refit(&w, &planes);
+        assert!((a[0] - 0.7).abs() < 1e-5 && (a[1] - 0.2).abs() < 1e-5, "{a:?}");
+    }
+
+    #[test]
+    fn refit_is_stationary_point_property() {
+        // Property: perturbing any refit coefficient cannot reduce the
+        // residual (definition of least squares).
+        prop::check(
+            "lsq-optimal",
+            prop::Config { cases: 100, ..Default::default() },
+            |rng| {
+                let k = 1 + rng.below(4);
+                let n = 8 + rng.below(120);
+                let planes = rand_planes(rng, k, n);
+                let w: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                (w, planes)
+            },
+            |_| vec![],
+            |(w, planes)| {
+                let a = refit(w, planes);
+                let base = residual(w, planes, &a);
+                (0..a.len()).all(|i| {
+                    [-1e-3f32, 1e-3].iter().all(|&d| {
+                        let mut ap = a.clone();
+                        ap[i] += d;
+                        residual(w, planes, &ap) >= base - 1e-6 * (1.0 + base)
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn dependent_planes_do_not_explode() {
+        // Two identical planes: Gram is singular; ridge fallback must give
+        // finite coefficients with near-optimal residual.
+        let mut rng = Rng::new(22);
+        let p = rand_planes(&mut rng, 1, 100).pop().unwrap();
+        let planes = vec![p.clone(), p];
+        let w: Vec<f32> = (0..100).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let a = refit(&w, &planes);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Combined coefficient should approximate the k=1 optimum.
+        let single = refit(&w, &planes[..1]);
+        assert!((a[0] + a[1] - single[0]).abs() < 1e-2, "{a:?} vs {single:?}");
+    }
+
+    #[test]
+    fn k1_refit_is_mean_of_signed_values() {
+        // For k=1: α = <b, w>/n.
+        let w = [0.5f32, -1.5, 2.0, -0.25];
+        let plane = PackedBits::from_signs(&w);
+        let a = refit(&w, std::slice::from_ref(&plane));
+        let expect: f32 = w.iter().map(|x| x.abs()).sum::<f32>() / 4.0;
+        assert!((a[0] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_input() {
+        let planes = vec![PackedBits::zeros(0); 2];
+        let a = refit(&[], &planes);
+        assert_eq!(a, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Multi-bit quantization: `w ≈ Σᵢ αᵢ bᵢ`, `bᵢ ∈ {−1,+1}ⁿ`.
+//!
+//! This module implements the paper's core contribution — **alternating
+//! minimization** (Algorithm 2) with optimal binary-code assignment by
+//! **binary search tree** (Algorithm 1) — together with every baseline the
+//! paper compares against in Section 2:
+//!
+//! | method        | module          | paper reference            |
+//! |---------------|-----------------|----------------------------|
+//! | Uniform       | [`uniform`]     | Eq. 1 (Hubara et al.)      |
+//! | Balanced      | [`balanced`]    | Zhou et al. 2017           |
+//! | Greedy        | [`greedy`]      | Eq. 3–4 (Guo et al.)       |
+//! | Refined       | [`refined`]     | Eq. 5 (Guo et al.)         |
+//! | Ternary       | [`ternary`]     | Li et al. 2016             |
+//! | Alternating   | [`alternating`] | Algorithms 1 + 2 (ours)    |
+//!
+//! All methods produce the same representation, [`Quantized`]: `k` real
+//! coefficients plus `k` bit-packed sign planes, which feeds directly into
+//! the XNOR/popcount kernels in [`crate::kernels::binary`].
+
+pub mod alternating;
+pub mod balanced;
+pub mod bst;
+pub mod greedy;
+pub mod lsq;
+pub mod matrix;
+pub mod packed;
+pub mod refined;
+pub mod ternary;
+pub mod uniform;
+
+pub use matrix::RowQuantized;
+pub use packed::PackedBits;
+
+/// A k-bit quantized vector: `ŵ = Σᵢ alphas[i] · planes[i]` where plane bits
+/// map `1 → +1`, `0 → −1`.
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    /// Logical length `n` of the vector.
+    pub n: usize,
+    /// The real coefficients `αᵢ`, one per bit.
+    pub alphas: Vec<f32>,
+    /// The binary codes `bᵢ`, bit-packed, one plane per bit.
+    pub planes: Vec<PackedBits>,
+}
+
+impl Quantized {
+    /// Number of bits `k`.
+    pub fn k(&self) -> usize {
+        self.alphas.len()
+    }
+
+    /// Reconstruct the dense approximation `ŵ`.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        for (alpha, plane) in self.alphas.iter().zip(&self.planes) {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o += alpha * plane.sign(i);
+            }
+        }
+        out
+    }
+
+    /// Squared reconstruction error `‖w − ŵ‖²` against the original vector.
+    pub fn sq_error(&self, w: &[f32]) -> f64 {
+        assert_eq!(w.len(), self.n);
+        let hat = self.dequantize();
+        w.iter()
+            .zip(&hat)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+}
+
+/// Which quantization algorithm to run (see module table above).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Uniform,
+    Balanced,
+    Greedy,
+    Refined,
+    /// The paper's method with `t` alternating cycles (paper uses `t = 2`).
+    Alternating {
+        t: usize,
+    },
+    /// 2-bit only; `k` argument is ignored (forced to 2).
+    Ternary,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Uniform => "Uniform",
+            Method::Balanced => "Balanced",
+            Method::Greedy => "Greedy",
+            Method::Refined => "Refined",
+            Method::Alternating { .. } => "Alternating",
+            Method::Ternary => "Ternary",
+        }
+    }
+
+    /// All methods compared in Tables 1–2, in the paper's row order.
+    pub fn table_order() -> [Method; 5] {
+        [
+            Method::Uniform,
+            Method::Balanced,
+            Method::Greedy,
+            Method::Refined,
+            Method::Alternating { t: 2 },
+        ]
+    }
+}
+
+/// Quantize a vector with the chosen method.
+pub fn quantize(w: &[f32], k: usize, method: Method) -> Quantized {
+    match method {
+        Method::Uniform => uniform::quantize(w, k),
+        Method::Balanced => balanced::quantize(w, k),
+        Method::Greedy => greedy::quantize(w, k),
+        Method::Refined => refined::quantize(w, k),
+        Method::Alternating { t } => alternating::quantize(w, k, t),
+        Method::Ternary => ternary::quantize(w),
+    }
+}
+
+/// Relative mean squared error `‖w − ŵ‖² / ‖w‖²` — the measure reported in
+/// Tables 1–2 of the paper.
+pub fn relative_mse(w: &[f32], w_hat: &[f32]) -> f64 {
+    assert_eq!(w.len(), w_hat.len());
+    let num: f64 = w
+        .iter()
+        .zip(w_hat)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    let den: f64 = w.iter().map(|&a| (a as f64).powi(2)).sum();
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn wvec(n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(n, 0.3)
+    }
+
+    #[test]
+    fn all_methods_produce_valid_output() {
+        let w = wvec(257, 1);
+        for m in Method::table_order() {
+            for k in 2..=4 {
+                let q = quantize(&w, k, m);
+                assert_eq!(q.n, w.len());
+                assert_eq!(q.k(), k, "{m:?}");
+                let err = relative_mse(&w, &q.dequantize());
+                assert!(err.is_finite(), "{m:?} k={k} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn method_quality_ordering_matches_paper() {
+        // Table 1 ordering: Alternating <= Refined, and both far below the
+        // rule-based methods. Trained weights are heavy-tailed, which is
+        // exactly why max-scaled Uniform degrades — model them as Laplace.
+        let w = Rng::new(2).laplace_vec(8192, 0.1);
+        for k in 2..=4 {
+            let err = |m| {
+                let q = quantize(&w, k, m);
+                relative_mse(&w, &q.dequantize())
+            };
+            let alt = err(Method::Alternating { t: 2 });
+            let refined = err(Method::Refined);
+            let greedy = err(Method::Greedy);
+            let uniform = err(Method::Uniform);
+            let balanced = err(Method::Balanced);
+            assert!(alt <= refined + 1e-6, "k={k} alt={alt} refined={refined}");
+            assert!(alt < uniform, "k={k} alt={alt} uniform={uniform}");
+            assert!(alt < balanced, "k={k} alt={alt} balanced={balanced}");
+            if k == 2 {
+                // Greedy's sequential residue fitting loses steam at high k
+                // (paper: 0.146→0.042 vs alternating 0.125→0.019); the clear
+                // win over rule-based uniform is at low bit width.
+                assert!(greedy < uniform, "k={k} greedy={greedy} uniform={uniform}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = wvec(1024, 3);
+        let mut prev = f64::INFINITY;
+        for k in 1..=6 {
+            let q = quantize(&w, k, Method::Alternating { t: 2 });
+            let e = relative_mse(&w, &q.dequantize());
+            assert!(e <= prev + 1e-6, "k={k}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn relative_mse_basics() {
+        assert_eq!(relative_mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!(relative_mse(&[0.0], &[1.0]).is_infinite());
+        assert_eq!(relative_mse(&[0.0], &[0.0]), 0.0);
+        let e = relative_mse(&[1.0, 0.0], &[0.0, 0.0]);
+        assert!((e - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_vector_quantizes_to_zero_error_alternating() {
+        let w = vec![0.0f32; 64];
+        let q = quantize(&w, 2, Method::Alternating { t: 2 });
+        assert!(q.sq_error(&w) < 1e-12);
+    }
+}

@@ -1,0 +1,169 @@
+//! Bit-packed binary codes.
+//!
+//! A [`PackedBits`] stores one binary plane `b ∈ {−1,+1}ⁿ` as `⌈n/64⌉` words
+//! with the convention `bit = 1 → +1`, `bit = 0 → −1`. Tail bits beyond `n`
+//! are kept **zero** in every plane so that XOR-based dot products never see
+//! garbage (two equal pads XOR to zero and drop out of the popcount).
+
+/// One bit-packed binary plane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedBits {
+    n: usize,
+    words: Vec<u64>,
+}
+
+impl PackedBits {
+    /// All −1 (all bits clear).
+    pub fn zeros(n: usize) -> Self {
+        PackedBits { n, words: vec![0; n.div_ceil(64)] }
+    }
+
+    /// Pack from signs: `v[i] >= 0` maps to `+1` (matching `sign` with the
+    /// paper's tie-break `sign(0) = +1`).
+    pub fn from_signs(v: &[f32]) -> Self {
+        let mut p = PackedBits::zeros(v.len());
+        for (i, &x) in v.iter().enumerate() {
+            if x >= 0.0 {
+                p.set(i, true);
+            }
+        }
+        p
+    }
+
+    /// Pack from booleans (`true → +1`).
+    pub fn from_bools(v: &[bool]) -> Self {
+        let mut p = PackedBits::zeros(v.len());
+        for (i, &b) in v.iter().enumerate() {
+            if b {
+                p.set(i, true);
+            }
+        }
+        p
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Raw words (tail bits are guaranteed zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.n);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.n);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// The sign value `±1.0` at position `i`.
+    #[inline]
+    pub fn sign(&self, i: usize) -> f32 {
+        if self.get(i) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Unpack to a dense sign vector.
+    pub fn to_signs(&self) -> Vec<f32> {
+        (0..self.n).map(|i| self.sign(i)).collect()
+    }
+
+    /// Number of `+1` entries.
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Integer dot product `⟨a, b⟩ = n − 2·popcount(a ⊕ b)` over `{−1,+1}ⁿ`.
+    ///
+    /// This is the identity the paper's CPU kernel (Appendix A) exploits:
+    /// XNOR + popcount replaces multiply–accumulate. Pads are zero in both
+    /// operands so they vanish under XOR.
+    #[inline]
+    pub fn dot_i32(&self, other: &PackedBits) -> i32 {
+        debug_assert_eq!(self.n, other.n);
+        let mut mismatches = 0u32;
+        for (a, b) in self.words.iter().zip(&other.words) {
+            mismatches += (a ^ b).count_ones();
+        }
+        self.n as i32 - 2 * mismatches as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_f32_vec;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_signs() {
+        let v = [1.0f32, -2.0, 0.0, -0.5, 3.0, -1.0, 1.0];
+        let p = PackedBits::from_signs(&v);
+        let s = p.to_signs();
+        assert_eq!(s, vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn get_set() {
+        let mut p = PackedBits::zeros(130);
+        p.set(0, true);
+        p.set(64, true);
+        p.set(129, true);
+        assert!(p.get(0) && p.get(64) && p.get(129));
+        assert!(!p.get(1) && !p.get(63) && !p.get(128));
+        p.set(64, false);
+        assert!(!p.get(64));
+        assert_eq!(p.count_ones(), 2);
+    }
+
+    #[test]
+    fn tail_bits_stay_zero() {
+        let v: Vec<f32> = (0..70).map(|_| 1.0).collect();
+        let p = PackedBits::from_signs(&v);
+        // 70 bits => second word has 6 live bits; the rest must be zero.
+        assert_eq!(p.words()[1] >> 6, 0);
+    }
+
+    #[test]
+    fn dot_matches_dense_dot_property() {
+        check_f32_vec("packed-dot == dense-dot", 300, 1.0, |v| {
+            let mut rng = Rng::new(v.len() as u64);
+            let u: Vec<f32> = (0..v.len()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let pa = PackedBits::from_signs(v);
+            let pb = PackedBits::from_signs(&u);
+            let dense: f32 = pa
+                .to_signs()
+                .iter()
+                .zip(pb.to_signs().iter())
+                .map(|(a, b)| a * b)
+                .sum();
+            pa.dot_i32(&pb) == dense as i32
+        });
+    }
+
+    #[test]
+    fn dot_extremes() {
+        let ones = PackedBits::from_signs(&vec![1.0f32; 100]);
+        let negs = PackedBits::from_signs(&vec![-1.0f32; 100]);
+        assert_eq!(ones.dot_i32(&ones), 100);
+        assert_eq!(ones.dot_i32(&negs), -100);
+    }
+}

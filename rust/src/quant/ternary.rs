@@ -1,0 +1,84 @@
+//! Ternary quantization (Li et al. 2016), per §2 of the paper: quantize onto
+//! `{−α, 0, +α}` with the empirical threshold `Δ = 0.7·‖w‖₁/n`; entries with
+//! `|w| ≤ Δ` become 0, the rest `±α` with `α` the least-squares optimum over
+//! the non-zero support (the mean magnitude of the kept entries).
+//!
+//! As the paper notes, ternary is the special case of 2-bit quantization
+//! with `α₁ = α₂`, so we emit it in the common 2-plane representation
+//! (`t = (b₁ + b₂)/2` scaled): `α₁ = α₂ = α/2`, both planes equal to
+//! `sign(w)` on the support, opposite off it.
+
+use super::{packed::PackedBits, Quantized};
+
+/// Ternary quantization (always 2 planes).
+pub fn quantize(w: &[f32]) -> Quantized {
+    let n = w.len();
+    let delta = if n == 0 {
+        0.0
+    } else {
+        0.7 * w.iter().map(|x| x.abs()).sum::<f32>() / n as f32
+    };
+    let mut kept_sum = 0.0f64;
+    let mut kept = 0usize;
+    let mut p1 = PackedBits::zeros(n);
+    let mut p2 = PackedBits::zeros(n);
+    for (j, &x) in w.iter().enumerate() {
+        if x.abs() > delta {
+            kept_sum += x.abs() as f64;
+            kept += 1;
+            let pos = x >= 0.0;
+            p1.set(j, pos);
+            p2.set(j, pos);
+        } else {
+            // +α/2 − α/2 = 0.
+            p1.set(j, true);
+            p2.set(j, false);
+        }
+    }
+    let alpha = if kept > 0 { (kept_sum / kept as f64) as f32 } else { 0.0 };
+    Quantized { n, alphas: vec![alpha / 2.0, alpha / 2.0], planes: vec![p1, p2] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_f32_vec;
+    use crate::util::Rng;
+
+    #[test]
+    fn output_is_ternary_property() {
+        check_f32_vec("ternary-levels", 300, 2.0, |w| {
+            let q = quantize(w);
+            let alpha = q.alphas[0] * 2.0;
+            q.dequantize().iter().all(|&v| {
+                v.abs() < 1e-6 || (v.abs() - alpha).abs() < 1e-5 * (1.0 + alpha)
+            })
+        });
+    }
+
+    #[test]
+    fn threshold_rule() {
+        let w = [1.0f32, -1.0, 0.1, -0.1]; // mean |w| = 0.55, Δ = 0.385
+        let q = quantize(&w);
+        let d = q.dequantize();
+        assert!(d[0] > 0.0 && d[1] < 0.0);
+        assert!(d[2].abs() < 1e-6 && d[3].abs() < 1e-6);
+        // α = mean of kept magnitudes = 1.0.
+        assert!((q.alphas[0] * 2.0 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn worse_than_free_2bit_alternating() {
+        // Ternary constrains α₁ = α₂, so unconstrained 2-bit must be ≤ error.
+        let w = Rng::new(71).normal_vec(4096, 1.0);
+        let et = quantize(&w).sq_error(&w);
+        let ea = crate::quant::alternating::quantize(&w, 2, 2).sq_error(&w);
+        assert!(ea <= et + 1e-4, "alternating {ea} vs ternary {et}");
+    }
+
+    #[test]
+    fn zero_vector() {
+        let q = quantize(&[0.0; 16]);
+        assert!(q.dequantize().iter().all(|&x| x.abs() < 1e-12));
+    }
+}

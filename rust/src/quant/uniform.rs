@@ -1,0 +1,101 @@
+//! Uniform (rule-based) quantization, Eq. 1 of the paper
+//! (Rastegari et al. 2016; Hubara et al. 2016b):
+//!
+//! ```text
+//! q_k(x) = 2 * ( round[(2^k − 1) (x+1)/2] / (2^k − 1) − 1/2 ),  x ∈ [−1, 1]
+//! ```
+//!
+//! scaled into `[−1, 1]` by `s = max|w|` and back. The `2^k` evenly spaced
+//! levels are exactly representable in the multi-bit form with
+//! `αᵢ = s·2^i / (2^k − 1)` and plane `i` = bit `i` of the level index, so
+//! uniform quantization runs on the same XNOR/popcount kernels.
+
+use super::{packed::PackedBits, Quantized};
+
+/// Level index in `[0, 2^k)` for `x ∈ [−s, s]`.
+#[inline]
+fn level(x: f32, s: f32, k: usize) -> u32 {
+    let m = ((1u32 << k) - 1) as f32;
+    let t = ((x / s).clamp(-1.0, 1.0) + 1.0) / 2.0; // ∈ [0,1]
+    (t * m).round() as u32
+}
+
+/// k-bit uniform quantization.
+pub fn quantize(w: &[f32], k: usize) -> Quantized {
+    assert!(k >= 1 && k <= 16);
+    let n = w.len();
+    let s = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let mut planes = vec![PackedBits::zeros(n); k];
+    if s > 0.0 {
+        for (j, &x) in w.iter().enumerate() {
+            let idx = level(x, s, k);
+            for (i, plane) in planes.iter_mut().enumerate() {
+                if (idx >> i) & 1 == 1 {
+                    plane.set(j, true);
+                }
+            }
+        }
+    }
+    let denom = ((1u32 << k) - 1) as f32;
+    let alphas = (0..k).map(|i| s * (1u32 << i) as f32 / denom).collect();
+    Quantized { n, alphas, planes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::relative_mse;
+    use crate::util::prop::check_f32_vec;
+
+    #[test]
+    fn levels_are_evenly_spaced_and_hit_extremes() {
+        // k=2 on [-1,1]: levels must be {-1, -1/3, 1/3, 1}.
+        let w = [-1.0f32, -0.34, 0.34, 1.0];
+        let q = quantize(&w, 2);
+        let d = q.dequantize();
+        let expect = [-1.0, -1.0 / 3.0, 1.0 / 3.0, 1.0];
+        for (a, b) in d.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn representation_matches_direct_formula_property() {
+        // The multi-bit (alphas, planes) encoding must reproduce q_k exactly.
+        check_f32_vec("uniform-encoding", 200, 3.0, |w| {
+            let s = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            if s == 0.0 {
+                return true;
+            }
+            for k in 1..=4 {
+                let q = quantize(w, k);
+                let d = q.dequantize();
+                let m = ((1u32 << k) - 1) as f32;
+                for (&x, &dx) in w.iter().zip(&d) {
+                    let t = ((x / s) + 1.0) / 2.0;
+                    let direct = s * 2.0 * ((t * m).round() / m - 0.5);
+                    if (dx - direct).abs() > 1e-5 * (1.0 + s) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn zero_vector() {
+        let q = quantize(&[0.0; 10], 3);
+        assert!(q.dequantize().iter().all(|&x| x.abs() < 1e-12));
+    }
+
+    #[test]
+    fn worse_than_greedy_on_gaussian() {
+        // The paper's point: rule-based uniform is far from optimal on
+        // non-uniform (gaussian) data.
+        let w = crate::util::Rng::new(51).normal_vec(4096, 1.0);
+        let eu = relative_mse(&w, &quantize(&w, 2).dequantize());
+        let eg = relative_mse(&w, &crate::quant::greedy::quantize(&w, 2).dequantize());
+        assert!(eu > eg, "uniform {eu} should exceed greedy {eg}");
+    }
+}

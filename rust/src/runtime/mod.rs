@@ -1,0 +1,182 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see DESIGN.md; serialized protos
+//! from jax ≥ 0.5 are rejected by xla_extension 0.5.1) and executes them on
+//! the CPU PJRT client from the Rust hot path.
+//!
+//! One [`Engine`] holds the client plus every compiled executable, keyed by
+//! artifact name (`train_step`, `eval_step`, …). Python never runs here.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Host-side tensor (f32, row-major) crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar.
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        // Convert non-f32 outputs (e.g. s32 argmax) to f32 for a uniform API.
+        let lit_f32 = if lit.ty()? == xla::ElementType::F32 {
+            lit.to_vec::<f32>()?
+        } else {
+            lit.convert(xla::PrimitiveType::F32)?.to_vec::<f32>()?
+        };
+        Ok(HostTensor { shape: dims, data: lit_f32 })
+    }
+}
+
+/// Integer token tensor (lowered as i32 on the XLA side).
+#[derive(Clone, Debug)]
+pub struct HostTokens {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl HostTokens {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTokens { shape, data }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// An argument to an artifact execution.
+pub enum Arg<'a> {
+    F32(&'a HostTensor),
+    I32(&'a HostTokens),
+}
+
+/// The PJRT engine: CPU client + compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { client, executables: HashMap::new(), artifact_dir: artifact_dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<artifact_dir>/<name>.hlo.txt` under key `name`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        self.load_path(name, &path)
+    }
+
+    /// Load + compile an explicit HLO text file under `name`.
+    pub fn load_path(&mut self, name: &str, path: &Path) -> Result<()> {
+        if !path.exists() {
+            bail!(
+                "artifact '{}' not found at {} — run `make artifacts` first",
+                name,
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact '{name}'"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute artifact `name`. All our artifacts are lowered with
+    /// `return_tuple=True`, so the single output is a tuple that we flatten
+    /// into `HostTensor`s.
+    pub fn execute(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded (have: {:?})", self.names()))?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| match a {
+                Arg::F32(t) => t.to_literal(),
+                Arg::I32(t) => t.to_literal(),
+            })
+            .collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&literals)?;
+        let result = out[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.shape, vec![2, 2]);
+        let s = HostTensor::scalar(5.0);
+        assert!(s.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn host_tensor_mismatch_panics() {
+        HostTensor::new(vec![3], vec![1.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let mut e = Engine::cpu("/nonexistent_dir").unwrap();
+        let err = e.load("nope").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    // Round-trip execution is covered by the integration test
+    // `rust/tests/runtime_roundtrip.rs`, which requires `make artifacts`.
+}

@@ -1,0 +1,28 @@
+//! Serving coordinator — the Layer-3 contribution shaped by the paper's
+//! motivation (§1): server-side RNN inference under large-scale concurrent
+//! requests, where latency per request and throughput per machine are the
+//! product constraints that quantization relieves.
+//!
+//! Architecture (vLLM-router-style, scaled to RNN LMs):
+//!
+//! ```text
+//! TCP clients ──► router (thread per conn) ──► request queue
+//!                                                │
+//!                                     dynamic batcher (max_batch / wait)
+//!                                                │ per-timestep batches
+//!                                     inference workers (quantized LM)
+//!                                                │
+//!                                     session cache (hidden states, LRU)
+//! ```
+//!
+//! RNN steps are synchronous per token, so the batcher groups *steps* of
+//! different sessions into one pass over the weight planes — the
+//! concatenated-binary-codes layout of Fig. 3 (right).
+
+pub mod batcher;
+pub mod protocol;
+pub mod session;
+pub mod tcp;
+
+pub use batcher::{BatcherConfig, InferenceServer, Request, Response};
+pub use session::SessionStore;

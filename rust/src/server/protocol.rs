@@ -1,0 +1,118 @@
+//! Line-based wire protocol for the LM server (one request per line, one
+//! response per line; trivially scriptable with `nc`).
+//!
+//! Requests:
+//! ```text
+//! GEN <session_id> <max_new_tokens> <tok,tok,...>   generate continuation
+//! SCORE <tok,tok,...>                               PPW of a token stream
+//! END <session_id>                                  drop a session
+//! STATS                                             server metrics
+//! ```
+//!
+//! Responses:
+//! ```text
+//! OK GEN <tok,tok,...>
+//! OK SCORE <ppw>
+//! OK END | OK STATS <text> | ERR <message>
+//! ```
+
+use anyhow::{bail, Result};
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    Generate { session: u64, max_new: usize, prime: Vec<usize> },
+    Score { tokens: Vec<usize> },
+    End { session: u64 },
+    Stats,
+}
+
+pub fn parse_request(line: &str) -> Result<WireRequest> {
+    let mut parts = line.trim().split_whitespace();
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "GEN" => {
+            let session: u64 = parts.next().unwrap_or("").parse().map_err(|_| bad("session id"))?;
+            let max_new: usize = parts.next().unwrap_or("").parse().map_err(|_| bad("max_new"))?;
+            if max_new == 0 || max_new > 4096 {
+                bail!("max_new out of range (1..=4096)");
+            }
+            let prime = parse_tokens(parts.next().unwrap_or(""))?;
+            if prime.is_empty() {
+                bail!("GEN needs at least one prime token");
+            }
+            Ok(WireRequest::Generate { session, max_new, prime })
+        }
+        "SCORE" => {
+            let tokens = parse_tokens(parts.next().unwrap_or(""))?;
+            if tokens.len() < 2 {
+                bail!("SCORE needs at least two tokens");
+            }
+            Ok(WireRequest::Score { tokens })
+        }
+        "END" => {
+            let session: u64 = parts.next().unwrap_or("").parse().map_err(|_| bad("session id"))?;
+            Ok(WireRequest::End { session })
+        }
+        "STATS" => Ok(WireRequest::Stats),
+        other => bail!("unknown verb '{other}'"),
+    }
+}
+
+fn bad(what: &str) -> anyhow::Error {
+    anyhow::anyhow!("malformed {what}")
+}
+
+fn parse_tokens(s: &str) -> Result<Vec<usize>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|t| t.parse::<usize>().map_err(|_| bad("token list")))
+        .collect()
+}
+
+pub fn format_tokens(tokens: &[usize]) -> String {
+    tokens
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_gen() {
+        let r = parse_request("GEN 42 10 1,2,3\n").unwrap();
+        assert_eq!(
+            r,
+            WireRequest::Generate { session: 42, max_new: 10, prime: vec![1, 2, 3] }
+        );
+    }
+
+    #[test]
+    fn parse_score_and_end_and_stats() {
+        assert_eq!(parse_request("SCORE 5,6").unwrap(), WireRequest::Score { tokens: vec![5, 6] });
+        assert_eq!(parse_request("END 3").unwrap(), WireRequest::End { session: 3 });
+        assert_eq!(parse_request("STATS").unwrap(), WireRequest::Stats);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("GEN x 10 1").is_err());
+        assert!(parse_request("GEN 1 0 1").is_err());
+        assert!(parse_request("GEN 1 10 ").is_err());
+        assert!(parse_request("SCORE 1").is_err());
+        assert!(parse_request("FROB").is_err());
+        assert!(parse_request("GEN 1 10 1,a,3").is_err());
+    }
+
+    #[test]
+    fn token_format_roundtrip() {
+        let toks = vec![1usize, 22, 333];
+        assert_eq!(parse_tokens(&format_tokens(&toks)).unwrap(), toks);
+    }
+}

@@ -1,0 +1,115 @@
+//! Per-client session cache: the RNN analogue of a KV-cache manager.
+//!
+//! Each conversation keeps its recurrent state (`h`, `c`) server-side so a
+//! follow-up request continues where the last one stopped. Bounded with LRU
+//! eviction; evictions are surfaced in the metrics.
+
+use std::collections::HashMap;
+
+use crate::model::lm::LmState;
+
+/// LRU session store keyed by client-chosen session id.
+pub struct SessionStore {
+    max_sessions: usize,
+    clock: u64,
+    map: HashMap<u64, (u64, LmState)>, // id → (last_used, state)
+    pub evictions: u64,
+}
+
+impl SessionStore {
+    pub fn new(max_sessions: usize) -> Self {
+        assert!(max_sessions >= 1);
+        SessionStore { max_sessions, clock: 0, map: HashMap::new(), evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch a session's state (bumps recency), or `None` for new sessions.
+    pub fn take(&mut self, id: u64) -> Option<LmState> {
+        self.clock += 1;
+        self.map.remove(&id).map(|(_, s)| s)
+    }
+
+    /// Store a session's state, evicting the least-recently-used if full.
+    pub fn put(&mut self, id: u64, state: LmState) {
+        self.clock += 1;
+        if !self.map.contains_key(&id) && self.map.len() >= self.max_sessions {
+            if let Some((&lru, _)) = self.map.iter().min_by_key(|(_, (t, _))| *t) {
+                self.map.remove(&lru);
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(id, (self.clock, state));
+    }
+
+    pub fn remove(&mut self, id: u64) -> bool {
+        self.map.remove(&id).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lstm::LstmState;
+
+    fn st(h: f32) -> LmState {
+        LmState::Lstm(vec![LstmState { h: vec![h], c: vec![h] }])
+    }
+
+    #[test]
+    fn take_put_roundtrip() {
+        let mut s = SessionStore::new(4);
+        assert!(s.take(1).is_none());
+        s.put(1, st(0.5));
+        let got = s.take(1).unwrap();
+        assert_eq!(got, st(0.5));
+        // take removes — second take misses.
+        assert!(s.take(1).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut s = SessionStore::new(2);
+        s.put(1, st(1.0));
+        s.put(2, st(2.0));
+        // Touch 1 so 2 becomes LRU.
+        let one = s.take(1).unwrap();
+        s.put(1, one);
+        s.put(3, st(3.0));
+        assert_eq!(s.evictions, 1);
+        assert!(s.take(2).is_none(), "2 was LRU and must be evicted");
+        assert!(s.take(1).is_some());
+        assert!(s.take(3).is_some());
+    }
+
+    #[test]
+    fn capacity_never_exceeded_property() {
+        let mut s = SessionStore::new(8);
+        let mut rng = crate::util::Rng::new(99);
+        for _ in 0..1000 {
+            let id = rng.below(32) as u64;
+            if rng.f32() < 0.5 {
+                s.put(id, st(id as f32));
+            } else {
+                if let Some(state) = s.take(id) {
+                    s.put(id, state);
+                }
+            }
+            assert!(s.len() <= 8);
+        }
+    }
+
+    #[test]
+    fn remove_existing() {
+        let mut s = SessionStore::new(2);
+        s.put(7, st(1.0));
+        assert!(s.remove(7));
+        assert!(!s.remove(7));
+    }
+}

@@ -1,0 +1,159 @@
+//! TCP front end: accept loop + thread-per-connection router that parses
+//! the wire protocol and forwards work to the batcher thread.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Sender};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Request, Work};
+use super::protocol::{format_tokens, parse_request, WireRequest};
+
+/// Bind and serve forever (spawns a thread per connection). Returns the
+/// bound local address via the callback before blocking (tests bind ":0").
+pub fn serve(addr: &str, work: Sender<Work>, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_bound(listener.local_addr()?);
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let tx = work.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(s, tx);
+                });
+            }
+            Err(_) => continue,
+        }
+    }
+    Ok(())
+}
+
+/// Serve one connection: line in, line out.
+pub fn handle_conn(stream: TcpStream, work: Sender<Work>) -> Result<()> {
+    let peer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut writer = peer;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(&line, &work);
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Pure request→reply step (unit-testable without sockets).
+pub fn handle_line(line: &str, work: &Sender<Work>) -> String {
+    match parse_request(line) {
+        Err(e) => format!("ERR {e}"),
+        Ok(WireRequest::Generate { session, max_new, prime }) => {
+            let (tx, rx) = mpsc::channel();
+            let req = Request { session, max_new, prime, respond: tx, enqueued: Instant::now() };
+            if work.send(Work::Gen(req)).is_err() {
+                return "ERR server shutting down".into();
+            }
+            match rx.recv() {
+                Ok(resp) => format!("OK GEN {}", format_tokens(&resp.tokens)),
+                Err(_) => "ERR batcher dropped request".into(),
+            }
+        }
+        Ok(WireRequest::Score { tokens }) => {
+            let (tx, rx) = mpsc::channel();
+            if work.send(Work::Score { tokens, respond: tx }).is_err() {
+                return "ERR server shutting down".into();
+            }
+            match rx.recv() {
+                Ok(ppw) => format!("OK SCORE {ppw:.4}"),
+                Err(_) => "ERR batcher dropped request".into(),
+            }
+        }
+        Ok(WireRequest::End { session }) => {
+            let (tx, rx) = mpsc::channel();
+            if work.send(Work::End { session, respond: tx }).is_err() {
+                return "ERR server shutting down".into();
+            }
+            match rx.recv() {
+                Ok(true) => "OK END".into(),
+                Ok(false) => "OK END (no such session)".into(),
+                Err(_) => "ERR batcher dropped request".into(),
+            }
+        }
+        Ok(WireRequest::Stats) => {
+            let (tx, rx) = mpsc::channel();
+            if work.send(Work::Stats { respond: tx }).is_err() {
+                return "ERR server shutting down".into();
+            }
+            match rx.recv() {
+                Ok(s) => format!("OK STATS {s}"),
+                Err(_) => "ERR batcher dropped request".into(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lm::{LmConfig, PrecisionPolicy, RnnKind};
+    use crate::model::RnnLm;
+    use crate::server::batcher::{BatcherConfig, InferenceServer};
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::Arc;
+
+    fn spawn_server() -> (Sender<Work>, std::thread::JoinHandle<()>) {
+        let lm = RnnLm::random(
+            LmConfig { kind: RnnKind::Gru, vocab: 30, hidden: 12, layers: 1 },
+            11,
+            PrecisionPolicy::quantized(2, 2),
+        );
+        let server = InferenceServer::new(Arc::new(lm), BatcherConfig::default());
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || server.run(rx));
+        (tx, h)
+    }
+
+    #[test]
+    fn handle_line_gen_and_score() {
+        let (tx, h) = spawn_server();
+        let r = handle_line("GEN 1 3 2,3", &tx);
+        assert!(r.starts_with("OK GEN "), "{r}");
+        let toks = r.trim_start_matches("OK GEN ").split(',').count();
+        assert_eq!(toks, 3);
+        let r = handle_line("SCORE 1,2,3,4,5", &tx);
+        assert!(r.starts_with("OK SCORE "), "{r}");
+        let r = handle_line("junk", &tx);
+        assert!(r.starts_with("ERR "), "{r}");
+        tx.send(Work::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let (tx, h) = spawn_server();
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let tx2 = tx.clone();
+        std::thread::spawn(move || {
+            let _ = serve("127.0.0.1:0", tx2, move |a| {
+                let _ = addr_tx.send(a);
+            });
+        });
+        let addr = addr_rx.recv().unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GEN 7 4 1,2\nSTATS\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK GEN "), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK STATS "), "{line}");
+        tx.send(Work::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+}

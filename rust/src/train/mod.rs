@@ -1,0 +1,19 @@
+//! Training drivers.
+//!
+//! * [`schedule`] — the paper's exact §5 SGD schedule: lr starts at 20,
+//!   divides by 1.2 whenever validation PPW regresses past the best seen,
+//!   stops below lr 0.001 or at 80 epochs; gradient clip 0.25, unroll 30,
+//!   dropout 0.5.
+//! * [`trainer`] — the Layer-3 loop that drives the AOT-compiled Layer-2
+//!   `train_step` / `eval_step` artifacts through the PJRT runtime,
+//!   carrying recurrent state across BPTT windows and checkpointing in the
+//!   shared named-tensor format.
+//! * [`native`] — pure-Rust STE trainers for the Appendix-B image tables
+//!   (MLP on MNIST-like, CNN on CIFAR-like, LSTM on sequential MNIST-like).
+
+pub mod native;
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::{SgdSchedule, ScheduleAction};
+pub use trainer::{LmTrainer, TrainReport};

@@ -1,0 +1,124 @@
+//! The paper's learning-rate schedule (§5, verbatim): "The initial learning
+//! rate is set to 20. Every epoch we evaluate on the validation dataset and
+//! record the best value. When the validation error exceeds the best record,
+//! we decrease learning rate by a factor of 1.2. Training is terminated once
+//! the learning rate is less than 0.001 or reaching the maximum epochs,
+//! i.e., 80."
+
+/// What the driver should do after an epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleAction {
+    Continue,
+    Stop,
+}
+
+/// Validation-driven decay schedule.
+#[derive(Clone, Debug)]
+pub struct SgdSchedule {
+    pub lr: f64,
+    pub decay: f64,
+    pub min_lr: f64,
+    pub max_epochs: usize,
+    pub epoch: usize,
+    best_val: f64,
+    pub best_epoch: usize,
+}
+
+impl SgdSchedule {
+    /// The paper's setting.
+    pub fn paper() -> Self {
+        Self::new(20.0, 1.2, 1e-3, 80)
+    }
+
+    pub fn new(lr: f64, decay: f64, min_lr: f64, max_epochs: usize) -> Self {
+        assert!(lr > 0.0 && decay > 1.0);
+        SgdSchedule { lr, decay, min_lr, max_epochs, epoch: 0, best_val: f64::INFINITY, best_epoch: 0 }
+    }
+
+    /// Report a validation metric (lower is better). Updates lr and returns
+    /// whether to continue.
+    pub fn on_epoch(&mut self, val: f64) -> ScheduleAction {
+        self.epoch += 1;
+        if val < self.best_val {
+            self.best_val = val;
+            self.best_epoch = self.epoch;
+        } else {
+            self.lr /= self.decay;
+        }
+        if self.lr < self.min_lr || self.epoch >= self.max_epochs {
+            ScheduleAction::Stop
+        } else {
+            ScheduleAction::Continue
+        }
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best_val
+    }
+}
+
+/// Gradient-norm clipping to `[-clip, clip]` (paper: 0.25). Returns the
+/// pre-clip norm.
+pub fn clip_gradients(grads: &mut [f32], clip: f32) -> f32 {
+    let norm = grads.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt() as f32;
+    if norm > clip && norm > 0.0 {
+        let scale = clip / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decays_only_on_regression() {
+        let mut s = SgdSchedule::paper();
+        assert_eq!(s.on_epoch(100.0), ScheduleAction::Continue);
+        assert_eq!(s.lr, 20.0);
+        assert_eq!(s.on_epoch(90.0), ScheduleAction::Continue);
+        assert_eq!(s.lr, 20.0);
+        s.on_epoch(95.0); // worse than best (90) → decay
+        assert!((s.lr - 20.0 / 1.2).abs() < 1e-9);
+        assert_eq!(s.best(), 90.0);
+        assert_eq!(s.best_epoch, 2);
+    }
+
+    #[test]
+    fn stops_at_min_lr() {
+        let mut s = SgdSchedule::new(0.0015, 1.2, 1e-3, 1000);
+        let mut action = ScheduleAction::Continue;
+        let mut epochs = 0;
+        while action == ScheduleAction::Continue && epochs < 100 {
+            action = s.on_epoch(1.0 + epochs as f64); // always regressing
+            epochs += 1;
+        }
+        assert_eq!(action, ScheduleAction::Stop);
+        assert!(s.lr < 1e-3);
+        assert!(epochs <= 4, "0.0015/1.2^3 < 0.001");
+    }
+
+    #[test]
+    fn stops_at_max_epochs() {
+        let mut s = SgdSchedule::new(20.0, 1.2, 1e-3, 3);
+        assert_eq!(s.on_epoch(10.0), ScheduleAction::Continue);
+        assert_eq!(s.on_epoch(9.0), ScheduleAction::Continue);
+        assert_eq!(s.on_epoch(8.0), ScheduleAction::Stop);
+    }
+
+    #[test]
+    fn clip_scales_norm() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let pre = clip_gradients(&mut g, 0.25);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((post - 0.25).abs() < 1e-6);
+        // Under the clip: untouched.
+        let mut g2 = vec![0.1f32, 0.1];
+        clip_gradients(&mut g2, 0.25);
+        assert_eq!(g2, vec![0.1, 0.1]);
+    }
+}

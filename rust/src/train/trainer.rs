@@ -1,0 +1,340 @@
+//! The Layer-3 training loop over AOT-compiled Layer-2 artifacts.
+//!
+//! Contract with `python/compile/aot.py` (one variant = one `<tag>`):
+//!
+//! * `artifacts/<tag>.manifest.txt` — metadata + ordered parameter list:
+//!   ```text
+//!   kind lstm | gru
+//!   vocab 2000
+//!   hidden 200
+//!   batch 20
+//!   bptt 30
+//!   param embedding 2000,200
+//!   param wx 800,200
+//!   ...
+//!   ```
+//! * `artifacts/<tag>_init.amqt` — initial parameters (named tensors).
+//! * `artifacts/<tag>_train.hlo.txt` — one SGD step:
+//!   `(params…, h0, c0, x, y, lr) → (params'…, h', c', mean_nll)`
+//!   (GRU variants omit `c0`/`c'`).
+//! * `artifacts/<tag>_eval.hlo.txt` — forward only:
+//!   `(params…, h0, c0, x, y) → (h', c', sum_nll, count)`.
+//!
+//! The loop carries recurrent state across BPTT windows within an epoch
+//! (standard contiguous training) and applies the §5 schedule.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::batcher::LmBatcher;
+use crate::data::checkpoint::Checkpoint;
+use crate::model::{LmConfig, RnnKind};
+use crate::runtime::{Arg, Engine, HostTensor, HostTokens};
+use crate::train::schedule::{ScheduleAction, SgdSchedule};
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub kind: RnnKind,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub bptt: usize,
+    /// Ordered (name, shape) — artifact argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kind = None;
+        let (mut vocab, mut hidden, mut batch, mut bptt) = (0, 0, 0, 0);
+        let mut params = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next().unwrap_or("") {
+                "kind" => {
+                    kind = Some(match it.next().unwrap_or("") {
+                        "lstm" => RnnKind::Lstm,
+                        "gru" => RnnKind::Gru,
+                        other => bail!("manifest: unknown kind '{other}'"),
+                    })
+                }
+                "vocab" => vocab = it.next().unwrap_or("0").parse()?,
+                "hidden" => hidden = it.next().unwrap_or("0").parse()?,
+                "batch" => batch = it.next().unwrap_or("0").parse()?,
+                "bptt" => bptt = it.next().unwrap_or("0").parse()?,
+                "param" => {
+                    let name = it.next().context("param name")?.to_string();
+                    let shape: Vec<usize> = it
+                        .next()
+                        .context("param shape")?
+                        .split(',')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<std::result::Result<_, _>>()?;
+                    params.push((name, shape));
+                }
+                other => bail!("manifest: unknown directive '{other}'"),
+            }
+        }
+        if vocab == 0 || hidden == 0 || batch == 0 || bptt == 0 || params.is_empty() {
+            bail!("manifest incomplete");
+        }
+        Ok(Manifest { kind: kind.context("manifest missing kind")?, vocab, hidden, batch, bptt, params })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?)
+    }
+
+    pub fn lm_config(&self) -> LmConfig {
+        LmConfig { kind: self.kind, vocab: self.vocab, hidden: self.hidden, layers: 1 }
+    }
+}
+
+/// Per-epoch training record.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub epoch_losses: Vec<f64>,
+    pub val_ppws: Vec<f64>,
+    pub best_val_ppw: f64,
+    pub steps: usize,
+}
+
+/// The driver.
+pub struct LmTrainer {
+    pub manifest: Manifest,
+    pub tag: String,
+    engine: Engine,
+    /// Current parameters, in manifest order.
+    pub params: Vec<HostTensor>,
+}
+
+impl LmTrainer {
+    /// Load manifest + artifacts + initial params for `<tag>`.
+    pub fn load(artifact_dir: impl Into<PathBuf>, tag: &str) -> Result<Self> {
+        let dir: PathBuf = artifact_dir.into();
+        let manifest = Manifest::load(&dir.join(format!("{tag}.manifest.txt")))?;
+        let mut engine = Engine::cpu(&dir)?;
+        engine.load(&format!("{tag}_train"))?;
+        engine.load(&format!("{tag}_eval"))?;
+        let init = Checkpoint::load(&dir.join(format!("{tag}_init.amqt")))?;
+        let params = manifest
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                let t = init.get(name)?;
+                if &t.shape != shape {
+                    bail!("init param '{name}' shape {:?} != manifest {:?}", t.shape, shape);
+                }
+                Ok(HostTensor::new(t.shape.clone(), t.data.clone()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LmTrainer { manifest, tag: tag.to_string(), engine, params })
+    }
+
+    fn state_tensors(&self) -> Vec<HostTensor> {
+        let (b, h) = (self.manifest.batch, self.manifest.hidden);
+        let zero = HostTensor::new(vec![b, h], vec![0.0; b * h]);
+        match self.manifest.kind {
+            RnnKind::Lstm => vec![zero.clone(), zero],
+            RnnKind::Gru => vec![zero],
+        }
+    }
+
+    fn tokens(&self, xs: &[usize], len: usize) -> HostTokens {
+        HostTokens::new(vec![self.manifest.batch, len], xs.iter().map(|&t| t as i32).collect())
+    }
+
+    /// One epoch of SGD over `train`; returns mean per-token NLL.
+    pub fn train_epoch(&mut self, train: &[usize], lr: f32, max_steps: Option<usize>) -> Result<(f64, usize)> {
+        let mut batcher = LmBatcher::new(train, self.manifest.batch, self.manifest.bptt);
+        let mut state = self.state_tensors();
+        let mut total_loss = 0.0f64;
+        let mut steps = 0usize;
+        let lr_t = HostTensor::scalar(lr);
+        while let Some((x, y, len)) = batcher.next() {
+            if len != self.manifest.bptt {
+                break; // graphs are fixed-shape; drop the ragged tail window
+            }
+            let xt = self.tokens(&x, len);
+            let yt = self.tokens(&y, len);
+            let mut args: Vec<Arg<'_>> = self.params.iter().map(Arg::F32).collect();
+            for s in &state {
+                args.push(Arg::F32(s));
+            }
+            args.push(Arg::I32(&xt));
+            args.push(Arg::I32(&yt));
+            args.push(Arg::F32(&lr_t));
+            let out = self.engine.execute(&format!("{}_train", self.tag), &args)?;
+            let np = self.params.len();
+            let ns = state.len();
+            if out.len() != np + ns + 1 {
+                bail!("train artifact returned {} outputs, expected {}", out.len(), np + ns + 1);
+            }
+            self.params = out[..np].to_vec();
+            state = out[np..np + ns].to_vec();
+            total_loss += out[np + ns].data[0] as f64;
+            steps += 1;
+            if let Some(ms) = max_steps {
+                if steps >= ms {
+                    break;
+                }
+            }
+        }
+        if steps == 0 {
+            bail!("no full windows in corpus");
+        }
+        Ok((total_loss / steps as f64, steps))
+    }
+
+    /// PPW on a token stream via the eval artifact.
+    pub fn evaluate(&mut self, tokens: &[usize], max_steps: Option<usize>) -> Result<f64> {
+        let mut batcher = LmBatcher::new(tokens, self.manifest.batch, self.manifest.bptt);
+        let mut state = self.state_tensors();
+        let (mut nll, mut count) = (0.0f64, 0.0f64);
+        let mut steps = 0usize;
+        while let Some((x, y, len)) = batcher.next() {
+            if len != self.manifest.bptt {
+                break;
+            }
+            let xt = self.tokens(&x, len);
+            let yt = self.tokens(&y, len);
+            let mut args: Vec<Arg<'_>> = self.params.iter().map(Arg::F32).collect();
+            for s in &state {
+                args.push(Arg::F32(s));
+            }
+            args.push(Arg::I32(&xt));
+            args.push(Arg::I32(&yt));
+            let out = self.engine.execute(&format!("{}_eval", self.tag), &args)?;
+            let ns = state.len();
+            state = out[..ns].to_vec();
+            nll += out[ns].data[0] as f64;
+            count += out[ns + 1].data[0] as f64;
+            steps += 1;
+            if let Some(ms) = max_steps {
+                if steps >= ms {
+                    break;
+                }
+            }
+        }
+        if count == 0.0 {
+            bail!("empty evaluation");
+        }
+        Ok((nll / count).exp())
+    }
+
+    /// Full schedule-driven run (step-budgeted for CPU: `steps_per_epoch`
+    /// and `epochs` bound the work; the schedule may stop earlier).
+    pub fn fit(
+        &mut self,
+        train: &[usize],
+        valid: &[usize],
+        mut schedule: SgdSchedule,
+        epochs: usize,
+        steps_per_epoch: Option<usize>,
+        eval_steps: Option<usize>,
+        mut log: impl FnMut(usize, f64, f64, f64),
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport {
+            epoch_losses: Vec::new(),
+            val_ppws: Vec::new(),
+            best_val_ppw: f64::INFINITY,
+            steps: 0,
+        };
+        for epoch in 0..epochs {
+            let (loss, steps) = self.train_epoch(train, schedule.lr as f32, steps_per_epoch)?;
+            let val = self.evaluate(valid, eval_steps)?;
+            report.epoch_losses.push(loss);
+            report.val_ppws.push(val);
+            report.best_val_ppw = report.best_val_ppw.min(val);
+            report.steps += steps;
+            log(epoch, loss, val, schedule.lr);
+            if schedule.on_epoch(val) == ScheduleAction::Stop {
+                break;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Snapshot current params as a checkpoint.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let mut c = Checkpoint::new();
+        for ((name, _), t) in self.manifest.params.iter().zip(&self.params) {
+            c.insert(name, t.shape.clone(), t.data.clone());
+        }
+        c
+    }
+}
+
+/// Convert a trained checkpoint into dense [`crate::model::lm::LmWeights`]
+/// for the native inference engine (name contract with aot.py).
+pub fn weights_from_checkpoint(
+    ckpt: &Checkpoint,
+    config: &LmConfig,
+) -> Result<crate::model::lm::LmWeights> {
+    let get = |name: &str| -> Result<Vec<f32>> { Ok(ckpt.get(name)?.data.clone()) };
+    Ok(crate::model::lm::LmWeights {
+        embedding: get("embedding")?,
+        wx: vec![get("wx")?],
+        wh: vec![get("wh")?],
+        bias: vec![get("bias")?],
+        softmax_w: get("softmax_w")?,
+        softmax_b: get("softmax_b")?,
+        // layers fixed at 1, matching the paper's models.
+    })
+    .and_then(|w| {
+        let g = config.kind.gates();
+        if w.wx[0].len() != g * config.hidden * config.hidden {
+            bail!(
+                "checkpoint wx size {} != expected {} (kind/hidden mismatch)",
+                w.wx[0].len(),
+                g * config.hidden * config.hidden
+            );
+        }
+        Ok(w)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+kind lstm
+vocab 2000
+hidden 200
+batch 20
+bptt 30
+param embedding 2000,200
+param wx 800,200
+param wh 800,200
+param bias 800
+param softmax_w 2000,200
+param softmax_b 2000
+";
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.kind, RnnKind::Lstm);
+        assert_eq!((m.vocab, m.hidden, m.batch, m.bptt), (2000, 200, 20, 30));
+        assert_eq!(m.params.len(), 6);
+        assert_eq!(m.params[1], ("wx".to_string(), vec![800, 200]));
+        assert_eq!(m.lm_config().vocab, 2000);
+    }
+
+    #[test]
+    fn manifest_rejects_incomplete_and_unknown() {
+        assert!(Manifest::parse("kind lstm\n").is_err());
+        assert!(Manifest::parse("bogus 1\n").is_err());
+        assert!(Manifest::parse(&SAMPLE.replace("lstm", "elman")).is_err());
+    }
+
+    // End-to-end trainer tests live in rust/tests/train_e2e.rs and require
+    // `make artifacts`.
+}

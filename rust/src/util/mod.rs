@@ -1,0 +1,15 @@
+//! Small self-contained utilities: a deterministic PRNG, timing helpers,
+//! simple statistics, and a property-testing harness.
+//!
+//! The workspace builds fully offline against a minimal vendored crate set,
+//! so these substrates are implemented in-tree instead of pulling `rand`,
+//! `criterion`, or `proptest`.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

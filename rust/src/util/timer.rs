@@ -1,0 +1,114 @@
+//! Minimal wall-clock timing + a criterion-style micro-bench loop.
+//!
+//! `criterion` is not in the vendored crate set, so `bench_fn` implements the
+//! essentials: warmup, batched timing, and a robust (median-based) report.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// A simple start/elapsed timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Result of a micro-benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median time per iteration, in nanoseconds.
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>10.3} ms  mean {:>10.3} ms ± {:>7.3}  ({} iters)",
+            self.name,
+            self.median_ns / 1e6,
+            self.mean_ns / 1e6,
+            self.std_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup. Chooses the batch size so each sample is >=~1ms,
+/// takes `samples` samples, reports median/mean/std per iteration.
+pub fn bench_fn<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    // Warmup + calibration: find iters per sample targeting ~2 ms.
+    let t = Instant::now();
+    let mut calib_iters = 0u64;
+    while t.elapsed() < Duration::from_millis(20) {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = t.elapsed().as_secs_f64() / calib_iters as f64;
+    let batch = ((2e-3 / per_iter).ceil() as u64).max(1);
+
+    let mut stats = Summary::new();
+    let mut total_iters = 0u64;
+    for _ in 0..samples.max(3) {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let ns = t.elapsed().as_secs_f64() * 1e9 / batch as f64;
+        stats.add(ns);
+        total_iters += batch;
+    }
+    BenchResult {
+        name: name.to_string(),
+        median_ns: stats.median(),
+        mean_ns: stats.mean(),
+        std_ns: stats.std(),
+        iters: total_iters,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_time() {
+        let mut acc = 0u64;
+        let r = bench_fn("noop-ish", 5, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Golden cross-layer test: the Layer-1 Pallas quantization kernel (executed
+//! through its AOT artifact) and the native Rust implementation of
+//! Algorithm 2 must agree on the same input matrix.
+//!
+//! Reconstruction values can differ on exact argmin ties and the kernel's
+//! ridge term, so the contract is: per-row reconstruction error within a
+//! tight relative band, and global relative MSE essentially identical.
+
+use std::path::Path;
+
+use amq::quant::{alternating, relative_mse};
+use amq::runtime::{Arg, Engine, HostTensor};
+use amq::util::Rng;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("quant_k2.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn run_case(k: usize) {
+    let Some(dir) = artifacts() else { return };
+    let (rows, cols) = (64usize, 128usize);
+    let mut rng = Rng::new(0xC0FFEE + k as u64);
+    let w = rng.laplace_vec(rows * cols, 0.1);
+
+    let mut engine = Engine::cpu(dir).unwrap();
+    engine.load(&format!("quant_k{k}")).unwrap();
+    let wt = HostTensor::new(vec![rows, cols], w.clone());
+    let out = engine.execute(&format!("quant_k{k}"), &[Arg::F32(&wt)]).unwrap();
+    assert_eq!(out.len(), 1);
+    let kernel_hat = &out[0].data;
+    assert_eq!(kernel_hat.len(), rows * cols);
+
+    // Native per-row quantization.
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let native = alternating::quantize(row, k, 2);
+        let e_native = native.sq_error(row);
+        let e_kernel: f64 = row
+            .iter()
+            .zip(&kernel_hat[r * cols..(r + 1) * cols])
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let denom = e_native.max(1e-12);
+        assert!(
+            (e_kernel - e_native).abs() / denom < 0.05,
+            "row {r}: kernel err {e_kernel:.6} vs native {e_native:.6}"
+        );
+    }
+
+    // Global relative MSE must land in the same band.
+    let g_kernel = relative_mse(&w, kernel_hat);
+    let native_all: Vec<f32> = (0..rows)
+        .flat_map(|r| alternating::quantize(&w[r * cols..(r + 1) * cols], k, 2).dequantize())
+        .collect();
+    let g_native = relative_mse(&w, &native_all);
+    assert!(
+        (g_kernel - g_native).abs() / g_native < 0.02,
+        "global rMSE: kernel {g_kernel:.5} vs native {g_native:.5}"
+    );
+}
+
+#[test]
+fn pallas_kernel_matches_native_k2() {
+    run_case(2);
+}
+
+#[test]
+fn pallas_kernel_matches_native_k3() {
+    run_case(3);
+}

@@ -1,0 +1,125 @@
+//! Integration: the AOT artifacts execute from Rust and agree with the
+//! native inference engine (the golden cross-layer contract).
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::Path;
+
+use amq::data::checkpoint::Checkpoint;
+use amq::model::lm::{PrecisionPolicy, RnnLm};
+use amq::runtime::{Arg, Engine, HostTensor, HostTokens};
+use amq::train::trainer::{weights_from_checkpoint, Manifest};
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("lstm_fp.manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn eval_artifact_matches_native_ppw() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir.join("lstm_fp.manifest.txt")).unwrap();
+    let init = Checkpoint::load(&dir.join("lstm_fp_init.amqt")).unwrap();
+    let config = manifest.lm_config();
+    let weights = weights_from_checkpoint(&init, &config).unwrap();
+    let native = RnnLm::from_weights(config, &weights, PrecisionPolicy::full());
+
+    // One window of synthetic tokens, batch layout matching the artifact.
+    let (b, t) = (manifest.batch, manifest.bptt);
+    let mut rng = amq::util::Rng::new(42);
+    let x: Vec<usize> = (0..b * t).map(|_| rng.below(manifest.vocab)).collect();
+    let y: Vec<usize> = (0..b * t).map(|_| rng.below(manifest.vocab)).collect();
+
+    // Native: per stream, fresh zero state, accumulate NLL of y given x.
+    let mut native_nll = 0.0f64;
+    for bi in 0..b {
+        let mut state = native.zero_state();
+        for ti in 0..t {
+            let logits = native.step(x[bi * t + ti], &mut state);
+            native_nll -= amq::model::math::log_softmax_at(&logits, y[bi * t + ti]) as f64;
+        }
+    }
+
+    // Artifact: same computation through PJRT.
+    let mut engine = Engine::cpu(dir).unwrap();
+    engine.load("lstm_fp_eval").unwrap();
+    let params: Vec<HostTensor> = manifest
+        .params
+        .iter()
+        .map(|(name, shape)| {
+            let t = init.get(name).unwrap();
+            assert_eq!(&t.shape, shape);
+            HostTensor::new(t.shape.clone(), t.data.clone())
+        })
+        .collect();
+    let h0 = HostTensor::new(vec![b, manifest.hidden], vec![0.0; b * manifest.hidden]);
+    let c0 = h0.clone();
+    let xt = HostTokens::new(vec![b, t], x.iter().map(|&v| v as i32).collect());
+    let yt = HostTokens::new(vec![b, t], y.iter().map(|&v| v as i32).collect());
+    let mut args: Vec<Arg<'_>> = params.iter().map(Arg::F32).collect();
+    args.push(Arg::F32(&h0));
+    args.push(Arg::F32(&c0));
+    args.push(Arg::I32(&xt));
+    args.push(Arg::I32(&yt));
+    let out = engine.execute("lstm_fp_eval", &args).unwrap();
+    // outputs: h', c', sum_nll, count
+    assert_eq!(out.len(), 4);
+    let artifact_nll = out[2].data[0] as f64;
+    let count = out[3].data[0] as f64;
+    assert_eq!(count as usize, b * t);
+
+    let rel = (artifact_nll - native_nll).abs() / native_nll.abs();
+    assert!(
+        rel < 1e-3,
+        "cross-layer NLL mismatch: native {native_nll:.4} vs artifact {artifact_nll:.4}"
+    );
+}
+
+#[test]
+fn train_artifact_decreases_loss() {
+    let Some(dir) = artifacts() else { return };
+    let mut trainer = amq::train::LmTrainer::load(dir, "lstm_fp").unwrap();
+    let spec = amq::data::DatasetSpec::ptb_like().scaled(64, 5);
+    let corpus = amq::data::Corpus::generate(spec);
+    let (l0, _) = trainer.train_epoch(&corpus.train, 10.0, Some(3)).unwrap();
+    let (l1, _) = trainer.train_epoch(&corpus.train, 10.0, Some(3)).unwrap();
+    let (l2, _) = trainer.train_epoch(&corpus.train, 10.0, Some(3)).unwrap();
+    assert!(
+        l2 < l0,
+        "loss should decrease over repeated epochs: {l0:.4} → {l1:.4} → {l2:.4}"
+    );
+}
+
+#[test]
+fn quantized_train_artifact_runs() {
+    let Some(dir) = artifacts() else { return };
+    let mut trainer = amq::train::LmTrainer::load(dir, "lstm_w2a2").unwrap();
+    let spec = amq::data::DatasetSpec::ptb_like().scaled(64, 5);
+    let corpus = amq::data::Corpus::generate(spec);
+    let (loss, steps) = trainer.train_epoch(&corpus.train, 5.0, Some(2)).unwrap();
+    assert_eq!(steps, 2);
+    assert!(loss.is_finite() && loss > 0.0);
+    // Weight clip invariant from the training graph.
+    for t in &trainer.params {
+        assert!(t.data.iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+}
+
+#[test]
+fn eval_after_one_step_changes() {
+    let Some(dir) = artifacts() else { return };
+    let mut trainer = amq::train::LmTrainer::load(dir, "gru_fp").unwrap();
+    let spec = amq::data::DatasetSpec::ptb_like().scaled(64, 5);
+    let corpus = amq::data::Corpus::generate(spec);
+    let before = trainer.evaluate(&corpus.valid, Some(2)).unwrap();
+    trainer.train_epoch(&corpus.train, 10.0, Some(3)).unwrap();
+    let after = trainer.evaluate(&corpus.valid, Some(2)).unwrap();
+    assert_ne!(before, after);
+    assert!(after < before, "one epoch should lower val ppw: {before:.1} → {after:.1}");
+}

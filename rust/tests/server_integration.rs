@@ -1,0 +1,114 @@
+//! End-to-end serving integration: quantized model behind the TCP front
+//! end, concurrent clients, session continuity, and failure handling.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Work};
+use amq::server::tcp;
+
+struct TestServer {
+    addr: std::net::SocketAddr,
+    work: mpsc::Sender<Work>,
+}
+
+fn start(max_batch: usize) -> TestServer {
+    let lm = RnnLm::random(
+        LmConfig { kind: RnnKind::Lstm, vocab: 60, hidden: 24, layers: 1 },
+        123,
+        PrecisionPolicy::quantized(2, 2),
+    );
+    let server = InferenceServer::new(
+        Arc::new(lm),
+        BatcherConfig { max_batch, batch_wait: std::time::Duration::from_micros(300), max_sessions: 64 },
+    );
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || server.run(rx));
+    let (atx, arx) = mpsc::channel();
+    let tx2 = tx.clone();
+    std::thread::spawn(move || {
+        let _ = tcp::serve("127.0.0.1:0", tx2, move |a| {
+            let _ = atx.send(a);
+        });
+    });
+    TestServer { addr: arx.recv().unwrap(), work: tx }
+}
+
+fn request(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut r = BufReader::new(conn);
+    let mut out = String::new();
+    r.read_line(&mut out).unwrap();
+    out.trim().to_string()
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let s = start(8);
+    let addr = s.addr;
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            std::thread::spawn(move || request(addr, &format!("GEN {i} 5 {},{}", i % 60, (i + 7) % 60)))
+        })
+        .collect();
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert!(resp.starts_with("OK GEN "), "{resp}");
+        assert_eq!(resp.trim_start_matches("OK GEN ").split(',').count(), 5);
+    }
+    let stats = request(addr, "STATS");
+    assert!(stats.contains("requests=12"), "{stats}");
+    let _ = s.work.send(Work::Shutdown);
+}
+
+#[test]
+fn session_state_survives_across_connections() {
+    let s = start(4);
+    // Same session twice: server must keep its hidden state between calls.
+    let a = request(s.addr, "GEN 77 4 3,4,5");
+    let b = request(s.addr, "GEN 77 4 9");
+    assert!(a.starts_with("OK GEN ") && b.starts_with("OK GEN "));
+    // Fresh session with same prime as the second call can differ (state!).
+    let c = request(s.addr, "GEN 78 4 9");
+    assert!(c.starts_with("OK GEN "));
+    let ended = request(s.addr, "END 77");
+    assert_eq!(ended, "OK END");
+    let again = request(s.addr, "END 77");
+    assert!(again.contains("no such session"), "{again}");
+    let _ = s.work.send(Work::Shutdown);
+}
+
+#[test]
+fn malformed_requests_get_errors_not_disconnects() {
+    let s = start(4);
+    let mut conn = TcpStream::connect(s.addr).unwrap();
+    conn.write_all(b"BOGUS\nGEN 1 0 1\nSCORE 5\nGEN 1 2 1\n").unwrap();
+    let mut r = BufReader::new(conn.try_clone().unwrap());
+    let mut lines = Vec::new();
+    for _ in 0..4 {
+        let mut l = String::new();
+        r.read_line(&mut l).unwrap();
+        lines.push(l.trim().to_string());
+    }
+    assert!(lines[0].starts_with("ERR "));
+    assert!(lines[1].starts_with("ERR "));
+    assert!(lines[2].starts_with("ERR "));
+    assert!(lines[3].starts_with("OK GEN "), "recovers after errors: {lines:?}");
+    let _ = s.work.send(Work::Shutdown);
+}
+
+#[test]
+fn score_is_deterministic_and_finite() {
+    let s = start(4);
+    let a = request(s.addr, "SCORE 1,2,3,4,5,6");
+    let b = request(s.addr, "SCORE 1,2,3,4,5,6");
+    assert_eq!(a, b);
+    let ppw: f64 = a.trim_start_matches("OK SCORE ").parse().unwrap();
+    assert!(ppw.is_finite() && ppw > 1.0);
+    let _ = s.work.send(Work::Shutdown);
+}
