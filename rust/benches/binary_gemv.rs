@@ -1,11 +1,12 @@
 //! Bench: Table 6 (Appendix A) — binary XNOR/popcount GEMV vs f32 GEMV at
 //! the paper's exact shapes (4096×1024 hidden product, 42000×1024 Text8
 //! softmax), with the online-quantization share broken out, plus the §4
-//! cost model comparison.
+//! cost model comparison — and the batched-GEMM sweep over
+//! B ∈ {1, 4, 16, 64} behind the batch-first serving API (Fig. 3 right).
 //!
 //! Run: `cargo bench --bench binary_gemv` (full shapes; takes a minute).
 
-use amq::exp::{costmodel, kernel_tables, table6};
+use amq::exp::{costmodel, gemm_batch_sweep, kernel_tables, render_batch_sweep, table6};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -20,6 +21,13 @@ fn main() {
     print!("{}", kernel_tables::render_table6(&rows));
     print!("{}", costmodel(shapes, &rows));
 
+    // Batched sweep: one sweep over the packed weight planes serves all B
+    // columns, so per-vector cost must fall as B grows.
+    let sweep_shapes: &[(usize, usize)] = if quick { &[(1024, 1024)] } else { &[(4096, 1024)] };
+    let batches: &[usize] = &[1, 4, 16, 64];
+    let sweep = gemm_batch_sweep(sweep_shapes, batches, 2, samples.min(9));
+    print!("{}", render_batch_sweep(&sweep));
+
     // Self-check: quantized must beat FP at every shape (the paper's
     // headline 2-bit ≈ 6×, 3-bit ≈ 3× on the larger shape).
     for r in rows.iter().filter(|r| r.bits.is_some()) {
@@ -31,5 +39,14 @@ fn main() {
             r.bits
         );
     }
+    // Self-check: batching must improve per-vector throughput.
+    let b1 = sweep.iter().find(|r| r.batch == 1).unwrap();
+    let b16 = sweep.iter().find(|r| r.batch == 16).unwrap();
+    assert!(
+        b16.vecs_per_sec > b1.vecs_per_sec,
+        "batched GEMM not faster per vector: B=16 {:.0}/s vs B=1 {:.0}/s",
+        b16.vecs_per_sec,
+        b1.vecs_per_sec
+    );
     eprintln!("ok");
 }

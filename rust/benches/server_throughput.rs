@@ -1,9 +1,16 @@
 //! Bench: the serving coordinator — tokens/sec and per-request latency as a
 //! function of batch size, full precision vs 2/2 and 3/3 quantized models.
 //! This regenerates the paper's *motivating* claim (§1, abstract): quantized
-//! inference serves more concurrent requests per machine at lower latency.
+//! inference serves more concurrent requests per machine at lower latency —
+//! and, with the batch-first forward API, that the dynamic batcher's
+//! timestep groups execute as true batched GEMMs whose throughput grows
+//! with B (one sweep over the weight planes per batch, Fig. 3 right).
 //!
-//! Run: `cargo bench --bench server_throughput`
+//! Run: `cargo bench --bench server_throughput [--quick] [--json PATH]`
+//!
+//! The final stdout line is a machine-readable JSON summary (tokens/sec per
+//! model per batch size); `--json PATH` additionally writes it to a file so
+//! perf trajectories can be tracked across PRs.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -11,6 +18,14 @@ use std::time::Instant;
 
 use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
 use amq::server::batcher::{BatcherConfig, InferenceServer, Request};
+
+struct Sample {
+    model: &'static str,
+    batch: usize,
+    tokens_per_sec: f64,
+    batch_ms: f64,
+    bytes: usize,
+}
 
 fn run_batch(model: Arc<RnnLm>, batch: usize, new_tokens: usize) -> (f64, f64) {
     let mut server = InferenceServer::new(
@@ -40,8 +55,35 @@ fn run_batch(model: Arc<RnnLm>, batch: usize, new_tokens: usize) -> (f64, f64) {
     (tokens / elapsed, elapsed * 1e3)
 }
 
+fn json_summary(config: &LmConfig, new_tokens: usize, samples: &[Sample]) -> String {
+    let mut s = format!(
+        "{{\"bench\":\"server_throughput\",\"kind\":\"{}\",\"vocab\":{},\"hidden\":{},\"new_tokens\":{},\"results\":[",
+        config.kind.name(),
+        config.vocab,
+        config.hidden,
+        new_tokens
+    );
+    for (i, r) in samples.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"model\":\"{}\",\"batch\":{},\"tokens_per_sec\":{:.1},\"batch_ms\":{:.3},\"weight_bytes\":{}}}",
+            r.model, r.batch, r.tokens_per_sec, r.batch_ms, r.bytes
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let config = LmConfig {
         kind: RnnKind::Lstm,
         vocab: if quick { 500 } else { 2000 },
@@ -57,32 +99,50 @@ fn main() {
         "{:<10} {:>10} {:>14} {:>12} {:>10}",
         "model", "batch", "tokens/s", "batch-ms", "bytes"
     );
-    let variants: Vec<(&str, PrecisionPolicy)> = vec![
+    let variants: Vec<(&'static str, PrecisionPolicy)> = vec![
         ("FP", PrecisionPolicy::full()),
         ("W2A2", PrecisionPolicy::quantized(2, 2)),
         ("W3A3", PrecisionPolicy::quantized(3, 3)),
     ];
-    let batches: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
-    let mut fp_tps_at_max = 0.0;
-    let mut q2_tps_at_max = 0.0;
+    let batches: &[usize] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    let mut samples: Vec<Sample> = Vec::new();
     for (name, policy) in variants {
         let model = Arc::new(RnnLm::random(config, 99, policy));
         let bytes = model.bytes();
         for &b in batches {
             let (tps, ms) = run_batch(model.clone(), b, new_tokens);
             println!("{name:<10} {b:>10} {tps:>14.0} {ms:>12.2} {bytes:>10}");
-            if b == *batches.last().unwrap() {
-                if name == "FP" {
-                    fp_tps_at_max = tps;
-                }
-                if name == "W2A2" {
-                    q2_tps_at_max = tps;
-                }
-            }
+            samples.push(Sample { model: name, batch: b, tokens_per_sec: tps, batch_ms: ms, bytes });
         }
     }
-    let speedup = q2_tps_at_max / fp_tps_at_max;
-    println!("\nW2A2 vs FP serving speedup at max batch: {speedup:.2}x");
+
+    let tps = |model: &str, batch: usize| {
+        samples
+            .iter()
+            .find(|s| s.model == model && s.batch == batch)
+            .map(|s| s.tokens_per_sec)
+            .unwrap_or(0.0)
+    };
+    let max_b = *batches.last().unwrap();
+    let speedup = tps("W2A2", max_b) / tps("FP", max_b);
+    println!("\nW2A2 vs FP serving speedup at batch {max_b}: {speedup:.2}x");
+    let batch_gain = tps("W2A2", 16) / tps("W2A2", 1);
+    println!("W2A2 batching gain, B=16 vs B=1: {batch_gain:.2}x");
+
+    let json = json_summary(&config, new_tokens, &samples);
+    if let Some(path) = json_path {
+        std::fs::write(&path, &json).expect("write json summary");
+        eprintln!("json summary written to {path}");
+    }
+    println!("{json}");
+
+    // Self-checks: quantized serving must beat FP, and the batched forward
+    // must make B=16 strictly faster than B=1 for the 2-bit model (the
+    // acceptance bar of the batch-first API).
     assert!(speedup > 1.0, "quantized serving must outperform FP");
+    assert!(
+        batch_gain > 1.0,
+        "batched serving must outperform B=1: gain {batch_gain:.2}x"
+    );
     eprintln!("ok");
 }

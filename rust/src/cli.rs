@@ -5,6 +5,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::quant::Method;
+
 /// Parsed command line: `amq <subcommand> [--key value]...`.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
@@ -67,6 +69,16 @@ impl Cli {
         self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Parse a quantization-method flag via [`Method`]'s `FromStr`
+    /// (`uniform|balanced|greedy|refined|alternating[:cycles]|ternary`) —
+    /// the one consistent spelling for every ablation surface.
+    pub fn get_method(&self, key: &str, default: Method) -> Result<Method> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.options.contains_key(key)
     }
@@ -102,6 +114,23 @@ mod tests {
         let c = Cli::parse(args("bench")).unwrap();
         assert_eq!(c.get_usize("steps", 42).unwrap(), 42);
         assert_eq!(c.get_str("out", "x"), "x");
+    }
+
+    #[test]
+    fn method_flag() {
+        let c = Cli::parse(args("quantize --method refined")).unwrap();
+        assert_eq!(c.get_method("method", Method::Ternary).unwrap(), Method::Refined);
+        let c = Cli::parse(args("quantize --method alternating:4")).unwrap();
+        assert_eq!(
+            c.get_method("method", Method::Ternary).unwrap(),
+            Method::Alternating { t: 4 }
+        );
+        let c = Cli::parse(args("quantize")).unwrap();
+        assert_eq!(c.get_method("method", Method::Greedy).unwrap(), Method::Greedy);
+        assert!(Cli::parse(args("quantize --method wat"))
+            .unwrap()
+            .get_method("method", Method::Greedy)
+            .is_err());
     }
 
     #[test]

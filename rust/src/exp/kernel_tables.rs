@@ -35,7 +35,7 @@ pub fn table6(shapes: &[(usize, usize)], samples: usize) -> Vec<Table6Row> {
         let fp_ms = fp.median_ms();
         rows.push(Table6Row { m, n, bits: None, total_ms: fp_ms, quant_ms: 0.0, accel: 1.0 });
         for k in [2usize, 3] {
-            let wq = binary::PreparedGemv::new(&RowQuantized::quantize(
+            let wq = binary::PreparedGemm::new(&RowQuantized::quantize(
                 &w,
                 m,
                 n,
@@ -84,6 +84,90 @@ pub fn render_table6(rows: &[Table6Row]) -> String {
     s
 }
 
+/// One row of the batched-GEMM sweep: `B` activation vectors served by one
+/// sweep over the packed weight planes ([`binary::PreparedGemm::gemm`],
+/// Fig. 3 right), online quantization included.
+#[derive(Clone, Debug)]
+pub struct BatchSweepRow {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    /// Median wall time of one batched online GEMM.
+    pub total_ms: f64,
+    /// Activation vectors completed per second (`batch / total`).
+    pub vecs_per_sec: f64,
+}
+
+/// Sweep the batched XNOR/popcount GEMM over batch sizes — the measurement
+/// behind the batch-first serving API: per-vector cost must fall as `B`
+/// grows because the weight planes are streamed once per batch.
+pub fn gemm_batch_sweep(
+    shapes: &[(usize, usize)],
+    batches: &[usize],
+    k: usize,
+    samples: usize,
+) -> Vec<BatchSweepRow> {
+    let mut rows = Vec::new();
+    for &(m, n) in shapes {
+        let mut rng = Rng::new(0xFACE + m as u64);
+        let w = rng.normal_vec(m * n, 0.05);
+        let prep = binary::PreparedGemm::new(&RowQuantized::quantize(
+            &w,
+            m,
+            n,
+            k,
+            Method::Alternating { t: 2 },
+        ));
+        for &b in batches {
+            let x = rng.normal_vec(b * n, 0.5);
+            let mut y = vec![0.0f32; b * m];
+            let r = bench_fn(&format!("gemm {m}x{n} k={k} b={b}"), samples, || {
+                prep.online_gemm(&x, b, k, &mut y);
+                black_box(&y);
+            });
+            let total_ms = r.median_ms();
+            rows.push(BatchSweepRow {
+                m,
+                n,
+                k,
+                batch: b,
+                total_ms,
+                vecs_per_sec: b as f64 / (total_ms / 1e3),
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_batch_sweep(rows: &[BatchSweepRow]) -> String {
+    let mut s = String::from(
+        "Batched binary GEMM sweep (one weight-plane sweep per batch)\n\
+         Weight Size      W/A bits  Batch   Total(ms)     vec/s   ms/vec   vs B=1\n",
+    );
+    for r in rows {
+        let base = rows
+            .iter()
+            .find(|q| q.m == r.m && q.n == r.n && q.k == r.k && q.batch == 1)
+            .map(|q| q.total_ms)
+            .unwrap_or(r.total_ms / r.batch as f64);
+        let speedup = (base * r.batch as f64) / r.total_ms;
+        s.push_str(&format!(
+            "{:>7}x{:<7}  {:>5}/{:<2}  {:>5}   {:>9.3}  {:>8.0}  {:>7.4}  {:>6.2}x\n",
+            r.m,
+            r.n,
+            r.k,
+            r.k,
+            r.batch,
+            r.total_ms,
+            r.vecs_per_sec,
+            r.total_ms / r.batch as f64,
+            speedup
+        ));
+    }
+    s
+}
+
 /// The §4 cost-model table: theoretical γ vs measured acceleration.
 pub fn costmodel(shapes: &[(usize, usize)], measured: &[Table6Row]) -> String {
     let mut s = String::from("Cost model (§4): theoretical gamma vs measured acceleration\n");
@@ -122,6 +206,15 @@ mod tests {
         assert!(k2.accel > 1.0, "accel {:.2}", k2.accel);
         // Quant share must be well below total (paper: 2-20%).
         assert!(k2.quant_ms < k2.total_ms, "{rows:?}");
+    }
+
+    #[test]
+    fn batch_sweep_runs_and_renders() {
+        let rows = gemm_batch_sweep(&[(128, 256)], &[1, 4], 2, 3);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.vecs_per_sec > 0.0));
+        let s = render_batch_sweep(&rows);
+        assert!(s.contains("vs B=1"), "{s}");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! Activations are quantized **online** with the alternating method
 //! (`T = 2`) — its cost is the "Quant" column of Table 6.
 
-use crate::quant::{alternating, Method, PackedBits, Quantized, RowQuantized};
+use crate::quant::{alternating, Method, PackedBits, Quantized, QuantizedBatch, RowQuantized};
 
 /// Quantize an activation vector online (paper setting: alternating, T=2).
 pub fn quantize_activations(x: &[f32], k: usize) -> Quantized {
@@ -69,8 +69,13 @@ pub fn quantized_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
 /// contiguous buffer, layout `[row][plane][word]`, so a row's entire k·words
 /// working set streams sequentially from memory (Perf iteration 2 — the
 /// per-plane `Vec`s of `RowQuantized` scatter across the heap).
+///
+/// The same layout serves the single-vector path ([`Self::gemv`]) and the
+/// batched path ([`Self::gemm`], Fig. 3 right): the batched kernel sweeps
+/// each packed weight row **once per batch**, amortizing the DRAM traffic
+/// of the weight planes over all `B` activation columns.
 #[derive(Clone, Debug)]
-pub struct PreparedGemv {
+pub struct PreparedGemm {
     pub rows: usize,
     pub cols: usize,
     pub k: usize,
@@ -79,14 +84,23 @@ pub struct PreparedGemv {
     alphas: Vec<f32>, // rows * k
 }
 
-impl PreparedGemv {
+/// Historical name of [`PreparedGemm`] from the single-vector era; the
+/// B=1 entry points (`gemv`, `online_gemv`) still exist on the new type.
+pub type PreparedGemv = PreparedGemm;
+
+/// Batch-block width of the batched kernel: columns processed together per
+/// weight-word load. 4 keeps the k_w·k_x·BB popcount counters in registers
+/// at the paper's bit widths.
+const GEMM_BLOCK: usize = 4;
+
+impl PreparedGemm {
     pub fn new(w: &RowQuantized) -> Self {
         let wpp = w.cols.div_ceil(64);
         let mut data = Vec::with_capacity(w.rows * w.k * wpp);
         for plane in &w.planes {
             data.extend_from_slice(plane.words());
         }
-        PreparedGemv {
+        PreparedGemm {
             rows: w.rows,
             cols: w.cols,
             k: w.k,
@@ -206,6 +220,124 @@ impl PreparedGemv {
     /// Packed footprint in bytes (planes + coefficients).
     pub fn bytes(&self) -> usize {
         self.data.len() * 8 + self.alphas.len() * 4
+    }
+
+    /// Batched XNOR/popcount GEMM: `Y[b] = Ŵ x̂[b]` for every column of the
+    /// batch, `y` row-major `batch × rows`.
+    ///
+    /// All batch blocks of a weight row complete before the next row is
+    /// touched, so the packed weight planes stream from memory **once per
+    /// batch** — the concatenated layout of Fig. 3 (right). Each output is
+    /// reduced in exactly the order of [`Self::gemv`], so `gemm` bit-matches
+    /// `gemv` column by column.
+    pub fn gemm(&self, x: &QuantizedBatch, y: &mut [f32]) {
+        assert_eq!(self.cols, x.n, "inner dimension mismatch");
+        assert_eq!(y.len(), x.batch * self.rows, "output batch shape mismatch");
+        let (kw, kx) = (self.k, x.k);
+        assert!(kw <= MAX_K && kx <= MAX_K, "bit width beyond MAX_K");
+        match (kw, kx) {
+            (1, 1) => self.gemm_const::<1, 1>(x, y),
+            (2, 2) => self.gemm_const::<2, 2>(x, y),
+            (2, 3) => self.gemm_const::<2, 3>(x, y),
+            (3, 2) => self.gemm_const::<3, 2>(x, y),
+            (3, 3) => self.gemm_const::<3, 3>(x, y),
+            (4, 4) => self.gemm_const::<4, 4>(x, y),
+            _ => self.gemm_generic(x, y),
+        }
+    }
+
+    fn gemm_const<const KW: usize, const KX: usize>(&self, x: &QuantizedBatch, y: &mut [f32]) {
+        let n = self.cols as i32;
+        let wpp = self.words_per_plane;
+        let row_words = KW * wpp;
+        for r in 0..self.rows {
+            let row = &self.data[r * row_words..(r + 1) * row_words];
+            let mut b0 = 0;
+            while b0 < x.batch {
+                let bb = GEMM_BLOCK.min(x.batch - b0);
+                // Per-column plane slices; tail entries beyond `bb` alias
+                // column b0 and are never read.
+                let xw: [[&[u64]; KX]; GEMM_BLOCK] = std::array::from_fn(|j| {
+                    let b = b0 + if j < bb { j } else { 0 };
+                    std::array::from_fn(|s| x.plane_words(b, s))
+                });
+                let mut counts = [[[0u32; KX]; KW]; GEMM_BLOCK];
+                for i in 0..wpp {
+                    for t in 0..KW {
+                        // One load of the weight word serves every column of
+                        // the block; the bb·k_x XOR+POPCNT chains pipeline.
+                        let ww = row[t * wpp + i];
+                        for (j, cj) in counts.iter_mut().enumerate().take(bb) {
+                            for s in 0..KX {
+                                cj[t][s] += (ww ^ xw[j][s][i]).count_ones();
+                            }
+                        }
+                    }
+                }
+                for (j, cj) in counts.iter().enumerate().take(bb) {
+                    let b = b0 + j;
+                    let mut acc = 0.0f32;
+                    for (t, row_c) in cj.iter().enumerate() {
+                        let mut inner = 0.0f32;
+                        for (s, &c) in row_c.iter().enumerate() {
+                            inner += x.alpha(b, s) * (n - 2 * c as i32) as f32;
+                        }
+                        acc += self.alphas[r * KW + t] * inner;
+                    }
+                    y[b * self.rows + r] = acc;
+                }
+                b0 += bb;
+            }
+        }
+    }
+
+    fn gemm_generic(&self, x: &QuantizedBatch, y: &mut [f32]) {
+        let (kw, kx) = (self.k, x.k);
+        let n = self.cols as i32;
+        let wpp = self.words_per_plane;
+        let row_words = kw * wpp;
+        for r in 0..self.rows {
+            let row = &self.data[r * row_words..(r + 1) * row_words];
+            let mut b0 = 0;
+            while b0 < x.batch {
+                let bb = GEMM_BLOCK.min(x.batch - b0);
+                let xw: [[&[u64]; MAX_K]; GEMM_BLOCK] = std::array::from_fn(|j| {
+                    let b = b0 + if j < bb { j } else { 0 };
+                    std::array::from_fn(|s| if s < kx { x.plane_words(b, s) } else { &[] })
+                });
+                let mut counts = [[[0u32; MAX_K]; MAX_K]; GEMM_BLOCK];
+                for i in 0..wpp {
+                    for t in 0..kw {
+                        let ww = row[t * wpp + i];
+                        for (j, cj) in counts.iter_mut().enumerate().take(bb) {
+                            for (s, c) in cj[t].iter_mut().enumerate().take(kx) {
+                                *c += (ww ^ xw[j][s][i]).count_ones();
+                            }
+                        }
+                    }
+                }
+                for (j, cj) in counts.iter().enumerate().take(bb) {
+                    let b = b0 + j;
+                    let mut acc = 0.0f32;
+                    for (t, row_c) in cj.iter().enumerate().take(kw) {
+                        let mut inner = 0.0f32;
+                        for (s, &c) in row_c.iter().enumerate().take(kx) {
+                            inner += x.alpha(b, s) * (n - 2 * c as i32) as f32;
+                        }
+                        acc += self.alphas[r * kw + t] * inner;
+                    }
+                    y[b * self.rows + r] = acc;
+                }
+                b0 += bb;
+            }
+        }
+    }
+
+    /// Quantize a row-major `batch × cols` activation matrix online, then
+    /// run the batched GEMM (full request path for a timestep batch).
+    pub fn online_gemm(&self, x: &[f32], batch: usize, k_x: usize, y: &mut [f32]) {
+        let xq = QuantizedBatch::quantize(x, batch, self.cols, k_x);
+        self.gemm(&xq, y);
     }
 }
 
@@ -361,7 +493,7 @@ mod tests {
         for (m, n, kw, kx) in [(17, 100, 2, 2), (8, 64, 3, 2), (5, 300, 4, 4)] {
             let w = rng.normal_vec(m * n, 0.3);
             let wq = RowQuantized::quantize(&w, m, n, kw, Method::Alternating { t: 2 });
-            let prep = PreparedGemv::new(&wq);
+            let prep = PreparedGemm::new(&wq);
             let xq = quantize_activations(&rng.normal_vec(n, 1.0), kx);
             let mut y1 = vec![0.0; m];
             let mut y2 = vec![0.0; m];
@@ -389,6 +521,60 @@ mod tests {
             quantized_gemv(&wq, xq, &mut yb);
             assert_eq!(&y[b * m..(b + 1) * m], &yb[..]);
         }
+    }
+
+    #[test]
+    fn gemm_bitmatches_gemv_per_column() {
+        // The batched kernel must be EXACT against the single-vector kernel
+        // for every column — same counts, same reduction order.
+        let mut rng = Rng::new(104);
+        for (kw, kx) in [(1, 1), (1, 2), (2, 2), (2, 3), (3, 2), (3, 3), (4, 4)] {
+            for batch in [1usize, 2, 3, 4, 5, 9] {
+                let (m, n) = (13, 130);
+                let w = rng.normal_vec(m * n, 0.3);
+                let wq = RowQuantized::quantize(&w, m, n, kw, Method::Alternating { t: 2 });
+                let prep = PreparedGemm::new(&wq);
+                let x = rng.normal_vec(batch * n, 1.0);
+                let xq = QuantizedBatch::quantize(&x, batch, n, kx);
+                let mut y = vec![0.0f32; batch * m];
+                prep.gemm(&xq, &mut y);
+                for b in 0..batch {
+                    let mut yb = vec![0.0f32; m];
+                    prep.gemv(&xq.column(b), &mut yb);
+                    assert_eq!(
+                        &y[b * m..(b + 1) * m],
+                        &yb[..],
+                        "kw={kw} kx={kx} batch={batch} col={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn online_gemm_matches_online_gemv_per_column() {
+        let mut rng = Rng::new(105);
+        let (m, n, batch, k) = (11, 96, 6, 2);
+        let w = rng.normal_vec(m * n, 0.2);
+        let prep = PreparedGemm::new(&RowQuantized::quantize(&w, m, n, k, Method::Alternating { t: 2 }));
+        let x = rng.normal_vec(batch * n, 1.0);
+        let mut y = vec![0.0f32; batch * m];
+        prep.online_gemm(&x, batch, k, &mut y);
+        for b in 0..batch {
+            let mut yb = vec![0.0f32; m];
+            prep.online_gemv(&x[b * n..(b + 1) * n], k, &mut yb);
+            assert_eq!(&y[b * m..(b + 1) * m], &yb[..], "col {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "output batch shape mismatch")]
+    fn gemm_shape_mismatch_panics() {
+        let w = RowQuantized::quantize(&[0.0; 12], 3, 4, 2, Method::Greedy);
+        let prep = PreparedGemm::new(&w);
+        let xq = QuantizedBatch::quantize(&[0.0; 8], 2, 4, 2);
+        let mut y = vec![0.0; 3]; // needs 2*3
+        prep.gemm(&xq, &mut y);
     }
 
     #[test]

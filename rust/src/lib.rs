@@ -20,6 +20,14 @@
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graphs once and the `amq` binary is self-contained afterwards.
 //!
+//! The inference API is **batch-first**: activations move through the model
+//! as [`model::ActivationBatch`] (B vectors quantized once per batch into
+//! shared bit-planes), every layer implements [`model::LinearOp`], and the
+//! batched XNOR/popcount GEMM ([`kernels::binary::PreparedGemm`]) sweeps
+//! each packed weight plane once per batch — the serving win of Fig. 3
+//! (right). Single-vector entry points (`matvec`, `step`) remain as exact
+//! `B = 1` paths for the trainer and simple callers.
+//!
 //! ## Quick tour
 //!
 //! ```
@@ -30,6 +38,26 @@
 //! let q = alternating::quantize(&w, 2, 2);
 //! let err = amq::quant::relative_mse(&w, &q.dequantize());
 //! assert!(err < 0.2); // Table 1 reports ~0.125 on trained LSTM weights
+//! ```
+//!
+//! Batched quantized inference — the serving hot path:
+//!
+//! ```
+//! use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+//!
+//! let lm = RnnLm::random(
+//!     LmConfig { kind: RnnKind::Lstm, vocab: 64, hidden: 32, layers: 1 },
+//!     7,
+//!     PrecisionPolicy::quantized(2, 2),
+//! );
+//! // Four sessions advance one token each in ONE pass over the weights.
+//! let mut state = lm.zero_state_batch(4);
+//! let logits = lm.step_batch(&[1, 9, 17, 33], &mut state);
+//! assert_eq!(logits.batch(), 4);
+//! assert_eq!(logits.dim(), 64);
+//! // Bit-exact vs the per-session path:
+//! let mut s1 = lm.zero_state();
+//! assert_eq!(logits.row(0), &lm.step(1, &mut s1)[..]);
 //! ```
 
 pub mod cli;

@@ -4,7 +4,7 @@
 //! ```text
 //! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 ..]
 //! amq train    --tag lstm_fp [--dataset ptb|wt2|text8] [--epochs N] ...
-//! amq quantize --bits 2 [--method alternating] [--checkpoint f.amqt]
+//! amq quantize --bits 2 [--method alternating[:cycles]] [--checkpoint f.amqt]
 //! amq bench    table1|table2|table3|table4|table5|table6|table7|table8|table9|costmodel
 //! amq stats    --addr host:port          (query a running server)
 //! ```
@@ -186,15 +186,11 @@ fn cmd_train(cli: &Cli) -> Result<()> {
 
 fn cmd_quantize(cli: &Cli) -> Result<()> {
     let bits = cli.get_usize("bits", 2)?;
-    let method = match cli.get_str("method", "alternating").as_str() {
-        "uniform" => Method::Uniform,
-        "balanced" => Method::Balanced,
-        "greedy" => Method::Greedy,
-        "refined" => Method::Refined,
-        "alternating" => Method::Alternating { t: cli.get_usize("cycles", 2)? },
-        "ternary" => Method::Ternary,
-        other => bail!("unknown method '{other}'"),
-    };
+    // `--method alternating:3` style; `--cycles N` remains as an override.
+    let mut method = cli.get_method("method", Method::Alternating { t: 2 })?;
+    if let Method::Alternating { ref mut t } = method {
+        *t = cli.get_usize("cycles", *t)?;
+    }
     match cli.get("checkpoint") {
         Some(path) => {
             let ckpt = amq::data::checkpoint::Checkpoint::load(std::path::Path::new(path))?;
@@ -222,7 +218,7 @@ fn cmd_quantize(cli: &Cli) -> Result<()> {
             println!(
                 "{}-bit {} on laplace 1024x512: rel-MSE {:.5}, memory saving {:.1}x",
                 bits,
-                method.name(),
+                method,
                 q.relative_mse(&w),
                 q.compression()
             );

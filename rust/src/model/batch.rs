@@ -1,0 +1,177 @@
+//! Batch-first activation containers — the currency of the inference API.
+//!
+//! An [`ActivationBatch`] is `B` row-major activation vectors moving through
+//! the model together; an [`OutputBatch`] is the matching result buffer of a
+//! batched linear layer. Quantized backends call
+//! [`ActivationBatch::quantize`] **once per batch** to produce the shared
+//! bit-plane layout ([`QuantizedBatch`]) that the XNOR/popcount GEMM streams
+//! against each packed weight plane in a single sweep (Fig. 3 right).
+//!
+//! The legacy per-vector entry points (`Linear::matvec`, `LstmCell::step`,
+//! …) remain as dedicated `B = 1` implementations that share their scalar
+//! math and quantizers with the batched path; exact batch-vs-single parity
+//! is pinned by tests at every layer (`rust/tests/batch_parity.rs`). The
+//! [`ActivationBatch::single`] constructor adapts a lone vector when a
+//! caller wants the batched API directly.
+
+use crate::quant::{Method, QuantizedBatch};
+
+/// `B` activation vectors of dimension `n`, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActivationBatch {
+    batch: usize,
+    n: usize,
+    data: Vec<f32>, // batch * n
+}
+
+impl ActivationBatch {
+    /// All-zero batch (recurrent state cold start).
+    pub fn zeros(batch: usize, n: usize) -> Self {
+        ActivationBatch { batch, n, data: vec![0.0; batch * n] }
+    }
+
+    /// Wrap an existing row-major `batch × n` buffer.
+    pub fn from_flat(data: Vec<f32>, batch: usize, n: usize) -> Self {
+        assert_eq!(data.len(), batch * n, "batch shape mismatch");
+        ActivationBatch { batch, n, data }
+    }
+
+    /// Gather rows (e.g. per-session hidden states) into one batch.
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        assert!(!rows.is_empty(), "empty batch");
+        let n = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * n);
+        for r in rows {
+            assert_eq!(r.len(), n, "row dimension mismatch");
+            data.extend_from_slice(r);
+        }
+        ActivationBatch { batch: rows.len(), n, data }
+    }
+
+    /// A `B = 1` batch holding one vector (the legacy-path wrapper).
+    pub fn single(x: &[f32]) -> Self {
+        ActivationBatch { batch: 1, n: x.len(), data: x.to_vec() }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
+        &mut self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Quantize the whole batch in one step (per-row alternating codes in
+    /// shared contiguous planes — the "quantized once per batch" of the
+    /// serving path).
+    pub fn quantize(&self, k: usize) -> QuantizedBatch {
+        QuantizedBatch::quantize(&self.data, self.batch, self.n, k)
+    }
+
+    /// Quantize with an explicit method (ablations).
+    pub fn quantize_with(&self, k: usize, method: Method) -> QuantizedBatch {
+        QuantizedBatch::quantize_with(&self.data, self.batch, self.n, k, method)
+    }
+}
+
+/// Result buffer of a batched linear layer: `B` rows of `dim` outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutputBatch {
+    batch: usize,
+    dim: usize,
+    data: Vec<f32>, // batch * dim
+}
+
+impl OutputBatch {
+    pub fn zeros(batch: usize, dim: usize) -> Self {
+        OutputBatch { batch, dim, data: vec![0.0; batch * dim] }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.data[b * self.dim..(b + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
+        &mut self.data[b * self.dim..(b + 1) * self.dim]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Raw mutable buffer (kernel output target).
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Reinterpret as the next layer's input without copying.
+    pub fn into_activations(self) -> ActivationBatch {
+        ActivationBatch { batch: self.batch, n: self.dim, data: self.data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_flat_agree() {
+        let a = ActivationBatch::from_flat(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(a.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.row(1), &[4.0, 5.0, 6.0]);
+        let b = ActivationBatch::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a, b);
+        assert_eq!(ActivationBatch::single(&[7.0, 8.0]).row(0), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn batch_quantize_matches_single_rows() {
+        let a = ActivationBatch::from_rows(&[&[0.5, -1.0, 0.25], &[1.5, 0.0, -0.75]]);
+        let qb = a.quantize(2);
+        for b in 0..2 {
+            let single = ActivationBatch::single(a.row(b)).quantize(2);
+            assert_eq!(qb.column(b).alphas, single.column(0).alphas);
+            assert_eq!(qb.column(b).planes, single.column(0).planes);
+        }
+    }
+
+    #[test]
+    fn output_into_activations_is_zero_copy_shapewise() {
+        let mut o = OutputBatch::zeros(2, 4);
+        o.row_mut(1)[2] = 9.0;
+        let a = o.into_activations();
+        assert_eq!(a.batch(), 2);
+        assert_eq!(a.dim(), 4);
+        assert_eq!(a.row(1)[2], 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "row dimension mismatch")]
+    fn ragged_rows_panic() {
+        ActivationBatch::from_rows(&[&[1.0, 2.0], &[1.0]]);
+    }
+}

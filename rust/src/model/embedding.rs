@@ -5,7 +5,8 @@
 //! multi-bit form, so it feeds the quantized gate products with **no online
 //! quantization cost**.
 
-use crate::quant::{Method, Quantized, RowQuantized};
+use super::batch::ActivationBatch;
+use crate::quant::{Method, Quantized, QuantizedBatch, RowQuantized};
 
 /// Embedding lookup result: dense, or a ready-made multi-bit activation.
 pub enum Embedded {
@@ -20,6 +21,14 @@ impl Embedded {
             Embedded::Quant(q) => q.dequantize(),
         }
     }
+}
+
+/// Batched lookup result: a dense activation batch, or the looked-up rows
+/// repacked as a [`QuantizedBatch`] that feeds the gate products with zero
+/// online quantization cost (§4).
+pub enum EmbeddedBatch {
+    Dense(ActivationBatch),
+    Quant(QuantizedBatch),
 }
 
 /// `vocab × dim` embedding table.
@@ -71,6 +80,30 @@ impl Embedding {
         }
     }
 
+    /// Row lookup for a whole token batch. Quantized tables hand back the
+    /// packed rows directly (bit-identical to per-token [`Self::lookup`]).
+    pub fn lookup_batch(&self, ids: &[usize]) -> EmbeddedBatch {
+        assert!(!ids.is_empty(), "empty token batch");
+        match self {
+            Embedding::Dense { w, dim, vocab } => {
+                let rows: Vec<&[f32]> = ids
+                    .iter()
+                    .map(|&id| {
+                        assert!(id < *vocab, "token {id} out of vocab {vocab}");
+                        &w[id * dim..(id + 1) * dim]
+                    })
+                    .collect();
+                EmbeddedBatch::Dense(ActivationBatch::from_rows(&rows))
+            }
+            Embedding::Quant { w } => {
+                for &id in ids {
+                    assert!(id < w.rows, "token {id} out of vocab {}", w.rows);
+                }
+                EmbeddedBatch::Quant(QuantizedBatch::gather_rows(w, ids))
+            }
+        }
+    }
+
     pub fn bytes(&self) -> usize {
         match self {
             Embedding::Dense { w, .. } => w.len() * 4,
@@ -100,6 +133,40 @@ mod tests {
         let rq = RowQuantized::quantize(&w, v, d, 2, Method::Alternating { t: 2 });
         for id in 0..v {
             assert_eq!(e.lookup(id).to_dense(), rq.row(id).dequantize());
+        }
+    }
+
+    #[test]
+    fn batch_lookup_matches_single() {
+        let mut rng = Rng::new(122);
+        let (v, d) = (12, 48);
+        let w = rng.normal_vec(v * d, 0.5);
+        let ids = [3usize, 0, 3, 11];
+        // Dense table.
+        let e = Embedding::new_dense(w.clone(), v, d);
+        match e.lookup_batch(&ids) {
+            EmbeddedBatch::Dense(a) => {
+                for (b, &id) in ids.iter().enumerate() {
+                    assert_eq!(a.row(b), &e.lookup(id).to_dense()[..]);
+                }
+            }
+            _ => panic!("dense table must return a dense batch"),
+        }
+        // Quantized table: packed rows bit-match the single lookups.
+        let eq = Embedding::new_quantized(w, v, d, 2);
+        match eq.lookup_batch(&ids) {
+            EmbeddedBatch::Quant(qb) => {
+                for (b, &id) in ids.iter().enumerate() {
+                    match eq.lookup(id) {
+                        Embedded::Quant(q) => {
+                            assert_eq!(qb.column(b).alphas, q.alphas);
+                            assert_eq!(qb.column(b).planes, q.planes);
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+            _ => panic!("quantized table must return a quantized batch"),
         }
     }
 

@@ -10,8 +10,10 @@
 //! h' = (1 − z) ⊙ ñ + z ⊙ h
 //! ```
 
-use super::linear::{Linear, Precision};
+use super::batch::{ActivationBatch, OutputBatch};
+use super::linear::{Linear, LinearOp, Precision};
 use super::math::sigmoid;
+use crate::quant::QuantizedBatch;
 use crate::util::Rng;
 
 /// One GRU layer.
@@ -76,20 +78,57 @@ impl GruCell {
         self.combine(&gx, &gh, h)
     }
 
+    /// One step for a batch of `B` sequences (the GRU's state batch is just
+    /// the hidden-row [`ActivationBatch`]). Bit-matches `B` independent
+    /// [`Self::step`] calls column by column.
+    pub fn step_batch(&self, x: &ActivationBatch, h: &ActivationBatch) -> ActivationBatch {
+        assert_eq!(x.batch(), h.batch(), "batch mismatch");
+        let h3 = 3 * self.hidden;
+        let mut gx = OutputBatch::zeros(x.batch(), h3);
+        let mut gh = OutputBatch::zeros(x.batch(), h3);
+        self.wx.forward(x, &mut gx);
+        self.wh.forward(h, &mut gh);
+        self.combine_batch(&gx, &gh, h)
+    }
+
+    /// Batched step from pre-quantized inputs.
+    pub fn step_batch_prequant(&self, xq: &QuantizedBatch, h: &ActivationBatch) -> ActivationBatch {
+        assert_eq!(xq.batch, h.batch(), "batch mismatch");
+        let h3 = 3 * self.hidden;
+        let mut gx = OutputBatch::zeros(xq.batch, h3);
+        let mut gh = OutputBatch::zeros(xq.batch, h3);
+        self.wx.forward_prequant(xq, &mut gx);
+        self.wh.forward(h, &mut gh);
+        self.combine_batch(&gx, &gh, h)
+    }
+
     fn combine(&self, gx: &[f32], gh: &[f32], h: &[f32]) -> Vec<f32> {
-        let hd = self.hidden;
-        let mut out = vec![0.0f32; hd];
-        for j in 0..hd {
-            let r = sigmoid(gx[j] + gh[j] + self.bias[j]);
-            let z = sigmoid(gx[hd + j] + gh[hd + j] + self.bias[hd + j]);
-            let n = (gx[2 * hd + j] + r * gh[2 * hd + j] + self.bias[2 * hd + j]).tanh();
-            out[j] = (1.0 - z) * n + z * h[j];
+        let mut out = vec![0.0f32; self.hidden];
+        combine_row(self.hidden, &self.bias, gx, gh, h, &mut out);
+        out
+    }
+
+    fn combine_batch(&self, gx: &OutputBatch, gh: &OutputBatch, h: &ActivationBatch) -> ActivationBatch {
+        let mut out = ActivationBatch::zeros(h.batch(), self.hidden);
+        for b in 0..h.batch() {
+            combine_row(self.hidden, &self.bias, gx.row(b), gh.row(b), h.row(b), out.row_mut(b));
         }
         out
     }
 
     pub fn bytes(&self) -> usize {
         self.wx.bytes() + self.wh.bytes() + self.bias.len() * 4
+    }
+}
+
+/// The scalar gate math of one GRU step for one sequence — shared by the
+/// single and batched paths so they are bit-identical by construction.
+fn combine_row(hd: usize, bias: &[f32], gx: &[f32], gh: &[f32], h: &[f32], out: &mut [f32]) {
+    for j in 0..hd {
+        let r = sigmoid(gx[j] + gh[j] + bias[j]);
+        let z = sigmoid(gx[hd + j] + gh[hd + j] + bias[hd + j]);
+        let n = (gx[2 * hd + j] + r * gh[2 * hd + j] + bias[2 * hd + j]).tanh();
+        out[j] = (1.0 - z) * n + z * h[j];
     }
 }
 
@@ -124,6 +163,28 @@ mod tests {
         let h2 = cell.step(&x, &h);
         for (a, b) in h.iter().zip(&h2) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn step_batch_bitmatches_step_per_column() {
+        let mut rng = Rng::new(144);
+        for precision in [Precision::Full, Precision::Quantized { k_w: 2, k_a: 2 }] {
+            let cell = GruCell::init(9, 14, 0.4, &mut rng, precision);
+            for batch in 1..=4 {
+                let hs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(14, 0.5)).collect();
+                let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(9, 1.0)).collect();
+                let hrows: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
+                let xrows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+                let next = cell.step_batch(
+                    &ActivationBatch::from_rows(&xrows),
+                    &ActivationBatch::from_rows(&hrows),
+                );
+                for b in 0..batch {
+                    let expect = cell.step(&xs[b], &hs[b]);
+                    assert_eq!(next.row(b), &expect[..], "{precision:?} batch={batch} col={b}");
+                }
+            }
         }
     }
 

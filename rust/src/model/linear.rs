@@ -1,13 +1,18 @@
-//! A linear map that can be dense f32 or multi-bit quantized.
+//! Batch-first linear layers: the [`LinearOp`] trait and its dense and
+//! quantized backends.
 //!
 //! This is the swap point that turns a full-precision model into the
-//! paper's quantized one: quantized layers run the XNOR/popcount kernel
-//! with online activation quantization (§4), dense layers run the blocked
-//! f32 GEMV.
+//! paper's quantized one. The primary entry point is the **batched**
+//! [`LinearOp::forward`]: `B` activation vectors are quantized once into
+//! shared bit-planes and multiplied in a single sweep over the packed
+//! weight planes (`kernels::binary::PreparedGemm`, Fig. 3 right). The
+//! single-vector `matvec` path remains as the `B = 1` wrapper for the
+//! trainer and legacy callers.
 
-use crate::kernels::binary::PreparedGemv;
+use super::batch::{ActivationBatch, OutputBatch};
+use crate::kernels::binary::PreparedGemm;
 use crate::kernels::{binary, dense};
-use crate::quant::{Method, Quantized, RowQuantized};
+use crate::quant::{Method, Quantized, QuantizedBatch, RowQuantized};
 
 /// Precision/bit-width policy for one linear layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -17,38 +22,134 @@ pub enum Precision {
     Quantized { k_w: usize, k_a: usize },
 }
 
-/// A (possibly quantized) linear layer `y = W x (+ b)`.
+/// A batched linear map `y_b = W x_b` for every column `b` of the batch.
+///
+/// Implementors must be **exact** across batch sizes: `forward` on a
+/// `B`-column batch bit-matches `B` independent single-column calls, so the
+/// server's dynamic batching never changes what a session sees.
+pub trait LinearOp {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+
+    /// Batched forward: `y.row(b) = W · x.row(b)`. Quantized backends
+    /// quantize `x` online, once for the whole batch.
+    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch);
+
+    /// Batched forward from pre-quantized activations (e.g. rows looked up
+    /// from a quantized embedding table — zero online quantization cost).
+    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch);
+}
+
+fn check_shapes(op: &impl LinearOp, x_batch: usize, x_dim: usize, y: &OutputBatch) {
+    assert_eq!(x_dim, op.cols(), "inner dimension mismatch");
+    assert_eq!(y.batch(), x_batch, "output batch mismatch");
+    assert_eq!(y.dim(), op.rows(), "output dimension mismatch");
+}
+
+/// Full-precision backend: blocked f32 GEMV per batch column.
+#[derive(Clone, Debug)]
+pub struct DenseLinear {
+    w: Vec<f32>, // rows × cols, row-major
+    rows: usize,
+    cols: usize,
+}
+
+impl DenseLinear {
+    pub fn new(w: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        DenseLinear { w, rows, cols }
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+}
+
+impl LinearOp for DenseLinear {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
+        check_shapes(self, x.batch(), x.dim(), y);
+        for b in 0..x.batch() {
+            dense::gemv(&self.w, self.rows, self.cols, x.row(b), y.row_mut(b));
+        }
+    }
+
+    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
+        check_shapes(self, x.batch, x.n, y);
+        for b in 0..x.batch {
+            let xd = x.column(b).dequantize();
+            dense::gemv(&self.w, self.rows, self.cols, &xd, y.row_mut(b));
+        }
+    }
+}
+
+/// Quantized backend: multi-bit weight planes + online multi-bit
+/// activations through the batched XNOR/popcount GEMM.
+#[derive(Clone, Debug)]
+pub struct QuantLinear {
+    w: PreparedGemm,
+    /// Activation bit width for the online quantization step.
+    k_a: usize,
+}
+
+impl QuantLinear {
+    pub fn new(w: Vec<f32>, rows: usize, cols: usize, k_w: usize, k_a: usize, method: Method) -> Self {
+        QuantLinear { w: PreparedGemm::new(&RowQuantized::quantize(&w, rows, cols, k_w, method)), k_a }
+    }
+
+    pub fn k_a(&self) -> usize {
+        self.k_a
+    }
+
+    pub fn prepared(&self) -> &PreparedGemm {
+        &self.w
+    }
+}
+
+impl LinearOp for QuantLinear {
+    fn rows(&self) -> usize {
+        self.w.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.w.cols
+    }
+
+    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
+        check_shapes(self, x.batch(), x.dim(), y);
+        let xq = x.quantize(self.k_a);
+        self.w.gemm(&xq, y.data_mut());
+    }
+
+    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
+        check_shapes(self, x.batch, x.n, y);
+        self.w.gemm(x, y.data_mut());
+    }
+}
+
+/// A (possibly quantized) linear layer `y = W x (+ b)` — the policy-driven
+/// wrapper the model layer composes.
 #[derive(Clone, Debug)]
 pub enum Linear {
-    Dense {
-        w: Vec<f32>,
-        rows: usize,
-        cols: usize,
-    },
-    Quant {
-        /// Contiguous serving-path layout (Perf iteration 2).
-        w: PreparedGemv,
-        /// Activation bit width for the online quantization step.
-        k_a: usize,
-    },
+    Dense(DenseLinear),
+    Quant(QuantLinear),
 }
 
 impl Linear {
     /// Build from a dense row-major matrix under the given policy.
     pub fn new(w: Vec<f32>, rows: usize, cols: usize, precision: Precision) -> Self {
-        assert_eq!(w.len(), rows * cols);
         match precision {
-            Precision::Full => Linear::Dense { w, rows, cols },
-            Precision::Quantized { k_w, k_a } => Linear::Quant {
-                w: PreparedGemv::new(&RowQuantized::quantize(
-                    &w,
-                    rows,
-                    cols,
-                    k_w,
-                    Method::Alternating { t: 2 },
-                )),
-                k_a,
-            },
+            Precision::Full => Linear::Dense(DenseLinear::new(w, rows, cols)),
+            Precision::Quantized { k_w, k_a } => {
+                Linear::Quant(QuantLinear::new(w, rows, cols, k_w, k_a, Method::Alternating { t: 2 }))
+            }
         }
     }
 
@@ -61,41 +162,41 @@ impl Linear {
         k_a: usize,
         method: Method,
     ) -> Self {
-        Linear::Quant { w: PreparedGemv::new(&RowQuantized::quantize(&w, rows, cols, k_w, method)), k_a }
+        Linear::Quant(QuantLinear::new(w, rows, cols, k_w, k_a, method))
+    }
+
+    fn op(&self) -> &dyn LinearOp {
+        match self {
+            Linear::Dense(d) => d,
+            Linear::Quant(q) => q,
+        }
     }
 
     pub fn rows(&self) -> usize {
-        match self {
-            Linear::Dense { rows, .. } => *rows,
-            Linear::Quant { w, .. } => w.rows,
-        }
+        self.op().rows()
     }
 
     pub fn cols(&self) -> usize {
-        match self {
-            Linear::Dense { cols, .. } => *cols,
-            Linear::Quant { w, .. } => w.cols,
-        }
+        self.op().cols()
     }
 
-    /// `y = W x`. For quantized layers this quantizes `x` online first.
+    /// `y = W x` for one vector (B = 1 wrapper; the trainer's path). For
+    /// quantized layers this quantizes `x` online first.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         match self {
-            Linear::Dense { w, rows, cols } => dense::gemv(w, *rows, *cols, x, y),
-            Linear::Quant { w, k_a } => w.online_gemv(x, *k_a, y),
+            Linear::Dense(d) => dense::gemv(&d.w, d.rows, d.cols, x, y),
+            Linear::Quant(q) => q.w.online_gemv(x, q.k_a, y),
         }
     }
 
-    /// `y = W x̂` with a pre-quantized activation (used when the activation
-    /// is shared across several layers, e.g. `h_{t-1}` feeding all gates, or
-    /// comes straight out of a quantized embedding row).
+    /// `y = W x̂` with a pre-quantized activation (B = 1 wrapper).
     pub fn matvec_prequant(&self, xq: &Quantized, y: &mut [f32]) {
         match self {
-            Linear::Dense { w, rows, cols } => {
+            Linear::Dense(d) => {
                 let xd = xq.dequantize();
-                dense::gemv(w, *rows, *cols, &xd, y)
+                dense::gemv(&d.w, d.rows, d.cols, &xd, y)
             }
-            Linear::Quant { w, .. } => w.gemv(xq, y),
+            Linear::Quant(q) => q.w.gemv(xq, y),
         }
     }
 
@@ -103,25 +204,43 @@ impl Linear {
     /// wrapper returning `None` for dense layers).
     pub fn quantize_input(&self, x: &[f32]) -> Option<Quantized> {
         match self {
-            Linear::Dense { .. } => None,
-            Linear::Quant { k_a, .. } => Some(binary::quantize_activations(x, *k_a)),
+            Linear::Dense(_) => None,
+            Linear::Quant(q) => Some(binary::quantize_activations(x, q.k_a)),
         }
     }
 
     /// Bytes of weight storage.
     pub fn bytes(&self) -> usize {
         match self {
-            Linear::Dense { w, .. } => w.len() * 4,
-            Linear::Quant { w, .. } => w.bytes(),
+            Linear::Dense(d) => d.w.len() * 4,
+            Linear::Quant(q) => q.w.bytes(),
         }
     }
 
     /// A dense snapshot (dequantized for quantized layers).
     pub fn to_dense(&self) -> Vec<f32> {
         match self {
-            Linear::Dense { w, .. } => w.clone(),
-            Linear::Quant { w, .. } => w.dequantize(),
+            Linear::Dense(d) => d.w.clone(),
+            Linear::Quant(q) => q.w.dequantize(),
         }
+    }
+}
+
+impl LinearOp for Linear {
+    fn rows(&self) -> usize {
+        self.op().rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.op().cols()
+    }
+
+    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
+        self.op().forward(x, y)
+    }
+
+    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
+        self.op().forward_prequant(x, y)
     }
 }
 
@@ -164,6 +283,51 @@ mod tests {
         q.matvec(&x, &mut y1);
         q.matvec_prequant(&xq, &mut y2);
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn forward_bitmatches_matvec_per_column() {
+        // The contract of LinearOp: batching never changes values.
+        let mut rng = Rng::new(113);
+        let (m, n) = (24, 80);
+        let wv = rng.normal_vec(m * n, 0.3);
+        for layer in [
+            Linear::new(wv.clone(), m, n, Precision::Full),
+            Linear::new(wv.clone(), m, n, Precision::Quantized { k_w: 2, k_a: 2 }),
+            Linear::new(wv.clone(), m, n, Precision::Quantized { k_w: 3, k_a: 2 }),
+        ] {
+            for batch in 1..=4 {
+                let x = rng.normal_vec(batch * n, 1.0);
+                let xb = ActivationBatch::from_flat(x.clone(), batch, n);
+                let mut y = OutputBatch::zeros(batch, m);
+                layer.forward(&xb, &mut y);
+                for b in 0..batch {
+                    let mut yb = vec![0.0; m];
+                    layer.matvec(&x[b * n..(b + 1) * n], &mut yb);
+                    assert_eq!(y.row(b), &yb[..], "batch={batch} col={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_prequant_bitmatches_matvec_prequant() {
+        let mut rng = Rng::new(114);
+        let (m, n, batch) = (12, 48, 3);
+        for layer in [
+            Linear::new(rng.normal_vec(m * n, 0.3), m, n, Precision::Quantized { k_w: 2, k_a: 2 }),
+            Linear::new(rng.normal_vec(m * n, 0.3), m, n, Precision::Full),
+        ] {
+            let x = rng.normal_vec(batch * n, 1.0);
+            let xq = QuantizedBatch::quantize(&x, batch, n, 2);
+            let mut y = OutputBatch::zeros(batch, m);
+            layer.forward_prequant(&xq, &mut y);
+            for b in 0..batch {
+                let mut yb = vec![0.0; m];
+                layer.matvec_prequant(&xq.column(b), &mut yb);
+                assert_eq!(y.row(b), &yb[..], "col {b}");
+            }
+        }
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //! (Tables 1–5): quantize a trained checkpoint's matrices and measure
 //! perplexity-per-word on a held-out stream.
 
-use super::embedding::{Embedded, Embedding};
+use super::batch::{ActivationBatch, OutputBatch};
+use super::embedding::{Embedded, EmbeddedBatch, Embedding};
 use super::gru::GruCell;
-use super::linear::{Linear, Precision};
-use super::lstm::{LstmCell, LstmState};
+use super::linear::{Linear, LinearOp, Precision};
+use super::lstm::{LstmCell, LstmState, LstmStateBatch};
 use super::math::log_softmax_at;
+use crate::quant::QuantizedBatch;
 use crate::util::Rng;
 
 /// Which recurrent cell to use.
@@ -93,6 +95,26 @@ enum Cell {
 pub enum LmState {
     Lstm(Vec<LstmState>),
     Gru(Vec<Vec<f32>>),
+}
+
+/// Recurrent state for a batch of `B` independent sessions, one entry per
+/// layer. Built from per-session [`LmState`]s at the batching boundary
+/// ([`RnnLm::gather_states`]) and split back after the batched step
+/// ([`RnnLm::scatter_states`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LmStateBatch {
+    Lstm(Vec<LstmStateBatch>),
+    Gru(Vec<ActivationBatch>),
+}
+
+impl LmStateBatch {
+    /// Number of sessions in the batch.
+    pub fn batch(&self) -> usize {
+        match self {
+            LmStateBatch::Lstm(layers) => layers.first().map_or(0, |l| l.batch),
+            LmStateBatch::Gru(layers) => layers.first().map_or(0, |l| l.batch()),
+        }
+    }
 }
 
 /// The language model.
@@ -197,6 +219,116 @@ impl RnnLm {
                 LmState::Gru(vec![vec![0.0; self.config.hidden]; self.config.layers])
             }
         }
+    }
+
+    /// Zero state for a batch of `batch` fresh sessions.
+    pub fn zero_state_batch(&self, batch: usize) -> LmStateBatch {
+        let h = self.config.hidden;
+        match self.config.kind {
+            RnnKind::Lstm => LmStateBatch::Lstm(
+                (0..self.config.layers).map(|_| LstmStateBatch::zeros(batch, h)).collect(),
+            ),
+            RnnKind::Gru => LmStateBatch::Gru(
+                (0..self.config.layers).map(|_| ActivationBatch::zeros(batch, h)).collect(),
+            ),
+        }
+    }
+
+    /// Gather per-session states into one batch (the server's batching
+    /// boundary). All states must match this model's kind and shape.
+    pub fn gather_states(&self, states: &[&LmState]) -> LmStateBatch {
+        assert!(!states.is_empty(), "empty state batch");
+        match self.config.kind {
+            RnnKind::Lstm => LmStateBatch::Lstm(
+                (0..self.config.layers)
+                    .map(|l| {
+                        let layer: Vec<&LstmState> = states
+                            .iter()
+                            .map(|s| match s {
+                                LmState::Lstm(v) => &v[l],
+                                LmState::Gru(_) => panic!("GRU state in an LSTM model"),
+                            })
+                            .collect();
+                        LstmStateBatch::from_states(&layer)
+                    })
+                    .collect(),
+            ),
+            RnnKind::Gru => LmStateBatch::Gru(
+                (0..self.config.layers)
+                    .map(|l| {
+                        let layer: Vec<&[f32]> = states
+                            .iter()
+                            .map(|s| match s {
+                                LmState::Gru(v) => v[l].as_slice(),
+                                LmState::Lstm(_) => panic!("LSTM state in a GRU model"),
+                            })
+                            .collect();
+                        ActivationBatch::from_rows(&layer)
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Split a batched state back into per-session states (inverse of
+    /// [`Self::gather_states`]).
+    pub fn scatter_states(&self, state: &LmStateBatch) -> Vec<LmState> {
+        let batch = state.batch();
+        (0..batch)
+            .map(|b| match state {
+                LmStateBatch::Lstm(layers) => {
+                    LmState::Lstm(layers.iter().map(|l| l.state(b)).collect())
+                }
+                LmStateBatch::Gru(layers) => {
+                    LmState::Gru(layers.iter().map(|l| l.row(b).to_vec()).collect())
+                }
+            })
+            .collect()
+    }
+
+    /// One batched inference step: consume one token per session, update the
+    /// batched `state`, and return a `batch × vocab` logit matrix. Each
+    /// weight matrix is swept **once for the whole batch** (Fig. 3 right);
+    /// results bit-match `batch` independent [`Self::step`] calls.
+    pub fn step_batch(&self, tokens: &[usize], state: &mut LmStateBatch) -> OutputBatch {
+        let batch = tokens.len();
+        assert!(batch > 0, "empty token batch");
+        assert_eq!(batch, state.batch(), "token/state batch mismatch");
+        let (mut x, x_prequant): (Option<ActivationBatch>, Option<QuantizedBatch>) =
+            match self.embedding.lookup_batch(tokens) {
+                EmbeddedBatch::Dense(a) => (Some(a), None),
+                EmbeddedBatch::Quant(q) => (None, Some(q)),
+            };
+        for (l, cell) in self.cells.iter().enumerate() {
+            match (cell, &mut *state) {
+                (Cell::Lstm(c), LmStateBatch::Lstm(states)) => {
+                    let s = match (&x, &x_prequant) {
+                        (None, Some(q)) if l == 0 => c.step_batch_prequant(q, &states[l]),
+                        _ => c.step_batch(x.as_ref().expect("dense input"), &states[l]),
+                    };
+                    x = Some(s.h.clone());
+                    states[l] = s;
+                }
+                (Cell::Gru(c), LmStateBatch::Gru(states)) => {
+                    let s = match (&x, &x_prequant) {
+                        (None, Some(q)) if l == 0 => c.step_batch_prequant(q, &states[l]),
+                        _ => c.step_batch(x.as_ref().expect("dense input"), &states[l]),
+                    };
+                    x = Some(s.clone());
+                    states[l] = s;
+                }
+                _ => unreachable!("state kind matches cell kind by construction"),
+            }
+        }
+        let top = x.expect("at least one layer");
+        let mut logits = OutputBatch::zeros(batch, self.config.vocab);
+        self.softmax.forward(&top, &mut logits);
+        for b in 0..batch {
+            for (l, &bias) in logits.row_mut(b).iter_mut().zip(&self.softmax_bias) {
+                *l += bias;
+            }
+        }
+        logits
     }
 
     /// One inference step: consume `token`, update `state`, return logits
@@ -310,6 +442,49 @@ mod tests {
         let tokens: Vec<usize> = (0..300).map(|i| (i * 7) % 50).collect();
         let ppw = lm.ppw(&tokens);
         assert!((25.0..100.0).contains(&ppw), "ppw={ppw}");
+    }
+
+    #[test]
+    fn step_batch_bitmatches_step_per_session() {
+        // The whole-model batching contract: embedding (incl. prequant rows),
+        // both cells, and the softmax head are exact under batching.
+        for kind in [RnnKind::Lstm, RnnKind::Gru] {
+            for policy in [PrecisionPolicy::full(), PrecisionPolicy::quantized(2, 2)] {
+                let lm = RnnLm::random(tiny(kind), 11, policy);
+                for batch in 1..=4 {
+                    let mut singles: Vec<LmState> =
+                        (0..batch).map(|_| lm.zero_state()).collect();
+                    let mut batched = lm.zero_state_batch(batch);
+                    for round in 0..3 {
+                        let tokens: Vec<usize> =
+                            (0..batch).map(|b| (7 * b + 13 * round + 1) % 50).collect();
+                        let logits = lm.step_batch(&tokens, &mut batched);
+                        for b in 0..batch {
+                            let expect = lm.step(tokens[b], &mut singles[b]);
+                            assert_eq!(
+                                logits.row(b),
+                                &expect[..],
+                                "{kind:?} batch={batch} round={round} col={b}"
+                            );
+                        }
+                        let scattered = lm.scatter_states(&batched);
+                        assert_eq!(scattered, singles, "{kind:?} batch={batch} round={round}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let lm = RnnLm::random(tiny(RnnKind::Lstm), 12, PrecisionPolicy::full());
+        let mut singles: Vec<LmState> = (0..3).map(|_| lm.zero_state()).collect();
+        for (i, s) in singles.iter_mut().enumerate() {
+            lm.step(i + 1, s);
+        }
+        let refs: Vec<&LmState> = singles.iter().collect();
+        let gathered = lm.gather_states(&refs);
+        assert_eq!(lm.scatter_states(&gathered), singles);
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! Gate layout follows the paper's order `[i, f, o, g]` stacked along rows:
 //! `W_x ∈ R^{4h×in}`, `W_h ∈ R^{4h×h}`.
 
-use super::linear::{Linear, Precision};
+use super::batch::{ActivationBatch, OutputBatch};
+use super::linear::{Linear, LinearOp, Precision};
 use super::math::{sigmoid, dtanh};
+use crate::quant::QuantizedBatch;
 use crate::util::Rng;
 
 /// LSTM recurrent state.
@@ -20,6 +22,56 @@ pub struct LstmState {
 impl LstmState {
     pub fn zeros(hidden: usize) -> Self {
         LstmState { h: vec![0.0; hidden], c: vec![0.0; hidden] }
+    }
+}
+
+/// LSTM state for a batch of `B` independent sequences; `h` doubles as the
+/// next step's recurrent [`ActivationBatch`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct LstmStateBatch {
+    pub batch: usize,
+    pub hidden: usize,
+    pub h: ActivationBatch,
+    /// Cell states, row-major `batch × hidden` (never fed to a linear).
+    pub c: Vec<f32>,
+}
+
+impl LstmStateBatch {
+    pub fn zeros(batch: usize, hidden: usize) -> Self {
+        LstmStateBatch {
+            batch,
+            hidden,
+            h: ActivationBatch::zeros(batch, hidden),
+            c: vec![0.0; batch * hidden],
+        }
+    }
+
+    /// Gather per-session states into one batch (the server's scatter/gather
+    /// boundary).
+    pub fn from_states(states: &[&LstmState]) -> Self {
+        assert!(!states.is_empty(), "empty batch");
+        let hidden = states[0].h.len();
+        let hs: Vec<&[f32]> = states
+            .iter()
+            .map(|s| {
+                assert_eq!(s.h.len(), hidden, "state dimension mismatch");
+                assert_eq!(s.c.len(), hidden, "state dimension mismatch");
+                s.h.as_slice()
+            })
+            .collect();
+        let mut c = Vec::with_capacity(states.len() * hidden);
+        for s in states {
+            c.extend_from_slice(&s.c);
+        }
+        LstmStateBatch { batch: states.len(), hidden, h: ActivationBatch::from_rows(&hs), c }
+    }
+
+    /// Column `b` as a standalone per-session state.
+    pub fn state(&self, b: usize) -> LstmState {
+        LstmState {
+            h: self.h.row(b).to_vec(),
+            c: self.c[b * self.hidden..(b + 1) * self.hidden].to_vec(),
+        }
     }
 }
 
@@ -88,27 +140,82 @@ impl LstmCell {
         self.combine(&gx, &gh, state)
     }
 
+    /// One step for a batch of `B` sequences: both gate products run as one
+    /// batched forward each (the weight planes are swept once per batch).
+    /// Bit-matches `B` independent [`Self::step`] calls column by column.
+    pub fn step_batch(&self, x: &ActivationBatch, state: &LstmStateBatch) -> LstmStateBatch {
+        assert_eq!(x.batch(), state.batch, "batch mismatch");
+        let h4 = 4 * self.hidden;
+        let mut gx = OutputBatch::zeros(x.batch(), h4);
+        let mut gh = OutputBatch::zeros(x.batch(), h4);
+        self.wx.forward(x, &mut gx);
+        self.wh.forward(&state.h, &mut gh);
+        self.combine_batch(&gx, &gh, state)
+    }
+
+    /// Batched step from pre-quantized inputs (a quantized embedding's token
+    /// batch).
+    pub fn step_batch_prequant(&self, xq: &QuantizedBatch, state: &LstmStateBatch) -> LstmStateBatch {
+        assert_eq!(xq.batch, state.batch, "batch mismatch");
+        let h4 = 4 * self.hidden;
+        let mut gx = OutputBatch::zeros(xq.batch, h4);
+        let mut gh = OutputBatch::zeros(xq.batch, h4);
+        self.wx.forward_prequant(xq, &mut gx);
+        self.wh.forward(&state.h, &mut gh);
+        self.combine_batch(&gx, &gh, state)
+    }
+
     fn combine(&self, gx: &[f32], gh: &[f32], state: &LstmState) -> LstmState {
+        let mut out = LstmState::zeros(self.hidden);
+        combine_row(self.hidden, &self.bias, gx, gh, &state.c, &mut out.h, &mut out.c);
+        out
+    }
+
+    fn combine_batch(&self, gx: &OutputBatch, gh: &OutputBatch, state: &LstmStateBatch) -> LstmStateBatch {
         let h = self.hidden;
-        let mut out = LstmState::zeros(h);
-        for j in 0..h {
-            let pre_i = gx[j] + gh[j] + self.bias[j];
-            let pre_f = gx[h + j] + gh[h + j] + self.bias[h + j];
-            let pre_o = gx[2 * h + j] + gh[2 * h + j] + self.bias[2 * h + j];
-            let pre_g = gx[3 * h + j] + gh[3 * h + j] + self.bias[3 * h + j];
-            let i = sigmoid(pre_i);
-            let f = sigmoid(pre_f);
-            let o = sigmoid(pre_o);
-            let g = pre_g.tanh();
-            let c = f * state.c[j] + i * g;
-            out.c[j] = c;
-            out.h[j] = o * c.tanh();
+        let mut out = LstmStateBatch::zeros(state.batch, h);
+        for b in 0..state.batch {
+            combine_row(
+                h,
+                &self.bias,
+                gx.row(b),
+                gh.row(b),
+                &state.c[b * h..(b + 1) * h],
+                out.h.row_mut(b),
+                &mut out.c[b * h..(b + 1) * h],
+            );
         }
         out
     }
 
     pub fn bytes(&self) -> usize {
         self.wx.bytes() + self.wh.bytes() + self.bias.len() * 4
+    }
+}
+
+/// The scalar gate math of one LSTM step for one sequence — shared by the
+/// single and batched paths so they are bit-identical by construction.
+fn combine_row(
+    h: usize,
+    bias: &[f32],
+    gx: &[f32],
+    gh: &[f32],
+    prev_c: &[f32],
+    out_h: &mut [f32],
+    out_c: &mut [f32],
+) {
+    for j in 0..h {
+        let pre_i = gx[j] + gh[j] + bias[j];
+        let pre_f = gx[h + j] + gh[h + j] + bias[h + j];
+        let pre_o = gx[2 * h + j] + gh[2 * h + j] + bias[2 * h + j];
+        let pre_g = gx[3 * h + j] + gh[3 * h + j] + bias[3 * h + j];
+        let i = sigmoid(pre_i);
+        let f = sigmoid(pre_f);
+        let o = sigmoid(pre_o);
+        let g = pre_g.tanh();
+        let c = f * prev_c[j] + i * g;
+        out_c[j] = c;
+        out_h[j] = o * c.tanh();
     }
 }
 
@@ -276,6 +383,31 @@ mod tests {
         }
         let err: f32 = sf.h.iter().zip(&sq.h).map(|(a, b)| (a - b).abs()).sum::<f32>() / hidden as f32;
         assert!(err < 0.1, "mean |Δh| over 5 steps = {err}");
+    }
+
+    #[test]
+    fn step_batch_bitmatches_step_per_column() {
+        let mut rng = Rng::new(136);
+        for precision in [Precision::Full, Precision::Quantized { k_w: 2, k_a: 2 }] {
+            let cell = LstmCell::init(10, 12, 0.4, &mut rng, precision);
+            for batch in 1..=4 {
+                let singles: Vec<LstmState> = (0..batch)
+                    .map(|_| LstmState {
+                        h: rng.normal_vec(12, 0.5),
+                        c: rng.normal_vec(12, 0.5),
+                    })
+                    .collect();
+                let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(10, 1.0)).collect();
+                let refs: Vec<&LstmState> = singles.iter().collect();
+                let sb = LstmStateBatch::from_states(&refs);
+                let xrows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+                let next = cell.step_batch(&ActivationBatch::from_rows(&xrows), &sb);
+                for b in 0..batch {
+                    let expect = cell.step(&xs[b], &singles[b]);
+                    assert_eq!(next.state(b), expect, "{precision:?} batch={batch} col={b}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,14 @@
 //! full-precision and multi-bit quantized forms ([`linear::Linear`]), plus
 //! the feed-forward models of Appendix B (MLP, VGG-style CNN) with native
 //! STE training for the image-task tables.
+//!
+//! The forward API is **batch-first**: activations travel as
+//! [`batch::ActivationBatch`] (B vectors, quantized once per batch into
+//! shared bit-planes), layers implement [`linear::LinearOp`], and the
+//! recurrent cells expose `step_batch` over `*StateBatch` state. The
+//! per-vector `step`/`matvec` entry points remain as exact `B = 1` paths.
 
+pub mod batch;
 pub mod cnn;
 pub mod embedding;
 pub mod gru;
@@ -15,5 +22,6 @@ pub mod lstm;
 pub mod math;
 pub mod mlp;
 
-pub use linear::Linear;
+pub use batch::{ActivationBatch, OutputBatch};
+pub use linear::{Linear, LinearOp};
 pub use lm::{LmConfig, RnnKind, RnnLm};

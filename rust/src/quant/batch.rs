@@ -1,0 +1,210 @@
+//! Batched multi-bit activation codes.
+//!
+//! A [`QuantizedBatch`] holds the quantization of `B` activation vectors in
+//! one contiguous buffer — the activation-side operand of the batched
+//! XNOR/popcount GEMM (`kernels::binary::PreparedGemm`). Each vector keeps
+//! its own `k` coefficients (quantization is per-vector, exactly as in
+//! [`Quantized`]), but the bit planes are packed back-to-back so a batch's
+//! entire working set streams sequentially while the weight planes are
+//! walked **once per batch** instead of once per vector (Fig. 3 right).
+//!
+//! Layout:
+//!
+//! ```text
+//! data:   [b][s][word]   — column b, plane s, ⌈n/64⌉ words per plane
+//! alphas: [b][s]         — α_s of column b
+//! ```
+
+use super::{quantize, Method, PackedBits, Quantized};
+
+/// `B` activation vectors of dimension `n`, each quantized to `k` bits,
+/// packed into shared contiguous plane storage.
+#[derive(Clone, Debug)]
+pub struct QuantizedBatch {
+    /// Number of vectors `B`.
+    pub batch: usize,
+    /// Dimension of each vector.
+    pub n: usize,
+    /// Bits per vector.
+    pub k: usize,
+    /// Words per bit plane, `⌈n/64⌉`.
+    pub words_per_plane: usize,
+    /// Packed planes, `batch · k · words_per_plane` words, layout `[b][s][word]`.
+    pub data: Vec<u64>,
+    /// Coefficients, `batch · k`, layout `[b][s]`.
+    pub alphas: Vec<f32>,
+}
+
+impl QuantizedBatch {
+    /// Quantize `batch` row-major vectors with the paper's online setting
+    /// (alternating, `T = 2`) — identical per-row output to
+    /// `kernels::binary::quantize_activations`.
+    pub fn quantize(x: &[f32], batch: usize, n: usize, k: usize) -> Self {
+        Self::quantize_with(x, batch, n, k, Method::Alternating { t: 2 })
+    }
+
+    /// Quantize with an arbitrary method (ablations).
+    pub fn quantize_with(x: &[f32], batch: usize, n: usize, k: usize, method: Method) -> Self {
+        assert_eq!(x.len(), batch * n, "batch shape mismatch");
+        // Ternary always emits two planes regardless of `k` (see RowQuantized).
+        let kk = if matches!(method, Method::Ternary) { 2 } else { k };
+        let wpp = n.div_ceil(64);
+        let mut data = Vec::with_capacity(batch * kk * wpp);
+        let mut alphas = Vec::with_capacity(batch * kk);
+        for b in 0..batch {
+            let q = quantize(&x[b * n..(b + 1) * n], k, method);
+            debug_assert_eq!(q.k(), kk);
+            alphas.extend_from_slice(&q.alphas);
+            for plane in &q.planes {
+                data.extend_from_slice(plane.words());
+            }
+        }
+        QuantizedBatch { batch, n, k: kk, words_per_plane: wpp, data, alphas }
+    }
+
+    /// Pack already-quantized vectors (e.g. embedding rows looked up for a
+    /// token batch). All rows must share `n` and `k`.
+    pub fn from_rows(rows: &[Quantized]) -> Self {
+        assert!(!rows.is_empty(), "empty batch");
+        let n = rows[0].n;
+        let k = rows[0].k();
+        let wpp = n.div_ceil(64);
+        let mut data = Vec::with_capacity(rows.len() * k * wpp);
+        let mut alphas = Vec::with_capacity(rows.len() * k);
+        for q in rows {
+            assert_eq!(q.n, n, "row dimension mismatch");
+            assert_eq!(q.k(), k, "row bit-width mismatch");
+            alphas.extend_from_slice(&q.alphas);
+            for plane in &q.planes {
+                data.extend_from_slice(plane.words());
+            }
+        }
+        QuantizedBatch { batch: rows.len(), n, k, words_per_plane: wpp, data, alphas }
+    }
+
+    /// Gather rows of a row-quantized matrix (e.g. embedding rows for a
+    /// token batch) straight into the contiguous batch layout — one copy,
+    /// no intermediate [`Quantized`] allocations. Bit-identical to
+    /// `from_rows(&ids.map(|id| w.row(id)))`.
+    pub fn gather_rows(w: &super::RowQuantized, ids: &[usize]) -> Self {
+        assert!(!ids.is_empty(), "empty batch");
+        let (n, k) = (w.cols, w.k);
+        let wpp = n.div_ceil(64);
+        let mut data = Vec::with_capacity(ids.len() * k * wpp);
+        let mut alphas = Vec::with_capacity(ids.len() * k);
+        for &id in ids {
+            assert!(id < w.rows, "row {id} out of bounds ({} rows)", w.rows);
+            alphas.extend_from_slice(&w.alphas[id * k..(id + 1) * k]);
+            for s in 0..k {
+                data.extend_from_slice(w.planes[id * k + s].words());
+            }
+        }
+        QuantizedBatch { batch: ids.len(), n, k, words_per_plane: wpp, data, alphas }
+    }
+
+    /// The words of plane `s` of column `b`.
+    #[inline]
+    pub fn plane_words(&self, b: usize, s: usize) -> &[u64] {
+        let w = self.words_per_plane;
+        let base = (b * self.k + s) * w;
+        &self.data[base..base + w]
+    }
+
+    /// Coefficient `α_s` of column `b`.
+    #[inline]
+    pub fn alpha(&self, b: usize, s: usize) -> f32 {
+        self.alphas[b * self.k + s]
+    }
+
+    /// Column `b` as a standalone [`Quantized`] (bit-identical round-trip).
+    pub fn column(&self, b: usize) -> Quantized {
+        assert!(b < self.batch, "column {b} out of batch {}", self.batch);
+        Quantized {
+            n: self.n,
+            alphas: self.alphas[b * self.k..(b + 1) * self.k].to_vec(),
+            planes: (0..self.k)
+                .map(|s| PackedBits::from_words(self.n, self.plane_words(b, s).to_vec()))
+                .collect(),
+        }
+    }
+
+    /// Dense reconstruction of the whole batch, row-major `batch × n`.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.batch * self.n);
+        for b in 0..self.batch {
+            out.extend(self.column(b).dequantize());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn quantize_matches_per_vector() {
+        let mut rng = Rng::new(55);
+        let (batch, n, k) = (5, 70, 2);
+        let x = rng.normal_vec(batch * n, 1.0);
+        let qb = QuantizedBatch::quantize(&x, batch, n, k);
+        for b in 0..batch {
+            let q = quantize(&x[b * n..(b + 1) * n], k, Method::Alternating { t: 2 });
+            let col = qb.column(b);
+            assert_eq!(col.alphas, q.alphas, "column {b}");
+            assert_eq!(col.planes, q.planes, "column {b}");
+        }
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let mut rng = Rng::new(56);
+        let rows: Vec<Quantized> = (0..4)
+            .map(|_| quantize(&rng.normal_vec(33, 0.5), 3, Method::Greedy))
+            .collect();
+        let qb = QuantizedBatch::from_rows(&rows);
+        assert_eq!(qb.batch, 4);
+        assert_eq!(qb.k, 3);
+        for (b, q) in rows.iter().enumerate() {
+            assert_eq!(qb.column(b).dequantize(), q.dequantize());
+        }
+    }
+
+    #[test]
+    fn gather_rows_matches_from_rows() {
+        let mut rng = Rng::new(58);
+        let (rows, cols, k) = (9, 70, 2);
+        let w = crate::quant::RowQuantized::quantize(
+            &rng.normal_vec(rows * cols, 0.4),
+            rows,
+            cols,
+            k,
+            Method::Alternating { t: 2 },
+        );
+        let ids = [4usize, 0, 8, 4];
+        let fast = QuantizedBatch::gather_rows(&w, &ids);
+        let slow = QuantizedBatch::from_rows(&ids.iter().map(|&id| w.row(id)).collect::<Vec<_>>());
+        assert_eq!(fast.batch, slow.batch);
+        assert_eq!(fast.alphas, slow.alphas);
+        assert_eq!(fast.data, slow.data);
+    }
+
+    #[test]
+    fn dequantize_is_columnwise() {
+        let mut rng = Rng::new(57);
+        let (batch, n) = (3, 40);
+        let x = rng.normal_vec(batch * n, 0.7);
+        let qb = QuantizedBatch::quantize(&x, batch, n, 2);
+        let d = qb.dequantize();
+        for b in 0..batch {
+            assert_eq!(&d[b * n..(b + 1) * n], &qb.column(b).dequantize()[..]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch shape mismatch")]
+    fn shape_mismatch_panics() {
+        QuantizedBatch::quantize(&[0.0; 10], 3, 4, 2);
+    }
+}

@@ -20,6 +20,7 @@
 
 pub mod alternating;
 pub mod balanced;
+pub mod batch;
 pub mod bst;
 pub mod greedy;
 pub mod lsq;
@@ -29,6 +30,7 @@ pub mod refined;
 pub mod ternary;
 pub mod uniform;
 
+pub use batch::QuantizedBatch;
 pub use matrix::RowQuantized;
 pub use packed::PackedBits;
 
@@ -51,11 +53,24 @@ impl Quantized {
     }
 
     /// Reconstruct the dense approximation `ŵ`.
+    ///
+    /// Accumulates plane by plane directly over the packed words (one shift
+    /// per element) instead of re-extracting each bit with `sign(i)` — this
+    /// path backs the dense fallbacks and most tests, so the O(n·k)
+    /// bit-indexing cost matters. The per-element additions happen in the
+    /// same (plane-major) order as before, so results are bit-identical.
     pub fn dequantize(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.n];
-        for (alpha, plane) in self.alphas.iter().zip(&self.planes) {
-            for (i, o) in out.iter_mut().enumerate() {
-                *o += alpha * plane.sign(i);
+        for (&alpha, plane) in self.alphas.iter().zip(&self.planes) {
+            for (wi, &word) in plane.words().iter().enumerate() {
+                let base = wi * 64;
+                let live = 64.min(self.n - base);
+                let chunk = &mut out[base..base + live];
+                let mut bits = word;
+                for o in chunk.iter_mut() {
+                    *o += if bits & 1 == 1 { alpha } else { -alpha };
+                    bits >>= 1;
+                }
             }
         }
         out
@@ -108,6 +123,65 @@ impl Method {
             Method::Refined,
             Method::Alternating { t: 2 },
         ]
+    }
+}
+
+/// Canonical flag spelling: lowercase name, with the cycle count appended
+/// for non-default alternating (`alternating:3`). Round-trips with the
+/// `FromStr` impl below, so `--method` output can be pasted back verbatim.
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Method::Uniform => write!(f, "uniform"),
+            Method::Balanced => write!(f, "balanced"),
+            Method::Greedy => write!(f, "greedy"),
+            Method::Refined => write!(f, "refined"),
+            Method::Alternating { t: 2 } => write!(f, "alternating"),
+            Method::Alternating { t } => write!(f, "alternating:{t}"),
+            Method::Ternary => write!(f, "ternary"),
+        }
+    }
+}
+
+/// Parse a method flag: `uniform | balanced | greedy | refined |
+/// alternating[:cycles] | ternary` (case-insensitive; `alternating`
+/// defaults to the paper's `T = 2`).
+impl std::str::FromStr for Method {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let lower = s.trim().to_ascii_lowercase();
+        let (name, arg) = match lower.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        let method = match name {
+            "uniform" => Method::Uniform,
+            "balanced" => Method::Balanced,
+            "greedy" => Method::Greedy,
+            "refined" => Method::Refined,
+            "alternating" | "alt" => {
+                let t = match arg {
+                    None => 2,
+                    Some(a) => a
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&t| t >= 1)
+                        .ok_or_else(|| format!("bad cycle count '{a}' in method '{s}'"))?,
+                };
+                return Ok(Method::Alternating { t });
+            }
+            "ternary" => Method::Ternary,
+            _ => {
+                return Err(format!(
+                    "unknown method '{s}' (uniform|balanced|greedy|refined|alternating[:cycles]|ternary)"
+                ))
+            }
+        };
+        if arg.is_some() {
+            return Err(format!("method '{name}' takes no ':' argument (got '{s}')"));
+        }
+        Ok(method)
     }
 }
 
@@ -214,6 +288,45 @@ mod tests {
         assert_eq!(relative_mse(&[0.0], &[0.0]), 0.0);
         let e = relative_mse(&[1.0, 0.0], &[0.0, 0.0]);
         assert!((e - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dequantize_matches_per_bit_reference() {
+        // The word-wise fast path must equal the obvious per-bit sum.
+        let w = wvec(131, 9); // odd length exercises the tail word
+        for k in 1..=4 {
+            let q = quantize(&w, k, Method::Alternating { t: 2 });
+            let fast = q.dequantize();
+            let mut slow = vec![0.0f32; q.n];
+            for (alpha, plane) in q.alphas.iter().zip(&q.planes) {
+                for (i, o) in slow.iter_mut().enumerate() {
+                    *o += alpha * plane.sign(i);
+                }
+            }
+            assert_eq!(fast, slow, "k={k}");
+        }
+    }
+
+    #[test]
+    fn method_display_fromstr_roundtrip() {
+        let all = [
+            Method::Uniform,
+            Method::Balanced,
+            Method::Greedy,
+            Method::Refined,
+            Method::Alternating { t: 2 },
+            Method::Alternating { t: 5 },
+            Method::Ternary,
+        ];
+        for m in all {
+            let parsed: Method = m.to_string().parse().unwrap();
+            assert_eq!(parsed, m, "{m}");
+        }
+        assert_eq!("ALTERNATING:3".parse::<Method>().unwrap(), Method::Alternating { t: 3 });
+        assert_eq!("alt".parse::<Method>().unwrap(), Method::Alternating { t: 2 });
+        assert!("nope".parse::<Method>().is_err());
+        assert!("alternating:0".parse::<Method>().is_err());
+        assert!("greedy:2".parse::<Method>().is_err());
     }
 
     #[test]

@@ -30,6 +30,20 @@ impl PackedBits {
         p
     }
 
+    /// Rebuild from raw words (e.g. a plane sliced out of a contiguous
+    /// batch buffer). Tail bits beyond `n` must be zero — enforced here
+    /// unconditionally, because a nonzero pad would silently corrupt every
+    /// XOR/popcount dot product downstream.
+    pub fn from_words(n: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), n.div_ceil(64), "word count mismatch for n={n}");
+        if n % 64 != 0 {
+            if let Some(&last) = words.last() {
+                assert_eq!(last >> (n % 64), 0, "tail bits beyond n={n} must be zero");
+            }
+        }
+        PackedBits { n, words }
+    }
+
     /// Pack from booleans (`true → +1`).
     pub fn from_bools(v: &[bool]) -> Self {
         let mut p = PackedBits::zeros(v.len());

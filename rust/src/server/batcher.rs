@@ -147,6 +147,15 @@ impl InferenceServer {
     }
 
     /// Run one batch of generation requests in lockstep and reply to each.
+    ///
+    /// Both phases execute as **true batched forwards**
+    /// ([`RnnLm::step_batch`]): per timestep, the states of all still-active
+    /// slots are gathered into one `LmStateBatch`, the model runs one
+    /// batched step (each weight matrix swept once for the whole group —
+    /// Fig. 3 right), and the updated states scatter back. Because
+    /// `step_batch` bit-matches per-session `step`, batching is invisible
+    /// to clients: a session generates the same tokens regardless of who it
+    /// was batched with.
     pub fn process_batch(&mut self, batch: Vec<Request>) {
         Counters::inc(&self.counters.batches, 1);
         Counters::inc(&self.counters.requests, batch.len() as u64);
@@ -160,33 +169,60 @@ impl InferenceServer {
             queue_us: f64,
         }
 
-        // Prime phase: restore sessions and consume prompt tokens.
+        // Restore per-session states.
         let mut slots: Vec<Slot> = batch
             .into_iter()
             .map(|req| {
                 let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
-                let mut state =
+                let state =
                     self.sessions.take(req.session).unwrap_or_else(|| self.model.zero_state());
-                let mut last = 0usize;
-                for &t in &req.prime {
-                    let logits = self.model.step(t, &mut state);
-                    last = argmax(&logits);
-                }
-                Slot { req, state, out: Vec::new(), last, queue_us }
+                Slot { req, state, out: Vec::new(), last: 0, queue_us }
             })
             .collect();
 
-        // Lockstep decode: one timestep across all active slots per round.
+        // One batched timestep across the slots selected by `active`:
+        // gather → step_batch → scatter, updating each slot's greedy token.
+        fn step_active(model: &RnnLm, slots: &mut [Slot], active: &[usize], tokens: &[usize]) {
+            let refs: Vec<&crate::model::lm::LmState> =
+                active.iter().map(|&i| &slots[i].state).collect();
+            let mut state_batch = model.gather_states(&refs);
+            let logits = model.step_batch(tokens, &mut state_batch);
+            for (k, (&i, state)) in
+                active.iter().zip(model.scatter_states(&state_batch)).enumerate()
+            {
+                slots[i].state = state;
+                slots[i].last = argmax(logits.row(k));
+            }
+        }
+
+        // Prime phase: consume prompt tokens in lockstep (prompts of
+        // different lengths drop out as they finish).
+        let max_prime = slots.iter().map(|s| s.req.prime.len()).max().unwrap_or(0);
+        for pos in 0..max_prime {
+            let active: Vec<usize> =
+                (0..slots.len()).filter(|&i| pos < slots[i].req.prime.len()).collect();
+            let tokens: Vec<usize> = active.iter().map(|&i| slots[i].req.prime[pos]).collect();
+            step_active(&self.model, &mut slots, &active, &tokens);
+        }
+
+        // Lockstep decode: one batched timestep across all active slots per
+        // round; short requests drop out early.
         let max_rounds = slots.iter().map(|s| s.req.max_new).max().unwrap_or(0);
         for round in 0..max_rounds {
-            for slot in slots.iter_mut() {
-                if round >= slot.req.max_new {
-                    continue;
-                }
-                slot.out.push(slot.last);
-                let logits = self.model.step(slot.last, &mut slot.state);
-                slot.last = argmax(&logits);
+            let active: Vec<usize> =
+                (0..slots.len()).filter(|&i| round < slots[i].req.max_new).collect();
+            if active.is_empty() {
+                break;
             }
+            let tokens: Vec<usize> = active
+                .iter()
+                .map(|&i| {
+                    let slot = &mut slots[i];
+                    slot.out.push(slot.last);
+                    slot.last
+                })
+                .collect();
+            step_active(&self.model, &mut slots, &active, &tokens);
         }
 
         let compute_us = start.elapsed().as_secs_f64() * 1e6;

@@ -9,15 +9,22 @@
 //! TCP clients ──► router (thread per conn) ──► request queue
 //!                                                │
 //!                                     dynamic batcher (max_batch / wait)
-//!                                                │ per-timestep batches
-//!                                     inference workers (quantized LM)
-//!                                                │
+//!                                                │ gather LmStateBatch
+//!                                     batched forward (RnnLm::step_batch)
+//!                                       · one ActivationBatch per layer,
+//!                                         quantized once per batch
+//!                                       · one sweep over each packed
+//!                                         weight plane serves all B
+//!                                         columns (PreparedGemm)
+//!                                                │ scatter states
 //!                                     session cache (hidden states, LRU)
 //! ```
 //!
 //! RNN steps are synchronous per token, so the batcher groups *steps* of
-//! different sessions into one pass over the weight planes — the
-//! concatenated-binary-codes layout of Fig. 3 (right).
+//! different sessions and executes them as **one** batched XNOR/popcount
+//! GEMM per weight matrix — the concatenated-binary-codes layout of Fig. 3
+//! (right). `step_batch` bit-matches per-session `step`, so dynamic
+//! batching never changes what any client observes.
 
 pub mod batcher;
 pub mod protocol;

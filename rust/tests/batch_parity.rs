@@ -1,0 +1,129 @@
+//! Exact-parity contract of the batch-first forward API: batching must be
+//! invisible — every batched path bit-matches its per-vector counterpart,
+//! with **no tolerance**. This is what lets the server's dynamic batcher
+//! group arbitrary sessions without changing any client-visible token.
+
+use amq::kernels::binary::PreparedGemm;
+use amq::model::batch::ActivationBatch;
+use amq::model::gru::GruCell;
+use amq::model::linear::Precision;
+use amq::model::lm::{LmConfig, LmState, PrecisionPolicy, RnnKind, RnnLm};
+use amq::model::lstm::{LstmCell, LstmState, LstmStateBatch};
+use amq::quant::{Method, QuantizedBatch, RowQuantized};
+use amq::util::Rng;
+
+/// `PreparedGemm::gemm` bit-matches `PreparedGemm::gemv` (the PreparedGemv
+/// path) column by column for every paper bit-width pairing.
+#[test]
+fn prepared_gemm_bitmatches_gemv_all_bitwidths() {
+    let mut rng = Rng::new(7001);
+    for k_w in 1..=3 {
+        for k_a in 1..=3 {
+            for batch in 1..=4 {
+                let (m, n) = (19, 147); // odd shapes exercise tail words
+                let w = rng.normal_vec(m * n, 0.3);
+                let prep = PreparedGemm::new(&RowQuantized::quantize(
+                    &w,
+                    m,
+                    n,
+                    k_w,
+                    Method::Alternating { t: 2 },
+                ));
+                let x = rng.normal_vec(batch * n, 1.0);
+                let xq = QuantizedBatch::quantize(&x, batch, n, k_a);
+                let mut y = vec![0.0f32; batch * m];
+                prep.gemm(&xq, &mut y);
+                for b in 0..batch {
+                    let mut yb = vec![0.0f32; m];
+                    prep.gemv(&xq.column(b), &mut yb);
+                    assert_eq!(
+                        &y[b * m..(b + 1) * m],
+                        &yb[..],
+                        "k_w={k_w} k_a={k_a} batch={batch} col={b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `LstmCell::step_batch` with B = 1..=4 bit-matches per-vector `step`.
+#[test]
+fn lstm_step_batch_bitmatches_step() {
+    let mut rng = Rng::new(7002);
+    for precision in [
+        Precision::Full,
+        Precision::Quantized { k_w: 2, k_a: 2 },
+        Precision::Quantized { k_w: 3, k_a: 3 },
+    ] {
+        let cell = LstmCell::init(24, 32, 0.3, &mut rng, precision);
+        for batch in 1..=4 {
+            let states: Vec<LstmState> = (0..batch)
+                .map(|_| LstmState { h: rng.normal_vec(32, 0.5), c: rng.normal_vec(32, 0.5) })
+                .collect();
+            let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(24, 1.0)).collect();
+            let refs: Vec<&LstmState> = states.iter().collect();
+            let xrows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let next = cell.step_batch(
+                &ActivationBatch::from_rows(&xrows),
+                &LstmStateBatch::from_states(&refs),
+            );
+            for b in 0..batch {
+                let expect = cell.step(&xs[b], &states[b]);
+                assert_eq!(next.state(b), expect, "{precision:?} B={batch} col={b}");
+            }
+        }
+    }
+}
+
+/// `GruCell::step_batch` with B = 1..=4 bit-matches per-vector `step`.
+#[test]
+fn gru_step_batch_bitmatches_step() {
+    let mut rng = Rng::new(7003);
+    for precision in [
+        Precision::Full,
+        Precision::Quantized { k_w: 2, k_a: 2 },
+        Precision::Quantized { k_w: 3, k_a: 3 },
+    ] {
+        let cell = GruCell::init(24, 32, 0.3, &mut rng, precision);
+        for batch in 1..=4 {
+            let hs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(32, 0.5)).collect();
+            let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(24, 1.0)).collect();
+            let hrows: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
+            let xrows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let next = cell.step_batch(
+                &ActivationBatch::from_rows(&xrows),
+                &ActivationBatch::from_rows(&hrows),
+            );
+            for b in 0..batch {
+                let expect = cell.step(&xs[b], &hs[b]);
+                assert_eq!(next.row(b), &expect[..], "{precision:?} B={batch} col={b}");
+            }
+        }
+    }
+}
+
+/// Whole-model parity over multiple timesteps, both cell kinds, quantized
+/// end to end (embedding prequant rows included).
+#[test]
+fn lm_step_batch_bitmatches_step_over_time() {
+    for kind in [RnnKind::Lstm, RnnKind::Gru] {
+        let lm = RnnLm::random(
+            LmConfig { kind, vocab: 80, hidden: 40, layers: 1 },
+            7004,
+            PrecisionPolicy::quantized(2, 2),
+        );
+        let batch = 4;
+        let mut singles: Vec<LmState> = (0..batch).map(|_| lm.zero_state()).collect();
+        let mut batched = lm.zero_state_batch(batch);
+        for round in 0..5 {
+            let tokens: Vec<usize> = (0..batch).map(|b| (11 * b + 29 * round + 3) % 80).collect();
+            let logits = lm.step_batch(&tokens, &mut batched);
+            for b in 0..batch {
+                let expect = lm.step(tokens[b], &mut singles[b]);
+                assert_eq!(logits.row(b), &expect[..], "{kind:?} round={round} col={b}");
+            }
+        }
+        assert_eq!(lm.scatter_states(&batched), singles, "{kind:?} final states");
+    }
+}
