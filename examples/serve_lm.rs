@@ -2,7 +2,10 @@
 //! with concurrent clients over TCP, and print the latency/throughput
 //! profile — the paper's §1 server scenario.
 //!
-//! Run: `cargo run --release --example serve_lm -- [--clients 8] [--requests 5]`
+//! Run: `cargo run --release --example serve_lm -- [--clients 8] [--requests 5] [--threads 0]`
+//!
+//! `--threads` sizes the execution engine's worker pool (1 = serial,
+//! 0 = auto) — same knob as `amq serve --threads`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -23,6 +26,7 @@ fn main() -> anyhow::Result<()> {
     let new_tokens = cli.get_usize("tokens", 12)?;
     let w_bits = cli.get_usize("w-bits", 2)?;
     let a_bits = cli.get_usize("a-bits", 2)?;
+    let threads = cli.get_usize("threads", 0)?;
 
     // Trained checkpoint if available, else random weights (same code path).
     let config = LmConfig { kind: RnnKind::Lstm, vocab: 2000, hidden: 200, layers: 1 };
@@ -43,7 +47,12 @@ fn main() -> anyhow::Result<()> {
     };
     println!("model bytes: {}", model.bytes());
 
-    let server = InferenceServer::new(Arc::new(model), BatcherConfig::default());
+    let exec_cfg = amq::exec::ExecConfig::with_threads(threads);
+    let server = InferenceServer::new(
+        Arc::new(model),
+        BatcherConfig { exec: exec_cfg, ..Default::default() },
+    );
+    println!("exec threads: {}", server.exec().threads());
     let latency = server.latency.clone();
     let (work_tx, work_rx) = mpsc::channel::<Work>();
     std::thread::spawn(move || server.run(work_rx));

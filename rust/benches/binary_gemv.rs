@@ -1,15 +1,29 @@
 //! Bench: Table 6 (Appendix A) — binary XNOR/popcount GEMV vs f32 GEMV at
 //! the paper's exact shapes (4096×1024 hidden product, 42000×1024 Text8
 //! softmax), with the online-quantization share broken out, plus the §4
-//! cost model comparison — and the batched-GEMM sweep over
-//! B ∈ {1, 4, 16, 64} behind the batch-first serving API (Fig. 3 right).
+//! cost model comparison — the batched-GEMM sweep over B ∈ {1, 4, 16, 64}
+//! behind the batch-first serving API (Fig. 3 right), and the worker-pool
+//! thread-scaling sweep of the row-sharded GEMM (`exec` engine).
 //!
-//! Run: `cargo bench --bench binary_gemv` (full shapes; takes a minute).
+//! Run: `cargo bench --bench binary_gemv [-- --quick] [--json PATH]`
+//!
+//! The final stdout line is a machine-readable JSON summary containing the
+//! batch sweep and the thread-scaling curve; `--json PATH` additionally
+//! writes it to a file so scaling trajectories can be tracked across PRs.
 
-use amq::exp::{costmodel, gemm_batch_sweep, kernel_tables, render_batch_sweep, table6};
+use amq::exp::{
+    costmodel, gemm_batch_sweep, gemm_thread_sweep, kernel_tables, render_batch_sweep,
+    render_thread_sweep, table6,
+};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let shapes: &[(usize, usize)] = if quick {
         &[(1024, 1024)]
     } else {
@@ -27,6 +41,12 @@ fn main() {
     let batches: &[usize] = &[1, 4, 16, 64];
     let sweep = gemm_batch_sweep(sweep_shapes, batches, 2, samples.min(9));
     print!("{}", render_batch_sweep(&sweep));
+
+    // Thread-scaling sweep: the same B=16 GEMM row-sharded across worker
+    // pools of growing size (bit-identical output, wall time only).
+    let threads: &[usize] = &[1, 2, 4];
+    let tsweep = gemm_thread_sweep(sweep_shapes, 16, 2, threads, samples.min(9));
+    print!("{}", render_thread_sweep(&tsweep));
 
     // Self-check: quantized must beat FP at every shape (the paper's
     // headline 2-bit ≈ 6×, 3-bit ≈ 3× on the larger shape).
@@ -48,5 +68,49 @@ fn main() {
         b16.vecs_per_sec,
         b1.vecs_per_sec
     );
+    // Self-check (the CI smoke gate): on a multi-core machine the threaded
+    // B=16 GEMM must not be slower than serial.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let best = tsweep
+        .iter()
+        .filter(|r| r.threads > 1)
+        .map(|r| r.speedup)
+        .fold(f64::NAN, f64::max);
+    if cores >= 2 {
+        assert!(
+            best > 1.0,
+            "threaded B=16 GEMM slower than serial: best speedup {best:.2}x on {cores} cores"
+        );
+    } else {
+        eprintln!("note: single-core machine — skipping the thread-scaling assertion");
+    }
+
+    // Machine-readable summary (batch sweep + thread scaling).
+    let mut json = String::from("{\"bench\":\"binary_gemv\",\"batch_sweep\":[");
+    for (i, r) in sweep.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "{{\"m\":{},\"n\":{},\"k\":{},\"batch\":{},\"total_ms\":{:.4},\"vecs_per_sec\":{:.1}}}",
+            r.m, r.n, r.k, r.batch, r.total_ms, r.vecs_per_sec
+        ));
+    }
+    json.push_str("],\"thread_scaling\":[");
+    for (i, r) in tsweep.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "{{\"m\":{},\"n\":{},\"k\":{},\"batch\":{},\"threads\":{},\"total_ms\":{:.4},\"speedup\":{:.3}}}",
+            r.m, r.n, r.k, r.batch, r.threads, r.total_ms, r.speedup
+        ));
+    }
+    json.push_str("]}");
+    if let Some(path) = json_path {
+        std::fs::write(&path, &json).expect("write json summary");
+        eprintln!("json summary written to {path}");
+    }
+    println!("{json}");
     eprintln!("ok");
 }

@@ -2,20 +2,23 @@
 //! function of batch size, full precision vs 2/2 and 3/3 quantized models.
 //! This regenerates the paper's *motivating* claim (§1, abstract): quantized
 //! inference serves more concurrent requests per machine at lower latency —
-//! and, with the batch-first forward API, that the dynamic batcher's
-//! timestep groups execute as true batched GEMMs whose throughput grows
-//! with B (one sweep over the weight planes per batch, Fig. 3 right).
+//! that the dynamic batcher's timestep groups execute as true batched GEMMs
+//! whose throughput grows with B (one sweep over the weight planes per
+//! batch, Fig. 3 right) — and, new, how the W2A2 B=16 workload scales when
+//! the batched forward is row-sharded across the `exec` worker pool.
 //!
-//! Run: `cargo bench --bench server_throughput [--quick] [--json PATH]`
+//! Run: `cargo bench --bench server_throughput [-- --quick] [--json PATH]`
 //!
 //! The final stdout line is a machine-readable JSON summary (tokens/sec per
-//! model per batch size); `--json PATH` additionally writes it to a file so
-//! perf trajectories can be tracked across PRs.
+//! model per batch size, plus the thread-scaling curve); `--json PATH`
+//! additionally writes it to a file so perf trajectories can be tracked
+//! across PRs.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use amq::exec::ExecConfig;
 use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
 use amq::server::batcher::{BatcherConfig, InferenceServer, Request};
 
@@ -27,10 +30,20 @@ struct Sample {
     bytes: usize,
 }
 
-fn run_batch(model: Arc<RnnLm>, batch: usize, new_tokens: usize) -> (f64, f64) {
+struct ThreadSample {
+    threads: usize,
+    tokens_per_sec: f64,
+}
+
+fn run_batch(
+    model: Arc<RnnLm>,
+    batch: usize,
+    new_tokens: usize,
+    exec: ExecConfig,
+) -> (f64, f64) {
     let mut server = InferenceServer::new(
         model,
-        BatcherConfig { max_batch: batch, ..Default::default() },
+        BatcherConfig { max_batch: batch, exec, ..Default::default() },
     );
     let mut rxs = Vec::new();
     let mut reqs = Vec::new();
@@ -55,7 +68,12 @@ fn run_batch(model: Arc<RnnLm>, batch: usize, new_tokens: usize) -> (f64, f64) {
     (tokens / elapsed, elapsed * 1e3)
 }
 
-fn json_summary(config: &LmConfig, new_tokens: usize, samples: &[Sample]) -> String {
+fn json_summary(
+    config: &LmConfig,
+    new_tokens: usize,
+    samples: &[Sample],
+    scaling: &[ThreadSample],
+) -> String {
     let mut s = format!(
         "{{\"bench\":\"server_throughput\",\"kind\":\"{}\",\"vocab\":{},\"hidden\":{},\"new_tokens\":{},\"results\":[",
         config.kind.name(),
@@ -68,8 +86,18 @@ fn json_summary(config: &LmConfig, new_tokens: usize, samples: &[Sample]) -> Str
             s.push(',');
         }
         s.push_str(&format!(
-            "{{\"model\":\"{}\",\"batch\":{},\"tokens_per_sec\":{:.1},\"batch_ms\":{:.3},\"weight_bytes\":{}}}",
+            "{{\"model\":\"{}\",\"batch\":{},\"threads\":1,\"tokens_per_sec\":{:.1},\"batch_ms\":{:.3},\"weight_bytes\":{}}}",
             r.model, r.batch, r.tokens_per_sec, r.batch_ms, r.bytes
+        ));
+    }
+    s.push_str("],\"thread_scaling\":[");
+    for (i, r) in scaling.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"model\":\"W2A2\",\"batch\":16,\"threads\":{},\"tokens_per_sec\":{:.1}}}",
+            r.threads, r.tokens_per_sec
         ));
     }
     s.push_str("]}");
@@ -106,11 +134,17 @@ fn main() {
     ];
     let batches: &[usize] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
     let mut samples: Vec<Sample> = Vec::new();
+    let mut w2a2: Option<Arc<RnnLm>> = None;
     for (name, policy) in variants {
         let model = Arc::new(RnnLm::random(config, 99, policy));
+        if name == "W2A2" {
+            w2a2 = Some(model.clone());
+        }
         let bytes = model.bytes();
         for &b in batches {
-            let (tps, ms) = run_batch(model.clone(), b, new_tokens);
+            // The batch sweep itself runs serial (threads = 1) so the B
+            // scaling is measured in isolation from the worker pool.
+            let (tps, ms) = run_batch(model.clone(), b, new_tokens, ExecConfig::serial());
             println!("{name:<10} {b:>10} {tps:>14.0} {ms:>12.2} {bytes:>10}");
             samples.push(Sample { model: name, batch: b, tokens_per_sec: tps, batch_ms: ms, bytes });
         }
@@ -129,20 +163,58 @@ fn main() {
     let batch_gain = tps("W2A2", 16) / tps("W2A2", 1);
     println!("W2A2 batching gain, B=16 vs B=1: {batch_gain:.2}x");
 
-    let json = json_summary(&config, new_tokens, &samples);
+    // Thread-scaling: the W2A2 B=16 workload on worker pools of growing
+    // size (the execution-engine acceptance curve). Each run generates the
+    // bit-identical tokens — only wall time changes.
+    let w2a2 = w2a2.expect("W2A2 model benchmarked above");
+    println!("\nW2A2 thread scaling at B=16 (row-sharded batched forward):");
+    println!("{:<10} {:>14} {:>12}", "threads", "tokens/s", "vs 1 thread");
+    let mut scaling: Vec<ThreadSample> = Vec::new();
+    for &t in &[1usize, 2, 4] {
+        // Best of 3 runs to damp scheduler noise.
+        let mut best = 0.0f64;
+        for _ in 0..3 {
+            let (tps, _) =
+                run_batch(w2a2.clone(), 16, new_tokens, ExecConfig::with_threads(t));
+            best = best.max(tps);
+        }
+        let base = scaling.first().map(|s| s.tokens_per_sec).unwrap_or(best);
+        println!("{t:<10} {best:>14.0} {:>11.2}x", best / base);
+        scaling.push(ThreadSample { threads: t, tokens_per_sec: best });
+    }
+    // Best over all pool sizes vs serial (same gate as binary_gemv: a
+    // 2-core machine may lose at 4 threads to oversubscription while 2
+    // threads genuinely wins).
+    let thread_gain = scaling[1..]
+        .iter()
+        .map(|s| s.tokens_per_sec / scaling[0].tokens_per_sec)
+        .fold(f64::NAN, f64::max);
+    let gain4 = scaling.last().unwrap().tokens_per_sec / scaling[0].tokens_per_sec;
+    println!("W2A2 threading gain at B=16: 4 threads {gain4:.2}x, best {thread_gain:.2}x");
+
+    let json = json_summary(&config, new_tokens, &samples, &scaling);
     if let Some(path) = json_path {
         std::fs::write(&path, &json).expect("write json summary");
         eprintln!("json summary written to {path}");
     }
     println!("{json}");
 
-    // Self-checks: quantized serving must beat FP, and the batched forward
-    // must make B=16 strictly faster than B=1 for the 2-bit model (the
-    // acceptance bar of the batch-first API).
+    // Self-checks: quantized serving must beat FP, the batched forward must
+    // make B=16 strictly faster than B=1 for the 2-bit model, and on a
+    // multi-core machine the worker pool must not make serving slower.
     assert!(speedup > 1.0, "quantized serving must outperform FP");
     assert!(
         batch_gain > 1.0,
         "batched serving must outperform B=1: gain {batch_gain:.2}x"
     );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 2 {
+        assert!(
+            thread_gain > 1.0,
+            "threaded serving slower than serial: {thread_gain:.2}x on {cores} cores"
+        );
+    } else {
+        eprintln!("note: single-core machine — skipping the thread-scaling assertion");
+    }
     eprintln!("ok");
 }

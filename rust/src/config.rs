@@ -8,6 +8,7 @@
 //! [server]
 //! addr = "127.0.0.1:7860"
 //! max_batch = 16
+//! threads = 0          # worker pool: 1 = serial, 0 = auto
 //!
 //! [model]
 //! kind = "lstm"       # or "gru"
@@ -184,7 +185,9 @@ pub struct ServerConfig {
     /// Batching window: how long the batcher waits to fill a batch.
     pub batch_wait_us: u64,
     pub max_sessions: usize,
-    pub workers: usize,
+    /// Worker-pool size for the batched forward: `1` = serial, `0` = auto
+    /// (`AMQ_THREADS` env or the machine's available parallelism).
+    pub threads: usize,
 }
 
 impl ServerConfig {
@@ -194,7 +197,7 @@ impl ServerConfig {
             max_batch: c.get_usize("server.max_batch", 16),
             batch_wait_us: c.get_usize("server.batch_wait_us", 500) as u64,
             max_sessions: c.get_usize("server.max_sessions", 1024),
-            workers: c.get_usize("server.workers", 1),
+            threads: c.get_usize("server.threads", 0),
         }
     }
 }
@@ -245,6 +248,7 @@ mod tests {
 [server]
 addr = "0.0.0.0:9999"   # bind
 max_batch = 32
+threads = 4
 [model]
 kind = "gru"
 hidden = 512
@@ -268,6 +272,7 @@ quantized = true
         let c = Config::parse(SAMPLE).unwrap();
         let s = ServerConfig::from_config(&c);
         assert_eq!(s.max_batch, 32);
+        assert_eq!(s.threads, 4);
         let m = ModelConfig::from_config(&c).unwrap();
         assert_eq!(m.lm.kind, RnnKind::Gru);
         assert_eq!(m.lm.hidden, 512);

@@ -1,0 +1,299 @@
+//! Execution engine: a std-only persistent worker pool that spreads the
+//! serving hot path across CPU cores.
+//!
+//! The paper's ~6× CPU acceleration at 2 bits (§1, Table 6) is a
+//! *single-core* kernel number; the serving claim — "large scale concurrent
+//! requests" per machine — additionally needs the machine's other cores.
+//! This module supplies the substrate:
+//!
+//! * [`ThreadPool`] — persistent `std::thread` workers around one shared
+//!   job queue, with **help-while-waiting** fork/join (`scope`), so nested
+//!   parallel sections never deadlock and no core idles while a scope
+//!   waits.
+//! * [`Exec`] — a cheap cloneable handle threaded through the kernels,
+//!   quantizers, cells and the batcher. `threads = 1` carries no pool at
+//!   all and is byte-for-byte today's serial path.
+//! * [`ExecConfig`] — the `threads` knob (`0` = auto: `AMQ_THREADS` env or
+//!   `available_parallelism`), carried by `server::BatcherConfig` and the
+//!   `--threads` CLI flag.
+//!
+//! **Exactness contract:** parallelism only ever *shards* work along
+//! boundaries that the serial path already treats independently — output
+//! rows of a GEMM, rows of a matrix quantization, columns of a batch. Each
+//! output element is produced by the identical scalar reduction as the
+//! serial path, so results are **bit-exact for every thread count** (pinned
+//! by `rust/tests/exec_parity.rs`). Sharding never changes what a client
+//! sees; it only changes how many cores produce it.
+
+mod pool;
+
+pub use pool::ThreadPool;
+
+use std::sync::Arc;
+
+/// How many threads the engine may use.
+///
+/// `threads = 0` means "auto": the `AMQ_THREADS` environment variable if
+/// set, else `std::thread::available_parallelism()`. `threads = 1`
+/// degenerates to the exact serial path (no pool, no worker threads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    pub threads: usize,
+}
+
+impl ExecConfig {
+    /// The serial engine: one thread, no pool.
+    pub const fn serial() -> Self {
+        ExecConfig { threads: 1 }
+    }
+
+    /// Resolve thread count at startup (env / hardware).
+    pub const fn auto() -> Self {
+        ExecConfig { threads: 0 }
+    }
+
+    /// An explicit thread count (`0` = auto).
+    pub const fn with_threads(threads: usize) -> Self {
+        ExecConfig { threads }
+    }
+
+    /// The concrete thread count this config resolves to.
+    pub fn resolve(&self) -> usize {
+        if self.threads != 0 {
+            return self.threads;
+        }
+        if let Ok(v) = std::env::var("AMQ_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig::auto()
+    }
+}
+
+/// A cloneable handle to the execution engine: the serial path, or a shared
+/// persistent [`ThreadPool`]. Clones share the same pool.
+#[derive(Clone)]
+pub struct Exec {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl Exec {
+    /// Build an engine from the config (`resolve() <= 1` ⇒ serial, no
+    /// worker threads are spawned).
+    pub fn new(config: ExecConfig) -> Self {
+        let threads = config.resolve();
+        if threads <= 1 {
+            Exec { pool: None }
+        } else {
+            Exec { pool: Some(Arc::new(ThreadPool::new(threads))) }
+        }
+    }
+
+    /// The serial engine (today's single-thread path, bit for bit).
+    pub fn serial() -> Self {
+        Exec { pool: None }
+    }
+
+    /// Total concurrency (1 for the serial engine).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
+    }
+
+    /// Whether a worker pool is attached.
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Shard `0..n` into at most `threads()` contiguous chunks (sizes
+    /// differ by ≤ 1) and run `body(lo, hi)` for each. `min_chunk` bounds
+    /// the *number of tasks* (≤ `⌈n / min_chunk⌉`), not a per-chunk
+    /// minimum — remainder chunks may be smaller. Chunks are disjoint and
+    /// cover `0..n` exactly; the serial engine makes the single call
+    /// `body(0, n)`. Oversubscription (`threads > n`) degenerates to `n`
+    /// single-item chunks.
+    ///
+    /// `body` runs concurrently on different ranges — it must only write
+    /// state that is disjoint per chunk (see [`SendPtr`]).
+    pub fn run_chunks(&self, n: usize, min_chunk: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let Some(pool) = self.pool.as_deref() else {
+            body(0, n);
+            return;
+        };
+        let tasks = pool.threads().min(n.div_ceil(min_chunk.max(1)));
+        if tasks <= 1 {
+            body(0, n);
+            return;
+        }
+        let base = n / tasks;
+        let rem = n % tasks;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
+        let mut lo = 0;
+        for i in 0..tasks {
+            let hi = lo + base + usize::from(i < rem);
+            jobs.push(Box::new(move || body(lo, hi)));
+            lo = hi;
+        }
+        pool.scope(jobs);
+    }
+
+    /// Run two independent closures — in parallel when a pool is attached,
+    /// sequentially (`a` then `b`) on the serial engine. The closures may
+    /// themselves use this engine (nested scopes are deadlock-free).
+    pub fn join<'a>(&self, a: impl FnOnce() + Send + 'a, b: impl FnOnce() + Send + 'a) {
+        match self.pool.as_deref() {
+            None => {
+                a();
+                b();
+            }
+            Some(pool) => pool.scope(vec![Box::new(a), Box::new(b)]),
+        }
+    }
+}
+
+impl std::fmt::Debug for Exec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Exec({} threads)", self.threads())
+    }
+}
+
+/// A raw mutable pointer into an output buffer that workers write at
+/// **disjoint** indices (e.g. disjoint output-row ranges of a row-sharded
+/// GEMM). Exists because handing each worker a `&mut` to the same slice
+/// would alias; raw-pointer writes at provably disjoint indices are sound.
+pub struct SendPtr<T>(*mut T);
+
+// SAFETY: the pointer itself is just an address; the sharding callers
+// guarantee disjoint index ranges per task and that the buffer outlives the
+// scope (it borrows from the caller's stack, and `scope` blocks).
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(slice: &mut [T]) -> Self {
+        SendPtr(slice.as_mut_ptr())
+    }
+
+    /// Write `val` at index `idx`.
+    ///
+    /// # Safety
+    /// `idx` must be in bounds of the original slice, and no other task may
+    /// read or write `idx` concurrently (tasks must own disjoint index
+    /// sets).
+    #[inline]
+    pub unsafe fn write(&self, idx: usize, val: T) {
+        *self.0.add(idx) = val;
+    }
+
+    /// Reborrow the disjoint sub-range `start..start + len` as a mutable
+    /// slice.
+    ///
+    /// # Safety
+    /// The range must be in bounds of the original slice and no other task
+    /// may touch any index in it while the returned borrow lives.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn serial_engine_runs_inline() {
+        let exec = Exec::serial();
+        assert_eq!(exec.threads(), 1);
+        assert!(!exec.is_parallel());
+        let calls = Mutex::new(Vec::new());
+        exec.run_chunks(10, 1, &|lo, hi| calls.lock().unwrap().push((lo, hi)));
+        assert_eq!(*calls.lock().unwrap(), vec![(0, 10)]);
+    }
+
+    #[test]
+    fn chunks_partition_exactly() {
+        for threads in [2usize, 3, 8] {
+            let exec = Exec::new(ExecConfig::with_threads(threads));
+            for n in [1usize, 2, 7, 64, 65, 130] {
+                let calls = Mutex::new(Vec::new());
+                exec.run_chunks(n, 1, &|lo, hi| calls.lock().unwrap().push((lo, hi)));
+                let mut got = calls.into_inner().unwrap();
+                got.sort_unstable();
+                // Disjoint, contiguous, covering 0..n.
+                let mut expect_lo = 0;
+                for &(lo, hi) in &got {
+                    assert_eq!(lo, expect_lo, "threads={threads} n={n} {got:?}");
+                    assert!(hi > lo, "empty chunk: threads={threads} n={n} {got:?}");
+                    expect_lo = hi;
+                }
+                assert_eq!(expect_lo, n, "threads={threads} n={n} {got:?}");
+                assert!(got.len() <= threads.min(n));
+            }
+        }
+    }
+
+    #[test]
+    fn min_chunk_bounds_task_count() {
+        let exec = Exec::new(ExecConfig::with_threads(8));
+        let calls = Mutex::new(Vec::new());
+        exec.run_chunks(10, 5, &|lo, hi| calls.lock().unwrap().push((lo, hi)));
+        assert!(calls.into_inner().unwrap().len() <= 2, "10 items / min 5 per chunk");
+    }
+
+    #[test]
+    fn join_runs_both_sides() {
+        for exec in [Exec::serial(), Exec::new(ExecConfig::with_threads(2))] {
+            let a = AtomicUsize::new(0);
+            let b = AtomicUsize::new(0);
+            exec.join(
+                || {
+                    a.store(7, Ordering::Relaxed);
+                },
+                || {
+                    b.store(9, Ordering::Relaxed);
+                },
+            );
+            assert_eq!((a.load(Ordering::Relaxed), b.load(Ordering::Relaxed)), (7, 9));
+        }
+    }
+
+    #[test]
+    fn config_resolution() {
+        assert_eq!(ExecConfig::serial().resolve(), 1);
+        assert_eq!(ExecConfig::with_threads(5).resolve(), 5);
+        assert!(ExecConfig::auto().resolve() >= 1);
+    }
+
+    #[test]
+    fn send_ptr_disjoint_writes() {
+        let exec = Exec::new(ExecConfig::with_threads(4));
+        let n = 257;
+        let mut out = vec![0usize; n];
+        let ptr = SendPtr::new(&mut out);
+        let ptr = &ptr;
+        exec.run_chunks(n, 1, &|lo, hi| {
+            for i in lo..hi {
+                // SAFETY: chunks are disjoint and in bounds.
+                unsafe { ptr.write(i, i * 3) };
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! A persistent fork–join worker pool on `std::thread` + channels-free
+//! shared queue (no external deps).
+//!
+//! Design:
+//!
+//! * Workers block on a `Condvar` over one shared FIFO of jobs.
+//! * [`ThreadPool::scope`] submits a batch of borrowed closures and then
+//!   **helps**: while its batch is unfinished, the submitting thread pops
+//!   and runs queued jobs itself. Help-while-waiting makes nested scopes (a
+//!   pooled task that itself calls `scope`, e.g. a cell's gate GEMM that
+//!   row-shards) deadlock-free — a blocked waiter drains the queue instead
+//!   of holding an execution slot hostage.
+//! * Completion is tracked by a per-batch atomic counter; the last task of
+//!   a batch notifies the shared condvar (one condvar serves both "new
+//!   job" and "batch done" — waiters re-check their predicate).
+//! * Dropping the pool sets the shutdown flag and joins every worker.
+//!   Scopes borrow the pool and block until their tasks finish, so the
+//!   queue is always empty by the time `Drop` can run and shutdown is
+//!   prompt — no leaked threads, no deadlock on drop.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A queued unit of work (lifetime erased; see [`ThreadPool::scope`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    cv: Condvar,
+}
+
+/// Completion state of one `scope` call.
+struct Batch {
+    remaining: AtomicUsize,
+    /// First panic payload of the batch — re-raised by the scope owner via
+    /// `resume_unwind`, so a pooled panic looks like a serial one.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// The persistent worker pool behind [`super::Exec`].
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool whose total concurrency is `threads`: `threads − 1` OS
+    /// workers plus the scope-calling thread itself (which helps while it
+    /// waits). `threads` must be ≥ 2 — a 1-thread "pool" is the serial path
+    /// and needs no pool at all (see [`super::Exec`]).
+    pub fn new(threads: usize) -> Self {
+        assert!(threads >= 2, "a 1-thread pool is the serial path");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("amq-exec-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        ThreadPool { shared, handles, threads }
+    }
+
+    /// Total concurrency: OS workers + the helping scope caller.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task to completion, in parallel, with the caller helping.
+    ///
+    /// Tasks may borrow from the caller's stack: `scope` does not return
+    /// until every task has finished running, so the erased lifetimes can
+    /// never dangle. A panic inside a task is caught (keeping the worker
+    /// alive) and re-raised here after the whole batch has completed.
+    pub fn scope<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let batch = Arc::new(Batch {
+            remaining: AtomicUsize::new(tasks.len()),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for task in tasks {
+                // SAFETY: `scope` blocks until `remaining` hits zero, i.e.
+                // until this closure has run to completion, so every borrow
+                // inside it outlives its use. Tasks are never dropped
+                // unexecuted: shutdown only happens on pool drop, which
+                // cannot run while a scope borrows the pool.
+                let task: Job =
+                    unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task) };
+                let batch = batch.clone();
+                let shared = self.shared.clone();
+                q.jobs.push_back(Box::new(move || {
+                    if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(task)) {
+                        let mut slot = batch.panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                    if batch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        // Last task of the batch: take the lock so the scope
+                        // owner cannot miss the wakeup between its predicate
+                        // check and its wait.
+                        drop(shared.queue.lock().unwrap());
+                        shared.cv.notify_all();
+                    }
+                }));
+            }
+            self.shared.cv.notify_all();
+        }
+        // Help while waiting: run whatever is queued (this batch or a
+        // nested one) instead of blocking an execution slot.
+        let mut q = self.shared.queue.lock().unwrap();
+        while batch.remaining.load(Ordering::Acquire) != 0 {
+            if let Some(job) = q.jobs.pop_front() {
+                drop(q);
+                job();
+                q = self.shared.queue.lock().unwrap();
+            } else {
+                q = self.shared.cv.wait(q).unwrap();
+            }
+        }
+        drop(q);
+        if let Some(payload) = batch.panic.lock().unwrap().take() {
+            panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job<'a>(f: impl FnOnce() + Send + 'a) -> Box<dyn FnOnce() + Send + 'a> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn scope_runs_all_tasks() {
+        let pool = ThreadPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let tasks = (0..10)
+            .map(|_| {
+                job(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn tasks_can_borrow_and_write_disjoint_state() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 64];
+        let tasks = out
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, chunk)| {
+                job(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = i * 16 + j;
+                    }
+                })
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // Every task spawns its own sub-scope on the same (tiny) pool; the
+        // help-while-waiting loop must keep everything flowing.
+        let pool = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let tasks = (0..4)
+            .map(|_| {
+                let (pool, hits) = (&pool, &hits);
+                job(move || {
+                    let subtasks = (0..3)
+                        .map(|_| {
+                            job(|| {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            })
+                        })
+                        .collect();
+                    pool.scope(subtasks);
+                })
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = ThreadPool::new(4);
+        pool.scope(vec![job(|| {})]);
+        drop(pool); // must return promptly with no worker left behind
+    }
+
+    #[test]
+    fn task_panic_propagates_after_batch_completes() {
+        let pool = ThreadPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks = vec![
+                job(|| panic!("boom")),
+                job(|| {
+                    done.fetch_add(1, Ordering::Relaxed);
+                }),
+            ];
+            pool.scope(tasks);
+        }));
+        assert!(result.is_err(), "panic must propagate to the scope owner");
+        assert_eq!(done.load(Ordering::Relaxed), 1, "other tasks still ran");
+        // The pool stays usable after a task panic.
+        let hits = AtomicUsize::new(0);
+        pool.scope(vec![job(|| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+}

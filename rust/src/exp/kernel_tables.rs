@@ -1,8 +1,10 @@
 //! Table 6 (Appendix A): binary matrix–vector timing on CPU, with the
-//! online quantization cost broken out, plus the §3/§4 analytic cost model.
+//! online quantization cost broken out, plus the §3/§4 analytic cost model,
+//! the batched-GEMM sweep over B, and the worker-pool thread-scaling sweep.
 
+use crate::exec::{Exec, ExecConfig};
 use crate::kernels::{binary, cost, dense};
-use crate::quant::{Method, RowQuantized};
+use crate::quant::{Method, QuantizedBatch, RowQuantized};
 use crate::util::timer::{bench_fn, black_box};
 use crate::util::Rng;
 
@@ -168,6 +170,91 @@ pub fn render_batch_sweep(rows: &[BatchSweepRow]) -> String {
     s
 }
 
+/// One row of the thread-scaling sweep: the same row-sharded batched GEMM
+/// ([`binary::PreparedGemm::gemm_exec`]) on a `threads`-wide worker pool.
+#[derive(Clone, Debug)]
+pub struct ThreadSweepRow {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub threads: usize,
+    /// Median wall time of one batched GEMM (activations pre-quantized, so
+    /// this isolates the kernel's scaling).
+    pub total_ms: f64,
+    /// Speedup vs the `threads = 1` row of the same shape.
+    pub speedup: f64,
+}
+
+/// Sweep the row-sharded batched GEMM over worker-pool sizes — the scaling
+/// curve of the execution engine. The activation batch is quantized once up
+/// front; every thread count computes the bit-identical output (pinned by
+/// `rust/tests/exec_parity.rs`), so the only variable is wall time.
+pub fn gemm_thread_sweep(
+    shapes: &[(usize, usize)],
+    batch: usize,
+    k: usize,
+    threads: &[usize],
+    samples: usize,
+) -> Vec<ThreadSweepRow> {
+    let mut rows = Vec::new();
+    for &(m, n) in shapes {
+        let mut rng = Rng::new(0xD00D + m as u64);
+        let w = rng.normal_vec(m * n, 0.05);
+        let prep = binary::PreparedGemm::new(&RowQuantized::quantize(
+            &w,
+            m,
+            n,
+            k,
+            Method::Alternating { t: 2 },
+        ));
+        let x = rng.normal_vec(batch * n, 0.5);
+        let xq = QuantizedBatch::quantize(&x, batch, n, k);
+        let mut shape_rows = Vec::new();
+        for &t in threads {
+            let exec = Exec::new(ExecConfig::with_threads(t.max(1)));
+            let mut y = vec![0.0f32; batch * m];
+            let r = bench_fn(&format!("gemm {m}x{n} k={k} b={batch} t={t}"), samples, || {
+                prep.gemm_exec(&xq, &mut y, &exec);
+                black_box(&y);
+            });
+            shape_rows.push(ThreadSweepRow {
+                m,
+                n,
+                k,
+                batch,
+                threads: exec.threads(),
+                total_ms: r.median_ms(),
+                speedup: 1.0,
+            });
+        }
+        let base = shape_rows
+            .iter()
+            .find(|r| r.threads == 1)
+            .map(|r| r.total_ms)
+            .unwrap_or_else(|| shape_rows.first().map(|r| r.total_ms).unwrap_or(0.0));
+        for r in &mut shape_rows {
+            r.speedup = if r.total_ms > 0.0 { base / r.total_ms } else { 1.0 };
+        }
+        rows.extend(shape_rows);
+    }
+    rows
+}
+
+pub fn render_thread_sweep(rows: &[ThreadSweepRow]) -> String {
+    let mut s = String::from(
+        "Row-sharded binary GEMM thread scaling (disjoint output-row ranges)\n\
+         Weight Size      W/A bits  Batch  Threads   Total(ms)   vs 1 thread\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>7}x{:<7}  {:>5}/{:<2}  {:>5}  {:>7}   {:>9.3}   {:>9.2}x\n",
+            r.m, r.n, r.k, r.k, r.batch, r.threads, r.total_ms, r.speedup
+        ));
+    }
+    s
+}
+
 /// The §4 cost-model table: theoretical γ vs measured acceleration.
 pub fn costmodel(shapes: &[(usize, usize)], measured: &[Table6Row]) -> String {
     let mut s = String::from("Cost model (§4): theoretical gamma vs measured acceleration\n");
@@ -215,6 +302,18 @@ mod tests {
         assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.vecs_per_sec > 0.0));
         let s = render_batch_sweep(&rows);
         assert!(s.contains("vs B=1"), "{s}");
+    }
+
+    #[test]
+    fn thread_sweep_runs_and_renders() {
+        let rows = gemm_thread_sweep(&[(96, 200)], 4, 2, &[1, 2], 3);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].threads, 1);
+        assert_eq!(rows[1].threads, 2);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-9);
+        assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.speedup > 0.0));
+        let s = render_thread_sweep(&rows);
+        assert!(s.contains("vs 1 thread"), "{s}");
     }
 
     #[test]

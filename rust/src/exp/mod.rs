@@ -12,6 +12,9 @@ pub mod kernel_tables;
 pub mod lm_tables;
 
 pub use image_tables::{table7, table8, table9};
-pub use kernel_tables::{costmodel, gemm_batch_sweep, render_batch_sweep, table6};
+pub use kernel_tables::{
+    costmodel, gemm_batch_sweep, gemm_thread_sweep, render_batch_sweep, render_thread_sweep,
+    table6,
+};
 pub use lm_tables::{table3_4_5, train_tag};
 pub use quant_tables::table1_2;

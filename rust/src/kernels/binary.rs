@@ -16,6 +16,7 @@
 //! Activations are quantized **online** with the alternating method
 //! (`T = 2`) — its cost is the "Quant" column of Table 6.
 
+use crate::exec::{Exec, SendPtr};
 use crate::quant::{alternating, Method, PackedBits, Quantized, QuantizedBatch, RowQuantized};
 
 /// Quantize an activation vector online (paper setting: alternating, T=2).
@@ -92,6 +93,12 @@ pub type PreparedGemv = PreparedGemm;
 /// weight-word load. 4 keeps the k_w·k_x·BB popcount counters in registers
 /// at the paper's bit widths.
 const GEMM_BLOCK: usize = 4;
+
+/// Minimum output rows per worker task when row-sharding the batched GEMM.
+/// 1 ⇒ oversubscription (`threads > rows`) degenerates to one task per row;
+/// correctness never depends on the partition (each output element has
+/// exactly one producer).
+const GEMM_MIN_ROWS_PER_TASK: usize = 1;
 
 impl PreparedGemm {
     pub fn new(w: &RowQuantized) -> Self {
@@ -223,7 +230,7 @@ impl PreparedGemm {
     }
 
     /// Batched XNOR/popcount GEMM: `Y[b] = Ŵ x̂[b]` for every column of the
-    /// batch, `y` row-major `batch × rows`.
+    /// batch, `y` row-major `batch × rows` (serial engine).
     ///
     /// All batch blocks of a weight row complete before the next row is
     /// touched, so the packed weight planes stream from memory **once per
@@ -231,26 +238,46 @@ impl PreparedGemm {
     /// reduced in exactly the order of [`Self::gemv`], so `gemm` bit-matches
     /// `gemv` column by column.
     pub fn gemm(&self, x: &QuantizedBatch, y: &mut [f32]) {
+        self.gemm_exec(x, y, &Exec::serial());
+    }
+
+    /// Row-sharded batched GEMM: the output rows are split into disjoint
+    /// contiguous ranges, one per worker of `exec`. Every `y[b·rows + r]`
+    /// is produced by exactly one task running the identical scalar
+    /// reduction as the serial path, so the result is **bit-exact for any
+    /// thread count** (pinned by `rust/tests/exec_parity.rs`).
+    pub fn gemm_exec(&self, x: &QuantizedBatch, y: &mut [f32], exec: &Exec) {
         assert_eq!(self.cols, x.n, "inner dimension mismatch");
         assert_eq!(y.len(), x.batch * self.rows, "output batch shape mismatch");
         let (kw, kx) = (self.k, x.k);
         assert!(kw <= MAX_K && kx <= MAX_K, "bit width beyond MAX_K");
-        match (kw, kx) {
-            (1, 1) => self.gemm_const::<1, 1>(x, y),
-            (2, 2) => self.gemm_const::<2, 2>(x, y),
-            (2, 3) => self.gemm_const::<2, 3>(x, y),
-            (3, 2) => self.gemm_const::<3, 2>(x, y),
-            (3, 3) => self.gemm_const::<3, 3>(x, y),
-            (4, 4) => self.gemm_const::<4, 4>(x, y),
-            _ => self.gemm_generic(x, y),
-        }
+        let out = SendPtr::new(y);
+        let out = &out;
+        exec.run_chunks(self.rows, GEMM_MIN_ROWS_PER_TASK, &|r0, r1| match (kw, kx) {
+            (1, 1) => self.gemm_rows::<1, 1>(x, out, r0, r1),
+            (2, 2) => self.gemm_rows::<2, 2>(x, out, r0, r1),
+            (2, 3) => self.gemm_rows::<2, 3>(x, out, r0, r1),
+            (3, 2) => self.gemm_rows::<3, 2>(x, out, r0, r1),
+            (3, 3) => self.gemm_rows::<3, 3>(x, out, r0, r1),
+            (4, 4) => self.gemm_rows::<4, 4>(x, out, r0, r1),
+            _ => self.gemm_rows_generic(x, out, r0, r1),
+        });
     }
 
-    fn gemm_const<const KW: usize, const KX: usize>(&self, x: &QuantizedBatch, y: &mut [f32]) {
+    /// The batched kernel over output rows `r0..r1`. Writes only indices
+    /// `y[b·rows + r]` with `r ∈ [r0, r1)` — the disjoint-write contract of
+    /// the row sharding.
+    fn gemm_rows<const KW: usize, const KX: usize>(
+        &self,
+        x: &QuantizedBatch,
+        out: &SendPtr<f32>,
+        r0: usize,
+        r1: usize,
+    ) {
         let n = self.cols as i32;
         let wpp = self.words_per_plane;
         let row_words = KW * wpp;
-        for r in 0..self.rows {
+        for r in r0..r1 {
             let row = &self.data[r * row_words..(r + 1) * row_words];
             let mut b0 = 0;
             while b0 < x.batch {
@@ -284,19 +311,20 @@ impl PreparedGemm {
                         }
                         acc += self.alphas[r * KW + t] * inner;
                     }
-                    y[b * self.rows + r] = acc;
+                    // SAFETY: r ∈ [r0, r1) — this task's disjoint row range.
+                    unsafe { out.write(b * self.rows + r, acc) };
                 }
                 b0 += bb;
             }
         }
     }
 
-    fn gemm_generic(&self, x: &QuantizedBatch, y: &mut [f32]) {
+    fn gemm_rows_generic(&self, x: &QuantizedBatch, out: &SendPtr<f32>, r0: usize, r1: usize) {
         let (kw, kx) = (self.k, x.k);
         let n = self.cols as i32;
         let wpp = self.words_per_plane;
         let row_words = kw * wpp;
-        for r in 0..self.rows {
+        for r in r0..r1 {
             let row = &self.data[r * row_words..(r + 1) * row_words];
             let mut b0 = 0;
             while b0 < x.batch {
@@ -326,7 +354,8 @@ impl PreparedGemm {
                         }
                         acc += self.alphas[r * kw + t] * inner;
                     }
-                    y[b * self.rows + r] = acc;
+                    // SAFETY: r ∈ [r0, r1) — this task's disjoint row range.
+                    unsafe { out.write(b * self.rows + r, acc) };
                 }
                 b0 += bb;
             }
@@ -336,8 +365,14 @@ impl PreparedGemm {
     /// Quantize a row-major `batch × cols` activation matrix online, then
     /// run the batched GEMM (full request path for a timestep batch).
     pub fn online_gemm(&self, x: &[f32], batch: usize, k_x: usize, y: &mut [f32]) {
-        let xq = QuantizedBatch::quantize(x, batch, self.cols, k_x);
-        self.gemm(&xq, y);
+        self.online_gemm_exec(x, batch, k_x, y, &Exec::serial());
+    }
+
+    /// [`Self::online_gemm`] on an execution engine: the per-row online
+    /// quantization and the GEMM rows are both sharded across the workers.
+    pub fn online_gemm_exec(&self, x: &[f32], batch: usize, k_x: usize, y: &mut [f32], exec: &Exec) {
+        let xq = QuantizedBatch::quantize_exec(x, batch, self.cols, k_x, exec);
+        self.gemm_exec(&xq, y, exec);
     }
 }
 

@@ -28,6 +28,16 @@
 //! (right). Single-vector entry points (`matvec`, `step`) remain as exact
 //! `B = 1` paths for the trainer and simple callers.
 //!
+//! It is also **multi-threaded**: the [`exec`] engine (a std-only
+//! persistent worker pool) row-shards every batched GEMM, the per-row
+//! weight quantization, and the online activation quantization across CPU
+//! cores, and runs the recurrent cells' two gate products as parallel
+//! tasks. Sharding follows boundaries the serial code already treats
+//! independently, so every `*_exec` path is **bit-exact** against its
+//! serial counterpart for any thread count (`rust/tests/exec_parity.rs`) —
+//! `threads = 1` *is* the serial path. The server exposes the knob as
+//! `BatcherConfig::exec` / `amq serve --threads N` (default: all cores).
+//!
 //! ## Quick tour
 //!
 //! ```
@@ -63,6 +73,7 @@
 pub mod cli;
 pub mod config;
 pub mod data;
+pub mod exec;
 pub mod exp;
 pub mod kernels;
 pub mod metrics;

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //! ```text
-//! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 ..]
+//! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 --threads N ..]
 //! amq train    --tag lstm_fp [--dataset ptb|wt2|text8] [--epochs N] ...
 //! amq quantize --bits 2 [--method alternating[:cycles]] [--checkpoint f.amqt]
 //! amq bench    table1|table2|table3|table4|table5|table6|table7|table8|table9|costmodel
@@ -16,6 +16,7 @@ use std::sync::Arc;
 use amq::cli::Cli;
 use amq::config::{Config, ModelConfig, ServerConfig};
 use amq::data::{Corpus, DatasetSpec};
+use amq::exec::{Exec, ExecConfig};
 use amq::exp;
 use amq::model::lm::{PrecisionPolicy, RnnLm};
 use amq::quant::{self, Method};
@@ -101,6 +102,10 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         (s, m)
     };
 
+    // `--threads` overrides the config file; 1 = serial, 0 = auto.
+    let exec_cfg = ExecConfig::with_threads(cli.get_usize("threads", server_cfg.threads)?);
+    let exec = Exec::new(exec_cfg);
+
     let policy = if model_cfg.quantized {
         PrecisionPolicy::quantized(model_cfg.w_bits, model_cfg.a_bits)
     } else {
@@ -110,15 +115,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         Some(p) => {
             let ckpt = amq::data::checkpoint::Checkpoint::load(std::path::Path::new(p))?;
             let w = amq::train::trainer::weights_from_checkpoint(&ckpt, &model_cfg.lm)?;
-            RnnLm::from_weights(model_cfg.lm, &w, policy)
+            RnnLm::from_weights_exec(model_cfg.lm, &w, policy, &exec)
         }
         None => {
             eprintln!("note: no checkpoint configured — serving a randomly initialized model");
-            RnnLm::random(model_cfg.lm, model_cfg.seed, policy)
+            RnnLm::random_exec(model_cfg.lm, model_cfg.seed, policy, &exec)
         }
     };
     eprintln!(
-        "model: {} vocab={} hidden={} {} ({} weight bytes)",
+        "model: {} vocab={} hidden={} {} ({} weight bytes, {} exec threads)",
         model.config.kind.name(),
         model.config.vocab,
         model.config.hidden,
@@ -127,16 +132,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         } else {
             "FP".into()
         },
-        model.bytes()
+        model.bytes(),
+        exec.threads()
     );
 
-    let server = InferenceServer::new(
+    let server = InferenceServer::with_exec(
         Arc::new(model),
         BatcherConfig {
             max_batch: server_cfg.max_batch,
             batch_wait: std::time::Duration::from_micros(server_cfg.batch_wait_us),
             max_sessions: server_cfg.max_sessions,
+            exec: exec_cfg,
         },
+        exec,
     );
     let (tx, rx) = mpsc::channel::<Work>();
     std::thread::spawn(move || server.run(rx));

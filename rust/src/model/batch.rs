@@ -14,6 +14,7 @@
 //! [`ActivationBatch::single`] constructor adapts a lone vector when a
 //! caller wants the batched API directly.
 
+use crate::exec::Exec;
 use crate::quant::{Method, QuantizedBatch};
 
 /// `B` activation vectors of dimension `n`, row-major.
@@ -80,6 +81,12 @@ impl ActivationBatch {
     /// serving path).
     pub fn quantize(&self, k: usize) -> QuantizedBatch {
         QuantizedBatch::quantize(&self.data, self.batch, self.n, k)
+    }
+
+    /// [`Self::quantize`] on an execution engine: the per-row online
+    /// quantization shards across workers, bit-identically.
+    pub fn quantize_exec(&self, k: usize, exec: &Exec) -> QuantizedBatch {
+        QuantizedBatch::quantize_exec(&self.data, self.batch, self.n, k, exec)
     }
 
     /// Quantize with an explicit method (ablations).

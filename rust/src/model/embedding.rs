@@ -6,6 +6,7 @@
 //! quantization cost**.
 
 use super::batch::ActivationBatch;
+use crate::exec::Exec;
 use crate::quant::{Method, Quantized, QuantizedBatch, RowQuantized};
 
 /// Embedding lookup result: dense, or a ready-made multi-bit activation.
@@ -46,9 +47,15 @@ impl Embedding {
 
     /// Quantize each embedding row to `k` bits with the alternating method.
     pub fn new_quantized(w: Vec<f32>, vocab: usize, dim: usize, k: usize) -> Self {
+        Self::new_quantized_exec(w, vocab, dim, k, &Exec::serial())
+    }
+
+    /// [`Self::new_quantized`] with the per-row quantization sharded across
+    /// `exec`'s workers (bit-identical table for any thread count).
+    pub fn new_quantized_exec(w: Vec<f32>, vocab: usize, dim: usize, k: usize, exec: &Exec) -> Self {
         assert_eq!(w.len(), vocab * dim);
         Embedding::Quant {
-            w: RowQuantized::quantize(&w, vocab, dim, k, Method::Alternating { t: 2 }),
+            w: RowQuantized::quantize_exec(&w, vocab, dim, k, Method::Alternating { t: 2 }, exec),
         }
     }
 

@@ -13,6 +13,7 @@
 use super::batch::{ActivationBatch, OutputBatch};
 use super::linear::{Linear, LinearOp, Precision};
 use super::math::sigmoid;
+use crate::exec::Exec;
 use crate::quant::QuantizedBatch;
 use crate::util::Rng;
 
@@ -46,12 +47,26 @@ impl GruCell {
         hidden: usize,
         precision: Precision,
     ) -> Self {
+        Self::from_dense_exec(wx, wh, bias, input, hidden, precision, &Exec::serial())
+    }
+
+    /// [`Self::from_dense`] with the per-row weight quantization sharded
+    /// across `exec`'s workers (bit-identical cell for any thread count).
+    pub fn from_dense_exec(
+        wx: Vec<f32>,
+        wh: Vec<f32>,
+        bias: Vec<f32>,
+        input: usize,
+        hidden: usize,
+        precision: Precision,
+        exec: &Exec,
+    ) -> Self {
         assert_eq!(wx.len(), 3 * hidden * input);
         assert_eq!(wh.len(), 3 * hidden * hidden);
         assert_eq!(bias.len(), 3 * hidden);
         GruCell {
-            wx: Linear::new(wx, 3 * hidden, input, precision),
-            wh: Linear::new(wh, 3 * hidden, hidden, precision),
+            wx: Linear::new_exec(wx, 3 * hidden, input, precision, exec),
+            wh: Linear::new_exec(wh, 3 * hidden, hidden, precision, exec),
             bias,
             hidden,
             input,
@@ -82,23 +97,51 @@ impl GruCell {
     /// the hidden-row [`ActivationBatch`]). Bit-matches `B` independent
     /// [`Self::step`] calls column by column.
     pub fn step_batch(&self, x: &ActivationBatch, h: &ActivationBatch) -> ActivationBatch {
+        self.step_batch_exec(x, h, &Exec::serial())
+    }
+
+    /// [`Self::step_batch`] on an execution engine: the `W_x` and `W_h`
+    /// gate products run as two independent pooled tasks, each row-sharding
+    /// its GEMM across the same workers (nested scopes). Bit-exact vs
+    /// [`Self::step_batch`] for any thread count.
+    pub fn step_batch_exec(
+        &self,
+        x: &ActivationBatch,
+        h: &ActivationBatch,
+        exec: &Exec,
+    ) -> ActivationBatch {
         assert_eq!(x.batch(), h.batch(), "batch mismatch");
         let h3 = 3 * self.hidden;
         let mut gx = OutputBatch::zeros(x.batch(), h3);
         let mut gh = OutputBatch::zeros(x.batch(), h3);
-        self.wx.forward(x, &mut gx);
-        self.wh.forward(h, &mut gh);
+        exec.join(
+            || self.wx.forward_exec(x, &mut gx, exec),
+            || self.wh.forward_exec(h, &mut gh, exec),
+        );
         self.combine_batch(&gx, &gh, h)
     }
 
     /// Batched step from pre-quantized inputs.
     pub fn step_batch_prequant(&self, xq: &QuantizedBatch, h: &ActivationBatch) -> ActivationBatch {
+        self.step_batch_prequant_exec(xq, h, &Exec::serial())
+    }
+
+    /// [`Self::step_batch_prequant`] on an execution engine (see
+    /// [`Self::step_batch_exec`]).
+    pub fn step_batch_prequant_exec(
+        &self,
+        xq: &QuantizedBatch,
+        h: &ActivationBatch,
+        exec: &Exec,
+    ) -> ActivationBatch {
         assert_eq!(xq.batch, h.batch(), "batch mismatch");
         let h3 = 3 * self.hidden;
         let mut gx = OutputBatch::zeros(xq.batch, h3);
         let mut gh = OutputBatch::zeros(xq.batch, h3);
-        self.wx.forward_prequant(xq, &mut gx);
-        self.wh.forward(h, &mut gh);
+        exec.join(
+            || self.wx.forward_prequant_exec(xq, &mut gx, exec),
+            || self.wh.forward_exec(h, &mut gh, exec),
+        );
         self.combine_batch(&gx, &gh, h)
     }
 

@@ -10,6 +10,7 @@
 //! trainer and legacy callers.
 
 use super::batch::{ActivationBatch, OutputBatch};
+use crate::exec::{Exec, SendPtr};
 use crate::kernels::binary::PreparedGemm;
 use crate::kernels::{binary, dense};
 use crate::quant::{Method, Quantized, QuantizedBatch, RowQuantized};
@@ -24,20 +25,32 @@ pub enum Precision {
 
 /// A batched linear map `y_b = W x_b` for every column `b` of the batch.
 ///
-/// Implementors must be **exact** across batch sizes: `forward` on a
-/// `B`-column batch bit-matches `B` independent single-column calls, so the
-/// server's dynamic batching never changes what a session sees.
+/// Implementors must be **exact** across batch sizes *and* thread counts:
+/// `forward_exec` on a `B`-column batch bit-matches `B` independent
+/// single-column calls for any [`Exec`], so neither the server's dynamic
+/// batching nor its worker pool ever changes what a session sees.
 pub trait LinearOp {
     fn rows(&self) -> usize;
     fn cols(&self) -> usize;
 
-    /// Batched forward: `y.row(b) = W · x.row(b)`. Quantized backends
-    /// quantize `x` online, once for the whole batch.
-    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch);
+    /// Batched forward on an execution engine: `y.row(b) = W · x.row(b)`.
+    /// Quantized backends quantize `x` online once for the whole batch
+    /// (sharded per row) and row-shard the GEMM across `exec`'s workers.
+    fn forward_exec(&self, x: &ActivationBatch, y: &mut OutputBatch, exec: &Exec);
 
     /// Batched forward from pre-quantized activations (e.g. rows looked up
     /// from a quantized embedding table — zero online quantization cost).
-    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch);
+    fn forward_prequant_exec(&self, x: &QuantizedBatch, y: &mut OutputBatch, exec: &Exec);
+
+    /// Serial batched forward (`B = threads = 1` semantics of old).
+    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
+        self.forward_exec(x, y, &Exec::serial());
+    }
+
+    /// Serial batched forward from pre-quantized activations.
+    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
+        self.forward_prequant_exec(x, y, &Exec::serial());
+    }
 }
 
 fn check_shapes(op: &impl LinearOp, x_batch: usize, x_dim: usize, y: &OutputBatch) {
@@ -74,19 +87,34 @@ impl LinearOp for DenseLinear {
         self.cols
     }
 
-    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
+    fn forward_exec(&self, x: &ActivationBatch, y: &mut OutputBatch, exec: &Exec) {
         check_shapes(self, x.batch(), x.dim(), y);
-        for b in 0..x.batch() {
-            dense::gemv(&self.w, self.rows, self.cols, x.row(b), y.row_mut(b));
-        }
+        let rows = self.rows;
+        let out = SendPtr::new(y.data_mut());
+        let out = &out;
+        // Columns are independent f32 GEMVs — shard the batch dimension.
+        exec.run_chunks(x.batch(), 1, &|b0, b1| {
+            for b in b0..b1 {
+                // SAFETY: column b's output row is written only by this task.
+                let yb = unsafe { out.slice_mut(b * rows, rows) };
+                dense::gemv(&self.w, self.rows, self.cols, x.row(b), yb);
+            }
+        });
     }
 
-    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
+    fn forward_prequant_exec(&self, x: &QuantizedBatch, y: &mut OutputBatch, exec: &Exec) {
         check_shapes(self, x.batch, x.n, y);
-        for b in 0..x.batch {
-            let xd = x.column(b).dequantize();
-            dense::gemv(&self.w, self.rows, self.cols, &xd, y.row_mut(b));
-        }
+        let rows = self.rows;
+        let out = SendPtr::new(y.data_mut());
+        let out = &out;
+        exec.run_chunks(x.batch, 1, &|b0, b1| {
+            for b in b0..b1 {
+                let xd = x.column(b).dequantize();
+                // SAFETY: column b's output row is written only by this task.
+                let yb = unsafe { out.slice_mut(b * rows, rows) };
+                dense::gemv(&self.w, self.rows, self.cols, &xd, yb);
+            }
+        });
     }
 }
 
@@ -101,7 +129,24 @@ pub struct QuantLinear {
 
 impl QuantLinear {
     pub fn new(w: Vec<f32>, rows: usize, cols: usize, k_w: usize, k_a: usize, method: Method) -> Self {
-        QuantLinear { w: PreparedGemm::new(&RowQuantized::quantize(&w, rows, cols, k_w, method)), k_a }
+        Self::new_exec(w, rows, cols, k_w, k_a, method, &Exec::serial())
+    }
+
+    /// Build with the per-row weight quantization sharded across `exec`'s
+    /// workers (bit-identical layers for any thread count).
+    pub fn new_exec(
+        w: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        k_w: usize,
+        k_a: usize,
+        method: Method,
+        exec: &Exec,
+    ) -> Self {
+        QuantLinear {
+            w: PreparedGemm::new(&RowQuantized::quantize_exec(&w, rows, cols, k_w, method, exec)),
+            k_a,
+        }
     }
 
     pub fn k_a(&self) -> usize {
@@ -122,15 +167,15 @@ impl LinearOp for QuantLinear {
         self.w.cols
     }
 
-    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
+    fn forward_exec(&self, x: &ActivationBatch, y: &mut OutputBatch, exec: &Exec) {
         check_shapes(self, x.batch(), x.dim(), y);
-        let xq = x.quantize(self.k_a);
-        self.w.gemm(&xq, y.data_mut());
+        let xq = x.quantize_exec(self.k_a, exec);
+        self.w.gemm_exec(&xq, y.data_mut(), exec);
     }
 
-    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
+    fn forward_prequant_exec(&self, x: &QuantizedBatch, y: &mut OutputBatch, exec: &Exec) {
         check_shapes(self, x.batch, x.n, y);
-        self.w.gemm(x, y.data_mut());
+        self.w.gemm_exec(x, y.data_mut(), exec);
     }
 }
 
@@ -145,11 +190,29 @@ pub enum Linear {
 impl Linear {
     /// Build from a dense row-major matrix under the given policy.
     pub fn new(w: Vec<f32>, rows: usize, cols: usize, precision: Precision) -> Self {
+        Self::new_exec(w, rows, cols, precision, &Exec::serial())
+    }
+
+    /// [`Self::new`] with the per-row weight quantization sharded across
+    /// `exec`'s workers (bit-identical layer for any thread count).
+    pub fn new_exec(
+        w: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        precision: Precision,
+        exec: &Exec,
+    ) -> Self {
         match precision {
             Precision::Full => Linear::Dense(DenseLinear::new(w, rows, cols)),
-            Precision::Quantized { k_w, k_a } => {
-                Linear::Quant(QuantLinear::new(w, rows, cols, k_w, k_a, Method::Alternating { t: 2 }))
-            }
+            Precision::Quantized { k_w, k_a } => Linear::Quant(QuantLinear::new_exec(
+                w,
+                rows,
+                cols,
+                k_w,
+                k_a,
+                Method::Alternating { t: 2 },
+                exec,
+            )),
         }
     }
 
@@ -235,12 +298,12 @@ impl LinearOp for Linear {
         self.op().cols()
     }
 
-    fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
-        self.op().forward(x, y)
+    fn forward_exec(&self, x: &ActivationBatch, y: &mut OutputBatch, exec: &Exec) {
+        self.op().forward_exec(x, y, exec)
     }
 
-    fn forward_prequant(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
-        self.op().forward_prequant(x, y)
+    fn forward_prequant_exec(&self, x: &QuantizedBatch, y: &mut OutputBatch, exec: &Exec) {
+        self.op().forward_prequant_exec(x, y, exec)
     }
 }
 
@@ -326,6 +389,29 @@ mod tests {
                 let mut yb = vec![0.0; m];
                 layer.matvec_prequant(&xq.column(b), &mut yb);
                 assert_eq!(y.row(b), &yb[..], "col {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_exec_bitmatches_serial_forward() {
+        use crate::exec::ExecConfig;
+        let mut rng = Rng::new(115);
+        let (m, n, batch) = (23, 70, 5);
+        let wv = rng.normal_vec(m * n, 0.3);
+        for layer in [
+            Linear::new(wv.clone(), m, n, Precision::Full),
+            Linear::new(wv.clone(), m, n, Precision::Quantized { k_w: 2, k_a: 2 }),
+        ] {
+            let x = rng.normal_vec(batch * n, 1.0);
+            let xb = ActivationBatch::from_flat(x, batch, n);
+            let mut y_serial = OutputBatch::zeros(batch, m);
+            layer.forward(&xb, &mut y_serial);
+            for threads in [2usize, 3, 8] {
+                let exec = Exec::new(ExecConfig::with_threads(threads));
+                let mut y = OutputBatch::zeros(batch, m);
+                layer.forward_exec(&xb, &mut y, &exec);
+                assert_eq!(y.data(), y_serial.data(), "threads={threads}");
             }
         }
     }

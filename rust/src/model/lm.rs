@@ -12,6 +12,7 @@ use super::gru::GruCell;
 use super::linear::{Linear, LinearOp, Precision};
 use super::lstm::{LstmCell, LstmState, LstmStateBatch};
 use super::math::log_softmax_at;
+use crate::exec::Exec;
 use crate::quant::QuantizedBatch;
 use crate::util::Rng;
 
@@ -166,30 +167,44 @@ impl LmWeights {
 impl RnnLm {
     /// Assemble a model from dense weights under a precision policy.
     pub fn from_weights(config: LmConfig, w: &LmWeights, policy: PrecisionPolicy) -> Self {
+        Self::from_weights_exec(config, w, policy, &Exec::serial())
+    }
+
+    /// [`Self::from_weights`] with every per-row weight quantization
+    /// (embedding, gate products, softmax) sharded across `exec`'s workers.
+    /// The built model is bit-identical for any thread count.
+    pub fn from_weights_exec(
+        config: LmConfig,
+        w: &LmWeights,
+        policy: PrecisionPolicy,
+        exec: &Exec,
+    ) -> Self {
         let (v, h) = (config.vocab, config.hidden);
         let embedding = match policy.embedding_bits {
             None => Embedding::new_dense(w.embedding.clone(), v, h),
-            Some(k) => Embedding::new_quantized(w.embedding.clone(), v, h, k),
+            Some(k) => Embedding::new_quantized_exec(w.embedding.clone(), v, h, k, exec),
         };
         let mut cells = Vec::new();
         for l in 0..config.layers {
             let input = h;
             let cell = match config.kind {
-                RnnKind::Lstm => Cell::Lstm(LstmCell::from_dense(
+                RnnKind::Lstm => Cell::Lstm(LstmCell::from_dense_exec(
                     w.wx[l].clone(),
                     w.wh[l].clone(),
                     w.bias[l].clone(),
                     input,
                     h,
                     policy.rnn,
+                    exec,
                 )),
-                RnnKind::Gru => Cell::Gru(GruCell::from_dense(
+                RnnKind::Gru => Cell::Gru(GruCell::from_dense_exec(
                     w.wx[l].clone(),
                     w.wh[l].clone(),
                     w.bias[l].clone(),
                     input,
                     h,
                     policy.rnn,
+                    exec,
                 )),
             };
             cells.push(cell);
@@ -198,16 +213,22 @@ impl RnnLm {
             config,
             embedding,
             cells,
-            softmax: Linear::new(w.softmax_w.clone(), v, h, policy.softmax),
+            softmax: Linear::new_exec(w.softmax_w.clone(), v, h, policy.softmax, exec),
             softmax_bias: w.softmax_b.clone(),
         }
     }
 
     /// Random model (tests, cold starts).
     pub fn random(config: LmConfig, seed: u64, policy: PrecisionPolicy) -> Self {
+        Self::random_exec(config, seed, policy, &Exec::serial())
+    }
+
+    /// [`Self::random`] built on an execution engine (see
+    /// [`Self::from_weights_exec`]).
+    pub fn random_exec(config: LmConfig, seed: u64, policy: PrecisionPolicy, exec: &Exec) -> Self {
         let mut rng = Rng::new(seed);
         let w = LmWeights::random(&config, &mut rng);
-        Self::from_weights(config, &w, policy)
+        Self::from_weights_exec(config, &w, policy, exec)
     }
 
     pub fn zero_state(&self) -> LmState {
@@ -291,6 +312,20 @@ impl RnnLm {
     /// weight matrix is swept **once for the whole batch** (Fig. 3 right);
     /// results bit-match `batch` independent [`Self::step`] calls.
     pub fn step_batch(&self, tokens: &[usize], state: &mut LmStateBatch) -> OutputBatch {
+        self.step_batch_exec(tokens, state, &Exec::serial())
+    }
+
+    /// [`Self::step_batch`] on an execution engine: the gate products of
+    /// every cell and the softmax GEMM are row-sharded across `exec`'s
+    /// workers. Bit-exact vs the serial [`Self::step_batch`] (and hence vs
+    /// per-session [`Self::step`]) for any thread count — the worker pool
+    /// is invisible to clients.
+    pub fn step_batch_exec(
+        &self,
+        tokens: &[usize],
+        state: &mut LmStateBatch,
+        exec: &Exec,
+    ) -> OutputBatch {
         let batch = tokens.len();
         assert!(batch > 0, "empty token batch");
         assert_eq!(batch, state.batch(), "token/state batch mismatch");
@@ -303,16 +338,16 @@ impl RnnLm {
             match (cell, &mut *state) {
                 (Cell::Lstm(c), LmStateBatch::Lstm(states)) => {
                     let s = match (&x, &x_prequant) {
-                        (None, Some(q)) if l == 0 => c.step_batch_prequant(q, &states[l]),
-                        _ => c.step_batch(x.as_ref().expect("dense input"), &states[l]),
+                        (None, Some(q)) if l == 0 => c.step_batch_prequant_exec(q, &states[l], exec),
+                        _ => c.step_batch_exec(x.as_ref().expect("dense input"), &states[l], exec),
                     };
                     x = Some(s.h.clone());
                     states[l] = s;
                 }
                 (Cell::Gru(c), LmStateBatch::Gru(states)) => {
                     let s = match (&x, &x_prequant) {
-                        (None, Some(q)) if l == 0 => c.step_batch_prequant(q, &states[l]),
-                        _ => c.step_batch(x.as_ref().expect("dense input"), &states[l]),
+                        (None, Some(q)) if l == 0 => c.step_batch_prequant_exec(q, &states[l], exec),
+                        _ => c.step_batch_exec(x.as_ref().expect("dense input"), &states[l], exec),
                     };
                     x = Some(s.clone());
                     states[l] = s;
@@ -322,7 +357,7 @@ impl RnnLm {
         }
         let top = x.expect("at least one layer");
         let mut logits = OutputBatch::zeros(batch, self.config.vocab);
-        self.softmax.forward(&top, &mut logits);
+        self.softmax.forward_exec(&top, &mut logits, exec);
         for b in 0..batch {
             for (l, &bias) in logits.row_mut(b).iter_mut().zip(&self.softmax_bias) {
                 *l += bias;

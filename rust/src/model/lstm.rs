@@ -9,6 +9,7 @@
 use super::batch::{ActivationBatch, OutputBatch};
 use super::linear::{Linear, LinearOp, Precision};
 use super::math::{sigmoid, dtanh};
+use crate::exec::Exec;
 use crate::quant::QuantizedBatch;
 use crate::util::Rng;
 
@@ -107,12 +108,26 @@ impl LstmCell {
         hidden: usize,
         precision: Precision,
     ) -> Self {
+        Self::from_dense_exec(wx, wh, bias, input, hidden, precision, &Exec::serial())
+    }
+
+    /// [`Self::from_dense`] with the per-row weight quantization sharded
+    /// across `exec`'s workers (bit-identical cell for any thread count).
+    pub fn from_dense_exec(
+        wx: Vec<f32>,
+        wh: Vec<f32>,
+        bias: Vec<f32>,
+        input: usize,
+        hidden: usize,
+        precision: Precision,
+        exec: &Exec,
+    ) -> Self {
         assert_eq!(wx.len(), 4 * hidden * input);
         assert_eq!(wh.len(), 4 * hidden * hidden);
         assert_eq!(bias.len(), 4 * hidden);
         LstmCell {
-            wx: Linear::new(wx, 4 * hidden, input, precision),
-            wh: Linear::new(wh, 4 * hidden, hidden, precision),
+            wx: Linear::new_exec(wx, 4 * hidden, input, precision, exec),
+            wh: Linear::new_exec(wh, 4 * hidden, hidden, precision, exec),
             bias,
             hidden,
             input,
@@ -144,24 +159,52 @@ impl LstmCell {
     /// batched forward each (the weight planes are swept once per batch).
     /// Bit-matches `B` independent [`Self::step`] calls column by column.
     pub fn step_batch(&self, x: &ActivationBatch, state: &LstmStateBatch) -> LstmStateBatch {
+        self.step_batch_exec(x, state, &Exec::serial())
+    }
+
+    /// [`Self::step_batch`] on an execution engine: the `W_x` and `W_h`
+    /// gate products run as two independent pooled tasks, and each one
+    /// row-shards its GEMM across the same workers (nested scopes). The
+    /// result is bit-exact vs [`Self::step_batch`] for any thread count.
+    pub fn step_batch_exec(
+        &self,
+        x: &ActivationBatch,
+        state: &LstmStateBatch,
+        exec: &Exec,
+    ) -> LstmStateBatch {
         assert_eq!(x.batch(), state.batch, "batch mismatch");
         let h4 = 4 * self.hidden;
         let mut gx = OutputBatch::zeros(x.batch(), h4);
         let mut gh = OutputBatch::zeros(x.batch(), h4);
-        self.wx.forward(x, &mut gx);
-        self.wh.forward(&state.h, &mut gh);
+        exec.join(
+            || self.wx.forward_exec(x, &mut gx, exec),
+            || self.wh.forward_exec(&state.h, &mut gh, exec),
+        );
         self.combine_batch(&gx, &gh, state)
     }
 
     /// Batched step from pre-quantized inputs (a quantized embedding's token
     /// batch).
     pub fn step_batch_prequant(&self, xq: &QuantizedBatch, state: &LstmStateBatch) -> LstmStateBatch {
+        self.step_batch_prequant_exec(xq, state, &Exec::serial())
+    }
+
+    /// [`Self::step_batch_prequant`] on an execution engine (see
+    /// [`Self::step_batch_exec`]).
+    pub fn step_batch_prequant_exec(
+        &self,
+        xq: &QuantizedBatch,
+        state: &LstmStateBatch,
+        exec: &Exec,
+    ) -> LstmStateBatch {
         assert_eq!(xq.batch, state.batch, "batch mismatch");
         let h4 = 4 * self.hidden;
         let mut gx = OutputBatch::zeros(xq.batch, h4);
         let mut gh = OutputBatch::zeros(xq.batch, h4);
-        self.wx.forward_prequant(xq, &mut gx);
-        self.wh.forward(&state.h, &mut gh);
+        exec.join(
+            || self.wx.forward_prequant_exec(xq, &mut gx, exec),
+            || self.wh.forward_exec(&state.h, &mut gh, exec),
+        );
         self.combine_batch(&gx, &gh, state)
     }
 

@@ -16,6 +16,7 @@
 //! ```
 
 use super::{quantize, Method, PackedBits, Quantized};
+use crate::exec::{Exec, SendPtr};
 
 /// `B` activation vectors of dimension `n`, each quantized to `k` bits,
 /// packed into shared contiguous plane storage.
@@ -43,22 +44,52 @@ impl QuantizedBatch {
         Self::quantize_with(x, batch, n, k, Method::Alternating { t: 2 })
     }
 
+    /// [`Self::quantize`] on an execution engine: rows are quantized
+    /// independently, so they shard across workers with bit-identical
+    /// output for any thread count.
+    pub fn quantize_exec(x: &[f32], batch: usize, n: usize, k: usize, exec: &Exec) -> Self {
+        Self::quantize_with_exec(x, batch, n, k, Method::Alternating { t: 2 }, exec)
+    }
+
     /// Quantize with an arbitrary method (ablations).
     pub fn quantize_with(x: &[f32], batch: usize, n: usize, k: usize, method: Method) -> Self {
+        Self::quantize_with_exec(x, batch, n, k, method, &Exec::serial())
+    }
+
+    /// Method + engine variant. Each row `b` writes only its own
+    /// `data[b·k·wpp ..]` / `alphas[b·k ..]` ranges — disjoint per row, so
+    /// row sharding is race-free and bit-exact by construction.
+    pub fn quantize_with_exec(
+        x: &[f32],
+        batch: usize,
+        n: usize,
+        k: usize,
+        method: Method,
+        exec: &Exec,
+    ) -> Self {
         assert_eq!(x.len(), batch * n, "batch shape mismatch");
         // Ternary always emits two planes regardless of `k` (see RowQuantized).
         let kk = if matches!(method, Method::Ternary) { 2 } else { k };
         let wpp = n.div_ceil(64);
-        let mut data = Vec::with_capacity(batch * kk * wpp);
-        let mut alphas = Vec::with_capacity(batch * kk);
-        for b in 0..batch {
-            let q = quantize(&x[b * n..(b + 1) * n], k, method);
-            debug_assert_eq!(q.k(), kk);
-            alphas.extend_from_slice(&q.alphas);
-            for plane in &q.planes {
-                data.extend_from_slice(plane.words());
+        let mut data = vec![0u64; batch * kk * wpp];
+        let mut alphas = vec![0.0f32; batch * kk];
+        let dptr = SendPtr::new(&mut data);
+        let aptr = SendPtr::new(&mut alphas);
+        let (dptr, aptr) = (&dptr, &aptr);
+        exec.run_chunks(batch, 1, &|b0, b1| {
+            for b in b0..b1 {
+                let q = quantize(&x[b * n..(b + 1) * n], k, method);
+                debug_assert_eq!(q.k(), kk);
+                // SAFETY: row b's coefficient and plane ranges are written
+                // by exactly this task (rows are disjoint across chunks).
+                let arow = unsafe { aptr.slice_mut(b * kk, kk) };
+                arow.copy_from_slice(&q.alphas);
+                for (s, plane) in q.planes.iter().enumerate() {
+                    let drow = unsafe { dptr.slice_mut((b * kk + s) * wpp, wpp) };
+                    drow.copy_from_slice(plane.words());
+                }
             }
-        }
+        });
         QuantizedBatch { batch, n, k: kk, words_per_plane: wpp, data, alphas }
     }
 

@@ -5,7 +5,10 @@
 //! little computation while greatly improving the approximation. This type
 //! is the weight-side operand of the binary GEMV kernels.
 
+use std::sync::Mutex;
+
 use super::{quantize, Method, PackedBits, Quantized};
+use crate::exec::Exec;
 
 /// A `rows × cols` matrix quantized row-by-row to `k` bits.
 #[derive(Clone, Debug)]
@@ -22,14 +25,50 @@ pub struct RowQuantized {
 impl RowQuantized {
     /// Quantize a dense row-major `rows × cols` matrix.
     pub fn quantize(w: &[f32], rows: usize, cols: usize, k: usize, method: Method) -> Self {
+        Self::quantize_exec(w, rows, cols, k, method, &Exec::serial())
+    }
+
+    /// [`Self::quantize`] on an execution engine. Rows are quantized
+    /// independently (the point of row-wise coefficients), so disjoint row
+    /// ranges shard across workers and are stitched back in row order —
+    /// bit-identical to the serial path for any thread count.
+    pub fn quantize_exec(
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        method: Method,
+        exec: &Exec,
+    ) -> Self {
         assert_eq!(w.len(), rows * cols, "matrix shape mismatch");
         let kk = if matches!(method, Method::Ternary) { 2 } else { k };
+        if !exec.is_parallel() {
+            let mut alphas = Vec::with_capacity(rows * kk);
+            let mut planes = Vec::with_capacity(rows * kk);
+            for r in 0..rows {
+                let q = quantize(&w[r * cols..(r + 1) * cols], k, method);
+                alphas.extend_from_slice(&q.alphas);
+                planes.extend(q.planes);
+            }
+            return RowQuantized { rows, cols, k: kk, alphas, planes };
+        }
+        // Parallel: quantize disjoint row ranges, then stitch in row order.
+        let chunks: Mutex<Vec<(usize, Vec<Quantized>)>> = Mutex::new(Vec::new());
+        exec.run_chunks(rows, 1, &|r0, r1| {
+            let part: Vec<Quantized> =
+                (r0..r1).map(|r| quantize(&w[r * cols..(r + 1) * cols], k, method)).collect();
+            chunks.lock().unwrap().push((r0, part));
+        });
+        let mut chunks = chunks.into_inner().unwrap();
+        chunks.sort_unstable_by_key(|c| c.0);
         let mut alphas = Vec::with_capacity(rows * kk);
         let mut planes = Vec::with_capacity(rows * kk);
-        for r in 0..rows {
-            let q = quantize(&w[r * cols..(r + 1) * cols], k, method);
-            alphas.extend_from_slice(&q.alphas);
-            planes.extend(q.planes);
+        for (_, part) in chunks {
+            for q in part {
+                debug_assert_eq!(q.k(), kk);
+                alphas.extend_from_slice(&q.alphas);
+                planes.extend(q.planes);
+            }
         }
         RowQuantized { rows, cols, k: kk, alphas, planes }
     }

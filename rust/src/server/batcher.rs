@@ -5,12 +5,16 @@
 //! throughput/latency knob), then runs generation in **lockstep across the
 //! batch**: one timestep for every active request per inner iteration, so
 //! short requests finish early and the weight planes are walked once per
-//! timestep group (Fig. 3 right).
+//! timestep group (Fig. 3 right). Each batched timestep executes on the
+//! server's [`Exec`] worker pool (`config.exec`), which row-shards every
+//! GEMM across cores — bit-exactly, so neither batching nor threading is
+//! observable to clients.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::exec::{Exec, ExecConfig};
 use crate::metrics::{Counters, LatencyRecorder};
 use crate::model::math::argmax;
 use crate::model::RnnLm;
@@ -22,6 +26,9 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     pub batch_wait: Duration,
     pub max_sessions: usize,
+    /// Worker-pool size for the batched forward (`threads = 1` ⇒ the exact
+    /// serial path, `0` ⇒ auto). See [`ExecConfig`].
+    pub exec: ExecConfig,
 }
 
 impl Default for BatcherConfig {
@@ -30,6 +37,7 @@ impl Default for BatcherConfig {
             max_batch: 16,
             batch_wait: Duration::from_micros(500),
             max_sessions: 1024,
+            exec: ExecConfig::auto(),
         }
     }
 }
@@ -66,19 +74,36 @@ pub struct InferenceServer {
     model: Arc<RnnLm>,
     sessions: SessionStore,
     config: BatcherConfig,
+    exec: Exec,
     pub latency: Arc<LatencyRecorder>,
     pub counters: Arc<Counters>,
 }
 
 impl InferenceServer {
     pub fn new(model: Arc<RnnLm>, config: BatcherConfig) -> Self {
+        let exec = Exec::new(config.exec);
+        Self::with_exec(model, config, exec)
+    }
+
+    /// Build with an existing engine (shares a pool already used to
+    /// quantize the model, instead of spawning a second one). The stored
+    /// config is normalized to the engine actually running, so
+    /// `config.exec` can never disagree with the pool serving requests.
+    pub fn with_exec(model: Arc<RnnLm>, mut config: BatcherConfig, exec: Exec) -> Self {
+        config.exec = ExecConfig::with_threads(exec.threads());
         InferenceServer {
             model,
             sessions: SessionStore::new(config.max_sessions),
             config,
+            exec,
             latency: Arc::new(LatencyRecorder::new()),
             counters: Arc::new(Counters::new()),
         }
+    }
+
+    /// The engine this server runs its batched forwards on.
+    pub fn exec(&self) -> &Exec {
+        &self.exec
     }
 
     /// Blocking event loop: drain work, batch generations, reply.
@@ -132,13 +157,14 @@ impl InferenceServer {
             Work::Stats { respond } => {
                 let snap = self.latency.snapshot();
                 let _ = respond.send(format!(
-                    "{} requests={} tokens={} batches={} evictions={} sessions={}",
+                    "{} requests={} tokens={} batches={} evictions={} sessions={} threads={}",
                     snap.report("latency"),
                     Counters::get(&self.counters.requests),
                     Counters::get(&self.counters.tokens_generated),
                     Counters::get(&self.counters.batches),
                     self.sessions.evictions,
                     self.sessions.len(),
+                    self.exec.threads(),
                 ));
             }
             Work::Shutdown => return false,
@@ -149,13 +175,15 @@ impl InferenceServer {
     /// Run one batch of generation requests in lockstep and reply to each.
     ///
     /// Both phases execute as **true batched forwards**
-    /// ([`RnnLm::step_batch`]): per timestep, the states of all still-active
-    /// slots are gathered into one `LmStateBatch`, the model runs one
-    /// batched step (each weight matrix swept once for the whole group —
-    /// Fig. 3 right), and the updated states scatter back. Because
-    /// `step_batch` bit-matches per-session `step`, batching is invisible
-    /// to clients: a session generates the same tokens regardless of who it
-    /// was batched with.
+    /// ([`RnnLm::step_batch_exec`] on the server's worker pool): per
+    /// timestep, the states of all still-active slots are gathered into one
+    /// `LmStateBatch`, the model runs one batched step (each weight matrix
+    /// swept once for the whole group — Fig. 3 right — with its rows
+    /// sharded across the pool), and the updated states scatter back.
+    /// Because `step_batch_exec` bit-matches per-session `step` for any
+    /// thread count, neither batching nor threading is visible to clients:
+    /// a session generates the same tokens regardless of who it was batched
+    /// with or how many cores served it.
     pub fn process_batch(&mut self, batch: Vec<Request>) {
         Counters::inc(&self.counters.batches, 1);
         Counters::inc(&self.counters.requests, batch.len() as u64);
@@ -181,12 +209,19 @@ impl InferenceServer {
             .collect();
 
         // One batched timestep across the slots selected by `active`:
-        // gather → step_batch → scatter, updating each slot's greedy token.
-        fn step_active(model: &RnnLm, slots: &mut [Slot], active: &[usize], tokens: &[usize]) {
+        // gather → step_batch_exec → scatter, updating each slot's greedy
+        // token.
+        fn step_active(
+            model: &RnnLm,
+            slots: &mut [Slot],
+            active: &[usize],
+            tokens: &[usize],
+            exec: &Exec,
+        ) {
             let refs: Vec<&crate::model::lm::LmState> =
                 active.iter().map(|&i| &slots[i].state).collect();
             let mut state_batch = model.gather_states(&refs);
-            let logits = model.step_batch(tokens, &mut state_batch);
+            let logits = model.step_batch_exec(tokens, &mut state_batch, exec);
             for (k, (&i, state)) in
                 active.iter().zip(model.scatter_states(&state_batch)).enumerate()
             {
@@ -202,7 +237,7 @@ impl InferenceServer {
             let active: Vec<usize> =
                 (0..slots.len()).filter(|&i| pos < slots[i].req.prime.len()).collect();
             let tokens: Vec<usize> = active.iter().map(|&i| slots[i].req.prime[pos]).collect();
-            step_active(&self.model, &mut slots, &active, &tokens);
+            step_active(&self.model, &mut slots, &active, &tokens, &self.exec);
         }
 
         // Lockstep decode: one batched timestep across all active slots per
@@ -222,7 +257,7 @@ impl InferenceServer {
                     slot.last
                 })
                 .collect();
-            step_active(&self.model, &mut slots, &active, &tokens);
+            step_active(&self.model, &mut slots, &active, &tokens, &self.exec);
         }
 
         let compute_us = start.elapsed().as_secs_f64() * 1e6;
@@ -319,6 +354,38 @@ mod tests {
         assert!(stats.contains("requests=2"), "{stats}");
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn threaded_batcher_bitmatches_serial_batcher() {
+        // The same requests against the same seed model must generate the
+        // same tokens whether the forward runs on 1 thread or a pool.
+        let model = || {
+            Arc::new(RnnLm::random(
+                LmConfig { kind: RnnKind::Lstm, vocab: 40, hidden: 16, layers: 1 },
+                5,
+                PrecisionPolicy::quantized(2, 2),
+            ))
+        };
+        let run = |exec: ExecConfig| {
+            let mut s = InferenceServer::new(
+                model(),
+                BatcherConfig { max_batch: 4, exec, ..Default::default() },
+            );
+            let mut rxs = Vec::new();
+            let mut reqs = Vec::new();
+            for i in 0..3u64 {
+                let (r, rx) = gen_req(i, 4 + i as usize, vec![(3 * i + 1) as usize]);
+                reqs.push(r);
+                rxs.push(rx);
+            }
+            s.process_batch(reqs);
+            rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect::<Vec<_>>()
+        };
+        let serial = run(ExecConfig::serial());
+        for threads in [2usize, 3, 8] {
+            assert_eq!(run(ExecConfig::with_threads(threads)), serial, "threads={threads}");
+        }
     }
 
     #[test]

@@ -10,12 +10,19 @@
 //!                                                │
 //!                                     dynamic batcher (max_batch / wait)
 //!                                                │ gather LmStateBatch
-//!                                     batched forward (RnnLm::step_batch)
+//!                                     batched forward (RnnLm::step_batch_exec)
 //!                                       · one ActivationBatch per layer,
 //!                                         quantized once per batch
 //!                                       · one sweep over each packed
 //!                                         weight plane serves all B
 //!                                         columns (PreparedGemm)
+//!                                                │
+//!                                ┌─── exec worker pool (BatcherConfig.exec) ───┐
+//!                                │ W_x / W_h gate products as parallel tasks;  │
+//!                                │ each GEMM row-sharded into disjoint output  │
+//!                                │ row ranges across `threads` workers         │
+//!                                │ (threads = 1 ⇒ the exact serial path)       │
+//!                                └──────────────────────────────────────────────┘
 //!                                                │ scatter states
 //!                                     session cache (hidden states, LRU)
 //! ```
@@ -23,8 +30,13 @@
 //! RNN steps are synchronous per token, so the batcher groups *steps* of
 //! different sessions and executes them as **one** batched XNOR/popcount
 //! GEMM per weight matrix — the concatenated-binary-codes layout of Fig. 3
-//! (right). `step_batch` bit-matches per-session `step`, so dynamic
-//! batching never changes what any client observes.
+//! (right) — and the execution engine (`crate::exec`) spreads that GEMM's
+//! output rows across the machine's cores. Both layers are exactness-
+//! preserving: `step_batch_exec` bit-matches per-session `step` for every
+//! batch size *and* thread count (`rust/tests/exec_parity.rs`), so neither
+//! dynamic batching nor the worker pool ever changes what a client
+//! observes. Dropping the server joins the pool's workers — shutdown leaks
+//! no threads.
 
 pub mod batcher;
 pub mod protocol;

@@ -1,0 +1,242 @@
+//! Exact-parity contract of the execution engine: threading must be
+//! invisible — every row-sharded / pooled path bit-matches the serial path
+//! with **no tolerance** (`==` on f32), for every (method, k_w, k_x, B,
+//! threads) grid point, including shapes whose rows/cols are not multiples
+//! of 64 and pools with more threads than rows (oversubscription).
+//!
+//! This is the property that lets the server turn on a worker pool without
+//! changing a single client-visible token.
+
+use amq::exec::{Exec, ExecConfig};
+use amq::kernels::binary::PreparedGemm;
+use amq::model::batch::{ActivationBatch, OutputBatch};
+use amq::model::gru::GruCell;
+use amq::model::linear::{LinearOp, Precision};
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::model::lstm::{LstmCell, LstmState, LstmStateBatch};
+use amq::quant::{Method, QuantizedBatch, RowQuantized};
+use amq::util::Rng;
+
+const THREAD_GRID: [usize; 4] = [1, 2, 3, 8];
+
+fn engines() -> Vec<(usize, Exec)> {
+    THREAD_GRID
+        .iter()
+        .map(|&t| (t, Exec::new(ExecConfig::with_threads(t))))
+        .collect()
+}
+
+/// The full GEMM grid: every method × bit-width pairing × batch × thread
+/// count, on shapes with tail words (cols % 64 ≠ 0) and few rows (rows <
+/// max threads ⇒ oversubscription).
+#[test]
+fn gemm_exec_bitmatches_serial_across_full_grid() {
+    let mut rng = Rng::new(9001);
+    let engines = engines();
+    let methods = [Method::Alternating { t: 2 }, Method::Greedy, Method::Uniform];
+    // (rows, cols): 3 < 8 threads oversubscribes; 147/70 exercise tail
+    // words; 64 is the exact word boundary.
+    let shapes = [(3usize, 70usize), (13, 147), (16, 64)];
+    for method in methods {
+        for (k_w, k_x) in [(1usize, 1usize), (2, 2), (2, 3), (3, 2), (4, 4)] {
+            for &(m, n) in &shapes {
+                let w = rng.normal_vec(m * n, 0.3);
+                let prep = PreparedGemm::new(&RowQuantized::quantize(&w, m, n, k_w, method));
+                for batch in [1usize, 3, 16] {
+                    let x = rng.normal_vec(batch * n, 1.0);
+                    let xq = QuantizedBatch::quantize(&x, batch, n, k_x);
+                    let mut serial = vec![0.0f32; batch * m];
+                    prep.gemm(&xq, &mut serial);
+                    for (t, exec) in &engines {
+                        let mut y = vec![0.0f32; batch * m];
+                        prep.gemm_exec(&xq, &mut y, exec);
+                        assert_eq!(
+                            y, serial,
+                            "{method:?} k_w={k_w} k_x={k_x} m={m} n={n} B={batch} threads={t}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Row-sharded weight-matrix quantization is bit-identical to serial for
+/// every method and thread count (alphas and packed planes both).
+#[test]
+fn matrix_quantize_exec_bitmatches_serial() {
+    let mut rng = Rng::new(9002);
+    let engines = engines();
+    for method in [
+        Method::Alternating { t: 2 },
+        Method::Greedy,
+        Method::Refined,
+        Method::Uniform,
+        Method::Balanced,
+        Method::Ternary,
+    ] {
+        for (rows, cols) in [(1usize, 1usize), (5, 70), (13, 147)] {
+            let w = rng.normal_vec(rows * cols, 0.4);
+            for k in 1..=3 {
+                let serial = RowQuantized::quantize(&w, rows, cols, k, method);
+                for (t, exec) in &engines {
+                    let par = RowQuantized::quantize_exec(&w, rows, cols, k, method, exec);
+                    assert_eq!(par.alphas, serial.alphas, "{method:?} k={k} threads={t}");
+                    assert_eq!(par.planes, serial.planes, "{method:?} k={k} threads={t}");
+                }
+            }
+        }
+    }
+}
+
+/// Row-sharded online activation quantization is bit-identical to serial.
+#[test]
+fn batch_quantize_exec_bitmatches_serial() {
+    let mut rng = Rng::new(9003);
+    let engines = engines();
+    for (batch, n) in [(1usize, 1usize), (3, 70), (16, 130)] {
+        let x = rng.normal_vec(batch * n, 1.0);
+        for k in 1..=3 {
+            let serial = QuantizedBatch::quantize(&x, batch, n, k);
+            for (t, exec) in &engines {
+                let par = QuantizedBatch::quantize_exec(&x, batch, n, k, exec);
+                assert_eq!(par.alphas, serial.alphas, "B={batch} n={n} k={k} threads={t}");
+                assert_eq!(par.data, serial.data, "B={batch} n={n} k={k} threads={t}");
+            }
+        }
+    }
+}
+
+/// The dense backend's column sharding is bit-exact too (FP layers inside a
+/// mixed-precision model must not drift under threading).
+#[test]
+fn dense_forward_exec_bitmatches_serial() {
+    let mut rng = Rng::new(9004);
+    let engines = engines();
+    let (m, n, batch) = (17, 70, 5);
+    let layer = amq::model::Linear::new(rng.normal_vec(m * n, 0.3), m, n, Precision::Full);
+    let x = rng.normal_vec(batch * n, 1.0);
+    let xb = ActivationBatch::from_flat(x, batch, n);
+    let mut serial = OutputBatch::zeros(batch, m);
+    layer.forward(&xb, &mut serial);
+    for (t, exec) in &engines {
+        let mut y = OutputBatch::zeros(batch, m);
+        layer.forward_exec(&xb, &mut y, exec);
+        assert_eq!(y.data(), serial.data(), "threads={t}");
+    }
+}
+
+/// LSTM gate products as pooled tasks + row-sharded GEMMs: bit-exact per
+/// column for every thread count.
+#[test]
+fn lstm_step_batch_exec_bitmatches_serial() {
+    let mut rng = Rng::new(9005);
+    let engines = engines();
+    for precision in [Precision::Full, Precision::Quantized { k_w: 2, k_a: 2 }] {
+        let cell = LstmCell::init(10, 12, 0.4, &mut rng, precision);
+        for batch in [1usize, 3, 8] {
+            let singles: Vec<LstmState> = (0..batch)
+                .map(|_| LstmState { h: rng.normal_vec(12, 0.5), c: rng.normal_vec(12, 0.5) })
+                .collect();
+            let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(10, 1.0)).collect();
+            let refs: Vec<&LstmState> = singles.iter().collect();
+            let sb = LstmStateBatch::from_states(&refs);
+            let xrows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let xb = ActivationBatch::from_rows(&xrows);
+            let serial = cell.step_batch(&xb, &sb);
+            for (t, exec) in &engines {
+                let next = cell.step_batch_exec(&xb, &sb, exec);
+                assert_eq!(next, serial, "{precision:?} batch={batch} threads={t}");
+            }
+        }
+    }
+}
+
+/// GRU, same contract.
+#[test]
+fn gru_step_batch_exec_bitmatches_serial() {
+    let mut rng = Rng::new(9006);
+    let engines = engines();
+    for precision in [Precision::Full, Precision::Quantized { k_w: 2, k_a: 2 }] {
+        let cell = GruCell::init(9, 14, 0.4, &mut rng, precision);
+        for batch in [1usize, 4] {
+            let hs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(14, 0.5)).collect();
+            let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(9, 1.0)).collect();
+            let hrows: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
+            let xrows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let hb = ActivationBatch::from_rows(&hrows);
+            let xb = ActivationBatch::from_rows(&xrows);
+            let serial = cell.step_batch(&xb, &hb);
+            for (t, exec) in &engines {
+                let next = cell.step_batch_exec(&xb, &hb, exec);
+                assert_eq!(next, serial, "{precision:?} batch={batch} threads={t}");
+            }
+        }
+    }
+}
+
+/// Whole-model contract: a multi-round batched generation (embedding incl.
+/// prequant rows, cells, softmax) is bit-exact for every thread count and
+/// both cell kinds — and model *construction* on a pool yields the same
+/// model as serial construction.
+#[test]
+fn lm_step_batch_exec_bitmatches_serial_over_rounds() {
+    let engines = engines();
+    for kind in [RnnKind::Lstm, RnnKind::Gru] {
+        for policy in [PrecisionPolicy::full(), PrecisionPolicy::quantized(2, 2)] {
+            let config = LmConfig { kind, vocab: 50, hidden: 32, layers: 1 };
+            let lm = RnnLm::random(config, 11, policy);
+            for (t, exec) in &engines {
+                // Parallel construction must give the identical model.
+                let lm_par = RnnLm::random_exec(config, 11, policy, exec);
+                let batch = 5;
+                let mut serial_state = lm.zero_state_batch(batch);
+                let mut exec_state = lm.zero_state_batch(batch);
+                let mut par_state = lm_par.zero_state_batch(batch);
+                for round in 0..3 {
+                    let tokens: Vec<usize> =
+                        (0..batch).map(|b| (7 * b + 13 * round + 1) % 50).collect();
+                    let serial = lm.step_batch(&tokens, &mut serial_state);
+                    let threaded = lm.step_batch_exec(&tokens, &mut exec_state, exec);
+                    let built_par = lm_par.step_batch_exec(&tokens, &mut par_state, exec);
+                    assert_eq!(
+                        threaded.data(),
+                        serial.data(),
+                        "{kind:?} round={round} threads={t}"
+                    );
+                    assert_eq!(
+                        built_par.data(),
+                        serial.data(),
+                        "parallel-built model {kind:?} round={round} threads={t}"
+                    );
+                    assert_eq!(exec_state, serial_state, "{kind:?} round={round} threads={t}");
+                }
+            }
+        }
+    }
+}
+
+/// Extreme oversubscription: far more threads than rows, batch 1, single
+/// row — the degenerate corners all still bit-match.
+#[test]
+fn oversubscription_corners_bitmatch() {
+    let mut rng = Rng::new(9007);
+    let exec = Exec::new(ExecConfig::with_threads(8));
+    for (m, n) in [(1usize, 1usize), (1, 64), (2, 65), (7, 64)] {
+        let w = rng.normal_vec(m * n, 0.3);
+        let prep = PreparedGemm::new(&RowQuantized::quantize(
+            &w,
+            m,
+            n,
+            2,
+            Method::Alternating { t: 2 },
+        ));
+        let x = rng.normal_vec(n, 1.0);
+        let xq = QuantizedBatch::quantize(&x, 1, n, 2);
+        let mut serial = vec![0.0f32; m];
+        let mut threaded = vec![0.0f32; m];
+        prep.gemm(&xq, &mut serial);
+        prep.gemm_exec(&xq, &mut threaded, &exec);
+        assert_eq!(threaded, serial, "m={m} n={n}");
+    }
+}

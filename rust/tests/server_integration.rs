@@ -1,11 +1,13 @@
 //! End-to-end serving integration: quantized model behind the TCP front
-//! end, concurrent clients, session continuity, and failure handling.
+//! end, concurrent clients, session continuity, failure handling, and the
+//! threaded-vs-serial stress parity of the execution engine.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::Arc;
 
+use amq::exec::ExecConfig;
 use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
 use amq::server::batcher::{BatcherConfig, InferenceServer, Work};
 use amq::server::tcp;
@@ -13,9 +15,10 @@ use amq::server::tcp;
 struct TestServer {
     addr: std::net::SocketAddr,
     work: mpsc::Sender<Work>,
+    batcher: std::thread::JoinHandle<()>,
 }
 
-fn start(max_batch: usize) -> TestServer {
+fn start_with(max_batch: usize, exec: ExecConfig) -> TestServer {
     let lm = RnnLm::random(
         LmConfig { kind: RnnKind::Lstm, vocab: 60, hidden: 24, layers: 1 },
         123,
@@ -23,10 +26,15 @@ fn start(max_batch: usize) -> TestServer {
     );
     let server = InferenceServer::new(
         Arc::new(lm),
-        BatcherConfig { max_batch, batch_wait: std::time::Duration::from_micros(300), max_sessions: 64 },
+        BatcherConfig {
+            max_batch,
+            batch_wait: std::time::Duration::from_micros(300),
+            max_sessions: 64,
+            exec,
+        },
     );
     let (tx, rx) = mpsc::channel();
-    std::thread::spawn(move || server.run(rx));
+    let batcher = std::thread::spawn(move || server.run(rx));
     let (atx, arx) = mpsc::channel();
     let tx2 = tx.clone();
     std::thread::spawn(move || {
@@ -34,7 +42,11 @@ fn start(max_batch: usize) -> TestServer {
             let _ = atx.send(a);
         });
     });
-    TestServer { addr: arx.recv().unwrap(), work: tx }
+    TestServer { addr: arx.recv().unwrap(), work: tx, batcher }
+}
+
+fn start(max_batch: usize) -> TestServer {
+    start_with(max_batch, ExecConfig::auto())
 }
 
 fn request(addr: std::net::SocketAddr, line: &str) -> String {
@@ -111,4 +123,69 @@ fn score_is_deterministic_and_finite() {
     let ppw: f64 = a.trim_start_matches("OK SCORE ").parse().unwrap();
     assert!(ppw.is_finite() && ppw > 1.0);
     let _ = s.work.send(Work::Shutdown);
+}
+
+/// Stress + parity: N concurrent TCP clients interleaving prime/generate/
+/// continue/end against a *threaded, batching* server must observe exactly
+/// the outputs of a `threads = 1, max_batch = 1` reference run — the
+/// worker pool and the dynamic batcher are both invisible. Shutdown must
+/// join the batcher thread (which drops the pool and joins its workers —
+/// no leaked threads, no deadlock on drop).
+#[test]
+fn threaded_server_bitmatches_serial_reference_under_concurrent_stress() {
+    const CLIENTS: usize = 8;
+    // Each session issues: GEN (two-token prime), GEN (continuation), END.
+    let script = |i: usize| {
+        let (p1, p2, p3) = (i % 60, (i * 7 + 3) % 60, (i * 11 + 5) % 60);
+        (
+            format!("GEN {i} 6 {p1},{p2}"),
+            format!("GEN {i} 4 {p3}"),
+            format!("END {i}"),
+        )
+    };
+
+    // Reference: strictly serial server (1 thread, batch of 1), sessions
+    // run one after another.
+    let reference: Vec<(String, String)> = {
+        let s = start_with(1, ExecConfig::serial());
+        let out = (0..CLIENTS)
+            .map(|i| {
+                let (g1, g2, end) = script(i);
+                let a = request(s.addr, &g1);
+                let b = request(s.addr, &g2);
+                assert_eq!(request(s.addr, &end), "OK END");
+                (a, b)
+            })
+            .collect();
+        let _ = s.work.send(Work::Shutdown);
+        s.batcher.join().expect("reference batcher joins");
+        out
+    };
+    assert!(reference.iter().all(|(a, b)| a.starts_with("OK GEN ") && b.starts_with("OK GEN ")));
+
+    // Threaded batching server, all sessions hammering concurrently.
+    let s = start_with(4, ExecConfig::with_threads(3));
+    let addr = s.addr;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let (g1, g2, end) = script(i);
+                let a = request(addr, &g1);
+                let b = request(addr, &g2);
+                assert_eq!(request(addr, &end), "OK END");
+                (a, b)
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        assert_eq!(
+            got, reference[i],
+            "session {i}: threaded+batched output diverged from serial reference"
+        );
+    }
+
+    // Clean shutdown joins the batcher (and thereby the worker pool).
+    let _ = s.work.send(Work::Shutdown);
+    s.batcher.join().expect("batcher thread joins after shutdown");
 }
