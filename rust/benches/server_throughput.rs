@@ -75,7 +75,13 @@ fn json_summary(
     scaling: &[ThreadSample],
 ) -> String {
     let mut s = format!(
-        "{{\"bench\":\"server_throughput\",\"kind\":\"{}\",\"vocab\":{},\"hidden\":{},\"new_tokens\":{},\"results\":[",
+        "{{\"bench\":\"server_throughput\",\"kernel\":\"{}\",\"cpu_features\":[{}],\"kind\":\"{}\",\"vocab\":{},\"hidden\":{},\"new_tokens\":{},\"results\":[",
+        amq::kernels::backend::active(),
+        amq::kernels::backend::cpu_features()
+            .iter()
+            .map(|f| format!("\"{f}\""))
+            .collect::<Vec<_>>()
+            .join(","),
         config.kind.name(),
         config.vocab,
         config.hidden,

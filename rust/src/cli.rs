@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::kernels::Kernel;
 use crate::quant::Method;
 
 /// Parsed command line: `amq <subcommand> [--key value]...`.
@@ -79,6 +80,17 @@ impl Cli {
         }
     }
 
+    /// Parse a kernel-backend selection flag (`scalar|avx2|neon|auto`).
+    /// `None` means "no explicit choice" (flag absent or `auto`) — the
+    /// caller falls through to `AMQ_KERNEL` / runtime detection. Naming a
+    /// backend this host cannot run is an error, never a silent fallback.
+    pub fn get_kernel(&self, key: &str) -> Result<Option<Kernel>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => Kernel::parse_choice(v).map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.options.contains_key(key)
     }
@@ -131,6 +143,18 @@ mod tests {
             .unwrap()
             .get_method("method", Method::Greedy)
             .is_err());
+    }
+
+    #[test]
+    fn kernel_flag() {
+        let c = Cli::parse(args("serve")).unwrap();
+        assert_eq!(c.get_kernel("kernel").unwrap(), None);
+        let c = Cli::parse(args("serve --kernel auto")).unwrap();
+        assert_eq!(c.get_kernel("kernel").unwrap(), None);
+        let c = Cli::parse(args("serve --kernel scalar")).unwrap();
+        assert_eq!(c.get_kernel("kernel").unwrap(), Some(Kernel::Scalar));
+        let c = Cli::parse(args("serve --kernel wat")).unwrap();
+        assert!(c.get_kernel("kernel").is_err());
     }
 
     #[test]

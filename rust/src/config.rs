@@ -9,6 +9,7 @@
 //! addr = "127.0.0.1:7860"
 //! max_batch = 16
 //! threads = 0          # worker pool: 1 = serial, 0 = auto
+//! kernel = "auto"      # GEMM backend: scalar | avx2 | neon | auto
 //!
 //! [model]
 //! kind = "lstm"       # or "gru"
@@ -188,6 +189,10 @@ pub struct ServerConfig {
     /// Worker-pool size for the batched forward: `1` = serial, `0` = auto
     /// (`AMQ_THREADS` env or the machine's available parallelism).
     pub threads: usize,
+    /// XNOR/popcount kernel backend: `"scalar" | "avx2" | "neon"` forces
+    /// one, `"auto"` (default) defers to `AMQ_KERNEL` / runtime feature
+    /// detection. Validated by `Kernel::parse_choice` at launch.
+    pub kernel: String,
 }
 
 impl ServerConfig {
@@ -198,6 +203,7 @@ impl ServerConfig {
             batch_wait_us: c.get_usize("server.batch_wait_us", 500) as u64,
             max_sessions: c.get_usize("server.max_sessions", 1024),
             threads: c.get_usize("server.threads", 0),
+            kernel: c.get_str("server.kernel", "auto"),
         }
     }
 }
@@ -249,6 +255,7 @@ mod tests {
 addr = "0.0.0.0:9999"   # bind
 max_batch = 32
 threads = 4
+kernel = "scalar"
 [model]
 kind = "gru"
 hidden = 512
@@ -273,6 +280,7 @@ quantized = true
         let s = ServerConfig::from_config(&c);
         assert_eq!(s.max_batch, 32);
         assert_eq!(s.threads, 4);
+        assert_eq!(s.kernel, "scalar");
         let m = ModelConfig::from_config(&c).unwrap();
         assert_eq!(m.lm.kind, RnnKind::Gru);
         assert_eq!(m.lm.hidden, 512);
@@ -285,6 +293,7 @@ quantized = true
         let c = Config::parse("").unwrap();
         let s = ServerConfig::from_config(&c);
         assert_eq!(s.addr, "127.0.0.1:7860");
+        assert_eq!(s.kernel, "auto");
     }
 
     #[test]

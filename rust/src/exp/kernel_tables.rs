@@ -1,9 +1,11 @@
 //! Table 6 (Appendix A): binary matrix–vector timing on CPU, with the
 //! online quantization cost broken out, plus the §3/§4 analytic cost model,
-//! the batched-GEMM sweep over B, and the worker-pool thread-scaling sweep.
+//! the batched-GEMM sweep over B, the worker-pool thread-scaling sweep,
+//! and the kernel-backend sweep (scalar vs AVX2/NEON, bit-identical
+//! outputs, wall time only).
 
 use crate::exec::{Exec, ExecConfig};
-use crate::kernels::{binary, cost, dense};
+use crate::kernels::{binary, cost, dense, Kernel};
 use crate::quant::{Method, QuantizedBatch, RowQuantized};
 use crate::util::timer::{bench_fn, black_box};
 use crate::util::Rng;
@@ -255,6 +257,92 @@ pub fn render_thread_sweep(rows: &[ThreadSweepRow]) -> String {
     s
 }
 
+/// One row of the kernel-backend sweep: the same batched GEMM forced onto
+/// one backend ([`binary::PreparedGemm::set_kernel`]).
+#[derive(Clone, Debug)]
+pub struct BackendSweepRow {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub backend: &'static str,
+    /// Median wall time of one batched GEMM (activations pre-quantized).
+    pub total_ms: f64,
+    /// Speedup vs the scalar row of the same shape.
+    pub speedup_vs_scalar: f64,
+}
+
+/// Sweep the batched GEMM over every kernel backend this host can run —
+/// the measurement behind the runtime-dispatch layer. All backends compute
+/// the bit-identical output (asserted here per shape, and pinned at full
+/// grid by `rust/tests/kernel_parity.rs`); only wall time differs.
+pub fn gemm_backend_sweep(
+    shapes: &[(usize, usize)],
+    batch: usize,
+    k: usize,
+    samples: usize,
+) -> Vec<BackendSweepRow> {
+    let mut rows = Vec::new();
+    for &(m, n) in shapes {
+        let mut rng = Rng::new(0xFEED + m as u64);
+        let w = rng.normal_vec(m * n, 0.05);
+        let mut prep = binary::PreparedGemm::with_kernel(
+            &RowQuantized::quantize(&w, m, n, k, Method::Alternating { t: 2 }),
+            Kernel::Scalar,
+        );
+        let x = rng.normal_vec(batch * n, 0.5);
+        let xq = QuantizedBatch::quantize(&x, batch, n, k);
+        let mut reference: Option<Vec<f32>> = None;
+        let mut shape_rows = Vec::new();
+        for kernel in Kernel::available() {
+            prep.set_kernel(kernel);
+            let mut y = vec![0.0f32; batch * m];
+            let r = bench_fn(&format!("gemm {m}x{n} k={k} b={batch} {kernel}"), samples, || {
+                prep.gemm(&xq, &mut y);
+                black_box(&y);
+            });
+            match &reference {
+                None => reference = Some(y.clone()),
+                // Exactness sanity: backends agree bit-for-bit.
+                Some(want) => assert_eq!(&y, want, "backend {kernel} diverged at {m}x{n}"),
+            }
+            shape_rows.push(BackendSweepRow {
+                m,
+                n,
+                k,
+                batch,
+                backend: kernel.name(),
+                total_ms: r.median_ms(),
+                speedup_vs_scalar: 1.0,
+            });
+        }
+        let base = shape_rows
+            .iter()
+            .find(|r| r.backend == "scalar")
+            .map(|r| r.total_ms)
+            .unwrap_or(1.0);
+        for r in &mut shape_rows {
+            r.speedup_vs_scalar = if r.total_ms > 0.0 { base / r.total_ms } else { 1.0 };
+        }
+        rows.extend(shape_rows);
+    }
+    rows
+}
+
+pub fn render_backend_sweep(rows: &[BackendSweepRow]) -> String {
+    let mut s = String::from(
+        "Kernel-backend sweep (bit-identical outputs, wall time only)\n\
+         Weight Size      W/A bits  Batch  Backend   Total(ms)   vs scalar\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>7}x{:<7}  {:>5}/{:<2}  {:>5}  {:>7}   {:>9.3}   {:>7.2}x\n",
+            r.m, r.n, r.k, r.k, r.batch, r.backend, r.total_ms, r.speedup_vs_scalar
+        ));
+    }
+    s
+}
+
 /// The §4 cost-model table: theoretical γ vs measured acceleration.
 pub fn costmodel(shapes: &[(usize, usize)], measured: &[Table6Row]) -> String {
     let mut s = String::from("Cost model (§4): theoretical gamma vs measured acceleration\n");
@@ -314,6 +402,18 @@ mod tests {
         assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.speedup > 0.0));
         let s = render_thread_sweep(&rows);
         assert!(s.contains("vs 1 thread"), "{s}");
+    }
+
+    #[test]
+    fn backend_sweep_covers_available_backends_and_renders() {
+        let rows = gemm_backend_sweep(&[(64, 256)], 4, 2, 3);
+        let available = Kernel::available();
+        assert_eq!(rows.len(), available.len());
+        assert_eq!(rows[0].backend, "scalar");
+        assert!((rows[0].speedup_vs_scalar - 1.0).abs() < 1e-9);
+        assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.speedup_vs_scalar > 0.0));
+        let s = render_backend_sweep(&rows);
+        assert!(s.contains("vs scalar"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! AVX2 backend: XOR + `vpshufb` nibble-LUT popcount with Harley–Seal
+//! carry-save accumulation over 256-bit lanes.
+//!
+//! The pairwise primitive streams both bit planes four `u64` words (one
+//! ymm register) at a time. For long planes, blocks of four vectors are
+//! first compressed with a carry-save-adder tree (Harley–Seal): two CSAs
+//! fold four XOR results plus the carried `ones`/`twos` state into one
+//! `fours` vector, so only **one** byte-popcount (`vpshufb` low/high
+//! nibble lookups + `vpsadbw` horizontal sum) is paid per 1024 bits
+//! instead of four. The carried state and any remaining vectors/words are
+//! popcounted once at the end with their binary weights (4·fours + 2·twos
+//! + 1·ones + tail). Short planes (most RNN shapes: 1024 cols = 16 words)
+//! skip the carry-save stage and run the plain LUT + `vpsadbw` loop,
+//! which is lower-latency there.
+//!
+//! Exactness: popcounts are exact integers whatever the instruction mix,
+//! so this backend produces the identical mismatch counts as the scalar
+//! kernel — the shared float reduction in `kernels::binary` then makes
+//! the f32 outputs bit-identical (pinned by `rust/tests/kernel_parity.rs`).
+//!
+//! This module is normally reached through the [`super::backend`]
+//! dispatch with an availability-resolved kernel; as a second line of
+//! defense every safe wrapper re-checks AVX2 at runtime (a cached atomic
+//! load) and falls back to the scalar kernel — identical counts — so a
+//! misused raw `Kernel::Avx2` can never execute AVX2 instructions on a
+//! CPU without them.
+
+use core::arch::x86_64::*;
+
+use super::backend::MAX_K;
+use super::scalar;
+
+/// Runtime AVX2 check (cached by std in an atomic — one load + branch).
+/// The dispatch layer only hands resolved kernels to this module, but a
+/// real check here (not a `debug_assert!` that compiles out in release)
+/// is what makes "unavailable falls back to scalar" true even for a
+/// misused raw `Kernel::Avx2` on a pre-AVX2 CPU — scalar produces the
+/// identical counts, so the fallback is invisible.
+#[inline]
+fn have_avx2() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// `Σ_i popcount(a[i] ^ b[i])` (AVX2).
+#[inline]
+pub(crate) fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    if !have_avx2() {
+        return scalar::xor_popcount(a, b);
+    }
+    // SAFETY: AVX2 was detected at runtime just above, so the
+    // target-feature contract of the callee holds.
+    unsafe { xor_popcount_avx2(a, b) }
+}
+
+/// Fused single-column counts (AVX2): pairwise Harley–Seal passes — the
+/// weight row stays in L1 across the `KW · KX` plane pairs.
+#[inline]
+pub(crate) fn row_counts<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    x: &[&[u64]; KX],
+    counts: &mut [[u32; KX]; KW],
+) {
+    if !have_avx2() {
+        return scalar::row_counts::<KW, KX>(w, x, counts);
+    }
+    // SAFETY: AVX2 was detected at runtime just above.
+    unsafe { row_counts_avx2::<KW, KX>(w, x, counts) }
+}
+
+/// Fused batch-block counts (AVX2).
+#[inline]
+pub(crate) fn block_counts<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    xw: &[[&[u64]; KX]],
+    counts: &mut [[[u32; KX]; KW]],
+) {
+    if !have_avx2() {
+        return scalar::block_counts::<KW, KX>(w, xw, counts);
+    }
+    // SAFETY: AVX2 was detected at runtime just above.
+    unsafe { block_counts_avx2::<KW, KX>(w, xw, counts) }
+}
+
+/// Runtime-width `row_counts` (AVX2).
+#[inline]
+pub(crate) fn row_counts_dyn(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
+    if !have_avx2() {
+        return scalar::row_counts_dyn(w, x, counts);
+    }
+    // SAFETY: AVX2 was detected at runtime just above.
+    unsafe { row_counts_dyn_avx2(w, x, counts) }
+}
+
+/// Runtime-width `block_counts` (AVX2).
+#[inline]
+pub(crate) fn block_counts_dyn(
+    w: &[&[u64]],
+    xw: &[[&[u64]; MAX_K]],
+    kx: usize,
+    counts: &mut [[[u32; MAX_K]; MAX_K]],
+) {
+    if !have_avx2() {
+        return scalar::block_counts_dyn(w, xw, kx, counts);
+    }
+    // SAFETY: AVX2 was detected at runtime just above.
+    unsafe { block_counts_dyn_avx2(w, xw, kx, counts) }
+}
+
+// ---------------------------------------------------------------------------
+// target_feature implementations. All `unsafe fn`s below require AVX2 to
+// be present at runtime; slices are read strictly in-bounds via unaligned
+// loads.
+// ---------------------------------------------------------------------------
+
+/// Byte-wise popcount of a 256-bit vector via the `vpshufb` nibble LUT.
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn popcount8(v: __m256i) -> __m256i {
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let mask = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), mask);
+    _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi))
+}
+
+/// Carry-save adder: compresses three bit streams into (carry, sum).
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn csa(a: __m256i, b: __m256i, c: __m256i) -> (__m256i, __m256i) {
+    let u = _mm256_xor_si256(a, b);
+    let h = _mm256_or_si256(_mm256_and_si256(a, b), _mm256_and_si256(u, c));
+    let l = _mm256_xor_si256(u, c);
+    (h, l)
+}
+
+/// Load words `i..i+4` of both planes and XOR them.
+///
+/// # Safety
+/// Requires AVX2; `i + 4` must not exceed the planes' length.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn xor_load(a: *const u64, b: *const u64, i: usize) -> __m256i {
+    let va = _mm256_loadu_si256(a.add(i) as *const __m256i);
+    let vb = _mm256_loadu_si256(b.add(i) as *const __m256i);
+    _mm256_xor_si256(va, vb)
+}
+
+/// Popcount the bytes of `v` and add the per-64-bit-lane sums into `acc`.
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn accumulate_sad(acc: __m256i, v: __m256i) -> __m256i {
+    _mm256_add_epi64(acc, _mm256_sad_epu8(popcount8(v), _mm256_setzero_si256()))
+}
+
+/// Horizontal sum of the four u64 lanes.
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(v: __m256i) -> u64 {
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes[0].wrapping_add(lanes[1]).wrapping_add(lanes[2]).wrapping_add(lanes[3])
+}
+
+/// Plane length (in words) from which the Harley–Seal main loop engages.
+/// Below it the carried-state flush would dominate; the plain LUT loop is
+/// both lower-latency and fewer ops there. 64 words = 512 bytes, the
+/// regime where carry-save accumulation starts to pay for itself.
+const HARLEY_SEAL_MIN_WORDS: usize = 64;
+
+/// The XOR-popcount over two equal-length word slices: Harley–Seal
+/// carry-save main loop for long planes, `vpshufb`-LUT + `vpsadbw` loop
+/// for whole 256-bit vectors, scalar `popcnt` for the last words.
+///
+/// # Safety
+/// Requires AVX2; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn xor_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut i = 0usize;
+    let mut total_v = _mm256_setzero_si256();
+    if n >= HARLEY_SEAL_MIN_WORDS {
+        // Main loop: 16 words (4 ymm vectors) per iteration. Two CSA
+        // levels fold the four XOR vectors plus the carried ones/twos
+        // state so only the `fours` vector is byte-popcounted per
+        // iteration (¼ of the popcount work).
+        let mut ones = _mm256_setzero_si256();
+        let mut twos = _mm256_setzero_si256();
+        let mut fours_acc = _mm256_setzero_si256();
+        while i + 16 <= n {
+            let (twos_a, ones1) = csa(ones, xor_load(pa, pb, i), xor_load(pa, pb, i + 4));
+            let (twos_b, ones2) = csa(ones1, xor_load(pa, pb, i + 8), xor_load(pa, pb, i + 12));
+            let (fours, twos1) = csa(twos, twos_a, twos_b);
+            ones = ones2;
+            twos = twos1;
+            fours_acc = accumulate_sad(fours_acc, fours);
+            i += 16;
+        }
+        // Flush the carried state with its binary weights:
+        // 4·fours + 2·twos + 1·ones, all still as u64×4 lane sums.
+        let twos_acc = accumulate_sad(_mm256_setzero_si256(), twos);
+        let ones_acc = accumulate_sad(_mm256_setzero_si256(), ones);
+        total_v = _mm256_add_epi64(
+            _mm256_slli_epi64::<2>(fours_acc),
+            _mm256_add_epi64(_mm256_slli_epi64::<1>(twos_acc), ones_acc),
+        );
+    }
+    // Whole vectors (short planes, and the tail of the HS loop), weight 1.
+    while i + 4 <= n {
+        total_v = accumulate_sad(total_v, xor_load(pa, pb, i));
+        i += 4;
+    }
+    let mut total = hsum(total_v);
+    while i < n {
+        total += u64::from((*pa.add(i) ^ *pb.add(i)).count_ones());
+        i += 1;
+    }
+    total as u32
+}
+
+/// # Safety
+/// Requires AVX2; all plane slices share one length.
+#[target_feature(enable = "avx2")]
+unsafe fn row_counts_avx2<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    x: &[&[u64]; KX],
+    counts: &mut [[u32; KX]; KW],
+) {
+    for (ct, wt) in counts.iter_mut().zip(w) {
+        for (c, xs) in ct.iter_mut().zip(x) {
+            *c += xor_popcount_avx2(wt, xs);
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2; all plane slices share one length.
+#[target_feature(enable = "avx2")]
+unsafe fn block_counts_avx2<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    xw: &[[&[u64]; KX]],
+    counts: &mut [[[u32; KX]; KW]],
+) {
+    for (cj, xj) in counts.iter_mut().zip(xw) {
+        row_counts_avx2::<KW, KX>(w, xj, cj);
+    }
+}
+
+/// # Safety
+/// Requires AVX2; all plane slices share one length.
+#[target_feature(enable = "avx2")]
+unsafe fn row_counts_dyn_avx2(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
+    for (ct, wt) in counts.iter_mut().zip(w) {
+        for (c, xs) in ct.iter_mut().zip(x) {
+            *c += xor_popcount_avx2(wt, xs);
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2; `xw[j][s]` valid for `s < kx`.
+#[target_feature(enable = "avx2")]
+unsafe fn block_counts_dyn_avx2(
+    w: &[&[u64]],
+    xw: &[[&[u64]; MAX_K]],
+    kx: usize,
+    counts: &mut [[[u32; MAX_K]; MAX_K]],
+) {
+    for (cj, xj) in counts.iter_mut().zip(xw) {
+        row_counts_dyn_avx2(w, &xj[..kx], cj);
+    }
+}

@@ -1,0 +1,465 @@
+//! Kernel-backend selection and dispatch for the XNOR/popcount GEMM.
+//!
+//! The binary kernels reduce every output element to **exact integer
+//! mismatch counts** (`popcount(w ⊕ x)` summed over packed words) followed
+//! by a small float reduction. The counts are the same integers no matter
+//! how the popcounts are computed, and the float reduction lives in one
+//! place ([`crate::kernels::binary`]) shared by every backend — so any
+//! backend that produces correct counts is automatically **bit-exact**
+//! against the portable scalar kernel, across batch sizes and thread
+//! counts alike. `rust/tests/kernel_parity.rs` pins this with `assert_eq`
+//! on `f32` outputs (no tolerance).
+//!
+//! Backends:
+//!
+//! * [`Kernel::Scalar`] — portable `u64 ^` + `count_ones` (LLVM lowers to
+//!   `xor` + `popcnt` on x86_64). Always available; the reference.
+//! * [`Kernel::Avx2`] — x86_64 AVX2: `vpshufb` nibble-LUT popcount with
+//!   Harley–Seal carry-save accumulation over 256-bit lanes
+//!   ([`super::avx2`]).
+//! * [`Kernel::Neon`] — aarch64 NEON: `vcntq_u8` byte popcount with a
+//!   widening `vpaddlq`/`vpadalq` reduction ([`super::neon`]).
+//!
+//! Selection order (first hit wins):
+//!
+//! 1. an explicit choice via [`force`] — `amq serve --kernel` or the
+//!    `server.kernel` config key;
+//! 2. the `AMQ_KERNEL` environment variable (`scalar|avx2|neon|auto`);
+//! 3. runtime feature detection ([`Kernel::detect`]):
+//!    `is_x86_feature_detected!("avx2")` on x86_64, NEON (baseline) on
+//!    aarch64, scalar elsewhere.
+//!
+//! Adding a backend: add an enum variant + `is_available` arm, implement
+//! `xor_popcount` / `row_counts` / `block_counts` (+ the `_dyn` variants)
+//! in a new arch-gated module, and add the dispatch arms below. The
+//! cross-backend parity suite picks the new backend up automatically via
+//! [`Kernel::available`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::scalar;
+
+#[cfg(target_arch = "x86_64")]
+use super::avx2;
+#[cfg(target_arch = "aarch64")]
+use super::neon;
+
+/// Max bit width the fused inner loops specialize for (the paper never
+/// exceeds 4 bits).
+pub const MAX_K: usize = 4;
+
+/// A compute backend for the XNOR/popcount kernels.
+///
+/// All variants exist on every architecture so that names parse uniformly
+/// (configs are portable); [`Kernel::is_available`] answers whether this
+/// host can actually run one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar kernel — always available, the exactness reference.
+    Scalar,
+    /// x86_64 AVX2 (`vpshufb` LUT popcount + Harley–Seal).
+    Avx2,
+    /// aarch64 NEON (`vcntq_u8` + widening adds).
+    Neon,
+}
+
+impl Kernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Can this backend run on the current host (architecture + runtime
+    /// CPU features)?
+    pub fn is_available(&self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => true, // NEON is baseline on aarch64
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Every backend this host can run, scalar first.
+    pub fn available() -> Vec<Kernel> {
+        [Kernel::Scalar, Kernel::Avx2, Kernel::Neon]
+            .into_iter()
+            .filter(|k| k.is_available())
+            .collect()
+    }
+
+    /// The best backend runtime detection finds on this host.
+    pub fn detect() -> Kernel {
+        if Kernel::Avx2.is_available() {
+            Kernel::Avx2
+        } else if Kernel::Neon.is_available() {
+            Kernel::Neon
+        } else {
+            Kernel::Scalar
+        }
+    }
+
+    /// This backend if available, else the scalar fallback. Every stored
+    /// kernel (e.g. in `PreparedGemm`) is resolved, so dispatch never has
+    /// to re-check CPU features on the hot path.
+    pub fn resolve(self) -> Kernel {
+        if self.is_available() {
+            self
+        } else {
+            Kernel::Scalar
+        }
+    }
+
+    /// Parse a *selection* string: `"auto"` (or empty) means "no explicit
+    /// choice" (`None` — fall through to env/detection), anything else
+    /// must name an available backend.
+    pub fn parse_choice(s: &str) -> Result<Option<Kernel>, String> {
+        let t = s.trim();
+        if t.is_empty() || t.eq_ignore_ascii_case("auto") {
+            return Ok(None);
+        }
+        t.parse().map(Some)
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl std::str::FromStr for Kernel {
+    type Err = String;
+
+    /// Strict parse of a backend name. Known-but-unavailable names are an
+    /// error (listing what this host supports) so a forced `--kernel` can
+    /// never silently run something else.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let k = match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Kernel::Scalar,
+            "avx2" => Kernel::Avx2,
+            "neon" => Kernel::Neon,
+            other => {
+                return Err(format!(
+                    "unknown kernel '{other}' (scalar|avx2|neon|auto)"
+                ))
+            }
+        };
+        if !k.is_available() {
+            let have: Vec<&str> = Kernel::available().iter().map(|k| k.name()).collect();
+            return Err(format!(
+                "kernel '{}' is not available on this host (available: {})",
+                k.name(),
+                have.join(", ")
+            ));
+        }
+        Ok(k)
+    }
+}
+
+/// CPU features relevant to the binary kernels that runtime detection sees
+/// on this host (recorded in the `--json` bench summaries).
+pub fn cpu_features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, have) in [
+            ("sse4.2", is_x86_feature_detected!("sse4.2")),
+            ("popcnt", is_x86_feature_detected!("popcnt")),
+            ("avx2", is_x86_feature_detected!("avx2")),
+            ("avx512f", is_x86_feature_detected!("avx512f")),
+        ] {
+            if have {
+                f.push(name);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        f.push("neon");
+    }
+    f
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide selection (force > AMQ_KERNEL > detection).
+// ---------------------------------------------------------------------------
+
+/// 0 = not forced; otherwise `code(kernel)`.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+/// The env/detection choice, resolved once per process.
+static AUTO: OnceLock<Kernel> = OnceLock::new();
+
+fn code(k: Kernel) -> u8 {
+    match k {
+        Kernel::Scalar => 1,
+        Kernel::Avx2 => 2,
+        Kernel::Neon => 3,
+    }
+}
+
+fn from_code(c: u8) -> Option<Kernel> {
+    match c {
+        1 => Some(Kernel::Scalar),
+        2 => Some(Kernel::Avx2),
+        3 => Some(Kernel::Neon),
+        _ => None,
+    }
+}
+
+/// Force the process-wide backend (the `--kernel` / `server.kernel`
+/// override). Resolved against availability; wins over `AMQ_KERNEL` and
+/// detection for every kernel object built afterwards.
+pub fn force(k: Kernel) {
+    FORCED.store(code(k.resolve()), Ordering::Relaxed);
+}
+
+/// The backend new kernel objects resolve to right now: [`force`]d choice
+/// if any, else `AMQ_KERNEL` (read once per process), else detection.
+pub fn active() -> Kernel {
+    if let Some(k) = from_code(FORCED.load(Ordering::Relaxed)) {
+        return k;
+    }
+    *AUTO.get_or_init(|| match std::env::var("AMQ_KERNEL") {
+        Ok(v) => match Kernel::parse_choice(&v) {
+            Ok(Some(k)) => k,
+            Ok(None) => Kernel::detect(),
+            Err(e) => {
+                eprintln!("warning: ignoring AMQ_KERNEL: {e}");
+                Kernel::detect()
+            }
+        },
+        Err(_) => Kernel::detect(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Count-primitive dispatch — the one seam every hot loop goes through.
+//
+// Callers pass a *resolved* kernel. Unavailable variants still fall back
+// to scalar (same counts, so still exact): wrong-architecture variants hit
+// the catch-all arms below, and a same-architecture variant on a CPU
+// without the feature is caught by the runtime check inside the backend's
+// safe wrappers (e.g. `avx2::have_avx2`), never a compiled-out assert.
+// ---------------------------------------------------------------------------
+
+/// `Σ_i popcount(a[i] ^ b[i])` — the pairwise primitive (legacy GEMV paths
+/// and exotic bit widths).
+#[inline]
+pub(crate) fn xor_popcount(kernel: Kernel, a: &[u64], b: &[u64]) -> u32 {
+    match kernel {
+        Kernel::Scalar => scalar::xor_popcount(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => avx2::xor_popcount(a, b),
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => neon::xor_popcount(a, b),
+        #[allow(unreachable_patterns)]
+        _ => scalar::xor_popcount(a, b),
+    }
+}
+
+/// `counts[t][s] += Σ_i popcount(w[t][i] ^ x[s][i])` — one weight row
+/// (`KW` plane slices) against one activation column (`KX` plane slices).
+#[inline]
+pub(crate) fn row_counts<const KW: usize, const KX: usize>(
+    kernel: Kernel,
+    w: &[&[u64]; KW],
+    x: &[&[u64]; KX],
+    counts: &mut [[u32; KX]; KW],
+) {
+    match kernel {
+        Kernel::Scalar => scalar::row_counts::<KW, KX>(w, x, counts),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => avx2::row_counts::<KW, KX>(w, x, counts),
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => neon::row_counts::<KW, KX>(w, x, counts),
+        #[allow(unreachable_patterns)]
+        _ => scalar::row_counts::<KW, KX>(w, x, counts),
+    }
+}
+
+/// Batched variant: one weight row against `xw.len()` activation columns
+/// (`counts.len() == xw.len()`, a batch block of the GEMM).
+#[inline]
+pub(crate) fn block_counts<const KW: usize, const KX: usize>(
+    kernel: Kernel,
+    w: &[&[u64]; KW],
+    xw: &[[&[u64]; KX]],
+    counts: &mut [[[u32; KX]; KW]],
+) {
+    debug_assert_eq!(xw.len(), counts.len());
+    match kernel {
+        Kernel::Scalar => scalar::block_counts::<KW, KX>(w, xw, counts),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => avx2::block_counts::<KW, KX>(w, xw, counts),
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => neon::block_counts::<KW, KX>(w, xw, counts),
+        #[allow(unreachable_patterns)]
+        _ => scalar::block_counts::<KW, KX>(w, xw, counts),
+    }
+}
+
+/// Runtime-width variant of [`row_counts`] for (k_w, k_x) pairs outside
+/// the const-generic table: `w.len() = k_w ≤ MAX_K`, `x.len() = k_x ≤
+/// MAX_K`.
+#[inline]
+pub(crate) fn row_counts_dyn(
+    kernel: Kernel,
+    w: &[&[u64]],
+    x: &[&[u64]],
+    counts: &mut [[u32; MAX_K]; MAX_K],
+) {
+    match kernel {
+        Kernel::Scalar => scalar::row_counts_dyn(w, x, counts),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => avx2::row_counts_dyn(w, x, counts),
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => neon::row_counts_dyn(w, x, counts),
+        #[allow(unreachable_patterns)]
+        _ => scalar::row_counts_dyn(w, x, counts),
+    }
+}
+
+/// Runtime-width variant of [`block_counts`]: `xw[j][s]` is valid for
+/// `s < kx`; `w.len() = k_w`.
+#[inline]
+pub(crate) fn block_counts_dyn(
+    kernel: Kernel,
+    w: &[&[u64]],
+    xw: &[[&[u64]; MAX_K]],
+    kx: usize,
+    counts: &mut [[[u32; MAX_K]; MAX_K]],
+) {
+    debug_assert_eq!(xw.len(), counts.len());
+    match kernel {
+        Kernel::Scalar => scalar::block_counts_dyn(w, xw, kx, counts),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => avx2::block_counts_dyn(w, xw, kx, counts),
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => neon::block_counts_dyn(w, xw, kx, counts),
+        #[allow(unreachable_patterns)]
+        _ => scalar::block_counts_dyn(w, xw, kx, counts),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn scalar_always_available_and_detect_resolves() {
+        assert!(Kernel::Scalar.is_available());
+        let d = Kernel::detect();
+        assert!(d.is_available());
+        assert_eq!(d.resolve(), d);
+        assert!(Kernel::available().contains(&Kernel::Scalar));
+        assert!(Kernel::available().contains(&d));
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for k in Kernel::available() {
+            assert_eq!(k.name().parse::<Kernel>().unwrap(), k);
+            assert_eq!(format!("{k}").parse::<Kernel>().unwrap(), k);
+        }
+        assert_eq!(Kernel::parse_choice("auto").unwrap(), None);
+        assert_eq!(Kernel::parse_choice("").unwrap(), None);
+        assert_eq!(Kernel::parse_choice("scalar").unwrap(), Some(Kernel::Scalar));
+        assert!("wat".parse::<Kernel>().is_err());
+        // Named-but-unavailable backends must error, not silently remap.
+        for k in [Kernel::Avx2, Kernel::Neon] {
+            if !k.is_available() {
+                assert!(k.name().parse::<Kernel>().is_err(), "{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_resolves_to_scalar() {
+        for k in [Kernel::Avx2, Kernel::Neon] {
+            if !k.is_available() {
+                assert_eq!(k.resolve(), Kernel::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn active_is_available() {
+        assert!(active().is_available());
+    }
+
+    #[test]
+    fn cpu_features_consistent_with_backends() {
+        let f = cpu_features();
+        if Kernel::Avx2.is_available() {
+            assert!(f.contains(&"avx2"));
+        }
+        if Kernel::Neon.is_available() {
+            assert!(f.contains(&"neon"));
+        }
+    }
+
+    /// Every backend's pairwise popcount must equal scalar's on lengths
+    /// that cover the SIMD main loops, their tails, and the empty case.
+    #[test]
+    fn xor_popcount_matches_scalar_across_backends() {
+        let mut rng = Rng::new(0xC0DE);
+        for words in [0usize, 1, 3, 4, 5, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 130] {
+            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let want = scalar::xor_popcount(&a, &b);
+            for k in Kernel::available() {
+                assert_eq!(xor_popcount(k, &a, &b), want, "{k} words={words}");
+            }
+            // Edge patterns: identical, complementary, all-ones.
+            let ones = vec![u64::MAX; words];
+            for k in Kernel::available() {
+                assert_eq!(xor_popcount(k, &a, &a), 0, "{k} self");
+                assert_eq!(xor_popcount(k, &a, &ones), scalar::xor_popcount(&a, &ones), "{k} ones");
+            }
+        }
+    }
+
+    #[test]
+    fn count_primitives_match_scalar_across_backends() {
+        let mut rng = Rng::new(0xBEE5);
+        for wpp in [1usize, 2, 16, 18, 33] {
+            let wplanes: Vec<Vec<u64>> =
+                (0..MAX_K).map(|_| (0..wpp).map(|_| rng.next_u64()).collect()).collect();
+            let xplanes: Vec<Vec<u64>> =
+                (0..MAX_K).map(|_| (0..wpp).map(|_| rng.next_u64()).collect()).collect();
+            let w: [&[u64]; 3] = [&wplanes[0][..], &wplanes[1][..], &wplanes[2][..]];
+            let x: [&[u64]; 2] = [&xplanes[0][..], &xplanes[1][..]];
+            let mut want = [[0u32; 2]; 3];
+            scalar::row_counts::<3, 2>(&w, &x, &mut want);
+            for k in Kernel::available() {
+                let mut got = [[0u32; 2]; 3];
+                row_counts::<3, 2>(k, &w, &x, &mut got);
+                assert_eq!(got, want, "row_counts {k} wpp={wpp}");
+
+                let xw: [[&[u64]; 2]; 2] = [x, [&xplanes[2][..], &xplanes[3][..]]];
+                let mut want_b = [[[0u32; 2]; 3]; 2];
+                scalar::block_counts::<3, 2>(&w, &xw, &mut want_b);
+                let mut got_b = [[[0u32; 2]; 3]; 2];
+                block_counts::<3, 2>(k, &w, &xw, &mut got_b);
+                assert_eq!(got_b, want_b, "block_counts {k} wpp={wpp}");
+
+                let wd: Vec<&[u64]> = w.to_vec();
+                let xd: Vec<&[u64]> = x.to_vec();
+                let mut want_d = [[0u32; MAX_K]; MAX_K];
+                scalar::row_counts_dyn(&wd, &xd, &mut want_d);
+                let mut got_d = [[0u32; MAX_K]; MAX_K];
+                row_counts_dyn(k, &wd, &xd, &mut got_d);
+                assert_eq!(got_d, want_d, "row_counts_dyn {k} wpp={wpp}");
+            }
+        }
+    }
+}

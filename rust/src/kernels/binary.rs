@@ -10,14 +10,21 @@
 //! ```
 //!
 //! The paper implements XOR with `_mm256_xor_ps` and popcount with
-//! `_popcnt64`; on portable Rust the same dataflow is `u64 ^` +
-//! `count_ones`, which LLVM lowers to the identical instructions.
+//! `_popcnt64`. Here the mismatch-count inner loops live behind the
+//! runtime-dispatched backend layer ([`super::backend`]): the portable
+//! scalar kernel (`u64 ^` + `count_ones`), an AVX2 kernel (`vpshufb`
+//! nibble-LUT popcount + Harley–Seal), and a NEON kernel (`vcntq_u8`).
+//! Because the counts are **exact integers** whatever the instruction mix,
+//! and the float reduction below is shared by every backend, the f32
+//! outputs are bit-identical across backends, batch sizes, and thread
+//! counts (`rust/tests/kernel_parity.rs`, `rust/tests/exec_parity.rs`).
 //!
 //! Activations are quantized **online** with the alternating method
 //! (`T = 2`) — its cost is the "Quant" column of Table 6.
 
 use crate::exec::{Exec, SendPtr};
-use crate::quant::{alternating, Method, PackedBits, Quantized, QuantizedBatch, RowQuantized};
+use crate::kernels::backend::{self, Kernel, MAX_K};
+use crate::quant::{alternating, Method, Quantized, QuantizedBatch, RowQuantized};
 
 /// Quantize an activation vector online (paper setting: alternating, T=2).
 pub fn quantize_activations(x: &[f32], k: usize) -> Quantized {
@@ -29,26 +36,23 @@ pub fn quantize_activations_with(x: &[f32], k: usize, method: Method) -> Quantiz
     crate::quant::quantize(x, k, method)
 }
 
-/// Max bit width the fused inner loop specializes for (the paper never
-/// exceeds 4 bits).
-const MAX_K: usize = 4;
-
 /// `y = Ŵ x̂` where both operands are already quantized.
 /// `y.len() == w.rows`; panics on shape mismatch.
 ///
-/// Perf note (EXPERIMENTS.md §Perf): the k_w·k_x binary dot products of one
-/// row are evaluated in a **single fused pass** over the packed words — the
-/// activation plane words are loaded once per word index instead of k_w
-/// times, and the k_w·k_x XOR+POPCNT chains are independent so they pipeline.
+/// Legacy `RowQuantized` entry point (the trainer's path); runs on the
+/// process-wide active backend ([`backend::active`]). The serving path
+/// uses [`PreparedGemm`], whose contiguous layout streams better.
 pub fn quantized_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
     assert_eq!(w.cols, x.n, "inner dimension mismatch");
     assert_eq!(y.len(), w.rows);
+    let kernel = backend::active();
     let kw = w.k;
     let kx = x.k();
     if kw <= MAX_K && kx <= MAX_K {
-        return fused_gemv(w, x, y);
+        return fused_gemv(w, x, y, kernel);
     }
-    // Fallback for exotic bit widths: plane-pair loop.
+    // Fallback for exotic bit widths: plane-pair loop over the same
+    // backend's pairwise primitive.
     let n = w.cols as i32;
     for (r, yr) in y.iter_mut().enumerate() {
         let mut acc = 0.0f32;
@@ -57,7 +61,8 @@ pub fn quantized_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
             let alpha_w = w.alphas[r * kw + t];
             let mut inner = 0.0f32;
             for s in 0..kx {
-                let dot = xor_popcount_dot(plane_w, &x.planes[s], n);
+                let mism = backend::xor_popcount(kernel, plane_w.words(), x.planes[s].words());
+                let dot = n - 2 * mism as i32;
                 inner += x.alphas[s] * dot as f32;
             }
             acc += alpha_w * inner;
@@ -75,6 +80,13 @@ pub fn quantized_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
 /// batched path ([`Self::gemm`], Fig. 3 right): the batched kernel sweeps
 /// each packed weight row **once per batch**, amortizing the DRAM traffic
 /// of the weight planes over all `B` activation columns.
+///
+/// Each instance carries the [`Kernel`] backend its count loops dispatch
+/// to — resolved from [`backend::active`] at construction (forced choice >
+/// `AMQ_KERNEL` > runtime detection) and overridable per-instance via
+/// [`Self::set_kernel`]. Backends only change *how* the exact integer
+/// mismatch counts are computed, never the float reduction, so every
+/// backend is bit-exact against scalar.
 #[derive(Clone, Debug)]
 pub struct PreparedGemm {
     pub rows: usize,
@@ -83,6 +95,7 @@ pub struct PreparedGemm {
     words_per_plane: usize,
     data: Vec<u64>,
     alphas: Vec<f32>, // rows * k
+    kernel: Kernel,
 }
 
 /// Historical name of [`PreparedGemm`] from the single-vector era; the
@@ -101,7 +114,14 @@ const GEMM_BLOCK: usize = 4;
 const GEMM_MIN_ROWS_PER_TASK: usize = 1;
 
 impl PreparedGemm {
+    /// Build on the process-wide active backend ([`backend::active`]).
     pub fn new(w: &RowQuantized) -> Self {
+        Self::with_kernel(w, backend::active())
+    }
+
+    /// Build with an explicit backend (resolved against availability —
+    /// an unavailable choice falls back to scalar).
+    pub fn with_kernel(w: &RowQuantized, kernel: Kernel) -> Self {
         let wpp = w.cols.div_ceil(64);
         let mut data = Vec::with_capacity(w.rows * w.k * wpp);
         for plane in &w.planes {
@@ -114,7 +134,19 @@ impl PreparedGemm {
             words_per_plane: wpp,
             data,
             alphas: w.alphas.clone(),
+            kernel: kernel.resolve(),
         }
+    }
+
+    /// The backend this matrix dispatches its count loops to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// Override the backend (resolved against availability). Outputs stay
+    /// bit-identical — only wall time changes.
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.kernel = kernel.resolve();
     }
 
     /// Fused single-pass GEMV over the contiguous layout. Dispatches to a
@@ -143,15 +175,9 @@ impl PreparedGemm {
         let row_words = KW * wpp;
         for (r, yr) in y.iter_mut().enumerate() {
             let row = &self.data[r * row_words..(r + 1) * row_words];
+            let wp: [&[u64]; KW] = std::array::from_fn(|t| &row[t * wpp..(t + 1) * wpp]);
             let mut counts = [[0u32; KX]; KW];
-            for i in 0..wpp {
-                for t in 0..KW {
-                    let ww = row[t * wpp + i];
-                    for s in 0..KX {
-                        counts[t][s] += (ww ^ xw[s][i]).count_ones();
-                    }
-                }
-            }
+            backend::row_counts::<KW, KX>(self.kernel, &wp, &xw, &mut counts);
             let mut acc = 0.0f32;
             for (t, row_c) in counts.iter().enumerate() {
                 let mut inner = 0.0f32;
@@ -178,15 +204,12 @@ impl PreparedGemm {
         let row_words = kw * wpp;
         for (r, yr) in y.iter_mut().enumerate() {
             let row = &self.data[r * row_words..(r + 1) * row_words];
-            let mut counts = [[0u32; MAX_K]; MAX_K];
-            for i in 0..wpp {
-                for (t, cs) in counts.iter_mut().enumerate().take(kw) {
-                    let ww = row[t * wpp + i];
-                    for (s, c) in cs.iter_mut().enumerate().take(kx) {
-                        *c += (ww ^ xw[s][i]).count_ones();
-                    }
-                }
+            let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
+            for (t, slot) in wp.iter_mut().enumerate().take(kw) {
+                *slot = &row[t * wpp..(t + 1) * wpp];
             }
+            let mut counts = [[0u32; MAX_K]; MAX_K];
+            backend::row_counts_dyn(self.kernel, &wp[..kw], &xw[..kx], &mut counts);
             let mut acc = 0.0f32;
             for (t, row_c) in counts.iter().enumerate().take(kw) {
                 let mut inner = 0.0f32;
@@ -207,17 +230,27 @@ impl PreparedGemm {
     }
 
     /// Dense reconstruction (for `Linear::to_dense` and eval paths).
+    ///
+    /// Word-at-a-time expansion (one shift per element) in the same
+    /// plane-major, ascending-column accumulation order as the per-bit
+    /// reference, so the result is bit-identical to
+    /// [`RowQuantized::dequantize`].
     pub fn dequantize(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.rows * self.cols];
         let wpp = self.words_per_plane;
         for r in 0..self.rows {
+            let o = &mut out[r * self.cols..(r + 1) * self.cols];
             for t in 0..self.k {
                 let alpha = self.alphas[r * self.k + t];
                 let words = &self.data[(r * self.k + t) * wpp..(r * self.k + t + 1) * wpp];
-                let o = &mut out[r * self.cols..(r + 1) * self.cols];
-                for (j, v) in o.iter_mut().enumerate() {
-                    let bit = (words[j / 64] >> (j % 64)) & 1;
-                    *v += if bit == 1 { alpha } else { -alpha };
+                for (wi, &word) in words.iter().enumerate() {
+                    let base = wi * 64;
+                    let live = 64.min(self.cols - base);
+                    let mut bits = word;
+                    for v in o[base..base + live].iter_mut() {
+                        *v += if bits & 1 == 1 { alpha } else { -alpha };
+                        bits >>= 1;
+                    }
                 }
             }
         }
@@ -279,28 +312,18 @@ impl PreparedGemm {
         let row_words = KW * wpp;
         for r in r0..r1 {
             let row = &self.data[r * row_words..(r + 1) * row_words];
+            let wp: [&[u64]; KW] = std::array::from_fn(|t| &row[t * wpp..(t + 1) * wpp]);
             let mut b0 = 0;
             while b0 < x.batch {
                 let bb = GEMM_BLOCK.min(x.batch - b0);
                 // Per-column plane slices; tail entries beyond `bb` alias
-                // column b0 and are never read.
+                // column b0 and are never passed to the backend.
                 let xw: [[&[u64]; KX]; GEMM_BLOCK] = std::array::from_fn(|j| {
                     let b = b0 + if j < bb { j } else { 0 };
                     std::array::from_fn(|s| x.plane_words(b, s))
                 });
                 let mut counts = [[[0u32; KX]; KW]; GEMM_BLOCK];
-                for i in 0..wpp {
-                    for t in 0..KW {
-                        // One load of the weight word serves every column of
-                        // the block; the bb·k_x XOR+POPCNT chains pipeline.
-                        let ww = row[t * wpp + i];
-                        for (j, cj) in counts.iter_mut().enumerate().take(bb) {
-                            for s in 0..KX {
-                                cj[t][s] += (ww ^ xw[j][s][i]).count_ones();
-                            }
-                        }
-                    }
-                }
+                backend::block_counts::<KW, KX>(self.kernel, &wp, &xw[..bb], &mut counts[..bb]);
                 for (j, cj) in counts.iter().enumerate().take(bb) {
                     let b = b0 + j;
                     let mut acc = 0.0f32;
@@ -326,6 +349,10 @@ impl PreparedGemm {
         let row_words = kw * wpp;
         for r in r0..r1 {
             let row = &self.data[r * row_words..(r + 1) * row_words];
+            let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
+            for (t, slot) in wp.iter_mut().enumerate().take(kw) {
+                *slot = &row[t * wpp..(t + 1) * wpp];
+            }
             let mut b0 = 0;
             while b0 < x.batch {
                 let bb = GEMM_BLOCK.min(x.batch - b0);
@@ -334,16 +361,13 @@ impl PreparedGemm {
                     std::array::from_fn(|s| if s < kx { x.plane_words(b, s) } else { &[] })
                 });
                 let mut counts = [[[0u32; MAX_K]; MAX_K]; GEMM_BLOCK];
-                for i in 0..wpp {
-                    for t in 0..kw {
-                        let ww = row[t * wpp + i];
-                        for (j, cj) in counts.iter_mut().enumerate().take(bb) {
-                            for (s, c) in cj[t].iter_mut().enumerate().take(kx) {
-                                *c += (ww ^ xw[j][s][i]).count_ones();
-                            }
-                        }
-                    }
-                }
+                backend::block_counts_dyn(
+                    self.kernel,
+                    &wp[..kw],
+                    &xw[..bb],
+                    kx,
+                    &mut counts[..bb],
+                );
                 for (j, cj) in counts.iter().enumerate().take(bb) {
                     let b = b0 + j;
                     let mut acc = 0.0f32;
@@ -376,12 +400,13 @@ impl PreparedGemm {
     }
 }
 
-/// Fused single-pass kernel for k ≤ 4 (see `quantized_gemv`).
-fn fused_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
+/// Fused single-pass kernel for k ≤ 4 (see `quantized_gemv`): gathers the
+/// per-row plane slices and routes the counts through the backend — the
+/// same hot loop as [`PreparedGemm`], just over scattered plane storage.
+fn fused_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32], kernel: Kernel) {
     let kw = w.k;
     let kx = x.k();
     let n = w.cols as i32;
-    let nw = w.cols.div_ceil(64);
     let xw: [&[u64]; MAX_K] = {
         let mut a: [&[u64]; MAX_K] = [&[]; MAX_K];
         for (s, p) in x.planes.iter().enumerate() {
@@ -395,16 +420,7 @@ fn fused_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
             wp[t] = w.planes[r * kw + t].words();
         }
         let mut counts = [[0u32; MAX_K]; MAX_K];
-        for i in 0..nw {
-            // One load of each plane word per index; k_w*k_x independent
-            // XOR+POPCNT chains.
-            for (t, wt) in wp.iter().enumerate().take(kw) {
-                let ww = wt[i];
-                for s in 0..kx {
-                    counts[t][s] += (ww ^ xw[s][i]).count_ones();
-                }
-            }
-        }
+        backend::row_counts_dyn(kernel, &wp[..kw], &xw[..kx], &mut counts);
         let mut acc = 0.0f32;
         for (t, row) in counts.iter().enumerate().take(kw) {
             let mut inner = 0.0f32;
@@ -415,29 +431,6 @@ fn fused_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
         }
         *yr = acc;
     }
-}
-
-/// The innermost 1-bit dot product. Kept `#[inline]` and word-unrolled —
-/// this is the hot loop of the entire serving path.
-#[inline]
-fn xor_popcount_dot(a: &PackedBits, b: &PackedBits, n: i32) -> i32 {
-    let (wa, wb) = (a.words(), b.words());
-    debug_assert_eq!(wa.len(), wb.len());
-    let mut mism = 0u32;
-    let mut i = 0;
-    // 4-way unroll: popcount units pipeline across independent words.
-    while i + 4 <= wa.len() {
-        mism += (wa[i] ^ wb[i]).count_ones()
-            + (wa[i + 1] ^ wb[i + 1]).count_ones()
-            + (wa[i + 2] ^ wb[i + 2]).count_ones()
-            + (wa[i + 3] ^ wb[i + 3]).count_ones();
-        i += 4;
-    }
-    while i < wa.len() {
-        mism += (wa[i] ^ wb[i]).count_ones();
-        i += 1;
-    }
-    n - 2 * mism as i32
 }
 
 /// Full online path of Table 6: quantize `x` (the "Quant" share), then run
@@ -535,7 +528,8 @@ mod tests {
             quantized_gemv(&wq, &xq, &mut y1);
             prep.gemv(&xq, &mut y2);
             assert_eq!(y1, y2, "m={m} n={n} kw={kw} kx={kx}");
-            // Dequantization also agrees.
+            // Dequantization also agrees (word-wise fast path vs per-bit
+            // reference inside RowQuantized).
             assert_eq!(prep.dequantize(), wq.dequantize());
         }
     }
@@ -600,6 +594,51 @@ mod tests {
             prep.online_gemv(&x[b * n..(b + 1) * n], k, &mut yb);
             assert_eq!(&y[b * m..(b + 1) * m], &yb[..], "col {b}");
         }
+    }
+
+    /// Every available backend must reproduce the scalar outputs exactly
+    /// (the quick in-module check; the full grid lives in
+    /// `rust/tests/kernel_parity.rs`).
+    #[test]
+    fn backends_bitmatch_scalar_gemv_and_gemm() {
+        let mut rng = Rng::new(106);
+        // n=1090 exercises the SIMD main loops + tails; n=70 is tail-only.
+        for (m, n, kw, kx) in [(7, 1090, 2, 2), (5, 70, 3, 2), (4, 130, 4, 4)] {
+            let w = rng.normal_vec(m * n, 0.3);
+            let wq = RowQuantized::quantize(&w, m, n, kw, Method::Alternating { t: 2 });
+            let reference = PreparedGemm::with_kernel(&wq, Kernel::Scalar);
+            let xq = quantize_activations(&rng.normal_vec(n, 1.0), kx);
+            let mut y_ref = vec![0.0f32; m];
+            reference.gemv(&xq, &mut y_ref);
+            let batch = 5;
+            let xb = QuantizedBatch::quantize(&rng.normal_vec(batch * n, 1.0), batch, n, kx);
+            let mut g_ref = vec![0.0f32; batch * m];
+            reference.gemm(&xb, &mut g_ref);
+            for kernel in Kernel::available() {
+                let prep = PreparedGemm::with_kernel(&wq, kernel);
+                assert_eq!(prep.kernel(), kernel);
+                let mut y = vec![0.0f32; m];
+                prep.gemv(&xq, &mut y);
+                assert_eq!(y, y_ref, "gemv {kernel} m={m} n={n} kw={kw} kx={kx}");
+                let mut g = vec![0.0f32; batch * m];
+                prep.gemm(&xb, &mut g);
+                assert_eq!(g, g_ref, "gemm {kernel} m={m} n={n} kw={kw} kx={kx}");
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_kernel_resolves_to_scalar_on_construction() {
+        let wq = RowQuantized::quantize(&[0.5; 12], 3, 4, 2, Method::Greedy);
+        for k in [Kernel::Avx2, Kernel::Neon] {
+            if !k.is_available() {
+                let prep = PreparedGemm::with_kernel(&wq, k);
+                assert_eq!(prep.kernel(), Kernel::Scalar);
+            }
+        }
+        let mut prep = PreparedGemm::new(&wq);
+        prep.set_kernel(Kernel::Scalar);
+        assert_eq!(prep.kernel(), Kernel::Scalar);
     }
 
     #[test]

@@ -6,9 +6,25 @@
 //!   XNOR + popcount matrix–vector products over multi-bit quantized
 //!   operands, including the **online activation quantization** step whose
 //!   cost Table 6 breaks out.
+//! * [`backend`] — runtime-dispatched kernel backends for the binary
+//!   counts: portable scalar ([`scalar`]), AVX2 with `vpshufb` nibble-LUT
+//!   popcount + Harley–Seal carry-save accumulation (`avx2`, x86_64), and
+//!   NEON `vcntq_u8` (`neon`, aarch64). Selection order: forced choice
+//!   (`--kernel` / `server.kernel`) > `AMQ_KERNEL` env > feature
+//!   detection. Every backend is bit-exact against scalar
+//!   (`rust/tests/kernel_parity.rs`).
 //! * [`cost`] — the analytic operation-count model of §3/§4 (binary vs
 //!   non-binary op counts, theoretical speedup γ).
 
+pub mod backend;
 pub mod binary;
 pub mod cost;
 pub mod dense;
+pub(crate) mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+pub use backend::Kernel;

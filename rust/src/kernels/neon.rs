@@ -1,0 +1,159 @@
+//! NEON backend (aarch64): XOR + `vcntq_u8` byte popcount with a widening
+//! `vpaddlq`/`vpadalq` reduction.
+//!
+//! The pairwise primitive streams both bit planes two `u64` words (one
+//! 128-bit vector) at a time. Byte popcounts (`vcntq_u8`, ≤ 8 per byte)
+//! are accumulated in a `u8x16` register for up to 31 vectors (31 · 8 =
+//! 248 < 256, no overflow), then folded into a `u64x2` accumulator with
+//! the pairwise widening adds — so the expensive widening chain is paid
+//! once per ~4 KiB of plane data, not per vector.
+//!
+//! Exactness: popcounts are exact integers, so this backend produces the
+//! identical mismatch counts as the scalar kernel; the shared float
+//! reduction in `kernels::binary` then makes the f32 outputs bit-identical
+//! (pinned by `rust/tests/kernel_parity.rs`).
+//!
+//! NEON is baseline on aarch64, so [`super::backend::Kernel::Neon`] is
+//! always available there; this module is compiled only for that arch.
+
+use core::arch::aarch64::*;
+
+use super::backend::MAX_K;
+
+/// Max 128-bit vectors whose byte popcounts fit a `u8` accumulator.
+const U8_BLOCK_VECS: usize = 31;
+
+/// `Σ_i popcount(a[i] ^ b[i])` (NEON).
+#[inline]
+pub(crate) fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: NEON is a baseline feature of every aarch64 target this
+    // module is compiled for (see Kernel::is_available).
+    unsafe { xor_popcount_neon(a, b) }
+}
+
+/// Fused single-column counts (NEON): pairwise passes — the weight row
+/// stays in L1 across the `KW · KX` plane pairs.
+#[inline]
+pub(crate) fn row_counts<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    x: &[&[u64]; KX],
+    counts: &mut [[u32; KX]; KW],
+) {
+    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
+    unsafe { row_counts_neon::<KW, KX>(w, x, counts) }
+}
+
+/// Fused batch-block counts (NEON).
+#[inline]
+pub(crate) fn block_counts<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    xw: &[[&[u64]; KX]],
+    counts: &mut [[[u32; KX]; KW]],
+) {
+    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
+    unsafe { block_counts_neon::<KW, KX>(w, xw, counts) }
+}
+
+/// Runtime-width `row_counts` (NEON).
+#[inline]
+pub(crate) fn row_counts_dyn(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
+    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
+    unsafe { row_counts_dyn_neon(w, x, counts) }
+}
+
+/// Runtime-width `block_counts` (NEON).
+#[inline]
+pub(crate) fn block_counts_dyn(
+    w: &[&[u64]],
+    xw: &[[&[u64]; MAX_K]],
+    kx: usize,
+    counts: &mut [[[u32; MAX_K]; MAX_K]],
+) {
+    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
+    unsafe { block_counts_dyn_neon(w, xw, kx, counts) }
+}
+
+/// The blocked XOR-popcount over two equal-length word slices.
+///
+/// # Safety
+/// Requires NEON; `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+unsafe fn xor_popcount_neon(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut i = 0usize; // word index
+    let mut total = vdupq_n_u64(0);
+    while i + 2 <= n {
+        // One u8x16 accumulator per block of ≤ 31 vectors (no overflow).
+        let block_end = n.min(i + 2 * U8_BLOCK_VECS);
+        let mut acc8 = vdupq_n_u8(0);
+        while i + 2 <= block_end {
+            let va = vld1q_u8(pa.add(i) as *const u8);
+            let vb = vld1q_u8(pb.add(i) as *const u8);
+            acc8 = vaddq_u8(acc8, vcntq_u8(veorq_u8(va, vb)));
+            i += 2;
+        }
+        total = vpadalq_u32(total, vpaddlq_u16(vpaddlq_u8(acc8)));
+    }
+    let mut sum = vaddvq_u64(total);
+    while i < n {
+        sum += u64::from((*pa.add(i) ^ *pb.add(i)).count_ones());
+        i += 1;
+    }
+    sum as u32
+}
+
+/// # Safety
+/// Requires NEON; all plane slices share one length.
+#[target_feature(enable = "neon")]
+unsafe fn row_counts_neon<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    x: &[&[u64]; KX],
+    counts: &mut [[u32; KX]; KW],
+) {
+    for (ct, wt) in counts.iter_mut().zip(w) {
+        for (c, xs) in ct.iter_mut().zip(x) {
+            *c += xor_popcount_neon(wt, xs);
+        }
+    }
+}
+
+/// # Safety
+/// Requires NEON; all plane slices share one length.
+#[target_feature(enable = "neon")]
+unsafe fn block_counts_neon<const KW: usize, const KX: usize>(
+    w: &[&[u64]; KW],
+    xw: &[[&[u64]; KX]],
+    counts: &mut [[[u32; KX]; KW]],
+) {
+    for (cj, xj) in counts.iter_mut().zip(xw) {
+        row_counts_neon::<KW, KX>(w, xj, cj);
+    }
+}
+
+/// # Safety
+/// Requires NEON; all plane slices share one length.
+#[target_feature(enable = "neon")]
+unsafe fn row_counts_dyn_neon(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
+    for (ct, wt) in counts.iter_mut().zip(w) {
+        for (c, xs) in ct.iter_mut().zip(x) {
+            *c += xor_popcount_neon(wt, xs);
+        }
+    }
+}
+
+/// # Safety
+/// Requires NEON; `xw[j][s]` valid for `s < kx`.
+#[target_feature(enable = "neon")]
+unsafe fn block_counts_dyn_neon(
+    w: &[&[u64]],
+    xw: &[[&[u64]; MAX_K]],
+    kx: usize,
+    counts: &mut [[[u32; MAX_K]; MAX_K]],
+) {
+    for (cj, xj) in counts.iter_mut().zip(xw) {
+        row_counts_dyn_neon(w, &xj[..kx], cj);
+    }
+}

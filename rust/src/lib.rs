@@ -38,6 +38,32 @@
 //! `threads = 1` *is* the serial path. The server exposes the knob as
 //! `BatcherConfig::exec` / `amq serve --threads N` (default: all cores).
 //!
+//! ## Kernel backends
+//!
+//! The XNOR/popcount count loops are **runtime-dispatched** over SIMD
+//! backends ([`kernels::backend`]): portable scalar (`u64 ^` +
+//! `count_ones`, always available), AVX2 (`vpshufb` nibble-LUT popcount
+//! with Harley–Seal carry-save accumulation over 256-bit lanes, x86_64),
+//! and NEON (`vcntq_u8` + widening adds, aarch64). Selection order:
+//! explicit choice (`amq serve --kernel` / `server.kernel` config) >
+//! `AMQ_KERNEL` env (`scalar|avx2|neon|auto`) > feature detection
+//! (`is_x86_feature_detected!`).
+//!
+//! **Bit-exactness argument:** every output element reduces to exact
+//! integer mismatch counts followed by a float reduction. Backends only
+//! change how the counts are computed — the same integers in any
+//! instruction mix — and the float reduction is one shared code path, so
+//! every backend's f32 output is **bit-identical** to scalar's, across
+//! batch sizes and thread counts (`rust/tests/kernel_parity.rs`, zero
+//! tolerance). Switching backends is therefore a pure wall-time knob.
+//!
+//! **Adding a backend:** add a [`kernels::Kernel`] variant with an
+//! `is_available` arm, implement the count primitives (`xor_popcount`,
+//! `row_counts`, `block_counts` and their `_dyn` variants) in a new
+//! arch-gated module, and add the dispatch arms in `kernels::backend`.
+//! The cross-backend parity suite picks new backends up automatically
+//! via `Kernel::available()`.
+//!
 //! ## Quick tour
 //!
 //! ```

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //! ```text
-//! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 --threads N ..]
+//! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 --threads N --kernel auto ..]
 //! amq train    --tag lstm_fp [--dataset ptb|wt2|text8] [--epochs N] ...
 //! amq quantize --bits 2 [--method alternating[:cycles]] [--checkpoint f.amqt]
 //! amq bench    table1|table2|table3|table4|table5|table6|table7|table8|table9|costmodel
@@ -102,6 +102,22 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         (s, m)
     };
 
+    // Kernel backend: `--kernel` (when present — including an explicit
+    // `--kernel auto`) overrides `server.kernel`. A named choice is forced
+    // process-wide BEFORE the model is built (so every PreparedGemm
+    // resolves to it); `auto` falls through to `AMQ_KERNEL` / runtime
+    // detection.
+    let kernel_choice = if cli.has("kernel") {
+        cli.get_kernel("kernel")?
+    } else {
+        amq::kernels::Kernel::parse_choice(&server_cfg.kernel)
+            .map_err(|e| anyhow::anyhow!("server.kernel: {e}"))?
+    };
+    if let Some(k) = kernel_choice {
+        amq::kernels::backend::force(k);
+    }
+    let kernel = amq::kernels::backend::active();
+
     // `--threads` overrides the config file; 1 = serial, 0 = auto.
     let exec_cfg = ExecConfig::with_threads(cli.get_usize("threads", server_cfg.threads)?);
     let exec = Exec::new(exec_cfg);
@@ -123,7 +139,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         }
     };
     eprintln!(
-        "model: {} vocab={} hidden={} {} ({} weight bytes, {} exec threads)",
+        "model: {} vocab={} hidden={} {} ({} weight bytes, kernel={}, {} exec threads)",
         model.config.kind.name(),
         model.config.vocab,
         model.config.hidden,
@@ -133,6 +149,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             "FP".into()
         },
         model.bytes(),
+        kernel,
         exec.threads()
     );
 

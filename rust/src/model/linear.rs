@@ -12,7 +12,7 @@
 use super::batch::{ActivationBatch, OutputBatch};
 use crate::exec::{Exec, SendPtr};
 use crate::kernels::binary::PreparedGemm;
-use crate::kernels::{binary, dense};
+use crate::kernels::{binary, dense, Kernel};
 use crate::quant::{Method, Quantized, QuantizedBatch, RowQuantized};
 
 /// Precision/bit-width policy for one linear layer.
@@ -156,6 +156,17 @@ impl QuantLinear {
     pub fn prepared(&self) -> &PreparedGemm {
         &self.w
     }
+
+    /// The kernel backend this layer's GEMM dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.w.kernel()
+    }
+
+    /// Override the kernel backend (resolved against availability).
+    /// Outputs stay bit-identical — only wall time changes.
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.w.set_kernel(kernel);
+    }
 }
 
 impl LinearOp for QuantLinear {
@@ -269,6 +280,14 @@ impl Linear {
         match self {
             Linear::Dense(_) => None,
             Linear::Quant(q) => Some(binary::quantize_activations(x, q.k_a)),
+        }
+    }
+
+    /// The kernel backend of the quantized GEMM (`None` for dense layers).
+    pub fn kernel(&self) -> Option<Kernel> {
+        match self {
+            Linear::Dense(_) => None,
+            Linear::Quant(q) => Some(q.kernel()),
         }
     }
 
@@ -414,6 +433,34 @@ mod tests {
                 assert_eq!(y.data(), y_serial.data(), "threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn quant_layer_bitmatches_across_kernel_backends() {
+        // The LinearOp contract extends across kernel backends: a forward
+        // on any available SIMD backend is EXACT against scalar.
+        let mut rng = Rng::new(116);
+        let (m, n, batch) = (18, 1100, 5); // n past the SIMD main loops
+        let wv = rng.normal_vec(m * n, 0.3);
+        let x = rng.normal_vec(batch * n, 1.0);
+        let xb = ActivationBatch::from_flat(x, batch, n);
+        let mut scalar_layer = match Linear::new(wv.clone(), m, n, Precision::Quantized { k_w: 2, k_a: 2 }) {
+            Linear::Quant(q) => q,
+            Linear::Dense(_) => unreachable!(),
+        };
+        scalar_layer.set_kernel(Kernel::Scalar);
+        assert_eq!(scalar_layer.kernel(), Kernel::Scalar);
+        let mut y_ref = OutputBatch::zeros(batch, m);
+        scalar_layer.forward(&xb, &mut y_ref);
+        for kernel in Kernel::available() {
+            let mut layer = scalar_layer.clone();
+            layer.set_kernel(kernel);
+            let mut y = OutputBatch::zeros(batch, m);
+            layer.forward(&xb, &mut y);
+            assert_eq!(y.data(), y_ref.data(), "kernel={kernel}");
+        }
+        // Dense layers report no kernel.
+        assert_eq!(Linear::new(wv, m, n, Precision::Full).kernel(), None);
     }
 
     #[test]

@@ -157,13 +157,15 @@ impl InferenceServer {
             Work::Stats { respond } => {
                 let snap = self.latency.snapshot();
                 let _ = respond.send(format!(
-                    "{} requests={} tokens={} batches={} evictions={} sessions={} threads={}",
+                    "{} requests={} tokens={} batches={} evictions={} sessions={} \
+                     kernel={} threads={}",
                     snap.report("latency"),
                     Counters::get(&self.counters.requests),
                     Counters::get(&self.counters.tokens_generated),
                     Counters::get(&self.counters.batches),
                     self.sessions.evictions,
                     self.sessions.len(),
+                    crate::kernels::backend::active(),
                     self.exec.threads(),
                 ));
             }
@@ -352,6 +354,8 @@ mod tests {
         tx.send(Work::Stats { respond: mtx }).unwrap();
         let stats = mrx.recv().unwrap();
         assert!(stats.contains("requests=2"), "{stats}");
+        // The active kernel backend and thread count report together.
+        assert!(stats.contains("kernel=") && stats.contains("threads="), "{stats}");
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();
     }

@@ -1,0 +1,151 @@
+//! Cross-backend exactness contract of the kernel dispatch layer: every
+//! available backend (scalar, AVX2, NEON) must reproduce the scalar
+//! kernel's f32 outputs with **no tolerance** (`assert_eq!` on f32), for
+//! every (method, k_w, k_x, B) grid point — including column counts that
+//! are not multiples of 64 (tail words) and column counts large enough to
+//! engage the SIMD main loops (Harley–Seal blocks on AVX2, the u8-block
+//! loop on NEON) — and for every thread count of the execution engine.
+//!
+//! Why this can hold exactly: backends only change how the integer
+//! mismatch counts `popcount(w ⊕ x)` are computed, and those are exact in
+//! any instruction mix; the float reduction is one shared code path in
+//! `kernels::binary`. So SIMD here is a pure wall-time optimization —
+//! clients can never observe which backend (or how many cores) served
+//! them.
+
+use amq::exec::{Exec, ExecConfig};
+use amq::kernels::binary::{quantized_gemv, PreparedGemm};
+use amq::kernels::Kernel;
+use amq::quant::{Method, QuantizedBatch, RowQuantized};
+use amq::util::Rng;
+
+/// Shapes: tail words (130, 70), an exact word boundary (64), a column
+/// count past the SIMD whole-vector loops (1090 → 18 words per plane),
+/// and one long enough to engage the AVX2 Harley–Seal main loop
+/// (4109 → 65 words per plane: four 16-word carry-save blocks + a word
+/// tail). Large shapes run on the paper's bit widths only (see below).
+const SHAPES: [(usize, usize); 5] = [(9, 130), (16, 64), (13, 70), (5, 1090), (3, 4109)];
+
+fn backends_under_test() -> Vec<Kernel> {
+    let available = Kernel::available();
+    assert!(available.contains(&Kernel::Scalar));
+    available
+}
+
+/// The full grid of the issue: method × k_w/k_x ∈ {1..4}² × B ∈ {1, 3, 4,
+/// 16} × shapes with non-64-multiple cols, every available backend against
+/// scalar, zero tolerance.
+#[test]
+fn gemm_and_gemv_bitmatch_scalar_across_backends_full_grid() {
+    let mut rng = Rng::new(0x5EED);
+    let methods = [Method::Alternating { t: 2 }, Method::Greedy, Method::Uniform];
+    let backends = backends_under_test();
+    for method in methods {
+        for k_w in 1..=4usize {
+            for k_x in 1..=4usize {
+                for &(m, n) in &SHAPES {
+                    // The big shape only on the paper's bit widths to keep
+                    // the grid affordable; small shapes run all 16 combos.
+                    if n > 256 && !(k_w == 2 && k_x == 2) {
+                        continue;
+                    }
+                    let w = rng.normal_vec(m * n, 0.3);
+                    let wq = RowQuantized::quantize(&w, m, n, k_w, method);
+                    let reference = PreparedGemm::with_kernel(&wq, Kernel::Scalar);
+                    for batch in [1usize, 3, 4, 16] {
+                        let x = rng.normal_vec(batch * n, 1.0);
+                        let xq = QuantizedBatch::quantize(&x, batch, n, k_x);
+                        let mut want = vec![0.0f32; batch * m];
+                        reference.gemm(&xq, &mut want);
+                        for &kernel in &backends {
+                            let prep = PreparedGemm::with_kernel(&wq, kernel);
+                            let mut got = vec![0.0f32; batch * m];
+                            prep.gemm(&xq, &mut got);
+                            assert_eq!(
+                                got, want,
+                                "{kernel} {method:?} k_w={k_w} k_x={k_x} m={m} n={n} B={batch}"
+                            );
+                        }
+                    }
+                    // Single-vector path (gemv) on the same operands.
+                    let xq = QuantizedBatch::quantize(&rng.normal_vec(n, 1.0), 1, n, k_x);
+                    let col = xq.column(0);
+                    let mut want = vec![0.0f32; m];
+                    reference.gemv(&col, &mut want);
+                    for &kernel in &backends {
+                        let prep = PreparedGemm::with_kernel(&wq, kernel);
+                        let mut got = vec![0.0f32; m];
+                        prep.gemv(&col, &mut got);
+                        assert_eq!(
+                            got, want,
+                            "gemv {kernel} {method:?} k_w={k_w} k_x={k_x} m={m} n={n}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backend parity must also hold under the row-sharded threaded GEMM:
+/// (backend × thread count) never changes a bit.
+#[test]
+fn threaded_gemm_bitmatches_serial_scalar_across_backends() {
+    let mut rng = Rng::new(0xACE5);
+    let (m, n, k, batch) = (11, 1100, 2, 8);
+    let w = rng.normal_vec(m * n, 0.3);
+    let wq = RowQuantized::quantize(&w, m, n, k, Method::Alternating { t: 2 });
+    let x = rng.normal_vec(batch * n, 1.0);
+    let xq = QuantizedBatch::quantize(&x, batch, n, k);
+    let reference = PreparedGemm::with_kernel(&wq, Kernel::Scalar);
+    let mut want = vec![0.0f32; batch * m];
+    reference.gemm(&xq, &mut want);
+    for kernel in backends_under_test() {
+        let prep = PreparedGemm::with_kernel(&wq, kernel);
+        for threads in [1usize, 2, 3, 8] {
+            let exec = Exec::new(ExecConfig::with_threads(threads));
+            let mut got = vec![0.0f32; batch * m];
+            prep.gemm_exec(&xq, &mut got, &exec);
+            assert_eq!(got, want, "{kernel} threads={threads}");
+        }
+    }
+}
+
+/// The legacy `RowQuantized` entry point (`quantized_gemv`, the trainer's
+/// path) routes through the same backend dispatch: whatever backend is
+/// active for this process, it must bit-match the scalar `PreparedGemm`.
+#[test]
+fn legacy_quantized_gemv_bitmatches_scalar_prepared() {
+    let mut rng = Rng::new(0xFACE5);
+    for (m, n, k_w, k_x) in [(9, 1090, 2, 2), (6, 70, 3, 2), (4, 130, 4, 4), (3, 64, 1, 1)] {
+        let w = rng.normal_vec(m * n, 0.3);
+        let wq = RowQuantized::quantize(&w, m, n, k_w, Method::Alternating { t: 2 });
+        let xq = QuantizedBatch::quantize(&rng.normal_vec(n, 1.0), 1, n, k_x).column(0);
+        let mut legacy = vec![0.0f32; m];
+        quantized_gemv(&wq, &xq, &mut legacy);
+        let reference = PreparedGemm::with_kernel(&wq, Kernel::Scalar);
+        let mut want = vec![0.0f32; m];
+        reference.gemv(&xq, &mut want);
+        assert_eq!(legacy, want, "m={m} n={n} k_w={k_w} k_x={k_x}");
+    }
+}
+
+/// Online quantization + GEMM end-to-end across backends (the serving
+/// request path), bit-exact against scalar.
+#[test]
+fn online_gemm_bitmatches_scalar_across_backends() {
+    let mut rng = Rng::new(0xBEEF5);
+    let (m, n, k, batch) = (10, 1100, 2, 4);
+    let w = rng.normal_vec(m * n, 0.3);
+    let wq = RowQuantized::quantize(&w, m, n, k, Method::Alternating { t: 2 });
+    let x = rng.normal_vec(batch * n, 1.0);
+    let reference = PreparedGemm::with_kernel(&wq, Kernel::Scalar);
+    let mut want = vec![0.0f32; batch * m];
+    reference.online_gemm(&x, batch, k, &mut want);
+    for kernel in backends_under_test() {
+        let prep = PreparedGemm::with_kernel(&wq, kernel);
+        let mut got = vec![0.0f32; batch * m];
+        prep.online_gemm(&x, batch, k, &mut got);
+        assert_eq!(got, want, "{kernel}");
+    }
+}
