@@ -11,8 +11,10 @@
 //!
 //! The final stdout line is a machine-readable JSON summary (tokens/sec per
 //! model per batch size, plus the thread-scaling curve); `--json PATH`
-//! additionally writes it to a file so perf trajectories can be tracked
-//! across PRs.
+//! additionally writes it to a file (CI records it as
+//! `BENCH_server_throughput.json`) so perf trajectories can be tracked
+//! across PRs. Every quantized forward underneath goes through the fused
+//! batch-block count primitive of `kernels::backend`.
 
 use std::sync::mpsc;
 use std::sync::Arc;

@@ -1,8 +1,10 @@
 //! Table 6 (Appendix A): binary matrix–vector timing on CPU, with the
 //! online quantization cost broken out, plus the §3/§4 analytic cost model,
 //! the batched-GEMM sweep over B, the worker-pool thread-scaling sweep,
-//! and the kernel-backend sweep (scalar vs AVX2/NEON, bit-identical
-//! outputs, wall time only).
+//! the kernel-backend sweep (scalar vs AVX2/NEON, bit-identical outputs,
+//! wall time only), and the fused-vs-pairwise sweep of the count
+//! primitive itself (one fused block call vs per-plane-pair passes, with
+//! the block micro-model's predicted ratio).
 
 use crate::exec::{Exec, ExecConfig};
 use crate::kernels::{binary, cost, dense, Kernel};
@@ -343,6 +345,152 @@ pub fn render_backend_sweep(rows: &[BackendSweepRow]) -> String {
     s
 }
 
+/// One row of the fused-vs-pairwise sweep: the same batch block of counts
+/// computed through the single count primitive either as **one fused
+/// block** (one call, per-chain accumulators, one reduction per chain) or
+/// as **pairwise plane passes** (one 1×1×1 call per (column, w-plane,
+/// x-plane) chain — the decomposition the backends used before the fused
+/// kernel), plus the block micro-model's predicted ratio
+/// ([`cost::fused_block_advantage`]).
+#[derive(Clone, Debug)]
+pub struct FusedSweepRow {
+    /// Words per plane (the serving shape 1024 cols = 16 words; 128 words
+    /// is the Harley–Seal regime where both layouts converge).
+    pub words: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub backend: &'static str,
+    pub fused_ms: f64,
+    pub pairwise_ms: f64,
+    /// `pairwise_ms / fused_ms` — this PR's headline number at short planes.
+    pub speedup: f64,
+    /// The micro-model's predicted ratio: 1.0 for scalar; for AVX2 the
+    /// cutoff model (1.0 in the Harley–Seal long-plane regime, where both
+    /// layouts share a code path); for NEON the raw ratio (its fused
+    /// kernel runs at every plane length).
+    pub predicted: f64,
+}
+
+/// Measure the fused block primitive against its pairwise decomposition
+/// at the count-kernel level, per backend and plane length. Both layouts
+/// produce identical counts (asserted) — only the pass structure differs.
+///
+/// Caveat: the pairwise layout is *emulated* through the same single
+/// primitive (one 1×1×1 call per chain), so each pair also pays the
+/// dispatch + accumulator-setup cost of a full `block_counts` call —
+/// overhead the pre-fusion in-backend pairwise loops partially avoided.
+/// The ratio is therefore an upper bound on the fusion win alone; the
+/// end-to-end gate that matters (detected SIMD vs forced scalar at the
+/// serving shape, backend sweep) measures through `PreparedGemm::gemm`
+/// and carries no such bias.
+pub fn fused_vs_pairwise_sweep(
+    plane_words: &[usize],
+    batch: usize,
+    k: usize,
+    samples: usize,
+) -> Vec<FusedSweepRow> {
+    use crate::kernels::backend;
+    const ROWS: usize = 64;
+    let mut out = Vec::new();
+    let mut rng = Rng::new(0xF05E);
+    for &words in plane_words {
+        let wdata: Vec<Vec<u64>> = (0..ROWS * k)
+            .map(|_| (0..words).map(|_| rng.next_u64()).collect())
+            .collect();
+        let xdata: Vec<Vec<u64>> = (0..batch * k)
+            .map(|_| (0..words).map(|_| rng.next_u64()).collect())
+            .collect();
+        let wrows: Vec<Vec<&[u64]>> = (0..ROWS)
+            .map(|r| (0..k).map(|t| &wdata[r * k + t][..]).collect())
+            .collect();
+        let cols: Vec<Vec<&[u64]>> = (0..batch)
+            .map(|j| (0..k).map(|s| &xdata[j * k + s][..]).collect())
+            .collect();
+        let x_block: Vec<&[&[u64]]> = cols.iter().map(|c| &c[..]).collect();
+        let chains = batch * k * k;
+        let mut fused_counts = vec![0u32; chains];
+        let mut pair_counts = vec![0u32; chains];
+        let run_fused = |kernel, counts: &mut [u32]| {
+            for wr in &wrows {
+                counts.fill(0);
+                backend::block_counts(kernel, wr, &x_block, counts);
+            }
+        };
+        let run_pairwise = |kernel, counts: &mut [u32]| {
+            for wr in &wrows {
+                counts.fill(0);
+                for (j, xj) in x_block.iter().enumerate() {
+                    for (t, wt) in wr.iter().enumerate() {
+                        for (s, xs) in xj.iter().enumerate() {
+                            let pair_w: [&[u64]; 1] = [*wt];
+                            let pair_x: [&[u64]; 1] = [*xs];
+                            let pair_col: [&[&[u64]]; 1] = [&pair_x];
+                            let c = (j * k + t) * k + s;
+                            backend::block_counts(
+                                kernel,
+                                &pair_w,
+                                &pair_col,
+                                &mut counts[c..c + 1],
+                            );
+                        }
+                    }
+                }
+            }
+        };
+        for kernel in Kernel::available() {
+            // Exactness sanity: both layouts are the same integers.
+            run_fused(kernel, &mut fused_counts);
+            run_pairwise(kernel, &mut pair_counts);
+            assert_eq!(fused_counts, pair_counts, "{kernel} words={words}");
+            let f = bench_fn(&format!("fused {kernel} w={words}"), samples, || {
+                run_fused(kernel, &mut fused_counts);
+                black_box(&fused_counts);
+            });
+            let p = bench_fn(&format!("pairwise {kernel} w={words}"), samples, || {
+                run_pairwise(kernel, &mut pair_counts);
+                black_box(&pair_counts);
+            });
+            let (fused_ms, pairwise_ms) = (f.median_ms(), p.median_ms());
+            let (w64, k64, b64) = (words as u64, k as u64, batch as u64);
+            let predicted = match kernel {
+                // The micro-model is a SIMD model; scalar's two layouts
+                // differ only in loop fusion.
+                Kernel::Scalar => 1.0,
+                // AVX2 falls back to the same Harley–Seal pairwise pass on
+                // long planes, so its predicted advantage has a cutoff.
+                Kernel::Avx2 => cost::fused_block_advantage(w64, k64, k64, b64),
+                // NEON runs the fused kernel at every plane length.
+                Kernel::Neon => cost::fused_block_ratio(w64, k64, k64, b64),
+            };
+            out.push(FusedSweepRow {
+                words,
+                k,
+                batch,
+                backend: kernel.name(),
+                fused_ms,
+                pairwise_ms,
+                speedup: if fused_ms > 0.0 { pairwise_ms / fused_ms } else { 1.0 },
+                predicted,
+            });
+        }
+    }
+    out
+}
+
+pub fn render_fused_sweep(rows: &[FusedSweepRow]) -> String {
+    let mut s = String::from(
+        "Fused block primitive vs pairwise plane passes (identical counts)\n\
+         Words/plane  W/A bits  Block  Backend   Fused(ms)  Pairwise(ms)  Speedup  Predicted\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>11}  {:>5}/{:<2}  {:>5}  {:>7}  {:>9.3}  {:>12.3}  {:>6.2}x  {:>8.2}x\n",
+            r.words, r.k, r.k, r.batch, r.backend, r.fused_ms, r.pairwise_ms, r.speedup, r.predicted
+        ));
+    }
+    s
+}
+
 /// The §4 cost-model table: theoretical γ vs measured acceleration.
 pub fn costmodel(shapes: &[(usize, usize)], measured: &[Table6Row]) -> String {
     let mut s = String::from("Cost model (§4): theoretical gamma vs measured acceleration\n");
@@ -414,6 +562,23 @@ mod tests {
         assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.speedup_vs_scalar > 0.0));
         let s = render_backend_sweep(&rows);
         assert!(s.contains("vs scalar"), "{s}");
+    }
+
+    #[test]
+    fn fused_sweep_runs_and_renders() {
+        let rows = fused_vs_pairwise_sweep(&[16], 4, 2, 2);
+        assert_eq!(rows.len(), Kernel::available().len());
+        assert!(rows
+            .iter()
+            .all(|r| r.fused_ms > 0.0 && r.pairwise_ms > 0.0 && r.speedup > 0.0));
+        // The micro-model predicts a strict fused win for SIMD backends at
+        // the serving plane length (exact counts are asserted inside the
+        // sweep itself).
+        for r in rows.iter().filter(|r| r.backend != "scalar") {
+            assert!(r.predicted > 1.0, "{r:?}");
+        }
+        let s = render_fused_sweep(&rows);
+        assert!(s.contains("Predicted"), "{s}");
     }
 
     #[test]

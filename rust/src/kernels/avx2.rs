@@ -1,17 +1,30 @@
-//! AVX2 backend: XOR + `vpshufb` nibble-LUT popcount with Harley–Seal
-//! carry-save accumulation over 256-bit lanes.
+//! AVX2 backend: XOR + `vpshufb` nibble-LUT popcount behind the single
+//! fused batch-block primitive ([`block_counts`]).
 //!
-//! The pairwise primitive streams both bit planes four `u64` words (one
-//! ymm register) at a time. For long planes, blocks of four vectors are
-//! first compressed with a carry-save-adder tree (Harley–Seal): two CSAs
-//! fold four XOR results plus the carried `ones`/`twos` state into one
-//! `fours` vector, so only **one** byte-popcount (`vpshufb` low/high
-//! nibble lookups + `vpsadbw` horizontal sum) is paid per 1024 bits
-//! instead of four. The carried state and any remaining vectors/words are
-//! popcounted once at the end with their binary weights (4·fours + 2·twos
-//! + 1·ones + tail). Short planes (most RNN shapes: 1024 cols = 16 words)
-//! skip the carry-save stage and run the plain LUT + `vpsadbw` loop,
-//! which is lower-latency there.
+//! Two regimes, split at [`HARLEY_SEAL_MIN_WORDS`]:
+//!
+//! * **Short planes** (the RNN serving shapes: 1024 cols = 16 words per
+//!   plane) run the **fused block kernel**: one pass over the word
+//!   vectors, holding every `(column, w-plane, x-plane)` chain of the
+//!   block as its own 32-byte lane accumulator. Each weight-plane vector
+//!   is loaded **once** per word index and XORed against all block
+//!   columns; byte popcounts (`vpshufb` low/high nibble lookups, ≤ 8 per
+//!   byte) accumulate in `u8` lanes — safe because short planes are < 16
+//!   vectors and 15 · 8 = 120 < 256 — so the `vpsadbw` fold and the
+//!   horizontal sum are paid **once per chain per row**, outside the word
+//!   loop. This is what recovers the SIMD win at the serving shape: the
+//!   old pairwise passes paid a full loop + `vpsadbw` per vector + hsum
+//!   per plane pair, which at 4 vectors per plane cancelled most of the
+//!   vector math. Columns are chunked to the [`FUSED_MAX_CHAINS`] chain
+//!   budget (register pressure); a single column at the widest widths may
+//!   exceed it and accepts the spills.
+//!
+//! * **Long planes** keep the Harley–Seal carry-save pass per plane pair
+//!   ([`xor_popcount_avx2`]): two CSA levels fold four XOR vectors plus
+//!   the carried `ones`/`twos` state so only one byte-popcount is paid
+//!   per 1024 bits. Per-pair reduction overhead is amortized over many
+//!   vectors there, and the weight planes stay L1-resident across the
+//!   `k_w · k_x · B` pairs of the block.
 //!
 //! Exactness: popcounts are exact integers whatever the instruction mix,
 //! so this backend produces the identical mismatch counts as the scalar
@@ -20,7 +33,7 @@
 //!
 //! This module is normally reached through the [`super::backend`]
 //! dispatch with an availability-resolved kernel; as a second line of
-//! defense every safe wrapper re-checks AVX2 at runtime (a cached atomic
+//! defense the safe wrapper re-checks AVX2 at runtime (a cached atomic
 //! load) and falls back to the scalar kernel — identical counts — so a
 //! misused raw `Kernel::Avx2` can never execute AVX2 instructions on a
 //! CPU without them.
@@ -29,6 +42,39 @@ use core::arch::x86_64::*;
 
 use super::backend::MAX_K;
 use super::scalar;
+
+/// Plane length (in words) from which the Harley–Seal pairwise pass takes
+/// over from the fused block kernel. Below it the per-pair reduction and
+/// carried-state flush dominate; above it carry-save accumulation pays
+/// for itself. 64 words = 512 bytes per plane. Derived from the cost
+/// model's constant so the `exp::kernel_tables` predictions can never
+/// drift from what this kernel actually does.
+const HARLEY_SEAL_MIN_WORDS: usize = super::cost::FUSED_SHORT_PLANE_MAX_WORDS as usize;
+
+/// Chain budget (columns × k_w × k_x) per fused-kernel chunk. x86_64 has
+/// 16 ymm registers; a budget of 8 keeps the accumulator working set
+/// small enough that — after the loops unroll for the actual widths —
+/// the LUT, mask, held weight vectors, and most chain accumulators can
+/// stay in registers, and whatever does not stays within one hot cache
+/// line's worth of stack (W2A2 ⇒ 2 columns per chunk). Widths whose
+/// k_w·k_x alone exceeds the budget (e.g. 4×4) run one column per chunk
+/// and accept the larger working set — they are not serving shapes.
+/// ROADMAP.md flags retuning this against a profiler on real hardware.
+const FUSED_MAX_CHAINS: usize = 8;
+
+/// Accumulator slots the fused kernel allocates: a chunk is capped by the
+/// chain budget *or* is a single column of up to `MAX_K²` chains,
+/// whichever is larger.
+const FUSED_ACC_SLOTS: usize = if FUSED_MAX_CHAINS > MAX_K * MAX_K {
+    FUSED_MAX_CHAINS
+} else {
+    MAX_K * MAX_K
+};
+
+/// The fused kernel's `u8` lane accumulators hold ≤ 8 per byte per vector
+/// and must not overflow before the per-chain fold: the short-plane
+/// regime must stay under 31 vectors (31 · 8 = 248 < 256).
+const _: () = assert!(HARLEY_SEAL_MIN_WORDS <= 31 * 4);
 
 /// Runtime AVX2 check (cached by std in an atomic — one load + branch).
 /// The dispatch layer only hands resolved kernels to this module, but a
@@ -41,70 +87,16 @@ fn have_avx2() -> bool {
     is_x86_feature_detected!("avx2")
 }
 
-/// `Σ_i popcount(a[i] ^ b[i])` (AVX2).
+/// Fused batch-block counts (AVX2) — the backend's one count primitive;
+/// contract as in [`scalar::block_counts`].
 #[inline]
-pub(crate) fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
+pub(crate) fn block_counts(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
     if !have_avx2() {
-        return scalar::xor_popcount(a, b);
+        return scalar::block_counts(w, x_block, counts);
     }
     // SAFETY: AVX2 was detected at runtime just above, so the
     // target-feature contract of the callee holds.
-    unsafe { xor_popcount_avx2(a, b) }
-}
-
-/// Fused single-column counts (AVX2): pairwise Harley–Seal passes — the
-/// weight row stays in L1 across the `KW · KX` plane pairs.
-#[inline]
-pub(crate) fn row_counts<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    x: &[&[u64]; KX],
-    counts: &mut [[u32; KX]; KW],
-) {
-    if !have_avx2() {
-        return scalar::row_counts::<KW, KX>(w, x, counts);
-    }
-    // SAFETY: AVX2 was detected at runtime just above.
-    unsafe { row_counts_avx2::<KW, KX>(w, x, counts) }
-}
-
-/// Fused batch-block counts (AVX2).
-#[inline]
-pub(crate) fn block_counts<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    xw: &[[&[u64]; KX]],
-    counts: &mut [[[u32; KX]; KW]],
-) {
-    if !have_avx2() {
-        return scalar::block_counts::<KW, KX>(w, xw, counts);
-    }
-    // SAFETY: AVX2 was detected at runtime just above.
-    unsafe { block_counts_avx2::<KW, KX>(w, xw, counts) }
-}
-
-/// Runtime-width `row_counts` (AVX2).
-#[inline]
-pub(crate) fn row_counts_dyn(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
-    if !have_avx2() {
-        return scalar::row_counts_dyn(w, x, counts);
-    }
-    // SAFETY: AVX2 was detected at runtime just above.
-    unsafe { row_counts_dyn_avx2(w, x, counts) }
-}
-
-/// Runtime-width `block_counts` (AVX2).
-#[inline]
-pub(crate) fn block_counts_dyn(
-    w: &[&[u64]],
-    xw: &[[&[u64]; MAX_K]],
-    kx: usize,
-    counts: &mut [[[u32; MAX_K]; MAX_K]],
-) {
-    if !have_avx2() {
-        return scalar::block_counts_dyn(w, xw, kx, counts);
-    }
-    // SAFETY: AVX2 was detected at runtime just above.
-    unsafe { block_counts_dyn_avx2(w, xw, kx, counts) }
+    unsafe { block_counts_avx2(w, x_block, counts) }
 }
 
 // ---------------------------------------------------------------------------
@@ -178,15 +170,10 @@ unsafe fn hsum(v: __m256i) -> u64 {
     lanes[0].wrapping_add(lanes[1]).wrapping_add(lanes[2]).wrapping_add(lanes[3])
 }
 
-/// Plane length (in words) from which the Harley–Seal main loop engages.
-/// Below it the carried-state flush would dominate; the plain LUT loop is
-/// both lower-latency and fewer ops there. 64 words = 512 bytes, the
-/// regime where carry-save accumulation starts to pay for itself.
-const HARLEY_SEAL_MIN_WORDS: usize = 64;
-
-/// The XOR-popcount over two equal-length word slices: Harley–Seal
-/// carry-save main loop for long planes, `vpshufb`-LUT + `vpsadbw` loop
-/// for whole 256-bit vectors, scalar `popcnt` for the last words.
+/// One-pair XOR-popcount: Harley–Seal carry-save main loop for long
+/// planes, `vpshufb`-LUT + `vpsadbw` loop for whole 256-bit vectors,
+/// scalar `popcnt` for the last words. The long-plane arm of the block
+/// primitive, and the fallback for bit widths beyond `MAX_K`.
 ///
 /// # Safety
 /// Requires AVX2; `a.len() == b.len()`.
@@ -223,7 +210,7 @@ unsafe fn xor_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
             _mm256_add_epi64(_mm256_slli_epi64::<1>(twos_acc), ones_acc),
         );
     }
-    // Whole vectors (short planes, and the tail of the HS loop), weight 1.
+    // Whole vectors (the tail of the HS loop), weight 1.
     while i + 4 <= n {
         total_v = accumulate_sad(total_v, xor_load(pa, pb, i));
         i += 4;
@@ -236,55 +223,101 @@ unsafe fn xor_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
     total as u32
 }
 
+/// The block primitive: fused short-plane kernel (columns chunked to the
+/// chain budget) or per-pair Harley–Seal passes for long planes. Widths
+/// beyond `MAX_K` (no serving shape uses them) take the pairwise arm
+/// unconditionally so the fused kernel's accumulator array stays fixed.
+///
 /// # Safety
-/// Requires AVX2; all plane slices share one length.
+/// Requires AVX2; contract as in [`scalar::block_counts`].
 #[target_feature(enable = "avx2")]
-unsafe fn row_counts_avx2<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    x: &[&[u64]; KX],
-    counts: &mut [[u32; KX]; KW],
-) {
-    for (ct, wt) in counts.iter_mut().zip(w) {
-        for (c, xs) in ct.iter_mut().zip(x) {
-            *c += xor_popcount_avx2(wt, xs);
+unsafe fn block_counts_avx2(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block.first().map_or(0, |c| c.len());
+    let wpp = w.first().map_or(0, |p| p.len());
+    debug_assert_eq!(counts.len(), x_block.len() * kw * kx);
+    if kw == 0 || kx == 0 {
+        return;
+    }
+    if wpp >= HARLEY_SEAL_MIN_WORDS || kw > MAX_K || kx > MAX_K {
+        // Long planes: one Harley–Seal pass per plane pair. The weight
+        // planes stay L1-resident across the k_w·k_x·B pairs, and the
+        // per-pair reduction is amortized over ≥ 16 vectors.
+        for (j, xj) in x_block.iter().enumerate() {
+            for (t, wt) in w.iter().enumerate() {
+                for (s, xs) in xj.iter().enumerate() {
+                    counts[(j * kw + t) * kx + s] += xor_popcount_avx2(wt, xs);
+                }
+            }
         }
+        return;
+    }
+    // Short planes: fused kernel over column chunks sized to the chain
+    // budget. A single column may exceed the budget at the widest widths
+    // (k_w·k_x ≤ MAX_K² = FUSED_ACC_SLOTS accumulator slots cover it).
+    let cols_per_chunk = (FUSED_MAX_CHAINS / (kw * kx)).max(1);
+    let mut j0 = 0;
+    while j0 < x_block.len() {
+        let jb = cols_per_chunk.min(x_block.len() - j0);
+        block_counts_avx2_short(
+            w,
+            &x_block[j0..j0 + jb],
+            &mut counts[j0 * kw * kx..(j0 + jb) * kw * kx],
+        );
+        j0 += jb;
     }
 }
 
+/// The fused short-plane block kernel: every (column, w-plane, x-plane)
+/// chain gets a dedicated `u8`-lane accumulator; one pass over the word
+/// vectors loads each weight vector once and each activation vector once
+/// per column-plane, XORs, and byte-accumulates the nibble-LUT popcounts.
+/// The `vpsadbw` fold + horizontal sum are paid once per chain at the
+/// end, never inside the word loop.
+///
 /// # Safety
-/// Requires AVX2; all plane slices share one length.
+/// Requires AVX2; contract as in [`scalar::block_counts`], with
+/// `x_block.len() · k_w · k_x ≤ FUSED_ACC_SLOTS`, widths ≤ `MAX_K`, and
+/// planes shorter than `HARLEY_SEAL_MIN_WORDS` (u8 lanes must not
+/// saturate).
 #[target_feature(enable = "avx2")]
-unsafe fn block_counts_avx2<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    xw: &[[&[u64]; KX]],
-    counts: &mut [[[u32; KX]; KW]],
-) {
-    for (cj, xj) in counts.iter_mut().zip(xw) {
-        row_counts_avx2::<KW, KX>(w, xj, cj);
-    }
-}
-
-/// # Safety
-/// Requires AVX2; all plane slices share one length.
-#[target_feature(enable = "avx2")]
-unsafe fn row_counts_dyn_avx2(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
-    for (ct, wt) in counts.iter_mut().zip(w) {
-        for (c, xs) in ct.iter_mut().zip(x) {
-            *c += xor_popcount_avx2(wt, xs);
+unsafe fn block_counts_avx2_short(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block[0].len();
+    let wpp = w[0].len();
+    debug_assert!(x_block.len() * kw * kx <= FUSED_ACC_SLOTS);
+    debug_assert!(wpp < HARLEY_SEAL_MIN_WORDS);
+    let mut acc8 = [_mm256_setzero_si256(); FUSED_ACC_SLOTS];
+    let mut i = 0usize;
+    while i + 4 <= wpp {
+        let mut wv = [_mm256_setzero_si256(); MAX_K];
+        for (t, wt) in w.iter().enumerate() {
+            wv[t] = _mm256_loadu_si256(wt.as_ptr().add(i) as *const __m256i);
         }
+        for (j, xj) in x_block.iter().enumerate() {
+            for (s, xs) in xj.iter().enumerate() {
+                let xv = _mm256_loadu_si256(xs.as_ptr().add(i) as *const __m256i);
+                for (t, &wt) in wv.iter().enumerate().take(kw) {
+                    let c = (j * kw + t) * kx + s;
+                    acc8[c] = _mm256_add_epi8(acc8[c], popcount8(_mm256_xor_si256(wt, xv)));
+                }
+            }
+        }
+        i += 4;
     }
-}
-
-/// # Safety
-/// Requires AVX2; `xw[j][s]` valid for `s < kx`.
-#[target_feature(enable = "avx2")]
-unsafe fn block_counts_dyn_avx2(
-    w: &[&[u64]],
-    xw: &[[&[u64]; MAX_K]],
-    kx: usize,
-    counts: &mut [[[u32; MAX_K]; MAX_K]],
-) {
-    for (cj, xj) in counts.iter_mut().zip(xw) {
-        row_counts_dyn_avx2(w, &xj[..kx], cj);
+    // Per-chain fold (the only vpsadbw + hsum of the whole block) plus
+    // the scalar word tail.
+    let tail = i;
+    for (j, xj) in x_block.iter().enumerate() {
+        for (t, wt) in w.iter().enumerate() {
+            for (s, xs) in xj.iter().enumerate() {
+                let c = (j * kw + t) * kx + s;
+                let mut total = hsum(_mm256_sad_epu8(acc8[c], _mm256_setzero_si256()));
+                for ii in tail..wpp {
+                    total += u64::from((wt[ii] ^ xs[ii]).count_ones());
+                }
+                counts[c] += total as u32;
+            }
+        }
     }
 }

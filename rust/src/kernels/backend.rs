@@ -10,15 +10,35 @@
 //! counts alike. `rust/tests/kernel_parity.rs` pins this with `assert_eq`
 //! on `f32` outputs (no tolerance).
 //!
+//! The seam is a **single primitive per backend** — the fused batch-block
+//! counts:
+//!
+//! ```text
+//! block_counts(w, x_block, counts):
+//!   counts[(j·k_w + t)·k_x + s] += Σ_i popcount(w[t][i] ^ x_block[j][s][i])
+//! ```
+//!
+//! `w` holds one weight row's plane slices, `x_block` one batch block of
+//! columns (each a slice of plane slices), `counts` the flat accumulator.
+//! Every hot path is a special case of it: the single-vector GEMV is a
+//! one-column block, a plane pair is a 1×1×1 block. Each backend fuses
+//! the whole block in one pass (weight vectors loaded once per word
+//! index, per-chain lane accumulators, one reduction per chain per row)
+//! instead of decomposing into pairwise plane passes — that is what makes
+//! SIMD win even at short serving planes (1024 cols = 16 words), where
+//! per-pair reduction overhead used to cancel the vector math.
+//!
 //! Backends:
 //!
 //! * [`Kernel::Scalar`] — portable `u64 ^` + `count_ones` (LLVM lowers to
 //!   `xor` + `popcnt` on x86_64). Always available; the reference.
-//! * [`Kernel::Avx2`] — x86_64 AVX2: `vpshufb` nibble-LUT popcount with
-//!   Harley–Seal carry-save accumulation over 256-bit lanes
+//! * [`Kernel::Avx2`] — x86_64 AVX2: fused block kernel with `vpshufb`
+//!   nibble-LUT popcount and per-chain byte accumulators on short planes;
+//!   Harley–Seal carry-save pairwise passes on long planes
 //!   ([`super::avx2`]).
-//! * [`Kernel::Neon`] — aarch64 NEON: `vcntq_u8` byte popcount with a
-//!   widening `vpaddlq`/`vpadalq` reduction ([`super::neon`]).
+//! * [`Kernel::Neon`] — aarch64 NEON: fused block kernel with `vcntq_u8`
+//!   byte popcount, `u8`-block accumulation, widening fold per chain
+//!   ([`super::neon`]).
 //!
 //! Selection order (first hit wins):
 //!
@@ -30,9 +50,9 @@
 //!    aarch64, scalar elsewhere.
 //!
 //! Adding a backend: add an enum variant + `is_available` arm, implement
-//! `xor_popcount` / `row_counts` / `block_counts` (+ the `_dyn` variants)
-//! in a new arch-gated module, and add the dispatch arms below. The
-//! cross-backend parity suite picks the new backend up automatically via
+//! **one function** — `block_counts(w, x_block, counts)` — in a new
+//! arch-gated module, and add one dispatch arm below. The cross-backend
+//! parity suite picks the new backend up automatically via
 //! [`Kernel::available`].
 
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -45,8 +65,9 @@ use super::avx2;
 #[cfg(target_arch = "aarch64")]
 use super::neon;
 
-/// Max bit width the fused inner loops specialize for (the paper never
-/// exceeds 4 bits).
+/// Max bit width the GEMM drivers stack-allocate plane-slice and count
+/// buffers for (the paper never exceeds 4 bits). Backends accept any
+/// width — beyond `MAX_K` the SIMD backends take their pairwise arm.
 pub const MAX_K: usize = 4;
 
 /// A compute backend for the XNOR/popcount kernels.
@@ -58,9 +79,10 @@ pub const MAX_K: usize = 4;
 pub enum Kernel {
     /// Portable scalar kernel — always available, the exactness reference.
     Scalar,
-    /// x86_64 AVX2 (`vpshufb` LUT popcount + Harley–Seal).
+    /// x86_64 AVX2 (`vpshufb` LUT popcount; fused block kernel on short
+    /// planes, Harley–Seal on long ones).
     Avx2,
-    /// aarch64 NEON (`vcntq_u8` + widening adds).
+    /// aarch64 NEON (`vcntq_u8` fused block kernel).
     Neon,
 }
 
@@ -241,111 +263,49 @@ pub fn active() -> Kernel {
 }
 
 // ---------------------------------------------------------------------------
-// Count-primitive dispatch — the one seam every hot loop goes through.
+// The count primitive — the one seam every hot loop goes through.
 //
 // Callers pass a *resolved* kernel. Unavailable variants still fall back
 // to scalar (same counts, so still exact): wrong-architecture variants hit
-// the catch-all arms below, and a same-architecture variant on a CPU
+// the catch-all arm below, and a same-architecture variant on a CPU
 // without the feature is caught by the runtime check inside the backend's
-// safe wrappers (e.g. `avx2::have_avx2`), never a compiled-out assert.
+// safe wrapper (e.g. `avx2::have_avx2`), never a compiled-out assert.
 // ---------------------------------------------------------------------------
 
-/// `Σ_i popcount(a[i] ^ b[i])` — the pairwise primitive (legacy GEMV paths
-/// and exotic bit widths).
+/// Fused batch-block counts — the single count primitive:
+///
+/// ```text
+/// counts[(j·k_w + t)·k_x + s] += Σ_i popcount(w[t][i] ^ x_block[j][s][i])
+/// ```
+///
+/// `w`: the `k_w` plane slices of one weight row. `x_block[j]`: the `k_x`
+/// plane slices of batch column `j`. All plane slices share one length;
+/// every column has the same `k_x`; `counts.len()` is
+/// `x_block.len() · k_w · k_x`, layout `[column][w-plane][x-plane]`.
+/// Accumulates into `counts` (callers zero the slice first).
+///
+/// A one-column block is the GEMV case; a 1×1×1 block is a plane pair —
+/// every caller shape is this one primitive, so a backend is exactly one
+/// function.
 #[inline]
-pub(crate) fn xor_popcount(kernel: Kernel, a: &[u64], b: &[u64]) -> u32 {
-    match kernel {
-        Kernel::Scalar => scalar::xor_popcount(a, b),
-        #[cfg(target_arch = "x86_64")]
-        Kernel::Avx2 => avx2::xor_popcount(a, b),
-        #[cfg(target_arch = "aarch64")]
-        Kernel::Neon => neon::xor_popcount(a, b),
-        #[allow(unreachable_patterns)]
-        _ => scalar::xor_popcount(a, b),
-    }
-}
-
-/// `counts[t][s] += Σ_i popcount(w[t][i] ^ x[s][i])` — one weight row
-/// (`KW` plane slices) against one activation column (`KX` plane slices).
-#[inline]
-pub(crate) fn row_counts<const KW: usize, const KX: usize>(
-    kernel: Kernel,
-    w: &[&[u64]; KW],
-    x: &[&[u64]; KX],
-    counts: &mut [[u32; KX]; KW],
-) {
-    match kernel {
-        Kernel::Scalar => scalar::row_counts::<KW, KX>(w, x, counts),
-        #[cfg(target_arch = "x86_64")]
-        Kernel::Avx2 => avx2::row_counts::<KW, KX>(w, x, counts),
-        #[cfg(target_arch = "aarch64")]
-        Kernel::Neon => neon::row_counts::<KW, KX>(w, x, counts),
-        #[allow(unreachable_patterns)]
-        _ => scalar::row_counts::<KW, KX>(w, x, counts),
-    }
-}
-
-/// Batched variant: one weight row against `xw.len()` activation columns
-/// (`counts.len() == xw.len()`, a batch block of the GEMM).
-#[inline]
-pub(crate) fn block_counts<const KW: usize, const KX: usize>(
-    kernel: Kernel,
-    w: &[&[u64]; KW],
-    xw: &[[&[u64]; KX]],
-    counts: &mut [[[u32; KX]; KW]],
-) {
-    debug_assert_eq!(xw.len(), counts.len());
-    match kernel {
-        Kernel::Scalar => scalar::block_counts::<KW, KX>(w, xw, counts),
-        #[cfg(target_arch = "x86_64")]
-        Kernel::Avx2 => avx2::block_counts::<KW, KX>(w, xw, counts),
-        #[cfg(target_arch = "aarch64")]
-        Kernel::Neon => neon::block_counts::<KW, KX>(w, xw, counts),
-        #[allow(unreachable_patterns)]
-        _ => scalar::block_counts::<KW, KX>(w, xw, counts),
-    }
-}
-
-/// Runtime-width variant of [`row_counts`] for (k_w, k_x) pairs outside
-/// the const-generic table: `w.len() = k_w ≤ MAX_K`, `x.len() = k_x ≤
-/// MAX_K`.
-#[inline]
-pub(crate) fn row_counts_dyn(
+pub(crate) fn block_counts(
     kernel: Kernel,
     w: &[&[u64]],
-    x: &[&[u64]],
-    counts: &mut [[u32; MAX_K]; MAX_K],
+    x_block: &[&[&[u64]]],
+    counts: &mut [u32],
 ) {
+    debug_assert_eq!(
+        counts.len(),
+        x_block.len() * w.len() * x_block.first().map_or(0, |c| c.len())
+    );
     match kernel {
-        Kernel::Scalar => scalar::row_counts_dyn(w, x, counts),
+        Kernel::Scalar => scalar::block_counts(w, x_block, counts),
         #[cfg(target_arch = "x86_64")]
-        Kernel::Avx2 => avx2::row_counts_dyn(w, x, counts),
+        Kernel::Avx2 => avx2::block_counts(w, x_block, counts),
         #[cfg(target_arch = "aarch64")]
-        Kernel::Neon => neon::row_counts_dyn(w, x, counts),
+        Kernel::Neon => neon::block_counts(w, x_block, counts),
         #[allow(unreachable_patterns)]
-        _ => scalar::row_counts_dyn(w, x, counts),
-    }
-}
-
-/// Runtime-width variant of [`block_counts`]: `xw[j][s]` is valid for
-/// `s < kx`; `w.len() = k_w`.
-#[inline]
-pub(crate) fn block_counts_dyn(
-    kernel: Kernel,
-    w: &[&[u64]],
-    xw: &[[&[u64]; MAX_K]],
-    kx: usize,
-    counts: &mut [[[u32; MAX_K]; MAX_K]],
-) {
-    debug_assert_eq!(xw.len(), counts.len());
-    match kernel {
-        Kernel::Scalar => scalar::block_counts_dyn(w, xw, kx, counts),
-        #[cfg(target_arch = "x86_64")]
-        Kernel::Avx2 => avx2::block_counts_dyn(w, xw, kx, counts),
-        #[cfg(target_arch = "aarch64")]
-        Kernel::Neon => neon::block_counts_dyn(w, xw, kx, counts),
-        #[allow(unreachable_patterns)]
-        _ => scalar::block_counts_dyn(w, xw, kx, counts),
+        _ => scalar::block_counts(w, x_block, counts),
     }
 }
 
@@ -407,58 +367,56 @@ mod tests {
         }
     }
 
-    /// Every backend's pairwise popcount must equal scalar's on lengths
-    /// that cover the SIMD main loops, their tails, and the empty case.
+    /// Build a block of `b` columns × `kx` planes from flat plane storage.
+    fn mk_planes(rng: &mut Rng, planes: usize, words: usize) -> Vec<Vec<u64>> {
+        (0..planes).map(|_| (0..words).map(|_| rng.next_u64()).collect()).collect()
+    }
+
+    /// Every backend's block counts must equal scalar's across widths
+    /// (incl. asymmetric and beyond-MAX_K), batch blocks, and plane
+    /// lengths that cover the fused short path, its vector tails, the
+    /// long-plane (Harley–Seal / multi-u8-block) path, and the empty case.
     #[test]
-    fn xor_popcount_matches_scalar_across_backends() {
-        let mut rng = Rng::new(0xC0DE);
-        for words in [0usize, 1, 3, 4, 5, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 130] {
-            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
-            let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
-            let want = scalar::xor_popcount(&a, &b);
-            for k in Kernel::available() {
-                assert_eq!(xor_popcount(k, &a, &b), want, "{k} words={words}");
-            }
-            // Edge patterns: identical, complementary, all-ones.
-            let ones = vec![u64::MAX; words];
-            for k in Kernel::available() {
-                assert_eq!(xor_popcount(k, &a, &a), 0, "{k} self");
-                assert_eq!(xor_popcount(k, &a, &ones), scalar::xor_popcount(&a, &ones), "{k} ones");
+    fn block_counts_matches_scalar_across_backends() {
+        let mut rng = Rng::new(0xBEE5);
+        for (kw, kx, b) in [(1, 1, 1), (2, 2, 4), (3, 2, 5), (2, 3, 3), (4, 4, 4), (5, 6, 2)] {
+            for words in [0usize, 1, 3, 4, 5, 15, 16, 17, 33, 63, 64, 65, 130] {
+                let wplanes = mk_planes(&mut rng, kw, words);
+                let xplanes = mk_planes(&mut rng, b * kx, words);
+                let w: Vec<&[u64]> = wplanes.iter().map(|p| &p[..]).collect();
+                let cols: Vec<Vec<&[u64]>> = (0..b)
+                    .map(|j| (0..kx).map(|s| &xplanes[j * kx + s][..]).collect())
+                    .collect();
+                let x_block: Vec<&[&[u64]]> = cols.iter().map(|c| &c[..]).collect();
+                let mut want = vec![0u32; b * kw * kx];
+                scalar::block_counts(&w, &x_block, &mut want);
+                for k in Kernel::available() {
+                    let mut got = vec![0u32; b * kw * kx];
+                    block_counts(k, &w, &x_block, &mut got);
+                    assert_eq!(got, want, "{k} kw={kw} kx={kx} b={b} words={words}");
+                }
             }
         }
     }
 
+    /// Edge patterns: identical planes count zero, all-ones complements
+    /// count full width — on every backend, through the one primitive.
     #[test]
-    fn count_primitives_match_scalar_across_backends() {
-        let mut rng = Rng::new(0xBEE5);
-        for wpp in [1usize, 2, 16, 18, 33] {
-            let wplanes: Vec<Vec<u64>> =
-                (0..MAX_K).map(|_| (0..wpp).map(|_| rng.next_u64()).collect()).collect();
-            let xplanes: Vec<Vec<u64>> =
-                (0..MAX_K).map(|_| (0..wpp).map(|_| rng.next_u64()).collect()).collect();
-            let w: [&[u64]; 3] = [&wplanes[0][..], &wplanes[1][..], &wplanes[2][..]];
-            let x: [&[u64]; 2] = [&xplanes[0][..], &xplanes[1][..]];
-            let mut want = [[0u32; 2]; 3];
-            scalar::row_counts::<3, 2>(&w, &x, &mut want);
+    fn block_counts_edge_patterns() {
+        let mut rng = Rng::new(0xC0DE);
+        for words in [4usize, 16, 65] {
+            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let ones = vec![u64::MAX; words];
+            let w: [&[u64]; 1] = [&a];
+            let self_col: [&[u64]; 1] = [&a];
+            let ones_col: [&[u64]; 1] = [&ones];
+            let block: [&[&[u64]]; 2] = [&self_col, &ones_col];
+            let want_ones: u32 = a.iter().map(|x| (x ^ u64::MAX).count_ones()).sum();
             for k in Kernel::available() {
-                let mut got = [[0u32; 2]; 3];
-                row_counts::<3, 2>(k, &w, &x, &mut got);
-                assert_eq!(got, want, "row_counts {k} wpp={wpp}");
-
-                let xw: [[&[u64]; 2]; 2] = [x, [&xplanes[2][..], &xplanes[3][..]]];
-                let mut want_b = [[[0u32; 2]; 3]; 2];
-                scalar::block_counts::<3, 2>(&w, &xw, &mut want_b);
-                let mut got_b = [[[0u32; 2]; 3]; 2];
-                block_counts::<3, 2>(k, &w, &xw, &mut got_b);
-                assert_eq!(got_b, want_b, "block_counts {k} wpp={wpp}");
-
-                let wd: Vec<&[u64]> = w.to_vec();
-                let xd: Vec<&[u64]> = x.to_vec();
-                let mut want_d = [[0u32; MAX_K]; MAX_K];
-                scalar::row_counts_dyn(&wd, &xd, &mut want_d);
-                let mut got_d = [[0u32; MAX_K]; MAX_K];
-                row_counts_dyn(k, &wd, &xd, &mut got_d);
-                assert_eq!(got_d, want_d, "row_counts_dyn {k} wpp={wpp}");
+                let mut got = [0u32; 2];
+                block_counts(k, &w, &block, &mut got);
+                assert_eq!(got[0], 0, "{k} self words={words}");
+                assert_eq!(got[1], want_ones, "{k} ones words={words}");
             }
         }
     }

@@ -10,10 +10,11 @@
 //! ```
 //!
 //! The paper implements XOR with `_mm256_xor_ps` and popcount with
-//! `_popcnt64`. Here the mismatch-count inner loops live behind the
-//! runtime-dispatched backend layer ([`super::backend`]): the portable
-//! scalar kernel (`u64 ^` + `count_ones`), an AVX2 kernel (`vpshufb`
-//! nibble-LUT popcount + Harley–Seal), and a NEON kernel (`vcntq_u8`).
+//! `_popcnt64`. Here every mismatch-count inner loop goes through the one
+//! fused batch-block primitive of the runtime-dispatched backend layer
+//! ([`super::backend::block_counts`]): the portable scalar kernel, the
+//! AVX2 fused block kernel (per-chain byte accumulators on short planes,
+//! Harley–Seal on long ones), and the NEON `vcntq_u8` fused kernel.
 //! Because the counts are **exact integers** whatever the instruction mix,
 //! and the float reduction below is shared by every backend, the f32
 //! outputs are bit-identical across backends, batch sizes, and thread
@@ -40,32 +41,33 @@ pub fn quantize_activations_with(x: &[f32], k: usize, method: Method) -> Quantiz
 /// `y.len() == w.rows`; panics on shape mismatch.
 ///
 /// Legacy `RowQuantized` entry point (the trainer's path); runs on the
-/// process-wide active backend ([`backend::active`]). The serving path
+/// process-wide active backend ([`backend::active`]) through the same
+/// one-column block primitive as [`PreparedGemm::gemv`], just over
+/// scattered plane storage. Any bit width works (the backends route
+/// widths beyond `MAX_K` through their pairwise arm). The serving path
 /// uses [`PreparedGemm`], whose contiguous layout streams better.
 pub fn quantized_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32]) {
     assert_eq!(w.cols, x.n, "inner dimension mismatch");
     assert_eq!(y.len(), w.rows);
     let kernel = backend::active();
-    let kw = w.k;
-    let kx = x.k();
-    if kw <= MAX_K && kx <= MAX_K {
-        return fused_gemv(w, x, y, kernel);
-    }
-    // Fallback for exotic bit widths: plane-pair loop over the same
-    // backend's pairwise primitive.
+    let (kw, kx) = (w.k, x.k());
     let n = w.cols as i32;
+    let xp: Vec<&[u64]> = x.planes.iter().map(|p| p.words()).collect();
+    let col: [&[&[u64]]; 1] = [&xp[..]];
+    let mut wp: Vec<&[u64]> = Vec::with_capacity(kw);
+    let mut counts = vec![0u32; kw * kx];
     for (r, yr) in y.iter_mut().enumerate() {
+        wp.clear();
+        wp.extend(w.planes[r * kw..(r + 1) * kw].iter().map(|p| p.words()));
+        counts.fill(0);
+        backend::block_counts(kernel, &wp, &col, &mut counts);
         let mut acc = 0.0f32;
         for t in 0..kw {
-            let plane_w = &w.planes[r * kw + t];
-            let alpha_w = w.alphas[r * kw + t];
             let mut inner = 0.0f32;
-            for s in 0..kx {
-                let mism = backend::xor_popcount(kernel, plane_w.words(), x.planes[s].words());
-                let dot = n - 2 * mism as i32;
-                inner += x.alphas[s] * dot as f32;
+            for (s, &c) in counts[t * kx..(t + 1) * kx].iter().enumerate() {
+                inner += x.alphas[s] * (n - 2 * c as i32) as f32;
             }
-            acc += alpha_w * inner;
+            acc += w.alphas[r * kw + t] * inner;
         }
         *yr = acc;
     }
@@ -102,9 +104,10 @@ pub struct PreparedGemm {
 /// B=1 entry points (`gemv`, `online_gemv`) still exist on the new type.
 pub type PreparedGemv = PreparedGemm;
 
-/// Batch-block width of the batched kernel: columns processed together per
-/// weight-word load. 4 keeps the k_w·k_x·BB popcount counters in registers
-/// at the paper's bit widths.
+/// Batch-block width of the batched kernel: columns handed to the fused
+/// block primitive together per weight-row pass. 4 keeps the k_w·k_x·BB
+/// chain accumulators within the SIMD backends' register budget at the
+/// paper's bit widths.
 const GEMM_BLOCK: usize = 4;
 
 /// Minimum output rows per worker task when row-sharding the batched GEMM.
@@ -149,71 +152,42 @@ impl PreparedGemm {
         self.kernel = kernel.resolve();
     }
 
-    /// Fused single-pass GEMV over the contiguous layout. Dispatches to a
-    /// const-generic body so the k_w×k_x popcount counters live in registers
-    /// and the plane loops fully unroll (Perf iteration 3).
+    /// The plane slices of row `r`, gathered into `wp[..k]`.
+    #[inline]
+    fn row_planes<'a>(&'a self, r: usize, wp: &mut [&'a [u64]; MAX_K]) {
+        let wpp = self.words_per_plane;
+        let row = &self.data[r * self.k * wpp..(r + 1) * self.k * wpp];
+        for (t, slot) in wp.iter_mut().enumerate().take(self.k) {
+            *slot = &row[t * wpp..(t + 1) * wpp];
+        }
+    }
+
+    /// Fused single-pass GEMV over the contiguous layout: a one-column
+    /// batch block of the same slice-based primitive as [`Self::gemm`],
+    /// reduced in the identical order — so `gemm` bit-matches `gemv`
+    /// column by column.
     pub fn gemv(&self, x: &Quantized, y: &mut [f32]) {
         assert_eq!(self.cols, x.n, "inner dimension mismatch");
         assert_eq!(y.len(), self.rows);
         let (kw, kx) = (self.k, x.k());
         assert!(kw <= MAX_K && kx <= MAX_K, "bit width beyond MAX_K");
-        match (kw, kx) {
-            (1, 1) => self.gemv_const::<1, 1>(x, y),
-            (2, 2) => self.gemv_const::<2, 2>(x, y),
-            (2, 3) => self.gemv_const::<2, 3>(x, y),
-            (3, 2) => self.gemv_const::<3, 2>(x, y),
-            (3, 3) => self.gemv_const::<3, 3>(x, y),
-            (4, 4) => self.gemv_const::<4, 4>(x, y),
-            _ => self.gemv_generic(x, y),
-        }
-    }
-
-    fn gemv_const<const KW: usize, const KX: usize>(&self, x: &Quantized, y: &mut [f32]) {
         let n = self.cols as i32;
-        let wpp = self.words_per_plane;
-        let xw: [&[u64]; KX] = std::array::from_fn(|s| x.planes[s].words());
-        let row_words = KW * wpp;
-        for (r, yr) in y.iter_mut().enumerate() {
-            let row = &self.data[r * row_words..(r + 1) * row_words];
-            let wp: [&[u64]; KW] = std::array::from_fn(|t| &row[t * wpp..(t + 1) * wpp]);
-            let mut counts = [[0u32; KX]; KW];
-            backend::row_counts::<KW, KX>(self.kernel, &wp, &xw, &mut counts);
-            let mut acc = 0.0f32;
-            for (t, row_c) in counts.iter().enumerate() {
-                let mut inner = 0.0f32;
-                for (s, &c) in row_c.iter().enumerate() {
-                    inner += x.alphas[s] * (n - 2 * c as i32) as f32;
-                }
-                acc += self.alphas[r * KW + t] * inner;
-            }
-            *yr = acc;
+        let mut xp: [&[u64]; MAX_K] = [&[]; MAX_K];
+        for (s, p) in x.planes.iter().enumerate() {
+            xp[s] = p.words();
         }
-    }
-
-    fn gemv_generic(&self, x: &Quantized, y: &mut [f32]) {
-        let (kw, kx) = (self.k, x.k());
-        let n = self.cols as i32;
-        let wpp = self.words_per_plane;
-        let xw: [&[u64]; MAX_K] = {
-            let mut a: [&[u64]; MAX_K] = [&[]; MAX_K];
-            for (s, p) in x.planes.iter().enumerate() {
-                a[s] = p.words();
-            }
-            a
-        };
-        let row_words = kw * wpp;
+        let col: [&[&[u64]]; 1] = [&xp[..kx]];
+        let mut counts = [0u32; MAX_K * MAX_K];
+        let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
         for (r, yr) in y.iter_mut().enumerate() {
-            let row = &self.data[r * row_words..(r + 1) * row_words];
-            let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
-            for (t, slot) in wp.iter_mut().enumerate().take(kw) {
-                *slot = &row[t * wpp..(t + 1) * wpp];
-            }
-            let mut counts = [[0u32; MAX_K]; MAX_K];
-            backend::row_counts_dyn(self.kernel, &wp[..kw], &xw[..kx], &mut counts);
+            self.row_planes(r, &mut wp);
+            let cnt = &mut counts[..kw * kx];
+            cnt.fill(0);
+            backend::block_counts(self.kernel, &wp[..kw], &col, cnt);
             let mut acc = 0.0f32;
-            for (t, row_c) in counts.iter().enumerate().take(kw) {
+            for t in 0..kw {
                 let mut inner = 0.0f32;
-                for (s, &c) in row_c.iter().enumerate().take(kx) {
+                for (s, &c) in cnt[t * kx..(t + 1) * kx].iter().enumerate() {
                     inner += x.alphas[s] * (n - 2 * c as i32) as f32;
                 }
                 acc += self.alphas[r * kw + t] * inner;
@@ -282,98 +256,47 @@ impl PreparedGemm {
     pub fn gemm_exec(&self, x: &QuantizedBatch, y: &mut [f32], exec: &Exec) {
         assert_eq!(self.cols, x.n, "inner dimension mismatch");
         assert_eq!(y.len(), x.batch * self.rows, "output batch shape mismatch");
-        let (kw, kx) = (self.k, x.k);
-        assert!(kw <= MAX_K && kx <= MAX_K, "bit width beyond MAX_K");
+        assert!(self.k <= MAX_K && x.k <= MAX_K, "bit width beyond MAX_K");
         let out = SendPtr::new(y);
         let out = &out;
-        exec.run_chunks(self.rows, GEMM_MIN_ROWS_PER_TASK, &|r0, r1| match (kw, kx) {
-            (1, 1) => self.gemm_rows::<1, 1>(x, out, r0, r1),
-            (2, 2) => self.gemm_rows::<2, 2>(x, out, r0, r1),
-            (2, 3) => self.gemm_rows::<2, 3>(x, out, r0, r1),
-            (3, 2) => self.gemm_rows::<3, 2>(x, out, r0, r1),
-            (3, 3) => self.gemm_rows::<3, 3>(x, out, r0, r1),
-            (4, 4) => self.gemm_rows::<4, 4>(x, out, r0, r1),
-            _ => self.gemm_rows_generic(x, out, r0, r1),
+        exec.run_chunks(self.rows, GEMM_MIN_ROWS_PER_TASK, &|r0, r1| {
+            self.gemm_rows(x, out, r0, r1)
         });
     }
 
-    /// The batched kernel over output rows `r0..r1`. Writes only indices
-    /// `y[b·rows + r]` with `r ∈ [r0, r1)` — the disjoint-write contract of
-    /// the row sharding.
-    fn gemm_rows<const KW: usize, const KX: usize>(
-        &self,
-        x: &QuantizedBatch,
-        out: &SendPtr<f32>,
-        r0: usize,
-        r1: usize,
-    ) {
-        let n = self.cols as i32;
-        let wpp = self.words_per_plane;
-        let row_words = KW * wpp;
-        for r in r0..r1 {
-            let row = &self.data[r * row_words..(r + 1) * row_words];
-            let wp: [&[u64]; KW] = std::array::from_fn(|t| &row[t * wpp..(t + 1) * wpp]);
-            let mut b0 = 0;
-            while b0 < x.batch {
-                let bb = GEMM_BLOCK.min(x.batch - b0);
-                // Per-column plane slices; tail entries beyond `bb` alias
-                // column b0 and are never passed to the backend.
-                let xw: [[&[u64]; KX]; GEMM_BLOCK] = std::array::from_fn(|j| {
-                    let b = b0 + if j < bb { j } else { 0 };
-                    std::array::from_fn(|s| x.plane_words(b, s))
-                });
-                let mut counts = [[[0u32; KX]; KW]; GEMM_BLOCK];
-                backend::block_counts::<KW, KX>(self.kernel, &wp, &xw[..bb], &mut counts[..bb]);
-                for (j, cj) in counts.iter().enumerate().take(bb) {
-                    let b = b0 + j;
-                    let mut acc = 0.0f32;
-                    for (t, row_c) in cj.iter().enumerate() {
-                        let mut inner = 0.0f32;
-                        for (s, &c) in row_c.iter().enumerate() {
-                            inner += x.alpha(b, s) * (n - 2 * c as i32) as f32;
-                        }
-                        acc += self.alphas[r * KW + t] * inner;
-                    }
-                    // SAFETY: r ∈ [r0, r1) — this task's disjoint row range.
-                    unsafe { out.write(b * self.rows + r, acc) };
-                }
-                b0 += bb;
-            }
-        }
-    }
-
-    fn gemm_rows_generic(&self, x: &QuantizedBatch, out: &SendPtr<f32>, r0: usize, r1: usize) {
+    /// The one batched driver, over output rows `r0..r1`: for each weight
+    /// row, hand `GEMM_BLOCK`-column blocks to the fused count primitive
+    /// and run the shared float reduction. Writes only indices
+    /// `y[b·rows + r]` with `r ∈ [r0, r1)` — the disjoint-write contract
+    /// of the row sharding.
+    fn gemm_rows(&self, x: &QuantizedBatch, out: &SendPtr<f32>, r0: usize, r1: usize) {
         let (kw, kx) = (self.k, x.k);
         let n = self.cols as i32;
-        let wpp = self.words_per_plane;
-        let row_words = kw * wpp;
+        let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
+        let mut counts = [0u32; GEMM_BLOCK * MAX_K * MAX_K];
         for r in r0..r1 {
-            let row = &self.data[r * row_words..(r + 1) * row_words];
-            let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
-            for (t, slot) in wp.iter_mut().enumerate().take(kw) {
-                *slot = &row[t * wpp..(t + 1) * wpp];
-            }
+            self.row_planes(r, &mut wp);
             let mut b0 = 0;
             while b0 < x.batch {
                 let bb = GEMM_BLOCK.min(x.batch - b0);
-                let xw: [[&[u64]; MAX_K]; GEMM_BLOCK] = std::array::from_fn(|j| {
-                    let b = b0 + if j < bb { j } else { 0 };
-                    std::array::from_fn(|s| if s < kx { x.plane_words(b, s) } else { &[] })
-                });
-                let mut counts = [[[0u32; MAX_K]; MAX_K]; GEMM_BLOCK];
-                backend::block_counts_dyn(
-                    self.kernel,
-                    &wp[..kw],
-                    &xw[..bb],
-                    kx,
-                    &mut counts[..bb],
-                );
-                for (j, cj) in counts.iter().enumerate().take(bb) {
+                // Per-column plane slices of this batch block.
+                let mut planes: [[&[u64]; MAX_K]; GEMM_BLOCK] = [[&[]; MAX_K]; GEMM_BLOCK];
+                for (j, pj) in planes.iter_mut().enumerate().take(bb) {
+                    for (s, slot) in pj.iter_mut().enumerate().take(kx) {
+                        *slot = x.plane_words(b0 + j, s);
+                    }
+                }
+                let cols: [&[&[u64]]; GEMM_BLOCK] = std::array::from_fn(|j| &planes[j][..kx]);
+                let cnt = &mut counts[..bb * kw * kx];
+                cnt.fill(0);
+                backend::block_counts(self.kernel, &wp[..kw], &cols[..bb], cnt);
+                for j in 0..bb {
                     let b = b0 + j;
                     let mut acc = 0.0f32;
-                    for (t, row_c) in cj.iter().enumerate().take(kw) {
+                    for t in 0..kw {
                         let mut inner = 0.0f32;
-                        for (s, &c) in row_c.iter().enumerate().take(kx) {
+                        let row_c = &cnt[(j * kw + t) * kx..(j * kw + t + 1) * kx];
+                        for (s, &c) in row_c.iter().enumerate() {
                             inner += x.alpha(b, s) * (n - 2 * c as i32) as f32;
                         }
                         acc += self.alphas[r * kw + t] * inner;
@@ -397,39 +320,6 @@ impl PreparedGemm {
     pub fn online_gemm_exec(&self, x: &[f32], batch: usize, k_x: usize, y: &mut [f32], exec: &Exec) {
         let xq = QuantizedBatch::quantize_exec(x, batch, self.cols, k_x, exec);
         self.gemm_exec(&xq, y, exec);
-    }
-}
-
-/// Fused single-pass kernel for k ≤ 4 (see `quantized_gemv`): gathers the
-/// per-row plane slices and routes the counts through the backend — the
-/// same hot loop as [`PreparedGemm`], just over scattered plane storage.
-fn fused_gemv(w: &RowQuantized, x: &Quantized, y: &mut [f32], kernel: Kernel) {
-    let kw = w.k;
-    let kx = x.k();
-    let n = w.cols as i32;
-    let xw: [&[u64]; MAX_K] = {
-        let mut a: [&[u64]; MAX_K] = [&[]; MAX_K];
-        for (s, p) in x.planes.iter().enumerate() {
-            a[s] = p.words();
-        }
-        a
-    };
-    for (r, yr) in y.iter_mut().enumerate() {
-        let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
-        for t in 0..kw {
-            wp[t] = w.planes[r * kw + t].words();
-        }
-        let mut counts = [[0u32; MAX_K]; MAX_K];
-        backend::row_counts_dyn(kernel, &wp[..kw], &xw[..kx], &mut counts);
-        let mut acc = 0.0f32;
-        for (t, row) in counts.iter().enumerate().take(kw) {
-            let mut inner = 0.0f32;
-            for (s, &c) in row.iter().enumerate().take(kx) {
-                inner += x.alphas[s] * (n - 2 * c as i32) as f32;
-            }
-            acc += w.alphas[r * kw + t] * inner;
-        }
-        *yr = acc;
     }
 }
 
@@ -531,6 +421,26 @@ mod tests {
             // Dequantization also agrees (word-wise fast path vs per-bit
             // reference inside RowQuantized).
             assert_eq!(prep.dequantize(), wq.dequantize());
+        }
+    }
+
+    /// Bit widths beyond MAX_K still work on the legacy path (the backends
+    /// route them through their pairwise arm) and stay exact vs dense.
+    #[test]
+    fn exotic_bit_widths_stay_exact() {
+        let mut rng = Rng::new(107);
+        let (m, n) = (7, 90);
+        let w = rng.normal_vec(m * n, 0.3);
+        let wq = RowQuantized::quantize(&w, m, n, 6, Method::Greedy);
+        let xq = quantize_activations(&rng.normal_vec(n, 1.0), 5);
+        let mut y = vec![0.0f32; m];
+        quantized_gemv(&wq, &xq, &mut y);
+        let wd = wq.dequantize();
+        let xd = xq.dequantize();
+        let mut yd = vec![0.0f32; m];
+        dense::gemv(&wd, m, n, &xd, &mut yd);
+        for (a, b) in y.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
         }
     }
 

@@ -59,6 +59,80 @@ pub fn memory_saving(m: u64, n: u64, k: u64) -> f64 {
     dense / packed
 }
 
+// ---------------------------------------------------------------------------
+// Block-kernel micro-model: fused batch-block vs pairwise plane passes.
+//
+// The §3/§4 model above counts *binary ops* and so cannot see why a SIMD
+// backend used to lose at short planes: the old pairwise decomposition
+// paid a full pass — loop setup, per-vector `vpsadbw` folds, and a
+// horizontal sum — per (column, w-plane, x-plane) chain, while a plane of
+// the serving shape (1024 cols) is only 4 × 256-bit vectors of payload.
+// The fused block kernel loads each weight vector once per word index,
+// keeps one byte-lane accumulator per chain, and pays the fold + hsum
+// once per chain per row. This model counts both layouts in SIMD-op
+// units so `exp::kernel_tables` can print a predicted fused-vs-pairwise
+// ratio next to the measured one.
+// ---------------------------------------------------------------------------
+
+/// Words per plane at which the AVX2 backend switches the block primitive
+/// from the fused short-plane kernel to Harley–Seal pairwise passes.
+/// This is the **single source of truth**: `kernels::avx2` derives its
+/// `HARLEY_SEAL_MIN_WORDS` from it, so model and kernel cannot drift.
+/// Beyond it, fused and pairwise are the same AVX2 code path and the
+/// predicted advantage is 1. (NEON runs the fused kernel at every plane
+/// length — see [`fused_block_ratio`].)
+pub const FUSED_SHORT_PLANE_MAX_WORDS: u64 = 64;
+
+/// 64-bit words per 256-bit SIMD vector.
+const WORDS_PER_VEC: u64 = 4;
+/// Ops per chain per vector shared by both layouts: XOR + nibble-LUT byte
+/// popcount (mask, shift, mask, 2 shuffles, add) + byte accumulate.
+const CHAIN_OPS: u64 = 8;
+/// Per-chain reduction: `vpsadbw` fold + horizontal sum of four lanes.
+const REDUCTION_OPS: u64 = 10;
+/// Per-pass overhead of one pairwise plane pass (loop setup, tail
+/// handling, accumulator init).
+const PASS_OVERHEAD_OPS: u64 = 8;
+
+/// SIMD-op estimate of the **pairwise** layout: every chain is an
+/// independent pass that reloads both planes and reduces on its own.
+pub fn pairwise_block_ops(words: u64, k_w: u64, k_h: u64, b: u64) -> u64 {
+    let vecs = words.div_ceil(WORDS_PER_VEC);
+    let chains = b * k_w * k_h;
+    chains * (vecs * (CHAIN_OPS + 2) + REDUCTION_OPS + PASS_OVERHEAD_OPS)
+}
+
+/// SIMD-op estimate of the **fused** block layout: per vector index, k_w
+/// weight loads serve every column and b·k_h activation loads serve every
+/// weight plane; each chain still does its popcount pipeline, but folds
+/// and reduces once at the end of the block.
+pub fn fused_block_ops(words: u64, k_w: u64, k_h: u64, b: u64) -> u64 {
+    let vecs = words.div_ceil(WORDS_PER_VEC);
+    let chains = b * k_w * k_h;
+    vecs * (k_w + b * k_h + chains * CHAIN_OPS) + chains * REDUCTION_OPS + PASS_OVERHEAD_OPS
+}
+
+/// Raw predicted ratio of the two layouts, with no plane-length cutoff —
+/// the model for a backend that runs the fused kernel at every length
+/// (NEON).
+pub fn fused_block_ratio(words: u64, k_w: u64, k_h: u64, b: u64) -> f64 {
+    if k_w * k_h * b == 0 {
+        return 1.0;
+    }
+    pairwise_block_ops(words, k_w, k_h, b) as f64 / fused_block_ops(words, k_w, k_h, b) as f64
+}
+
+/// Predicted speedup of the fused block kernel over the old pairwise
+/// decomposition at one batch block (`b` columns), for the **AVX2**
+/// backend: 1.0 in the long-plane regime, where both layouts run the
+/// same Harley–Seal pairwise pass.
+pub fn fused_block_advantage(words: u64, k_w: u64, k_h: u64, b: u64) -> f64 {
+    if words >= FUSED_SHORT_PLANE_MAX_WORDS {
+        return 1.0;
+    }
+    fused_block_ratio(words, k_w, k_h, b)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +178,34 @@ mod tests {
         // Table 6's larger case: 42000×1024.
         let g = theoretical_speedup(42000, 1024, 2, 2);
         assert!(g > 7.0, "γ = {g}");
+    }
+
+    #[test]
+    fn fused_block_wins_at_serving_shape() {
+        // The serving shape: 1024 cols = 16 words per plane, W2A2, one
+        // GEMM batch block of 4 columns. The fused layout must predict a
+        // strict win — this is the shape where pairwise overhead used to
+        // cancel the SIMD gain.
+        let adv = fused_block_advantage(16, 2, 2, 4);
+        assert!(adv > 1.1, "predicted fused advantage {adv}");
+        // Degenerate single-chain block: overheads match more closely but
+        // fused never predicts a loss.
+        assert!(fused_block_advantage(16, 1, 1, 1) >= 1.0);
+    }
+
+    #[test]
+    fn fused_advantage_decays_with_plane_length() {
+        // Per-pass overhead amortizes as planes grow, so the predicted
+        // advantage shrinks monotonically and hits exactly 1 in the
+        // Harley–Seal regime (same code path).
+        let mut prev = f64::INFINITY;
+        for words in [4u64, 8, 16, 32, 48] {
+            let adv = fused_block_advantage(words, 2, 2, 4);
+            assert!(adv < prev, "advantage not decaying at {words} words");
+            assert!(adv > 1.0, "fused should stay ahead at {words} words");
+            prev = adv;
+        }
+        assert_eq!(fused_block_advantage(FUSED_SHORT_PLANE_MAX_WORDS, 2, 2, 4), 1.0);
+        assert_eq!(fused_block_advantage(128, 2, 2, 4), 1.0);
     }
 }

@@ -6,15 +6,19 @@
 //!   XNOR + popcount matrix–vector products over multi-bit quantized
 //!   operands, including the **online activation quantization** step whose
 //!   cost Table 6 breaks out.
-//! * [`backend`] — runtime-dispatched kernel backends for the binary
-//!   counts: portable scalar ([`scalar`]), AVX2 with `vpshufb` nibble-LUT
-//!   popcount + Harley–Seal carry-save accumulation (`avx2`, x86_64), and
-//!   NEON `vcntq_u8` (`neon`, aarch64). Selection order: forced choice
-//!   (`--kernel` / `server.kernel`) > `AMQ_KERNEL` env > feature
+//! * [`backend`] — runtime-dispatched kernel backends behind **one fused
+//!   batch-block primitive** (`block_counts(w, x_block, counts)`): the
+//!   portable scalar reference ([`scalar`]), AVX2 (`vpshufb` nibble-LUT
+//!   popcount; per-chain byte accumulators on short planes, Harley–Seal
+//!   carry-save on long ones — `avx2`, x86_64), and NEON (`vcntq_u8`
+//!   fused block kernel — `neon`, aarch64). Selection order: forced
+//!   choice (`--kernel` / `server.kernel`) > `AMQ_KERNEL` env > feature
 //!   detection. Every backend is bit-exact against scalar
-//!   (`rust/tests/kernel_parity.rs`).
+//!   (`rust/tests/kernel_parity.rs`); a new backend is exactly one
+//!   function.
 //! * [`cost`] — the analytic operation-count model of §3/§4 (binary vs
-//!   non-binary op counts, theoretical speedup γ).
+//!   non-binary op counts, theoretical speedup γ) plus the block-kernel
+//!   micro-model (fused block vs pairwise plane passes).
 
 pub mod backend;
 pub mod binary;

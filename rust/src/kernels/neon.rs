@@ -1,12 +1,17 @@
-//! NEON backend (aarch64): XOR + `vcntq_u8` byte popcount with a widening
-//! `vpaddlq`/`vpadalq` reduction.
+//! NEON backend (aarch64): XOR + `vcntq_u8` byte popcount behind the
+//! single fused batch-block primitive ([`block_counts`]).
 //!
-//! The pairwise primitive streams both bit planes two `u64` words (one
-//! 128-bit vector) at a time. Byte popcounts (`vcntq_u8`, ≤ 8 per byte)
-//! are accumulated in a `u8x16` register for up to 31 vectors (31 · 8 =
-//! 248 < 256, no overflow), then folded into a `u64x2` accumulator with
-//! the pairwise widening adds — so the expensive widening chain is paid
-//! once per ~4 KiB of plane data, not per vector.
+//! The fused kernel walks the planes in `u8`-blocks of up to
+//! [`U8_BLOCK_VECS`] 128-bit vectors (31 · 8 = 248 < 256, no byte
+//! overflow). Within a block, every `(column, w-plane, x-plane)` chain of
+//! the batch block keeps its own `u8x16` accumulator: each weight-plane
+//! vector is loaded **once** per word index and XORed against all block
+//! columns, and `vcntq_u8` byte popcounts accumulate with plain
+//! `vaddq_u8`. The widening fold (`vaddlvq_u8`) is paid once per chain
+//! per block — never inside the word loop — which is what recovers the
+//! SIMD win at short serving planes where the old per-pair passes spent
+//! most of their time in per-pair reductions. Columns are chunked so at
+//! most [`FUSED_MAX_CHAINS`] accumulators are live at once.
 //!
 //! Exactness: popcounts are exact integers, so this backend produces the
 //! identical mismatch counts as the scalar kernel; the shared float
@@ -23,58 +28,20 @@ use super::backend::MAX_K;
 /// Max 128-bit vectors whose byte popcounts fit a `u8` accumulator.
 const U8_BLOCK_VECS: usize = 31;
 
-/// `Σ_i popcount(a[i] ^ b[i])` (NEON).
+/// Most chains (columns × k_w × k_x) the fused kernel keeps live at once;
+/// columns are chunked to fit.
+const FUSED_MAX_CHAINS: usize = 16;
+
+/// Fused batch-block counts (NEON) — the backend's one count primitive;
+/// contract as in [`super::scalar::block_counts`].
 #[inline]
-pub(crate) fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
+pub(crate) fn block_counts(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
     // SAFETY: NEON is a baseline feature of every aarch64 target this
     // module is compiled for (see Kernel::is_available).
-    unsafe { xor_popcount_neon(a, b) }
+    unsafe { block_counts_neon(w, x_block, counts) }
 }
 
-/// Fused single-column counts (NEON): pairwise passes — the weight row
-/// stays in L1 across the `KW · KX` plane pairs.
-#[inline]
-pub(crate) fn row_counts<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    x: &[&[u64]; KX],
-    counts: &mut [[u32; KX]; KW],
-) {
-    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
-    unsafe { row_counts_neon::<KW, KX>(w, x, counts) }
-}
-
-/// Fused batch-block counts (NEON).
-#[inline]
-pub(crate) fn block_counts<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    xw: &[[&[u64]; KX]],
-    counts: &mut [[[u32; KX]; KW]],
-) {
-    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
-    unsafe { block_counts_neon::<KW, KX>(w, xw, counts) }
-}
-
-/// Runtime-width `row_counts` (NEON).
-#[inline]
-pub(crate) fn row_counts_dyn(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
-    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
-    unsafe { row_counts_dyn_neon(w, x, counts) }
-}
-
-/// Runtime-width `block_counts` (NEON).
-#[inline]
-pub(crate) fn block_counts_dyn(
-    w: &[&[u64]],
-    xw: &[[&[u64]; MAX_K]],
-    kx: usize,
-    counts: &mut [[[u32; MAX_K]; MAX_K]],
-) {
-    // SAFETY: NEON is baseline on aarch64 (see xor_popcount).
-    unsafe { block_counts_dyn_neon(w, xw, kx, counts) }
-}
-
-/// The blocked XOR-popcount over two equal-length word slices.
+/// One-pair XOR-popcount — the fallback for bit widths beyond `MAX_K`.
 ///
 /// # Safety
 /// Requires NEON; `a.len() == b.len()`.
@@ -105,55 +72,94 @@ unsafe fn xor_popcount_neon(a: &[u64], b: &[u64]) -> u32 {
     sum as u32
 }
 
+/// The block primitive: fused chains for the table widths, per-pair
+/// passes only for widths beyond `MAX_K` (so the fused kernel's
+/// accumulator array stays fixed).
+///
 /// # Safety
-/// Requires NEON; all plane slices share one length.
+/// Requires NEON; contract as in [`super::scalar::block_counts`].
 #[target_feature(enable = "neon")]
-unsafe fn row_counts_neon<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    x: &[&[u64]; KX],
-    counts: &mut [[u32; KX]; KW],
-) {
-    for (ct, wt) in counts.iter_mut().zip(w) {
-        for (c, xs) in ct.iter_mut().zip(x) {
-            *c += xor_popcount_neon(wt, xs);
+unsafe fn block_counts_neon(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block.first().map_or(0, |c| c.len());
+    debug_assert_eq!(counts.len(), x_block.len() * kw * kx);
+    if kw == 0 || kx == 0 {
+        return;
+    }
+    if kw > MAX_K || kx > MAX_K {
+        for (j, xj) in x_block.iter().enumerate() {
+            for (t, wt) in w.iter().enumerate() {
+                for (s, xs) in xj.iter().enumerate() {
+                    counts[(j * kw + t) * kx + s] += xor_popcount_neon(wt, xs);
+                }
+            }
+        }
+        return;
+    }
+    // Column chunks sized to the chain budget (k_w·k_x ≤ MAX_K² =
+    // FUSED_MAX_CHAINS, so at least one column always fits).
+    let cols_per_chunk = (FUSED_MAX_CHAINS / (kw * kx)).max(1);
+    let mut j0 = 0;
+    while j0 < x_block.len() {
+        let jb = cols_per_chunk.min(x_block.len() - j0);
+        block_counts_neon_fused(
+            w,
+            &x_block[j0..j0 + jb],
+            &mut counts[j0 * kw * kx..(j0 + jb) * kw * kx],
+        );
+        j0 += jb;
+    }
+}
+
+/// The fused block kernel: per-chain `u8x16` accumulators over ≤ 31
+/// vector blocks, widening fold once per chain per block, scalar word
+/// tail.
+///
+/// # Safety
+/// Requires NEON; contract as in [`super::scalar::block_counts`], with
+/// `x_block.len() · k_w · k_x ≤ FUSED_MAX_CHAINS` and widths ≤ `MAX_K`.
+#[target_feature(enable = "neon")]
+unsafe fn block_counts_neon_fused(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block[0].len();
+    let wpp = w[0].len();
+    debug_assert!(x_block.len() * kw * kx <= FUSED_MAX_CHAINS);
+    let mut i = 0usize; // word index
+    while i + 2 <= wpp {
+        let block_end = wpp.min(i + 2 * U8_BLOCK_VECS);
+        let mut acc8 = [vdupq_n_u8(0); FUSED_MAX_CHAINS];
+        while i + 2 <= block_end {
+            let mut wv = [vdupq_n_u8(0); MAX_K];
+            for (t, wt) in w.iter().enumerate() {
+                wv[t] = vld1q_u8(wt.as_ptr().add(i) as *const u8);
+            }
+            for (j, xj) in x_block.iter().enumerate() {
+                for (s, xs) in xj.iter().enumerate() {
+                    let xv = vld1q_u8(xs.as_ptr().add(i) as *const u8);
+                    for (t, &wt) in wv.iter().enumerate().take(kw) {
+                        let c = (j * kw + t) * kx + s;
+                        acc8[c] = vaddq_u8(acc8[c], vcntq_u8(veorq_u8(wt, xv)));
+                    }
+                }
+            }
+            i += 2;
+        }
+        // Widening fold, once per chain per u8-block: every byte is
+        // ≤ 248, so the across-vector sum ≤ 3968 fits vaddlv's u16.
+        for (c, &a8) in acc8.iter().enumerate().take(x_block.len() * kw * kx) {
+            counts[c] += u32::from(vaddlvq_u8(a8));
         }
     }
-}
-
-/// # Safety
-/// Requires NEON; all plane slices share one length.
-#[target_feature(enable = "neon")]
-unsafe fn block_counts_neon<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    xw: &[[&[u64]; KX]],
-    counts: &mut [[[u32; KX]; KW]],
-) {
-    for (cj, xj) in counts.iter_mut().zip(xw) {
-        row_counts_neon::<KW, KX>(w, xj, cj);
-    }
-}
-
-/// # Safety
-/// Requires NEON; all plane slices share one length.
-#[target_feature(enable = "neon")]
-unsafe fn row_counts_dyn_neon(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
-    for (ct, wt) in counts.iter_mut().zip(w) {
-        for (c, xs) in ct.iter_mut().zip(x) {
-            *c += xor_popcount_neon(wt, xs);
+    // Scalar word tail, per chain.
+    let tail = i;
+    for (j, xj) in x_block.iter().enumerate() {
+        for (t, wt) in w.iter().enumerate() {
+            for (s, xs) in xj.iter().enumerate() {
+                let c = (j * kw + t) * kx + s;
+                for ii in tail..wpp {
+                    counts[c] += (wt[ii] ^ xs[ii]).count_ones();
+                }
+            }
         }
-    }
-}
-
-/// # Safety
-/// Requires NEON; `xw[j][s]` valid for `s < kx`.
-#[target_feature(enable = "neon")]
-unsafe fn block_counts_dyn_neon(
-    w: &[&[u64]],
-    xw: &[[&[u64]; MAX_K]],
-    kx: usize,
-    counts: &mut [[[u32; MAX_K]; MAX_K]],
-) {
-    for (cj, xj) in counts.iter_mut().zip(xw) {
-        row_counts_dyn_neon(w, &xj[..kx], cj);
     }
 }

@@ -1,106 +1,44 @@
-//! Portable scalar count kernels — the reference backend every other
+//! Portable scalar count kernel — the reference backend every other
 //! backend must match bit-for-bit (trivially: all backends produce the
 //! same exact integer mismatch counts; only instruction selection
 //! differs).
 //!
 //! The dataflow is the paper's Appendix A on portable Rust: `u64 ^` +
 //! `count_ones`, which LLVM lowers to `xor` + `popcnt` on x86_64. The
-//! fused variants evaluate all `k_w · k_x` plane pairs of a weight row in
-//! a single pass over the packed words, so each activation word is loaded
-//! once per word index and the independent XOR+POPCNT chains pipeline.
+//! single entry point is the fused batch-block primitive
+//! ([`block_counts`]): one pass over the packed words evaluates every
+//! (column, weight-plane, activation-plane) chain of the block, so each
+//! weight word is loaded once per word index and the independent
+//! XOR+POPCNT chains pipeline. The loop order (word-major, then weight
+//! plane, then column, then activation plane) is the fused interleaved
+//! order the seam has always used — kept verbatim so the counts, and
+//! therefore the shared float reduction downstream, are preserved by
+//! construction.
 
-use super::backend::MAX_K;
-
-/// `Σ_i popcount(a[i] ^ b[i])`, 4-way unrolled so the popcount units
-/// pipeline across independent words.
+/// Fused batch-block counts, the one scalar count primitive:
+///
+/// ```text
+/// counts[(j·k_w + t)·k_x + s] += Σ_i popcount(w[t][i] ^ x_block[j][s][i])
+/// ```
+///
+/// `w` holds the `k_w` plane slices of one weight row; `x_block[j]` holds
+/// the `k_x` plane slices of batch column `j`. All plane slices share one
+/// length and every column has the same `k_x`; `counts` is the flat
+/// `[column][weight-plane][activation-plane]` accumulator of length
+/// `x_block.len() · k_w · k_x`. Accumulates (callers zero the slice).
 #[inline]
-pub(crate) fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut mism = 0u32;
-    let mut i = 0;
-    while i + 4 <= a.len() {
-        mism += (a[i] ^ b[i]).count_ones()
-            + (a[i + 1] ^ b[i + 1]).count_ones()
-            + (a[i + 2] ^ b[i + 2]).count_ones()
-            + (a[i + 3] ^ b[i + 3]).count_ones();
-        i += 4;
-    }
-    while i < a.len() {
-        mism += (a[i] ^ b[i]).count_ones();
-        i += 1;
-    }
-    mism
-}
-
-/// Fused single-column counts: one pass over the words, `KW · KX`
-/// independent XOR+POPCNT chains, counters in registers.
-#[inline]
-pub(crate) fn row_counts<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    x: &[&[u64]; KX],
-    counts: &mut [[u32; KX]; KW],
-) {
+pub(crate) fn block_counts(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block.first().map_or(0, |c| c.len());
     let wpp = w.first().map_or(0, |p| p.len());
-    for i in 0..wpp {
-        for t in 0..KW {
-            let ww = w[t][i];
-            for s in 0..KX {
-                counts[t][s] += (ww ^ x[s][i]).count_ones();
-            }
-        }
-    }
-}
-
-/// Fused batch-block counts: one load of each weight word serves every
-/// column of the block (`xw.len() == counts.len()` columns).
-#[inline]
-pub(crate) fn block_counts<const KW: usize, const KX: usize>(
-    w: &[&[u64]; KW],
-    xw: &[[&[u64]; KX]],
-    counts: &mut [[[u32; KX]; KW]],
-) {
-    let wpp = w.first().map_or(0, |p| p.len());
-    for i in 0..wpp {
-        for t in 0..KW {
-            let ww = w[t][i];
-            for (cj, xj) in counts.iter_mut().zip(xw) {
-                for s in 0..KX {
-                    cj[t][s] += (ww ^ xj[s][i]).count_ones();
-                }
-            }
-        }
-    }
-}
-
-/// Runtime-width [`row_counts`]: `w.len() = k_w`, `x.len() = k_x`.
-#[inline]
-pub(crate) fn row_counts_dyn(w: &[&[u64]], x: &[&[u64]], counts: &mut [[u32; MAX_K]; MAX_K]) {
-    let wpp = w.first().map_or(0, |p| p.len());
+    debug_assert_eq!(counts.len(), x_block.len() * kw * kx);
     for i in 0..wpp {
         for (t, wt) in w.iter().enumerate() {
             let ww = wt[i];
-            for (s, xs) in x.iter().enumerate() {
-                counts[t][s] += (ww ^ xs[i]).count_ones();
-            }
-        }
-    }
-}
-
-/// Runtime-width [`block_counts`]: `xw[j][s]` valid for `s < kx`.
-#[inline]
-pub(crate) fn block_counts_dyn(
-    w: &[&[u64]],
-    xw: &[[&[u64]; MAX_K]],
-    kx: usize,
-    counts: &mut [[[u32; MAX_K]; MAX_K]],
-) {
-    let wpp = w.first().map_or(0, |p| p.len());
-    for i in 0..wpp {
-        for (t, wt) in w.iter().enumerate() {
-            let ww = wt[i];
-            for (cj, xj) in counts.iter_mut().zip(xw) {
-                for (s, c) in cj[t].iter_mut().enumerate().take(kx) {
-                    *c += (ww ^ xj[s][i]).count_ones();
+            for (j, xj) in x_block.iter().enumerate() {
+                let base = (j * kw + t) * kx;
+                for (c, xs) in counts[base..base + kx].iter_mut().zip(xj.iter()) {
+                    *c += (ww ^ xs[i]).count_ones();
                 }
             }
         }
@@ -111,51 +49,54 @@ pub(crate) fn block_counts_dyn(
 mod tests {
     use super::*;
 
-    /// The fused loops must agree with the naive pairwise definition.
+    /// Naive pairwise reference: one plane pair at a time.
+    fn pair_popcount(a: &[u64], b: &[u64]) -> u32 {
+        a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum()
+    }
+
+    /// The fused loop must agree with the naive pairwise definition for
+    /// every chain of the block, at any (k_w, k_x, B) — including widths
+    /// beyond the drivers' MAX_K and the empty cases.
     #[test]
-    fn fused_counts_match_pairwise() {
+    fn fused_block_matches_pairwise() {
         // Deterministic mixed patterns incl. a tail beyond a 4-word unroll.
         let mk = |seed: u64, n: usize| -> Vec<u64> {
-            (0..n).map(|i| seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(i as u32) ^ i as u64).collect()
+            (0..n)
+                .map(|i| seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(i as u32) ^ i as u64)
+                .collect()
         };
-        let wpp = 7;
-        let wplanes: Vec<Vec<u64>> = (0..2u64).map(|t| mk(3 + t, wpp)).collect();
-        let xplanes: Vec<Vec<u64>> = (0..3u64).map(|s| mk(11 + s, wpp)).collect();
-        let w: [&[u64]; 2] = [&wplanes[0][..], &wplanes[1][..]];
-        let x: [&[u64]; 3] = [&xplanes[0][..], &xplanes[1][..], &xplanes[2][..]];
-        let mut fused = [[0u32; 3]; 2];
-        row_counts::<2, 3>(&w, &x, &mut fused);
-        for t in 0..2 {
-            for s in 0..3 {
-                assert_eq!(fused[t][s], xor_popcount(w[t], x[s]), "t={t} s={s}");
-            }
-        }
-        // Batch block of 2 columns (second column reuses planes rotated).
-        let xw: [[&[u64]; 3]; 2] = [x, [&xplanes[2][..], &xplanes[0][..], &xplanes[1][..]]];
-        let mut block = [[[0u32; 3]; 2]; 2];
-        block_counts::<2, 3>(&w, &xw, &mut block);
-        for (j, xj) in xw.iter().enumerate() {
-            for t in 0..2 {
-                for s in 0..3 {
-                    assert_eq!(block[j][t][s], xor_popcount(w[t], xj[s]), "j={j} t={t} s={s}");
+        for (kw, kx, b, wpp) in [(2, 3, 2, 7), (1, 1, 1, 16), (3, 2, 5, 1), (5, 6, 2, 3)] {
+            let wplanes: Vec<Vec<u64>> = (0..kw as u64).map(|t| mk(3 + t, wpp)).collect();
+            let xplanes: Vec<Vec<u64>> = (0..(b * kx) as u64).map(|s| mk(11 + s, wpp)).collect();
+            let w: Vec<&[u64]> = wplanes.iter().map(|p| &p[..]).collect();
+            let cols: Vec<Vec<&[u64]>> = (0..b)
+                .map(|j| (0..kx).map(|s| &xplanes[j * kx + s][..]).collect())
+                .collect();
+            let x_block: Vec<&[&[u64]]> = cols.iter().map(|c| &c[..]).collect();
+            let mut counts = vec![0u32; b * kw * kx];
+            block_counts(&w, &x_block, &mut counts);
+            for j in 0..b {
+                for t in 0..kw {
+                    for s in 0..kx {
+                        assert_eq!(
+                            counts[(j * kw + t) * kx + s],
+                            pair_popcount(w[t], x_block[j][s]),
+                            "kw={kw} kx={kx} b={b} wpp={wpp} j={j} t={t} s={s}"
+                        );
+                    }
                 }
             }
         }
-        // Dyn variants agree with the const ones.
-        let mut dynr = [[0u32; MAX_K]; MAX_K];
-        row_counts_dyn(&w, &x, &mut dynr);
-        let mut dynb = [[[0u32; MAX_K]; MAX_K]; 2];
-        let xw_dyn: Vec<[&[u64]; MAX_K]> = xw
-            .iter()
-            .map(|xj| [xj[0], xj[1], xj[2], &[][..]])
-            .collect();
-        block_counts_dyn(&w, &xw_dyn, 3, &mut dynb);
-        for t in 0..2 {
-            for s in 0..3 {
-                assert_eq!(dynr[t][s], fused[t][s]);
-                assert_eq!(dynb[0][t][s], block[0][t][s]);
-                assert_eq!(dynb[1][t][s], block[1][t][s]);
-            }
-        }
+        // Accumulation semantics: a second call adds on top.
+        let a = mk(1, 4);
+        let bb = mk(2, 4);
+        let w: [&[u64]; 1] = [&a];
+        let xp: [&[u64]; 1] = [&bb];
+        let col: [&[&[u64]]; 1] = [&xp];
+        let mut counts = [0u32; 1];
+        block_counts(&w, &col, &mut counts);
+        let once = counts[0];
+        block_counts(&w, &col, &mut counts);
+        assert_eq!(counts[0], 2 * once);
     }
 }

@@ -40,29 +40,39 @@
 //!
 //! ## Kernel backends
 //!
-//! The XNOR/popcount count loops are **runtime-dispatched** over SIMD
-//! backends ([`kernels::backend`]): portable scalar (`u64 ^` +
-//! `count_ones`, always available), AVX2 (`vpshufb` nibble-LUT popcount
-//! with Harley–Seal carry-save accumulation over 256-bit lanes, x86_64),
-//! and NEON (`vcntq_u8` + widening adds, aarch64). Selection order:
-//! explicit choice (`amq serve --kernel` / `server.kernel` config) >
-//! `AMQ_KERNEL` env (`scalar|avx2|neon|auto`) > feature detection
-//! (`is_x86_feature_detected!`).
+//! Every XNOR/popcount count loop goes through **one fused batch-block
+//! primitive** per backend ([`kernels::backend`]):
+//! `block_counts(w, x_block, counts)` — one weight row's plane slices
+//! against one batch block of column plane slices, accumulating the flat
+//! `[column][w-plane][x-plane]` mismatch counts. The single-vector GEMV
+//! is a one-column block; a plane pair is a 1×1×1 block. Backends:
+//! portable scalar (`u64 ^` + `count_ones`, always available), AVX2
+//! (`vpshufb` nibble-LUT popcount; on short planes a **fused block
+//! kernel** with one byte-lane accumulator per chain — weight vectors
+//! loaded once per word index, one reduction per chain per row — and
+//! Harley–Seal carry-save pairwise passes on long planes, x86_64), and
+//! NEON (`vcntq_u8` fused block kernel with widening folds, aarch64).
+//! Selection order: explicit choice (`amq serve --kernel` /
+//! `server.kernel` config) > `AMQ_KERNEL` env (`scalar|avx2|neon|auto`) >
+//! feature detection (`is_x86_feature_detected!`).
 //!
 //! **Bit-exactness argument:** every output element reduces to exact
 //! integer mismatch counts followed by a float reduction. Backends only
 //! change how the counts are computed — the same integers in any
-//! instruction mix — and the float reduction is one shared code path, so
-//! every backend's f32 output is **bit-identical** to scalar's, across
-//! batch sizes and thread counts (`rust/tests/kernel_parity.rs`, zero
-//! tolerance). Switching backends is therefore a pure wall-time knob.
+//! instruction mix, whether a chain is accumulated in `u8` SIMD lanes,
+//! carry-save vectors, or a scalar register — and the float reduction is
+//! one shared code path ([`kernels::binary`]), so every backend's f32
+//! output is **bit-identical** to scalar's, across batch sizes and
+//! thread counts (`rust/tests/kernel_parity.rs`, zero tolerance —
+//! including partial batch blocks and asymmetric k_w ≠ k_x widths).
+//! Switching backends is therefore a pure wall-time knob.
 //!
 //! **Adding a backend:** add a [`kernels::Kernel`] variant with an
-//! `is_available` arm, implement the count primitives (`xor_popcount`,
-//! `row_counts`, `block_counts` and their `_dyn` variants) in a new
-//! arch-gated module, and add the dispatch arms in `kernels::backend`.
-//! The cross-backend parity suite picks new backends up automatically
-//! via `Kernel::available()`.
+//! `is_available` arm, implement **one function** —
+//! `block_counts(w, x_block, counts)` — in a new arch-gated module, and
+//! add one dispatch arm in `kernels::backend`. The cross-backend parity
+//! suite and the bench sweeps pick new backends up automatically via
+//! `Kernel::available()`.
 //!
 //! ## Quick tour
 //!

@@ -5,9 +5,11 @@
 //! paper's quantized one. The primary entry point is the **batched**
 //! [`LinearOp::forward`]: `B` activation vectors are quantized once into
 //! shared bit-planes and multiplied in a single sweep over the packed
-//! weight planes (`kernels::binary::PreparedGemm`, Fig. 3 right). The
-//! single-vector `matvec` path remains as the `B = 1` wrapper for the
-//! trainer and legacy callers.
+//! weight planes (`kernels::binary::PreparedGemm`, Fig. 3 right), whose
+//! counts all flow through the one fused batch-block primitive of
+//! `kernels::backend` on whatever SIMD backend the layer's kernel
+//! resolves to. The single-vector `matvec` path remains as the `B = 1`
+//! wrapper for the trainer and legacy callers.
 
 use super::batch::{ActivationBatch, OutputBatch};
 use crate::exec::{Exec, SendPtr};

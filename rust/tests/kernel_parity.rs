@@ -2,9 +2,11 @@
 //! available backend (scalar, AVX2, NEON) must reproduce the scalar
 //! kernel's f32 outputs with **no tolerance** (`assert_eq!` on f32), for
 //! every (method, k_w, k_x, B) grid point — including column counts that
-//! are not multiples of 64 (tail words) and column counts large enough to
+//! are not multiples of 64 (tail words), column counts large enough to
 //! engage the SIMD main loops (Harley–Seal blocks on AVX2, the u8-block
-//! loop on NEON) — and for every thread count of the execution engine.
+//! loop on NEON), batch sizes that are not multiples of the GEMM batch
+//! block (partial blocks through the fused primitive), and asymmetric
+//! k_w ≠ k_x widths — and for every thread count of the execution engine.
 //!
 //! Why this can hold exactly: backends only change how the integer
 //! mismatch counts `popcount(w ⊕ x)` are computed, and those are exact in
@@ -84,6 +86,68 @@ fn gemm_and_gemv_bitmatch_scalar_across_backends_full_grid() {
                 }
             }
         }
+    }
+}
+
+/// The fused batch-block primitive under batch sizes that are NOT
+/// multiples of the driver's block width (GEMM_BLOCK = 4, so B ∈ {1, 3,
+/// 5, 7, 17} all end in a partial block) crossed with an asymmetric
+/// k_w ≠ k_x grid — the chain-indexing cases of the fused kernel — on
+/// every available backend, zero tolerance. Shapes cover the 16-word
+/// serving planes (the fused short-plane path), a tail-word shape, and a
+/// Harley–Seal-length shape.
+#[test]
+fn fused_block_partial_batches_and_asymmetric_widths_bitmatch_scalar() {
+    let mut rng = Rng::new(0xB10C);
+    let backends = backends_under_test();
+    for (k_w, k_x) in [(1, 2), (2, 1), (1, 4), (4, 1), (2, 3), (3, 2), (3, 4), (4, 3)] {
+        for &(m, n) in &[(8usize, 1024usize), (5, 130), (3, 4109)] {
+            // The long shape only on one asymmetric pair per direction to
+            // keep the grid affordable.
+            if n > 2048 && !matches!((k_w, k_x), (2, 3) | (3, 2)) {
+                continue;
+            }
+            let w = rng.normal_vec(m * n, 0.3);
+            let wq = RowQuantized::quantize(&w, m, n, k_w, Method::Alternating { t: 2 });
+            let reference = PreparedGemm::with_kernel(&wq, Kernel::Scalar);
+            for batch in [1usize, 3, 5, 7, 17] {
+                let x = rng.normal_vec(batch * n, 1.0);
+                let xq = QuantizedBatch::quantize(&x, batch, n, k_x);
+                let mut want = vec![0.0f32; batch * m];
+                reference.gemm(&xq, &mut want);
+                for &kernel in &backends {
+                    let prep = PreparedGemm::with_kernel(&wq, kernel);
+                    let mut got = vec![0.0f32; batch * m];
+                    prep.gemm(&xq, &mut got);
+                    assert_eq!(
+                        got, want,
+                        "{kernel} k_w={k_w} k_x={k_x} m={m} n={n} B={batch}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// When `AMQ_KERNEL` is set (the per-backend CI legs), it must name a
+/// backend this host can run, and that backend must actually be the
+/// active one — a forced leg that silently fell back to detection or
+/// scalar would be testing the wrong kernel. This is what makes the
+/// `AMQ_KERNEL=avx2` CI leg fail loudly on a runner without AVX2.
+#[test]
+fn forced_env_kernel_is_available_and_active() {
+    let Ok(v) = std::env::var("AMQ_KERNEL") else {
+        return; // no forced leg — nothing to pin
+    };
+    let choice = Kernel::parse_choice(&v).unwrap_or_else(|e| {
+        panic!("AMQ_KERNEL={v} does not name a backend this host can run: {e}")
+    });
+    if let Some(kernel) = choice {
+        assert_eq!(
+            amq::kernels::backend::active(),
+            kernel,
+            "AMQ_KERNEL={v} was not the active backend"
+        );
     }
 }
 
