@@ -21,7 +21,7 @@
 use amq::exp::{
     costmodel, fused_vs_pairwise_sweep, gemm_backend_sweep, gemm_batch_sweep, gemm_thread_sweep,
     kernel_tables, render_backend_sweep, render_batch_sweep, render_fused_sweep,
-    render_thread_sweep, table6,
+    render_scalar_floor, render_thread_sweep, scalar_fp_floor, table6,
 };
 use amq::kernels::{backend, Kernel};
 
@@ -83,6 +83,24 @@ fn main() {
     // across PRs via the JSON together with the micro-model's prediction.
     let fsweep = fused_vs_pairwise_sweep(&[16, 128], 4, 2, samples.min(9));
     print!("{}", render_fused_sweep(&fsweep));
+
+    // Scalar absolute-speed floor (the ROADMAP item open since the fused
+    // kernel refactor dropped scalar's const-generic specialization):
+    // forced-scalar W2A2 GEMV vs dense f32 at the long-plane shape. Hard
+    // gate — scalar is the universal fallback, so losing to FP would
+    // silently erase the paper's headline win on scalar-only hosts.
+    let floor = scalar_fp_floor(hs_shape.0, hs_shape.1, 2, samples.min(9));
+    print!("{}", render_scalar_floor(&floor));
+
+    // Self-check (the scalar floor gate): the portable scalar backend must
+    // beat dense f32 at W2A2 on long planes, prequantized kernel vs kernel.
+    assert!(
+        floor.kernel_ratio > 1.0,
+        "scalar W2A2 GEMV slower than dense f32 at {}x{}: {:.2}x",
+        floor.m,
+        floor.n,
+        floor.kernel_ratio
+    );
 
     // Self-check: quantized must beat FP at every shape (the paper's
     // headline 2-bit ≈ 6×, 3-bit ≈ 3× on the larger shape).
@@ -216,7 +234,17 @@ fn main() {
             r.words, r.k, r.batch, r.backend, r.fused_ms, r.pairwise_ms, r.speedup, r.predicted
         ));
     }
-    json.push_str("]}");
+    json.push_str(&format!(
+        "],\"scalar_fp_floor\":{{\"m\":{},\"n\":{},\"k\":{},\"fp_ms\":{:.4},\"scalar_ms\":{:.4},\"online_ms\":{:.4},\"kernel_ratio\":{:.3},\"online_ratio\":{:.3}}}}}",
+        floor.m,
+        floor.n,
+        floor.k,
+        floor.fp_ms,
+        floor.scalar_ms,
+        floor.online_ms,
+        floor.kernel_ratio,
+        floor.online_ratio
+    ));
     if let Some(path) = json_path {
         std::fs::write(&path, &json).expect("write json summary");
         eprintln!("json summary written to {path}");

@@ -20,9 +20,19 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use amq::exec::ExecConfig;
-use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::exec::{Exec, ExecConfig};
+use amq::model::lm::{LmConfig, LmStepWorkspace, PrecisionPolicy, RnnKind, RnnLm};
+use amq::model::math::argmax;
+use amq::model::OutputBatch;
 use amq::server::batcher::{BatcherConfig, InferenceServer, Request};
+
+// The shared counting #[global_allocator] (thread-local counters — worker
+// threads never pollute a serial measurement). Same bookkeeping as the
+// zero-allocation test gate, so `allocs_per_step` / `bytes_per_step` in the
+// JSON mean exactly what `rust/tests/workspace_parity.rs` asserts.
+#[path = "../tests/support/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::thread_alloc_counts;
 
 struct Sample {
     model: &'static str,
@@ -35,6 +45,20 @@ struct Sample {
 struct ThreadSample {
     threads: usize,
     tokens_per_sec: f64,
+}
+
+/// One row of the decode-latency comparison: the allocating
+/// `step_batch_exec` vs the workspace `step_batch_into_exec`, serial
+/// engine, greedy decode.
+struct DecodeSample {
+    batch: usize,
+    alloc_us_per_step: f64,
+    into_us_per_step: f64,
+    speedup: f64,
+    alloc_path_allocs_per_step: f64,
+    alloc_path_bytes_per_step: f64,
+    allocs_per_step: f64,
+    bytes_per_step: f64,
 }
 
 fn run_batch(
@@ -75,6 +99,7 @@ fn json_summary(
     new_tokens: usize,
     samples: &[Sample],
     scaling: &[ThreadSample],
+    decode: &[DecodeSample],
 ) -> String {
     let mut s = format!(
         "{{\"bench\":\"server_throughput\",\"kernel\":\"{}\",\"cpu_features\":[{}],\"kind\":\"{}\",\"vocab\":{},\"hidden\":{},\"new_tokens\":{},\"results\":[",
@@ -106,6 +131,23 @@ fn json_summary(
         s.push_str(&format!(
             "{{\"model\":\"W2A2\",\"batch\":16,\"threads\":{},\"tokens_per_sec\":{:.1}}}",
             r.threads, r.tokens_per_sec
+        ));
+    }
+    s.push_str("],\"decode_latency\":[");
+    for (i, r) in decode.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"model\":\"W2A2\",\"batch\":{},\"threads\":1,\"alloc_us_per_step\":{:.2},\"into_us_per_step\":{:.2},\"into_speedup\":{:.3},\"alloc_path_allocs_per_step\":{:.1},\"alloc_path_bytes_per_step\":{:.0},\"allocs_per_step\":{:.1},\"bytes_per_step\":{:.0}}}",
+            r.batch,
+            r.alloc_us_per_step,
+            r.into_us_per_step,
+            r.speedup,
+            r.alloc_path_allocs_per_step,
+            r.alloc_path_bytes_per_step,
+            r.allocs_per_step,
+            r.bytes_per_step
         ));
     }
     s.push_str("]}");
@@ -200,7 +242,101 @@ fn main() {
     let gain4 = scaling.last().unwrap().tokens_per_sec / scaling[0].tokens_per_sec;
     println!("W2A2 threading gain at B=16: 4 threads {gain4:.2}x, best {thread_gain:.2}x");
 
-    let json = json_summary(&config, new_tokens, &samples, &scaling);
+    // Steady-state decode latency: one greedy-decode timestep on the serial
+    // engine (B = 1 is the latency-critical serving shape), the allocating
+    // step_batch_exec vs the workspace step_batch_into_exec, with heap
+    // allocations per timestep counted on both paths. The into path must be
+    // allocation-free once warm — the zero-allocation contract, gated here
+    // as well as in rust/tests/workspace_parity.rs.
+    let exec = Exec::serial();
+    let steps = if quick { 64 } else { 192 };
+    let reps = 5;
+    let vocab = config.vocab;
+    let mut decode: Vec<DecodeSample> = Vec::new();
+    println!("\nW2A2 steady-state decode (serial engine, {steps} timesteps/run, best of {reps}):");
+    println!(
+        "{:<7} {:>15} {:>15} {:>9} {:>13} {:>13}",
+        "batch", "alloc us/step", "into us/step", "speedup", "allocs/step", "bytes/step"
+    );
+    for &b in &[1usize, 16] {
+        let seed_tokens: Vec<usize> = (0..b).map(|i| (i * 13 + 1) % vocab).collect();
+
+        // Allocating path: fresh output + workspaces inside every step.
+        let mut state = w2a2.zero_state_batch(b);
+        let mut toks = seed_tokens.clone();
+        for _ in 0..4 {
+            let lg = w2a2.step_batch_exec(&toks, &mut state, &exec);
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = argmax(lg.row(i));
+            }
+        }
+        let (a0, by0) = thread_alloc_counts();
+        let mut alloc_us = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                let lg = w2a2.step_batch_exec(&toks, &mut state, &exec);
+                for (i, t) in toks.iter_mut().enumerate() {
+                    *t = argmax(lg.row(i));
+                }
+            }
+            alloc_us = alloc_us.min(t0.elapsed().as_secs_f64() * 1e6 / steps as f64);
+        }
+        let (a1, by1) = thread_alloc_counts();
+        let alloc_path_allocs = (a1 - a0) as f64 / (reps * steps) as f64;
+        let alloc_path_bytes = (by1 - by0) as f64 / (reps * steps) as f64;
+
+        // Workspace path: state, logits, and workspace reused across steps.
+        let mut state = w2a2.zero_state_batch(b);
+        let mut ws = LmStepWorkspace::new();
+        let mut logits = OutputBatch::zeros(0, 0);
+        let mut toks = seed_tokens.clone();
+        for _ in 0..4 {
+            w2a2.step_batch_into_exec(&toks, &mut state, &mut logits, &exec, &mut ws);
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = argmax(logits.row(i));
+            }
+        }
+        let (a0, by0) = thread_alloc_counts();
+        let mut into_us = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                w2a2.step_batch_into_exec(&toks, &mut state, &mut logits, &exec, &mut ws);
+                for (i, t) in toks.iter_mut().enumerate() {
+                    *t = argmax(logits.row(i));
+                }
+            }
+            into_us = into_us.min(t0.elapsed().as_secs_f64() * 1e6 / steps as f64);
+        }
+        let (a1, by1) = thread_alloc_counts();
+        assert_eq!(a1 - a0, 0, "warmed-up step_batch_into_exec timestep allocated (B={b})");
+        let allocs = (a1 - a0) as f64 / (reps * steps) as f64;
+        let bytes_ps = (by1 - by0) as f64 / (reps * steps) as f64;
+
+        let speedup = alloc_us / into_us;
+        println!(
+            "{b:<7} {alloc_us:>15.2} {into_us:>15.2} {speedup:>8.2}x {allocs:>13.1} {bytes_ps:>13.0}"
+        );
+        decode.push(DecodeSample {
+            batch: b,
+            alloc_us_per_step: alloc_us,
+            into_us_per_step: into_us,
+            speedup,
+            alloc_path_allocs_per_step: alloc_path_allocs,
+            alloc_path_bytes_per_step: alloc_path_bytes,
+            allocs_per_step: allocs,
+            bytes_per_step: bytes_ps,
+        });
+    }
+    let b1 = decode.iter().find(|d| d.batch == 1).expect("B=1 decode sample");
+    println!(
+        "W2A2 B=1 decode: into path {:.2}x vs allocating path \
+         ({:.1} allocs/step eliminated)",
+        b1.speedup, b1.alloc_path_allocs_per_step
+    );
+
+    let json = json_summary(&config, new_tokens, &samples, &scaling, &decode);
     if let Some(path) = json_path {
         std::fs::write(&path, &json).expect("write json summary");
         eprintln!("json summary written to {path}");
@@ -208,9 +344,16 @@ fn main() {
     println!("{json}");
 
     // Self-checks: quantized serving must beat FP, the batched forward must
-    // make B=16 strictly faster than B=1 for the 2-bit model, and on a
-    // multi-core machine the worker pool must not make serving slower.
+    // make B=16 strictly faster than B=1 for the 2-bit model, the
+    // zero-allocation decode path must beat the allocating path at the
+    // B=1 latency shape, and on a multi-core machine the worker pool must
+    // not make serving slower.
     assert!(speedup > 1.0, "quantized serving must outperform FP");
+    assert!(
+        b1.speedup > 1.0,
+        "workspace decode path slower than allocating path at B=1: {:.2}x",
+        b1.speedup
+    );
     assert!(
         batch_gain > 1.0,
         "batched serving must outperform B=1: gain {batch_gain:.2}x"

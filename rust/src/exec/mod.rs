@@ -124,16 +124,30 @@ impl Exec {
     /// `body` runs concurrently on different ranges — it must only write
     /// state that is disjoint per chunk (see [`SendPtr`]).
     pub fn run_chunks(&self, n: usize, min_chunk: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+        self.run_chunks_indexed(n, min_chunk, &|_, lo, hi| body(lo, hi));
+    }
+
+    /// [`Self::run_chunks`] with the chunk's task index passed as the first
+    /// argument (`body(task, lo, hi)`, `task < threads()`). The index lets
+    /// each task claim a disjoint slot of caller-owned scratch (e.g. one
+    /// [`crate::quant::QuantScratch`] per worker) without any locking — the
+    /// partitioning is identical to [`Self::run_chunks`].
+    pub fn run_chunks_indexed(
+        &self,
+        n: usize,
+        min_chunk: usize,
+        body: &(dyn Fn(usize, usize, usize) + Sync),
+    ) {
         if n == 0 {
             return;
         }
         let Some(pool) = self.pool.as_deref() else {
-            body(0, n);
+            body(0, 0, n);
             return;
         };
         let tasks = pool.threads().min(n.div_ceil(min_chunk.max(1)));
         if tasks <= 1 {
-            body(0, n);
+            body(0, 0, n);
             return;
         }
         let base = n / tasks;
@@ -142,7 +156,7 @@ impl Exec {
         let mut lo = 0;
         for i in 0..tasks {
             let hi = lo + base + usize::from(i < rem);
-            jobs.push(Box::new(move || body(lo, hi)));
+            jobs.push(Box::new(move || body(i, lo, hi)));
             lo = hi;
         }
         pool.scope(jobs);
@@ -243,6 +257,33 @@ mod tests {
                 }
                 assert_eq!(expect_lo, n, "threads={threads} n={n} {got:?}");
                 assert!(got.len() <= threads.min(n));
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_chunks_match_plain_chunks_with_distinct_indices() {
+        for threads in [1usize, 3, 8] {
+            let exec = Exec::new(ExecConfig::with_threads(threads));
+            for n in [1usize, 7, 65] {
+                let plain = Mutex::new(Vec::new());
+                exec.run_chunks(n, 1, &|lo, hi| plain.lock().unwrap().push((lo, hi)));
+                let indexed = Mutex::new(Vec::new());
+                exec.run_chunks_indexed(n, 1, &|i, lo, hi| {
+                    indexed.lock().unwrap().push((i, lo, hi))
+                });
+                let mut plain = plain.into_inner().unwrap();
+                let mut indexed = indexed.into_inner().unwrap();
+                plain.sort_unstable();
+                indexed.sort_unstable_by_key(|&(_, lo, _)| lo);
+                // Same partition, indices distinct and < threads.
+                assert_eq!(plain.len(), indexed.len(), "threads={threads} n={n}");
+                let mut seen = std::collections::HashSet::new();
+                for (&(lo, hi), &(i, ilo, ihi)) in plain.iter().zip(&indexed) {
+                    assert_eq!((lo, hi), (ilo, ihi), "threads={threads} n={n}");
+                    assert!(i < threads, "threads={threads} n={n} i={i}");
+                    assert!(seen.insert(i), "duplicate task index {i}");
+                }
             }
         }
     }

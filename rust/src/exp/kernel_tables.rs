@@ -491,6 +491,74 @@ pub fn render_fused_sweep(rows: &[FusedSweepRow]) -> String {
     s
 }
 
+/// The scalar absolute-speed floor (the ROADMAP item open since the fused
+/// kernel refactor dropped scalar's const-generic specialization): the
+/// forced-**scalar** quantized GEMV against the dense f32 GEMV on the same
+/// shape. `kernel_ratio > 1` means the portable scalar backend alone still
+/// delivers the paper's quantized-beats-FP win — the floor that protects
+/// scalar-only hosts, where runtime dispatch has nothing better to offer.
+/// `online_ratio` additionally charges the online activation quantization
+/// (the full Table 6 request path), reported for context.
+#[derive(Clone, Debug)]
+pub struct ScalarFloorRow {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub fp_ms: f64,
+    pub scalar_ms: f64,
+    pub online_ms: f64,
+    /// `fp_ms / scalar_ms` — prequantized GEMV, the kernel floor (gated).
+    pub kernel_ratio: f64,
+    /// `fp_ms / online_ms` — quantize + GEMV (reported, not gated).
+    pub online_ratio: f64,
+}
+
+/// Measure the scalar floor at one shape (the bench gates it on the
+/// long-plane serving shape, where the win is structural).
+pub fn scalar_fp_floor(m: usize, n: usize, k: usize, samples: usize) -> ScalarFloorRow {
+    let mut rng = Rng::new(0xF100 + m as u64);
+    let w = rng.normal_vec(m * n, 0.05);
+    let x = rng.normal_vec(n, 0.5);
+    let prep = binary::PreparedGemm::with_kernel(
+        &RowQuantized::quantize(&w, m, n, k, Method::Alternating { t: 2 }),
+        Kernel::Scalar,
+    );
+    let xq = binary::quantize_activations(&x, k);
+    let mut y = vec![0.0f32; m];
+    let fp = bench_fn(&format!("floor fp {m}x{n}"), samples, || {
+        dense::gemv(&w, m, n, &x, &mut y);
+        black_box(&y);
+    });
+    let sc = bench_fn(&format!("floor scalar {m}x{n} k={k}"), samples, || {
+        prep.gemv(&xq, &mut y);
+        black_box(&y);
+    });
+    let on = bench_fn(&format!("floor scalar online {m}x{n} k={k}"), samples, || {
+        prep.online_gemv(&x, k, &mut y);
+        black_box(&y);
+    });
+    let (fp_ms, scalar_ms, online_ms) = (fp.median_ms(), sc.median_ms(), on.median_ms());
+    ScalarFloorRow {
+        m,
+        n,
+        k,
+        fp_ms,
+        scalar_ms,
+        online_ms,
+        kernel_ratio: if scalar_ms > 0.0 { fp_ms / scalar_ms } else { 1.0 },
+        online_ratio: if online_ms > 0.0 { fp_ms / online_ms } else { 1.0 },
+    }
+}
+
+pub fn render_scalar_floor(r: &ScalarFloorRow) -> String {
+    format!(
+        "Scalar absolute-speed floor (forced scalar vs dense f32 GEMV)\n\
+         {:>7}x{:<7}  {}/{} bits:  fp={:.3}ms  scalar={:.3}ms  online={:.3}ms  \
+         kernel {:.2}x  online {:.2}x\n",
+        r.m, r.n, r.k, r.k, r.fp_ms, r.scalar_ms, r.online_ms, r.kernel_ratio, r.online_ratio
+    )
+}
+
 /// The §4 cost-model table: theoretical γ vs measured acceleration.
 pub fn costmodel(shapes: &[(usize, usize)], measured: &[Table6Row]) -> String {
     let mut s = String::from("Cost model (§4): theoretical gamma vs measured acceleration\n");
@@ -579,6 +647,17 @@ mod tests {
         }
         let s = render_fused_sweep(&rows);
         assert!(s.contains("Predicted"), "{s}");
+    }
+
+    #[test]
+    fn scalar_floor_runs_and_renders() {
+        // Small shape just exercises the plumbing; the >1 floor itself is
+        // gated in the bench at the long-plane shape.
+        let r = scalar_fp_floor(64, 256, 2, 3);
+        assert!(r.fp_ms > 0.0 && r.scalar_ms > 0.0 && r.online_ms > 0.0);
+        assert!(r.kernel_ratio > 0.0 && r.online_ratio > 0.0);
+        let s = render_scalar_floor(&r);
+        assert!(s.contains("kernel"), "{s}");
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 use crate::exec::{Exec, SendPtr};
 use crate::kernels::backend::{self, Kernel, MAX_K};
+use crate::model::batch::OutputBatch;
 use crate::quant::{alternating, Method, Quantized, QuantizedBatch, RowQuantized};
 
 /// Quantize an activation vector online (paper setting: alternating, T=2).
@@ -309,6 +310,23 @@ impl PreparedGemm {
         }
     }
 
+    /// Batched GEMM into a caller-owned [`OutputBatch`], resized in place
+    /// (capacity kept) — the workspace-reuse entry point of the serving
+    /// path. Identical counts and reduction order to [`Self::gemm`]; only
+    /// the output's ownership differs. The per-row count scratch is already
+    /// stack-resident (`GEMM_BLOCK · MAX_K²` words inside the driver), so a
+    /// steady-state call performs no heap allocation.
+    pub fn gemm_into(&self, x: &QuantizedBatch, y: &mut OutputBatch) {
+        self.gemm_into_exec(x, y, &Exec::serial());
+    }
+
+    /// [`Self::gemm_into`] on an execution engine (row-sharded exactly like
+    /// [`Self::gemm_exec`], bit-exact for any thread count).
+    pub fn gemm_into_exec(&self, x: &QuantizedBatch, y: &mut OutputBatch, exec: &Exec) {
+        y.reset(x.batch, self.rows);
+        self.gemm_exec(x, y.data_mut(), exec);
+    }
+
     /// Quantize a row-major `batch × cols` activation matrix online, then
     /// run the batched GEMM (full request path for a timestep batch).
     pub fn online_gemm(&self, x: &[f32], batch: usize, k_x: usize, y: &mut [f32]) {
@@ -487,6 +505,24 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn gemm_into_matches_gemm_with_reused_output() {
+        let mut rng = Rng::new(108);
+        let (m, n) = (9, 100);
+        let w = rng.normal_vec(m * n, 0.3);
+        let prep = PreparedGemm::new(&RowQuantized::quantize(&w, m, n, 2, Method::Greedy));
+        let mut out = OutputBatch::zeros(0, 0);
+        for batch in [4usize, 1, 7] {
+            let xq = QuantizedBatch::quantize(&rng.normal_vec(batch * n, 1.0), batch, n, 2);
+            let mut want = vec![0.0f32; batch * m];
+            prep.gemm(&xq, &mut want);
+            prep.gemm_into(&xq, &mut out);
+            assert_eq!(out.batch(), batch);
+            assert_eq!(out.dim(), m);
+            assert_eq!(out.data(), &want[..], "batch={batch}");
         }
     }
 

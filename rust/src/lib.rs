@@ -74,6 +74,37 @@
 //! suite and the bench sweeps pick new backends up automatically via
 //! `Kernel::available()`.
 //!
+//! ## Zero-allocation serving workspaces
+//!
+//! The steady-state decode path allocates **nothing**. Every layer of the
+//! step has an `_into` variant that writes into caller-owned buffers which
+//! are resized in place (capacity kept): the fused quantizers
+//! (`quant::{greedy, lsq, bst, alternating}::*_into` over packed words +
+//! a per-task [`quant::QuantScratch`]),
+//! [`quant::QuantizedBatch::quantize_into_exec`] (reused plane/alpha
+//! buffers), [`kernels::binary::PreparedGemm::gemm_into`],
+//! [`model::LinearOp::forward_into_exec`] with a
+//! [`model::LinearWorkspace`], the cell steps
+//! (`LstmCell::step_batch_into_exec`, `GruCell::step_batch_into_exec`)
+//! with **double-buffered** state — the next state is computed into a
+//! spare buffer that must not alias the current one, then the two are
+//! swapped — and `RnnLm::step_batch_into_exec` threading one
+//! [`model::LmStepWorkspace`] through the whole timestep. The server's
+//! batcher holds these workspaces per process and reuses them across every
+//! prime + decode timestep group.
+//!
+//! The allocating APIs (`step_batch_exec`, `forward_exec`,
+//! `QuantizedBatch::quantize_with_exec`, …) are thin wrappers that run the
+//! same `_into` core with fresh buffers — **one code path**, so buffer
+//! reuse is bit-exact by construction. Use the wrappers for one-shot calls
+//! (trainers, evals, tests); use the `_into` APIs wherever a loop runs
+//! more than a handful of steps. Guarantees: after one warm-up call at the
+//! high-water shape, a steady-state `step_batch_into_exec` timestep
+//! performs zero heap allocations on the serial engine (pinned by a
+//! counting global allocator in `rust/tests/workspace_parity.rs`; the
+//! worker pool adds only its per-scope task boxes, and `k ≥ 5` code sorts
+//! may spill — neither is on the serving path).
+//!
 //! ## Quick tour
 //!
 //! ```

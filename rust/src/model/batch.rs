@@ -93,6 +93,25 @@ impl ActivationBatch {
     pub fn quantize_with(&self, k: usize, method: Method) -> QuantizedBatch {
         QuantizedBatch::quantize_with(&self.data, self.batch, self.n, k, method)
     }
+
+    /// Reshape in place to an all-zero `batch × n` buffer. Capacity is
+    /// kept, so a steady-state caller that resets to sizes at or below the
+    /// high-water mark allocates nothing — the workspace-reuse primitive of
+    /// the `_into` forward APIs. The zero fill is deliberate (a small
+    /// memset per step) so no reuse pattern can ever observe stale data,
+    /// even after a shrink-then-grow cycle.
+    pub fn reset(&mut self, batch: usize, n: usize) {
+        self.batch = batch;
+        self.n = n;
+        self.data.clear();
+        self.data.resize(batch * n, 0.0);
+    }
+}
+
+impl Default for ActivationBatch {
+    fn default() -> Self {
+        Self::zeros(0, 0)
+    }
 }
 
 /// Result buffer of a batched linear layer: `B` rows of `dim` outputs.
@@ -138,6 +157,21 @@ impl OutputBatch {
     /// Reinterpret as the next layer's input without copying.
     pub fn into_activations(self) -> ActivationBatch {
         ActivationBatch { batch: self.batch, n: self.dim, data: self.data }
+    }
+
+    /// Reshape in place to an all-zero `batch × dim` buffer (capacity kept;
+    /// see [`ActivationBatch::reset`]).
+    pub fn reset(&mut self, batch: usize, dim: usize) {
+        self.batch = batch;
+        self.dim = dim;
+        self.data.clear();
+        self.data.resize(batch * dim, 0.0);
+    }
+}
+
+impl Default for OutputBatch {
+    fn default() -> Self {
+        Self::zeros(0, 0)
     }
 }
 

@@ -32,6 +32,34 @@ pub enum EmbeddedBatch {
     Quant(QuantizedBatch),
 }
 
+/// Reusable batched-lookup buffer: holds whichever variant the table
+/// produces without reallocating across timesteps (the embedding leg of
+/// the serving workspaces). Fill with [`Embedding::lookup_batch_into`],
+/// read through [`Self::view`].
+#[derive(Default)]
+pub struct EmbeddedBatchBuf {
+    dense: ActivationBatch,
+    quant: QuantizedBatch,
+    is_quant: bool,
+}
+
+/// Borrowed view of a batched lookup result held in an [`EmbeddedBatchBuf`].
+pub enum EmbeddedBatchView<'a> {
+    Dense(&'a ActivationBatch),
+    Quant(&'a QuantizedBatch),
+}
+
+impl EmbeddedBatchBuf {
+    /// The variant the last [`Embedding::lookup_batch_into`] produced.
+    pub fn view(&self) -> EmbeddedBatchView<'_> {
+        if self.is_quant {
+            EmbeddedBatchView::Quant(&self.quant)
+        } else {
+            EmbeddedBatchView::Dense(&self.dense)
+        }
+    }
+}
+
 /// `vocab × dim` embedding table.
 #[derive(Clone, Debug)]
 pub enum Embedding {
@@ -89,24 +117,36 @@ impl Embedding {
 
     /// Row lookup for a whole token batch. Quantized tables hand back the
     /// packed rows directly (bit-identical to per-token [`Self::lookup`]).
+    /// A thin wrapper over [`Self::lookup_batch_into`] (one code path).
     pub fn lookup_batch(&self, ids: &[usize]) -> EmbeddedBatch {
+        let mut buf = EmbeddedBatchBuf::default();
+        self.lookup_batch_into(ids, &mut buf);
+        if buf.is_quant {
+            EmbeddedBatch::Quant(buf.quant)
+        } else {
+            EmbeddedBatch::Dense(buf.dense)
+        }
+    }
+
+    /// [`Self::lookup_batch`] into a reused buffer — bit-identical rows,
+    /// zero steady-state heap allocation (both variants reuse capacity).
+    pub fn lookup_batch_into(&self, ids: &[usize], out: &mut EmbeddedBatchBuf) {
         assert!(!ids.is_empty(), "empty token batch");
         match self {
             Embedding::Dense { w, dim, vocab } => {
-                let rows: Vec<&[f32]> = ids
-                    .iter()
-                    .map(|&id| {
-                        assert!(id < *vocab, "token {id} out of vocab {vocab}");
-                        &w[id * dim..(id + 1) * dim]
-                    })
-                    .collect();
-                EmbeddedBatch::Dense(ActivationBatch::from_rows(&rows))
+                out.dense.reset(ids.len(), *dim);
+                for (b, &id) in ids.iter().enumerate() {
+                    assert!(id < *vocab, "token {id} out of vocab {vocab}");
+                    out.dense.row_mut(b).copy_from_slice(&w[id * dim..(id + 1) * dim]);
+                }
+                out.is_quant = false;
             }
             Embedding::Quant { w } => {
                 for &id in ids {
                     assert!(id < w.rows, "token {id} out of vocab {}", w.rows);
                 }
-                EmbeddedBatch::Quant(QuantizedBatch::gather_rows(w, ids))
+                out.quant.gather_rows_into(w, ids);
+                out.is_quant = true;
             }
         }
     }

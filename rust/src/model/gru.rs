@@ -11,11 +11,24 @@
 //! ```
 
 use super::batch::{ActivationBatch, OutputBatch};
-use super::linear::{Linear, LinearOp, Precision};
+use super::linear::{Linear, LinearOp, LinearWorkspace, Precision};
 use super::math::sigmoid;
 use crate::exec::Exec;
 use crate::quant::QuantizedBatch;
 use crate::util::Rng;
+
+/// Reusable scratch for one batched GRU step (see
+/// [`super::lstm::LstmStepWorkspace`] — same contract: one instance per
+/// serving loop, buffers grow once and are reused, a warmed steady-state
+/// [`GruCell::step_batch_into_exec`] allocates nothing on the serial
+/// engine).
+#[derive(Default)]
+pub struct GruStepWorkspace {
+    gx: OutputBatch,
+    gh: OutputBatch,
+    wx_ws: LinearWorkspace,
+    wh_ws: LinearWorkspace,
+}
 
 /// One GRU layer.
 pub struct GruCell {
@@ -103,22 +116,40 @@ impl GruCell {
     /// [`Self::step_batch`] on an execution engine: the `W_x` and `W_h`
     /// gate products run as two independent pooled tasks, each row-sharding
     /// its GEMM across the same workers (nested scopes). Bit-exact vs
-    /// [`Self::step_batch`] for any thread count.
+    /// [`Self::step_batch`] for any thread count. A thin wrapper over
+    /// [`Self::step_batch_into_exec`] with fresh buffers (one code path).
     pub fn step_batch_exec(
         &self,
         x: &ActivationBatch,
         h: &ActivationBatch,
         exec: &Exec,
     ) -> ActivationBatch {
+        let mut out = ActivationBatch::default();
+        self.step_batch_into_exec(x, h, &mut out, exec, &mut GruStepWorkspace::default());
+        out
+    }
+
+    /// [`Self::step_batch_exec`] into caller-owned buffers: the next hidden
+    /// batch is written into `out` (resized in place — `out` must not alias
+    /// `h`: keep two state buffers and swap them between steps) and every
+    /// intermediate lives in `ws`, reused across steps. Bit-identical to
+    /// [`Self::step_batch_exec`]; once warm, a steady-state call performs
+    /// zero heap allocations on the serial engine.
+    pub fn step_batch_into_exec(
+        &self,
+        x: &ActivationBatch,
+        h: &ActivationBatch,
+        out: &mut ActivationBatch,
+        exec: &Exec,
+        ws: &mut GruStepWorkspace,
+    ) {
         assert_eq!(x.batch(), h.batch(), "batch mismatch");
-        let h3 = 3 * self.hidden;
-        let mut gx = OutputBatch::zeros(x.batch(), h3);
-        let mut gh = OutputBatch::zeros(x.batch(), h3);
+        let GruStepWorkspace { gx, gh, wx_ws, wh_ws } = ws;
         exec.join(
-            || self.wx.forward_exec(x, &mut gx, exec),
-            || self.wh.forward_exec(h, &mut gh, exec),
+            || self.wx.forward_into_exec(x, &mut *gx, exec, &mut *wx_ws),
+            || self.wh.forward_into_exec(h, &mut *gh, exec, &mut *wh_ws),
         );
-        self.combine_batch(&gx, &gh, h)
+        self.combine_batch_into(gx, gh, h, out);
     }
 
     /// Batched step from pre-quantized inputs.
@@ -134,15 +165,29 @@ impl GruCell {
         h: &ActivationBatch,
         exec: &Exec,
     ) -> ActivationBatch {
+        let mut out = ActivationBatch::default();
+        let mut ws = GruStepWorkspace::default();
+        self.step_batch_prequant_into_exec(xq, h, &mut out, exec, &mut ws);
+        out
+    }
+
+    /// [`Self::step_batch_prequant_exec`] into caller-owned buffers (see
+    /// [`Self::step_batch_into_exec`] for the double-buffer contract).
+    pub fn step_batch_prequant_into_exec(
+        &self,
+        xq: &QuantizedBatch,
+        h: &ActivationBatch,
+        out: &mut ActivationBatch,
+        exec: &Exec,
+        ws: &mut GruStepWorkspace,
+    ) {
         assert_eq!(xq.batch, h.batch(), "batch mismatch");
-        let h3 = 3 * self.hidden;
-        let mut gx = OutputBatch::zeros(xq.batch, h3);
-        let mut gh = OutputBatch::zeros(xq.batch, h3);
+        let GruStepWorkspace { gx, gh, wx_ws, wh_ws } = ws;
         exec.join(
-            || self.wx.forward_prequant_exec(xq, &mut gx, exec),
-            || self.wh.forward_exec(h, &mut gh, exec),
+            || self.wx.forward_prequant_into_exec(xq, &mut *gx, exec, &mut *wx_ws),
+            || self.wh.forward_into_exec(h, &mut *gh, exec, &mut *wh_ws),
         );
-        self.combine_batch(&gx, &gh, h)
+        self.combine_batch_into(gx, gh, h, out);
     }
 
     fn combine(&self, gx: &[f32], gh: &[f32], h: &[f32]) -> Vec<f32> {
@@ -151,12 +196,17 @@ impl GruCell {
         out
     }
 
-    fn combine_batch(&self, gx: &OutputBatch, gh: &OutputBatch, h: &ActivationBatch) -> ActivationBatch {
-        let mut out = ActivationBatch::zeros(h.batch(), self.hidden);
+    fn combine_batch_into(
+        &self,
+        gx: &OutputBatch,
+        gh: &OutputBatch,
+        h: &ActivationBatch,
+        out: &mut ActivationBatch,
+    ) {
+        out.reset(h.batch(), self.hidden);
         for b in 0..h.batch() {
             combine_row(self.hidden, &self.bias, gx.row(b), gh.row(b), h.row(b), out.row_mut(b));
         }
-        out
     }
 
     pub fn bytes(&self) -> usize {

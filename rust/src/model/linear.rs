@@ -15,7 +15,7 @@ use super::batch::{ActivationBatch, OutputBatch};
 use crate::exec::{Exec, SendPtr};
 use crate::kernels::binary::PreparedGemm;
 use crate::kernels::{binary, dense, Kernel};
-use crate::quant::{Method, Quantized, QuantizedBatch, RowQuantized};
+use crate::quant::{Method, QuantScratch, Quantized, QuantizedBatch, RowQuantized};
 
 /// Precision/bit-width policy for one linear layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,6 +23,25 @@ pub enum Precision {
     Full,
     /// Weights `k_w` bits, activations `k_a` bits (online).
     Quantized { k_w: usize, k_a: usize },
+}
+
+/// Reusable forward scratch for one linear layer: the quantized-activation
+/// batch a quantized forward writes into (instead of allocating a fresh
+/// [`QuantizedBatch`] per call) plus one quantizer scratch per worker task.
+/// Hold one per layer per serving loop; buffers grow to the high-water mark
+/// of the shapes they see and are then reused, so a warmed steady-state
+/// [`LinearOp::forward_into_exec`] performs zero heap allocations on the
+/// serial engine.
+#[derive(Default)]
+pub struct LinearWorkspace {
+    xq: QuantizedBatch,
+    scratches: Vec<QuantScratch>,
+}
+
+impl LinearWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// A batched linear map `y_b = W x_b` for every column `b` of the batch.
@@ -43,6 +62,38 @@ pub trait LinearOp {
     /// Batched forward from pre-quantized activations (e.g. rows looked up
     /// from a quantized embedding table — zero online quantization cost).
     fn forward_prequant_exec(&self, x: &QuantizedBatch, y: &mut OutputBatch, exec: &Exec);
+
+    /// Batched forward that reuses caller-owned buffers end to end: `y` is
+    /// resized in place (capacity kept) and quantized backends quantize `x`
+    /// into `ws` instead of allocating a fresh batch. Bit-identical to
+    /// [`Self::forward_exec`] for any engine; a warmed steady-state call
+    /// performs zero heap allocations on the serial engine
+    /// (`rust/tests/workspace_parity.rs`).
+    fn forward_into_exec(
+        &self,
+        x: &ActivationBatch,
+        y: &mut OutputBatch,
+        exec: &Exec,
+        ws: &mut LinearWorkspace,
+    ) {
+        let _ = ws;
+        y.reset(x.batch(), self.rows());
+        self.forward_exec(x, y, exec);
+    }
+
+    /// [`Self::forward_prequant_exec`] into a caller-owned (resized in
+    /// place) output buffer.
+    fn forward_prequant_into_exec(
+        &self,
+        x: &QuantizedBatch,
+        y: &mut OutputBatch,
+        exec: &Exec,
+        ws: &mut LinearWorkspace,
+    ) {
+        let _ = ws;
+        y.reset(x.batch, self.rows());
+        self.forward_prequant_exec(x, y, exec);
+    }
 
     /// Serial batched forward (`B = threads = 1` semantics of old).
     fn forward(&self, x: &ActivationBatch, y: &mut OutputBatch) {
@@ -190,6 +241,28 @@ impl LinearOp for QuantLinear {
         check_shapes(self, x.batch, x.n, y);
         self.w.gemm_exec(x, y.data_mut(), exec);
     }
+
+    /// The zero-allocation forward: activations quantize into the
+    /// workspace's reused `QuantizedBatch` (one scratch per worker task)
+    /// and the GEMM writes into the caller's resized output. Same
+    /// quantization method, counts, and reduction order as
+    /// [`LinearOp::forward_exec`] — bit-identical output.
+    fn forward_into_exec(
+        &self,
+        x: &ActivationBatch,
+        y: &mut OutputBatch,
+        exec: &Exec,
+        ws: &mut LinearWorkspace,
+    ) {
+        let LinearWorkspace { xq, scratches } = ws;
+        let tasks = exec.threads().min(x.batch()).max(1);
+        if scratches.len() < tasks {
+            scratches.resize_with(tasks, QuantScratch::default);
+        }
+        let method = Method::Alternating { t: 2 };
+        xq.quantize_into_exec(x.data(), x.batch(), x.dim(), self.k_a, method, exec, scratches);
+        self.w.gemm_into_exec(xq, y, exec);
+    }
 }
 
 /// A (possibly quantized) linear layer `y = W x (+ b)` — the policy-driven
@@ -325,6 +398,26 @@ impl LinearOp for Linear {
 
     fn forward_prequant_exec(&self, x: &QuantizedBatch, y: &mut OutputBatch, exec: &Exec) {
         self.op().forward_prequant_exec(x, y, exec)
+    }
+
+    fn forward_into_exec(
+        &self,
+        x: &ActivationBatch,
+        y: &mut OutputBatch,
+        exec: &Exec,
+        ws: &mut LinearWorkspace,
+    ) {
+        self.op().forward_into_exec(x, y, exec, ws)
+    }
+
+    fn forward_prequant_into_exec(
+        &self,
+        x: &QuantizedBatch,
+        y: &mut OutputBatch,
+        exec: &Exec,
+        ws: &mut LinearWorkspace,
+    ) {
+        self.op().forward_prequant_into_exec(x, y, exec, ws)
     }
 }
 
@@ -463,6 +556,39 @@ mod tests {
         }
         // Dense layers report no kernel.
         assert_eq!(Linear::new(wv, m, n, Precision::Full).kernel(), None);
+    }
+
+    #[test]
+    fn forward_into_bitmatches_forward_with_reused_workspace() {
+        use crate::exec::ExecConfig;
+        let mut rng = Rng::new(117);
+        let (m, n) = (21, 75);
+        let wv = rng.normal_vec(m * n, 0.3);
+        for layer in [
+            Linear::new(wv.clone(), m, n, Precision::Full),
+            Linear::new(wv.clone(), m, n, Precision::Quantized { k_w: 2, k_a: 2 }),
+        ] {
+            // One workspace + output reused across batches and engines.
+            let mut ws = LinearWorkspace::new();
+            let mut y_into = OutputBatch::zeros(0, 0);
+            for threads in [1usize, 4] {
+                let exec = Exec::new(ExecConfig::with_threads(threads));
+                for batch in [3usize, 1, 5] {
+                    let x = rng.normal_vec(batch * n, 1.0);
+                    let xb = ActivationBatch::from_flat(x, batch, n);
+                    let mut y = OutputBatch::zeros(batch, m);
+                    layer.forward_exec(&xb, &mut y, &exec);
+                    layer.forward_into_exec(&xb, &mut y_into, &exec, &mut ws);
+                    assert_eq!(y_into.data(), y.data(), "batch={batch} threads={threads}");
+                    // Prequant variant through the same reused output.
+                    let xq = xb.quantize(2);
+                    let mut p = OutputBatch::zeros(batch, m);
+                    layer.forward_prequant_exec(&xq, &mut p, &exec);
+                    layer.forward_prequant_into_exec(&xq, &mut y_into, &exec, &mut ws);
+                    assert_eq!(y_into.data(), p.data(), "prequant batch={batch}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -7,13 +7,12 @@
 //! perplexity-per-word on a held-out stream.
 
 use super::batch::{ActivationBatch, OutputBatch};
-use super::embedding::{Embedded, EmbeddedBatch, Embedding};
-use super::gru::GruCell;
-use super::linear::{Linear, LinearOp, Precision};
-use super::lstm::{LstmCell, LstmState, LstmStateBatch};
+use super::embedding::{Embedded, EmbeddedBatchBuf, EmbeddedBatchView, Embedding};
+use super::gru::{GruCell, GruStepWorkspace};
+use super::linear::{Linear, LinearOp, LinearWorkspace, Precision};
+use super::lstm::{LstmCell, LstmState, LstmStateBatch, LstmStepWorkspace};
 use super::math::log_softmax_at;
 use crate::exec::Exec;
-use crate::quant::QuantizedBatch;
 use crate::util::Rng;
 
 /// Which recurrent cell to use.
@@ -115,6 +114,31 @@ impl LmStateBatch {
             LmStateBatch::Lstm(layers) => layers.first().map_or(0, |l| l.batch),
             LmStateBatch::Gru(layers) => layers.first().map_or(0, |l| l.batch()),
         }
+    }
+}
+
+/// Reusable scratch threaded through [`RnnLm::step_batch_into_exec`]: the
+/// embedding-lookup buffer, one cell-step workspace (layers run
+/// sequentially, so one is enough), the spare state batch that double-
+/// buffers each layer's update (compute into the spare, swap it with the
+/// layer's live state), and the softmax workspace. Hold one per serving
+/// loop: buffers grow to the high-water batch size once, after which a
+/// warmed steady-state timestep performs **zero heap allocations** on the
+/// serial engine (`rust/tests/workspace_parity.rs` pins this with a
+/// counting global allocator).
+#[derive(Default)]
+pub struct LmStepWorkspace {
+    emb: EmbeddedBatchBuf,
+    lstm: LstmStepWorkspace,
+    gru: GruStepWorkspace,
+    spare_lstm: LstmStateBatch,
+    spare_gru: ActivationBatch,
+    softmax_ws: LinearWorkspace,
+}
+
+impl LmStepWorkspace {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -256,55 +280,106 @@ impl RnnLm {
     }
 
     /// Gather per-session states into one batch (the server's batching
-    /// boundary). All states must match this model's kind and shape.
+    /// boundary). All states must match this model's kind and shape. A thin
+    /// wrapper over [`Self::gather_states_into`] (one code path).
     pub fn gather_states(&self, states: &[&LmState]) -> LmStateBatch {
+        let mut out = match self.config.kind {
+            RnnKind::Lstm => LmStateBatch::Lstm(Vec::new()),
+            RnnKind::Gru => LmStateBatch::Gru(Vec::new()),
+        };
+        self.gather_states_into(states, &mut out);
+        out
+    }
+
+    /// [`Self::gather_states`] into a reused batch-state buffer (resized in
+    /// place, capacity kept): the server gathers every timestep group with
+    /// zero steady-state heap allocation. Identical values to
+    /// [`Self::gather_states`].
+    pub fn gather_states_into(&self, states: &[&LmState], out: &mut LmStateBatch) {
         assert!(!states.is_empty(), "empty state batch");
+        let (batch, h) = (states.len(), self.config.hidden);
         match self.config.kind {
-            RnnKind::Lstm => LmStateBatch::Lstm(
-                (0..self.config.layers)
-                    .map(|l| {
-                        let layer: Vec<&LstmState> = states
-                            .iter()
-                            .map(|s| match s {
-                                LmState::Lstm(v) => &v[l],
-                                LmState::Gru(_) => panic!("GRU state in an LSTM model"),
-                            })
-                            .collect();
-                        LstmStateBatch::from_states(&layer)
-                    })
-                    .collect(),
-            ),
-            RnnKind::Gru => LmStateBatch::Gru(
-                (0..self.config.layers)
-                    .map(|l| {
-                        let layer: Vec<&[f32]> = states
-                            .iter()
-                            .map(|s| match s {
-                                LmState::Gru(v) => v[l].as_slice(),
-                                LmState::Lstm(_) => panic!("LSTM state in a GRU model"),
-                            })
-                            .collect();
-                        ActivationBatch::from_rows(&layer)
-                    })
-                    .collect(),
-            ),
+            RnnKind::Lstm => {
+                if !matches!(out, LmStateBatch::Lstm(_)) {
+                    *out = LmStateBatch::Lstm(Vec::new());
+                }
+                let LmStateBatch::Lstm(layers) = out else { unreachable!() };
+                layers.resize_with(self.config.layers, LstmStateBatch::default);
+                for (l, lb) in layers.iter_mut().enumerate() {
+                    lb.reset(batch, h);
+                    for (b, s) in states.iter().enumerate() {
+                        let LmState::Lstm(v) = &**s else { panic!("GRU state in an LSTM model") };
+                        assert_eq!(v[l].h.len(), h, "state dimension mismatch");
+                        assert_eq!(v[l].c.len(), h, "state dimension mismatch");
+                        lb.h.row_mut(b).copy_from_slice(&v[l].h);
+                        lb.c[b * h..(b + 1) * h].copy_from_slice(&v[l].c);
+                    }
+                }
+            }
+            RnnKind::Gru => {
+                if !matches!(out, LmStateBatch::Gru(_)) {
+                    *out = LmStateBatch::Gru(Vec::new());
+                }
+                let LmStateBatch::Gru(layers) = out else { unreachable!() };
+                layers.resize_with(self.config.layers, ActivationBatch::default);
+                for (l, lb) in layers.iter_mut().enumerate() {
+                    lb.reset(batch, h);
+                    for (b, s) in states.iter().enumerate() {
+                        let LmState::Gru(v) = &**s else { panic!("LSTM state in a GRU model") };
+                        assert_eq!(v[l].len(), h, "state dimension mismatch");
+                        lb.row_mut(b).copy_from_slice(&v[l]);
+                    }
+                }
+            }
         }
     }
 
     /// Split a batched state back into per-session states (inverse of
-    /// [`Self::gather_states`]).
+    /// [`Self::gather_states`]). A thin wrapper over
+    /// [`Self::scatter_state_into`].
     pub fn scatter_states(&self, state: &LmStateBatch) -> Vec<LmState> {
-        let batch = state.batch();
-        (0..batch)
-            .map(|b| match state {
-                LmStateBatch::Lstm(layers) => {
-                    LmState::Lstm(layers.iter().map(|l| l.state(b)).collect())
-                }
-                LmStateBatch::Gru(layers) => {
-                    LmState::Gru(layers.iter().map(|l| l.row(b).to_vec()).collect())
-                }
+        (0..state.batch())
+            .map(|b| {
+                let mut out = self.zero_state();
+                self.scatter_state_into(state, b, &mut out);
+                out
             })
             .collect()
+    }
+
+    /// Copy column `b` of a batched state into an existing per-session
+    /// state in place — the zero-allocation inverse of one column of
+    /// [`Self::gather_states_into`] (the session buffers keep their
+    /// capacity across timestep groups). Identical values to
+    /// `scatter_states(state)[b]`.
+    pub fn scatter_state_into(&self, state: &LmStateBatch, b: usize, out: &mut LmState) {
+        let h = self.config.hidden;
+        let kind_matches = matches!(
+            (state, &*out),
+            (LmStateBatch::Lstm(_), LmState::Lstm(_)) | (LmStateBatch::Gru(_), LmState::Gru(_))
+        );
+        if !kind_matches {
+            *out = self.zero_state();
+        }
+        match (state, out) {
+            (LmStateBatch::Lstm(layers), LmState::Lstm(v)) => {
+                v.resize_with(layers.len(), || LstmState::zeros(h));
+                for (l, lb) in layers.iter().enumerate() {
+                    v[l].h.clear();
+                    v[l].h.extend_from_slice(lb.h.row(b));
+                    v[l].c.clear();
+                    v[l].c.extend_from_slice(&lb.c[b * lb.hidden..(b + 1) * lb.hidden]);
+                }
+            }
+            (LmStateBatch::Gru(layers), LmState::Gru(v)) => {
+                v.resize_with(layers.len(), || vec![0.0; h]);
+                for (l, lb) in layers.iter().enumerate() {
+                    v[l].clear();
+                    v[l].extend_from_slice(lb.row(b));
+                }
+            }
+            _ => unreachable!("state kind normalized above"),
+        }
     }
 
     /// One batched inference step: consume one token per session, update the
@@ -319,51 +394,120 @@ impl RnnLm {
     /// every cell and the softmax GEMM are row-sharded across `exec`'s
     /// workers. Bit-exact vs the serial [`Self::step_batch`] (and hence vs
     /// per-session [`Self::step`]) for any thread count — the worker pool
-    /// is invisible to clients.
+    /// is invisible to clients. A thin wrapper over
+    /// [`Self::step_batch_into_exec`] with fresh buffers (one code path).
     pub fn step_batch_exec(
         &self,
         tokens: &[usize],
         state: &mut LmStateBatch,
         exec: &Exec,
     ) -> OutputBatch {
+        let mut logits = OutputBatch::default();
+        self.step_batch_into_exec(tokens, state, &mut logits, exec, &mut LmStepWorkspace::new());
+        logits
+    }
+
+    /// [`Self::step_batch_exec`] through caller-owned buffers end to end —
+    /// the steady-state serving step. The logit matrix is written into
+    /// `logits` (resized in place), the embedding rows, quantized
+    /// activations, gate products, and softmax scratch all live in `ws`,
+    /// and each layer's state updates by double buffer: the new state is
+    /// computed into `ws`'s spare and swapped with the layer's live state —
+    /// no buffer is ever allocated or cloned. Bit-identical to
+    /// [`Self::step_batch_exec`] for any engine; once `ws`, `state`, and
+    /// `logits` are warm (one call at the high-water batch size), a
+    /// steady-state timestep performs **zero heap allocations** on the
+    /// serial engine (`rust/tests/workspace_parity.rs`).
+    pub fn step_batch_into_exec(
+        &self,
+        tokens: &[usize],
+        state: &mut LmStateBatch,
+        logits: &mut OutputBatch,
+        exec: &Exec,
+        ws: &mut LmStepWorkspace,
+    ) {
         let batch = tokens.len();
         assert!(batch > 0, "empty token batch");
         assert_eq!(batch, state.batch(), "token/state batch mismatch");
-        let (mut x, x_prequant): (Option<ActivationBatch>, Option<QuantizedBatch>) =
-            match self.embedding.lookup_batch(tokens) {
-                EmbeddedBatch::Dense(a) => (Some(a), None),
-                EmbeddedBatch::Quant(q) => (None, Some(q)),
-            };
+        self.embedding.lookup_batch_into(tokens, &mut ws.emb);
         for (l, cell) in self.cells.iter().enumerate() {
             match (cell, &mut *state) {
                 (Cell::Lstm(c), LmStateBatch::Lstm(states)) => {
-                    let s = match (&x, &x_prequant) {
-                        (None, Some(q)) if l == 0 => c.step_batch_prequant_exec(q, &states[l], exec),
-                        _ => c.step_batch_exec(x.as_ref().expect("dense input"), &states[l], exec),
-                    };
-                    x = Some(s.h.clone());
-                    states[l] = s;
+                    if l == 0 {
+                        match ws.emb.view() {
+                            EmbeddedBatchView::Quant(q) => c.step_batch_prequant_into_exec(
+                                q,
+                                &states[0],
+                                &mut ws.spare_lstm,
+                                exec,
+                                &mut ws.lstm,
+                            ),
+                            EmbeddedBatchView::Dense(a) => c.step_batch_into_exec(
+                                a,
+                                &states[0],
+                                &mut ws.spare_lstm,
+                                exec,
+                                &mut ws.lstm,
+                            ),
+                        }
+                    } else {
+                        // The previous layer's state already holds its NEW
+                        // hidden batch (swapped below) — it is this layer's
+                        // input, borrowed without a clone.
+                        let (done, rest) = states.split_at_mut(l);
+                        c.step_batch_into_exec(
+                            &done[l - 1].h,
+                            &rest[0],
+                            &mut ws.spare_lstm,
+                            exec,
+                            &mut ws.lstm,
+                        );
+                    }
+                    std::mem::swap(&mut states[l], &mut ws.spare_lstm);
                 }
                 (Cell::Gru(c), LmStateBatch::Gru(states)) => {
-                    let s = match (&x, &x_prequant) {
-                        (None, Some(q)) if l == 0 => c.step_batch_prequant_exec(q, &states[l], exec),
-                        _ => c.step_batch_exec(x.as_ref().expect("dense input"), &states[l], exec),
-                    };
-                    x = Some(s.clone());
-                    states[l] = s;
+                    if l == 0 {
+                        match ws.emb.view() {
+                            EmbeddedBatchView::Quant(q) => c.step_batch_prequant_into_exec(
+                                q,
+                                &states[0],
+                                &mut ws.spare_gru,
+                                exec,
+                                &mut ws.gru,
+                            ),
+                            EmbeddedBatchView::Dense(a) => c.step_batch_into_exec(
+                                a,
+                                &states[0],
+                                &mut ws.spare_gru,
+                                exec,
+                                &mut ws.gru,
+                            ),
+                        }
+                    } else {
+                        let (done, rest) = states.split_at_mut(l);
+                        c.step_batch_into_exec(
+                            &done[l - 1],
+                            &rest[0],
+                            &mut ws.spare_gru,
+                            exec,
+                            &mut ws.gru,
+                        );
+                    }
+                    std::mem::swap(&mut states[l], &mut ws.spare_gru);
                 }
                 _ => unreachable!("state kind matches cell kind by construction"),
             }
         }
-        let top = x.expect("at least one layer");
-        let mut logits = OutputBatch::zeros(batch, self.config.vocab);
-        self.softmax.forward_exec(&top, &mut logits, exec);
+        let top: &ActivationBatch = match &*state {
+            LmStateBatch::Lstm(states) => &states.last().expect("at least one layer").h,
+            LmStateBatch::Gru(states) => states.last().expect("at least one layer"),
+        };
+        self.softmax.forward_into_exec(top, logits, exec, &mut ws.softmax_ws);
         for b in 0..batch {
-            for (l, &bias) in logits.row_mut(b).iter_mut().zip(&self.softmax_bias) {
-                *l += bias;
+            for (lg, &bias) in logits.row_mut(b).iter_mut().zip(&self.softmax_bias) {
+                *lg += bias;
             }
         }
-        logits
     }
 
     /// One inference step: consume `token`, update `state`, return logits

@@ -7,7 +7,7 @@
 //! `W_x ∈ R^{4h×in}`, `W_h ∈ R^{4h×h}`.
 
 use super::batch::{ActivationBatch, OutputBatch};
-use super::linear::{Linear, LinearOp, Precision};
+use super::linear::{Linear, LinearOp, LinearWorkspace, Precision};
 use super::math::{sigmoid, dtanh};
 use crate::exec::Exec;
 use crate::quant::QuantizedBatch;
@@ -74,6 +74,35 @@ impl LstmStateBatch {
             c: self.c[b * self.hidden..(b + 1) * self.hidden].to_vec(),
         }
     }
+
+    /// Reshape in place to an all-zero `batch × hidden` state (capacity
+    /// kept — the double-buffer primitive of the `_into` step path).
+    pub fn reset(&mut self, batch: usize, hidden: usize) {
+        self.batch = batch;
+        self.hidden = hidden;
+        self.h.reset(batch, hidden);
+        self.c.clear();
+        self.c.resize(batch * hidden, 0.0);
+    }
+}
+
+impl Default for LstmStateBatch {
+    fn default() -> Self {
+        Self::zeros(0, 0)
+    }
+}
+
+/// Reusable scratch for one batched LSTM step: the two gate-product output
+/// buffers and one [`LinearWorkspace`] per gate product. One instance
+/// serves any batch size — buffers grow to the high-water mark and are
+/// reused, so a warmed steady-state [`LstmCell::step_batch_into_exec`]
+/// performs zero heap allocations on the serial engine.
+#[derive(Default)]
+pub struct LstmStepWorkspace {
+    gx: OutputBatch,
+    gh: OutputBatch,
+    wx_ws: LinearWorkspace,
+    wh_ws: LinearWorkspace,
 }
 
 /// One LSTM layer.
@@ -166,21 +195,41 @@ impl LstmCell {
     /// gate products run as two independent pooled tasks, and each one
     /// row-shards its GEMM across the same workers (nested scopes). The
     /// result is bit-exact vs [`Self::step_batch`] for any thread count.
+    /// A thin wrapper over [`Self::step_batch_into_exec`] with fresh
+    /// buffers (one code path).
     pub fn step_batch_exec(
         &self,
         x: &ActivationBatch,
         state: &LstmStateBatch,
         exec: &Exec,
     ) -> LstmStateBatch {
+        let mut out = LstmStateBatch::default();
+        self.step_batch_into_exec(x, state, &mut out, exec, &mut LstmStepWorkspace::default());
+        out
+    }
+
+    /// [`Self::step_batch_exec`] into caller-owned state and workspace
+    /// buffers: the next state is written into `out` (resized in place —
+    /// `out` must not alias `state`: keep two state buffers and swap them
+    /// between steps) and every intermediate lives in `ws`, reused across
+    /// steps. Bit-identical to [`Self::step_batch_exec`]; once warm, a
+    /// steady-state call performs zero heap allocations on the serial
+    /// engine (`rust/tests/workspace_parity.rs`).
+    pub fn step_batch_into_exec(
+        &self,
+        x: &ActivationBatch,
+        state: &LstmStateBatch,
+        out: &mut LstmStateBatch,
+        exec: &Exec,
+        ws: &mut LstmStepWorkspace,
+    ) {
         assert_eq!(x.batch(), state.batch, "batch mismatch");
-        let h4 = 4 * self.hidden;
-        let mut gx = OutputBatch::zeros(x.batch(), h4);
-        let mut gh = OutputBatch::zeros(x.batch(), h4);
+        let LstmStepWorkspace { gx, gh, wx_ws, wh_ws } = ws;
         exec.join(
-            || self.wx.forward_exec(x, &mut gx, exec),
-            || self.wh.forward_exec(&state.h, &mut gh, exec),
+            || self.wx.forward_into_exec(x, &mut *gx, exec, &mut *wx_ws),
+            || self.wh.forward_into_exec(&state.h, &mut *gh, exec, &mut *wh_ws),
         );
-        self.combine_batch(&gx, &gh, state)
+        self.combine_batch_into(gx, gh, state, out);
     }
 
     /// Batched step from pre-quantized inputs (a quantized embedding's token
@@ -197,15 +246,29 @@ impl LstmCell {
         state: &LstmStateBatch,
         exec: &Exec,
     ) -> LstmStateBatch {
+        let mut out = LstmStateBatch::default();
+        let mut ws = LstmStepWorkspace::default();
+        self.step_batch_prequant_into_exec(xq, state, &mut out, exec, &mut ws);
+        out
+    }
+
+    /// [`Self::step_batch_prequant_exec`] into caller-owned buffers (see
+    /// [`Self::step_batch_into_exec`] for the double-buffer contract).
+    pub fn step_batch_prequant_into_exec(
+        &self,
+        xq: &QuantizedBatch,
+        state: &LstmStateBatch,
+        out: &mut LstmStateBatch,
+        exec: &Exec,
+        ws: &mut LstmStepWorkspace,
+    ) {
         assert_eq!(xq.batch, state.batch, "batch mismatch");
-        let h4 = 4 * self.hidden;
-        let mut gx = OutputBatch::zeros(xq.batch, h4);
-        let mut gh = OutputBatch::zeros(xq.batch, h4);
+        let LstmStepWorkspace { gx, gh, wx_ws, wh_ws } = ws;
         exec.join(
-            || self.wx.forward_prequant_exec(xq, &mut gx, exec),
-            || self.wh.forward_exec(&state.h, &mut gh, exec),
+            || self.wx.forward_prequant_into_exec(xq, &mut *gx, exec, &mut *wx_ws),
+            || self.wh.forward_into_exec(&state.h, &mut *gh, exec, &mut *wh_ws),
         );
-        self.combine_batch(&gx, &gh, state)
+        self.combine_batch_into(gx, gh, state, out);
     }
 
     fn combine(&self, gx: &[f32], gh: &[f32], state: &LstmState) -> LstmState {
@@ -214,9 +277,15 @@ impl LstmCell {
         out
     }
 
-    fn combine_batch(&self, gx: &OutputBatch, gh: &OutputBatch, state: &LstmStateBatch) -> LstmStateBatch {
+    fn combine_batch_into(
+        &self,
+        gx: &OutputBatch,
+        gh: &OutputBatch,
+        state: &LstmStateBatch,
+        out: &mut LstmStateBatch,
+    ) {
         let h = self.hidden;
-        let mut out = LstmStateBatch::zeros(state.batch, h);
+        out.reset(state.batch, h);
         for b in 0..state.batch {
             combine_row(
                 h,
@@ -228,7 +297,6 @@ impl LstmCell {
                 &mut out.c[b * h..(b + 1) * h],
             );
         }
-        out
     }
 
     pub fn bytes(&self) -> usize {

@@ -11,6 +11,13 @@
 //! shared bit-planes), layers implement [`linear::LinearOp`], and the
 //! recurrent cells expose `step_batch` over `*StateBatch` state. The
 //! per-vector `step`/`matvec` entry points remain as exact `B = 1` paths.
+//!
+//! It is also **workspace-first** on the serving path: every layer offers a
+//! `*_into_exec` variant that writes into caller-owned, resized-in-place
+//! buffers ([`linear::LinearWorkspace`], the cell step workspaces,
+//! [`lm::LmStepWorkspace`]), so a warmed steady-state decode timestep
+//! performs zero heap allocations. The allocating APIs are thin wrappers
+//! over the `_into` core — one code path, bit-exact by construction.
 
 pub mod batch;
 pub mod cnn;
@@ -23,5 +30,5 @@ pub mod math;
 pub mod mlp;
 
 pub use batch::{ActivationBatch, OutputBatch};
-pub use linear::{Linear, LinearOp};
-pub use lm::{LmConfig, RnnKind, RnnLm};
+pub use linear::{Linear, LinearOp, LinearWorkspace};
+pub use lm::{LmConfig, LmStepWorkspace, RnnKind, RnnLm};

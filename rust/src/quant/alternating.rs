@@ -10,13 +10,41 @@
 //!
 //! Cost (paper §3): `2Tk²n` binary + `2(T+1)kn` non-binary operations.
 
-use super::{bst, greedy, lsq, Quantized};
+use super::{bst, greedy, lsq, scratch::QuantScratch, Quantized};
+
+/// k-bit alternating quantization written directly into caller-provided
+/// buffers: `alphas` (length `k`) and `planes` (`k · ⌈n/64⌉` packed words,
+/// layout `[plane][word]`). This is the serving hot path — the online
+/// activation quantization of every timestep — fused end to end: greedy
+/// init, then `t` cycles of LSQ refit + BST re-assignment, all on the same
+/// packed words with no intermediate `Quantized` and no `PackedBits`
+/// round-trip. Bit-identical to [`quantize`] (the allocating API is a thin
+/// wrapper over this core) and allocation-free once `scratch` is warm.
+pub fn quantize_into(
+    w: &[f32],
+    k: usize,
+    t: usize,
+    alphas: &mut [f32],
+    planes: &mut [u64],
+    scratch: &mut QuantScratch,
+) {
+    greedy::quantize_into(w, k, alphas, planes, scratch);
+    for _ in 0..t {
+        // (a) coefficients ← least squares (Eq. 5).
+        lsq::refit_into(w, k, alphas, planes, scratch);
+        // (b) codes ← BST assignment (Algorithm 1).
+        bst::assign_into(w, alphas, planes, scratch);
+    }
+}
 
 /// k-bit alternating quantization with `t` cycles (paper setting: `t = 2`).
 pub fn quantize(w: &[f32], k: usize, t: usize) -> Quantized {
-    let mut q = greedy::quantize(w, k);
-    alternate_in_place(w, &mut q, t);
-    q
+    let n = w.len();
+    let wpp = n.div_ceil(64);
+    let mut alphas = vec![0.0f32; k];
+    let mut words = vec![0u64; k * wpp];
+    quantize_into(w, k, t, &mut alphas, &mut words, &mut QuantScratch::default());
+    Quantized { n, alphas, planes: super::planes_from_words(n, k, &words) }
 }
 
 /// Run `t` alternating cycles on an existing quantization (e.g. to continue

@@ -15,7 +15,7 @@
 //! alphas: [b][s]         — α_s of column b
 //! ```
 
-use super::{quantize, Method, PackedBits, Quantized};
+use super::{quantize_row_into, Method, PackedBits, QuantScratch, Quantized};
 use crate::exec::{Exec, SendPtr};
 
 /// `B` activation vectors of dimension `n`, each quantized to `k` bits,
@@ -56,9 +56,8 @@ impl QuantizedBatch {
         Self::quantize_with_exec(x, batch, n, k, method, &Exec::serial())
     }
 
-    /// Method + engine variant. Each row `b` writes only its own
-    /// `data[b·k·wpp ..]` / `alphas[b·k ..]` ranges — disjoint per row, so
-    /// row sharding is race-free and bit-exact by construction.
+    /// Method + engine variant — a thin wrapper over
+    /// [`Self::quantize_into_exec`] with fresh buffers (one code path).
     pub fn quantize_with_exec(
         x: &[f32],
         batch: usize,
@@ -67,30 +66,77 @@ impl QuantizedBatch {
         method: Method,
         exec: &Exec,
     ) -> Self {
+        let mut out = QuantizedBatch::empty();
+        let mut scratches: Vec<QuantScratch> = Vec::new();
+        scratches.resize_with(exec.threads().min(batch).max(1), QuantScratch::default);
+        out.quantize_into_exec(x, batch, n, k, method, exec, &mut scratches);
+        out
+    }
+
+    /// An empty batch — the starting point for the `_into` buffer-reuse
+    /// APIs ([`Self::quantize_into_exec`], [`Self::gather_rows_into`]).
+    pub fn empty() -> Self {
+        QuantizedBatch {
+            batch: 0,
+            n: 0,
+            k: 0,
+            words_per_plane: 0,
+            data: Vec::new(),
+            alphas: Vec::new(),
+        }
+    }
+
+    /// Quantize a row-major `batch × n` activation matrix into this batch's
+    /// existing `data`/`alphas` buffers, resizing in place (capacity is
+    /// kept, so a steady-state serving loop re-quantizes every timestep
+    /// with **zero heap allocations** once the buffers and `scratches` are
+    /// warm). Each row `b` writes only its own `data[b·k·wpp ..]` /
+    /// `alphas[b·k ..]` ranges — disjoint per row, so row sharding is
+    /// race-free and bit-exact by construction; each worker task uses its
+    /// own scratch slot (`scratches.len()` must cover the task count, at
+    /// most `exec.threads()`). Bit-identical to [`Self::quantize_with_exec`]
+    /// for every method and thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn quantize_into_exec(
+        &mut self,
+        x: &[f32],
+        batch: usize,
+        n: usize,
+        k: usize,
+        method: Method,
+        exec: &Exec,
+        scratches: &mut [QuantScratch],
+    ) {
         assert_eq!(x.len(), batch * n, "batch shape mismatch");
         // Ternary always emits two planes regardless of `k` (see RowQuantized).
         let kk = if matches!(method, Method::Ternary) { 2 } else { k };
         let wpp = n.div_ceil(64);
-        let mut data = vec![0u64; batch * kk * wpp];
-        let mut alphas = vec![0.0f32; batch * kk];
-        let dptr = SendPtr::new(&mut data);
-        let aptr = SendPtr::new(&mut alphas);
-        let (dptr, aptr) = (&dptr, &aptr);
-        exec.run_chunks(batch, 1, &|b0, b1| {
+        let tasks = exec.threads().min(batch).max(1);
+        assert!(scratches.len() >= tasks, "need one QuantScratch per worker task ({tasks})");
+        self.batch = batch;
+        self.n = n;
+        self.k = kk;
+        self.words_per_plane = wpp;
+        self.data.clear();
+        self.data.resize(batch * kk * wpp, 0);
+        self.alphas.clear();
+        self.alphas.resize(batch * kk, 0.0);
+        let dptr = SendPtr::new(&mut self.data);
+        let aptr = SendPtr::new(&mut self.alphas);
+        let sptr = SendPtr::new(scratches);
+        let (dptr, aptr, sptr) = (&dptr, &aptr, &sptr);
+        exec.run_chunks_indexed(batch, 1, &|task, b0, b1| {
+            // SAFETY: each task owns scratch slot `task` exclusively (task
+            // indices are distinct and below the asserted scratch count).
+            let scratch = unsafe { &mut sptr.slice_mut(task, 1)[0] };
             for b in b0..b1 {
-                let q = quantize(&x[b * n..(b + 1) * n], k, method);
-                debug_assert_eq!(q.k(), kk);
                 // SAFETY: row b's coefficient and plane ranges are written
                 // by exactly this task (rows are disjoint across chunks).
                 let arow = unsafe { aptr.slice_mut(b * kk, kk) };
-                arow.copy_from_slice(&q.alphas);
-                for (s, plane) in q.planes.iter().enumerate() {
-                    let drow = unsafe { dptr.slice_mut((b * kk + s) * wpp, wpp) };
-                    drow.copy_from_slice(plane.words());
-                }
+                let drow = unsafe { dptr.slice_mut(b * kk * wpp, kk * wpp) };
+                quantize_row_into(&x[b * n..(b + 1) * n], k, method, arow, drow, scratch);
             }
         });
-        QuantizedBatch { batch, n, k: kk, words_per_plane: wpp, data, alphas }
     }
 
     /// Pack already-quantized vectors (e.g. embedding rows looked up for a
@@ -118,19 +164,30 @@ impl QuantizedBatch {
     /// no intermediate [`Quantized`] allocations. Bit-identical to
     /// `from_rows(&ids.map(|id| w.row(id)))`.
     pub fn gather_rows(w: &super::RowQuantized, ids: &[usize]) -> Self {
+        let mut out = QuantizedBatch::empty();
+        out.gather_rows_into(w, ids);
+        out
+    }
+
+    /// [`Self::gather_rows`] into this batch's existing buffers (capacity
+    /// kept — a steady-state decode loop gathers every timestep's embedding
+    /// rows with zero heap allocations).
+    pub fn gather_rows_into(&mut self, w: &super::RowQuantized, ids: &[usize]) {
         assert!(!ids.is_empty(), "empty batch");
         let (n, k) = (w.cols, w.k);
-        let wpp = n.div_ceil(64);
-        let mut data = Vec::with_capacity(ids.len() * k * wpp);
-        let mut alphas = Vec::with_capacity(ids.len() * k);
+        self.batch = ids.len();
+        self.n = n;
+        self.k = k;
+        self.words_per_plane = n.div_ceil(64);
+        self.data.clear();
+        self.alphas.clear();
         for &id in ids {
             assert!(id < w.rows, "row {id} out of bounds ({} rows)", w.rows);
-            alphas.extend_from_slice(&w.alphas[id * k..(id + 1) * k]);
+            self.alphas.extend_from_slice(&w.alphas[id * k..(id + 1) * k]);
             for s in 0..k {
-                data.extend_from_slice(w.planes[id * k + s].words());
+                self.data.extend_from_slice(w.planes[id * k + s].words());
             }
         }
-        QuantizedBatch { batch: ids.len(), n, k, words_per_plane: wpp, data, alphas }
     }
 
     /// The words of plane `s` of column `b`.
@@ -160,18 +217,43 @@ impl QuantizedBatch {
     }
 
     /// Dense reconstruction of the whole batch, row-major `batch × n`.
+    ///
+    /// Word-wise direct expansion over the packed batch buffer (one shift
+    /// per element), plane-major per column in ascending element order —
+    /// the same accumulation order as `column(b).dequantize()`, so the
+    /// output is bit-identical to the old clone-every-column path without
+    /// materializing any intermediate `Quantized`.
     pub fn dequantize(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.batch * self.n);
+        let mut out = vec![0.0f32; self.batch * self.n];
         for b in 0..self.batch {
-            out.extend(self.column(b).dequantize());
+            let o = &mut out[b * self.n..(b + 1) * self.n];
+            for s in 0..self.k {
+                let alpha = self.alpha(b, s);
+                for (wi, &word) in self.plane_words(b, s).iter().enumerate() {
+                    let base = wi * 64;
+                    let live = 64.min(self.n - base);
+                    let mut bits = word;
+                    for v in o[base..base + live].iter_mut() {
+                        *v += if bits & 1 == 1 { alpha } else { -alpha };
+                        bits >>= 1;
+                    }
+                }
+            }
         }
         out
+    }
+}
+
+impl Default for QuantizedBatch {
+    fn default() -> Self {
+        Self::empty()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::quantize;
     use crate::util::Rng;
 
     #[test]
@@ -237,5 +319,45 @@ mod tests {
     #[should_panic(expected = "batch shape mismatch")]
     fn shape_mismatch_panics() {
         QuantizedBatch::quantize(&[0.0; 10], 3, 4, 2);
+    }
+
+    #[test]
+    fn quantize_into_reuse_matches_fresh_across_shapes() {
+        // One reused batch + scratch quantizes shrinking/growing shapes and
+        // must match a fresh quantization every time (no stale state).
+        let mut rng = Rng::new(59);
+        let mut reused = QuantizedBatch::empty();
+        let mut scratches = vec![QuantScratch::default()];
+        let exec = Exec::serial();
+        for &(batch, n, k) in &[(5usize, 70usize, 2usize), (1, 40, 3), (8, 70, 1), (3, 129, 4)] {
+            let x = rng.normal_vec(batch * n, 0.6);
+            let method = Method::Alternating { t: 2 };
+            reused.quantize_into_exec(&x, batch, n, k, method, &exec, &mut scratches);
+            let fresh = QuantizedBatch::quantize_with(&x, batch, n, k, method);
+            assert_eq!(reused.batch, fresh.batch, "B={batch} n={n} k={k}");
+            assert_eq!(reused.k, fresh.k, "B={batch} n={n} k={k}");
+            assert_eq!(reused.alphas, fresh.alphas, "B={batch} n={n} k={k}");
+            assert_eq!(reused.data, fresh.data, "B={batch} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn gather_rows_into_reuse_matches_gather_rows() {
+        let mut rng = Rng::new(60);
+        let w = crate::quant::RowQuantized::quantize(
+            &rng.normal_vec(6 * 70, 0.4),
+            6,
+            70,
+            2,
+            Method::Alternating { t: 2 },
+        );
+        let mut reused = QuantizedBatch::empty();
+        for ids in [&[0usize, 5, 2][..], &[1usize][..], &[3usize, 3, 3, 0][..]] {
+            reused.gather_rows_into(&w, ids);
+            let fresh = QuantizedBatch::gather_rows(&w, ids);
+            assert_eq!(reused.alphas, fresh.alphas, "{ids:?}");
+            assert_eq!(reused.data, fresh.data, "{ids:?}");
+            assert_eq!(reused.batch, fresh.batch, "{ids:?}");
+        }
     }
 }

@@ -7,6 +7,7 @@
 //! binary search against the midpoints of adjacent codes).
 
 use super::packed::PackedBits;
+use super::scratch::QuantScratch;
 
 /// A composite code: its real value and the sign pattern that produced it
 /// (`pattern` bit `i` set ⇔ `bᵢ = +1`).
@@ -16,16 +17,16 @@ pub struct Code {
     pub pattern: u32,
 }
 
-/// Enumerate all `2^k` composite codes `Σᵢ ±αᵢ` in ascending order.
-///
-/// Coefficients may be negative or unordered (they come out of an
-/// unconstrained least-squares refit); enumeration + sort handles any sign.
-/// Panics if `k > 16` (the representation is pointless beyond a few bits).
-pub fn enumerate_codes(alphas: &[f32]) -> Vec<Code> {
+/// [`enumerate_codes`] into a reused buffer (cleared first). The sort is
+/// the same stable total-order sort as before, so tie patterns land in
+/// enumeration order; for the paper's `k ≤ 4` the `2^k ≤ 16` slice sorts by
+/// insertion with **no allocation**.
+pub fn enumerate_codes_into(alphas: &[f32], codes: &mut Vec<Code>) {
     let k = alphas.len();
     assert!(k >= 1 && k <= 16, "k = {k} out of range");
     let m = 1usize << k;
-    let mut codes = Vec::with_capacity(m);
+    codes.clear();
+    codes.reserve(m);
     for pattern in 0..m as u32 {
         let mut v = 0.0f32;
         for (i, &a) in alphas.iter().enumerate() {
@@ -38,16 +39,34 @@ pub fn enumerate_codes(alphas: &[f32]) -> Vec<Code> {
         codes.push(Code { value: v, pattern });
     }
     codes.sort_by(|a, b| a.value.total_cmp(&b.value));
+}
+
+/// Enumerate all `2^k` composite codes `Σᵢ ±αᵢ` in ascending order.
+///
+/// Coefficients may be negative or unordered (they come out of an
+/// unconstrained least-squares refit); enumeration + sort handles any sign.
+/// Panics if `k > 16` (the representation is pointless beyond a few bits).
+pub fn enumerate_codes(alphas: &[f32]) -> Vec<Code> {
+    let mut codes = Vec::new();
+    enumerate_codes_into(alphas, &mut codes);
     codes
+}
+
+/// [`midpoints`] into a reused buffer (cleared first).
+pub fn midpoints_into(codes: &[Code], mids: &mut Vec<f32>) {
+    mids.clear();
+    mids.reserve(codes.len().saturating_sub(1));
+    for w in codes.windows(2) {
+        mids.push(0.5 * (w[0].value + w[1].value));
+    }
 }
 
 /// The decision boundaries: midpoints of adjacent sorted codes
 /// (`(vᵢ + vᵢ₊₁)/2`, Fig. 1 of the paper).
 pub fn midpoints(codes: &[Code]) -> Vec<f32> {
-    codes
-        .windows(2)
-        .map(|w| 0.5 * (w[0].value + w[1].value))
-        .collect()
+    let mut mids = Vec::new();
+    midpoints_into(codes, &mut mids);
+    mids
 }
 
 /// Assign one entry: index into `codes` of the nearest composite code.
@@ -60,23 +79,38 @@ pub fn assign_one(w: f32, mids: &[f32]) -> usize {
     mids.partition_point(|&mp| w >= mp)
 }
 
+/// [`assign`] written directly into caller-provided packed plane words
+/// (`k · ⌈n/64⌉` words, layout `[plane][word]`, cleared first so tail bits
+/// stay zero). Bit-identical to [`assign`] — the allocating API is a thin
+/// wrapper over this core — and allocation-free once `scratch` is warm
+/// (for `k ≤ 4`; see [`enumerate_codes_into`]).
+pub fn assign_into(w: &[f32], alphas: &[f32], planes: &mut [u64], scratch: &mut QuantScratch) {
+    let k = alphas.len();
+    let wpp = w.len().div_ceil(64);
+    assert_eq!(planes.len(), k * wpp, "plane buffer size mismatch");
+    enumerate_codes_into(alphas, &mut scratch.codes);
+    midpoints_into(&scratch.codes, &mut scratch.mids);
+    planes.fill(0);
+    for (j, &x) in w.iter().enumerate() {
+        let idx = assign_one(x, &scratch.mids);
+        let pattern = scratch.codes[idx].pattern;
+        let (wi, bit) = (j / 64, 1u64 << (j % 64));
+        for i in 0..k {
+            if (pattern >> i) & 1 == 1 {
+                planes[i * wpp + wi] |= bit;
+            }
+        }
+    }
+}
+
 /// Assign every entry of `w` to its optimal code and return the `k` binary
 /// planes (bit `1 → +1`), given fixed coefficients `alphas`.
 pub fn assign(w: &[f32], alphas: &[f32]) -> Vec<PackedBits> {
     let k = alphas.len();
-    let codes = enumerate_codes(alphas);
-    let mids = midpoints(&codes);
-    let mut planes = vec![PackedBits::zeros(w.len()); k];
-    for (j, &x) in w.iter().enumerate() {
-        let idx = assign_one(x, &mids);
-        let pattern = codes[idx].pattern;
-        for (i, plane) in planes.iter_mut().enumerate() {
-            if (pattern >> i) & 1 == 1 {
-                plane.set(j, true);
-            }
-        }
-    }
-    planes
+    let wpp = w.len().div_ceil(64);
+    let mut words = vec![0u64; k * wpp];
+    assign_into(w, alphas, &mut words, &mut QuantScratch::default());
+    super::planes_from_words(w.len(), k, &words)
 }
 
 /// Reconstruction from planes + alphas at a single index (test helper).

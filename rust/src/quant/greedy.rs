@@ -3,6 +3,7 @@
 //! `αᵢ = ‖rᵢ₋₁‖₁ / n`, `bᵢ = sign(rᵢ₋₁)`.
 
 use super::packed::PackedBits;
+use super::scratch::QuantScratch;
 use super::Quantized;
 
 /// One greedy step on a residue: the closed-form k=1 optimum
@@ -17,20 +18,63 @@ pub(crate) fn step(residue: &[f32]) -> (f32, PackedBits) {
     (alpha, PackedBits::from_signs(residue))
 }
 
+/// One greedy step packed directly into a caller-provided plane word slice:
+/// the same coefficient and the same sign packing as [`step`] (bit set ⇔
+/// residue ≥ 0, matching `PackedBits::from_signs`), no `PackedBits`
+/// allocation.
+fn step_into(residue: &[f32], plane: &mut [u64]) -> f32 {
+    let n = residue.len();
+    let alpha = if n == 0 {
+        0.0
+    } else {
+        residue.iter().map(|x| x.abs()).sum::<f32>() / n as f32
+    };
+    plane.fill(0);
+    for (j, &x) in residue.iter().enumerate() {
+        if x >= 0.0 {
+            plane[j / 64] |= 1u64 << (j % 64);
+        }
+    }
+    alpha
+}
+
+/// k-bit greedy quantization written directly into caller-provided buffers:
+/// `alphas` (length `k`) and `planes` (`k · ⌈n/64⌉` words, layout
+/// `[plane][word]`, tail bits kept zero). Bit-identical to [`quantize`] —
+/// the allocating API is a thin wrapper over this core — and allocation-free
+/// once `scratch` is warm.
+pub fn quantize_into(
+    w: &[f32],
+    k: usize,
+    alphas: &mut [f32],
+    planes: &mut [u64],
+    scratch: &mut QuantScratch,
+) {
+    let n = w.len();
+    let wpp = n.div_ceil(64);
+    assert_eq!(alphas.len(), k, "alpha buffer size mismatch");
+    assert_eq!(planes.len(), k * wpp, "plane buffer size mismatch");
+    scratch.residue.clear();
+    scratch.residue.extend_from_slice(w);
+    for (t, alpha_out) in alphas.iter_mut().enumerate() {
+        let plane = &mut planes[t * wpp..(t + 1) * wpp];
+        let alpha = step_into(&scratch.residue, plane);
+        for (j, r) in scratch.residue.iter_mut().enumerate() {
+            let sign = if (plane[j / 64] >> (j % 64)) & 1 == 1 { 1.0 } else { -1.0 };
+            *r -= alpha * sign;
+        }
+        *alpha_out = alpha;
+    }
+}
+
 /// k-bit greedy quantization.
 pub fn quantize(w: &[f32], k: usize) -> Quantized {
-    let mut residue = w.to_vec();
-    let mut alphas = Vec::with_capacity(k);
-    let mut planes = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (alpha, plane) = step(&residue);
-        for (j, r) in residue.iter_mut().enumerate() {
-            *r -= alpha * plane.sign(j);
-        }
-        alphas.push(alpha);
-        planes.push(plane);
-    }
-    Quantized { n: w.len(), alphas, planes }
+    let n = w.len();
+    let wpp = n.div_ceil(64);
+    let mut alphas = vec![0.0f32; k];
+    let mut words = vec![0u64; k * wpp];
+    quantize_into(w, k, &mut alphas, &mut words, &mut QuantScratch::default());
+    Quantized { n, alphas, planes: super::planes_from_words(n, k, &words) }
 }
 
 #[cfg(test)]
@@ -77,5 +121,26 @@ mod tests {
         let w = vec![0.37f32; 129];
         let q = quantize(&w, 1);
         assert!(q.sq_error(&w) < 1e-10);
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_with_dirty_buffers() {
+        let mut rng = Rng::new(32);
+        let mut scratch = QuantScratch::default();
+        for n in [1usize, 64, 70, 130] {
+            for k in 1..=4 {
+                let w = rng.normal_vec(n, 0.7);
+                let wpp = n.div_ceil(64);
+                // Dirty buffers: stale garbage must be fully overwritten.
+                let mut alphas = vec![9.9f32; k];
+                let mut words = vec![u64::MAX; k * wpp];
+                quantize_into(&w, k, &mut alphas, &mut words, &mut scratch);
+                let q = quantize(&w, k);
+                assert_eq!(alphas, q.alphas, "n={n} k={k}");
+                for (t, p) in q.planes.iter().enumerate() {
+                    assert_eq!(&words[t * wpp..(t + 1) * wpp], p.words(), "n={n} k={k} t={t}");
+                }
+            }
+        }
     }
 }

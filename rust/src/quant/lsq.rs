@@ -8,36 +8,141 @@
 //! two planes coincide, e.g. after aggressive re-assignment).
 
 use super::packed::PackedBits;
+use super::scratch::QuantScratch;
 
-/// Solve the k×k linear system `G x = c` in-place. Returns `None` when the
-/// matrix is numerically singular even after pivoting.
-fn solve(mut g: Vec<Vec<f64>>, mut c: Vec<f64>) -> Option<Vec<f64>> {
-    let k = c.len();
+/// Solve the k×k linear system `G x = c` in place over flat row-major
+/// storage. Returns `false` when the matrix is numerically singular even
+/// after pivoting. Identical arithmetic (and pivot tie behavior) to the
+/// boxed `Vec<Vec<f64>>` solver it replaces — rows swap by value instead of
+/// by pointer, which changes nothing the elimination sees.
+fn solve_in_place(k: usize, g: &mut [f64], c: &mut [f64], x: &mut [f64]) -> bool {
     for col in 0..k {
-        // Partial pivot.
-        let piv = (col..k).max_by(|&a, &b| g[a][col].abs().total_cmp(&g[b][col].abs()))?;
-        if g[piv][col].abs() < 1e-12 {
-            return None;
-        }
-        g.swap(col, piv);
-        c.swap(col, piv);
+        // Partial pivot. `is_ge` keeps the LAST maximum on ties, matching
+        // the old `Iterator::max_by` selection exactly.
+        let mut piv = col;
         for row in col + 1..k {
-            let f = g[row][col] / g[col][col];
+            if g[row * k + col].abs().total_cmp(&g[piv * k + col].abs()).is_ge() {
+                piv = row;
+            }
+        }
+        if g[piv * k + col].abs() < 1e-12 {
+            return false;
+        }
+        if piv != col {
+            for j in 0..k {
+                g.swap(col * k + j, piv * k + j);
+            }
+            c.swap(col, piv);
+        }
+        for row in col + 1..k {
+            let f = g[row * k + col] / g[col * k + col];
             for j in col..k {
-                g[row][j] -= f * g[col][j];
+                g[row * k + j] -= f * g[col * k + j];
             }
             c[row] -= f * c[col];
         }
     }
-    let mut x = vec![0.0; k];
     for row in (0..k).rev() {
         let mut s = c[row];
         for j in row + 1..k {
-            s -= g[row][j] * x[j];
+            s -= g[row * k + j] * x[j];
         }
-        x[row] = s / g[row][row];
+        x[row] = s / g[row * k + row];
     }
-    Some(x)
+    true
+}
+
+/// [`refit`] over contiguous packed planes (`k · ⌈n/64⌉` words, layout
+/// `[plane][word]`), writing the coefficients into `alphas` (length `k`).
+/// Bit-identical to [`refit`] — the allocating API is a thin wrapper over
+/// this core — and allocation-free once `scratch` is warm.
+///
+/// Precondition: tail bits beyond `n` in every plane word must be zero
+/// (the invariant `PackedBits` enforces, and which `greedy`/`bst` `_into`
+/// writers maintain by zeroing whole words) — the Gram loop XORs full
+/// words, so nonzero pads would silently corrupt the dot products.
+pub fn refit_into(
+    w: &[f32],
+    k: usize,
+    alphas: &mut [f32],
+    planes: &[u64],
+    scratch: &mut QuantScratch,
+) {
+    let n = w.len();
+    let wpp = n.div_ceil(64);
+    assert_eq!(alphas.len(), k, "alpha buffer size mismatch");
+    assert_eq!(planes.len(), k * wpp, "plane buffer size mismatch");
+    if n % 64 != 0 {
+        for t in 0..k {
+            debug_assert_eq!(
+                planes[(t + 1) * wpp - 1] >> (n % 64),
+                0,
+                "tail bits beyond n={n} must be zero (plane {t})"
+            );
+        }
+    }
+    if n == 0 {
+        alphas.fill(0.0);
+        return;
+    }
+
+    // Gram matrix G[i][j] = <b_i, b_j> via XOR/popcount; rhs c[i] = <b_i, w>.
+    scratch.gram.clear();
+    scratch.gram.resize(k * k, 0.0);
+    for i in 0..k {
+        scratch.gram[i * k + i] = n as f64;
+        for j in i + 1..k {
+            let mut mismatches = 0u32;
+            for wi in 0..wpp {
+                mismatches += (planes[i * wpp + wi] ^ planes[j * wpp + wi]).count_ones();
+            }
+            let d = (n as i32 - 2 * mismatches as i32) as f64;
+            scratch.gram[i * k + j] = d;
+            scratch.gram[j * k + i] = d;
+        }
+    }
+    scratch.rhs.clear();
+    scratch.rhs.resize(k, 0.0);
+    for i in 0..k {
+        let p = &planes[i * wpp..(i + 1) * wpp];
+        let mut acc = 0.0f64;
+        for (j, &x) in w.iter().enumerate() {
+            let sign = if (p[j / 64] >> (j % 64)) & 1 == 1 { 1.0f64 } else { -1.0f64 };
+            acc += x as f64 * sign;
+        }
+        scratch.rhs[i] = acc;
+    }
+
+    scratch.sol.clear();
+    scratch.sol.resize(k, 0.0);
+
+    // Try the exact system; fall back to a ridge for dependent planes.
+    scratch.gram_w.clear();
+    scratch.gram_w.extend_from_slice(&scratch.gram);
+    scratch.rhs_w.clear();
+    scratch.rhs_w.extend_from_slice(&scratch.rhs);
+    if solve_in_place(k, &mut scratch.gram_w, &mut scratch.rhs_w, &mut scratch.sol)
+        && scratch.sol.iter().all(|v| v.is_finite())
+    {
+        for (a, &v) in alphas.iter_mut().zip(&scratch.sol) {
+            *a = v as f32;
+        }
+        return;
+    }
+    scratch.gram_w.clear();
+    scratch.gram_w.extend_from_slice(&scratch.gram);
+    for i in 0..k {
+        scratch.gram_w[i * k + i] += 1e-6 * n as f64;
+    }
+    scratch.rhs_w.clear();
+    scratch.rhs_w.extend_from_slice(&scratch.rhs);
+    if solve_in_place(k, &mut scratch.gram_w, &mut scratch.rhs_w, &mut scratch.sol) {
+        for (a, &v) in alphas.iter_mut().zip(&scratch.sol) {
+            *a = v as f32;
+        }
+    } else {
+        alphas.fill(0.0);
+    }
 }
 
 /// Refit coefficients for fixed binary planes: the exact minimizer of
@@ -46,38 +151,14 @@ pub fn refit(w: &[f32], planes: &[PackedBits]) -> Vec<f32> {
     let k = planes.len();
     let n = w.len();
     assert!(planes.iter().all(|p| p.len() == n));
-    if n == 0 {
-        return vec![0.0; k];
+    let wpp = n.div_ceil(64);
+    let mut words = vec![0u64; k * wpp];
+    for (t, p) in planes.iter().enumerate() {
+        words[t * wpp..(t + 1) * wpp].copy_from_slice(p.words());
     }
-
-    // Gram matrix G[i][j] = <b_i, b_j> via XOR/popcount; rhs c[i] = <b_i, w>.
-    let mut g = vec![vec![0.0f64; k]; k];
-    for i in 0..k {
-        g[i][i] = n as f64;
-        for j in i + 1..k {
-            let d = planes[i].dot_i32(&planes[j]) as f64;
-            g[i][j] = d;
-            g[j][i] = d;
-        }
-    }
-    let c: Vec<f64> = planes
-        .iter()
-        .map(|p| w.iter().enumerate().map(|(j, &x)| x as f64 * p.sign(j) as f64).sum())
-        .collect();
-
-    // Try the exact system; fall back to a ridge for dependent planes.
-    if let Some(x) = solve(g.clone(), c.clone()) {
-        if x.iter().all(|v| v.is_finite()) {
-            return x.iter().map(|&v| v as f32).collect();
-        }
-    }
-    let mut gr = g;
-    for (i, row) in gr.iter_mut().enumerate() {
-        row[i] += 1e-6 * n as f64;
-    }
-    solve(gr, c)
-        .map(|x| x.iter().map(|&v| v as f32).collect())
-        .unwrap_or_else(|| vec![0.0; k])
+    let mut alphas = vec![0.0f32; k];
+    refit_into(w, k, &mut alphas, &words, &mut QuantScratch::default());
+    alphas
 }
 
 #[cfg(test)]

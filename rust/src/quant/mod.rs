@@ -27,12 +27,23 @@ pub mod lsq;
 pub mod matrix;
 pub mod packed;
 pub mod refined;
+pub mod scratch;
 pub mod ternary;
 pub mod uniform;
 
 pub use batch::QuantizedBatch;
 pub use matrix::RowQuantized;
 pub use packed::PackedBits;
+pub use scratch::QuantScratch;
+
+/// Split a contiguous `[plane][word]` buffer into per-plane [`PackedBits`]
+/// (the cold-path adapter behind the allocating quantizer wrappers).
+pub(crate) fn planes_from_words(n: usize, k: usize, words: &[u64]) -> Vec<PackedBits> {
+    let wpp = n.div_ceil(64);
+    (0..k)
+        .map(|t| PackedBits::from_words(n, words[t * wpp..(t + 1) * wpp].to_vec()))
+        .collect()
+}
 
 /// A k-bit quantized vector: `ŵ = Σᵢ alphas[i] · planes[i]` where plane bits
 /// map `1 → +1`, `0 → −1`.
@@ -194,6 +205,37 @@ pub fn quantize(w: &[f32], k: usize, method: Method) -> Quantized {
         Method::Refined => refined::quantize(w, k),
         Method::Alternating { t } => alternating::quantize(w, k, t),
         Method::Ternary => ternary::quantize(w),
+    }
+}
+
+/// Quantize one vector directly into caller-provided coefficient and packed
+/// plane buffers. Greedy and Alternating (the serving methods) run the
+/// fused zero-allocation `_into` core; the remaining baselines fall back to
+/// the allocating quantizer and copy — their codes are not residue-local,
+/// so fusing them buys nothing, and the caller's buffers are still reused.
+/// Buffer sizes follow the *emitted* width (`k`, except Ternary's fixed 2).
+/// Bit-identical to [`quantize`] for every method.
+pub fn quantize_row_into(
+    w: &[f32],
+    k: usize,
+    method: Method,
+    alphas: &mut [f32],
+    planes: &mut [u64],
+    scratch: &mut QuantScratch,
+) {
+    match method {
+        Method::Greedy => greedy::quantize_into(w, k, alphas, planes, scratch),
+        Method::Alternating { t } => alternating::quantize_into(w, k, t, alphas, planes, scratch),
+        _ => {
+            let q = quantize(w, k, method);
+            let wpp = w.len().div_ceil(64);
+            assert_eq!(alphas.len(), q.k(), "alpha buffer size mismatch");
+            assert_eq!(planes.len(), q.k() * wpp, "plane buffer size mismatch");
+            alphas.copy_from_slice(&q.alphas);
+            for (t, p) in q.planes.iter().enumerate() {
+                planes[t * wpp..(t + 1) * wpp].copy_from_slice(p.words());
+            }
+        }
     }
 }
 

@@ -1,0 +1,47 @@
+//! Reusable quantizer scratch — the allocation-free substrate of the
+//! fused `_into` quantization APIs.
+//!
+//! One [`QuantScratch`] holds every intermediate buffer the greedy /
+//! least-squares / BST pipeline needs (the greedy residue, the `k×k` Gram
+//! system, the `2^k` composite codes and their midpoints). Each buffer is
+//! fully rewritten per call, so a scratch carries no state between rows —
+//! any row quantized with any (warm or dirty) scratch produces bit-identical
+//! output. Buffers grow to the high-water mark of the shapes they have seen
+//! and are then reused: after one warm-up call at a given `(n, k)`, every
+//! further call at sizes up to that mark performs **zero heap allocations**
+//! (for the paper's `k ≤ 4`; at `k ≥ 5` the code sort spills to an
+//! allocating merge sort, which no serving path reaches).
+//!
+//! Threading contract: a scratch is *not* shared between concurrent tasks —
+//! callers that shard rows across workers hold one scratch per task (see
+//! [`crate::quant::QuantizedBatch::quantize_into_exec`]).
+
+use super::bst::Code;
+
+/// Scratch buffers for one quantizer task. See the module docs for the
+/// reuse and threading contract.
+#[derive(Default, Debug)]
+pub struct QuantScratch {
+    /// Greedy residue, length `n`.
+    pub(crate) residue: Vec<f32>,
+    /// The `2^k` composite codes of the BST assignment.
+    pub(crate) codes: Vec<Code>,
+    /// The `2^k − 1` decision boundaries.
+    pub(crate) mids: Vec<f32>,
+    /// Exact `k×k` Gram matrix of the LSQ refit (row-major).
+    pub(crate) gram: Vec<f64>,
+    /// Working copy of the Gram matrix consumed by elimination.
+    pub(crate) gram_w: Vec<f64>,
+    /// Exact right-hand side `Bᵀw`.
+    pub(crate) rhs: Vec<f64>,
+    /// Working copy of the right-hand side consumed by elimination.
+    pub(crate) rhs_w: Vec<f64>,
+    /// Solution vector of the `k×k` solve.
+    pub(crate) sol: Vec<f64>,
+}
+
+impl QuantScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}

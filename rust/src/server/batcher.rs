@@ -16,7 +16,9 @@ use std::time::{Duration, Instant};
 
 use crate::exec::{Exec, ExecConfig};
 use crate::metrics::{Counters, LatencyRecorder};
+use crate::model::lm::{LmState, LmStateBatch, LmStepWorkspace};
 use crate::model::math::argmax;
+use crate::model::OutputBatch;
 use crate::model::RnnLm;
 use crate::server::session::SessionStore;
 
@@ -59,6 +61,15 @@ pub struct Response {
     pub compute_us: f64,
 }
 
+/// One in-flight generation request inside a lockstep batch.
+struct Slot {
+    req: Request,
+    state: LmState,
+    out: Vec<usize>,
+    last: usize,
+    queue_us: f64,
+}
+
 /// Work items multiplexed onto the batcher thread.
 pub enum Work {
     Gen(Request),
@@ -70,11 +81,20 @@ pub enum Work {
 
 /// The inference server state machine. Drive it with [`Self::run`] on a
 /// dedicated thread, or call [`Self::process_batch`] directly (benches).
+///
+/// The server owns the decode-path workspaces (`step_state`, `step_logits`,
+/// `step_ws`): they grow to the max-batch high-water mark once and are then
+/// reused across every prime + decode timestep group of every batch, so a
+/// steady-state timestep runs the model's zero-allocation
+/// [`RnnLm::step_batch_into_exec`] path end to end.
 pub struct InferenceServer {
     model: Arc<RnnLm>,
     sessions: SessionStore,
     config: BatcherConfig,
     exec: Exec,
+    step_state: LmStateBatch,
+    step_logits: OutputBatch,
+    step_ws: LmStepWorkspace,
     pub latency: Arc<LatencyRecorder>,
     pub counters: Arc<Counters>,
 }
@@ -91,11 +111,15 @@ impl InferenceServer {
     /// `config.exec` can never disagree with the pool serving requests.
     pub fn with_exec(model: Arc<RnnLm>, mut config: BatcherConfig, exec: Exec) -> Self {
         config.exec = ExecConfig::with_threads(exec.threads());
+        let step_state = model.zero_state_batch(0);
         InferenceServer {
             model,
             sessions: SessionStore::new(config.max_sessions),
             config,
             exec,
+            step_state,
+            step_logits: OutputBatch::zeros(0, 0),
+            step_ws: LmStepWorkspace::new(),
             latency: Arc::new(LatencyRecorder::new()),
             counters: Arc::new(Counters::new()),
         }
@@ -174,30 +198,46 @@ impl InferenceServer {
         true
     }
 
+    /// One batched timestep across the slots selected by `active`: gather
+    /// into the server's reused state batch → [`RnnLm::step_batch_into_exec`]
+    /// on the persistent workspace → scatter back into the slots' state
+    /// buffers in place, updating each slot's greedy token. All the step
+    /// buffers are reused across timestep groups; once at the max-batch
+    /// high-water mark, a timestep allocates nothing beyond the small
+    /// per-group bookkeeping lists in [`Self::process_batch`].
+    fn step_active(&mut self, slots: &mut [Slot], active: &[usize], tokens: &[usize]) {
+        let refs: Vec<&LmState> = active.iter().map(|&i| &slots[i].state).collect();
+        self.model.gather_states_into(&refs, &mut self.step_state);
+        self.model.step_batch_into_exec(
+            tokens,
+            &mut self.step_state,
+            &mut self.step_logits,
+            &self.exec,
+            &mut self.step_ws,
+        );
+        for (k, &i) in active.iter().enumerate() {
+            self.model.scatter_state_into(&self.step_state, k, &mut slots[i].state);
+            slots[i].last = argmax(self.step_logits.row(k));
+        }
+    }
+
     /// Run one batch of generation requests in lockstep and reply to each.
     ///
     /// Both phases execute as **true batched forwards**
-    /// ([`RnnLm::step_batch_exec`] on the server's worker pool): per
-    /// timestep, the states of all still-active slots are gathered into one
-    /// `LmStateBatch`, the model runs one batched step (each weight matrix
-    /// swept once for the whole group — Fig. 3 right — with its rows
-    /// sharded across the pool), and the updated states scatter back.
-    /// Because `step_batch_exec` bit-matches per-session `step` for any
-    /// thread count, neither batching nor threading is visible to clients:
-    /// a session generates the same tokens regardless of who it was batched
+    /// ([`RnnLm::step_batch_into_exec`] on the server's worker pool and
+    /// persistent workspaces): per timestep, the states of all still-active
+    /// slots are gathered into the reused `LmStateBatch`, the model runs
+    /// one batched step (each weight matrix swept once for the whole group
+    /// — Fig. 3 right — with its rows sharded across the pool), and the
+    /// updated states scatter back in place. Because the `_into` path
+    /// bit-matches per-session `step` for any thread count, neither
+    /// batching, threading, nor buffer reuse is visible to clients: a
+    /// session generates the same tokens regardless of who it was batched
     /// with or how many cores served it.
     pub fn process_batch(&mut self, batch: Vec<Request>) {
         Counters::inc(&self.counters.batches, 1);
         Counters::inc(&self.counters.requests, batch.len() as u64);
         let start = Instant::now();
-
-        struct Slot {
-            req: Request,
-            state: crate::model::lm::LmState,
-            out: Vec<usize>,
-            last: usize,
-            queue_us: f64,
-        }
 
         // Restore per-session states.
         let mut slots: Vec<Slot> = batch
@@ -210,28 +250,6 @@ impl InferenceServer {
             })
             .collect();
 
-        // One batched timestep across the slots selected by `active`:
-        // gather → step_batch_exec → scatter, updating each slot's greedy
-        // token.
-        fn step_active(
-            model: &RnnLm,
-            slots: &mut [Slot],
-            active: &[usize],
-            tokens: &[usize],
-            exec: &Exec,
-        ) {
-            let refs: Vec<&crate::model::lm::LmState> =
-                active.iter().map(|&i| &slots[i].state).collect();
-            let mut state_batch = model.gather_states(&refs);
-            let logits = model.step_batch_exec(tokens, &mut state_batch, exec);
-            for (k, (&i, state)) in
-                active.iter().zip(model.scatter_states(&state_batch)).enumerate()
-            {
-                slots[i].state = state;
-                slots[i].last = argmax(logits.row(k));
-            }
-        }
-
         // Prime phase: consume prompt tokens in lockstep (prompts of
         // different lengths drop out as they finish).
         let max_prime = slots.iter().map(|s| s.req.prime.len()).max().unwrap_or(0);
@@ -239,7 +257,7 @@ impl InferenceServer {
             let active: Vec<usize> =
                 (0..slots.len()).filter(|&i| pos < slots[i].req.prime.len()).collect();
             let tokens: Vec<usize> = active.iter().map(|&i| slots[i].req.prime[pos]).collect();
-            step_active(&self.model, &mut slots, &active, &tokens, &self.exec);
+            self.step_active(&mut slots, &active, &tokens);
         }
 
         // Lockstep decode: one batched timestep across all active slots per
@@ -259,7 +277,7 @@ impl InferenceServer {
                     slot.last
                 })
                 .collect();
-            step_active(&self.model, &mut slots, &active, &tokens, &self.exec);
+            self.step_active(&mut slots, &active, &tokens);
         }
 
         let compute_us = start.elapsed().as_secs_f64() * 1e6;

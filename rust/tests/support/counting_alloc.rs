@@ -1,0 +1,59 @@
+//! A counting `#[global_allocator]` with **thread-local** counters —
+//! shared (via `#[path]` include) by `rust/tests/workspace_parity.rs` and
+//! `rust/benches/server_throughput.rs`, so the test gate and the bench
+//! gate measure allocations with the same bookkeeping.
+//!
+//! Including this module installs the allocator for the whole binary.
+//! Per-thread counting means worker-pool threads and concurrently running
+//! harness tests never pollute a serial measurement window: snapshot
+//! [`thread_alloc_counts`] before and after the measured region on the
+//! measuring thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static THREAD_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Counts heap allocations made by the current thread.
+struct CountingAlloc;
+
+fn note_alloc(bytes: usize) {
+    // try_with: the allocator may run during TLS teardown; drop the count
+    // rather than panic. Const-initialized Cells never allocate or recurse.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    let _ = THREAD_BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+// SAFETY: delegates every operation to System; the bookkeeping is two
+// const-initialized thread-local Cells, which cannot allocate or recurse.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note_alloc(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note_alloc(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        note_alloc(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// `(allocations, bytes)` requested so far by the **current thread**.
+pub fn thread_alloc_counts() -> (u64, u64) {
+    (THREAD_ALLOCS.with(|c| c.get()), THREAD_BYTES.with(|c| c.get()))
+}

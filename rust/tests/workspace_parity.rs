@@ -1,0 +1,271 @@
+//! Workspace-reuse parity + the zero-allocation gate.
+//!
+//! Two contracts of the `_into` serving path:
+//!
+//! 1. **Parity**: every `_into` API writing into reused (dirty) buffers is
+//!    bit-identical to its allocating wrapper with fresh buffers, across
+//!    (method × bit width × batch × threads) — including reuse across
+//!    *changing* shapes, the stale-state failure mode fresh-buffer tests
+//!    cannot see.
+//! 2. **Zero allocation**: a warmed-up steady-state
+//!    `RnnLm::step_batch_into_exec` timestep (LSTM, W2A2, B ∈ {1, 16})
+//!    performs **no heap allocation** on the serial engine.
+//!
+//! The whole binary runs under the shared counting `#[global_allocator]`
+//! (`rust/tests/support/counting_alloc.rs` — thread-local counters, so
+//! concurrently running harness tests never pollute a measured window;
+//! this suite doubles as the "test run with the counting allocator
+//! enabled" CI leg).
+
+#[path = "support/counting_alloc.rs"]
+mod counting_alloc;
+
+use amq::exec::{Exec, ExecConfig};
+use amq::model::linear::{Linear, LinearOp, LinearWorkspace, Precision};
+use amq::model::lm::{LmConfig, LmStepWorkspace, PrecisionPolicy, RnnKind, RnnLm};
+use amq::model::ActivationBatch;
+use amq::model::OutputBatch;
+use amq::quant::{alternating, greedy, Method, QuantScratch, QuantizedBatch};
+use amq::util::Rng;
+use counting_alloc::thread_alloc_counts;
+
+fn tiny(kind: RnnKind) -> LmConfig {
+    LmConfig { kind, vocab: 50, hidden: 24, layers: 1 }
+}
+
+/// The fused quantizer cores against their allocating wrappers, with one
+/// dirty scratch reused across every shape.
+#[test]
+fn quantizer_into_cores_match_allocating_wrappers() {
+    let mut rng = Rng::new(0xF00D);
+    let mut scratch = QuantScratch::new();
+    for n in [1usize, 63, 64, 70, 130] {
+        for k in 1..=4 {
+            let w = rng.normal_vec(n, 0.5);
+            let wpp = n.div_ceil(64);
+            let mut alphas = vec![9.9f32; k];
+            let mut words = vec![u64::MAX; k * wpp];
+            greedy::quantize_into(&w, k, &mut alphas, &mut words, &mut scratch);
+            let q = greedy::quantize(&w, k);
+            assert_eq!(alphas, q.alphas, "greedy n={n} k={k}");
+            for (t, p) in q.planes.iter().enumerate() {
+                assert_eq!(&words[t * wpp..(t + 1) * wpp], p.words(), "greedy n={n} k={k} t={t}");
+            }
+            alternating::quantize_into(&w, k, 2, &mut alphas, &mut words, &mut scratch);
+            let q = alternating::quantize(&w, k, 2);
+            assert_eq!(alphas, q.alphas, "alternating n={n} k={k}");
+            for (t, p) in q.planes.iter().enumerate() {
+                assert_eq!(
+                    &words[t * wpp..(t + 1) * wpp],
+                    p.words(),
+                    "alternating n={n} k={k} t={t}"
+                );
+            }
+        }
+    }
+}
+
+/// `QuantizedBatch::quantize_into_exec` on one reused batch + scratch set
+/// vs a fresh quantization: (method × k ∈ 1..4 × B ∈ {1,3,16} ×
+/// threads ∈ {1,4}), shapes deliberately shrinking and growing between
+/// calls so stale buffer contents would be caught.
+#[test]
+fn quantized_batch_into_matches_allocating_across_grid() {
+    let mut rng = Rng::new(0xA110C);
+    let methods = [Method::Greedy, Method::Alternating { t: 2 }, Method::Uniform, Method::Ternary];
+    let mut reused = QuantizedBatch::empty();
+    let mut scratches: Vec<QuantScratch> = Vec::new();
+    for threads in [1usize, 4] {
+        let exec = Exec::new(ExecConfig::with_threads(threads));
+        for method in methods {
+            for k in 1..=4 {
+                for batch in [16usize, 1, 3] {
+                    let n = 70;
+                    let x = rng.normal_vec(batch * n, 0.8);
+                    let want = QuantizedBatch::quantize_with_exec(&x, batch, n, k, method, &exec);
+                    let tasks = exec.threads().min(batch).max(1);
+                    if scratches.len() < tasks {
+                        scratches.resize_with(tasks, QuantScratch::default);
+                    }
+                    reused.quantize_into_exec(&x, batch, n, k, method, &exec, &mut scratches);
+                    let tag = format!("{method:?} k={k} B={batch} threads={threads}");
+                    assert_eq!(reused.batch, want.batch, "{tag}");
+                    assert_eq!(reused.k, want.k, "{tag}");
+                    assert_eq!(reused.words_per_plane, want.words_per_plane, "{tag}");
+                    assert_eq!(reused.alphas, want.alphas, "{tag}");
+                    assert_eq!(reused.data, want.data, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// Linear-layer `_into` forwards (dense + quantized, online + prequant)
+/// against the allocating forwards, one workspace reused throughout.
+#[test]
+fn linear_forward_into_matches_forward() {
+    let mut rng = Rng::new(0xBEAD);
+    let (m, n) = (18, 75);
+    let wv = rng.normal_vec(m * n, 0.3);
+    for layer in [
+        Linear::new(wv.clone(), m, n, Precision::Full),
+        Linear::new(wv.clone(), m, n, Precision::Quantized { k_w: 2, k_a: 2 }),
+        Linear::new(wv.clone(), m, n, Precision::Quantized { k_w: 3, k_a: 2 }),
+    ] {
+        let mut ws = LinearWorkspace::new();
+        let mut y_into = OutputBatch::zeros(0, 0);
+        for threads in [1usize, 4] {
+            let exec = Exec::new(ExecConfig::with_threads(threads));
+            for batch in [5usize, 1, 16, 3] {
+                let x = rng.normal_vec(batch * n, 1.0);
+                let xb = ActivationBatch::from_flat(x, batch, n);
+                let mut want = OutputBatch::zeros(batch, m);
+                layer.forward_exec(&xb, &mut want, &exec);
+                layer.forward_into_exec(&xb, &mut y_into, &exec, &mut ws);
+                assert_eq!(y_into.data(), want.data(), "batch={batch} threads={threads}");
+                let xq = xb.quantize(2);
+                let mut wantq = OutputBatch::zeros(batch, m);
+                layer.forward_prequant_exec(&xq, &mut wantq, &exec);
+                layer.forward_prequant_into_exec(&xq, &mut y_into, &exec, &mut ws);
+                assert_eq!(y_into.data(), wantq.data(), "prequant batch={batch}");
+            }
+        }
+    }
+}
+
+/// Whole-model parity: `step_batch_into_exec` with one workspace reused
+/// across rounds, batch sizes, and bit widths vs the allocating
+/// `step_batch_exec`, for both cell kinds and threads ∈ {1, 4}. States
+/// must stay equal step by step (the double-buffer swap must not corrupt
+/// or stale-read anything).
+#[test]
+fn model_step_into_matches_allocating_step() {
+    for kind in [RnnKind::Lstm, RnnKind::Gru] {
+        for k in 1..=4 {
+            let lm = RnnLm::random(tiny(kind), 11 + k as u64, PrecisionPolicy::quantized(k, k));
+            for threads in [1usize, 4] {
+                let exec = Exec::new(ExecConfig::with_threads(threads));
+                let mut ws = LmStepWorkspace::new();
+                let mut logits_into = OutputBatch::zeros(0, 0);
+                for batch in [16usize, 1, 3] {
+                    let mut sa = lm.zero_state_batch(batch);
+                    let mut sb = lm.zero_state_batch(batch);
+                    for round in 0..3 {
+                        let tokens: Vec<usize> =
+                            (0..batch).map(|b| (5 * b + 7 * round + k) % 50).collect();
+                        let want = lm.step_batch_exec(&tokens, &mut sa, &exec);
+                        lm.step_batch_into_exec(&tokens, &mut sb, &mut logits_into, &exec, &mut ws);
+                        let tag = format!("{kind:?} k={k} B={batch} t={threads} round={round}");
+                        assert_eq!(logits_into.data(), want.data(), "{tag}");
+                        assert_eq!(sa, sb, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full-precision models ride the same `_into` path (dense embedding +
+/// dense layers) — parity there too.
+#[test]
+fn full_precision_model_step_into_matches_allocating_step() {
+    for kind in [RnnKind::Lstm, RnnKind::Gru] {
+        let lm = RnnLm::random(tiny(kind), 29, PrecisionPolicy::full());
+        let exec = Exec::serial();
+        let mut ws = LmStepWorkspace::new();
+        let mut logits_into = OutputBatch::zeros(0, 0);
+        for batch in [4usize, 1] {
+            let mut sa = lm.zero_state_batch(batch);
+            let mut sb = lm.zero_state_batch(batch);
+            for round in 0..3 {
+                let tokens: Vec<usize> = (0..batch).map(|b| (3 * b + round + 1) % 50).collect();
+                let want = lm.step_batch_exec(&tokens, &mut sa, &exec);
+                lm.step_batch_into_exec(&tokens, &mut sb, &mut logits_into, &exec, &mut ws);
+                assert_eq!(logits_into.data(), want.data(), "{kind:?} B={batch} round={round}");
+                assert_eq!(sa, sb, "{kind:?} B={batch} round={round}");
+            }
+        }
+    }
+}
+
+/// Gather/scatter `_into` round trip on reused buffers matches the
+/// allocating gather/scatter.
+#[test]
+fn gather_scatter_into_matches_allocating() {
+    for kind in [RnnKind::Lstm, RnnKind::Gru] {
+        let lm = RnnLm::random(tiny(kind), 31, PrecisionPolicy::quantized(2, 2));
+        let mut singles: Vec<_> = (0..5).map(|_| lm.zero_state()).collect();
+        for (i, s) in singles.iter_mut().enumerate() {
+            lm.step(i % 50, s);
+        }
+        let refs: Vec<&_> = singles.iter().collect();
+        let want = lm.gather_states(&refs);
+        let mut reused = lm.zero_state_batch(2); // wrong size: must resize
+        lm.gather_states_into(&refs, &mut reused);
+        assert_eq!(reused, want, "{kind:?}");
+        let scattered = lm.scatter_states(&want);
+        for (b, s) in scattered.iter().enumerate() {
+            let mut out = lm.zero_state();
+            lm.scatter_state_into(&want, b, &mut out);
+            assert_eq!(&out, s, "{kind:?} col {b}");
+        }
+    }
+}
+
+/// The acceptance gate: a warmed-up steady-state decode timestep through
+/// `step_batch_into_exec` (LSTM, W2A2, B ∈ {1, 16}, serial engine)
+/// performs ZERO heap allocations — counted by the global allocator on
+/// this thread only.
+#[test]
+fn steady_state_decode_is_allocation_free() {
+    let lm = RnnLm::random(tiny(RnnKind::Lstm), 9, PrecisionPolicy::quantized(2, 2));
+    let exec = Exec::serial();
+    for batch in [1usize, 16] {
+        let mut state = lm.zero_state_batch(batch);
+        let mut ws = LmStepWorkspace::new();
+        let mut logits = OutputBatch::zeros(0, 0);
+        let mut tokens: Vec<usize> = (0..batch).map(|b| (7 * b + 1) % 50).collect();
+        // Warm up: every buffer grows to its steady-state capacity.
+        for round in 0..3usize {
+            lm.step_batch_into_exec(&tokens, &mut state, &mut logits, &exec, &mut ws);
+            for (b, t) in tokens.iter_mut().enumerate() {
+                *t = (*t + 11 * b + round + 1) % 50;
+            }
+        }
+        let (a0, by0) = thread_alloc_counts();
+        for round in 0..5usize {
+            lm.step_batch_into_exec(&tokens, &mut state, &mut logits, &exec, &mut ws);
+            for (b, t) in tokens.iter_mut().enumerate() {
+                *t = (*t + 3 * b + round + 1) % 50;
+            }
+        }
+        let (a1, by1) = thread_alloc_counts();
+        assert_eq!(
+            (a1 - a0, by1 - by0),
+            (0, 0),
+            "B={batch}: steady-state step_batch_into_exec allocated"
+        );
+    }
+}
+
+/// Same gate one level down: a warmed `QuantizedBatch::quantize_into_exec`
+/// re-quantizing a fresh activation batch every "timestep" allocates
+/// nothing on the serial engine.
+#[test]
+fn steady_state_batch_quantization_is_allocation_free() {
+    let mut rng = Rng::new(0x5EED);
+    let (batch, n, k) = (16usize, 96usize, 2usize);
+    let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(batch * n, 0.8)).collect();
+    let exec = Exec::serial();
+    let mut qb = QuantizedBatch::empty();
+    let mut scratches = vec![QuantScratch::new()];
+    let method = Method::Alternating { t: 2 };
+    // Warm up.
+    qb.quantize_into_exec(&xs[0], batch, n, k, method, &exec, &mut scratches);
+    let (a0, _) = thread_alloc_counts();
+    for x in &xs {
+        qb.quantize_into_exec(x, batch, n, k, method, &exec, &mut scratches);
+    }
+    let (a1, _) = thread_alloc_counts();
+    assert_eq!(a1 - a0, 0, "steady-state quantize_into_exec allocated");
+}
