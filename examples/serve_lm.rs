@@ -58,8 +58,10 @@ fn main() -> anyhow::Result<()> {
     std::thread::spawn(move || server.run(work_rx));
     let (addr_tx, addr_rx) = mpsc::channel();
     let wt = work_tx.clone();
+    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let flag = shutdown.clone();
     std::thread::spawn(move || {
-        let _ = tcp::serve("127.0.0.1:0", wt, move |a| {
+        let _ = tcp::serve("127.0.0.1:0", wt, flag, move |a| {
             let _ = addr_tx.send(a);
         });
     });
@@ -101,6 +103,7 @@ fn main() -> anyhow::Result<()> {
         all.mean()
     );
     println!("{}", latency.snapshot().report("server-side"));
+    shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
     let _ = work_tx.send(Work::Shutdown);
     Ok(())
 }

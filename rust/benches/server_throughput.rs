@@ -9,22 +9,30 @@
 //!
 //! Run: `cargo bench --bench server_throughput [-- --quick] [--json PATH]`
 //!
+//! Besides the batch/thread/decode sweeps, this bench has a **load
+//! generator**: hundreds of simulated clients with staggered arrivals and
+//! varied request lengths, driven against grouped vs continuous batching
+//! (p50/p99 per-request latency + aggregate throughput), a **load-shed
+//! burst** exercising admission control (`ERR BUSY`), and — on unix — the
+//! same load over real TCP through the event-loop front end.
+//!
 //! The final stdout line is a machine-readable JSON summary (tokens/sec per
-//! model per batch size, plus the thread-scaling curve); `--json PATH`
-//! additionally writes it to a file (CI records it as
-//! `BENCH_server_throughput.json`) so perf trajectories can be tracked
+//! model per batch size, the thread-scaling curve, and the load-generator
+//! results); `--json PATH` additionally writes it to a file (CI records it
+//! as `BENCH_server_throughput.json`) so perf trajectories can be tracked
 //! across PRs. Every quantized forward underneath goes through the fused
 //! batch-block count primitive of `kernels::backend`.
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use amq::exec::{Exec, ExecConfig};
 use amq::model::lm::{LmConfig, LmStepWorkspace, PrecisionPolicy, RnnKind, RnnLm};
 use amq::model::math::argmax;
 use amq::model::OutputBatch;
-use amq::server::batcher::{BatcherConfig, InferenceServer, Request};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Reply, Request, Respond, Work};
+use amq::util::Summary;
 
 // The shared counting #[global_allocator] (thread-local counters — worker
 // threads never pollute a serial measurement). Same bookkeeping as the
@@ -79,7 +87,7 @@ fn run_batch(
             session: i as u64,
             max_new: new_tokens,
             prime: vec![(i * 13 + 1) % 500],
-            respond: tx,
+            respond: Respond::Channel(tx),
             enqueued: Instant::now(),
         });
         rxs.push(rx);
@@ -88,10 +96,224 @@ fn run_batch(
     server.process_batch(reqs);
     let elapsed = t.elapsed().as_secs_f64();
     for rx in rxs {
-        assert_eq!(rx.recv().unwrap().tokens.len(), new_tokens);
+        match rx.recv().unwrap() {
+            Reply::Gen(r) => assert_eq!(r.tokens.len(), new_tokens),
+            other => panic!("expected Gen reply, got {other:?}"),
+        }
     }
     let tokens = (batch * new_tokens) as f64;
     (tokens / elapsed, elapsed * 1e3)
+}
+
+/// One load-generator run: `clients` threads with staggered arrivals and
+/// varied request lengths against a live batcher; per-request wall latency
+/// (client-observed: queueing + decode) and aggregate throughput.
+struct LoadGenSample {
+    mode: &'static str,
+    clients: usize,
+    threads: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    tokens_per_sec: f64,
+}
+
+/// The request length for client `i`: spread over `2 ..= 2*new_tokens+1`
+/// so grouped batches are padded to their slowest member while continuous
+/// batching backfills freed slots — the effect the p99 gate measures.
+fn want_tokens(i: usize, new_tokens: usize) -> usize {
+    2 + (i * 7) % (2 * new_tokens)
+}
+
+fn run_load(
+    model: Arc<RnnLm>,
+    mode: &'static str,
+    continuous: bool,
+    clients: usize,
+    new_tokens: usize,
+    stagger: Duration,
+    threads: usize,
+) -> LoadGenSample {
+    let server = InferenceServer::new(
+        model,
+        BatcherConfig {
+            max_batch: 8,
+            continuous,
+            max_slots: 8,
+            // The latency comparison must not shed: depth > all clients.
+            queue_depth: clients + 1,
+            exec: ExecConfig::with_threads(threads),
+            ..Default::default()
+        },
+    );
+    let (work_tx, work_rx) = mpsc::channel();
+    let batcher = std::thread::spawn(move || server.run(work_rx));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let tx = work_tx.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(stagger * i as u32);
+                let want = want_tokens(i, new_tokens);
+                let (rtx, rrx) = mpsc::channel();
+                let t = Instant::now();
+                tx.send(Work::Gen(Request {
+                    session: i as u64,
+                    max_new: want,
+                    prime: vec![(i * 13 + 1) % 500],
+                    respond: Respond::Channel(rtx),
+                    enqueued: Instant::now(),
+                }))
+                .unwrap();
+                match rrx.recv().unwrap() {
+                    Reply::Gen(r) => {
+                        assert_eq!(r.tokens.len(), want);
+                        (t.elapsed().as_secs_f64() * 1e3, want)
+                    }
+                    other => panic!("latency run must not shed: {other:?}"),
+                }
+            })
+        })
+        .collect();
+    let mut lat = Summary::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let (ms, n) = h.join().unwrap();
+        lat.add(ms);
+        tokens += n;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    work_tx.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+    LoadGenSample {
+        mode,
+        clients,
+        threads,
+        p50_ms: lat.percentile(50.0),
+        p99_ms: lat.percentile(99.0),
+        tokens_per_sec: tokens as f64 / wall,
+    }
+}
+
+/// Admission-control burst: the whole burst is enqueued before the batcher
+/// starts, so the outcome is deterministic — `max_slots` join, `queue_depth`
+/// queue, the rest shed with `ERR BUSY`. Returns (served, shed).
+fn run_burst(model: Arc<RnnLm>, clients: usize, new_tokens: usize) -> (usize, usize) {
+    let server = InferenceServer::new(
+        model,
+        BatcherConfig {
+            max_batch: 2,
+            continuous: true,
+            max_slots: 2,
+            queue_depth: 4,
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let (work_tx, work_rx) = mpsc::channel();
+    let mut rxs = Vec::new();
+    for i in 0..clients {
+        let (rtx, rrx) = mpsc::channel();
+        work_tx
+            .send(Work::Gen(Request {
+                session: i as u64,
+                max_new: new_tokens,
+                prime: vec![(i * 13 + 1) % 500],
+                respond: Respond::Channel(rtx),
+                enqueued: Instant::now(),
+            }))
+            .unwrap();
+        rxs.push(rrx);
+    }
+    let batcher = std::thread::spawn(move || server.run(work_rx));
+    let (mut served, mut shed) = (0usize, 0usize);
+    for rx in rxs {
+        match rx.recv().unwrap() {
+            Reply::Gen(r) => {
+                assert_eq!(r.tokens.len(), new_tokens);
+                served += 1;
+            }
+            Reply::Busy { queued, depth } => {
+                assert_eq!((queued, depth), (4, 4));
+                shed += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    work_tx.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+    (served, shed)
+}
+
+/// The staggered load over real TCP through the event-loop front end:
+/// every client is a real socket speaking the wire protocol, multiplexed
+/// onto two loop threads.
+#[cfg(unix)]
+fn run_eventloop_tcp(
+    model: Arc<RnnLm>,
+    clients: usize,
+    new_tokens: usize,
+    stagger: Duration,
+    threads: usize,
+) -> LoadGenSample {
+    use std::io::{BufRead, BufReader, Write};
+
+    let server = InferenceServer::new(
+        model,
+        BatcherConfig {
+            max_batch: 8,
+            continuous: true,
+            max_slots: 8,
+            queue_depth: clients + 1,
+            exec: ExecConfig::with_threads(threads),
+            ..Default::default()
+        },
+    );
+    let (work_tx, work_rx) = mpsc::channel();
+    let batcher = std::thread::spawn(move || server.run(work_rx));
+    let srv = amq::server::eventloop::serve(
+        "127.0.0.1:0",
+        work_tx.clone(),
+        amq::server::eventloop::EventLoopConfig { loops: 2 },
+    )
+    .expect("event-loop bind");
+    let addr = srv.addr;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            std::thread::spawn(move || {
+                std::thread::sleep(stagger * i as u32);
+                let want = want_tokens(i, new_tokens);
+                let t = Instant::now();
+                let mut conn = std::net::TcpStream::connect(addr).unwrap();
+                writeln!(conn, "GEN {i} {want} {}", (i * 13 + 1) % 500).unwrap();
+                let mut line = String::new();
+                BufReader::new(conn).read_line(&mut line).unwrap();
+                assert!(line.starts_with("OK GEN "), "{line}");
+                let got = line.trim_end().trim_start_matches("OK GEN ").split(',').count();
+                assert_eq!(got, want);
+                (t.elapsed().as_secs_f64() * 1e3, want)
+            })
+        })
+        .collect();
+    let mut lat = Summary::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let (ms, n) = h.join().unwrap();
+        lat.add(ms);
+        tokens += n;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    srv.shutdown();
+    work_tx.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+    LoadGenSample {
+        mode: "event-loop",
+        clients,
+        threads,
+        p50_ms: lat.percentile(50.0),
+        p99_ms: lat.percentile(99.0),
+        tokens_per_sec: tokens as f64 / wall,
+    }
 }
 
 fn json_summary(
@@ -100,6 +322,8 @@ fn json_summary(
     samples: &[Sample],
     scaling: &[ThreadSample],
     decode: &[DecodeSample],
+    load: &[LoadGenSample],
+    shed: (usize, usize, usize),
 ) -> String {
     let mut s = format!(
         "{{\"bench\":\"server_throughput\",\"kernel\":\"{}\",\"cpu_features\":[{}],\"kind\":\"{}\",\"vocab\":{},\"hidden\":{},\"new_tokens\":{},\"results\":[",
@@ -150,7 +374,21 @@ fn json_summary(
             r.bytes_per_step
         ));
     }
-    s.push_str("]}");
+    s.push_str("],\"load_gen\":[");
+    for (i, r) in load.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"mode\":\"{}\",\"clients\":{},\"threads\":{},\"p50_ms\":{:.2},\"p99_ms\":{:.2},\"tokens_per_sec\":{:.1}}}",
+            r.mode, r.clients, r.threads, r.p50_ms, r.p99_ms, r.tokens_per_sec
+        ));
+    }
+    let (burst_clients, served, shed_n) = shed;
+    s.push_str(&format!(
+        "],\"load_shed\":{{\"clients\":{burst_clients},\"max_slots\":2,\"queue_depth\":4,\
+         \"served\":{served},\"shed\":{shed_n}}}}}"
+    ));
     s
 }
 
@@ -336,7 +574,85 @@ fn main() {
         b1.speedup, b1.alloc_path_allocs_per_step
     );
 
-    let json = json_summary(&config, new_tokens, &samples, &scaling, &decode);
+    // -----------------------------------------------------------------
+    // Load generator: staggered arrivals, varied request lengths, grouped
+    // vs continuous batching on the same model and thread count. Client
+    // latency is measured end to end (queueing + decode).
+    // -----------------------------------------------------------------
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let lg_clients = if quick { 64 } else { 256 };
+    let lg_threads = cores.min(2);
+    let stagger = Duration::from_micros(250);
+    let run_mode = |mode: &'static str, continuous: bool| {
+        // Best-of-2 (by p99) outside quick mode to damp scheduler noise.
+        let reps = if quick { 1 } else { 2 };
+        let mut best: Option<LoadGenSample> = None;
+        for _ in 0..reps {
+            let s = run_load(
+                w2a2.clone(),
+                mode,
+                continuous,
+                lg_clients,
+                new_tokens,
+                stagger,
+                lg_threads,
+            );
+            if best.is_none() || s.p99_ms < best.as_ref().unwrap().p99_ms {
+                best = Some(s);
+            }
+        }
+        best.unwrap()
+    };
+    println!(
+        "\nLoad generator: {lg_clients} clients, {}µs stagger, lengths 2..{}, {lg_threads} exec threads:",
+        stagger.as_micros(),
+        2 * new_tokens + 1
+    );
+    println!("{:<12} {:>10} {:>10} {:>14}", "mode", "p50-ms", "p99-ms", "tokens/s");
+    let grouped = run_mode("grouped", false);
+    let continuous = run_mode("continuous", true);
+    for s in [&grouped, &continuous] {
+        println!(
+            "{:<12} {:>10.2} {:>10.2} {:>14.0}",
+            s.mode, s.p50_ms, s.p99_ms, s.tokens_per_sec
+        );
+    }
+    let (grouped_p99, continuous_p99) = (grouped.p99_ms, continuous.p99_ms);
+    println!(
+        "continuous vs grouped p99: {:.2}x ({:.2} ms vs {:.2} ms)",
+        grouped_p99 / continuous_p99,
+        continuous_p99,
+        grouped_p99
+    );
+
+    // Admission-control burst: deterministic shed accounting.
+    let burst_clients = 32;
+    let (served, shed_n) = run_burst(w2a2.clone(), burst_clients, new_tokens);
+    println!(
+        "load shed: burst of {burst_clients} at max_slots=2 queue_depth=4 → served {served}, shed {shed_n} (ERR BUSY)"
+    );
+
+    let mut load = vec![grouped, continuous];
+    #[cfg(unix)]
+    {
+        let ev_clients = if quick { 40 } else { 120 };
+        let ev = run_eventloop_tcp(w2a2.clone(), ev_clients, new_tokens, stagger, lg_threads);
+        println!(
+            "event-loop TCP: {ev_clients} sockets → p50 {:.2} ms, p99 {:.2} ms, {:.0} tokens/s",
+            ev.p50_ms, ev.p99_ms, ev.tokens_per_sec
+        );
+        load.push(ev);
+    }
+
+    let json = json_summary(
+        &config,
+        new_tokens,
+        &samples,
+        &scaling,
+        &decode,
+        &load,
+        (burst_clients, served, shed_n),
+    );
     if let Some(path) = json_path {
         std::fs::write(&path, &json).expect("write json summary");
         eprintln!("json summary written to {path}");
@@ -358,7 +674,6 @@ fn main() {
         batch_gain > 1.0,
         "batched serving must outperform B=1: gain {batch_gain:.2}x"
     );
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     if cores >= 2 {
         assert!(
             thread_gain > 1.0,
@@ -366,6 +681,23 @@ fn main() {
         );
     } else {
         eprintln!("note: single-core machine — skipping the thread-scaling assertion");
+    }
+    // Admission control: every burst client was answered, the overflow was
+    // shed, and the accounting is the deterministic slots+queue split.
+    assert_eq!(served + shed_n, burst_clients, "every burst client must get an answer");
+    assert_eq!(served, 6, "pre-queued burst serves exactly max_slots + queue_depth");
+    assert!(shed_n > 0, "burst must trigger load shedding");
+    // The tentpole claim: with staggered arrivals and varied lengths,
+    // continuous batching beats grouped batching at the tail — freed slots
+    // backfill instead of idling until the slowest batch member finishes.
+    if cores >= 2 {
+        assert!(
+            continuous_p99 < grouped_p99,
+            "continuous batching must beat grouped on p99 under staggered load: \
+             {continuous_p99:.2} ms vs {grouped_p99:.2} ms"
+        );
+    } else {
+        eprintln!("note: single-core machine — skipping the continuous-p99 assertion");
     }
     eprintln!("ok");
 }

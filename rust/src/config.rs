@@ -193,6 +193,16 @@ pub struct ServerConfig {
     /// one, `"auto"` (default) defers to `AMQ_KERNEL` / runtime feature
     /// detection. Validated by `Kernel::parse_choice` at launch.
     pub kernel: String,
+    /// Use the multiplexed event-loop front end (implies continuous
+    /// batching). CLI: `--event-loop`.
+    pub event_loop: bool,
+    /// Event-loop threads; 0 = auto. CLI: `--loops`.
+    pub loops: usize,
+    /// Continuous-batching slot cap; 0 = use `max_batch`. CLI: `--max-slots`.
+    pub max_slots: usize,
+    /// Admission-queue bound before `ERR BUSY` load shedding.
+    /// CLI: `--queue-depth`.
+    pub queue_depth: usize,
 }
 
 impl ServerConfig {
@@ -204,6 +214,10 @@ impl ServerConfig {
             max_sessions: c.get_usize("server.max_sessions", 1024),
             threads: c.get_usize("server.threads", 0),
             kernel: c.get_str("server.kernel", "auto"),
+            event_loop: c.get_bool("server.event_loop", false),
+            loops: c.get_usize("server.loops", 0),
+            max_slots: c.get_usize("server.max_slots", 0),
+            queue_depth: c.get_usize("server.queue_depth", 128),
         }
     }
 }
@@ -256,6 +270,9 @@ addr = "0.0.0.0:9999"   # bind
 max_batch = 32
 threads = 4
 kernel = "scalar"
+event_loop = true
+max_slots = 24
+queue_depth = 64
 [model]
 kind = "gru"
 hidden = 512
@@ -281,6 +298,8 @@ quantized = true
         assert_eq!(s.max_batch, 32);
         assert_eq!(s.threads, 4);
         assert_eq!(s.kernel, "scalar");
+        assert!(s.event_loop);
+        assert_eq!((s.max_slots, s.queue_depth), (24, 64));
         let m = ModelConfig::from_config(&c).unwrap();
         assert_eq!(m.lm.kind, RnnKind::Gru);
         assert_eq!(m.lm.hidden, 512);
@@ -294,6 +313,8 @@ quantized = true
         let s = ServerConfig::from_config(&c);
         assert_eq!(s.addr, "127.0.0.1:7860");
         assert_eq!(s.kernel, "auto");
+        assert!(!s.event_loop);
+        assert_eq!((s.loops, s.max_slots, s.queue_depth), (0, 0, 128));
     }
 
     #[test]

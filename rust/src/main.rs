@@ -2,12 +2,20 @@
 //!
 //! Subcommands:
 //! ```text
-//! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 --threads N --kernel auto ..]
+//! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 --threads N --kernel auto
+//!               --event-loop --loops N --max-slots N --queue-depth N --continuous ..]
 //! amq train    --tag lstm_fp [--dataset ptb|wt2|text8] [--epochs N] ...
 //! amq quantize --bits 2 [--method alternating[:cycles]] [--checkpoint f.amqt]
 //! amq bench    table1|table2|table3|table4|table5|table6|table7|table8|table9|costmodel
-//! amq stats    --addr host:port          (query a running server)
+//! amq stats    --addr host:port [--text]  (query a running server's STATS)
 //! ```
+//!
+//! `--event-loop` swaps the thread-per-connection front end for the
+//! multiplexed epoll/kqueue event loop (`server::eventloop`) and switches
+//! the batcher to continuous batching; `--max-slots` caps concurrently
+//! decoding sequences and `--queue-depth` bounds the admission queue
+//! before `ERR BUSY` load shedding. `--continuous` enables continuous
+//! batching on the classic front end too.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -54,6 +62,7 @@ fn run(cli: Cli) -> Result<()> {
         "train" => cmd_train(&cli),
         "quantize" => cmd_quantize(&cli),
         "bench" => cmd_bench(&cli),
+        "stats" => cmd_stats(&cli),
         "" => {
             println!("{}", usage());
             Ok(())
@@ -101,6 +110,17 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         s.max_batch = cli.get_usize("max-batch", s.max_batch)?;
         (s, m)
     };
+    let mut server_cfg = server_cfg;
+    // Serving-shape flags override the config file (like --threads).
+    if cli.has("event-loop") {
+        server_cfg.event_loop = true;
+    }
+    server_cfg.loops = cli.get_usize("loops", server_cfg.loops)?;
+    server_cfg.max_slots = cli.get_usize("max-slots", server_cfg.max_slots)?;
+    server_cfg.queue_depth = cli.get_usize("queue-depth", server_cfg.queue_depth)?;
+    // The event loop multiplexes many clients onto one Work channel; it
+    // only makes sense with continuous batching, so it implies it.
+    let continuous = server_cfg.event_loop || cli.has("continuous");
 
     // Kernel backend: `--kernel` (when present — including an explicit
     // `--kernel auto`) overrides `server.kernel`. A named choice is forced
@@ -159,14 +179,60 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             max_batch: server_cfg.max_batch,
             batch_wait: std::time::Duration::from_micros(server_cfg.batch_wait_us),
             max_sessions: server_cfg.max_sessions,
+            continuous,
+            max_slots: server_cfg.max_slots,
+            queue_depth: server_cfg.queue_depth,
             exec: exec_cfg,
         },
         exec,
     );
     let (tx, rx) = mpsc::channel::<Work>();
-    std::thread::spawn(move || server.run(rx));
-    eprintln!("serving on {}", server_cfg.addr);
-    tcp::serve(&server_cfg.addr, tx, |a| eprintln!("bound {a}"))
+    let batcher = std::thread::spawn(move || server.run(rx));
+    eprintln!(
+        "serving on {} ({} batching, {} front end)",
+        server_cfg.addr,
+        if continuous { "continuous" } else { "grouped" },
+        if server_cfg.event_loop { "event-loop" } else { "thread-per-conn" },
+    );
+    if server_cfg.event_loop {
+        #[cfg(unix)]
+        {
+            let srv = amq::server::eventloop::serve(
+                &server_cfg.addr,
+                tx,
+                amq::server::eventloop::EventLoopConfig { loops: server_cfg.loops },
+            )?;
+            eprintln!("bound {} (event loop)", srv.addr);
+            srv.join(); // serves until the process is killed
+            let _ = batcher.join();
+            return Ok(());
+        }
+        #[cfg(not(unix))]
+        bail!("--event-loop needs epoll/kqueue (unix-only); use the default front end");
+    }
+    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let res = tcp::serve(&server_cfg.addr, tx, shutdown, |a| eprintln!("bound {a}"));
+    let _ = batcher.join();
+    res
+}
+
+/// Query a running server's `STATS` endpoint (JSON by default, `--text`
+/// for the human form) — machine-readable scraping for dashboards.
+fn cmd_stats(cli: &Cli) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = cli.get_str("addr", "127.0.0.1:7860");
+    let mut conn = std::net::TcpStream::connect(&addr).with_context(|| format!("connect {addr}"))?;
+    writeln!(conn, "{}", if cli.has("text") { "STATS TEXT" } else { "STATS" })?;
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line)?;
+    let line = line.trim_end();
+    match line.strip_prefix("OK STATS ") {
+        Some(payload) => {
+            println!("{payload}");
+            Ok(())
+        }
+        None => bail!("unexpected reply: {line}"),
+    }
 }
 
 fn cmd_train(cli: &Cli) -> Result<()> {

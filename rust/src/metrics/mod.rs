@@ -35,6 +35,66 @@ impl LatencyRecorder {
     }
 }
 
+/// Latency recorder over a **fixed-size ring** of the most recent samples
+/// (µs): bounded memory for servers that run forever, where the unbounded
+/// [`LatencyRecorder`] would grow without limit. `count` in the snapshot is
+/// the lifetime total; the percentiles describe the ring window (the last
+/// `capacity` requests) — exactly what a `STATS` poll wants to see.
+pub struct LatencyRing {
+    inner: Mutex<RingInner>,
+    capacity: usize,
+}
+
+struct RingInner {
+    buf: Vec<f64>,
+    next: usize,
+    total: u64,
+}
+
+impl LatencyRing {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "ring capacity must be positive");
+        LatencyRing {
+            inner: Mutex::new(RingInner { buf: Vec::with_capacity(capacity), next: 0, total: 0 }),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        let mut r = self.inner.lock().unwrap();
+        if r.buf.len() < self.capacity {
+            r.buf.push(us);
+        } else {
+            let i = r.next;
+            r.buf[i] = us;
+        }
+        r.next = (r.next + 1) % self.capacity;
+        r.total += 1;
+    }
+
+    /// Percentiles over the ring window; `count` is the lifetime total.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let r = self.inner.lock().unwrap();
+        let mut s = Summary::new();
+        for &v in &r.buf {
+            s.add(v);
+        }
+        LatencySnapshot {
+            count: r.total as usize,
+            mean_us: s.mean(),
+            p50_us: s.percentile(50.0),
+            p95_us: s.percentile(95.0),
+            p99_us: s.percentile(99.0),
+            max_us: s.max(),
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct LatencySnapshot {
     pub count: usize,
@@ -60,6 +120,12 @@ pub struct Counters {
     pub requests: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub batches: AtomicU64,
+    /// Batched decode timesteps executed (continuous batching progresses
+    /// one of these at a time; joins and leaves happen at its boundary).
+    pub decode_timesteps: AtomicU64,
+    /// Generation requests refused with `ERR BUSY` because the pending
+    /// queue was at `queue_depth` — the admission-control pressure valve.
+    pub shed: AtomicU64,
     pub evictions: AtomicU64,
     pub errors: AtomicU64,
 }
@@ -98,6 +164,30 @@ mod tests {
     fn counters() {
         let c = Counters::new();
         Counters::inc(&c.requests, 3);
+        Counters::inc(&c.shed, 1);
+        Counters::inc(&c.decode_timesteps, 2);
         assert_eq!(Counters::get(&c.requests), 3);
+        assert_eq!(Counters::get(&c.shed), 1);
+        assert_eq!(Counters::get(&c.decode_timesteps), 2);
+    }
+
+    #[test]
+    fn latency_ring_windows_and_counts() {
+        let r = LatencyRing::new(4);
+        // Lifetime count keeps growing; the window holds the last 4.
+        for ms in [100u64, 200, 300, 400, 1, 2, 3, 4] {
+            r.record(Duration::from_millis(ms));
+        }
+        let s = r.snapshot();
+        assert_eq!(s.count, 8);
+        // Only the 1–4 ms tail is in the window now.
+        assert!(s.max_us <= 5_000.0, "stale sample survived: {}", s.max_us);
+        assert!(s.p50_us >= 1_000.0 && s.p50_us <= 4_000.0);
+        // Partial window: percentiles over what is there.
+        let r = LatencyRing::new(16);
+        r.record(Duration::from_millis(7));
+        let s = r.snapshot();
+        assert_eq!(s.count, 1);
+        assert!((s.p50_us - 7_000.0).abs() < 100.0);
     }
 }

@@ -106,6 +106,34 @@ impl ActivationBatch {
         self.data.clear();
         self.data.resize(batch * n, 0.0);
     }
+
+    /// Append one row, growing the batch by one — the continuous batcher's
+    /// slot-join primitive. O(n); allocation-free once the buffer has
+    /// reached its high-water capacity. An empty batch adopts the row's
+    /// dimension.
+    pub fn push_row(&mut self, row: &[f32]) {
+        if self.batch == 0 {
+            self.n = row.len();
+        }
+        assert_eq!(row.len(), self.n, "row dimension mismatch");
+        self.data.extend_from_slice(row);
+        self.batch += 1;
+    }
+
+    /// Remove row `b` by moving the **last** row into its place and
+    /// shrinking the batch by one — the continuous batcher's slot-free
+    /// primitive. O(n), never shifts the rows in between, never
+    /// reallocates.
+    pub fn swap_remove_row(&mut self, b: usize) {
+        assert!(b < self.batch, "row index out of range");
+        let last = self.batch - 1;
+        if b != last {
+            let (head, tail) = self.data.split_at_mut(last * self.n);
+            head[b * self.n..(b + 1) * self.n].copy_from_slice(&tail[..self.n]);
+        }
+        self.data.truncate(last * self.n);
+        self.batch = last;
+    }
 }
 
 impl Default for ActivationBatch {
@@ -214,5 +242,29 @@ mod tests {
     #[should_panic(expected = "row dimension mismatch")]
     fn ragged_rows_panic() {
         ActivationBatch::from_rows(&[&[1.0, 2.0], &[1.0]]);
+    }
+
+    #[test]
+    fn push_and_swap_remove_rows() {
+        let mut a = ActivationBatch::default();
+        a.push_row(&[1.0, 2.0]);
+        a.push_row(&[3.0, 4.0]);
+        a.push_row(&[5.0, 6.0]);
+        assert_eq!((a.batch(), a.dim()), (3, 2));
+        // Removing the middle row moves the last row into its place.
+        a.swap_remove_row(0);
+        assert_eq!(a.batch(), 2);
+        assert_eq!(a.row(0), &[5.0, 6.0]);
+        assert_eq!(a.row(1), &[3.0, 4.0]);
+        // Removing the last row is a pure truncate.
+        a.swap_remove_row(1);
+        assert_eq!(a.batch(), 1);
+        assert_eq!(a.row(0), &[5.0, 6.0]);
+        a.swap_remove_row(0);
+        assert_eq!(a.batch(), 0);
+        // The emptied batch keeps its dimension and accepts new rows
+        // without reallocating.
+        a.push_row(&[7.0, 8.0]);
+        assert_eq!(a.row(0), &[7.0, 8.0]);
     }
 }

@@ -334,6 +334,68 @@ impl RnnLm {
         }
     }
 
+    /// Append one session's state as a new column of a batched state — the
+    /// continuous batcher's **slot join**: a sequence arriving mid-decode
+    /// enters the running batch at the next timestep boundary without
+    /// re-gathering the columns already resident. `out` must be a batch of
+    /// this model's kind and layer count (an empty one from
+    /// [`Self::zero_state_batch`]`(0)` qualifies, and any kind/shape
+    /// mismatch on an empty batch is normalized in place). O(layers ·
+    /// hidden); allocation-free once the batch has reached its high-water
+    /// capacity. Column values are bit-identical to a full
+    /// [`Self::gather_states_into`] of the same composition.
+    pub fn push_state_column(&self, s: &LmState, out: &mut LmStateBatch) {
+        let layers_ok = match &*out {
+            LmStateBatch::Lstm(layers) => {
+                self.config.kind == RnnKind::Lstm && layers.len() == self.config.layers
+            }
+            LmStateBatch::Gru(layers) => {
+                self.config.kind == RnnKind::Gru && layers.len() == self.config.layers
+            }
+        };
+        if !layers_ok {
+            assert_eq!(out.batch(), 0, "state-batch kind/shape mismatch on a non-empty batch");
+            *out = self.zero_state_batch(0);
+        }
+        match (s, out) {
+            (LmState::Lstm(v), LmStateBatch::Lstm(layers)) => {
+                assert_eq!(v.len(), layers.len(), "layer count mismatch");
+                for (sv, lb) in v.iter().zip(layers.iter_mut()) {
+                    lb.push_state(sv);
+                }
+            }
+            (LmState::Gru(v), LmStateBatch::Gru(layers)) => {
+                assert_eq!(v.len(), layers.len(), "layer count mismatch");
+                for (sv, lb) in v.iter().zip(layers.iter_mut()) {
+                    lb.push_row(sv);
+                }
+            }
+            _ => panic!("session state kind does not match the model"),
+        }
+    }
+
+    /// Free column `b` of a batched state by moving the **last** column
+    /// into its place — the continuous batcher's **slot free**: a finished
+    /// sequence leaves the running batch in O(layers · hidden) without
+    /// disturbing any other resident column's values. Extract the column
+    /// first ([`Self::scatter_state_into`]) if it is still needed. The
+    /// caller owns the index remap (the sequence that lived in the last
+    /// column now answers to index `b`).
+    pub fn swap_remove_state_column(&self, state: &mut LmStateBatch, b: usize) {
+        match state {
+            LmStateBatch::Lstm(layers) => {
+                for lb in layers.iter_mut() {
+                    lb.swap_remove(b);
+                }
+            }
+            LmStateBatch::Gru(layers) => {
+                for lb in layers.iter_mut() {
+                    lb.swap_remove_row(b);
+                }
+            }
+        }
+    }
+
     /// Split a batched state back into per-session states (inverse of
     /// [`Self::gather_states`]). A thin wrapper over
     /// [`Self::scatter_state_into`].
@@ -664,6 +726,37 @@ mod tests {
         let refs: Vec<&LmState> = singles.iter().collect();
         let gathered = lm.gather_states(&refs);
         assert_eq!(lm.scatter_states(&gathered), singles);
+    }
+
+    #[test]
+    fn push_and_swap_remove_columns_match_gather() {
+        for kind in [RnnKind::Lstm, RnnKind::Gru] {
+            let lm = RnnLm::random(tiny(kind), 21, PrecisionPolicy::quantized(2, 2));
+            let mut singles: Vec<LmState> = (0..4).map(|_| lm.zero_state()).collect();
+            for (i, s) in singles.iter_mut().enumerate() {
+                lm.step(2 * i + 1, s);
+                lm.step(3 * i + 2, s);
+            }
+            // Joining columns one by one builds the same batch as a gather.
+            let mut batch = lm.zero_state_batch(0);
+            for s in &singles {
+                lm.push_state_column(s, &mut batch);
+            }
+            let refs: Vec<&LmState> = singles.iter().collect();
+            assert_eq!(batch, lm.gather_states(&refs));
+            // Freeing column 1 moves column 3 into its place: the result
+            // equals a gather of [0, 3, 2].
+            lm.swap_remove_state_column(&mut batch, 1);
+            let expect = lm.gather_states(&[&singles[0], &singles[3], &singles[2]]);
+            assert_eq!(batch, expect);
+            // Drain to empty, then re-join into the kept capacity.
+            lm.swap_remove_state_column(&mut batch, 2);
+            lm.swap_remove_state_column(&mut batch, 0);
+            lm.swap_remove_state_column(&mut batch, 0);
+            assert_eq!(batch.batch(), 0);
+            lm.push_state_column(&singles[2], &mut batch);
+            assert_eq!(batch, lm.gather_states(&[&singles[2]]));
+        }
     }
 
     #[test]

@@ -75,6 +75,36 @@ impl LstmStateBatch {
         }
     }
 
+    /// Append one session's `(h, c)` as a new batch column — the continuous
+    /// batcher's slot-join primitive. O(hidden); allocation-free once the
+    /// buffers are at their high-water capacity.
+    pub fn push_state(&mut self, s: &LstmState) {
+        if self.batch == 0 {
+            self.hidden = s.h.len();
+        }
+        assert_eq!(s.h.len(), self.hidden, "state dimension mismatch");
+        assert_eq!(s.c.len(), self.hidden, "state dimension mismatch");
+        self.h.push_row(&s.h);
+        self.c.extend_from_slice(&s.c);
+        self.batch += 1;
+    }
+
+    /// Free column `b` by moving the **last** column into its place — the
+    /// continuous batcher's slot-free primitive. Extract the column first
+    /// (e.g. [`Self::state`]) if its values are still needed.
+    pub fn swap_remove(&mut self, b: usize) {
+        assert!(b < self.batch, "column index out of range");
+        self.h.swap_remove_row(b);
+        let last = self.batch - 1;
+        let h = self.hidden;
+        if b != last {
+            let (head, tail) = self.c.split_at_mut(last * h);
+            head[b * h..(b + 1) * h].copy_from_slice(&tail[..h]);
+        }
+        self.c.truncate(last * h);
+        self.batch = last;
+    }
+
     /// Reshape in place to an all-zero `batch × hidden` state (capacity
     /// kept — the double-buffer primitive of the `_into` step path).
     pub fn reset(&mut self, batch: usize, hidden: usize) {

@@ -1,21 +1,42 @@
-//! The dynamic batcher + inference loop.
+//! The batching inference loop: fixed timestep groups or continuous
+//! batching, one code path for the actual decode.
 //!
-//! Requests queue on a channel; the batcher drains up to `max_batch` of
-//! them (waiting at most `batch_wait` to fill a batch — the classic
-//! throughput/latency knob), then runs generation in **lockstep across the
-//! batch**: one timestep for every active request per inner iteration, so
-//! short requests finish early and the weight planes are walked once per
-//! timestep group (Fig. 3 right). Each batched timestep executes on the
-//! server's [`Exec`] worker pool (`config.exec`), which row-shards every
-//! GEMM across cores — bit-exactly, so neither batching nor threading is
-//! observable to clients.
+//! **Grouped mode** (the classic [`Self::run`] loop with
+//! `continuous = false`): requests queue on a channel; the batcher drains
+//! up to `max_batch` of them (waiting at most `batch_wait` to fill a batch
+//! — the throughput/latency knob), then runs the whole group to completion
+//! before looking at the queue again.
+//!
+//! **Continuous mode** (`continuous = true`, the event-loop front end's
+//! default): there is no group barrier. The decode batch is a set of
+//! **slots** over a state batch that stays resident across timesteps; a
+//! new request joins at the next timestep boundary
+//! ([`RnnLm::push_state_column`]) and a finished sequence frees its slot
+//! immediately ([`RnnLm::swap_remove_state_column`]) — a short request
+//! never waits for a long one it happens to share a batch with.
+//! Slot bookkeeping is swap-remove in O(joins + leaves) per timestep;
+//! the steady-state timestep itself is the zero-allocation
+//! [`RnnLm::step_batch_into_exec`] on the server's persistent workspace.
+//! Admission control backs the loop: at most `max_slots` sequences decode
+//! concurrently, at most `queue_depth` wait behind them, and anything
+//! beyond that is shed instantly with [`Reply::Busy`] (`ERR BUSY` on the
+//! wire) instead of building unbounded latency. Generations for a session
+//! already decoding are held until its slot leaves (per-session
+//! serialization — pipelined requests continue state exactly as if sent
+//! one at a time; unrelated sessions admit past them).
+//!
+//! Both modes run every batched timestep on the server's [`Exec`] worker
+//! pool (`config.exec`), which row-shards every GEMM across cores —
+//! bit-exactly, so neither batching mode nor threading is observable to
+//! clients: the tokens equal a serial `max_batch = 1` run, always.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::exec::{Exec, ExecConfig};
-use crate::metrics::{Counters, LatencyRecorder};
+use crate::metrics::{Counters, LatencyRing};
 use crate::model::lm::{LmState, LmStateBatch, LmStepWorkspace};
 use crate::model::math::argmax;
 use crate::model::OutputBatch;
@@ -28,6 +49,15 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     pub batch_wait: Duration,
     pub max_sessions: usize,
+    /// Continuous batching: join/leave at timestep boundaries instead of
+    /// fixed prime+decode groups. The event-loop front end's mode.
+    pub continuous: bool,
+    /// Max sequences decoding concurrently in continuous mode
+    /// (`0` ⇒ `max_batch`).
+    pub max_slots: usize,
+    /// Bounded pending queue in continuous mode; a generation request
+    /// arriving with the queue full is shed with [`Reply::Busy`].
+    pub queue_depth: usize,
     /// Worker-pool size for the batched forward (`threads = 1` ⇒ the exact
     /// serial path, `0` ⇒ auto). See [`ExecConfig`].
     pub exec: ExecConfig,
@@ -39,6 +69,9 @@ impl Default for BatcherConfig {
             max_batch: 16,
             batch_wait: Duration::from_micros(500),
             max_sessions: 1024,
+            continuous: false,
+            max_slots: 0,
+            queue_depth: 128,
             exec: ExecConfig::auto(),
         }
     }
@@ -49,11 +82,11 @@ pub struct Request {
     pub session: u64,
     pub max_new: usize,
     pub prime: Vec<usize>,
-    pub respond: Sender<Response>,
+    pub respond: Respond,
     pub enqueued: Instant,
 }
 
-/// The batcher's reply.
+/// A completed generation.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub tokens: Vec<usize>,
@@ -61,22 +94,70 @@ pub struct Response {
     pub compute_us: f64,
 }
 
-/// One in-flight generation request inside a lockstep batch.
-struct Slot {
-    req: Request,
-    state: LmState,
-    out: Vec<usize>,
-    last: usize,
-    queue_us: f64,
+/// Every reply the batcher can produce, one type for every front end.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Gen(Response),
+    Score(f64),
+    /// `true` ⇒ the session existed and was dropped.
+    End(bool),
+    Stats(String),
+    /// Load shed: the pending queue was full when the request arrived.
+    Busy { queued: usize, depth: usize },
+}
+
+/// Where a completed [`Reply`] goes. The thread-per-connection front end
+/// blocks on a channel; the event loop registers a [`ReplySink`] that
+/// enqueues the completion and wakes the owning loop.
+pub enum Respond {
+    Channel(Sender<Reply>),
+    Sink { sink: Arc<dyn ReplySink>, conn: u64, serial: u64 },
+}
+
+impl Respond {
+    pub fn send(self, reply: Reply) {
+        match self {
+            Respond::Channel(tx) => {
+                let _ = tx.send(reply);
+            }
+            Respond::Sink { sink, conn, serial } => sink.complete(conn, serial, reply),
+        }
+    }
+}
+
+/// Asynchronous completion target (the event loop's half of [`Respond`]).
+pub trait ReplySink: Send + Sync {
+    fn complete(&self, conn: u64, serial: u64, reply: Reply);
 }
 
 /// Work items multiplexed onto the batcher thread.
 pub enum Work {
     Gen(Request),
-    Score { tokens: Vec<usize>, respond: Sender<f64> },
-    End { session: u64, respond: Sender<bool> },
-    Stats { respond: Sender<String> },
+    Score { tokens: Vec<usize>, respond: Respond },
+    End { session: u64, respond: Respond },
+    Stats { text: bool, respond: Respond },
     Shutdown,
+}
+
+/// One sequence occupying a batch slot. `slots[i]` always describes column
+/// `i` of the resident state batch; the parallel `tokens[i]` holds the
+/// token that column consumes at the next timestep.
+struct SeqSlot {
+    session: u64,
+    prime: Vec<usize>,
+    /// Prime tokens consumed so far; `fed == prime.len()` ⇒ decoding.
+    fed: usize,
+    out: Vec<usize>,
+    max_new: usize,
+    respond: Respond,
+    queue_us: f64,
+    joined: Instant,
+    /// Finished this timestep (final emitted token consumed); freed at the
+    /// end of the timestep.
+    done: bool,
+    /// Reusable per-session state buffer: holds the restored session state
+    /// at join, receives the extracted column at leave.
+    state_buf: LmState,
 }
 
 /// The inference server state machine. Drive it with [`Self::run`] on a
@@ -84,9 +165,11 @@ pub enum Work {
 ///
 /// The server owns the decode-path workspaces (`step_state`, `step_logits`,
 /// `step_ws`): they grow to the max-batch high-water mark once and are then
-/// reused across every prime + decode timestep group of every batch, so a
-/// steady-state timestep runs the model's zero-allocation
-/// [`RnnLm::step_batch_into_exec`] path end to end.
+/// reused across every timestep of every request, so a steady-state
+/// timestep runs the model's zero-allocation
+/// [`RnnLm::step_batch_into_exec`] path end to end. In continuous mode,
+/// `step_state` is the **resident** decode batch — columns are pushed and
+/// swap-removed at timestep boundaries and are never re-gathered.
 pub struct InferenceServer {
     model: Arc<RnnLm>,
     sessions: SessionStore,
@@ -95,7 +178,10 @@ pub struct InferenceServer {
     step_state: LmStateBatch,
     step_logits: OutputBatch,
     step_ws: LmStepWorkspace,
-    pub latency: Arc<LatencyRecorder>,
+    slots: Vec<SeqSlot>,
+    tokens: Vec<usize>,
+    pending: VecDeque<Request>,
+    pub latency: Arc<LatencyRing>,
     pub counters: Arc<Counters>,
 }
 
@@ -108,9 +194,13 @@ impl InferenceServer {
     /// Build with an existing engine (shares a pool already used to
     /// quantize the model, instead of spawning a second one). The stored
     /// config is normalized to the engine actually running, so
-    /// `config.exec` can never disagree with the pool serving requests.
+    /// `config.exec` can never disagree with the pool serving requests;
+    /// `max_slots = 0` resolves to `max_batch`.
     pub fn with_exec(model: Arc<RnnLm>, mut config: BatcherConfig, exec: Exec) -> Self {
         config.exec = ExecConfig::with_threads(exec.threads());
+        if config.max_slots == 0 {
+            config.max_slots = config.max_batch;
+        }
         let step_state = model.zero_state_batch(0);
         InferenceServer {
             model,
@@ -120,7 +210,10 @@ impl InferenceServer {
             step_state,
             step_logits: OutputBatch::zeros(0, 0),
             step_ws: LmStepWorkspace::new(),
-            latency: Arc::new(LatencyRecorder::new()),
+            slots: Vec::new(),
+            tokens: Vec::new(),
+            pending: VecDeque::new(),
+            latency: Arc::new(LatencyRing::new(1024)),
             counters: Arc::new(Counters::new()),
         }
     }
@@ -130,8 +223,17 @@ impl InferenceServer {
         &self.exec
     }
 
-    /// Blocking event loop: drain work, batch generations, reply.
-    pub fn run(mut self, rx: Receiver<Work>) {
+    /// Blocking work loop; dispatches on the configured batching mode.
+    pub fn run(self, rx: Receiver<Work>) {
+        if self.config.continuous {
+            self.run_continuous(rx)
+        } else {
+            self.run_grouped(rx)
+        }
+    }
+
+    /// Grouped mode: drain work, collect a batch, run it to completion.
+    fn run_grouped(mut self, rx: Receiver<Work>) {
         loop {
             // Block for the first item.
             let first = match rx.recv() {
@@ -165,133 +267,315 @@ impl InferenceServer {
         }
     }
 
-    /// Handle non-generation work inline; push generations into the batch.
+    /// Continuous mode: admit work between timesteps, never a group
+    /// barrier. Blocks only when fully idle.
+    fn run_continuous(mut self, rx: Receiver<Work>) {
+        loop {
+            if self.slots.is_empty() && self.pending.is_empty() {
+                // Idle: block until something arrives.
+                match rx.recv() {
+                    Ok(w) => {
+                        if !self.absorb(w) {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+            // Drain whatever else arrived while the last timestep ran.
+            loop {
+                match rx.try_recv() {
+                    Ok(w) => {
+                        if !self.absorb(w) {
+                            return;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        if self.slots.is_empty() && self.pending.is_empty() {
+                            return;
+                        }
+                        break;
+                    }
+                }
+            }
+            // Join pending sequences into slots freed by the last
+            // timestep's leaves.
+            self.admit();
+            if !self.slots.is_empty() {
+                self.timestep();
+            }
+        }
+    }
+
+    /// Move pending requests into free slots. Only ever called between
+    /// timesteps, so a join always lands exactly at a boundary.
+    ///
+    /// A request whose session is already decoding in a slot is held back
+    /// until that slot leaves: per-session generations serialize, so a
+    /// client pipelining `GEN`s on one session observes exactly the
+    /// sequential state handoff (the second request continues from the
+    /// first's final state, never from a stale or zero snapshot). Held
+    /// requests keep their queue position relative to their own session;
+    /// unrelated sessions may admit past them — no head-of-line blocking.
+    fn admit(&mut self) {
+        let mut i = 0;
+        while self.slots.len() < self.config.max_slots && i < self.pending.len() {
+            if self.session_decoding(self.pending[i].session) {
+                i += 1;
+                continue;
+            }
+            let req = self.pending.remove(i).expect("index checked in bounds");
+            self.join_slot(req);
+            // `remove` shifted the next unexamined request down to `i`.
+        }
+    }
+
+    /// Is this session currently resident in a decode slot? O(slots) — the
+    /// slot count is small by construction (`max_slots`).
+    fn session_decoding(&self, session: u64) -> bool {
+        self.slots.iter().any(|s| s.session == session)
+    }
+
+    /// Absorb one work item in continuous mode: generations pass admission
+    /// control into the pending queue, everything else answers inline.
     /// Returns false on shutdown.
+    fn absorb(&mut self, w: Work) -> bool {
+        match w {
+            Work::Gen(req) => {
+                if self.pending.len() >= self.config.queue_depth {
+                    Counters::inc(&self.counters.shed, 1);
+                    req.respond.send(Reply::Busy {
+                        queued: self.pending.len(),
+                        depth: self.config.queue_depth,
+                    });
+                } else {
+                    Counters::inc(&self.counters.requests, 1);
+                    self.pending.push_back(req);
+                    // A free slot takes the head of the queue right away
+                    // (we are between timesteps here), so `queue_depth`
+                    // bounds the wait line, not slots + line.
+                    self.admit();
+                }
+                true
+            }
+            other => self.control(other),
+        }
+    }
+
+    /// Handle non-generation work inline; push generations into the batch
+    /// (grouped mode). Returns false on shutdown.
     fn dispatch_or_collect(&mut self, w: Work, gens: &mut Vec<Request>) -> bool {
         match w {
-            Work::Gen(r) => gens.push(r),
+            Work::Gen(r) => {
+                gens.push(r);
+                true
+            }
+            other => self.control(other),
+        }
+    }
+
+    /// Score / End / Stats / Shutdown — identical in both modes. Returns
+    /// false on shutdown.
+    fn control(&mut self, w: Work) -> bool {
+        match w {
+            Work::Gen(_) => unreachable!("generation handled by the mode-specific path"),
             Work::Score { tokens, respond } => {
-                let ppw = self.model.ppw(&tokens);
-                let _ = respond.send(ppw);
                 Counters::inc(&self.counters.requests, 1);
+                respond.send(Reply::Score(self.model.ppw(&tokens)));
             }
             Work::End { session, respond } => {
-                let _ = respond.send(self.sessions.remove(session));
+                respond.send(Reply::End(self.sessions.remove(session)));
             }
-            Work::Stats { respond } => {
-                let snap = self.latency.snapshot();
-                let _ = respond.send(format!(
-                    "{} requests={} tokens={} batches={} evictions={} sessions={} \
-                     kernel={} threads={}",
-                    snap.report("latency"),
-                    Counters::get(&self.counters.requests),
-                    Counters::get(&self.counters.tokens_generated),
-                    Counters::get(&self.counters.batches),
-                    self.sessions.evictions,
-                    self.sessions.len(),
-                    crate::kernels::backend::active(),
-                    self.exec.threads(),
-                ));
+            Work::Stats { text, respond } => {
+                respond.send(Reply::Stats(self.stats_payload(text)));
             }
             Work::Shutdown => return false,
         }
         true
     }
 
-    /// One batched timestep across the slots selected by `active`: gather
-    /// into the server's reused state batch → [`RnnLm::step_batch_into_exec`]
-    /// on the persistent workspace → scatter back into the slots' state
-    /// buffers in place, updating each slot's greedy token. All the step
-    /// buffers are reused across timestep groups; once at the max-batch
-    /// high-water mark, a timestep allocates nothing beyond the small
-    /// per-group bookkeeping lists in [`Self::process_batch`].
-    fn step_active(&mut self, slots: &mut [Slot], active: &[usize], tokens: &[usize]) {
-        let refs: Vec<&LmState> = active.iter().map(|&i| &slots[i].state).collect();
-        self.model.gather_states_into(&refs, &mut self.step_state);
+    /// The `STATS` payload: single-line JSON, or the human-readable line
+    /// behind `STATS TEXT`.
+    fn stats_payload(&self, text: bool) -> String {
+        let snap = self.latency.snapshot();
+        let c = &self.counters;
+        if text {
+            return format!(
+                "{} requests={} tokens={} batches={} timesteps={} shed={} active={} queued={} \
+                 evictions={} sessions={} mode={} kernel={} threads={}",
+                snap.report("latency"),
+                Counters::get(&c.requests),
+                Counters::get(&c.tokens_generated),
+                Counters::get(&c.batches),
+                Counters::get(&c.decode_timesteps),
+                Counters::get(&c.shed),
+                self.slots.len(),
+                self.pending.len(),
+                self.sessions.evictions,
+                self.sessions.len(),
+                if self.config.continuous { "continuous" } else { "grouped" },
+                crate::kernels::backend::active(),
+                self.exec.threads(),
+            );
+        }
+        // NaN (empty latency window) is not valid JSON; report zeros.
+        let f = |v: f64| if v.is_finite() { v } else { 0.0 };
+        format!(
+            "{{\"mode\":\"{}\",\"active_slots\":{},\"max_slots\":{},\"queued\":{},\
+             \"queue_depth\":{},\"shed\":{},\"requests\":{},\"tokens_generated\":{},\
+             \"batches\":{},\"decode_timesteps\":{},\"sessions\":{},\"evictions\":{},\
+             \"kernel\":\"{}\",\"threads\":{},\"latency_us\":{{\"count\":{},\"window\":{},\
+             \"mean\":{:.1},\"p50\":{:.1},\"p95\":{:.1},\"p99\":{:.1},\"max\":{:.1}}}}}",
+            if self.config.continuous { "continuous" } else { "grouped" },
+            self.slots.len(),
+            self.config.max_slots,
+            self.pending.len(),
+            self.config.queue_depth,
+            Counters::get(&c.shed),
+            Counters::get(&c.requests),
+            Counters::get(&c.tokens_generated),
+            Counters::get(&c.batches),
+            Counters::get(&c.decode_timesteps),
+            self.sessions.len(),
+            self.sessions.evictions,
+            crate::kernels::backend::active(),
+            self.exec.threads(),
+            snap.count,
+            snap.count.min(self.latency.capacity()),
+            f(snap.mean_us),
+            f(snap.p50_us),
+            f(snap.p95_us),
+            f(snap.p99_us),
+            f(snap.max_us),
+        )
+    }
+
+    /// Join one request into a free slot: restore (or zero) its session
+    /// state, push it as a new column of the resident state batch, and
+    /// queue its first input token. O(layers · hidden), at a timestep
+    /// boundary only.
+    fn join_slot(&mut self, req: Request) {
+        let Request { session, max_new, prime, respond, enqueued } = req;
+        let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+        let state_buf = self.sessions.take(session).unwrap_or_else(|| self.model.zero_state());
+        self.model.push_state_column(&state_buf, &mut self.step_state);
+        let mut out = Vec::new();
+        // An empty prime (direct-API callers only; the wire protocol
+        // requires ≥ 1) decodes from token 0, which is itself emitted —
+        // the grouped batcher's historical semantics, preserved exactly.
+        let first = match prime.first() {
+            Some(&t) => t,
+            None => {
+                out.push(0);
+                0
+            }
+        };
+        self.tokens.push(first);
+        self.slots.push(SeqSlot {
+            session,
+            prime,
+            fed: 0,
+            out,
+            max_new,
+            respond,
+            queue_us,
+            joined: Instant::now(),
+            done: false,
+            state_buf,
+        });
+    }
+
+    /// Free slot `i` after the timestep that consumed its final token:
+    /// extract its state column into the slot's own buffer, swap-remove the
+    /// column (the last slot takes index `i` — O(layers · hidden), no
+    /// shifting), save the session, and reply.
+    fn leave_slot(&mut self, i: usize) {
+        let mut slot = self.slots.swap_remove(i);
+        self.tokens.swap_remove(i);
+        self.model.scatter_state_into(&self.step_state, i, &mut slot.state_buf);
+        self.model.swap_remove_state_column(&mut self.step_state, i);
+        let compute_us = slot.joined.elapsed().as_secs_f64() * 1e6;
+        Counters::inc(&self.counters.tokens_generated, slot.out.len() as u64);
+        self.latency.record(Duration::from_secs_f64((slot.queue_us + compute_us) / 1e6));
+        self.sessions.put(slot.session, slot.state_buf);
+        slot.respond.send(Reply::Gen(Response {
+            tokens: slot.out,
+            queue_us: slot.queue_us,
+            compute_us,
+        }));
+    }
+
+    /// One lockstep timestep across every occupied slot: batched forward on
+    /// the resident state, then per-slot advance (next prime token, or emit
+    /// the greedy token), then free the finished slots. Per-timestep
+    /// bookkeeping is O(active) for the advance and O(leaves) for the
+    /// frees — no per-timestep list rebuilds.
+    fn timestep(&mut self) {
+        debug_assert_eq!(self.slots.len(), self.tokens.len());
+        debug_assert_eq!(self.step_state.batch(), self.slots.len());
         self.model.step_batch_into_exec(
-            tokens,
+            &self.tokens,
             &mut self.step_state,
             &mut self.step_logits,
             &self.exec,
             &mut self.step_ws,
         );
-        for (k, &i) in active.iter().enumerate() {
-            self.model.scatter_state_into(&self.step_state, k, &mut slots[i].state);
-            slots[i].last = argmax(self.step_logits.row(k));
+        Counters::inc(&self.counters.decode_timesteps, 1);
+        let mut any_done = false;
+        for i in 0..self.slots.len() {
+            let slot = &mut self.slots[i];
+            if slot.fed < slot.prime.len() {
+                slot.fed += 1; // this step consumed prime[fed]
+            }
+            if slot.fed < slot.prime.len() {
+                self.tokens[i] = slot.prime[slot.fed];
+            } else if slot.out.len() >= slot.max_new {
+                // The token consumed this step was the last emitted one:
+                // the session state is now past it. Finished.
+                slot.done = true;
+                any_done = true;
+            } else {
+                // Greedy decode: the next input is this step's argmax, and
+                // selecting it *is* emitting it.
+                let t = argmax(self.step_logits.row(i));
+                slot.out.push(t);
+                self.tokens[i] = t;
+            }
+        }
+        if any_done {
+            // Reverse order: swap_remove moves an already-visited slot (the
+            // last) into the freed index.
+            for i in (0..self.slots.len()).rev() {
+                if self.slots[i].done {
+                    self.leave_slot(i);
+                }
+            }
         }
     }
 
-    /// Run one batch of generation requests in lockstep and reply to each.
+    /// Run one batch of generation requests in lockstep and reply to each —
+    /// grouped mode's inner loop, and the direct entry point for benches.
     ///
-    /// Both phases execute as **true batched forwards**
-    /// ([`RnnLm::step_batch_into_exec`] on the server's worker pool and
-    /// persistent workspaces): per timestep, the states of all still-active
-    /// slots are gathered into the reused `LmStateBatch`, the model runs
-    /// one batched step (each weight matrix swept once for the whole group
-    /// — Fig. 3 right — with its rows sharded across the pool), and the
-    /// updated states scatter back in place. Because the `_into` path
-    /// bit-matches per-session `step` for any thread count, neither
-    /// batching, threading, nor buffer reuse is visible to clients: a
-    /// session generates the same tokens regardless of who it was batched
-    /// with or how many cores served it.
+    /// Runs on the same slot machinery as continuous mode (join all, step
+    /// until every slot leaves), so every timestep is a **true batched
+    /// forward** ([`RnnLm::step_batch_into_exec`] on the server's worker
+    /// pool and persistent workspaces) and finished sequences free their
+    /// column mid-group instead of being rescanned every timestep. Because
+    /// the `_into` path bit-matches per-session `step` for any batch
+    /// composition and thread count, neither batching, threading, nor
+    /// buffer reuse is visible to clients: a session generates the same
+    /// tokens regardless of who it was batched with or how many cores
+    /// served it.
     pub fn process_batch(&mut self, batch: Vec<Request>) {
         Counters::inc(&self.counters.batches, 1);
         Counters::inc(&self.counters.requests, batch.len() as u64);
-        let start = Instant::now();
-
-        // Restore per-session states.
-        let mut slots: Vec<Slot> = batch
-            .into_iter()
-            .map(|req| {
-                let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
-                let state =
-                    self.sessions.take(req.session).unwrap_or_else(|| self.model.zero_state());
-                Slot { req, state, out: Vec::new(), last: 0, queue_us }
-            })
-            .collect();
-
-        // Prime phase: consume prompt tokens in lockstep (prompts of
-        // different lengths drop out as they finish).
-        let max_prime = slots.iter().map(|s| s.req.prime.len()).max().unwrap_or(0);
-        for pos in 0..max_prime {
-            let active: Vec<usize> =
-                (0..slots.len()).filter(|&i| pos < slots[i].req.prime.len()).collect();
-            let tokens: Vec<usize> = active.iter().map(|&i| slots[i].req.prime[pos]).collect();
-            self.step_active(&mut slots, &active, &tokens);
+        debug_assert!(self.slots.is_empty(), "grouped mode runs one batch at a time");
+        for req in batch {
+            self.join_slot(req);
         }
-
-        // Lockstep decode: one batched timestep across all active slots per
-        // round; short requests drop out early.
-        let max_rounds = slots.iter().map(|s| s.req.max_new).max().unwrap_or(0);
-        for round in 0..max_rounds {
-            let active: Vec<usize> =
-                (0..slots.len()).filter(|&i| round < slots[i].req.max_new).collect();
-            if active.is_empty() {
-                break;
-            }
-            let tokens: Vec<usize> = active
-                .iter()
-                .map(|&i| {
-                    let slot = &mut slots[i];
-                    slot.out.push(slot.last);
-                    slot.last
-                })
-                .collect();
-            self.step_active(&mut slots, &active, &tokens);
-        }
-
-        let compute_us = start.elapsed().as_secs_f64() * 1e6;
-        for slot in slots {
-            Counters::inc(&self.counters.tokens_generated, slot.out.len() as u64);
-            self.latency.record(Duration::from_secs_f64(
-                (slot.queue_us + compute_us) / 1e6,
-            ));
-            self.sessions.put(slot.req.session, slot.state);
-            let _ = slot.req.respond.send(Response {
-                tokens: slot.out,
-                queue_us: slot.queue_us,
-                compute_us,
-            });
+        while !self.slots.is_empty() {
+            self.timestep();
         }
     }
 }
@@ -302,21 +586,42 @@ mod tests {
     use crate::model::lm::{LmConfig, PrecisionPolicy, RnnKind};
     use std::sync::mpsc;
 
-    fn tiny_server() -> InferenceServer {
+    fn tiny_config() -> BatcherConfig {
+        BatcherConfig { max_batch: 4, ..Default::default() }
+    }
+
+    fn tiny_server_with(config: BatcherConfig) -> InferenceServer {
         let lm = RnnLm::random(
             LmConfig { kind: RnnKind::Lstm, vocab: 40, hidden: 16, layers: 1 },
             5,
             PrecisionPolicy::quantized(2, 2),
         );
-        InferenceServer::new(Arc::new(lm), BatcherConfig { max_batch: 4, ..Default::default() })
+        InferenceServer::new(Arc::new(lm), config)
     }
 
-    fn gen_req(session: u64, max_new: usize, prime: Vec<usize>) -> (Request, mpsc::Receiver<Response>) {
+    fn tiny_server() -> InferenceServer {
+        tiny_server_with(tiny_config())
+    }
+
+    fn gen_req(session: u64, max_new: usize, prime: Vec<usize>) -> (Request, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::channel();
         (
-            Request { session, max_new, prime, respond: tx, enqueued: Instant::now() },
+            Request {
+                session,
+                max_new,
+                prime,
+                respond: Respond::Channel(tx),
+                enqueued: Instant::now(),
+            },
             rx,
         )
+    }
+
+    fn recv_gen(rx: &mpsc::Receiver<Reply>) -> Response {
+        match rx.recv().unwrap() {
+            Reply::Gen(r) => r,
+            other => panic!("expected Reply::Gen, got {other:?}"),
+        }
     }
 
     #[test]
@@ -325,8 +630,8 @@ mod tests {
         let (r1, rx1) = gen_req(1, 5, vec![1, 2]);
         let (r2, rx2) = gen_req(2, 3, vec![7]);
         s.process_batch(vec![r1, r2]);
-        assert_eq!(rx1.recv().unwrap().tokens.len(), 5);
-        assert_eq!(rx2.recv().unwrap().tokens.len(), 3);
+        assert_eq!(recv_gen(&rx1).tokens.len(), 5);
+        assert_eq!(recv_gen(&rx2).tokens.len(), 3);
         assert_eq!(Counters::get(&s.counters.tokens_generated), 8);
     }
 
@@ -337,21 +642,53 @@ mod tests {
         let mut a = tiny_server();
         let (r, rx) = gen_req(9, 6, vec![4]);
         a.process_batch(vec![r]);
-        let whole = rx.recv().unwrap().tokens;
+        let whole = recv_gen(&rx).tokens;
 
         let mut b = tiny_server();
         let (r1, rx1) = gen_req(9, 3, vec![4]);
         b.process_batch(vec![r1]);
-        let first = rx1.recv().unwrap().tokens;
-        // Continue: prime with the last generated token's *successor* step
-        // already happened server-side; new prime continues the stream.
-        let (r2, rx2) = gen_req(9, 3, vec![whole[3 - 1 + 0]]);
-        // ^ prime with the token the first half ended on (whole[2] was the
-        //   last emitted; server state already consumed it + predicted next).
+        let first = recv_gen(&rx1).tokens;
+        // Continue: prime with the token the first half ended on (whole[2]
+        // was the last emitted; server state already consumed it).
+        let (r2, rx2) = gen_req(9, 3, vec![whole[2]]);
         b.process_batch(vec![r2]);
-        let second = rx2.recv().unwrap().tokens;
+        let second = recv_gen(&rx2).tokens;
         assert_eq!(first[..], whole[..3]);
         assert_eq!(second.len(), 3);
+    }
+
+    #[test]
+    fn pipelined_same_session_requests_serialize() {
+        // Sequential reference: two generations on one session, one at a
+        // time (the second continues the first's saved state).
+        let mut a = tiny_server();
+        let (r1, rx1) = gen_req(7, 5, vec![3, 8]);
+        a.process_batch(vec![r1]);
+        let first_ref = recv_gen(&rx1).tokens;
+        let (r2, rx2) = gen_req(7, 4, vec![11]);
+        a.process_batch(vec![r2]);
+        let second_ref = recv_gen(&rx2).tokens;
+
+        // Continuous server with plenty of free slots and both requests
+        // queued before it starts. Admission must hold the second back
+        // until the first leaves its slot (same session) — not decode
+        // both concurrently from a stale/zero state snapshot.
+        let s = tiny_server_with(BatcherConfig {
+            max_batch: 4,
+            continuous: true,
+            max_slots: 4,
+            ..Default::default()
+        });
+        let (tx, rx) = mpsc::channel();
+        let (r1, rx1) = gen_req(7, 5, vec![3, 8]);
+        let (r2, rx2) = gen_req(7, 4, vec![11]);
+        tx.send(Work::Gen(r1)).unwrap();
+        tx.send(Work::Gen(r2)).unwrap();
+        let handle = std::thread::spawn(move || s.run(rx));
+        assert_eq!(recv_gen(&rx1).tokens, first_ref, "first request must match sequential");
+        assert_eq!(recv_gen(&rx2).tokens, second_ref, "pipelined continuation must serialize");
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
     }
 
     #[test]
@@ -361,18 +698,29 @@ mod tests {
         let handle = std::thread::spawn(move || s.run(rx));
         let (g, grx) = gen_req(1, 4, vec![2, 3]);
         tx.send(Work::Gen(g)).unwrap();
-        assert_eq!(grx.recv().unwrap().tokens.len(), 4);
+        assert_eq!(recv_gen(&grx).tokens.len(), 4);
         let (stx, srx) = mpsc::channel();
-        tx.send(Work::Score { tokens: vec![1, 2, 3, 4], respond: stx }).unwrap();
-        assert!(srx.recv().unwrap() > 1.0);
+        tx.send(Work::Score { tokens: vec![1, 2, 3, 4], respond: Respond::Channel(stx) }).unwrap();
+        match srx.recv().unwrap() {
+            Reply::Score(ppw) => assert!(ppw > 1.0),
+            other => panic!("{other:?}"),
+        }
         let (etx, erx) = mpsc::channel();
-        tx.send(Work::End { session: 1, respond: etx }).unwrap();
-        assert!(erx.recv().unwrap());
+        tx.send(Work::End { session: 1, respond: Respond::Channel(etx) }).unwrap();
+        assert!(matches!(erx.recv().unwrap(), Reply::End(true)));
+        // JSON stats by default, the human-readable line behind text=true.
         let (mtx, mrx) = mpsc::channel();
-        tx.send(Work::Stats { respond: mtx }).unwrap();
-        let stats = mrx.recv().unwrap();
+        tx.send(Work::Stats { text: false, respond: Respond::Channel(mtx) }).unwrap();
+        let Reply::Stats(stats) = mrx.recv().unwrap() else { panic!() };
+        assert!(stats.starts_with('{') && stats.ends_with('}'), "{stats}");
+        assert!(stats.contains("\"requests\":2"), "{stats}");
+        assert!(stats.contains("\"mode\":\"grouped\""), "{stats}");
+        assert!(stats.contains("\"kernel\":\"") && stats.contains("\"threads\":"), "{stats}");
+        assert!(stats.contains("\"latency_us\":{\"count\":1,"), "{stats}");
+        let (mtx, mrx) = mpsc::channel();
+        tx.send(Work::Stats { text: true, respond: Respond::Channel(mtx) }).unwrap();
+        let Reply::Stats(stats) = mrx.recv().unwrap() else { panic!() };
         assert!(stats.contains("requests=2"), "{stats}");
-        // The active kernel backend and thread count report together.
         assert!(stats.contains("kernel=") && stats.contains("threads="), "{stats}");
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();
@@ -402,7 +750,7 @@ mod tests {
                 rxs.push(rx);
             }
             s.process_batch(reqs);
-            rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect::<Vec<_>>()
+            rxs.iter().map(|rx| recv_gen(rx).tokens).collect::<Vec<_>>()
         };
         let serial = run(ExecConfig::serial());
         for threads in [2usize, 3, 8] {
@@ -423,11 +771,103 @@ mod tests {
             rxs.push(grx);
         }
         for rx in rxs {
-            assert_eq!(rx.recv().unwrap().tokens.len(), 2);
+            assert_eq!(recv_gen(&rx).tokens.len(), 2);
         }
         // All four must have been served in at most 2 batch flushes (the
         // first may fire alone depending on scheduling).
         assert!(Counters::get(&counters.batches) <= 4);
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn continuous_bitmatches_grouped_and_serial() {
+        // Staggered sessions with different lengths joining and leaving
+        // mid-decode must produce exactly the tokens a max_batch = 1
+        // grouped reference produces per session.
+        let scripts: Vec<(u64, usize, Vec<usize>)> = (0..6)
+            .map(|i| (i as u64, 3 + (i % 4), vec![(3 * i + 1) % 40, (7 * i + 2) % 40]))
+            .collect();
+
+        // Sequential reference: one request at a time, grouped server.
+        let mut reference = Vec::new();
+        {
+            let mut s = tiny_server_with(BatcherConfig { max_batch: 1, ..Default::default() });
+            for (sess, max_new, prime) in &scripts {
+                let (r, rx) = gen_req(*sess, *max_new, prime.clone());
+                s.process_batch(vec![r]);
+                reference.push(recv_gen(&rx).tokens);
+            }
+        }
+
+        // Continuous server, all requests in flight at once with a tiny
+        // slot budget so joins/leaves happen mid-decode.
+        let s = tiny_server_with(BatcherConfig {
+            continuous: true,
+            max_slots: 2,
+            queue_depth: 64,
+            ..Default::default()
+        });
+        let counters = s.counters.clone();
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || s.run(rx));
+        let rxs: Vec<_> = scripts
+            .iter()
+            .map(|(sess, max_new, prime)| {
+                let (r, rx) = gen_req(*sess, *max_new, prime.clone());
+                tx.send(Work::Gen(r)).unwrap();
+                rx
+            })
+            .collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            assert_eq!(recv_gen(rx).tokens, reference[i], "session {i} diverged");
+        }
+        assert!(Counters::get(&counters.decode_timesteps) > 0);
+        assert_eq!(Counters::get(&counters.shed), 0);
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn admission_control_sheds_beyond_queue_depth() {
+        // One slot, queue depth one, three long requests sent while the
+        // loop is blocked inside the first timestep window: at least one
+        // must shed with Reply::Busy, and shed requests leave no trace in
+        // the session store.
+        let s = tiny_server_with(BatcherConfig {
+            continuous: true,
+            max_slots: 1,
+            queue_depth: 1,
+            ..Default::default()
+        });
+        let counters = s.counters.clone();
+        let (tx, rx) = mpsc::channel();
+        // Stuff the channel BEFORE the loop starts: deterministic shed.
+        let mut rxs = Vec::new();
+        for i in 0..3u64 {
+            let (r, rrx) = gen_req(i, 8, vec![1]);
+            tx.send(Work::Gen(r)).unwrap();
+            rxs.push(rrx);
+        }
+        let handle = std::thread::spawn(move || s.run(rx));
+        let mut served = 0;
+        let mut shed = 0;
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Reply::Gen(r) => {
+                    assert_eq!(r.tokens.len(), 8);
+                    served += 1;
+                }
+                Reply::Busy { queued, depth } => {
+                    assert_eq!((queued, depth), (1, 1));
+                    shed += 1;
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(served, 2, "slot + queue hold exactly two");
+        assert_eq!(shed, 1);
+        assert_eq!(Counters::get(&counters.shed), 1);
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();
     }

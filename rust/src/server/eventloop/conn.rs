@@ -1,0 +1,238 @@
+//! Per-connection state for the event loop: nonblocking socket, incremental
+//! line framing on the read side, a write buffer with partial-write resume,
+//! and an **in-order pending-reply queue** so pipelined requests answer in
+//! request order even though the batcher completes them asynchronously (a
+//! quick `STATS` never overtakes the `GEN` sent before it).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::fd::{AsRawFd, RawFd};
+
+use crate::server::protocol::split_lines;
+
+/// A request line longer than this (no newline seen) is protocol abuse;
+/// the connection is dropped. Generous: a max-length GEN line with 4096
+/// five-digit tokens is ~25 KB.
+pub const MAX_LINE: usize = 64 * 1024;
+
+/// Pipelined requests in flight per connection before the loop stops
+/// reading from it (per-connection backpressure: the client's TCP window
+/// fills instead of the server's memory).
+pub const MAX_PIPELINE: usize = 128;
+
+/// One slot in the in-order reply queue.
+enum Pending {
+    /// Reply text ready to flush (synchronous errors, completed work).
+    Ready(String),
+    /// Waiting for the batcher to complete serial number `n`.
+    Waiting(u64),
+}
+
+/// A multiplexed client connection.
+pub struct Connection {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pending: VecDeque<Pending>,
+    next_serial: u64,
+    /// Peer closed its write side; finish in-flight work, flush, then close.
+    pub eof: bool,
+    /// Interest currently registered with the poller (readable, writable).
+    pub interest: (bool, bool),
+}
+
+impl Connection {
+    pub fn new(stream: TcpStream) -> io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true)?;
+        Ok(Connection {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            next_serial: 0,
+            eof: false,
+            interest: (true, false),
+        })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.stream.as_raw_fd()
+    }
+
+    /// Drain the socket into the read buffer and extract complete lines.
+    /// Returns `Err` when the connection is unusable (reset, oversized
+    /// line); EOF sets `self.eof` instead so queued replies still flush.
+    pub fn read_lines(&mut self, lines: &mut Vec<String>) -> io::Result<()> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    if self.rbuf.len() > MAX_LINE && !self.rbuf.contains(&b'\n') {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "request line exceeds MAX_LINE",
+                        ));
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        split_lines(&mut self.rbuf, lines)
+    }
+
+    /// Queue a reply that is already known (parse errors, shutdown notices).
+    pub fn push_ready(&mut self, text: String) {
+        self.pending.push_back(Pending::Ready(text));
+    }
+
+    /// Reserve the next in-order reply slot for asynchronous work; returns
+    /// the serial number the completion must quote.
+    pub fn push_waiting(&mut self) -> u64 {
+        let serial = self.next_serial;
+        self.next_serial += 1;
+        self.pending.push_back(Pending::Waiting(serial));
+        serial
+    }
+
+    /// Fill a waiting slot with its completed reply. Unknown serials (slot
+    /// dropped) are ignored.
+    pub fn complete(&mut self, serial: u64, text: String) {
+        for slot in self.pending.iter_mut() {
+            if matches!(slot, Pending::Waiting(s) if *s == serial) {
+                *slot = Pending::Ready(text);
+                return;
+            }
+        }
+    }
+
+    /// Number of requests still in the reply queue (backpressure signal).
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Move head-of-line `Ready` replies into the write buffer and push
+    /// bytes to the socket. Returns `Err` when the peer is gone.
+    pub fn flush(&mut self) -> io::Result<()> {
+        while let Some(Pending::Ready(_)) = self.pending.front() {
+            let Some(Pending::Ready(text)) = self.pending.pop_front() else { unreachable!() };
+            self.wbuf.extend_from_slice(text.as_bytes());
+            self.wbuf.push(b'\n');
+        }
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        Ok(())
+    }
+
+    /// Unflushed bytes remain (the loop should register write interest).
+    pub fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// Reading more is useful: the peer is alive and the pipeline has room.
+    pub fn wants_read(&self) -> bool {
+        !self.eof && self.pending.len() < MAX_PIPELINE
+    }
+
+    /// Everything done: peer closed, no replies owed, buffer drained.
+    pub fn finished(&self) -> bool {
+        self.eof && self.pending.is_empty() && !self.wants_write()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pending_queue_answers_in_request_order() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = Connection::new(server).unwrap();
+
+        // Three pipelined requests: slow async, sync error, fast async.
+        let s0 = conn.push_waiting();
+        conn.push_ready("ERR bogus".into());
+        let s2 = conn.push_waiting();
+        assert_eq!(conn.in_flight(), 3);
+
+        // The fast request completes FIRST — nothing may flush yet because
+        // the head of line is still waiting.
+        conn.complete(s2, "OK STATS {}".into());
+        conn.flush().unwrap();
+        assert_eq!(conn.in_flight(), 3, "head-of-line reply must gate the queue");
+
+        // Head completes: all three flush, in request order.
+        conn.complete(s0, "OK GEN 1,2".into());
+        conn.flush().unwrap();
+        assert_eq!(conn.in_flight(), 0);
+        drop(conn);
+
+        let mut got = String::new();
+        let mut r = std::io::BufReader::new(client);
+        std::io::BufRead::read_line(&mut r, &mut got).unwrap();
+        assert_eq!(got, "OK GEN 1,2\n");
+        got.clear();
+        std::io::BufRead::read_line(&mut r, &mut got).unwrap();
+        assert_eq!(got, "ERR bogus\n");
+        got.clear();
+        std::io::BufRead::read_line(&mut r, &mut got).unwrap();
+        assert_eq!(got, "OK STATS {}\n");
+    }
+
+    #[test]
+    fn oversized_line_is_rejected() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = Connection::new(server).unwrap();
+
+        // Write from a helper thread: a blocking 68 KB write may not fit
+        // the socket buffers until the server side starts draining.
+        let writer = std::thread::spawn(move || {
+            let junk = vec![b'x'; MAX_LINE + 4096];
+            let _ = client.write_all(&junk);
+            client
+        });
+        // Nonblocking read may need a few passes for all bytes to land.
+        let mut lines = Vec::new();
+        let mut rejected = false;
+        for _ in 0..200 {
+            match conn.read_lines(&mut lines) {
+                Err(e) => {
+                    assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+                    rejected = true;
+                    break;
+                }
+                Ok(()) if conn.eof => break,
+                Ok(()) => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+        assert!(rejected, "oversized request line must be rejected");
+        assert!(lines.is_empty());
+        drop(conn); // unblocks the writer if it was waiting on buffer space
+        let _ = writer.join().unwrap();
+    }
+}

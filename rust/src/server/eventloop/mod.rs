@@ -1,0 +1,504 @@
+//! Async event-loop front end: thousands of connections on a few threads.
+//!
+//! The thread-per-connection front end in [`super::tcp`] burns one OS
+//! thread (and its stack) per client; at a few hundred idle sessions that
+//! is the dominant cost of the server. This module multiplexes instead: a
+//! small fixed pool of **loop threads**, each owning a level-triggered
+//! [`Poller`] (raw `epoll` on Linux, `kqueue` on the BSDs — no external
+//! crates, same std-only spirit as `exec/`) and a private set of
+//! nonblocking [`Connection`]s.
+//!
+//! Topology and data flow:
+//!
+//! ```text
+//!             accept            round-robin handoff
+//!   listener ───────▶ loop 0 ──────────────────────▶ loop 1..N-1
+//!                        │                               │
+//!        read/frame/parse│            Work channel       │
+//!                        └──────────────┬────────────────┘
+//!                                       ▼
+//!                                  batcher thread
+//!                                       │ Respond::Sink(conn, serial)
+//!                                       ▼
+//!                        completions channel + Waker per loop
+//! ```
+//!
+//! * **Loop 0** owns the nonblocking listener and accepts in a loop until
+//!   `WouldBlock`, handing each stream to a loop thread round-robin over a
+//!   channel followed by a [`Waker`] kick (a nonblocking socketpair write;
+//!   the loop registers the read side with its own poller, so a wake is
+//!   just one more readiness event).
+//! * **Reads** append to the per-connection buffer and split complete
+//!   lines incrementally — partial lines stay buffered, pipelined batches
+//!   dispatch together. Each parsed request reserves an in-order reply
+//!   slot ([`Connection::push_waiting`]) and goes to the batcher with
+//!   `Respond::Sink { conn, serial }`; parse errors answer synchronously
+//!   without a batcher round trip.
+//! * **Completions** come back on the loop's mpsc channel (the
+//!   [`ReplySink`] impl sends then wakes); the loop fills the reply slot,
+//!   flushes as far as the socket allows, and toggles write interest only
+//!   while unflushed bytes remain.
+//! * **Backpressure** is layered: a connection with `MAX_PIPELINE`
+//!   requests in flight stops being read (the client's TCP window fills),
+//!   and the batcher itself sheds `GEN` work with `ERR BUSY` once its
+//!   pending queue hits `queue_depth`.
+//! * **Shutdown** ([`EventLoopServer::shutdown`]) flips a flag, wakes every
+//!   loop, and joins the threads; dropping the loops closes their pollers
+//!   and connections.
+
+pub mod conn;
+pub mod poller;
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Reply, ReplySink, Request, Respond, Work};
+use super::protocol::{format_reply, parse_request, WireRequest};
+use conn::Connection;
+use poller::{PollEvent, Poller, WakeReader, Waker};
+
+/// Poller token for the loop's wake pipe.
+const WAKE: u64 = u64::MAX;
+/// Poller token for the listener (loop 0 only).
+const LISTEN: u64 = u64::MAX - 1;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EventLoopConfig {
+    /// Number of loop threads; 0 = auto (2 when the machine has ≥2 cores).
+    /// The loops only shuffle bytes and parse lines — decode compute lives
+    /// on the batcher's exec pool — so a small number is plenty.
+    pub loops: usize,
+}
+
+impl EventLoopConfig {
+    fn resolved_loops(&self) -> usize {
+        if self.loops > 0 {
+            return self.loops;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(2)
+    }
+}
+
+/// Handle to a running event-loop server.
+pub struct EventLoopServer {
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    wakers: Vec<Waker>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl EventLoopServer {
+    /// Ask every loop to exit and join the threads. In-flight batcher work
+    /// completes into closed channels harmlessly; open connections drop.
+    pub fn shutdown(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for w in &self.wakers {
+            w.wake();
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the loops exit (i.e. until some other handle on the
+    /// shutdown flag flips it). Used by the CLI to serve forever.
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Reply sink handed to the batcher: enqueue the completion on the owning
+/// loop's channel, then kick its waker so the loop notices immediately.
+struct EventSink {
+    tx: Sender<(u64, u64, Reply)>,
+    waker: Waker,
+}
+
+impl ReplySink for EventSink {
+    fn complete(&self, conn: u64, serial: u64, reply: Reply) {
+        if self.tx.send((conn, serial, reply)).is_ok() {
+            self.waker.wake();
+        }
+    }
+}
+
+/// Bind `addr` and spawn the loop threads. Returns once the listener is
+/// bound; the returned handle exposes the resolved address (for `:0`
+/// binds) and owns shutdown/join.
+pub fn serve(addr: &str, work: Sender<Work>, config: EventLoopConfig) -> Result<EventLoopServer> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let addr = listener.local_addr().context("local_addr")?;
+    let nloops = config.resolved_loops();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    // The listener object itself moves into loop 0 below — register its fd
+    // and hand over the same object, never a dup: kqueue drops a
+    // registration when the registered fd number closes, so a
+    // register-original/move-clone split would go deaf on the BSDs.
+    let mut listener = Some(listener);
+
+    // Build every loop's plumbing up front so loop 0 can hold all the
+    // handoff endpoints, and so poller/waker setup errors surface here
+    // instead of inside a detached thread.
+    let mut parts = Vec::with_capacity(nloops);
+    let mut peers: Vec<(Sender<TcpStream>, Waker)> = Vec::with_capacity(nloops);
+    for _ in 0..nloops {
+        let poller = Poller::new().context("create poller")?;
+        let (waker, wake_rx) = poller::waker().context("create waker")?;
+        poller.register(wake_rx.fd(), WAKE, true, false).context("register waker")?;
+        let (inc_tx, inc_rx) = channel::<TcpStream>();
+        let (comp_tx, comp_rx) = channel::<(u64, u64, Reply)>();
+        peers.push((inc_tx, waker.clone()));
+        parts.push((poller, waker, wake_rx, inc_rx, comp_tx, comp_rx));
+    }
+    poller_register_listener(&parts[0].0, listener.as_ref().expect("listener present"))?;
+
+    let mut handles = Vec::with_capacity(nloops);
+    let wakers: Vec<Waker> = peers.iter().map(|(_, w)| w.clone()).collect();
+    for (id, (poller, waker, wake_rx, inc_rx, comp_tx, comp_rx)) in parts.into_iter().enumerate() {
+        let ctx = LoopCtx {
+            poller,
+            wake_rx,
+            incoming: inc_rx,
+            completions: comp_rx,
+            sink: Arc::new(EventSink { tx: comp_tx, waker }),
+            work: work.clone(),
+            shutdown: shutdown.clone(),
+            listener: if id == 0 { listener.take() } else { None },
+            peers: if id == 0 { peers.clone() } else { Vec::new() },
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("amq-loop-{id}"))
+                .spawn(move || run_loop(id, ctx))
+                .context("spawn loop thread")?,
+        );
+    }
+    Ok(EventLoopServer { addr, shutdown, wakers, handles })
+}
+
+fn poller_register_listener(poller: &Poller, listener: &TcpListener) -> Result<()> {
+    use std::os::fd::AsRawFd;
+    poller.register(listener.as_raw_fd(), LISTEN, true, false).context("register listener")
+}
+
+/// Everything one loop thread owns.
+struct LoopCtx {
+    poller: Poller,
+    wake_rx: WakeReader,
+    /// Streams handed off by the acceptor (loop 0 round-robins here).
+    incoming: Receiver<TcpStream>,
+    /// Batcher completions routed back to this loop's connections.
+    completions: Receiver<(u64, u64, Reply)>,
+    sink: Arc<EventSink>,
+    work: Sender<Work>,
+    shutdown: Arc<AtomicBool>,
+    /// Loop 0 only: the shared listener.
+    listener: Option<TcpListener>,
+    /// Loop 0 only: handoff endpoint + waker for every loop (self included).
+    peers: Vec<(Sender<TcpStream>, Waker)>,
+}
+
+fn run_loop(id: usize, mut ctx: LoopCtx) {
+    let sink: Arc<dyn ReplySink> = ctx.sink.clone();
+    let mut conns: HashMap<u64, Connection> = HashMap::new();
+    let mut events: Vec<PollEvent> = Vec::new();
+    let mut lines: Vec<String> = Vec::new();
+    let mut next_token: u64 = 0;
+    let mut rr: usize = id; // stagger so multi-listener setups interleave
+
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        events.clear();
+        if ctx.poller.wait(&mut events, None).is_err() {
+            return;
+        }
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Drain (not index) so the arms may mutably borrow the rest of the
+        // loop state; the buffer's allocation is kept for the next pass.
+        for ev in events.drain(..) {
+            match ev.token {
+                WAKE => ctx.wake_rx.drain(),
+                LISTEN => accept_all(&ctx, &mut conns, &mut next_token, &mut rr),
+                token => {
+                    let mut dead = false;
+                    if let Some(conn) = conns.get_mut(&token) {
+                        if ev.readable {
+                            match conn.read_lines(&mut lines) {
+                                Ok(()) => {
+                                    for line in lines.drain(..) {
+                                        dispatch_line(conn, token, &line, &ctx.work, &sink);
+                                    }
+                                }
+                                Err(_) => dead = true,
+                            }
+                        }
+                        // Writable readiness needs no explicit branch: the
+                        // shared `finalize` below always attempts a flush.
+                    }
+                    if dead {
+                        close(&ctx.poller, &mut conns, token);
+                    } else {
+                        finalize(&ctx.poller, &mut conns, token);
+                    }
+                }
+            }
+        }
+        // Wake-driven queues, drained every pass (try_recv is cheap).
+        while let Ok((token, serial, reply)) = ctx.completions.try_recv() {
+            if let Some(conn) = conns.get_mut(&token) {
+                conn.complete(serial, format_reply(&reply));
+            }
+            finalize(&ctx.poller, &mut conns, token);
+        }
+        while let Ok(stream) = ctx.incoming.try_recv() {
+            register_conn(&ctx.poller, &mut conns, &mut next_token, stream);
+        }
+    }
+}
+
+/// Accept until `WouldBlock`, spreading connections round-robin across the
+/// loops. Level-triggered: anything left unaccepted re-fires next wait.
+fn accept_all(
+    ctx: &LoopCtx,
+    conns: &mut HashMap<u64, Connection>,
+    next_token: &mut u64,
+    rr: &mut usize,
+) {
+    let Some(listener) = &ctx.listener else { return };
+    let nloops = ctx.peers.len().max(1);
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let target = *rr % nloops;
+                *rr = rr.wrapping_add(1);
+                if target == 0 {
+                    register_conn(&ctx.poller, conns, next_token, stream);
+                } else {
+                    let (tx, waker) = &ctx.peers[target];
+                    if tx.send(stream).is_ok() {
+                        waker.wake();
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            // Transient accept errors (ECONNABORTED, EMFILE): drop this
+            // attempt; level-triggering retries on the next readiness.
+            Err(_) => break,
+        }
+    }
+}
+
+fn register_conn(
+    poller: &Poller,
+    conns: &mut HashMap<u64, Connection>,
+    next_token: &mut u64,
+    stream: TcpStream,
+) {
+    let Ok(conn) = Connection::new(stream) else { return };
+    let token = *next_token;
+    *next_token += 1;
+    if poller.register(conn.fd(), token, true, false).is_ok() {
+        conns.insert(token, conn);
+    }
+}
+
+/// Parse one request line and route it: malformed lines answer in place,
+/// valid ones reserve an in-order reply slot and go to the batcher.
+fn dispatch_line(
+    conn: &mut Connection,
+    token: u64,
+    line: &str,
+    work: &Sender<Work>,
+    sink: &Arc<dyn ReplySink>,
+) {
+    let req = match parse_request(line) {
+        Ok(req) => req,
+        Err(e) => {
+            conn.push_ready(format!("ERR {e}"));
+            return;
+        }
+    };
+    let serial = conn.push_waiting();
+    let respond = Respond::Sink { sink: sink.clone(), conn: token, serial };
+    let w = match req {
+        WireRequest::Generate { session, max_new, prime } => Work::Gen(Request {
+            session,
+            max_new,
+            prime,
+            respond,
+            enqueued: Instant::now(),
+        }),
+        WireRequest::Score { tokens } => Work::Score { tokens, respond },
+        WireRequest::End { session } => Work::End { session, respond },
+        WireRequest::Stats { text } => Work::Stats { text, respond },
+    };
+    if work.send(w).is_err() {
+        conn.complete(serial, "ERR server shutting down".to_string());
+    }
+}
+
+/// Flush what the socket will take, sync poller interest with what the
+/// connection now wants, and reap it when finished or broken.
+fn finalize(poller: &Poller, conns: &mut HashMap<u64, Connection>, token: u64) {
+    let mut dead = false;
+    if let Some(conn) = conns.get_mut(&token) {
+        if conn.flush().is_err() || conn.finished() {
+            dead = true;
+        } else {
+            let want = (conn.wants_read(), conn.wants_write());
+            if want != conn.interest {
+                if poller.modify(conn.fd(), token, want.0, want.1).is_ok() {
+                    conn.interest = want;
+                } else {
+                    dead = true;
+                }
+            }
+        }
+    } else {
+        return; // completion for an already-closed connection
+    }
+    if dead {
+        close(poller, conns, token);
+    }
+}
+
+fn close(poller: &Poller, conns: &mut HashMap<u64, Connection>, token: u64) {
+    if let Some(conn) = conns.remove(&token) {
+        let _ = poller.deregister(conn.fd());
+        // `conn` drops here, closing the socket after deregistration.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    /// A reply sink standing in for the batcher: echoes the work back so
+    /// the loop plumbing can be tested without a model.
+    fn echo_batcher(rx: Receiver<Work>) {
+        while let Ok(w) = rx.recv() {
+            match w {
+                Work::Gen(req) => {
+                    let mut toks = req.prime.clone();
+                    toks.truncate(req.max_new);
+                    req.respond.send(Reply::Gen(crate::server::batcher::Response {
+                        tokens: toks,
+                        queue_us: 0.0,
+                        compute_us: 0.0,
+                    }));
+                }
+                Work::Score { tokens, respond } => respond.send(Reply::Score(tokens.len() as f64)),
+                Work::End { session, respond } => respond.send(Reply::End(session % 2 == 0)),
+                Work::Stats { text, respond } => {
+                    respond.send(Reply::Stats(if text { "text".into() } else { "{}".into() }))
+                }
+                Work::Shutdown => break,
+            }
+        }
+    }
+
+    fn start_echo(loops: usize) -> (EventLoopServer, Sender<Work>, std::thread::JoinHandle<()>) {
+        let (tx, rx) = channel();
+        let bat = std::thread::spawn(move || echo_batcher(rx));
+        let srv = serve("127.0.0.1:0", tx.clone(), EventLoopConfig { loops }).unwrap();
+        (srv, tx, bat)
+    }
+
+    #[test]
+    fn echo_roundtrip_and_pipelining() {
+        let (srv, tx, bat) = start_echo(2);
+        let mut cli = TcpStream::connect(srv.addr).unwrap();
+        // One write carrying three pipelined requests plus a parse error.
+        cli.write_all(b"GEN 1 2 7,8,9\nFROB\nSCORE 1,2,3\nSTATS\n").unwrap();
+        let mut r = BufReader::new(cli.try_clone().unwrap());
+        let mut line = String::new();
+        let mut next = |r: &mut BufReader<TcpStream>, line: &mut String| {
+            line.clear();
+            r.read_line(line).unwrap();
+            line.trim_end().to_string()
+        };
+        assert_eq!(next(&mut r, &mut line), "OK GEN 7,8");
+        assert!(next(&mut r, &mut line).starts_with("ERR "), "parse error answers in order");
+        assert_eq!(next(&mut r, &mut line), "OK SCORE 3.0000");
+        assert_eq!(next(&mut r, &mut line), "OK STATS {}");
+        drop(r);
+        srv.shutdown();
+        tx.send(Work::Shutdown).unwrap();
+        bat.join().unwrap();
+    }
+
+    #[test]
+    fn partial_writes_frame_correctly() {
+        let (srv, tx, bat) = start_echo(1);
+        let mut cli = TcpStream::connect(srv.addr).unwrap();
+        cli.set_nodelay(true).unwrap();
+        // Dribble one request across many writes, splitting mid-token.
+        for chunk in ["GE", "N 5 3", " 10,2", "0,30,40", "\nEND 4\n"] {
+            cli.write_all(chunk.as_bytes()).unwrap();
+            cli.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let mut r = BufReader::new(cli);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK GEN 10,20,30");
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK END");
+        drop(r);
+        srv.shutdown();
+        tx.send(Work::Shutdown).unwrap();
+        bat.join().unwrap();
+    }
+
+    #[test]
+    fn many_concurrent_connections_round_robin() {
+        let (srv, tx, bat) = start_echo(2);
+        let addr = srv.addr;
+        let clients: Vec<_> = (0..32)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut cli = TcpStream::connect(addr).unwrap();
+                    cli.write_all(format!("SCORE {}\n", vec!["1"; i + 2].join(",")).as_bytes())
+                        .unwrap();
+                    let mut r = BufReader::new(cli);
+                    let mut line = String::new();
+                    r.read_line(&mut line).unwrap();
+                    assert_eq!(line.trim_end(), format!("OK SCORE {}.0000", i + 2));
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        srv.shutdown();
+        tx.send(Work::Shutdown).unwrap();
+        bat.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly_with_open_connection() {
+        let (srv, tx, bat) = start_echo(2);
+        let _idle = TcpStream::connect(srv.addr).unwrap();
+        srv.shutdown(); // must not hang on the idle connection
+        tx.send(Work::Shutdown).unwrap();
+        bat.join().unwrap();
+    }
+}

@@ -3,45 +3,68 @@
 //! requests, where latency per request and throughput per machine are the
 //! product constraints that quantization relieves.
 //!
-//! Architecture (vLLM-router-style, scaled to RNN LMs):
+//! Two front ends feed one batcher thread over the same `Work` channel:
 //!
 //! ```text
-//! TCP clients ──► router (thread per conn) ──► request queue
-//!                                                │
-//!                                     dynamic batcher (max_batch / wait)
-//!                                                │ gather LmStateBatch
-//!                                     batched forward (RnnLm::step_batch_exec)
-//!                                       · one ActivationBatch per layer,
-//!                                         quantized once per batch
-//!                                       · one sweep over each packed
-//!                                         weight plane serves all B
-//!                                         columns (PreparedGemm)
-//!                                                │
-//!                                ┌─── exec worker pool (BatcherConfig.exec) ───┐
-//!                                │ W_x / W_h gate products as parallel tasks;  │
-//!                                │ each GEMM row-sharded into disjoint output  │
-//!                                │ row ranges across `threads` workers         │
-//!                                │ (threads = 1 ⇒ the exact serial path)       │
-//!                                └──────────────────────────────────────────────┘
-//!                                                │ scatter states
-//!                                     session cache (hidden states, LRU)
+//!  thread-per-conn (tcp)        event loop (eventloop, --event-loop)
+//!  one blocking thread          N loop threads × epoll/kqueue Poller,
+//!  per client                   nonblocking conns, pipelined framing
+//!         │                               │
+//!         └───────────── Work channel ────┘
+//!                             │
+//!            ┌─ admission control (continuous mode) ─┐
+//!            │ pending queue ≤ queue_depth, else     │
+//!            │ ERR BUSY (shed counter)               │
+//!            └───────────────┬───────────────────────┘
+//!                            ▼
+//!              continuous batcher (decode timesteps)
+//!          slots ≤ max_slots; a request JOINS at the next
+//!          timestep boundary (state column pushed into the
+//!          resident LmStateBatch), a finished sequence LEAVES
+//!          immediately (swap-remove, O(1)) freeing its slot —
+//!          no group barrier, no drain/refill
+//!                            │ step_batch_into_exec
+//!              batched forward: one sweep over each packed
+//!              weight plane serves all live columns; exec pool
+//!              row-shards every GEMM across cores
+//!                            │ scatter on leave
+//!              session cache (hidden states, LRU)
 //! ```
 //!
-//! RNN steps are synchronous per token, so the batcher groups *steps* of
-//! different sessions and executes them as **one** batched XNOR/popcount
-//! GEMM per weight matrix — the concatenated-binary-codes layout of Fig. 3
-//! (right) — and the execution engine (`crate::exec`) spreads that GEMM's
-//! output rows across the machine's cores. Both layers are exactness-
-//! preserving: `step_batch_exec` bit-matches per-session `step` for every
-//! batch size *and* thread count (`rust/tests/exec_parity.rs`), so neither
-//! dynamic batching nor the worker pool ever changes what a client
-//! observes. Dropping the server joins the pool's workers — shutdown leaks
-//! no threads.
+//! **Slot lifecycle** (continuous mode): arrive → pending queue (or shed
+//! with `ERR BUSY` when the queue is at `queue_depth`) → join a free slot
+//! at a timestep boundary (state column pushed, first token placed) → step
+//! with every other live slot each timestep → leave the moment its quota
+//! fills (column scattered back to the session store, slot swap-removed) →
+//! reply. Joins and leaves cost O(changed slots); steady-state bookkeeping
+//! per timestep is O(live slots) with no per-slot gather/scatter.
+//!
+//! **Backpressure** is layered: each event-loop connection stops being
+//! read at `MAX_PIPELINE` in-flight requests (the client's TCP window
+//! fills), and the batcher sheds `GEN` work once `pending == queue_depth`,
+//! so memory stays bounded under any offered load.
+//!
+//! Both batching modes are exactness-preserving: `step_batch_into_exec`
+//! bit-matches per-session `step` for **every batch composition and thread
+//! count** (`rust/tests/exec_parity.rs`), so a sequence's tokens are
+//! independent of who shares its batch — continuous batching is bit-exact
+//! versus a sequential reference by construction (asserted under
+//! mid-decode joins/leaves in `batcher::tests` and over TCP in
+//! `rust/tests/eventloop_server.rs`). Shutdown joins every thread: the
+//! exec pool on drop, connection handlers in `tcp::serve`, loop threads in
+//! `eventloop::EventLoopServer::shutdown`.
+//!
+//! CLI knobs: `--event-loop` selects the multiplexed front end (implies
+//! continuous batching), `--max-slots` caps live decode slots,
+//! `--queue-depth` bounds the admission queue. `STATS` returns one-line
+//! JSON; `STATS TEXT` the human form.
 
 pub mod batcher;
+#[cfg(unix)]
+pub mod eventloop;
 pub mod protocol;
 pub mod session;
 pub mod tcp;
 
-pub use batcher::{BatcherConfig, InferenceServer, Request, Response};
+pub use batcher::{BatcherConfig, InferenceServer, Reply, Request, Respond, Response, Work};
 pub use session::SessionStore;

@@ -6,17 +6,25 @@
 //! GEN <session_id> <max_new_tokens> <tok,tok,...>   generate continuation
 //! SCORE <tok,tok,...>                               PPW of a token stream
 //! END <session_id>                                  drop a session
-//! STATS                                             server metrics
+//! STATS                                             server metrics (one-line JSON)
+//! STATS TEXT                                        …human-readable form
 //! ```
 //!
 //! Responses:
 //! ```text
 //! OK GEN <tok,tok,...>
 //! OK SCORE <ppw>
-//! OK END | OK STATS <text> | ERR <message>
+//! OK END | OK STATS <json-or-text> | ERR <message>
+//! ERR BUSY queue full (<queued>/<depth>)            load shed — retry later
 //! ```
+//!
+//! [`format_reply`] renders every batcher [`Reply`] to its wire line —
+//! the single formatting path shared by the thread-per-connection and
+//! event-loop front ends.
 
 use anyhow::{bail, Result};
+
+use super::batcher::Reply;
 
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
@@ -24,7 +32,7 @@ pub enum WireRequest {
     Generate { session: u64, max_new: usize, prime: Vec<usize> },
     Score { tokens: Vec<usize> },
     End { session: u64 },
-    Stats,
+    Stats { text: bool },
 }
 
 pub fn parse_request(line: &str) -> Result<WireRequest> {
@@ -54,8 +62,29 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             let session: u64 = parts.next().unwrap_or("").parse().map_err(|_| bad("session id"))?;
             Ok(WireRequest::End { session })
         }
-        "STATS" => Ok(WireRequest::Stats),
+        "STATS" => match parts.next() {
+            None => Ok(WireRequest::Stats { text: false }),
+            Some("TEXT") => Ok(WireRequest::Stats { text: true }),
+            Some(other) => bail!("unknown STATS form '{other}' (want STATS or STATS TEXT)"),
+        },
         other => bail!("unknown verb '{other}'"),
+    }
+}
+
+/// Render a batcher reply to its single wire line (no trailing newline).
+pub fn format_reply(reply: &Reply) -> String {
+    match reply {
+        Reply::Gen(resp) => format!("OK GEN {}", format_tokens(&resp.tokens)),
+        Reply::Score(ppw) => format!("OK SCORE {ppw:.4}"),
+        Reply::End(existed) => {
+            if *existed {
+                "OK END".to_string()
+            } else {
+                "OK END (no such session)".to_string()
+            }
+        }
+        Reply::Stats(s) => format!("OK STATS {s}"),
+        Reply::Busy { queued, depth } => format!("ERR BUSY queue full ({queued}/{depth})"),
     }
 }
 
@@ -80,6 +109,29 @@ pub fn format_tokens(tokens: &[usize]) -> String {
         .join(",")
 }
 
+/// Split complete `\n`-terminated lines off the front of `buf` (leaving the
+/// trailing partial line in place), appending the non-blank ones to `lines`.
+/// Carriage returns and surrounding whitespace are trimmed; blank lines are
+/// skipped. Errors on any complete line that is not valid UTF-8. Shared by
+/// both front ends so framing behaves identically with and without
+/// `--event-loop`.
+pub fn split_lines(buf: &mut Vec<u8>, lines: &mut Vec<String>) -> std::io::Result<()> {
+    let mut start = 0;
+    while let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') {
+        let end = start + rel;
+        let line = std::str::from_utf8(&buf[start..end]).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "request is not UTF-8")
+        })?;
+        let line = line.trim();
+        if !line.is_empty() {
+            lines.push(line.to_string());
+        }
+        start = end + 1;
+    }
+    buf.drain(..start);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,7 +149,8 @@ mod tests {
     fn parse_score_and_end_and_stats() {
         assert_eq!(parse_request("SCORE 5,6").unwrap(), WireRequest::Score { tokens: vec![5, 6] });
         assert_eq!(parse_request("END 3").unwrap(), WireRequest::End { session: 3 });
-        assert_eq!(parse_request("STATS").unwrap(), WireRequest::Stats);
+        assert_eq!(parse_request("STATS").unwrap(), WireRequest::Stats { text: false });
+        assert_eq!(parse_request("STATS TEXT").unwrap(), WireRequest::Stats { text: true });
     }
 
     #[test]
@@ -108,11 +161,56 @@ mod tests {
         assert!(parse_request("SCORE 1").is_err());
         assert!(parse_request("FROB").is_err());
         assert!(parse_request("GEN 1 10 1,a,3").is_err());
+        assert!(parse_request("STATS JSON").is_err());
+    }
+
+    #[test]
+    fn reply_formatting() {
+        use crate::server::batcher::Response;
+        let gen = Reply::Gen(Response { tokens: vec![1, 2, 3], queue_us: 0.0, compute_us: 0.0 });
+        assert_eq!(format_reply(&gen), "OK GEN 1,2,3");
+        assert_eq!(format_reply(&Reply::Score(1.25)), "OK SCORE 1.2500");
+        assert_eq!(format_reply(&Reply::End(true)), "OK END");
+        assert_eq!(format_reply(&Reply::End(false)), "OK END (no such session)");
+        assert_eq!(format_reply(&Reply::Stats("{}".into())), "OK STATS {}");
+        assert_eq!(
+            format_reply(&Reply::Busy { queued: 4, depth: 4 }),
+            "ERR BUSY queue full (4/4)"
+        );
     }
 
     #[test]
     fn token_format_roundtrip() {
         let toks = vec![1usize, 22, 333];
         assert_eq!(parse_tokens(&format_tokens(&toks)).unwrap(), toks);
+    }
+
+    #[test]
+    fn split_lines_handles_partials_and_pipelining() {
+        let mut buf = Vec::new();
+        let mut lines = Vec::new();
+        // A partial write: no newline yet, nothing extracted.
+        buf.extend_from_slice(b"GEN 1 4");
+        split_lines(&mut buf, &mut lines).unwrap();
+        assert!(lines.is_empty());
+        assert_eq!(buf, b"GEN 1 4");
+        // The rest of the line plus two pipelined commands in one chunk.
+        buf.extend_from_slice(b" 2,3\r\nSTATS\n\nEND 1\nSCO");
+        split_lines(&mut buf, &mut lines).unwrap();
+        assert_eq!(lines, vec!["GEN 1 4 2,3", "STATS", "END 1"]);
+        assert_eq!(buf, b"SCO", "partial tail stays buffered");
+        // Byte-at-a-time completion of the tail.
+        for &b in b"RE 1,2\n" {
+            buf.push(b);
+            split_lines(&mut buf, &mut lines).unwrap();
+        }
+        assert_eq!(lines.last().unwrap(), "SCORE 1,2");
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn split_lines_rejects_non_utf8() {
+        let mut buf = vec![0xff, 0xfe, b'\n'];
+        assert!(split_lines(&mut buf, &mut Vec::new()).is_err());
     }
 }

@@ -1,99 +1,129 @@
-//! TCP front end: accept loop + thread-per-connection router that parses
-//! the wire protocol and forwards work to the batcher thread.
+//! Thread-per-connection TCP front end: simple, blocking, one OS thread
+//! per client. Fine for a handful of sessions; the event-loop front end
+//! (`super::eventloop`, `--event-loop`) scales to thousands. Both parse
+//! the same wire protocol with the same framing ([`split_lines`]) and
+//! forward to the same batcher over the `Work` channel.
+//!
+//! Shutdown is cooperative: the accept loop and every connection handler
+//! poll the shared `shutdown` flag (accept is nonblocking, connection
+//! reads carry a short timeout), and `serve` **joins every handler thread
+//! before returning** — no leaked threads holding sockets past shutdown.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Sender};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Request, Work};
-use super::protocol::{format_tokens, parse_request, WireRequest};
+use super::batcher::{Request, Respond, Work};
+use super::protocol::{format_reply, parse_request, split_lines, WireRequest};
 
-/// Bind and serve forever (spawns a thread per connection). Returns the
-/// bound local address via the callback before blocking (tests bind ":0").
-pub fn serve(addr: &str, work: Sender<Work>, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+/// Bind and serve until `shutdown` flips (spawns a thread per connection,
+/// all joined before returning). Reports the bound local address via the
+/// callback before entering the accept loop (tests bind ":0").
+pub fn serve(
+    addr: &str,
+    work: Sender<Work>,
+    shutdown: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
                 let tx = work.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_conn(s, tx);
-                });
+                let flag = shutdown.clone();
+                handlers.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, tx, flag);
+                }));
+                // Reap finished handlers so the vec stays proportional to
+                // *live* connections, not connections ever accepted.
+                handlers.retain(|h| !h.is_finished());
             }
-            Err(_) => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
         }
+    }
+    for h in handlers {
+        let _ = h.join();
     }
     Ok(())
 }
 
-/// Serve one connection: line in, line out.
-pub fn handle_conn(stream: TcpStream, work: Sender<Work>) -> Result<()> {
-    let peer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    let mut writer = peer;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// Serve one connection: line in, line out, until EOF or shutdown.
+pub fn handle_conn(stream: TcpStream, work: Sender<Work>, shutdown: Arc<AtomicBool>) -> Result<()> {
+    // A short read timeout keeps the handler responsive to shutdown while
+    // the client is idle.
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut lines: Vec<String> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    while !shutdown.load(Ordering::SeqCst) {
+        match reader.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                split_lines(&mut buf, &mut lines)?;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
         }
-        let reply = handle_line(&line, &work);
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
+        for line in lines.drain(..) {
+            let reply = handle_line(&line, &work);
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")?;
+        }
         writer.flush()?;
     }
     Ok(())
 }
 
-/// Pure request→reply step (unit-testable without sockets).
+/// Pure request→reply step (unit-testable without sockets): parse, send to
+/// the batcher with a rendezvous channel, block for the reply, format it.
 pub fn handle_line(line: &str, work: &Sender<Work>) -> String {
-    match parse_request(line) {
-        Err(e) => format!("ERR {e}"),
-        Ok(WireRequest::Generate { session, max_new, prime }) => {
-            let (tx, rx) = mpsc::channel();
-            let req = Request { session, max_new, prime, respond: tx, enqueued: Instant::now() };
-            if work.send(Work::Gen(req)).is_err() {
-                return "ERR server shutting down".into();
-            }
-            match rx.recv() {
-                Ok(resp) => format!("OK GEN {}", format_tokens(&resp.tokens)),
-                Err(_) => "ERR batcher dropped request".into(),
-            }
-        }
-        Ok(WireRequest::Score { tokens }) => {
-            let (tx, rx) = mpsc::channel();
-            if work.send(Work::Score { tokens, respond: tx }).is_err() {
-                return "ERR server shutting down".into();
-            }
-            match rx.recv() {
-                Ok(ppw) => format!("OK SCORE {ppw:.4}"),
-                Err(_) => "ERR batcher dropped request".into(),
-            }
-        }
-        Ok(WireRequest::End { session }) => {
-            let (tx, rx) = mpsc::channel();
-            if work.send(Work::End { session, respond: tx }).is_err() {
-                return "ERR server shutting down".into();
-            }
-            match rx.recv() {
-                Ok(true) => "OK END".into(),
-                Ok(false) => "OK END (no such session)".into(),
-                Err(_) => "ERR batcher dropped request".into(),
-            }
-        }
-        Ok(WireRequest::Stats) => {
-            let (tx, rx) = mpsc::channel();
-            if work.send(Work::Stats { respond: tx }).is_err() {
-                return "ERR server shutting down".into();
-            }
-            match rx.recv() {
-                Ok(s) => format!("OK STATS {s}"),
-                Err(_) => "ERR batcher dropped request".into(),
-            }
-        }
+    let req = match parse_request(line) {
+        Ok(req) => req,
+        Err(e) => return format!("ERR {e}"),
+    };
+    let (tx, rx) = mpsc::channel();
+    let respond = Respond::Channel(tx);
+    let w = match req {
+        WireRequest::Generate { session, max_new, prime } => Work::Gen(Request {
+            session,
+            max_new,
+            prime,
+            respond,
+            enqueued: Instant::now(),
+        }),
+        WireRequest::Score { tokens } => Work::Score { tokens, respond },
+        WireRequest::End { session } => Work::End { session, respond },
+        WireRequest::Stats { text } => Work::Stats { text, respond },
+    };
+    if work.send(w).is_err() {
+        return "ERR server shutting down".into();
+    }
+    match rx.recv() {
+        Ok(reply) => format_reply(&reply),
+        Err(_) => "ERR batcher dropped request".into(),
     }
 }
 
@@ -134,25 +164,34 @@ mod tests {
     }
 
     #[test]
-    fn tcp_end_to_end() {
+    fn tcp_end_to_end_with_clean_shutdown() {
         let (tx, h) = spawn_server();
         let (addr_tx, addr_rx) = mpsc::channel();
         let tx2 = tx.clone();
-        std::thread::spawn(move || {
-            let _ = serve("127.0.0.1:0", tx2, move |a| {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = shutdown.clone();
+        let srv = std::thread::spawn(move || {
+            serve("127.0.0.1:0", tx2, flag, move |a| {
                 let _ = addr_tx.send(a);
-            });
+            })
         });
         let addr = addr_rx.recv().unwrap();
         let mut conn = std::net::TcpStream::connect(addr).unwrap();
-        conn.write_all(b"GEN 7 4 1,2\nSTATS\n").unwrap();
+        conn.write_all(b"GEN 7 4 1,2\nSTATS\nSTATS TEXT\n").unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.starts_with("OK GEN "), "{line}");
         line.clear();
         reader.read_line(&mut line).unwrap();
-        assert!(line.starts_with("OK STATS "), "{line}");
+        assert!(line.starts_with("OK STATS {"), "default STATS is JSON: {line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK STATS latency:"), "STATS TEXT is human form: {line}");
+        assert!(line.contains("mode=grouped"), "{line}");
+        // Cooperative shutdown must join the open connection's handler.
+        shutdown.store(true, Ordering::SeqCst);
+        srv.join().unwrap().unwrap();
         tx.send(Work::Shutdown).unwrap();
         h.join().unwrap();
     }

@@ -1,0 +1,298 @@
+//! End-to-end tests for the event-loop front end + continuous batcher:
+//! bit-exactness of continuous batching against a sequential reference
+//! over real TCP, in-order pipelined replies, `ERR BUSY` load shedding,
+//! machine-readable `STATS`, and clean shutdown.
+
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amq::exec::ExecConfig;
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Request, Respond, Work};
+use amq::server::eventloop::{self, EventLoopConfig, EventLoopServer};
+use amq::server::protocol::format_reply;
+
+/// The same model for every server in a test: `random` is seed-determined,
+/// so two instances are bit-identical.
+fn model() -> Arc<RnnLm> {
+    Arc::new(RnnLm::random(
+        LmConfig { kind: RnnKind::Lstm, vocab: 60, hidden: 24, layers: 1 },
+        123,
+        PrecisionPolicy::quantized(2, 2),
+    ))
+}
+
+fn start_continuous(
+    max_slots: usize,
+    queue_depth: usize,
+    threads: usize,
+) -> (EventLoopServer, Sender<Work>, std::thread::JoinHandle<()>) {
+    let server = InferenceServer::new(
+        model(),
+        BatcherConfig {
+            max_batch: max_slots,
+            continuous: true,
+            max_slots,
+            queue_depth,
+            exec: ExecConfig::with_threads(threads),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), EventLoopConfig { loops: 2 })
+        .expect("event-loop bind");
+    (srv, tx, batcher)
+}
+
+fn stop(srv: EventLoopServer, work: Sender<Work>, batcher: std::thread::JoinHandle<()>) {
+    srv.shutdown();
+    work.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+}
+
+fn send_line(conn: &mut TcpStream, line: &str) {
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+}
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+/// Run `GEN <session> <max_new> <prime,…>` lines one at a time against a
+/// fresh `max_batch = 1` grouped server on the serial engine — the
+/// sequential ground truth every concurrent schedule must bit-match.
+fn sequential_gen_reference(lines: &[impl AsRef<str>]) -> Vec<String> {
+    let server = InferenceServer::new(
+        model(),
+        BatcherConfig {
+            max_batch: 1,
+            continuous: false,
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let out = lines
+        .iter()
+        .map(|line| {
+            let rest = line.as_ref().strip_prefix("GEN ").expect("reference lines are GEN");
+            let mut parts = rest.split_whitespace();
+            let session: u64 = parts.next().unwrap().parse().unwrap();
+            let max_new: usize = parts.next().unwrap().parse().unwrap();
+            let prime: Vec<usize> =
+                parts.next().unwrap().split(',').map(|t| t.parse().unwrap()).collect();
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Work::Gen(Request {
+                session,
+                max_new,
+                prime,
+                respond: Respond::Channel(rtx),
+                enqueued: Instant::now(),
+            }))
+            .unwrap();
+            format_reply(&rrx.recv().unwrap())
+        })
+        .collect();
+    tx.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+    out
+}
+
+/// Continuous batching over the event loop must produce exactly the bytes
+/// a `max_batch = 1` sequential grouped server produces — concurrent
+/// staggered clients, mid-decode joins and finishes, multi-threaded exec,
+/// zero tolerance.
+#[test]
+fn continuous_eventloop_bitmatches_sequential_reference() {
+    const CLIENTS: usize = 6;
+    // Two generations per session (the second continues stored state),
+    // lengths varied so finishes interleave with joins mid-decode.
+    let script = |i: usize| {
+        let (p1, p2, p3) = (i % 60, (i * 7 + 3) % 60, (i * 11 + 5) % 60);
+        (
+            format!("GEN {i} {} {p1},{p2}", 32 + 4 * i),
+            format!("GEN {i} {} {p3}", 16 + 2 * i),
+        )
+    };
+
+    // Sequential reference: grouped batcher, one request at a time, serial
+    // exec, driven directly over the Work channel.
+    let lines: Vec<String> = (0..CLIENTS)
+        .flat_map(|i| {
+            let (g1, g2) = script(i);
+            [g1, g2]
+        })
+        .collect();
+    let flat = sequential_gen_reference(&lines);
+    let reference: Vec<(String, String)> =
+        flat.chunks(2).map(|c| (c[0].clone(), c[1].clone())).collect();
+    assert!(reference.iter().all(|(a, b)| a.starts_with("OK GEN ") && b.starts_with("OK GEN ")));
+
+    // Continuous server: few slots so clients queue and join mid-decode.
+    let (srv, work, batcher) = start_continuous(2, 64, 2);
+    let addr = srv.addr;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_micros(500) * i as u32);
+                let (g1, g2) = script(i);
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut r = BufReader::new(conn.try_clone().unwrap());
+                send_line(&mut conn, &g1);
+                let a = read_line(&mut r);
+                send_line(&mut conn, &g2);
+                let b = read_line(&mut r);
+                send_line(&mut conn, &format!("END {i}"));
+                assert_eq!(read_line(&mut r), "OK END");
+                (a, b)
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        assert_eq!(
+            got, reference[i],
+            "session {i}: continuous batching diverged from the sequential reference"
+        );
+    }
+
+    // The run must actually have used the continuous decode path.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(conn.try_clone().unwrap());
+    send_line(&mut conn, "STATS");
+    let stats = read_line(&mut r);
+    assert!(stats.contains("\"mode\":\"continuous\""), "{stats}");
+    assert!(!stats.contains("\"decode_timesteps\":0,"), "{stats}");
+    stop(srv, work, batcher);
+}
+
+/// Pipelined commands on one connection answer strictly in request order
+/// (a quick STATS completes long before the GEN ahead of it), and two
+/// pipelined GENs on the *same session* serialize: the second bit-matches
+/// the sequential continuation, despite free slots it could have grabbed.
+#[test]
+fn pipelined_commands_answer_in_order() {
+    let reference = sequential_gen_reference(&["GEN 900 24 1,2", "GEN 900 4 5"]);
+    let (srv, work, batcher) = start_continuous(4, 64, 1);
+    let mut conn = TcpStream::connect(srv.addr).unwrap();
+    let mut r = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"GEN 900 24 1,2\nSTATS\nFROB\nSCORE 1,2,3,4\nGEN 900 4 5\nEND 900\n").unwrap();
+    let a = read_line(&mut r);
+    assert_eq!(a, reference[0]);
+    assert!(read_line(&mut r).starts_with("OK STATS {"));
+    assert!(read_line(&mut r).starts_with("ERR "));
+    assert!(read_line(&mut r).starts_with("OK SCORE "));
+    let b = read_line(&mut r);
+    assert_eq!(b, reference[1], "pipelined same-session GEN must continue, not restart");
+    assert_eq!(read_line(&mut r), "OK END");
+    stop(srv, work, batcher);
+}
+
+/// Admission control over TCP: a simultaneous burst against one slot and a
+/// depth-1 queue sheds with `ERR BUSY`; every client still gets an answer,
+/// and `STATS` reports the shed count.
+#[test]
+fn busy_shedding_under_burst() {
+    const CLIENTS: usize = 12;
+    let (srv, work, batcher) = start_continuous(1, 1, 1);
+    let addr = srv.addr;
+    let barrier = Arc::new(std::sync::Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut r = BufReader::new(conn.try_clone().unwrap());
+                barrier.wait();
+                send_line(&mut conn, &format!("GEN {i} 512 {}", (i * 13 + 1) % 60));
+                read_line(&mut r)
+            })
+        })
+        .collect();
+    let (mut served, mut shed) = (0, 0);
+    for h in handles {
+        let reply = h.join().unwrap();
+        if reply.starts_with("OK GEN ") {
+            assert_eq!(reply.trim_start_matches("OK GEN ").split(',').count(), 512);
+            served += 1;
+        } else {
+            assert!(reply.starts_with("ERR BUSY "), "{reply}");
+            shed += 1;
+        }
+    }
+    assert_eq!(served + shed, CLIENTS, "every client must get an answer");
+    assert!(served > 0, "at least the slot+queue occupants are served");
+    assert!(shed > 0, "a 12-deep burst against slot=1/depth=1 must shed");
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(conn.try_clone().unwrap());
+    send_line(&mut conn, "STATS");
+    let stats = read_line(&mut r);
+    let shed_reported: usize = stats
+        .split("\"shed\":")
+        .nth(1)
+        .and_then(|s| s.split(',').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no shed field in {stats}"));
+    assert_eq!(shed_reported, shed, "{stats}");
+    stop(srv, work, batcher);
+}
+
+/// STATS carries the machine-readable serving state on one line.
+#[test]
+fn stats_json_is_single_line_and_complete() {
+    let (srv, work, batcher) = start_continuous(4, 64, 1);
+    let mut conn = TcpStream::connect(srv.addr).unwrap();
+    let mut r = BufReader::new(conn.try_clone().unwrap());
+    send_line(&mut conn, "GEN 5 8 1,2");
+    assert!(read_line(&mut r).starts_with("OK GEN "));
+    send_line(&mut conn, "STATS");
+    let stats = read_line(&mut r);
+    let payload = stats.strip_prefix("OK STATS ").unwrap();
+    assert!(payload.starts_with('{') && payload.ends_with('}'), "{payload}");
+    for key in [
+        "\"mode\":\"continuous\"",
+        "\"active_slots\":",
+        "\"max_slots\":4",
+        "\"queued\":",
+        "\"queue_depth\":64",
+        "\"shed\":0",
+        "\"requests\":1",
+        "\"tokens_generated\":8",
+        "\"decode_timesteps\":",
+        "\"kernel\":\"",
+        "\"threads\":1",
+        "\"latency_us\":{\"count\":1,",
+    ] {
+        assert!(payload.contains(key), "missing {key} in {payload}");
+    }
+    // Human form on request.
+    send_line(&mut conn, "STATS TEXT");
+    let text = read_line(&mut r);
+    assert!(text.starts_with("OK STATS latency:"), "{text}");
+    assert!(text.contains("mode=continuous"), "{text}");
+    stop(srv, work, batcher);
+}
+
+/// Shutdown with live connections and in-flight-free batcher joins every
+/// loop thread; a subsequent bind to the same port family still works.
+#[test]
+fn shutdown_joins_loop_threads() {
+    let (srv, work, batcher) = start_continuous(2, 8, 1);
+    let _idle = TcpStream::connect(srv.addr).unwrap();
+    let mut busy = TcpStream::connect(srv.addr).unwrap();
+    let mut r = BufReader::new(busy.try_clone().unwrap());
+    send_line(&mut busy, "GEN 3 4 7");
+    assert!(read_line(&mut r).starts_with("OK GEN "));
+    stop(srv, work, batcher); // joins loops + batcher; must not hang
+}

@@ -1,6 +1,12 @@
 //! End-to-end serving integration: quantized model behind the TCP front
 //! end, concurrent clients, session continuity, failure handling, and the
 //! threaded-vs-serial stress parity of the execution engine.
+//!
+//! With `AMQ_EVENTLOOP=1` every test runs against the epoll/kqueue
+//! event-loop front end with **continuous batching** instead of the
+//! thread-per-connection front end with grouped batching — same wire
+//! protocol, same expected bytes (CI runs both legs; the stress test's
+//! bit-match then covers continuous-vs-serial over real TCP).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -12,10 +18,17 @@ use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
 use amq::server::batcher::{BatcherConfig, InferenceServer, Work};
 use amq::server::tcp;
 
+fn use_eventloop() -> bool {
+    cfg!(unix) && std::env::var("AMQ_EVENTLOOP").map(|v| v == "1").unwrap_or(false)
+}
+
 struct TestServer {
     addr: std::net::SocketAddr,
     work: mpsc::Sender<Work>,
     batcher: std::thread::JoinHandle<()>,
+    #[cfg(unix)]
+    #[allow(dead_code)] // held so the loop threads outlive the test body
+    evloop: Option<amq::server::eventloop::EventLoopServer>,
 }
 
 fn start_with(max_batch: usize, exec: ExecConfig) -> TestServer {
@@ -30,19 +43,38 @@ fn start_with(max_batch: usize, exec: ExecConfig) -> TestServer {
             max_batch,
             batch_wait: std::time::Duration::from_micros(300),
             max_sessions: 64,
+            continuous: use_eventloop(),
             exec,
+            ..Default::default()
         },
     );
     let (tx, rx) = mpsc::channel();
     let batcher = std::thread::spawn(move || server.run(rx));
+    #[cfg(unix)]
+    if use_eventloop() {
+        let srv = amq::server::eventloop::serve(
+            "127.0.0.1:0",
+            tx.clone(),
+            amq::server::eventloop::EventLoopConfig { loops: 2 },
+        )
+        .expect("event-loop bind");
+        return TestServer { addr: srv.addr, work: tx, batcher, evloop: Some(srv) };
+    }
     let (atx, arx) = mpsc::channel();
     let tx2 = tx.clone();
+    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
     std::thread::spawn(move || {
-        let _ = tcp::serve("127.0.0.1:0", tx2, move |a| {
+        let _ = tcp::serve("127.0.0.1:0", tx2, shutdown, move |a| {
             let _ = atx.send(a);
         });
     });
-    TestServer { addr: arx.recv().unwrap(), work: tx, batcher }
+    TestServer {
+        addr: arx.recv().unwrap(),
+        work: tx,
+        batcher,
+        #[cfg(unix)]
+        evloop: None,
+    }
 }
 
 fn start(max_batch: usize) -> TestServer {
@@ -74,7 +106,10 @@ fn concurrent_clients_all_served() {
         assert_eq!(resp.trim_start_matches("OK GEN ").split(',').count(), 5);
     }
     let stats = request(addr, "STATS");
-    assert!(stats.contains("requests=12"), "{stats}");
+    assert!(stats.starts_with("OK STATS {"), "STATS is one-line JSON: {stats}");
+    assert!(stats.contains("\"requests\":12"), "{stats}");
+    let text = request(addr, "STATS TEXT");
+    assert!(text.contains("requests=12"), "{text}");
     let _ = s.work.send(Work::Shutdown);
 }
 
