@@ -87,6 +87,7 @@ fn run_batch(
             session: i as u64,
             max_new: new_tokens,
             prime: vec![(i * 13 + 1) % 500],
+            model: None,
             respond: Respond::Channel(tx),
             enqueued: Instant::now(),
         });
@@ -160,6 +161,7 @@ fn run_load(
                     session: i as u64,
                     max_new: want,
                     prime: vec![(i * 13 + 1) % 500],
+                    model: None,
                     respond: Respond::Channel(rtx),
                     enqueued: Instant::now(),
                 }))
@@ -218,6 +220,7 @@ fn run_burst(model: Arc<RnnLm>, clients: usize, new_tokens: usize) -> (usize, us
                 session: i as u64,
                 max_new: new_tokens,
                 prime: vec![(i * 13 + 1) % 500],
+                model: None,
                 respond: Respond::Channel(rtx),
                 enqueued: Instant::now(),
             }))

@@ -12,7 +12,11 @@ use crate::quant::Method;
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
     pub subcommand: String,
+    /// Last occurrence wins (the single-value accessors below).
     pub options: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in argv order — for repeatable flags
+    /// like `serve --model a=a.amqz --model b=b.amqz` (see [`Self::get_all`]).
+    pub repeated: Vec<(String, String)>,
     pub positional: Vec<String>,
 }
 
@@ -21,27 +25,31 @@ impl Cli {
         let mut it = args.into_iter();
         let subcommand = it.next().unwrap_or_default();
         let mut options = BTreeMap::new();
+        let mut repeated = Vec::new();
         let mut positional = Vec::new();
         let mut pending: Option<String> = None;
         for a in it {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some(prev) = pending.take() {
+                    repeated.push((prev.clone(), "true".to_string()));
                     options.insert(prev, "true".into()); // bare flag
                 }
                 pending = Some(key.to_string());
             } else if let Some(key) = pending.take() {
+                repeated.push((key.clone(), a.clone()));
                 options.insert(key, a);
             } else {
                 positional.push(a);
             }
         }
         if let Some(prev) = pending.take() {
+            repeated.push((prev.clone(), "true".to_string()));
             options.insert(prev, "true".into());
         }
         if subcommand.starts_with("--") {
             bail!("expected a subcommand before options");
         }
-        Ok(Cli { subcommand, options, positional })
+        Ok(Cli { subcommand, options, repeated, positional })
     }
 
     pub fn from_env() -> Result<Self> {
@@ -89,6 +97,12 @@ impl Cli {
             None => Ok(None),
             Some(v) => Kernel::parse_choice(v).map_err(|e| anyhow::anyhow!("--{key}: {e}")),
         }
+    }
+
+    /// Every value given for a repeatable `--key`, in argv order (the
+    /// `BTreeMap` keeps only the last).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.repeated.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
     }
 
     pub fn has(&self, key: &str) -> bool {
@@ -161,5 +175,15 @@ mod tests {
     fn trailing_flag() {
         let c = Cli::parse(args("serve --verbose")).unwrap();
         assert!(c.has("verbose"));
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence() {
+        let c = Cli::parse(args("serve --model a=a.amqz --addr :0 --model b=b.amqz")).unwrap();
+        assert_eq!(c.get_all("model"), vec!["a=a.amqz", "b=b.amqz"]);
+        // The map keeps the last for single-value accessors.
+        assert_eq!(c.get("model"), Some("b=b.amqz"));
+        assert_eq!(c.get_all("addr"), vec![":0"]);
+        assert!(c.get_all("missing").is_empty());
     }
 }

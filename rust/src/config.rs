@@ -136,6 +136,50 @@ impl Config {
             .get(key)
             .with_context(|| format!("config missing required key '{key}'"))
     }
+
+    /// Every `(key, value)` under `[section]`, with the section prefix
+    /// stripped, in key order. For open-ended sections whose keys are
+    /// user-chosen names, e.g.
+    ///
+    /// ```toml
+    /// [models]
+    /// ptb-2bit = "models/ptb-2bit.amqz"
+    /// [model_aliases]
+    /// prod = "ptb-2bit"
+    /// ```
+    pub fn section(&self, name: &str) -> Vec<(String, &Value)> {
+        let prefix = format!("{name}.");
+        self.values
+            .iter()
+            .filter_map(|(k, v)| k.strip_prefix(&prefix).map(|key| (key.to_string(), v)))
+            .collect()
+    }
+}
+
+/// Parse a human-readable byte size: a plain integer is bytes; `kb`, `mb`,
+/// `gb` suffixes (case-insensitive, fractional values allowed) scale by
+/// powers of 1024. `0` means "unlimited" to every consumer.
+pub fn parse_mem_size(s: &str) -> Result<usize> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, scale) = if let Some(n) = s.strip_suffix("gb") {
+        (n, 1024.0 * 1024.0 * 1024.0)
+    } else if let Some(n) = s.strip_suffix("mb") {
+        (n, 1024.0 * 1024.0)
+    } else if let Some(n) = s.strip_suffix("kb") {
+        (n, 1024.0)
+    } else if let Some(n) = s.strip_suffix('b') {
+        (n, 1.0)
+    } else {
+        (s.as_str(), 1.0)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("cannot parse memory size '{s}' (want e.g. 512mb, 2gb)"))?;
+    if !v.is_finite() || v < 0.0 {
+        bail!("memory size '{s}' out of range");
+    }
+    Ok((v * scale) as usize)
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -203,6 +247,10 @@ pub struct ServerConfig {
     /// Admission-queue bound before `ERR BUSY` load shedding.
     /// CLI: `--queue-depth`.
     pub queue_depth: usize,
+    /// Resident-model byte budget for the multi-tenant registry, raw
+    /// (`"512mb"`, `"2gb"`, plain bytes; see [`parse_mem_size`]). `None` /
+    /// `0` = unlimited. CLI: `--model-mem-budget`.
+    pub model_mem_budget: Option<String>,
 }
 
 impl ServerConfig {
@@ -218,6 +266,12 @@ impl ServerConfig {
             loops: c.get_usize("server.loops", 0),
             max_slots: c.get_usize("server.max_slots", 0),
             queue_depth: c.get_usize("server.queue_depth", 128),
+            model_mem_budget: c.values.get("server.model_mem_budget").map(|v| match v {
+                Value::Str(s) => s.clone(),
+                Value::Int(i) => i.to_string(),
+                Value::Float(f) => f.to_string(),
+                Value::Bool(b) => b.to_string(),
+            }),
         }
     }
 }
@@ -330,5 +384,47 @@ quantized = true
     fn comment_inside_string_kept() {
         let c = Config::parse("x = \"a#b\"").unwrap();
         assert_eq!(c.get_str("x", ""), "a#b");
+    }
+
+    #[test]
+    fn open_ended_sections_enumerate() {
+        let text = r#"
+[server]
+model_mem_budget = "512mb"
+[models]
+ptb = "models/ptb.amqz"
+wt2 = "models/wt2.amqz"
+[model_aliases]
+prod = "ptb"
+"#;
+        let c = Config::parse(text).unwrap();
+        let models: Vec<(String, String)> = c
+            .section("models")
+            .into_iter()
+            .map(|(k, v)| (k, v.as_str().unwrap().to_string()))
+            .collect();
+        assert_eq!(
+            models,
+            vec![
+                ("ptb".to_string(), "models/ptb.amqz".to_string()),
+                ("wt2".to_string(), "models/wt2.amqz".to_string()),
+            ]
+        );
+        assert_eq!(c.section("model_aliases").len(), 1);
+        assert!(c.section("missing").is_empty());
+        let s = ServerConfig::from_config(&c);
+        assert_eq!(s.model_mem_budget.as_deref(), Some("512mb"));
+    }
+
+    #[test]
+    fn mem_sizes_parse() {
+        assert_eq!(parse_mem_size("1024").unwrap(), 1024);
+        assert_eq!(parse_mem_size("4kb").unwrap(), 4096);
+        assert_eq!(parse_mem_size("1.5MB").unwrap(), 1_572_864);
+        assert_eq!(parse_mem_size("2gb").unwrap(), 2 * 1024 * 1024 * 1024);
+        assert_eq!(parse_mem_size("64b").unwrap(), 64);
+        assert_eq!(parse_mem_size("0").unwrap(), 0);
+        assert!(parse_mem_size("lots").is_err());
+        assert!(parse_mem_size("-1mb").is_err());
     }
 }

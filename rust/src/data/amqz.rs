@@ -1,0 +1,354 @@
+//! `.amqz` — the zero-copy packed-model format.
+//!
+//! `amq publish` pays the quantization cost **once**, writing the packed
+//! `u64` planes and `f32` alphas in exactly the `[row][plane][word]`
+//! serving layout of [`PreparedGemm`]. The loader then brings a model up
+//! with a **single bulk read into a `u64` arena** — no parsing loop over
+//! weights, no requantization — so cold start moves O(file size) bytes
+//! and nothing else. `rust/tests/amqz_roundtrip.rs` pins the loaded model
+//! bit-identical to the parse-and-requantize path and gates the cold-load
+//! speedup.
+//!
+//! Layout (all integers little-endian, every section 8-byte aligned):
+//! ```text
+//! magic "AMQZ" | u32 version=1
+//! u8 kind (0=lstm, 1=gru) | u8 w_bits | u8 a_bits | u8 method (0=alternating)
+//! u32 layers | u64 vocab | u64 hidden
+//! matrix  embedding                      (vocab × hidden)
+//! per layer: matrix wx | matrix wh | f32vec bias
+//! matrix  softmax                        (vocab × hidden)
+//! f32vec  softmax_bias                   (vocab)
+//!
+//! matrix: u64 rows | u64 cols | u64 k
+//!         f32 alphas[rows·k] | pad to 8
+//!         u64 words[rows·k·cols.div_ceil(64)]     ([row][plane][word])
+//! f32vec: u64 len | f32 data[len] | pad to 8
+//! ```
+//!
+//! The arena is a `Vec<u64>`, so every `u64` field is read by aligned
+//! indexing (`u64::from_le`, a no-op on little-endian hosts) and the
+//! plane words are copied out of the arena as whole slices. `f32`s are
+//! extracted from the words by bit-twiddling. Shape and tail-bit
+//! invariants are validated as sections are walked, so truncated or
+//! corrupt files fail with an error instead of panicking.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::kernels::binary::PreparedGemm;
+use crate::model::lm::{LmConfig, PackedLayer, PackedLmParts, RnnKind};
+use crate::model::RnnLm;
+use crate::quant::RowQuantized;
+
+const MAGIC: u32 = u32::from_le_bytes(*b"AMQZ");
+const VERSION: u32 = 1;
+/// Method tag in the header: alternating minimization (the only quantizer
+/// the serving GEMM needs to know about — all methods share the plane
+/// format, so new tags only gate provenance, not decoding).
+const METHOD_ALTERNATING: u8 = 0;
+
+// ---------------------------------------------------------------- writing
+
+fn write_matrix(
+    w: &mut impl Write,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    alphas: &[f32],
+    words: &[u64],
+) -> Result<()> {
+    debug_assert_eq!(alphas.len(), rows * k);
+    debug_assert_eq!(words.len(), rows * k * cols.div_ceil(64));
+    for dim in [rows, cols, k] {
+        w.write_all(&(dim as u64).to_le_bytes())?;
+    }
+    write_f32s_padded(w, alphas)?;
+    for word in words {
+        w.write_all(&word.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_f32s_padded(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    for x in data {
+        w.write_all(&x.to_bits().to_le_bytes())?;
+    }
+    if data.len() % 2 == 1 {
+        w.write_all(&[0u8; 4])?;
+    }
+    Ok(())
+}
+
+fn write_vec(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    w.write_all(&(data.len() as u64).to_le_bytes())?;
+    write_f32s_padded(w, data)
+}
+
+/// Write a published model. The packed planes and alphas go out verbatim
+/// from the serving layout, so [`load`] can adopt them without rebuilding.
+pub fn save(path: &Path, parts: &PackedLmParts) -> Result<()> {
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    let kind = match parts.config.kind {
+        RnnKind::Lstm => 0u8,
+        RnnKind::Gru => 1u8,
+    };
+    ensure!(
+        parts.w_bits >= 1 && parts.w_bits <= 255 && parts.a_bits >= 1 && parts.a_bits <= 255,
+        "bit widths must fit a byte"
+    );
+    w.write_all(&[kind, parts.w_bits as u8, parts.a_bits as u8, METHOD_ALTERNATING])?;
+    w.write_all(&(parts.config.layers as u32).to_le_bytes())?;
+    w.write_all(&(parts.config.vocab as u64).to_le_bytes())?;
+    w.write_all(&(parts.config.hidden as u64).to_le_bytes())?;
+    let e = &parts.embedding;
+    let mut ewords = Vec::with_capacity(e.rows * e.k * e.cols.div_ceil(64));
+    for plane in &e.planes {
+        ewords.extend_from_slice(plane.words());
+    }
+    write_matrix(&mut w, e.rows, e.cols, e.k, &e.alphas, &ewords)?;
+    for layer in &parts.layers {
+        for m in [&layer.wx, &layer.wh] {
+            write_matrix(&mut w, m.rows, m.cols, m.k, m.alphas(), m.plane_words())?;
+        }
+        write_vec(&mut w, &layer.bias)?;
+    }
+    let s = &parts.softmax;
+    write_matrix(&mut w, s.rows, s.cols, s.k, s.alphas(), s.plane_words())?;
+    write_vec(&mut w, &parts.softmax_bias)?;
+    w.flush().with_context(|| format!("writing {}", path.display()))
+}
+
+// ---------------------------------------------------------------- loading
+
+/// Byte-offset cursor over the loaded `u64` arena. All multi-byte reads
+/// happen at their natural alignment (the writer pads every section to 8
+/// bytes), so values come out by word indexing, never byte reassembly.
+struct Cursor<'a> {
+    arena: &'a [u64],
+    /// File length in bytes (the arena's last word may be partial).
+    len: usize,
+    off: usize,
+}
+
+impl Cursor<'_> {
+    /// Reserve `n` bytes: bounds-check, advance, return the old offset.
+    fn take(&mut self, n: usize) -> Result<usize> {
+        let end = self.off.checked_add(n).context("section size overflows")?;
+        ensure!(end <= self.len, "file truncated (need {end} bytes, have {})", self.len);
+        let at = self.off;
+        self.off = end;
+        Ok(at)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let at = self.take(4)?;
+        debug_assert_eq!(at % 4, 0);
+        let word = u64::from_le(self.arena[at / 8]);
+        Ok(if at % 8 == 0 { word as u32 } else { (word >> 32) as u32 })
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let at = self.take(8)?;
+        debug_assert_eq!(at % 8, 0);
+        Ok(u64::from_le(self.arena[at / 8]))
+    }
+
+    /// A `u64` field that must fit `usize` (rows, cols, lengths).
+    fn dim(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("dimension overflows usize")
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let nbytes = n.checked_mul(4).context("f32 section size overflows")?;
+        let at = self.take(nbytes)?;
+        debug_assert_eq!(at % 8, 0);
+        if n % 2 == 1 {
+            self.take(4)?; // writer's alignment pad
+        }
+        let base = at / 8;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let word = u64::from_le(self.arena[base + i / 2]);
+            let bits = if i % 2 == 0 { word as u32 } else { (word >> 32) as u32 };
+            out.push(f32::from_bits(bits));
+        }
+        Ok(out)
+    }
+
+    /// The bulk move: `n` plane words lifted out of the arena as one slice.
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let nbytes = n.checked_mul(8).context("plane section size overflows")?;
+        let at = self.take(nbytes)?;
+        debug_assert_eq!(at % 8, 0);
+        let base = at / 8;
+        Ok(self.arena[base..base + n].iter().map(|&w| u64::from_le(w)).collect())
+    }
+
+    /// Matrix section as raw parts: `(rows, cols, k, alphas, words)`.
+    fn matrix(&mut self) -> Result<(usize, usize, usize, Vec<f32>, Vec<u64>)> {
+        let (rows, cols, k) = (self.dim()?, self.dim()?, self.dim()?);
+        ensure!(rows >= 1 && cols >= 1 && k >= 1, "degenerate matrix shape {rows}x{cols} k={k}");
+        let planes = rows.checked_mul(k).context("matrix shape overflows")?;
+        let words = planes.checked_mul(cols.div_ceil(64)).context("matrix shape overflows")?;
+        let alphas = self.f32s(planes)?;
+        let data = self.u64s(words)?;
+        Ok((rows, cols, k, alphas, data))
+    }
+
+    fn vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.dim()?;
+        self.f32s(n)
+    }
+}
+
+/// Load a published model's packed parts: one metadata read, one bulk
+/// `read_exact` into a `u64` arena, then section walks that only copy
+/// plane/alpha buffers out — no parse, no requantize.
+pub fn load(path: &Path) -> Result<PackedLmParts> {
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let len = f.metadata()?.len();
+    let len = usize::try_from(len).context("file too large for this host")?;
+    ensure!(len >= 32, "not an .amqz file (shorter than the header)");
+    let mut arena = vec![0u64; len.div_ceil(8)];
+    // SAFETY: u8 has no alignment or validity requirements, and the byte
+    // view covers exactly the `len` bytes inside the arena's allocation.
+    let bytes = unsafe { std::slice::from_raw_parts_mut(arena.as_mut_ptr().cast::<u8>(), len) };
+    f.read_exact(bytes).with_context(|| format!("reading {}", path.display()))?;
+    drop(f);
+
+    let mut c = Cursor { arena: &arena, len, off: 0 };
+    let magic = c.u32()?;
+    ensure!(magic == MAGIC, "not an .amqz file (bad magic)");
+    let version = c.u32()?;
+    ensure!(version == VERSION, "unsupported .amqz version {version} (expected {VERSION})");
+    let [kind, w_bits, a_bits, method] = c.u32()?.to_le_bytes();
+    let kind = match kind {
+        0 => RnnKind::Lstm,
+        1 => RnnKind::Gru,
+        other => bail!("unknown model kind tag {other}"),
+    };
+    ensure!(method == METHOD_ALTERNATING, "unsupported quantization method tag {method}");
+    let (w_bits, a_bits) = (w_bits as usize, a_bits as usize);
+    ensure!(w_bits >= 1 && a_bits >= 1, "bit widths must be at least 1");
+    let layers = c.u32()? as usize;
+    let vocab = usize::try_from(c.u64()?).context("vocab overflows usize")?;
+    let hidden = usize::try_from(c.u64()?).context("hidden overflows usize")?;
+    ensure!(layers >= 1 && vocab >= 1 && hidden >= 1, "degenerate model shape");
+    let config = LmConfig { kind, vocab, hidden, layers };
+
+    let (rows, cols, k, alphas, words) = c.matrix()?;
+    let embedding = RowQuantized::from_raw_parts(rows, cols, k, alphas, &words)
+        .map_err(|e| anyhow::anyhow!("embedding: {e}"))?;
+    let mut packed_layers = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let (rows, cols, k, alphas, words) = c.matrix()?;
+        let wx = PreparedGemm::from_raw_parts(rows, cols, k, words, alphas)
+            .map_err(|e| anyhow::anyhow!("layer {l} wx: {e}"))?;
+        let (rows, cols, k, alphas, words) = c.matrix()?;
+        let wh = PreparedGemm::from_raw_parts(rows, cols, k, words, alphas)
+            .map_err(|e| anyhow::anyhow!("layer {l} wh: {e}"))?;
+        let bias = c.vec()?;
+        packed_layers.push(PackedLayer { wx, wh, bias });
+    }
+    let (rows, cols, k, alphas, words) = c.matrix()?;
+    let softmax = PreparedGemm::from_raw_parts(rows, cols, k, words, alphas)
+        .map_err(|e| anyhow::anyhow!("softmax: {e}"))?;
+    let softmax_bias = c.vec()?;
+    ensure!(c.off == len, "{} trailing bytes after the model payload", len - c.off);
+    Ok(PackedLmParts {
+        config,
+        w_bits,
+        a_bits,
+        embedding,
+        layers: packed_layers,
+        softmax,
+        softmax_bias,
+    })
+}
+
+/// [`load`] + [`RnnLm::from_packed`]: file → serving model in one call.
+pub fn load_model(path: &Path) -> Result<RnnLm> {
+    RnnLm::from_packed(load(path)?)
+        .with_context(|| format!("assembling model from {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lm::PrecisionPolicy;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("amqz_unit_{}_{name}.amqz", std::process::id()))
+    }
+
+    fn tiny_model(kind: RnnKind) -> RnnLm {
+        let config = LmConfig { kind, vocab: 50, hidden: 24, layers: 1 };
+        RnnLm::random(config, 7, PrecisionPolicy::quantized(2, 2))
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_buffer() {
+        for kind in [RnnKind::Lstm, RnnKind::Gru] {
+            let model = tiny_model(kind);
+            let parts = model.to_packed().unwrap();
+            let path = tmp(kind.name());
+            save(&path, &parts).unwrap();
+            let loaded = load(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_eq!(loaded.w_bits, parts.w_bits);
+            assert_eq!(loaded.a_bits, parts.a_bits);
+            assert_eq!(loaded.embedding.alphas, parts.embedding.alphas);
+            assert_eq!(loaded.embedding.planes, parts.embedding.planes);
+            assert_eq!(loaded.softmax.plane_words(), parts.softmax.plane_words());
+            assert_eq!(loaded.softmax.alphas(), parts.softmax.alphas());
+            assert_eq!(loaded.softmax_bias, parts.softmax_bias);
+            for (a, b) in loaded.layers.iter().zip(&parts.layers) {
+                assert_eq!(a.wx.plane_words(), b.wx.plane_words());
+                assert_eq!(a.wh.plane_words(), b.wh.plane_words());
+                assert_eq!(a.bias, b.bias);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_and_truncated_files_error_without_panicking() {
+        let model = tiny_model(RnnKind::Lstm);
+        let path = tmp("corrupt");
+        save(&path, &model.to_packed().unwrap()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load(&path).unwrap_err().to_string().contains("bad magic"));
+
+        // Truncation at every interesting boundary.
+        for cut in [7, 31, 40, good.len() / 2, good.len() - 4] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load(&path).is_err(), "truncation at {cut} must error");
+        }
+
+        // Trailing junk.
+        let mut long = good.clone();
+        long.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&path, &long).unwrap();
+        assert!(load(&path).unwrap_err().to_string().contains("trailing"));
+
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn dense_models_refuse_to_publish() {
+        let config = LmConfig { kind: RnnKind::Lstm, vocab: 20, hidden: 8, layers: 1 };
+        let dense = RnnLm::random(config, 3, PrecisionPolicy::full());
+        assert!(dense.to_packed().is_err());
+    }
+}

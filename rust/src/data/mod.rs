@@ -15,6 +15,7 @@
 //! * [`checkpoint`] — a minimal named-tensor binary format shared with the
 //!   Layer-2 Python side (`python/compile/tensorio.py`).
 
+pub mod amqz;
 pub mod batcher;
 pub mod checkpoint;
 pub mod images;

@@ -142,6 +142,68 @@ impl PreparedGemm {
         }
     }
 
+    /// Reassemble a prepared matrix from the contiguous buffers that
+    /// [`Self::plane_words`] / [`Self::alphas`] expose — the `.amqz`
+    /// loader's constructor. The packed planes go straight from the file
+    /// arena into the serving layout with **no requantization**; only
+    /// shape and tail-bit invariants are checked. Dispatches on the
+    /// process-wide active backend, like [`Self::new`].
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        k: usize,
+        data: Vec<u64>,
+        alphas: Vec<f32>,
+    ) -> Result<Self, String> {
+        if rows == 0 || cols == 0 || k == 0 {
+            return Err(format!("degenerate matrix shape {rows}x{cols} k={k}"));
+        }
+        let wpp = cols.div_ceil(64);
+        let planes = rows
+            .checked_mul(k)
+            .ok_or_else(|| format!("matrix shape {rows}x{cols} k={k} overflows"))?;
+        if alphas.len() != planes {
+            return Err(format!("expected {planes} alphas, got {}", alphas.len()));
+        }
+        let words = planes
+            .checked_mul(wpp)
+            .ok_or_else(|| format!("matrix shape {rows}x{cols} k={k} overflows"))?;
+        if data.len() != words {
+            return Err(format!("expected {words} plane words, got {}", data.len()));
+        }
+        // Same invariant `PackedBits::from_words` asserts: bits past `cols`
+        // in each plane's last word must be zero (the count kernels rely
+        // on a clean tail). A corrupt file fails here instead of panicking.
+        if cols % 64 != 0 {
+            for (p, plane) in data.chunks_exact(wpp).enumerate() {
+                if plane[wpp - 1] >> (cols % 64) != 0 {
+                    return Err(format!("plane {p} has nonzero bits past column {cols}"));
+                }
+            }
+        }
+        Ok(PreparedGemm {
+            rows,
+            cols,
+            k,
+            words_per_plane: wpp,
+            data,
+            alphas,
+            kernel: backend::active().resolve(),
+        })
+    }
+
+    /// The packed planes as one contiguous buffer, layout
+    /// `[row][plane][word]` with `cols.div_ceil(64)` words per plane —
+    /// exactly what the `.amqz` format stores.
+    pub fn plane_words(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// The `rows * k` row coefficients, row-major (`alphas[r*k + t]`).
+    pub fn alphas(&self) -> &[f32] {
+        &self.alphas
+    }
+
     /// The backend this matrix dispatches its count loops to.
     pub fn kernel(&self) -> Kernel {
         self.kernel

@@ -3,7 +3,10 @@
 //! Subcommands:
 //! ```text
 //! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 --threads N --kernel auto
-//!               --event-loop --loops N --max-slots N --queue-depth N --continuous ..]
+//!               --event-loop --loops N --max-slots N --queue-depth N --continuous
+//!               --model name=path.amqz (repeatable) --model-alias alias=name
+//!               --default-model name --model-mem-budget 512mb ..]
+//! amq publish  --out f.amqz [--checkpoint f.amqt | --random] --w-bits 2 --a-bits 2 ...
 //! amq train    --tag lstm_fp [--dataset ptb|wt2|text8] [--epochs N] ...
 //! amq quantize --bits 2 [--method alternating[:cycles]] [--checkpoint f.amqt]
 //! amq bench    table1|table2|table3|table4|table5|table6|table7|table8|table9|costmodel
@@ -15,21 +18,33 @@
 //! the batcher to continuous batching; `--max-slots` caps concurrently
 //! decoding sequences and `--queue-depth` bounds the admission queue
 //! before `ERR BUSY` load shedding. `--continuous` enables continuous
-//! batching on the classic front end too.
+//! batching on the classic front end too. `AMQ_EVENTLOOP=1` in the
+//! environment forces `--event-loop` (CI uses this to run both front ends
+//! through one script).
+//!
+//! `amq publish` quantizes a model once and writes the packed `.amqz`
+//! format (`data::amqz`) — the exact in-memory bit-plane layout, so
+//! `amq serve --model name=path.amqz` brings it up with a single bulk read
+//! instead of re-quantizing. Multiple `--model` flags (or a `[models]`
+//! config section) serve several models from one process; requests pick
+//! one with the protocol's `MODEL <name>` field, and idle models LRU-evict
+//! past `--model-mem-budget`.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 use amq::cli::Cli;
-use amq::config::{Config, ModelConfig, ServerConfig};
-use amq::data::{Corpus, DatasetSpec};
+use amq::config::{parse_mem_size, Config, ModelConfig, ServerConfig};
+use amq::data::{amqz, Corpus, DatasetSpec};
 use amq::exec::{Exec, ExecConfig};
 use amq::exp;
-use amq::model::lm::{PrecisionPolicy, RnnLm};
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnLm};
+use amq::model::RnnKind;
 use amq::quant::{self, Method};
-use amq::server::{tcp, BatcherConfig, InferenceServer};
 use amq::server::batcher::Work;
+use amq::server::{tcp, BatcherConfig, InferenceServer, ModelRegistry};
 use amq::util::Rng;
 use anyhow::{bail, Context, Result};
 
@@ -52,13 +67,14 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: amq <serve|train|quantize|bench|stats> [options]\n\
+    "usage: amq <serve|publish|train|quantize|bench|stats> [options]\n\
      run `amq <subcommand> --help` conventions in README.md"
 }
 
 fn run(cli: Cli) -> Result<()> {
     match cli.subcommand.as_str() {
         "serve" => cmd_serve(&cli),
+        "publish" => cmd_publish(&cli),
         "train" => cmd_train(&cli),
         "quantize" => cmd_quantize(&cli),
         "bench" => cmd_bench(&cli),
@@ -94,9 +110,12 @@ fn dataset(cli: &Cli) -> Result<DatasetSpec> {
 // ---------------------------------------------------------------------------
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    let (server_cfg, model_cfg) = if let Some(path) = cli.get("config") {
-        let c = Config::load(std::path::Path::new(path))?;
-        (ServerConfig::from_config(&c), ModelConfig::from_config(&c)?)
+    let file_cfg = match cli.get("config") {
+        Some(path) => Some(Config::load(std::path::Path::new(path))?),
+        None => None,
+    };
+    let (server_cfg, model_cfg) = if let Some(c) = &file_cfg {
+        (ServerConfig::from_config(c), ModelConfig::from_config(c)?)
     } else {
         let c = Config::parse("")?;
         let mut m = ModelConfig::from_config(&c)?;
@@ -112,7 +131,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     };
     let mut server_cfg = server_cfg;
     // Serving-shape flags override the config file (like --threads).
-    if cli.has("event-loop") {
+    // `AMQ_EVENTLOOP=1` forces the event-loop front end — lets CI (and
+    // anyone scripting both front ends) flip it without editing commands.
+    if cli.has("event-loop") || std::env::var("AMQ_EVENTLOOP").is_ok_and(|v| v == "1") {
         server_cfg.event_loop = true;
     }
     server_cfg.loops = cli.get_usize("loops", server_cfg.loops)?;
@@ -142,50 +163,129 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let exec_cfg = ExecConfig::with_threads(cli.get_usize("threads", server_cfg.threads)?);
     let exec = Exec::new(exec_cfg);
 
-    let policy = if model_cfg.quantized {
-        PrecisionPolicy::quantized(model_cfg.w_bits, model_cfg.a_bits)
-    } else {
-        PrecisionPolicy::full()
-    };
-    let model = match &model_cfg.checkpoint {
-        Some(p) => {
-            let ckpt = amq::data::checkpoint::Checkpoint::load(std::path::Path::new(p))?;
-            let w = amq::train::trainer::weights_from_checkpoint(&ckpt, &model_cfg.lm)?;
-            RnnLm::from_weights_exec(model_cfg.lm, &w, policy, &exec)
+    // Named `.amqz` models for the multi-tenant registry: `--model
+    // name=path` (repeatable) plus the `[models]` / `[model_aliases]`
+    // config sections. Given any, the server loads packed models on demand
+    // instead of building one in process.
+    let mut named: Vec<(String, PathBuf)> = Vec::new();
+    if let Some(c) = &file_cfg {
+        for (name, v) in c.section("models") {
+            let p = v
+                .as_str()
+                .with_context(|| format!("[models] {name} must be a string path"))?;
+            named.push((name, PathBuf::from(p)));
         }
-        None => {
-            eprintln!("note: no checkpoint configured — serving a randomly initialized model");
-            RnnLm::random_exec(model_cfg.lm, model_cfg.seed, policy, &exec)
+    }
+    for spec in cli.get_all("model") {
+        let (name, path) = spec
+            .split_once('=')
+            .with_context(|| format!("--model expects name=path.amqz, got '{spec}'"))?;
+        named.push((name.to_string(), PathBuf::from(path)));
+    }
+    let mut aliases: Vec<(String, String)> = Vec::new();
+    if let Some(c) = &file_cfg {
+        for (alias, v) in c.section("model_aliases") {
+            let t = v
+                .as_str()
+                .with_context(|| format!("[model_aliases] {alias} must be a model name"))?;
+            aliases.push((alias, t.to_string()));
         }
+    }
+    for spec in cli.get_all("model-alias") {
+        let (alias, target) = spec
+            .split_once('=')
+            .with_context(|| format!("--model-alias expects alias=name, got '{spec}'"))?;
+        aliases.push((alias.to_string(), target.to_string()));
+    }
+    let budget_raw = cli
+        .get("model-mem-budget")
+        .map(str::to_string)
+        .or_else(|| server_cfg.model_mem_budget.clone());
+    let budget = match &budget_raw {
+        Some(s) => parse_mem_size(s).context("--model-mem-budget")?,
+        None => 0,
     };
-    eprintln!(
-        "model: {} vocab={} hidden={} {} ({} weight bytes, kernel={}, {} exec threads)",
-        model.config.kind.name(),
-        model.config.vocab,
-        model.config.hidden,
-        if model_cfg.quantized {
-            format!("W{}A{}", model_cfg.w_bits, model_cfg.a_bits)
-        } else {
-            "FP".into()
-        },
-        model.bytes(),
-        kernel,
-        exec.threads()
-    );
 
-    let server = InferenceServer::with_exec(
-        Arc::new(model),
-        BatcherConfig {
-            max_batch: server_cfg.max_batch,
-            batch_wait: std::time::Duration::from_micros(server_cfg.batch_wait_us),
-            max_sessions: server_cfg.max_sessions,
-            continuous,
-            max_slots: server_cfg.max_slots,
-            queue_depth: server_cfg.queue_depth,
-            exec: exec_cfg,
-        },
-        exec,
-    );
+    let batcher_cfg = BatcherConfig {
+        max_batch: server_cfg.max_batch,
+        batch_wait: std::time::Duration::from_micros(server_cfg.batch_wait_us),
+        max_sessions: server_cfg.max_sessions,
+        continuous,
+        max_slots: server_cfg.max_slots,
+        queue_depth: server_cfg.queue_depth,
+        exec: exec_cfg,
+    };
+    let server = if named.is_empty() {
+        // Single-model path: build (or load a checkpoint) in process; the
+        // batcher pins it as model "default".
+        let policy = if model_cfg.quantized {
+            PrecisionPolicy::quantized(model_cfg.w_bits, model_cfg.a_bits)
+        } else {
+            PrecisionPolicy::full()
+        };
+        let model = match &model_cfg.checkpoint {
+            Some(p) => {
+                let ckpt = amq::data::checkpoint::Checkpoint::load(std::path::Path::new(p))?;
+                let w = amq::train::trainer::weights_from_checkpoint(&ckpt, &model_cfg.lm)?;
+                RnnLm::from_weights_exec(model_cfg.lm, &w, policy, &exec)
+            }
+            None => {
+                eprintln!("note: no checkpoint configured — serving a randomly initialized model");
+                RnnLm::random_exec(model_cfg.lm, model_cfg.seed, policy, &exec)
+            }
+        };
+        eprintln!(
+            "model: {} vocab={} hidden={} {} ({} weight bytes, kernel={}, {} exec threads)",
+            model.config.kind.name(),
+            model.config.vocab,
+            model.config.hidden,
+            if model_cfg.quantized {
+                format!("W{}A{}", model_cfg.w_bits, model_cfg.a_bits)
+            } else {
+                "FP".into()
+            },
+            model.bytes(),
+            kernel,
+            exec.threads()
+        );
+        InferenceServer::with_exec(Arc::new(model), batcher_cfg, exec)
+    } else {
+        let mut registry = ModelRegistry::new(budget);
+        for (name, path) in &named {
+            registry.register_path(name, path.clone()).map_err(anyhow::Error::msg)?;
+        }
+        for (alias, target) in &aliases {
+            registry.alias(alias, target).map_err(anyhow::Error::msg)?;
+        }
+        if let Some(d) = cli.get("default-model") {
+            registry.set_default(d).map_err(anyhow::Error::msg)?;
+        } else {
+            // No explicit default: the first registered model serves
+            // requests that omit the MODEL field.
+            let first = named.first().map(|(n, _)| n.clone()).expect("named is non-empty");
+            registry.set_default(&first).map_err(anyhow::Error::msg)?;
+        }
+        // Preload the default so a bad path or corrupt file fails at
+        // startup instead of on the first request.
+        let default =
+            registry.default_name().map(str::to_string).context("no models registered")?;
+        let t0 = Instant::now();
+        let (model, _) = registry.acquire(&default, |_| true).map_err(anyhow::Error::msg)?;
+        eprintln!(
+            "registry: {} models, default '{default}' ({} vocab={} hidden={}, {} bytes, \
+             loaded in {:.1} ms), budget {} (kernel={}, {} exec threads)",
+            named.len(),
+            model.config.kind.name(),
+            model.config.vocab,
+            model.config.hidden,
+            model.bytes(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            if budget == 0 { "unlimited".to_string() } else { format!("{budget} bytes") },
+            kernel,
+            exec.threads()
+        );
+        InferenceServer::with_registry(registry, batcher_cfg, exec)
+    };
     let (tx, rx) = mpsc::channel::<Work>();
     let batcher = std::thread::spawn(move || server.run(rx));
     eprintln!(
@@ -233,6 +333,66 @@ fn cmd_stats(cli: &Cli) -> Result<()> {
         }
         None => bail!("unexpected reply: {line}"),
     }
+}
+
+/// Quantize a model once and write the packed `.amqz` serving format: the
+/// exact `PreparedGemm` plane/alpha layout, so `amq serve --model
+/// name=file.amqz` maps it back with one bulk read and zero re-quantization
+/// (see `data::amqz` for the layout and `rust/benches/model_registry.rs`
+/// for the cold-load speedup this buys).
+fn cmd_publish(cli: &Cli) -> Result<()> {
+    let out = PathBuf::from(cli.get("out").context("--out <file.amqz> is required")?);
+    let w_bits = cli.get_usize("w-bits", 2)?;
+    let a_bits = cli.get_usize("a-bits", 2)?;
+    if w_bits == 0 {
+        bail!("publish needs a quantized model (--w-bits >= 1); .amqz stores packed bit-planes");
+    }
+    let kind = match cli.get_str("kind", "lstm").as_str() {
+        "lstm" => RnnKind::Lstm,
+        "gru" => RnnKind::Gru,
+        other => bail!("unknown --kind '{other}' (lstm|gru)"),
+    };
+    let lm = LmConfig {
+        kind,
+        vocab: cli.get_usize("vocab", 2000)?,
+        hidden: cli.get_usize("hidden", 200)?,
+        layers: cli.get_usize("layers", 1)?,
+    };
+    let exec = Exec::new(ExecConfig::with_threads(cli.get_usize("threads", 0)?));
+    let policy = PrecisionPolicy::quantized(w_bits, a_bits);
+    let t0 = Instant::now();
+    let model = match cli.get("checkpoint") {
+        Some(p) => {
+            let ckpt = amq::data::checkpoint::Checkpoint::load(std::path::Path::new(p))?;
+            let w = amq::train::trainer::weights_from_checkpoint(&ckpt, &lm)?;
+            RnnLm::from_weights_exec(lm, &w, policy, &exec)
+        }
+        None => {
+            let seed = cli.get_usize("seed", 1)? as u64;
+            eprintln!(
+                "note: no --checkpoint — publishing a randomly initialized model (--seed {seed})"
+            );
+            RnnLm::random_exec(lm, seed, policy, &exec)
+        }
+    };
+    let quantize_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let parts = model.to_packed()?;
+    amqz::save(&out, &parts)?;
+    let file_bytes = std::fs::metadata(&out)?.len();
+    println!(
+        "published {} vocab={} hidden={} layers={} W{}A{} → {}: {} bytes on disk \
+         ({} weight bytes in memory; built+quantized in {quantize_ms:.0} ms)",
+        model.config.kind.name(),
+        model.config.vocab,
+        model.config.hidden,
+        model.config.layers,
+        w_bits,
+        a_bits,
+        out.display(),
+        file_bytes,
+        model.bytes(),
+    );
+    Ok(())
 }
 
 fn cmd_train(cli: &Cli) -> Result<()> {

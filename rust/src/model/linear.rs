@@ -202,6 +202,12 @@ impl QuantLinear {
         }
     }
 
+    /// Wrap an already-prepared matrix (the `.amqz` load path — the packed
+    /// planes come straight off disk, no quantization runs).
+    pub fn from_prepared(w: PreparedGemm, k_a: usize) -> Self {
+        QuantLinear { w, k_a }
+    }
+
     pub fn k_a(&self) -> usize {
         self.k_a
     }

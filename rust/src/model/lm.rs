@@ -6,13 +6,17 @@
 //! (Tables 1–5): quantize a trained checkpoint's matrices and measure
 //! perplexity-per-word on a held-out stream.
 
+use anyhow::{bail, ensure, Result};
+
 use super::batch::{ActivationBatch, OutputBatch};
 use super::embedding::{Embedded, EmbeddedBatchBuf, EmbeddedBatchView, Embedding};
 use super::gru::{GruCell, GruStepWorkspace};
-use super::linear::{Linear, LinearOp, LinearWorkspace, Precision};
+use super::linear::{Linear, LinearOp, LinearWorkspace, Precision, QuantLinear};
 use super::lstm::{LstmCell, LstmState, LstmStateBatch, LstmStepWorkspace};
 use super::math::log_softmax_at;
 use crate::exec::Exec;
+use crate::kernels::binary::PreparedGemm;
+use crate::quant::RowQuantized;
 use crate::util::Rng;
 
 /// Which recurrent cell to use.
@@ -151,6 +155,31 @@ pub struct RnnLm {
     softmax_bias: Vec<f32>,
 }
 
+/// One recurrent layer of a fully quantized model, disassembled into the
+/// buffers the `.amqz` on-disk format stores (packed planes + alphas in
+/// [`PreparedGemm`]'s serving layout, biases dense f32).
+pub struct PackedLayer {
+    pub wx: PreparedGemm,
+    pub wh: PreparedGemm,
+    pub bias: Vec<f32>,
+}
+
+/// A fully quantized model as flat packed buffers — the interchange type
+/// between [`RnnLm`] and `data::amqz`. [`RnnLm::to_packed`] produces it at
+/// publish time; [`RnnLm::from_packed`] adopts the buffers with **no
+/// requantization**, which is what makes `.amqz` cold loads O(file size).
+pub struct PackedLmParts {
+    pub config: LmConfig,
+    /// Weight bit width `k` shared by every matrix.
+    pub w_bits: usize,
+    /// Activation bit width the gate/softmax products quantize online at.
+    pub a_bits: usize,
+    pub embedding: RowQuantized,
+    pub layers: Vec<PackedLayer>,
+    pub softmax: PreparedGemm,
+    pub softmax_bias: Vec<f32>,
+}
+
 /// Dense parameter bundle (interchange with the Layer-2 JAX model and the
 /// checkpoint format).
 #[derive(Clone, Debug, Default)]
@@ -253,6 +282,121 @@ impl RnnLm {
         let mut rng = Rng::new(seed);
         let w = LmWeights::random(&config, &mut rng);
         Self::from_weights_exec(config, &w, policy, exec)
+    }
+
+    /// Disassemble a fully quantized model into [`PackedLmParts`] — the
+    /// buffers `data::amqz` writes verbatim. Errors if any matrix is dense
+    /// (the `.amqz` format only stores packed planes + alphas; publish a
+    /// quantized policy).
+    pub fn to_packed(&self) -> Result<PackedLmParts> {
+        let embedding = match &self.embedding {
+            Embedding::Quant { w } => w.clone(),
+            Embedding::Dense { .. } => {
+                bail!("embedding is dense — publishing requires a fully quantized model")
+            }
+        };
+        let take = |lin: &Linear, what: &str| -> Result<(PreparedGemm, usize)> {
+            match lin {
+                Linear::Quant(q) => Ok((q.prepared().clone(), q.k_a())),
+                Linear::Dense(_) => {
+                    bail!("{what} is dense — publishing requires a fully quantized model")
+                }
+            }
+        };
+        let mut layers = Vec::with_capacity(self.cells.len());
+        let mut a_bits = 0;
+        for (l, cell) in self.cells.iter().enumerate() {
+            let (wx, wh, bias) = match cell {
+                Cell::Lstm(c) => (&c.wx, &c.wh, &c.bias),
+                Cell::Gru(c) => (&c.wx, &c.wh, &c.bias),
+            };
+            let (wx, ka) = take(wx, &format!("layer {l} wx"))?;
+            let (wh, _) = take(wh, &format!("layer {l} wh"))?;
+            a_bits = ka;
+            layers.push(PackedLayer { wx, wh, bias: bias.clone() });
+        }
+        let (softmax, softmax_ka) = take(&self.softmax, "softmax")?;
+        if a_bits == 0 {
+            a_bits = softmax_ka;
+        }
+        Ok(PackedLmParts {
+            config: self.config,
+            w_bits: embedding.k,
+            a_bits,
+            embedding,
+            layers,
+            softmax,
+            softmax_bias: self.softmax_bias.clone(),
+        })
+    }
+
+    /// Reassemble a model from [`PackedLmParts`] — the `.amqz` load path.
+    /// No quantization runs: the prepared matrices are adopted as-is, so
+    /// the result is bit-identical to the model that was published
+    /// (pinned by `rust/tests/amqz_roundtrip.rs`). Shapes are validated so
+    /// a corrupt or mismatched file errors instead of panicking later.
+    pub fn from_packed(parts: PackedLmParts) -> Result<Self> {
+        let PackedLmParts { config, w_bits, a_bits, embedding, layers, softmax, softmax_bias } =
+            parts;
+        let (v, h, g) = (config.vocab, config.hidden, config.kind.gates());
+        ensure!(w_bits >= 1 && a_bits >= 1, "bit widths must be at least 1");
+        ensure!(
+            layers.len() == config.layers,
+            "expected {} layers, got {}",
+            config.layers,
+            layers.len()
+        );
+        ensure!(
+            embedding.rows == v && embedding.cols == h && embedding.k == w_bits,
+            "embedding shape {}x{} k={} does not match config {v}x{h} k={w_bits}",
+            embedding.rows,
+            embedding.cols,
+            embedding.k
+        );
+        ensure!(
+            softmax.rows == v && softmax.cols == h && softmax.k == w_bits,
+            "softmax shape {}x{} k={} does not match config {v}x{h} k={w_bits}",
+            softmax.rows,
+            softmax.cols,
+            softmax.k
+        );
+        ensure!(softmax_bias.len() == v, "softmax bias length {} != vocab {v}", softmax_bias.len());
+        let mut cells = Vec::with_capacity(layers.len());
+        for (l, layer) in layers.into_iter().enumerate() {
+            for (m, what) in [(&layer.wx, "wx"), (&layer.wh, "wh")] {
+                ensure!(
+                    m.rows == g * h && m.cols == h && m.k == w_bits,
+                    "layer {l} {what} shape {}x{} k={} does not match config {}x{h} k={w_bits}",
+                    m.rows,
+                    m.cols,
+                    m.k,
+                    g * h
+                );
+            }
+            ensure!(
+                layer.bias.len() == g * h,
+                "layer {l} bias length {} != {}",
+                layer.bias.len(),
+                g * h
+            );
+            let wx = Linear::Quant(QuantLinear::from_prepared(layer.wx, a_bits));
+            let wh = Linear::Quant(QuantLinear::from_prepared(layer.wh, a_bits));
+            cells.push(match config.kind {
+                RnnKind::Lstm => {
+                    Cell::Lstm(LstmCell { wx, wh, bias: layer.bias, hidden: h, input: h })
+                }
+                RnnKind::Gru => {
+                    Cell::Gru(GruCell { wx, wh, bias: layer.bias, hidden: h, input: h })
+                }
+            });
+        }
+        Ok(RnnLm {
+            config,
+            embedding: Embedding::Quant { w: embedding },
+            cells,
+            softmax: Linear::Quant(QuantLinear::from_prepared(softmax, a_bits)),
+            softmax_bias,
+        })
     }
 
     pub fn zero_state(&self) -> LmState {

@@ -31,4 +31,4 @@ pub mod mlp;
 
 pub use batch::{ActivationBatch, OutputBatch};
 pub use linear::{Linear, LinearOp, LinearWorkspace};
-pub use lm::{LmConfig, LmStepWorkspace, RnnKind, RnnLm};
+pub use lm::{LmConfig, LmStepWorkspace, PackedLayer, PackedLmParts, RnnKind, RnnLm};

@@ -73,6 +73,46 @@ impl RowQuantized {
         RowQuantized { rows, cols, k: kk, alphas, planes }
     }
 
+    /// Reassemble from the flat buffers the `.amqz` format stores: `words`
+    /// is the planes' bit data concatenated row-major (`[row][plane][word]`,
+    /// `cols.div_ceil(64)` words per plane — the same contiguous layout
+    /// [`crate::kernels::binary::PreparedGemm`] serves from). No
+    /// quantization happens; only shape and tail-bit invariants are
+    /// checked, so a corrupt file reports an error instead of tripping the
+    /// `PackedBits::from_words` assertions.
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        k: usize,
+        alphas: Vec<f32>,
+        words: &[u64],
+    ) -> Result<Self, String> {
+        if rows == 0 || cols == 0 || k == 0 {
+            return Err(format!("degenerate matrix shape {rows}x{cols} k={k}"));
+        }
+        let wpp = cols.div_ceil(64);
+        let nplanes = rows
+            .checked_mul(k)
+            .ok_or_else(|| format!("matrix shape {rows}x{cols} k={k} overflows"))?;
+        if alphas.len() != nplanes {
+            return Err(format!("expected {nplanes} alphas, got {}", alphas.len()));
+        }
+        let nwords = nplanes
+            .checked_mul(wpp)
+            .ok_or_else(|| format!("matrix shape {rows}x{cols} k={k} overflows"))?;
+        if words.len() != nwords {
+            return Err(format!("expected {nwords} plane words, got {}", words.len()));
+        }
+        let mut planes = Vec::with_capacity(nplanes);
+        for (p, chunk) in words.chunks_exact(wpp).enumerate() {
+            if cols % 64 != 0 && chunk[wpp - 1] >> (cols % 64) != 0 {
+                return Err(format!("plane {p} has nonzero bits past column {cols}"));
+            }
+            planes.push(PackedBits::from_words(cols, chunk.to_vec()));
+        }
+        Ok(RowQuantized { rows, cols, k, alphas, planes })
+    }
+
     /// The quantization of row `r` as a standalone [`Quantized`].
     pub fn row(&self, r: usize) -> Quantized {
         Quantized {

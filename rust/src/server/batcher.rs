@@ -1,5 +1,5 @@
 //! The batching inference loop: fixed timestep groups or continuous
-//! batching, one code path for the actual decode.
+//! batching, one code path for the actual decode — now multi-tenant.
 //!
 //! **Grouped mode** (the classic [`Self::run`] loop with
 //! `continuous = false`): requests queue on a channel; the batcher drains
@@ -18,12 +18,24 @@
 //! the steady-state timestep itself is the zero-allocation
 //! [`RnnLm::step_batch_into_exec`] on the server's persistent workspace.
 //! Admission control backs the loop: at most `max_slots` sequences decode
-//! concurrently, at most `queue_depth` wait behind them, and anything
-//! beyond that is shed instantly with [`Reply::Busy`] (`ERR BUSY` on the
-//! wire) instead of building unbounded latency. Generations for a session
-//! already decoding are held until its slot leaves (per-session
-//! serialization — pipelined requests continue state exactly as if sent
-//! one at a time; unrelated sessions admit past them).
+//! concurrently (summed across models), at most `queue_depth` wait behind
+//! them, and anything beyond that is shed instantly with [`Reply::Busy`]
+//! (`ERR BUSY` on the wire) instead of building unbounded latency.
+//! Generations for a session already decoding are held until its slot
+//! leaves (per-session serialization — pipelined requests continue state
+//! exactly as if sent one at a time; unrelated sessions admit past them).
+//!
+//! **Multi-tenancy**: the server holds a [`ModelRegistry`] and one
+//! [`ModelLane`] per *resident* model — each lane owns its model's
+//! sessions, decode slots, and step workspaces, so sequences of different
+//! models batch among themselves and never cross-contaminate state. A
+//! request's `MODEL <name>` field (default: the registry's default model)
+//! is resolved at admission, which is also where the zero-copy `.amqz`
+//! load happens on a cold name and where LRU eviction past the memory
+//! budget drops idle lanes. Admission also validates every request token
+//! against the target model's vocab — an out-of-vocab token answers
+//! `ERR token <t> out of vocab <v>` instead of reaching the
+//! `Embedding::lookup` assert and panicking the batcher thread.
 //!
 //! Both modes run every batched timestep on the server's [`Exec`] worker
 //! pool (`config.exec`), which row-shards every GEMM across cores —
@@ -31,6 +43,7 @@
 //! clients: the tokens equal a serial `max_batch = 1` run, always.
 
 use std::collections::VecDeque;
+use std::fmt::Write as _;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -41,19 +54,24 @@ use crate::model::lm::{LmState, LmStateBatch, LmStepWorkspace};
 use crate::model::math::argmax;
 use crate::model::OutputBatch;
 use crate::model::RnnLm;
+use crate::server::registry::ModelRegistry;
 use crate::server::session::SessionStore;
+
+/// Name the single-model constructors register their model under.
+pub const DEFAULT_MODEL: &str = "default";
 
 /// Batching knobs ([server] config section).
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     pub max_batch: usize,
     pub batch_wait: Duration,
+    /// Per-model session cap (each lane gets its own store).
     pub max_sessions: usize,
     /// Continuous batching: join/leave at timestep boundaries instead of
     /// fixed prime+decode groups. The event-loop front end's mode.
     pub continuous: bool,
-    /// Max sequences decoding concurrently in continuous mode
-    /// (`0` ⇒ `max_batch`).
+    /// Max sequences decoding concurrently in continuous mode, summed
+    /// across models (`0` ⇒ `max_batch`).
     pub max_slots: usize,
     /// Bounded pending queue in continuous mode; a generation request
     /// arriving with the queue full is shed with [`Reply::Busy`].
@@ -82,6 +100,9 @@ pub struct Request {
     pub session: u64,
     pub max_new: usize,
     pub prime: Vec<usize>,
+    /// Target model (`None` ⇒ the registry default). Admission rewrites it
+    /// to the canonical registry name.
+    pub model: Option<String>,
     pub respond: Respond,
     pub enqueued: Instant,
 }
@@ -102,6 +123,9 @@ pub enum Reply {
     /// `true` ⇒ the session existed and was dropped.
     End(bool),
     Stats(String),
+    /// Request-level failure (out-of-vocab token, unknown model, model
+    /// load failure). Rendered as `ERR <message>`; the connection lives.
+    Error(String),
     /// Load shed: the pending queue was full when the request arrived.
     Busy { queued: usize, depth: usize },
 }
@@ -133,15 +157,15 @@ pub trait ReplySink: Send + Sync {
 /// Work items multiplexed onto the batcher thread.
 pub enum Work {
     Gen(Request),
-    Score { tokens: Vec<usize>, respond: Respond },
-    End { session: u64, respond: Respond },
+    Score { tokens: Vec<usize>, model: Option<String>, respond: Respond },
+    End { session: u64, model: Option<String>, respond: Respond },
     Stats { text: bool, respond: Respond },
     Shutdown,
 }
 
 /// One sequence occupying a batch slot. `slots[i]` always describes column
-/// `i` of the resident state batch; the parallel `tokens[i]` holds the
-/// token that column consumes at the next timestep.
+/// `i` of the lane's resident state batch; the parallel `tokens[i]` holds
+/// the token that column consumes at the next timestep.
 struct SeqSlot {
     session: u64,
     prime: Vec<usize>,
@@ -160,26 +184,164 @@ struct SeqSlot {
     state_buf: LmState,
 }
 
-/// The inference server state machine. Drive it with [`Self::run`] on a
-/// dedicated thread, or call [`Self::process_batch`] directly (benches).
-///
-/// The server owns the decode-path workspaces (`step_state`, `step_logits`,
-/// `step_ws`): they grow to the max-batch high-water mark once and are then
-/// reused across every timestep of every request, so a steady-state
-/// timestep runs the model's zero-allocation
-/// [`RnnLm::step_batch_into_exec`] path end to end. In continuous mode,
+/// Everything decode-related for one resident model: its sessions, its
+/// slots, and the persistent step workspaces (`step_state`, `step_logits`,
+/// `step_ws` grow to the high-water batch once, after which a warmed
+/// steady-state timestep runs the model's zero-allocation
+/// [`RnnLm::step_batch_into_exec`] path end to end). In continuous mode,
 /// `step_state` is the **resident** decode batch — columns are pushed and
 /// swap-removed at timestep boundaries and are never re-gathered.
-pub struct InferenceServer {
+/// Dropping a lane (LRU eviction) drops the model `Arc` and all its saved
+/// session states.
+struct ModelLane {
     model: Arc<RnnLm>,
     sessions: SessionStore,
-    config: BatcherConfig,
-    exec: Exec,
     step_state: LmStateBatch,
     step_logits: OutputBatch,
     step_ws: LmStepWorkspace,
     slots: Vec<SeqSlot>,
     tokens: Vec<usize>,
+}
+
+impl ModelLane {
+    fn new(model: Arc<RnnLm>, max_sessions: usize) -> Self {
+        let step_state = model.zero_state_batch(0);
+        ModelLane {
+            model,
+            sessions: SessionStore::new(max_sessions),
+            step_state,
+            step_logits: OutputBatch::zeros(0, 0),
+            step_ws: LmStepWorkspace::new(),
+            slots: Vec::new(),
+            tokens: Vec::new(),
+        }
+    }
+
+    /// Is this session currently resident in a decode slot? O(slots) — the
+    /// slot count is small by construction (`max_slots`).
+    fn session_decoding(&self, session: u64) -> bool {
+        self.slots.iter().any(|s| s.session == session)
+    }
+
+    /// Join one request into a free slot: restore (or zero) its session
+    /// state, push it as a new column of the resident state batch, and
+    /// queue its first input token. O(layers · hidden), at a timestep
+    /// boundary only.
+    fn join_slot(&mut self, req: Request) {
+        let Request { session, max_new, prime, model: _, respond, enqueued } = req;
+        let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+        let state_buf = self.sessions.take(session).unwrap_or_else(|| self.model.zero_state());
+        self.model.push_state_column(&state_buf, &mut self.step_state);
+        let mut out = Vec::new();
+        // An empty prime (direct-API callers only; the wire protocol
+        // requires ≥ 1) decodes from token 0, which is itself emitted —
+        // the grouped batcher's historical semantics, preserved exactly.
+        let first = match prime.first() {
+            Some(&t) => t,
+            None => {
+                out.push(0);
+                0
+            }
+        };
+        self.tokens.push(first);
+        self.slots.push(SeqSlot {
+            session,
+            prime,
+            fed: 0,
+            out,
+            max_new,
+            respond,
+            queue_us,
+            joined: Instant::now(),
+            done: false,
+            state_buf,
+        });
+    }
+
+    /// Free slot `i` after the timestep that consumed its final token:
+    /// extract its state column into the slot's own buffer, swap-remove the
+    /// column (the last slot takes index `i` — O(layers · hidden), no
+    /// shifting), save the session, and reply.
+    fn leave_slot(&mut self, i: usize, counters: &Counters, latency: &LatencyRing) {
+        let mut slot = self.slots.swap_remove(i);
+        self.tokens.swap_remove(i);
+        self.model.scatter_state_into(&self.step_state, i, &mut slot.state_buf);
+        self.model.swap_remove_state_column(&mut self.step_state, i);
+        let compute_us = slot.joined.elapsed().as_secs_f64() * 1e6;
+        Counters::inc(&counters.tokens_generated, slot.out.len() as u64);
+        latency.record(Duration::from_secs_f64((slot.queue_us + compute_us) / 1e6));
+        self.sessions.put(slot.session, slot.state_buf);
+        slot.respond.send(Reply::Gen(Response {
+            tokens: slot.out,
+            queue_us: slot.queue_us,
+            compute_us,
+        }));
+    }
+
+    /// One lockstep timestep across every occupied slot: batched forward on
+    /// the resident state, then per-slot advance (next prime token, or emit
+    /// the greedy token), then free the finished slots. Per-timestep
+    /// bookkeeping is O(active) for the advance and O(leaves) for the
+    /// frees — no per-timestep list rebuilds.
+    fn timestep(&mut self, exec: &Exec, counters: &Counters, latency: &LatencyRing) {
+        debug_assert_eq!(self.slots.len(), self.tokens.len());
+        debug_assert_eq!(self.step_state.batch(), self.slots.len());
+        self.model.step_batch_into_exec(
+            &self.tokens,
+            &mut self.step_state,
+            &mut self.step_logits,
+            exec,
+            &mut self.step_ws,
+        );
+        Counters::inc(&counters.decode_timesteps, 1);
+        let mut any_done = false;
+        for i in 0..self.slots.len() {
+            let slot = &mut self.slots[i];
+            if slot.fed < slot.prime.len() {
+                slot.fed += 1; // this step consumed prime[fed]
+            }
+            if slot.fed < slot.prime.len() {
+                self.tokens[i] = slot.prime[slot.fed];
+            } else if slot.out.len() >= slot.max_new {
+                // The token consumed this step was the last emitted one:
+                // the session state is now past it. Finished.
+                slot.done = true;
+                any_done = true;
+            } else {
+                // Greedy decode: the next input is this step's argmax, and
+                // selecting it *is* emitting it.
+                let t = argmax(self.step_logits.row(i));
+                slot.out.push(t);
+                self.tokens[i] = t;
+            }
+        }
+        if any_done {
+            // Reverse order: swap_remove moves an already-visited slot (the
+            // last) into the freed index.
+            for i in (0..self.slots.len()).rev() {
+                if self.slots[i].done {
+                    self.leave_slot(i, counters, latency);
+                }
+            }
+        }
+    }
+}
+
+/// The inference server state machine. Drive it with [`Self::run`] on a
+/// dedicated thread, or call [`Self::process_batch`] directly (benches).
+///
+/// Holds a [`ModelRegistry`] plus one decode lane per resident model
+/// (registration order, so iteration — and therefore STATS — is
+/// deterministic). The single-model constructors pin their model under
+/// the name [`DEFAULT_MODEL`] in an unlimited registry, which reproduces
+/// the old single-tenant behavior exactly.
+pub struct InferenceServer {
+    registry: ModelRegistry,
+    /// `(canonical name, lane)` in registration order. Linear scans — the
+    /// lane count is "models an operator configured".
+    lanes: Vec<(String, ModelLane)>,
+    config: BatcherConfig,
+    exec: Exec,
     pending: VecDeque<Request>,
     pub latency: Arc<LatencyRing>,
     pub counters: Arc<Counters>,
@@ -191,27 +353,29 @@ impl InferenceServer {
         Self::with_exec(model, config, exec)
     }
 
+    /// Single-model server on an existing engine: the model is pinned as
+    /// [`DEFAULT_MODEL`] in a fresh unlimited registry.
+    pub fn with_exec(model: Arc<RnnLm>, config: BatcherConfig, exec: Exec) -> Self {
+        let mut registry = ModelRegistry::new(0);
+        registry.insert_resident(DEFAULT_MODEL, model).expect("'default' is a valid model name");
+        Self::with_registry(registry, config, exec)
+    }
+
     /// Build with an existing engine (shares a pool already used to
     /// quantize the model, instead of spawning a second one). The stored
     /// config is normalized to the engine actually running, so
     /// `config.exec` can never disagree with the pool serving requests;
     /// `max_slots = 0` resolves to `max_batch`.
-    pub fn with_exec(model: Arc<RnnLm>, mut config: BatcherConfig, exec: Exec) -> Self {
+    pub fn with_registry(registry: ModelRegistry, mut config: BatcherConfig, exec: Exec) -> Self {
         config.exec = ExecConfig::with_threads(exec.threads());
         if config.max_slots == 0 {
             config.max_slots = config.max_batch;
         }
-        let step_state = model.zero_state_batch(0);
         InferenceServer {
-            model,
-            sessions: SessionStore::new(config.max_sessions),
+            registry,
+            lanes: Vec::new(),
             config,
             exec,
-            step_state,
-            step_logits: OutputBatch::zeros(0, 0),
-            step_ws: LmStepWorkspace::new(),
-            slots: Vec::new(),
-            tokens: Vec::new(),
             pending: VecDeque::new(),
             latency: Arc::new(LatencyRing::new(1024)),
             counters: Arc::new(Counters::new()),
@@ -221,6 +385,55 @@ impl InferenceServer {
     /// The engine this server runs its batched forwards on.
     pub fn exec(&self) -> &Exec {
         &self.exec
+    }
+
+    fn lane(&self, name: &str) -> Option<&ModelLane> {
+        self.lanes.iter().find(|(n, _)| n.as_str() == name).map(|(_, l)| l)
+    }
+
+    fn lane_mut(&mut self, name: &str) -> Option<&mut ModelLane> {
+        self.lanes.iter_mut().find(|(n, _)| n.as_str() == name).map(|(_, l)| l)
+    }
+
+    /// Sequences decoding right now, across all models.
+    fn total_slots(&self) -> usize {
+        self.lanes.iter().map(|(_, l)| l.slots.len()).sum()
+    }
+
+    /// Materialize the lane for canonical model `name`: acquire from the
+    /// registry (zero-copy load on a cold name), drop any lanes the
+    /// registry LRU-evicted to fit the budget (a lane mid-decode is never
+    /// a victim), and build the lane if it isn't resident. Err is a
+    /// wire-ready message.
+    fn ensure_lane(&mut self, name: &str) -> Result<(), String> {
+        let lanes = &self.lanes;
+        let (model, evicted) = self
+            .registry
+            .acquire(name, |n| !lanes.iter().any(|(ln, l)| ln == n && !l.slots.is_empty()))?;
+        for gone in evicted {
+            Counters::inc(&self.counters.evictions, 1);
+            self.lanes.retain(|(n, _)| *n != gone);
+        }
+        if self.lane(name).is_none() {
+            self.lanes.push((name.to_string(), ModelLane::new(model, self.config.max_sessions)));
+        }
+        Ok(())
+    }
+
+    /// Admission-time validation for a generation: resolve the model
+    /// (loading it if needed) and check every prime token against its
+    /// vocab, so an out-of-vocab token answers `ERR` here instead of
+    /// panicking in `Embedding::lookup` mid-decode. Rewrites `req.model`
+    /// to the canonical name. Err is a wire-ready message.
+    fn prepare_gen(&mut self, req: &mut Request) -> Result<(), String> {
+        let name = self.registry.resolve(req.model.as_deref())?;
+        self.ensure_lane(&name)?;
+        let vocab = self.lane(&name).expect("lane just ensured").model.config.vocab;
+        if let Some(&t) = req.prime.iter().find(|&&t| t >= vocab) {
+            return Err(format!("token {t} out of vocab {vocab}"));
+        }
+        req.model = Some(name);
+        Ok(())
     }
 
     /// Blocking work loop; dispatches on the configured batching mode.
@@ -271,7 +484,7 @@ impl InferenceServer {
     /// barrier. Blocks only when fully idle.
     fn run_continuous(mut self, rx: Receiver<Work>) {
         loop {
-            if self.slots.is_empty() && self.pending.is_empty() {
+            if self.total_slots() == 0 && self.pending.is_empty() {
                 // Idle: block until something arrives.
                 match rx.recv() {
                     Ok(w) => {
@@ -292,7 +505,7 @@ impl InferenceServer {
                     }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
-                        if self.slots.is_empty() && self.pending.is_empty() {
+                        if self.total_slots() == 0 && self.pending.is_empty() {
                             return;
                         }
                         break;
@@ -302,47 +515,65 @@ impl InferenceServer {
             // Join pending sequences into slots freed by the last
             // timestep's leaves.
             self.admit();
-            if !self.slots.is_empty() {
-                self.timestep();
-            }
+            self.timestep_all();
         }
     }
 
     /// Move pending requests into free slots. Only ever called between
     /// timesteps, so a join always lands exactly at a boundary.
     ///
-    /// A request whose session is already decoding in a slot is held back
-    /// until that slot leaves: per-session generations serialize, so a
-    /// client pipelining `GEN`s on one session observes exactly the
-    /// sequential state handoff (the second request continues from the
-    /// first's final state, never from a stale or zero snapshot). Held
-    /// requests keep their queue position relative to their own session;
-    /// unrelated sessions may admit past them — no head-of-line blocking.
+    /// A request whose session is already decoding in its model's lane is
+    /// held back until that slot leaves: per-session generations
+    /// serialize, so a client pipelining `GEN`s on one session observes
+    /// exactly the sequential state handoff (the second request continues
+    /// from the first's final state, never from a stale or zero snapshot).
+    /// Held requests keep their queue position relative to their own
+    /// session; unrelated sessions may admit past them — no head-of-line
+    /// blocking. A queued request whose model was evicted while it waited
+    /// triggers a reload here (its registry entry outlives the lane).
     fn admit(&mut self) {
         let mut i = 0;
-        while self.slots.len() < self.config.max_slots && i < self.pending.len() {
-            if self.session_decoding(self.pending[i].session) {
+        while self.total_slots() < self.config.max_slots && i < self.pending.len() {
+            // Canonical from `prepare_gen` on the wire path; direct-API
+            // callers may leave it unset, meaning the default model.
+            let name = match self.pending[i].model.clone() {
+                Some(n) => n,
+                None => match self.registry.resolve(None) {
+                    Ok(n) => n,
+                    Err(msg) => {
+                        self.fail_pending(i, msg);
+                        continue;
+                    }
+                },
+            };
+            if self.lane(&name).is_some_and(|l| l.session_decoding(self.pending[i].session)) {
                 i += 1;
                 continue;
             }
+            if let Err(msg) = self.ensure_lane(&name) {
+                self.fail_pending(i, msg);
+                continue;
+            }
             let req = self.pending.remove(i).expect("index checked in bounds");
-            self.join_slot(req);
+            self.lane_mut(&name).expect("lane just ensured").join_slot(req);
             // `remove` shifted the next unexamined request down to `i`.
         }
     }
 
-    /// Is this session currently resident in a decode slot? O(slots) — the
-    /// slot count is small by construction (`max_slots`).
-    fn session_decoding(&self, session: u64) -> bool {
-        self.slots.iter().any(|s| s.session == session)
+    /// Drop pending request `i` with an error reply.
+    fn fail_pending(&mut self, i: usize, msg: String) {
+        let req = self.pending.remove(i).expect("index checked in bounds");
+        Counters::inc(&self.counters.errors, 1);
+        req.respond.send(Reply::Error(msg));
     }
 
-    /// Absorb one work item in continuous mode: generations pass admission
-    /// control into the pending queue, everything else answers inline.
-    /// Returns false on shutdown.
+    /// Absorb one work item in continuous mode: generations pass model
+    /// resolution, vocab validation, and admission control into the
+    /// pending queue; everything else answers inline. Returns false on
+    /// shutdown.
     fn absorb(&mut self, w: Work) -> bool {
         match w {
-            Work::Gen(req) => {
+            Work::Gen(mut req) => {
                 if self.pending.len() >= self.config.queue_depth {
                     Counters::inc(&self.counters.shed, 1);
                     req.respond.send(Reply::Busy {
@@ -351,11 +582,20 @@ impl InferenceServer {
                     });
                 } else {
                     Counters::inc(&self.counters.requests, 1);
-                    self.pending.push_back(req);
-                    // A free slot takes the head of the queue right away
-                    // (we are between timesteps here), so `queue_depth`
-                    // bounds the wait line, not slots + line.
-                    self.admit();
+                    match self.prepare_gen(&mut req) {
+                        Ok(()) => {
+                            self.pending.push_back(req);
+                            // A free slot takes the head of the queue right
+                            // away (we are between timesteps here), so
+                            // `queue_depth` bounds the wait line, not
+                            // slots + line.
+                            self.admit();
+                        }
+                        Err(msg) => {
+                            Counters::inc(&self.counters.errors, 1);
+                            req.respond.send(Reply::Error(msg));
+                        }
+                    }
                 }
                 true
             }
@@ -380,12 +620,28 @@ impl InferenceServer {
     fn control(&mut self, w: Work) -> bool {
         match w {
             Work::Gen(_) => unreachable!("generation handled by the mode-specific path"),
-            Work::Score { tokens, respond } => {
+            Work::Score { tokens, model, respond } => {
                 Counters::inc(&self.counters.requests, 1);
-                respond.send(Reply::Score(self.model.ppw(&tokens)));
+                let reply = self.score(&tokens, model.as_deref());
+                if matches!(reply, Reply::Error(_)) {
+                    Counters::inc(&self.counters.errors, 1);
+                }
+                respond.send(reply);
             }
-            Work::End { session, respond } => {
-                respond.send(Reply::End(self.sessions.remove(session)));
+            Work::End { session, model, respond } => {
+                // Resolve without materializing: ending a session of an
+                // evicted model must not pull it back off disk (its
+                // sessions died with the lane anyway).
+                let reply = match self.registry.resolve(model.as_deref()) {
+                    Ok(name) => {
+                        Reply::End(self.lane_mut(&name).is_some_and(|l| l.sessions.remove(session)))
+                    }
+                    Err(msg) => {
+                        Counters::inc(&self.counters.errors, 1);
+                        Reply::Error(msg)
+                    }
+                };
+                respond.send(reply);
             }
             Work::Stats { text, respond } => {
                 respond.send(Reply::Stats(self.stats_payload(text)));
@@ -395,50 +651,102 @@ impl InferenceServer {
         true
     }
 
+    /// SCORE with the same admission-time model resolution and vocab
+    /// validation as generations (`RnnLm::ppw` embeds every token).
+    fn score(&mut self, tokens: &[usize], model: Option<&str>) -> Reply {
+        let name = match self.registry.resolve(model) {
+            Ok(n) => n,
+            Err(msg) => return Reply::Error(msg),
+        };
+        if let Err(msg) = self.ensure_lane(&name) {
+            return Reply::Error(msg);
+        }
+        let lane_model = Arc::clone(&self.lane(&name).expect("lane just ensured").model);
+        let vocab = lane_model.config.vocab;
+        if let Some(&t) = tokens.iter().find(|&&t| t >= vocab) {
+            return Reply::Error(format!("token {t} out of vocab {vocab}"));
+        }
+        Reply::Score(lane_model.ppw(tokens))
+    }
+
     /// The `STATS` payload: single-line JSON, or the human-readable line
-    /// behind `STATS TEXT`.
+    /// behind `STATS TEXT`. Session and eviction counts sum over lanes;
+    /// the `models` object reports per-model residency in registration
+    /// order.
     fn stats_payload(&self, text: bool) -> String {
         let snap = self.latency.snapshot();
         let c = &self.counters;
+        let sessions: usize = self.lanes.iter().map(|(_, l)| l.sessions.len()).sum();
+        let session_evictions: u64 = self.lanes.iter().map(|(_, l)| l.sessions.evictions).sum();
         if text {
             return format!(
-                "{} requests={} tokens={} batches={} timesteps={} shed={} active={} queued={} \
-                 evictions={} sessions={} mode={} kernel={} threads={}",
+                "{} requests={} tokens={} batches={} timesteps={} shed={} errors={} active={} \
+                 queued={} evictions={} sessions={} models={} model_evictions={} mode={} \
+                 kernel={} threads={}",
                 snap.report("latency"),
                 Counters::get(&c.requests),
                 Counters::get(&c.tokens_generated),
                 Counters::get(&c.batches),
                 Counters::get(&c.decode_timesteps),
                 Counters::get(&c.shed),
-                self.slots.len(),
+                Counters::get(&c.errors),
+                self.total_slots(),
                 self.pending.len(),
-                self.sessions.evictions,
-                self.sessions.len(),
+                session_evictions,
+                sessions,
+                self.registry.entries().len(),
+                self.registry.total_evictions,
                 if self.config.continuous { "continuous" } else { "grouped" },
                 crate::kernels::backend::active(),
                 self.exec.threads(),
             );
         }
+        let mut models = String::from("{");
+        for (i, e) in self.registry.entries().iter().enumerate() {
+            if i > 0 {
+                models.push(',');
+            }
+            let (slots, lane_sessions) =
+                self.lane(&e.name).map_or((0, 0), |l| (l.slots.len(), l.sessions.len()));
+            let _ = write!(
+                models,
+                "\"{}\":{{\"resident\":{},\"bytes\":{},\"slots\":{},\"sessions\":{},\
+                 \"hits\":{},\"loads\":{},\"evictions\":{}}}",
+                e.name,
+                e.resident(),
+                e.bytes,
+                slots,
+                lane_sessions,
+                e.hits,
+                e.loads,
+                e.evictions,
+            );
+        }
+        models.push('}');
         // NaN (empty latency window) is not valid JSON; report zeros.
         let f = |v: f64| if v.is_finite() { v } else { 0.0 };
         format!(
             "{{\"mode\":\"{}\",\"active_slots\":{},\"max_slots\":{},\"queued\":{},\
-             \"queue_depth\":{},\"shed\":{},\"requests\":{},\"tokens_generated\":{},\
-             \"batches\":{},\"decode_timesteps\":{},\"sessions\":{},\"evictions\":{},\
+             \"queue_depth\":{},\"shed\":{},\"errors\":{},\"requests\":{},\
+             \"tokens_generated\":{},\"batches\":{},\"decode_timesteps\":{},\"sessions\":{},\
+             \"evictions\":{},\"models\":{},\"model_evictions\":{},\
              \"kernel\":\"{}\",\"threads\":{},\"latency_us\":{{\"count\":{},\"window\":{},\
              \"mean\":{:.1},\"p50\":{:.1},\"p95\":{:.1},\"p99\":{:.1},\"max\":{:.1}}}}}",
             if self.config.continuous { "continuous" } else { "grouped" },
-            self.slots.len(),
+            self.total_slots(),
             self.config.max_slots,
             self.pending.len(),
             self.config.queue_depth,
             Counters::get(&c.shed),
+            Counters::get(&c.errors),
             Counters::get(&c.requests),
             Counters::get(&c.tokens_generated),
             Counters::get(&c.batches),
             Counters::get(&c.decode_timesteps),
-            self.sessions.len(),
-            self.sessions.evictions,
+            sessions,
+            session_evictions,
+            models,
+            self.registry.total_evictions,
             crate::kernels::backend::active(),
             self.exec.threads(),
             snap.count,
@@ -451,105 +759,13 @@ impl InferenceServer {
         )
     }
 
-    /// Join one request into a free slot: restore (or zero) its session
-    /// state, push it as a new column of the resident state batch, and
-    /// queue its first input token. O(layers · hidden), at a timestep
-    /// boundary only.
-    fn join_slot(&mut self, req: Request) {
-        let Request { session, max_new, prime, respond, enqueued } = req;
-        let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
-        let state_buf = self.sessions.take(session).unwrap_or_else(|| self.model.zero_state());
-        self.model.push_state_column(&state_buf, &mut self.step_state);
-        let mut out = Vec::new();
-        // An empty prime (direct-API callers only; the wire protocol
-        // requires ≥ 1) decodes from token 0, which is itself emitted —
-        // the grouped batcher's historical semantics, preserved exactly.
-        let first = match prime.first() {
-            Some(&t) => t,
-            None => {
-                out.push(0);
-                0
-            }
-        };
-        self.tokens.push(first);
-        self.slots.push(SeqSlot {
-            session,
-            prime,
-            fed: 0,
-            out,
-            max_new,
-            respond,
-            queue_us,
-            joined: Instant::now(),
-            done: false,
-            state_buf,
-        });
-    }
-
-    /// Free slot `i` after the timestep that consumed its final token:
-    /// extract its state column into the slot's own buffer, swap-remove the
-    /// column (the last slot takes index `i` — O(layers · hidden), no
-    /// shifting), save the session, and reply.
-    fn leave_slot(&mut self, i: usize) {
-        let mut slot = self.slots.swap_remove(i);
-        self.tokens.swap_remove(i);
-        self.model.scatter_state_into(&self.step_state, i, &mut slot.state_buf);
-        self.model.swap_remove_state_column(&mut self.step_state, i);
-        let compute_us = slot.joined.elapsed().as_secs_f64() * 1e6;
-        Counters::inc(&self.counters.tokens_generated, slot.out.len() as u64);
-        self.latency.record(Duration::from_secs_f64((slot.queue_us + compute_us) / 1e6));
-        self.sessions.put(slot.session, slot.state_buf);
-        slot.respond.send(Reply::Gen(Response {
-            tokens: slot.out,
-            queue_us: slot.queue_us,
-            compute_us,
-        }));
-    }
-
-    /// One lockstep timestep across every occupied slot: batched forward on
-    /// the resident state, then per-slot advance (next prime token, or emit
-    /// the greedy token), then free the finished slots. Per-timestep
-    /// bookkeeping is O(active) for the advance and O(leaves) for the
-    /// frees — no per-timestep list rebuilds.
-    fn timestep(&mut self) {
-        debug_assert_eq!(self.slots.len(), self.tokens.len());
-        debug_assert_eq!(self.step_state.batch(), self.slots.len());
-        self.model.step_batch_into_exec(
-            &self.tokens,
-            &mut self.step_state,
-            &mut self.step_logits,
-            &self.exec,
-            &mut self.step_ws,
-        );
-        Counters::inc(&self.counters.decode_timesteps, 1);
-        let mut any_done = false;
-        for i in 0..self.slots.len() {
-            let slot = &mut self.slots[i];
-            if slot.fed < slot.prime.len() {
-                slot.fed += 1; // this step consumed prime[fed]
-            }
-            if slot.fed < slot.prime.len() {
-                self.tokens[i] = slot.prime[slot.fed];
-            } else if slot.out.len() >= slot.max_new {
-                // The token consumed this step was the last emitted one:
-                // the session state is now past it. Finished.
-                slot.done = true;
-                any_done = true;
-            } else {
-                // Greedy decode: the next input is this step's argmax, and
-                // selecting it *is* emitting it.
-                let t = argmax(self.step_logits.row(i));
-                slot.out.push(t);
-                self.tokens[i] = t;
-            }
-        }
-        if any_done {
-            // Reverse order: swap_remove moves an already-visited slot (the
-            // last) into the freed index.
-            for i in (0..self.slots.len()).rev() {
-                if self.slots[i].done {
-                    self.leave_slot(i);
-                }
+    /// One timestep on every lane with occupied slots. Lanes step in
+    /// registration order — deterministic, and independent (different
+    /// models share nothing but the worker pool).
+    fn timestep_all(&mut self) {
+        for (_, lane) in self.lanes.iter_mut() {
+            if !lane.slots.is_empty() {
+                lane.timestep(&self.exec, &self.counters, &self.latency);
             }
         }
     }
@@ -566,16 +782,26 @@ impl InferenceServer {
     /// composition and thread count, neither batching, threading, nor
     /// buffer reuse is visible to clients: a session generates the same
     /// tokens regardless of who it was batched with or how many cores
-    /// served it.
+    /// served it. Requests resolving to different models join different
+    /// lanes and step side by side.
     pub fn process_batch(&mut self, batch: Vec<Request>) {
         Counters::inc(&self.counters.batches, 1);
         Counters::inc(&self.counters.requests, batch.len() as u64);
-        debug_assert!(self.slots.is_empty(), "grouped mode runs one batch at a time");
-        for req in batch {
-            self.join_slot(req);
+        debug_assert!(self.total_slots() == 0, "grouped mode runs one batch at a time");
+        for mut req in batch {
+            match self.prepare_gen(&mut req) {
+                Ok(()) => {
+                    let name = req.model.clone().expect("prepare_gen sets the canonical name");
+                    self.lane_mut(&name).expect("lane just ensured").join_slot(req);
+                }
+                Err(msg) => {
+                    Counters::inc(&self.counters.errors, 1);
+                    req.respond.send(Reply::Error(msg));
+                }
+            }
         }
-        while !self.slots.is_empty() {
-            self.timestep();
+        while self.total_slots() > 0 {
+            self.timestep_all();
         }
     }
 }
@@ -590,26 +816,34 @@ mod tests {
         BatcherConfig { max_batch: 4, ..Default::default() }
     }
 
-    fn tiny_server_with(config: BatcherConfig) -> InferenceServer {
-        let lm = RnnLm::random(
+    fn tiny_model() -> RnnLm {
+        RnnLm::random(
             LmConfig { kind: RnnKind::Lstm, vocab: 40, hidden: 16, layers: 1 },
             5,
             PrecisionPolicy::quantized(2, 2),
-        );
-        InferenceServer::new(Arc::new(lm), config)
+        )
+    }
+
+    fn tiny_server_with(config: BatcherConfig) -> InferenceServer {
+        InferenceServer::new(Arc::new(tiny_model()), config)
     }
 
     fn tiny_server() -> InferenceServer {
         tiny_server_with(tiny_config())
     }
 
-    fn gen_req(session: u64, max_new: usize, prime: Vec<usize>) -> (Request, mpsc::Receiver<Reply>) {
+    fn gen_req(
+        session: u64,
+        max_new: usize,
+        prime: Vec<usize>,
+    ) -> (Request, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::channel();
         (
             Request {
                 session,
                 max_new,
                 prime,
+                model: None,
                 respond: Respond::Channel(tx),
                 enqueued: Instant::now(),
             },
@@ -633,6 +867,83 @@ mod tests {
         assert_eq!(recv_gen(&rx1).tokens.len(), 5);
         assert_eq!(recv_gen(&rx2).tokens.len(), 3);
         assert_eq!(Counters::get(&s.counters.tokens_generated), 8);
+    }
+
+    #[test]
+    fn oov_prime_is_rejected_instead_of_panicking() {
+        // vocab = 40: token 40 is the first invalid id. Before admission
+        // validation this panicked the batcher thread inside
+        // Embedding::lookup; now it must answer Reply::Error and keep the
+        // in-batch valid request unaffected.
+        let mut s = tiny_server();
+        let (bad, bad_rx) = gen_req(1, 4, vec![2, 40, 3]);
+        let (good, good_rx) = gen_req(2, 4, vec![2, 3]);
+        s.process_batch(vec![bad, good]);
+        match bad_rx.recv().unwrap() {
+            Reply::Error(msg) => assert_eq!(msg, "token 40 out of vocab 40"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(recv_gen(&good_rx).tokens.len(), 4);
+        assert_eq!(Counters::get(&s.counters.errors), 1);
+
+        // Same check on the continuous absorb path, plus SCORE.
+        let s = tiny_server_with(BatcherConfig { continuous: true, ..tiny_config() });
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || s.run(rx));
+        let (bad, bad_rx) = gen_req(3, 4, vec![99]);
+        tx.send(Work::Gen(bad)).unwrap();
+        match bad_rx.recv().unwrap() {
+            Reply::Error(msg) => assert_eq!(msg, "token 99 out of vocab 40"),
+            other => panic!("{other:?}"),
+        }
+        let (stx, srx) = mpsc::channel();
+        tx.send(Work::Score {
+            tokens: vec![1, 40],
+            model: None,
+            respond: Respond::Channel(stx),
+        })
+        .unwrap();
+        match srx.recv().unwrap() {
+            Reply::Error(msg) => assert_eq!(msg, "token 40 out of vocab 40"),
+            other => panic!("{other:?}"),
+        }
+        // The thread is still alive and serving.
+        let (gtx, grx) = gen_req(4, 3, vec![1]);
+        tx.send(Work::Gen(gtx)).unwrap();
+        assert_eq!(recv_gen(&grx).tokens.len(), 3);
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_model_answers_error() {
+        let mut s = tiny_server();
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            session: 1,
+            max_new: 3,
+            prime: vec![1],
+            model: Some("nope".into()),
+            respond: Respond::Channel(tx),
+            enqueued: Instant::now(),
+        };
+        s.process_batch(vec![req]);
+        match rx.recv().unwrap() {
+            Reply::Error(msg) => assert_eq!(msg, "unknown model 'nope'"),
+            other => panic!("{other:?}"),
+        }
+        // Named default still works.
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            session: 1,
+            max_new: 3,
+            prime: vec![1],
+            model: Some(DEFAULT_MODEL.into()),
+            respond: Respond::Channel(tx),
+            enqueued: Instant::now(),
+        };
+        s.process_batch(vec![req]);
+        assert!(matches!(rx.recv().unwrap(), Reply::Gen(_)));
     }
 
     #[test]
@@ -700,13 +1011,18 @@ mod tests {
         tx.send(Work::Gen(g)).unwrap();
         assert_eq!(recv_gen(&grx).tokens.len(), 4);
         let (stx, srx) = mpsc::channel();
-        tx.send(Work::Score { tokens: vec![1, 2, 3, 4], respond: Respond::Channel(stx) }).unwrap();
+        tx.send(Work::Score {
+            tokens: vec![1, 2, 3, 4],
+            model: None,
+            respond: Respond::Channel(stx),
+        })
+        .unwrap();
         match srx.recv().unwrap() {
             Reply::Score(ppw) => assert!(ppw > 1.0),
             other => panic!("{other:?}"),
         }
         let (etx, erx) = mpsc::channel();
-        tx.send(Work::End { session: 1, respond: Respond::Channel(etx) }).unwrap();
+        tx.send(Work::End { session: 1, model: None, respond: Respond::Channel(etx) }).unwrap();
         assert!(matches!(erx.recv().unwrap(), Reply::End(true)));
         // JSON stats by default, the human-readable line behind text=true.
         let (mtx, mrx) = mpsc::channel();
@@ -717,11 +1033,18 @@ mod tests {
         assert!(stats.contains("\"mode\":\"grouped\""), "{stats}");
         assert!(stats.contains("\"kernel\":\"") && stats.contains("\"threads\":"), "{stats}");
         assert!(stats.contains("\"latency_us\":{\"count\":1,"), "{stats}");
+        assert!(stats.contains("\"errors\":0"), "{stats}");
+        assert!(
+            stats.contains("\"models\":{\"default\":{\"resident\":true,"),
+            "{stats}"
+        );
+        assert!(stats.contains("\"model_evictions\":0"), "{stats}");
         let (mtx, mrx) = mpsc::channel();
         tx.send(Work::Stats { text: true, respond: Respond::Channel(mtx) }).unwrap();
         let Reply::Stats(stats) = mrx.recv().unwrap() else { panic!() };
         assert!(stats.contains("requests=2"), "{stats}");
         assert!(stats.contains("kernel=") && stats.contains("threads="), "{stats}");
+        assert!(stats.contains("models=1"), "{stats}");
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();
     }
@@ -730,16 +1053,9 @@ mod tests {
     fn threaded_batcher_bitmatches_serial_batcher() {
         // The same requests against the same seed model must generate the
         // same tokens whether the forward runs on 1 thread or a pool.
-        let model = || {
-            Arc::new(RnnLm::random(
-                LmConfig { kind: RnnKind::Lstm, vocab: 40, hidden: 16, layers: 1 },
-                5,
-                PrecisionPolicy::quantized(2, 2),
-            ))
-        };
         let run = |exec: ExecConfig| {
             let mut s = InferenceServer::new(
-                model(),
+                Arc::new(tiny_model()),
                 BatcherConfig { max_batch: 4, exec, ..Default::default() },
             );
             let mut rxs = Vec::new();

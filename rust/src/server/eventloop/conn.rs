@@ -10,11 +10,7 @@ use std::net::TcpStream;
 use std::os::fd::{AsRawFd, RawFd};
 
 use crate::server::protocol::split_lines;
-
-/// A request line longer than this (no newline seen) is protocol abuse;
-/// the connection is dropped. Generous: a max-length GEN line with 4096
-/// five-digit tokens is ~25 KB.
-pub const MAX_LINE: usize = 64 * 1024;
+pub use crate::server::protocol::MAX_LINE;
 
 /// Pipelined requests in flight per connection before the loop stops
 /// reading from it (per-connection backpressure: the client's TCP window
@@ -64,8 +60,17 @@ impl Connection {
     }
 
     /// Drain the socket into the read buffer and extract complete lines.
-    /// Returns `Err` when the connection is unusable (reset, oversized
-    /// line); EOF sets `self.eof` instead so queued replies still flush.
+    /// Returns `Err` when the connection is unusable (reset, non-UTF-8, or
+    /// oversized line); EOF sets `self.eof` instead so queued replies still
+    /// flush. Lines parsed before the error stay in `lines` — the caller
+    /// serves them, then flushes the diagnostic and closes.
+    ///
+    /// Framing guard: complete lines are split off after **every** chunk,
+    /// so `rbuf` only ever holds one partial line, and that tail is bounded
+    /// by [`MAX_LINE`]. (Bounding the raw buffer instead, as this used to,
+    /// disarms the guard whenever any earlier pipelined line left a newline
+    /// in the buffer — an attacker could prefix `STATS\n` and stream
+    /// unbounded junk.)
     pub fn read_lines(&mut self, lines: &mut Vec<String>) -> io::Result<()> {
         let mut chunk = [0u8; 4096];
         loop {
@@ -76,7 +81,8 @@ impl Connection {
                 }
                 Ok(n) => {
                     self.rbuf.extend_from_slice(&chunk[..n]);
-                    if self.rbuf.len() > MAX_LINE && !self.rbuf.contains(&b'\n') {
+                    split_lines(&mut self.rbuf, lines)?;
+                    if self.rbuf.len() > MAX_LINE {
                         return Err(io::Error::new(
                             io::ErrorKind::InvalidData,
                             "request line exceeds MAX_LINE",
@@ -233,6 +239,42 @@ mod tests {
         assert!(rejected, "oversized request line must be rejected");
         assert!(lines.is_empty());
         drop(conn); // unblocks the writer if it was waiting on buffer space
+        let _ = writer.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_line_behind_valid_pipelined_line_is_rejected() {
+        // Regression: the guard used to check the raw buffer for *any*
+        // newline, so a well-formed pipelined line in front disarmed it
+        // and junk streamed in unbounded. The valid line must still parse;
+        // the newline-free flood behind it must still reject.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = Connection::new(server).unwrap();
+
+        let writer = std::thread::spawn(move || {
+            let mut payload = b"STATS\n".to_vec();
+            payload.extend_from_slice(&vec![b'x'; MAX_LINE + 4096]);
+            let _ = client.write_all(&payload);
+            client
+        });
+        let mut lines = Vec::new();
+        let mut rejected = false;
+        for _ in 0..200 {
+            match conn.read_lines(&mut lines) {
+                Err(e) => {
+                    assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+                    rejected = true;
+                    break;
+                }
+                Ok(()) if conn.eof => break,
+                Ok(()) => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+        assert!(rejected, "pipelined junk must not disarm the framing guard");
+        assert_eq!(lines, vec!["STATS".to_string()], "the valid line still parses");
+        drop(conn);
         let _ = writer.join().unwrap();
     }
 }

@@ -235,26 +235,31 @@ fn run_loop(id: usize, mut ctx: LoopCtx) {
                 WAKE => ctx.wake_rx.drain(),
                 LISTEN => accept_all(&ctx, &mut conns, &mut next_token, &mut rr),
                 token => {
-                    let mut dead = false;
                     if let Some(conn) = conns.get_mut(&token) {
                         if ev.readable {
-                            match conn.read_lines(&mut lines) {
-                                Ok(()) => {
-                                    for line in lines.drain(..) {
-                                        dispatch_line(conn, token, &line, &ctx.work, &sink);
-                                    }
-                                }
-                                Err(_) => dead = true,
+                            let framing = conn.read_lines(&mut lines);
+                            // Dispatch whatever parsed before any framing
+                            // error — `lines` is shared across connections,
+                            // so leaving them here would replay them on the
+                            // next peer's read.
+                            for line in lines.drain(..) {
+                                dispatch_line(conn, token, &line, &ctx.work, &sink);
+                            }
+                            if let Err(e) = framing {
+                                // Framing abuse (oversized line, non-UTF-8)
+                                // or a dead socket: answer after the
+                                // already-parsed pipelined replies, then
+                                // treat the peer as closed — `finalize`
+                                // reaps the connection once all replies
+                                // flush (or the flush itself fails).
+                                conn.push_ready(format!("ERR {e}"));
+                                conn.eof = true;
                             }
                         }
                         // Writable readiness needs no explicit branch: the
                         // shared `finalize` below always attempts a flush.
                     }
-                    if dead {
-                        close(&ctx.poller, &mut conns, token);
-                    } else {
-                        finalize(&ctx.poller, &mut conns, token);
-                    }
+                    finalize(&ctx.poller, &mut conns, token);
                 }
             }
         }
@@ -337,15 +342,16 @@ fn dispatch_line(
     let serial = conn.push_waiting();
     let respond = Respond::Sink { sink: sink.clone(), conn: token, serial };
     let w = match req {
-        WireRequest::Generate { session, max_new, prime } => Work::Gen(Request {
+        WireRequest::Generate { session, max_new, prime, model } => Work::Gen(Request {
             session,
             max_new,
             prime,
+            model,
             respond,
             enqueued: Instant::now(),
         }),
-        WireRequest::Score { tokens } => Work::Score { tokens, respond },
-        WireRequest::End { session } => Work::End { session, respond },
+        WireRequest::Score { tokens, model } => Work::Score { tokens, model, respond },
+        WireRequest::End { session, model } => Work::End { session, model, respond },
         WireRequest::Stats { text } => Work::Stats { text, respond },
     };
     if work.send(w).is_err() {
@@ -404,8 +410,10 @@ mod tests {
                         compute_us: 0.0,
                     }));
                 }
-                Work::Score { tokens, respond } => respond.send(Reply::Score(tokens.len() as f64)),
-                Work::End { session, respond } => respond.send(Reply::End(session % 2 == 0)),
+                Work::Score { tokens, respond, .. } => {
+                    respond.send(Reply::Score(tokens.len() as f64))
+                }
+                Work::End { session, respond, .. } => respond.send(Reply::End(session % 2 == 0)),
                 Work::Stats { text, respond } => {
                     respond.send(Reply::Stats(if text { "text".into() } else { "{}".into() }))
                 }

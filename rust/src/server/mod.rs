@@ -54,6 +54,15 @@
 //! exec pool on drop, connection handlers in `tcp::serve`, loop threads in
 //! `eventloop::EventLoopServer::shutdown`.
 //!
+//! **Multi-tenancy**: the batcher owns a [`registry::ModelRegistry`] and
+//! one decode lane per resident model. Requests carry an optional
+//! `MODEL <name>` field; named `.amqz` files (`--model name=path`,
+//! repeatable, or a `[models]` config section) load zero-copy on first use
+//! and LRU-evict past `--model-mem-budget` while idle. Admission validates
+//! every token against the target model's vocab, so malformed or hostile
+//! requests answer `ERR` instead of panicking the batcher thread
+//! (`rust/tests/hostile_client.rs` drives both front ends adversarially).
+//!
 //! CLI knobs: `--event-loop` selects the multiplexed front end (implies
 //! continuous batching), `--max-slots` caps live decode slots,
 //! `--queue-depth` bounds the admission queue. `STATS` returns one-line
@@ -63,8 +72,10 @@ pub mod batcher;
 #[cfg(unix)]
 pub mod eventloop;
 pub mod protocol;
+pub mod registry;
 pub mod session;
 pub mod tcp;
 
 pub use batcher::{BatcherConfig, InferenceServer, Reply, Request, Respond, Response, Work};
+pub use registry::ModelRegistry;
 pub use session::SessionStore;

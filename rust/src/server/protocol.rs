@@ -3,20 +3,55 @@
 //!
 //! Requests:
 //! ```text
-//! GEN <session_id> <max_new_tokens> <tok,tok,...>   generate continuation
-//! SCORE <tok,tok,...>                               PPW of a token stream
-//! END <session_id>                                  drop a session
-//! STATS                                             server metrics (one-line JSON)
-//! STATS TEXT                                        …human-readable form
+//! GEN <session_id> <max_new_tokens> <tok,tok,...> [MODEL <name>]
+//! SCORE <tok,tok,...> [MODEL <name>]              PPW of a token stream
+//! END <session_id> [MODEL <name>]                 drop a session
+//! STATS                                           server metrics (one-line JSON)
+//! STATS TEXT                                      …human-readable form
 //! ```
+//!
+//! The optional trailing `MODEL <name>` selects a model from the server's
+//! registry (`amq serve --model name=path.amqz`, repeatable); omitting it
+//! targets the default model. Session ids are scoped per model. Published
+//! `.amqz` files (see `data::amqz`) load zero-copy; the registry LRU-evicts
+//! idle models past `--model-mem-budget`. Anything after the documented
+//! fields is rejected — a request either parses completely or answers
+//! `ERR`.
 //!
 //! Responses:
 //! ```text
 //! OK GEN <tok,tok,...>
 //! OK SCORE <ppw>
 //! OK END | OK STATS <json-or-text> | ERR <message>
-//! ERR BUSY queue full (<queued>/<depth>)            load shed — retry later
+//! ERR BUSY queue full (<queued>/<depth>)          load shed — retry later
 //! ```
+//!
+//! `ERR` taxonomy (the reply's first token after `ERR` tells the class):
+//!
+//! | reply                                        | cause |
+//! |----------------------------------------------|-------|
+//! | `ERR unknown verb '<v>'`                     | first word not GEN/SCORE/END/STATS |
+//! | `ERR malformed session id`                   | GEN/END id not a u64 |
+//! | `ERR malformed max_new`                      | GEN count not a usize |
+//! | `ERR max_new out of range (1..=4096)`        | GEN count 0 or beyond the cap |
+//! | `ERR malformed token list`                   | token list not comma-separated usizes |
+//! | `ERR GEN needs at least one prime token`     | empty prime |
+//! | `ERR SCORE needs at least two tokens`        | PPW needs a transition |
+//! | `ERR unknown STATS form '<x>'`               | STATS argument other than TEXT |
+//! | `ERR MODEL needs a name`                     | trailing `MODEL` with no name |
+//! | `ERR unexpected trailing field '<x>'`        | unconsumed fields after a request |
+//! | `ERR token <t> out of vocab <v>`             | admission-time vocab check (OOV) |
+//! | `ERR unknown model '<name>'`                 | name not in the registry |
+//! | `ERR model <name>: <why>`                    | `.amqz` load failure |
+//! | `ERR no models configured`                   | registry empty / no default |
+//! | `ERR BUSY queue full (<q>/<d>)`              | admission control shed |
+//! | `ERR request line exceeds MAX_LINE`          | framing abuse; connection closes |
+//! | `ERR request is not UTF-8`                   | framing abuse; connection closes |
+//! | `ERR server shutting down`                   | request raced shutdown |
+//!
+//! Every error except the two framing classes leaves the connection open;
+//! framing errors flush any already-parsed pipelined replies plus the
+//! diagnostic, then close.
 //!
 //! [`format_reply`] renders every batcher [`Reply`] to its wire line —
 //! the single formatting path shared by the thread-per-connection and
@@ -26,12 +61,17 @@ use anyhow::{bail, Result};
 
 use super::batcher::Reply;
 
+/// Longest request line either front end will buffer. The tail left after
+/// [`split_lines`] is bounded by this, so a client streaming newline-free
+/// bytes cannot grow a connection buffer without bound.
+pub const MAX_LINE: usize = 64 * 1024;
+
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
-    Generate { session: u64, max_new: usize, prime: Vec<usize> },
-    Score { tokens: Vec<usize> },
-    End { session: u64 },
+    Generate { session: u64, max_new: usize, prime: Vec<usize>, model: Option<String> },
+    Score { tokens: Vec<usize>, model: Option<String> },
+    End { session: u64, model: Option<String> },
     Stats { text: bool },
 }
 
@@ -49,26 +89,56 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             if prime.is_empty() {
                 bail!("GEN needs at least one prime token");
             }
-            Ok(WireRequest::Generate { session, max_new, prime })
+            let model = parse_model(&mut parts)?;
+            Ok(WireRequest::Generate { session, max_new, prime, model })
         }
         "SCORE" => {
             let tokens = parse_tokens(parts.next().unwrap_or(""))?;
             if tokens.len() < 2 {
                 bail!("SCORE needs at least two tokens");
             }
-            Ok(WireRequest::Score { tokens })
+            let model = parse_model(&mut parts)?;
+            Ok(WireRequest::Score { tokens, model })
         }
         "END" => {
             let session: u64 = parts.next().unwrap_or("").parse().map_err(|_| bad("session id"))?;
-            Ok(WireRequest::End { session })
+            let model = parse_model(&mut parts)?;
+            Ok(WireRequest::End { session, model })
         }
-        "STATS" => match parts.next() {
-            None => Ok(WireRequest::Stats { text: false }),
-            Some("TEXT") => Ok(WireRequest::Stats { text: true }),
-            Some(other) => bail!("unknown STATS form '{other}' (want STATS or STATS TEXT)"),
-        },
+        "STATS" => {
+            let text = match parts.next() {
+                None => false,
+                Some("TEXT") => true,
+                Some(other) => bail!("unknown STATS form '{other}' (want STATS or STATS TEXT)"),
+            };
+            no_trailing(&mut parts)?;
+            Ok(WireRequest::Stats { text })
+        }
         other => bail!("unknown verb '{other}'"),
     }
+}
+
+/// Consume an optional trailing `MODEL <name>` and reject anything else —
+/// a request line either parses completely or errors, so malformed
+/// pipelining (`GEN 1 10 1,2 9,9`) can't be mis-read as success.
+fn parse_model(parts: &mut std::str::SplitWhitespace) -> Result<Option<String>> {
+    let model = match parts.next() {
+        None => None,
+        Some("MODEL") => match parts.next() {
+            Some(name) => Some(name.to_string()),
+            None => bail!("MODEL needs a name"),
+        },
+        Some(other) => bail!("unexpected trailing field '{other}'"),
+    };
+    no_trailing(parts)?;
+    Ok(model)
+}
+
+fn no_trailing(parts: &mut std::str::SplitWhitespace) -> Result<()> {
+    if let Some(extra) = parts.next() {
+        bail!("unexpected trailing field '{extra}'");
+    }
+    Ok(())
 }
 
 /// Render a batcher reply to its single wire line (no trailing newline).
@@ -84,6 +154,7 @@ pub fn format_reply(reply: &Reply) -> String {
             }
         }
         Reply::Stats(s) => format!("OK STATS {s}"),
+        Reply::Error(msg) => format!("ERR {msg}"),
         Reply::Busy { queued, depth } => format!("ERR BUSY queue full ({queued}/{depth})"),
     }
 }
@@ -114,7 +185,9 @@ pub fn format_tokens(tokens: &[usize]) -> String {
 /// Carriage returns and surrounding whitespace are trimmed; blank lines are
 /// skipped. Errors on any complete line that is not valid UTF-8. Shared by
 /// both front ends so framing behaves identically with and without
-/// `--event-loop`.
+/// `--event-loop`. Callers must bound the partial tail left behind against
+/// [`MAX_LINE`] — checking only the unsplit buffer would let one valid
+/// pipelined line disarm the oversize guard.
 pub fn split_lines(buf: &mut Vec<u8>, lines: &mut Vec<String>) -> std::io::Result<()> {
     let mut start = 0;
     while let Some(rel) = buf[start..].iter().position(|&b| b == b'\n') {
@@ -141,16 +214,41 @@ mod tests {
         let r = parse_request("GEN 42 10 1,2,3\n").unwrap();
         assert_eq!(
             r,
-            WireRequest::Generate { session: 42, max_new: 10, prime: vec![1, 2, 3] }
+            WireRequest::Generate { session: 42, max_new: 10, prime: vec![1, 2, 3], model: None }
         );
     }
 
     #[test]
     fn parse_score_and_end_and_stats() {
-        assert_eq!(parse_request("SCORE 5,6").unwrap(), WireRequest::Score { tokens: vec![5, 6] });
-        assert_eq!(parse_request("END 3").unwrap(), WireRequest::End { session: 3 });
+        assert_eq!(
+            parse_request("SCORE 5,6").unwrap(),
+            WireRequest::Score { tokens: vec![5, 6], model: None }
+        );
+        assert_eq!(parse_request("END 3").unwrap(), WireRequest::End { session: 3, model: None });
         assert_eq!(parse_request("STATS").unwrap(), WireRequest::Stats { text: false });
         assert_eq!(parse_request("STATS TEXT").unwrap(), WireRequest::Stats { text: true });
+    }
+
+    #[test]
+    fn parse_model_field() {
+        assert_eq!(
+            parse_request("GEN 1 4 7,8 MODEL ptb-2bit").unwrap(),
+            WireRequest::Generate {
+                session: 1,
+                max_new: 4,
+                prime: vec![7, 8],
+                model: Some("ptb-2bit".into())
+            }
+        );
+        assert_eq!(
+            parse_request("SCORE 1,2 MODEL m").unwrap(),
+            WireRequest::Score { tokens: vec![1, 2], model: Some("m".into()) }
+        );
+        assert_eq!(
+            parse_request("END 9 MODEL m").unwrap(),
+            WireRequest::End { session: 9, model: Some("m".into()) }
+        );
+        assert!(parse_request("GEN 1 4 7 MODEL").is_err());
     }
 
     #[test]
@@ -165,6 +263,22 @@ mod tests {
     }
 
     #[test]
+    fn rejects_trailing_garbage() {
+        for line in [
+            "GEN 1 10 1,2 9,9",
+            "GEN 1 10 1,2 MODEL m extra",
+            "SCORE 1,2 junk",
+            "END 3 junk",
+            "END 3 MODEL m x",
+            "STATS TEXT x",
+            "STATS TEXT MODEL m",
+        ] {
+            let err = parse_request(line).unwrap_err().to_string();
+            assert!(err.contains("trailing field"), "{line:?} → {err}");
+        }
+    }
+
+    #[test]
     fn reply_formatting() {
         use crate::server::batcher::Response;
         let gen = Reply::Gen(Response { tokens: vec![1, 2, 3], queue_us: 0.0, compute_us: 0.0 });
@@ -173,6 +287,10 @@ mod tests {
         assert_eq!(format_reply(&Reply::End(true)), "OK END");
         assert_eq!(format_reply(&Reply::End(false)), "OK END (no such session)");
         assert_eq!(format_reply(&Reply::Stats("{}".into())), "OK STATS {}");
+        assert_eq!(
+            format_reply(&Reply::Error("token 99 out of vocab 40".into())),
+            "ERR token 99 out of vocab 40"
+        );
         assert_eq!(
             format_reply(&Reply::Busy { queued: 4, depth: 4 }),
             "ERR BUSY queue full (4/4)"

@@ -1,0 +1,333 @@
+//! Multi-tenant model registry: named models, lazy `.amqz` loading, and
+//! LRU eviction under a byte budget.
+//!
+//! The paper's ~16× memory saving (2-bit packed planes vs dense f32) is
+//! what makes many-models-resident serving realistic; the registry turns
+//! that into a policy. Entries come in two flavors:
+//!
+//! - **pinned** — built in process (`insert_resident`, e.g. the legacy
+//!   single-model `amq serve` path). There is nowhere to reload them
+//!   from, so they are never evicted.
+//! - **path-backed** — registered with a `.amqz` file (`register_path`).
+//!   Loaded lazily on first use via the zero-copy `data::amqz` loader and
+//!   evictable: whenever resident bytes exceed the budget, the
+//!   least-recently-used *idle* path-backed model is dropped (and counted),
+//!   to be reloaded on its next request.
+//!
+//! Eviction drops the model's `Arc` — memory is actually reclaimed once
+//! the batcher also drops its decode lane, which is why [`acquire`]
+//! reports the evicted names back to the caller. A model's saved session
+//! states live in its lane, so eviction also forgets its sessions;
+//! clients of a swapped-out model re-prime on their next `GEN`.
+//!
+//! Error values are wire-ready strings (they go out verbatim after
+//! `ERR `), matching the taxonomy in `server::protocol`.
+//!
+//! [`acquire`]: ModelRegistry::acquire
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::data::amqz;
+use crate::model::RnnLm;
+
+/// One registered model.
+pub struct ModelEntry {
+    pub name: String,
+    /// `.amqz` source (`None` = pinned in memory).
+    pub path: Option<PathBuf>,
+    model: Option<Arc<RnnLm>>,
+    /// Weight bytes while resident (sticky after the first load so STATS
+    /// stays informative for evicted entries).
+    pub bytes: usize,
+    /// Logical timestamp of the last acquire — the LRU key.
+    last_used: u64,
+    /// Requests served while resident (admission-time acquires).
+    pub hits: u64,
+    /// Cold loads from disk.
+    pub loads: u64,
+    /// Times this model was evicted.
+    pub evictions: u64,
+}
+
+impl ModelEntry {
+    pub fn resident(&self) -> bool {
+        self.model.is_some()
+    }
+}
+
+/// The registry. Linear scans throughout — the population is "models an
+/// operator configured", not a data structure problem.
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+    /// `alias → canonical` pairs, resolved one level deep.
+    aliases: Vec<(String, String)>,
+    default_name: Option<String>,
+    /// Resident-bytes budget; 0 = unlimited.
+    budget: usize,
+    clock: u64,
+    /// Total evictions across all entries (STATS `model_evictions`).
+    pub total_evictions: u64,
+}
+
+impl ModelRegistry {
+    pub fn new(budget_bytes: usize) -> Self {
+        ModelRegistry {
+            entries: Vec::new(),
+            aliases: Vec::new(),
+            default_name: None,
+            budget: budget_bytes,
+            clock: 0,
+            total_evictions: 0,
+        }
+    }
+
+    /// Names are constrained so they embed cleanly in both the wire
+    /// protocol (whitespace-split) and the STATS JSON (no escapes needed).
+    fn validate_name(name: &str) -> Result<(), String> {
+        let ok = !name.is_empty()
+            && name.len() <= 64
+            && name.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'_' | b'-' | b'.'));
+        if ok {
+            Ok(())
+        } else {
+            Err(format!("invalid model name '{name}' (want [A-Za-z0-9._-]{{1,64}})"))
+        }
+    }
+
+    fn entry(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    fn entry_mut(&mut self, name: &str) -> Option<&mut ModelEntry> {
+        self.entries.iter_mut().find(|e| e.name == name)
+    }
+
+    fn add(
+        &mut self,
+        name: &str,
+        path: Option<PathBuf>,
+        model: Option<Arc<RnnLm>>,
+    ) -> Result<(), String> {
+        Self::validate_name(name)?;
+        if self.entry(name).is_some() || self.aliases.iter().any(|(a, _)| a == name) {
+            return Err(format!("model name '{name}' already registered"));
+        }
+        let bytes = model.as_ref().map_or(0, |m| m.bytes());
+        self.entries.push(ModelEntry {
+            name: name.to_string(),
+            path,
+            model,
+            bytes,
+            last_used: 0,
+            hits: 0,
+            loads: 0,
+            evictions: 0,
+        });
+        if self.default_name.is_none() {
+            self.default_name = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Register a model that is already in memory (pinned, never evicted).
+    /// The first registered model becomes the default.
+    pub fn insert_resident(&mut self, name: &str, model: Arc<RnnLm>) -> Result<(), String> {
+        self.add(name, None, Some(model))
+    }
+
+    /// Register a published `.amqz` for lazy loading. The first registered
+    /// model becomes the default.
+    pub fn register_path(&mut self, name: &str, path: PathBuf) -> Result<(), String> {
+        self.add(name, Some(path), None)
+    }
+
+    /// Register `alias` as another name for `target` (which must already
+    /// be registered).
+    pub fn alias(&mut self, alias: &str, target: &str) -> Result<(), String> {
+        Self::validate_name(alias)?;
+        if self.entry(alias).is_some() || self.aliases.iter().any(|(a, _)| a == alias) {
+            return Err(format!("model name '{alias}' already registered"));
+        }
+        if self.entry(target).is_none() {
+            return Err(format!("unknown model '{target}'"));
+        }
+        self.aliases.push((alias.to_string(), target.to_string()));
+        Ok(())
+    }
+
+    /// Make `name` (a model or alias) the default for requests without a
+    /// `MODEL` field.
+    pub fn set_default(&mut self, name: &str) -> Result<(), String> {
+        let canonical = self.resolve(Some(name))?;
+        self.default_name = Some(canonical);
+        Ok(())
+    }
+
+    pub fn default_name(&self) -> Option<&str> {
+        self.default_name.as_deref()
+    }
+
+    /// Resolve a request's model field to the canonical entry name.
+    pub fn resolve(&self, name: Option<&str>) -> Result<String, String> {
+        let name = match name {
+            Some(n) => n,
+            None => self.default_name.as_deref().ok_or("no models configured")?,
+        };
+        if self.entry(name).is_some() {
+            return Ok(name.to_string());
+        }
+        if let Some((_, target)) = self.aliases.iter().find(|(a, _)| a == name) {
+            if self.entry(target).is_some() {
+                return Ok(target.clone());
+            }
+        }
+        Err(format!("unknown model '{name}'"))
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.entries.iter().filter(|e| e.resident()).map(|e| e.bytes).sum()
+    }
+
+    /// Get `name`'s model (canonical name — call [`Self::resolve`] first),
+    /// loading it from disk on a miss, then LRU-evict idle path-backed
+    /// models while resident bytes exceed the budget. `idle(other)` tells
+    /// whether `other`'s decode lane is quiescent (a model mid-decode is
+    /// never evicted). Returns the model plus the names evicted — the
+    /// caller must drop its lanes for those, or the memory stays live.
+    pub fn acquire(
+        &mut self,
+        name: &str,
+        idle: impl Fn(&str) -> bool,
+    ) -> Result<(Arc<RnnLm>, Vec<String>), String> {
+        self.clock += 1;
+        let clock = self.clock;
+        let budget = self.budget;
+        let entry = self.entry_mut(name).ok_or_else(|| format!("unknown model '{name}'"))?;
+        entry.last_used = clock;
+        let model = match &entry.model {
+            Some(m) => {
+                entry.hits += 1;
+                Arc::clone(m)
+            }
+            None => {
+                let path = entry.path.clone().ok_or_else(|| {
+                    format!("model '{name}' has no source to load from")
+                })?;
+                let model = Arc::new(
+                    amqz::load_model(&path).map_err(|e| format!("model {name}: {e:#}"))?,
+                );
+                entry.model = Some(Arc::clone(&model));
+                entry.bytes = model.bytes();
+                entry.loads += 1;
+                entry.hits += 1;
+                model
+            }
+        };
+        let mut evicted = Vec::new();
+        if budget > 0 {
+            while self.resident_bytes() > budget {
+                let victim = self
+                    .entries
+                    .iter()
+                    .filter(|e| {
+                        e.resident() && e.path.is_some() && e.name != name && idle(&e.name)
+                    })
+                    .min_by_key(|e| e.last_used)
+                    .map(|e| e.name.clone());
+                let Some(victim) = victim else { break };
+                let e = self.entry_mut(&victim).expect("victim came from entries");
+                e.model = None;
+                e.evictions += 1;
+                self.total_evictions += 1;
+                evicted.push(victim);
+            }
+        }
+        Ok((model, evicted))
+    }
+
+    /// Entries in registration order (deterministic STATS / lane
+    /// iteration).
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lm::{LmConfig, PrecisionPolicy};
+    use crate::model::RnnKind;
+
+    fn tiny(seed: u64) -> Arc<RnnLm> {
+        let config = LmConfig { kind: RnnKind::Gru, vocab: 30, hidden: 8, layers: 1 };
+        Arc::new(RnnLm::random(config, seed, PrecisionPolicy::quantized(2, 2)))
+    }
+
+    fn publish(seed: u64, tag: &str) -> PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("registry_unit_{}_{tag}.amqz", std::process::id()));
+        crate::data::amqz::save(&path, &tiny(seed).to_packed().unwrap()).unwrap();
+        path
+    }
+
+    #[test]
+    fn resolve_follows_aliases_and_default() {
+        let mut r = ModelRegistry::new(0);
+        r.insert_resident("base", tiny(1)).unwrap();
+        r.alias("prod", "base").unwrap();
+        assert_eq!(r.resolve(None).unwrap(), "base");
+        assert_eq!(r.resolve(Some("prod")).unwrap(), "base");
+        assert_eq!(r.resolve(Some("nope")).unwrap_err(), "unknown model 'nope'");
+        assert!(r.alias("base", "base").is_err(), "duplicate names rejected");
+        assert!(r.insert_resident("bad name", tiny(2)).is_err());
+    }
+
+    #[test]
+    fn lru_evicts_idle_path_backed_models_under_budget() {
+        let (pa, pb, pc) = (publish(1, "a"), publish(2, "b"), publish(3, "c"));
+        let one = tiny(1).bytes();
+        let mut r = ModelRegistry::new(2 * one + one / 2);
+        r.register_path("a", pa.clone()).unwrap();
+        r.register_path("b", pb.clone()).unwrap();
+        r.register_path("c", pc.clone()).unwrap();
+
+        let (_, ev) = r.acquire("a", |_| true).unwrap();
+        assert!(ev.is_empty());
+        let (_, ev) = r.acquire("b", |_| true).unwrap();
+        assert!(ev.is_empty());
+        // Third load busts the 2.5-model budget: `a` is LRU.
+        let (_, ev) = r.acquire("c", |_| true).unwrap();
+        assert_eq!(ev, vec!["a".to_string()]);
+        assert!(!r.entry("a").unwrap().resident());
+        assert_eq!(r.total_evictions, 1);
+
+        // Re-acquiring `a` reloads it and evicts `b` (now LRU).
+        let (_, ev) = r.acquire("a", |_| true).unwrap();
+        assert_eq!(ev, vec!["b".to_string()]);
+        assert_eq!(r.entry("a").unwrap().loads, 2);
+
+        // A busy (non-idle) model is never evicted.
+        let (_, ev) = r.acquire("b", |n| n != "c").unwrap();
+        assert_eq!(ev, vec!["a".to_string()], "c is busy, so the other idle entry goes");
+
+        for p in [pa, pb, pc] {
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn pinned_models_are_never_evicted() {
+        let pb = publish(2, "pin_b");
+        let one = tiny(1).bytes();
+        let mut r = ModelRegistry::new(one); // budget fits only one model
+        r.insert_resident("pinned", tiny(1)).unwrap();
+        r.register_path("b", pb.clone()).unwrap();
+        // Loading `b` exceeds the budget, but `pinned` has no path and the
+        // just-acquired `b` is protected: nothing can go.
+        let (_, ev) = r.acquire("b", |_| true).unwrap();
+        assert!(ev.is_empty());
+        assert!(r.entry("pinned").unwrap().resident());
+        std::fs::remove_file(pb).unwrap();
+    }
+}

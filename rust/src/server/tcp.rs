@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Request, Respond, Work};
-use super::protocol::{format_reply, parse_request, split_lines, WireRequest};
+use super::protocol::{format_reply, parse_request, split_lines, WireRequest, MAX_LINE};
 
 /// Bind and serve until `shutdown` flips (spawns a thread per connection,
 /// all joined before returning). Reports the bound local address via the
@@ -60,6 +60,13 @@ pub fn serve(
 }
 
 /// Serve one connection: line in, line out, until EOF or shutdown.
+///
+/// Framing errors (a line past [`MAX_LINE`] without its newline, or bytes
+/// that are not UTF-8) serve whatever pipelined lines already parsed, send
+/// the `ERR` diagnostic, and close — same semantics as the event-loop
+/// front end. The tail is bounded after every [`split_lines`], so one
+/// valid pipelined line cannot disarm the oversize guard and a client
+/// cannot grow the buffer without bound.
 pub fn handle_conn(stream: TcpStream, work: Sender<Work>, shutdown: Arc<AtomicBool>) -> Result<()> {
     // A short read timeout keeps the handler responsive to shutdown while
     // the client is idle.
@@ -70,11 +77,18 @@ pub fn handle_conn(stream: TcpStream, work: Sender<Work>, shutdown: Arc<AtomicBo
     let mut lines: Vec<String> = Vec::new();
     let mut chunk = [0u8; 4096];
     while !shutdown.load(Ordering::SeqCst) {
+        let mut framing: Option<String> = None;
         match reader.read(&mut chunk) {
             Ok(0) => break,
             Ok(n) => {
                 buf.extend_from_slice(&chunk[..n]);
-                split_lines(&mut buf, &mut lines)?;
+                match split_lines(&mut buf, &mut lines) {
+                    Err(e) => framing = Some(e.to_string()),
+                    Ok(()) if buf.len() > MAX_LINE => {
+                        framing = Some("request line exceeds MAX_LINE".to_string());
+                    }
+                    Ok(()) => {}
+                }
             }
             Err(e)
                 if matches!(
@@ -92,6 +106,11 @@ pub fn handle_conn(stream: TcpStream, work: Sender<Work>, shutdown: Arc<AtomicBo
             writer.write_all(reply.as_bytes())?;
             writer.write_all(b"\n")?;
         }
+        if let Some(msg) = framing {
+            writer.write_all(format!("ERR {msg}\n").as_bytes())?;
+            writer.flush()?;
+            break;
+        }
         writer.flush()?;
     }
     Ok(())
@@ -107,15 +126,16 @@ pub fn handle_line(line: &str, work: &Sender<Work>) -> String {
     let (tx, rx) = mpsc::channel();
     let respond = Respond::Channel(tx);
     let w = match req {
-        WireRequest::Generate { session, max_new, prime } => Work::Gen(Request {
+        WireRequest::Generate { session, max_new, prime, model } => Work::Gen(Request {
             session,
             max_new,
             prime,
+            model,
             respond,
             enqueued: Instant::now(),
         }),
-        WireRequest::Score { tokens } => Work::Score { tokens, respond },
-        WireRequest::End { session } => Work::End { session, respond },
+        WireRequest::Score { tokens, model } => Work::Score { tokens, model, respond },
+        WireRequest::End { session, model } => Work::End { session, model, respond },
         WireRequest::Stats { text } => Work::Stats { text, respond },
     };
     if work.send(w).is_err() {

@@ -1,0 +1,232 @@
+//! The `.amqz` packed-model format, end to end: save → load must be
+//! bit-identical to the in-memory model it came from (ppw and greedy
+//! decode compared to the bit), cold-loading must beat rebuilding by the
+//! ≥5× the format exists for, and a budgeted [`ModelRegistry`] must
+//! hot-swap three published models through the batcher with LRU evictions
+//! while every reply still bit-matches its model's single-tenant output.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use amq::data::amqz;
+use amq::exec::{Exec, ExecConfig};
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Reply, Request, Respond, Work};
+use amq::server::ModelRegistry;
+
+fn temp_amqz(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("amqz_test_{}_{tag}.amqz", std::process::id()))
+}
+
+/// Greedy decode on a fresh single-tenant grouped server: the reference
+/// every loaded/registry-served model must bit-match.
+fn generate(model: Arc<RnnLm>, prime: &[usize], max_new: usize) -> Vec<usize> {
+    let mut server = InferenceServer::new(
+        model,
+        BatcherConfig { max_batch: 1, exec: ExecConfig::serial(), ..Default::default() },
+    );
+    let (tx, rx) = mpsc::channel();
+    server.process_batch(vec![Request {
+        session: 1,
+        max_new,
+        prime: prime.to_vec(),
+        model: None,
+        respond: Respond::Channel(tx),
+        enqueued: Instant::now(),
+    }]);
+    match rx.recv().unwrap() {
+        Reply::Gen(resp) => resp.tokens,
+        other => panic!("unexpected reply {other:?}"),
+    }
+}
+
+#[test]
+fn packed_roundtrip_is_bit_identical() {
+    for (kind, tag) in [(RnnKind::Lstm, "lstm"), (RnnKind::Gru, "gru")] {
+        let config = LmConfig { kind, vocab: 120, hidden: 32, layers: 2 };
+        let original = Arc::new(RnnLm::random(config, 42, PrecisionPolicy::quantized(2, 2)));
+        let path = temp_amqz(tag);
+        amqz::save(&path, &original.to_packed().unwrap()).unwrap();
+        let loaded = Arc::new(amqz::load_model(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.bytes(), original.bytes(), "{tag}: packed sizes diverge");
+        let tokens: Vec<usize> = (0..40).map(|i| (i * 7 + 3) % 120).collect();
+        assert_eq!(
+            loaded.ppw(&tokens).to_bits(),
+            original.ppw(&tokens).to_bits(),
+            "{tag}: scoring must be bit-identical after a roundtrip"
+        );
+        assert_eq!(
+            generate(loaded, &[3, 11], 24),
+            generate(original, &[3, 11], 24),
+            "{tag}: greedy decode must be bit-identical after a roundtrip"
+        );
+    }
+}
+
+#[test]
+fn corrupt_headers_are_rejected_not_trusted() {
+    let config = LmConfig { kind: RnnKind::Gru, vocab: 50, hidden: 16, layers: 1 };
+    let model = RnnLm::random(config, 9, PrecisionPolicy::quantized(2, 2));
+    let path = temp_amqz("corrupt");
+    amqz::save(&path, &model.to_packed().unwrap()).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Truncation, a flipped magic byte, and a bumped version must all fail
+    // cleanly — never panic, never hand back a model.
+    let cases: Vec<Vec<u8>> = vec![
+        good[..good.len() / 2].to_vec(),
+        {
+            let mut b = good.clone();
+            b[0] ^= 0xff;
+            b
+        },
+        {
+            let mut b = good.clone();
+            b[4] = 0xee;
+            b
+        },
+        good[..16].to_vec(),
+    ];
+    for (i, bytes) in cases.iter().enumerate() {
+        std::fs::write(&path, bytes).unwrap();
+        assert!(amqz::load_model(&path).is_err(), "corrupt case {i} must be rejected");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The headline number: bringing a model up from `.amqz` is one bulk read
+/// into an arena, no parse and no alternating-minimization requantize, so
+/// it must be at least 5× faster than building the same model from
+/// weights.
+#[test]
+fn cold_load_beats_requantize_by_5x() {
+    let config = LmConfig { kind: RnnKind::Gru, vocab: 1500, hidden: 64, layers: 1 };
+    let policy = PrecisionPolicy::quantized(2, 2);
+    let built = RnnLm::random(config, 7, policy);
+    let path = temp_amqz("coldload");
+    amqz::save(&path, &built.to_packed().unwrap()).unwrap();
+
+    let best_of_3 = |f: &dyn Fn() -> usize| -> f64 {
+        (0..3)
+            .map(|_| {
+                let t = Instant::now();
+                std::hint::black_box(f());
+                t.elapsed().as_secs_f64() * 1e3
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let requantize_ms = best_of_3(&|| RnnLm::random(config, 7, policy).bytes());
+    let load_ms = best_of_3(&|| amqz::load_model(&path).unwrap().bytes());
+    std::fs::remove_file(&path).ok();
+
+    assert!(
+        load_ms * 5.0 <= requantize_ms,
+        "cold load {load_ms:.2}ms vs requantize {requantize_ms:.2}ms: want >= 5x"
+    );
+}
+
+#[test]
+fn registry_hot_swaps_models_with_lru_evictions() {
+    let config = LmConfig { kind: RnnKind::Gru, vocab: 80, hidden: 24, layers: 1 };
+    let policy = PrecisionPolicy::quantized(2, 2);
+    let names = ["alpha", "beta", "gamma"];
+
+    // Publish three distinct models; keep the in-memory originals as the
+    // bit-exact references.
+    let mut originals: Vec<Arc<RnnLm>> = Vec::new();
+    let mut paths = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let m = Arc::new(RnnLm::random(config, 100 + i as u64, policy));
+        let path = temp_amqz(name);
+        amqz::save(&path, &m.to_packed().unwrap()).unwrap();
+        originals.push(m);
+        paths.push(path);
+    }
+
+    // Room for two resident models, never three: cycling α→β→γ must evict
+    // the least-recently-used lane on every acquire past the second.
+    let budget = originals[0].bytes() * 5 / 2;
+    let mut registry = ModelRegistry::new(budget);
+    for (name, path) in names.iter().zip(&paths) {
+        registry.register_path(name, path.clone()).unwrap();
+    }
+    registry.alias("a0", "alpha").unwrap();
+    registry.set_default("alpha").unwrap();
+
+    let server = InferenceServer::with_registry(
+        registry,
+        BatcherConfig {
+            max_batch: 2,
+            continuous: true,
+            max_slots: 2,
+            queue_depth: 16,
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+        Exec::serial(),
+    );
+    let (tx, rx) = mpsc::channel();
+    let batcher = std::thread::spawn(move || server.run(rx));
+
+    let mut session = 0u64;
+    for round in 0..3usize {
+        for (i, name) in names.iter().enumerate() {
+            session += 1;
+            let prime = vec![(round * 3 + i + 1) % 80];
+            let want = generate(originals[i].clone(), &prime, 12);
+            // The last alpha request goes through the alias: it must hit
+            // the same lane, not a second copy.
+            let pick = if round == 2 && i == 0 { "a0" } else { name };
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Work::Gen(Request {
+                session,
+                max_new: 12,
+                prime,
+                model: Some(pick.to_string()),
+                respond: Respond::Channel(rtx),
+                enqueued: Instant::now(),
+            }))
+            .unwrap();
+            match rrx.recv().unwrap() {
+                Reply::Gen(resp) => assert_eq!(
+                    resp.tokens, want,
+                    "round {round}, model {name}: registry-served decode diverged"
+                ),
+                other => panic!("round {round}, model {name}: unexpected reply {other:?}"),
+            }
+        }
+    }
+
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Work::Stats { text: false, respond: Respond::Channel(rtx) }).unwrap();
+    let stats = match rrx.recv().unwrap() {
+        Reply::Stats(s) => s,
+        other => panic!("unexpected reply {other:?}"),
+    };
+    tx.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+    for p in &paths {
+        std::fs::remove_file(p).ok();
+    }
+
+    assert!(stats.contains("\"models\":{"), "{stats}");
+    for name in names {
+        assert!(stats.contains(&format!("\"{name}\":{{")), "missing per-model stats: {stats}");
+    }
+    let evictions: u64 = stats
+        .split("\"model_evictions\":")
+        .nth(1)
+        .and_then(|t| {
+            t.chars().take_while(|c| c.is_ascii_digit()).collect::<String>().parse().ok()
+        })
+        .unwrap_or_else(|| panic!("missing model_evictions in {stats}"));
+    assert!(
+        evictions >= 3,
+        "cycling 3 models under a 2-model budget must evict (got {evictions}): {stats}"
+    );
+    assert!(stats.contains("\"hits\":"), "{stats}");
+}

@@ -96,6 +96,7 @@ fn sequential_gen_reference(lines: &[impl AsRef<str>]) -> Vec<String> {
                 session,
                 max_new,
                 prime,
+                model: None,
                 respond: Respond::Channel(rtx),
                 enqueued: Instant::now(),
             }))

@@ -1,0 +1,189 @@
+//! Malicious-client integration suite over real TCP, against BOTH front
+//! ends (thread-per-connection grouped batcher, event-loop continuous
+//! batcher). A hostile peer must get `ERR` lines — never a panic, never a
+//! wedged server — and well-formed sessions running concurrently must
+//! produce bit-exact output throughout.
+//!
+//! Covered classes (see the taxonomy table in `server::protocol`):
+//! out-of-vocab tokens in `GEN`/`SCORE` (the remote-panic bug: these used
+//! to reach `Embedding::lookup`'s assert on the batcher thread), trailing
+//! garbage after every verb, a bare `MODEL` field, unknown model names,
+//! the oversized-line framing guard (including the bypass where a valid
+//! pipelined line used to disarm it), and non-UTF-8 bytes.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use amq::exec::ExecConfig;
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Work};
+use amq::server::protocol::MAX_LINE;
+use amq::server::tcp;
+
+const VOCAB: usize = 40;
+
+fn model() -> Arc<RnnLm> {
+    Arc::new(RnnLm::random(
+        LmConfig { kind: RnnKind::Lstm, vocab: VOCAB, hidden: 16, layers: 1 },
+        5,
+        PrecisionPolicy::quantized(2, 2),
+    ))
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let conn = TcpStream::connect(addr).expect("connect");
+    // A wedged or panicked server must fail the test quickly, not hang it.
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    conn
+}
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("server reply");
+    line.trim_end().to_string()
+}
+
+/// One request on a fresh connection; returns the single reply line.
+fn one_shot(addr: SocketAddr, line: &str) -> String {
+    let mut conn = connect(addr);
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    read_line(&mut BufReader::new(conn))
+}
+
+/// The whole hostile battery against one live front end.
+fn suite(addr: SocketAddr) {
+    // Ground truth from a fresh session, before any hostile traffic.
+    let baseline = one_shot(addr, "GEN 500 6 3,4");
+    assert!(baseline.starts_with("OK GEN "), "{baseline}");
+
+    // A well-formed client races the hostile one; its fresh session must
+    // produce exactly the baseline tokens no matter what the abuse does.
+    let concurrent = std::thread::spawn(move || one_shot(addr, "GEN 501 6 3,4"));
+
+    // --- One pipelined burst of malformed + hostile + valid requests. ---
+    let mut conn = connect(addr);
+    conn.write_all(
+        b"GEN 1 10 1,2 9,9\n\
+          END 3 junk\n\
+          STATS TEXT x\n\
+          GEN 1 10 1,2 MODEL\n\
+          SCORE 1,999\n\
+          GEN 2 4 2,999,3\n\
+          GEN 3 3 1 MODEL nope\n\
+          SCORE 1,2 MODEL nope\n\
+          GEN 600 3 5 MODEL default\n",
+    )
+    .unwrap();
+    let mut r = BufReader::new(conn);
+    assert_eq!(read_line(&mut r), "ERR unexpected trailing field '9,9'");
+    assert_eq!(read_line(&mut r), "ERR unexpected trailing field 'junk'");
+    assert_eq!(read_line(&mut r), "ERR unexpected trailing field 'x'");
+    assert_eq!(read_line(&mut r), "ERR MODEL needs a name");
+    assert_eq!(read_line(&mut r), format!("ERR token 999 out of vocab {VOCAB}"));
+    assert_eq!(read_line(&mut r), format!("ERR token 999 out of vocab {VOCAB}"));
+    assert_eq!(read_line(&mut r), "ERR unknown model 'nope'");
+    assert_eq!(read_line(&mut r), "ERR unknown model 'nope'");
+    let ok = read_line(&mut r);
+    assert!(ok.starts_with("OK GEN "), "valid request after the abuse must serve: {ok}");
+    assert_eq!(ok.trim_start_matches("OK GEN ").split(',').count(), 3, "{ok}");
+    drop(r);
+
+    // --- Framing guard: a valid pipelined line must NOT disarm it. ---
+    let conn = connect(addr);
+    let mut w = conn.try_clone().unwrap();
+    let writer = std::thread::spawn(move || {
+        // The server closes mid-write once the tail passes MAX_LINE;
+        // EPIPE here is expected.
+        let mut payload = b"STATS\n".to_vec();
+        payload.extend_from_slice(&vec![b'x'; MAX_LINE + 16 * 1024]);
+        let _ = w.write_all(&payload);
+    });
+    let mut r = BufReader::new(conn);
+    let stats = read_line(&mut r);
+    assert!(stats.starts_with("OK STATS {"), "pipelined STATS still answers: {stats}");
+    assert_eq!(read_line(&mut r), "ERR request line exceeds MAX_LINE");
+    let mut rest = Vec::new();
+    assert_eq!(
+        r.read_to_end(&mut rest).expect("clean close"),
+        0,
+        "connection must close after a framing error"
+    );
+    writer.join().unwrap();
+
+    // --- Non-UTF-8 bytes: diagnostic, then close. ---
+    let mut conn = connect(addr);
+    conn.write_all(b"\xff\xfe junk\n").unwrap();
+    let mut r = BufReader::new(conn);
+    assert_eq!(read_line(&mut r), "ERR request is not UTF-8");
+    let mut rest = Vec::new();
+    assert_eq!(r.read_to_end(&mut rest).expect("clean close"), 0);
+
+    // The concurrent well-formed session was bit-exact throughout.
+    assert_eq!(concurrent.join().unwrap(), baseline, "hostile traffic must not perturb decode");
+
+    // The server survived everything: new connections serve, STATS counts
+    // the errors, and a fresh session still bit-matches the baseline.
+    let stats = one_shot(addr, "STATS");
+    assert!(stats.starts_with("OK STATS {"), "{stats}");
+    assert!(stats.contains("\"errors\":"), "{stats}");
+    assert_eq!(one_shot(addr, "GEN 502 6 3,4"), baseline);
+}
+
+#[test]
+fn hostile_clients_get_errors_not_panics_thread_per_conn() {
+    let server = InferenceServer::new(
+        model(),
+        BatcherConfig { max_batch: 4, exec: ExecConfig::serial(), ..Default::default() },
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = shutdown.clone();
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let tx2: Sender<Work> = tx.clone();
+    let srv = std::thread::spawn(move || {
+        tcp::serve("127.0.0.1:0", tx2, flag, move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv().unwrap();
+
+    suite(addr);
+
+    shutdown.store(true, Ordering::SeqCst);
+    srv.join().unwrap().unwrap();
+    tx.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+}
+
+#[cfg(unix)]
+#[test]
+fn hostile_clients_get_errors_not_panics_event_loop() {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let server = InferenceServer::new(
+        model(),
+        BatcherConfig {
+            max_batch: 4,
+            continuous: true,
+            max_slots: 4,
+            queue_depth: 64,
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), EventLoopConfig { loops: 2 })
+        .expect("event-loop bind");
+
+    suite(srv.addr);
+
+    srv.shutdown();
+    tx.send(Work::Shutdown).unwrap();
+    batcher.join().unwrap();
+}
