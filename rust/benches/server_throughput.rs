@@ -276,7 +276,7 @@ fn run_eventloop_tcp(
     let srv = amq::server::eventloop::serve(
         "127.0.0.1:0",
         work_tx.clone(),
-        amq::server::eventloop::EventLoopConfig { loops: 2 },
+        amq::server::eventloop::EventLoopConfig { loops: 2, ..Default::default() },
     )
     .expect("event-loop bind");
     let addr = srv.addr;
@@ -287,7 +287,12 @@ fn run_eventloop_tcp(
                 std::thread::sleep(stagger * i as u32);
                 let want = want_tokens(i, new_tokens);
                 let t = Instant::now();
-                let mut conn = std::net::TcpStream::connect(addr).unwrap();
+                // Bounded socket ops: a wedged server fails the bench fast
+                // instead of hanging 120 client threads forever.
+                let timeout = Duration::from_secs(60);
+                let mut conn = std::net::TcpStream::connect_timeout(&addr, timeout).unwrap();
+                conn.set_read_timeout(Some(timeout)).unwrap();
+                conn.set_write_timeout(Some(timeout)).unwrap();
                 writeln!(conn, "GEN {i} {want} {}", (i * 13 + 1) % 500).unwrap();
                 let mut line = String::new();
                 BufReader::new(conn).read_line(&mut line).unwrap();

@@ -251,6 +251,17 @@ pub struct ServerConfig {
     /// (`"512mb"`, `"2gb"`, plain bytes; see [`parse_mem_size`]). `None` /
     /// `0` = unlimited. CLI: `--model-mem-budget`.
     pub model_mem_budget: Option<String>,
+    /// Per-request wall-clock deadline in milliseconds, checked at timestep
+    /// boundaries (`ERR DEADLINE`). 0 = no deadline.
+    /// CLI: `--request-deadline-ms`.
+    pub request_deadline_ms: u64,
+    /// Reap sessions idle longer than this (as if `END` had arrived).
+    /// 0 = keep forever (LRU eviction still applies).
+    /// CLI: `--session-ttl-secs`.
+    pub session_ttl_secs: u64,
+    /// Event-loop only: close a connection whose write buffer stays stuck
+    /// longer than this. 0 = never. CLI: `--write-stall-ms`.
+    pub write_stall_ms: u64,
 }
 
 impl ServerConfig {
@@ -272,6 +283,9 @@ impl ServerConfig {
                 Value::Float(f) => f.to_string(),
                 Value::Bool(b) => b.to_string(),
             }),
+            request_deadline_ms: c.get_usize("server.request_deadline_ms", 0) as u64,
+            session_ttl_secs: c.get_usize("server.session_ttl_secs", 0) as u64,
+            write_stall_ms: c.get_usize("server.write_stall_ms", 0) as u64,
         }
     }
 }
@@ -327,6 +341,9 @@ kernel = "scalar"
 event_loop = true
 max_slots = 24
 queue_depth = 64
+request_deadline_ms = 2000
+session_ttl_secs = 600
+write_stall_ms = 5000
 [model]
 kind = "gru"
 hidden = 512
@@ -354,6 +371,10 @@ quantized = true
         assert_eq!(s.kernel, "scalar");
         assert!(s.event_loop);
         assert_eq!((s.max_slots, s.queue_depth), (24, 64));
+        assert_eq!(
+            (s.request_deadline_ms, s.session_ttl_secs, s.write_stall_ms),
+            (2000, 600, 5000)
+        );
         let m = ModelConfig::from_config(&c).unwrap();
         assert_eq!(m.lm.kind, RnnKind::Gru);
         assert_eq!(m.lm.hidden, 512);
@@ -369,6 +390,7 @@ quantized = true
         assert_eq!(s.kernel, "auto");
         assert!(!s.event_loop);
         assert_eq!((s.loops, s.max_slots, s.queue_depth), (0, 0, 128));
+        assert_eq!((s.request_deadline_ms, s.session_ttl_secs, s.write_stall_ms), (0, 0, 0));
     }
 
     #[test]

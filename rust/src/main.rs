@@ -5,7 +5,8 @@
 //! amq serve    [--config f.toml | --addr .. --w-bits 2 --a-bits 2 --threads N --kernel auto
 //!               --event-loop --loops N --max-slots N --queue-depth N --continuous
 //!               --model name=path.amqz (repeatable) --model-alias alias=name
-//!               --default-model name --model-mem-budget 512mb ..]
+//!               --default-model name --model-mem-budget 512mb
+//!               --request-deadline-ms N --session-ttl-secs N --write-stall-ms N ..]
 //! amq publish  --out f.amqz [--checkpoint f.amqt | --random] --w-bits 2 --a-bits 2 ...
 //! amq train    --tag lstm_fp [--dataset ptb|wt2|text8] [--epochs N] ...
 //! amq quantize --bits 2 [--method alternating[:cycles]] [--checkpoint f.amqt]
@@ -29,6 +30,13 @@
 //! config section) serve several models from one process; requests pick
 //! one with the protocol's `MODEL <name>` field, and idle models LRU-evict
 //! past `--model-mem-budget`.
+//!
+//! Robustness knobs (all default off): `--request-deadline-ms` answers
+//! `ERR DEADLINE` at the next timestep boundary once a request overstays,
+//! `--session-ttl-secs` reaps idle sessions as if `END` arrived, and
+//! `--write-stall-ms` (event loop) closes connections that stop reading
+//! their replies. `AMQ_FAULTS` (testing only) injects deterministic faults
+//! — see `server::faults`.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -139,6 +147,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     server_cfg.loops = cli.get_usize("loops", server_cfg.loops)?;
     server_cfg.max_slots = cli.get_usize("max-slots", server_cfg.max_slots)?;
     server_cfg.queue_depth = cli.get_usize("queue-depth", server_cfg.queue_depth)?;
+    server_cfg.request_deadline_ms =
+        cli.get_usize("request-deadline-ms", server_cfg.request_deadline_ms as usize)? as u64;
+    server_cfg.session_ttl_secs =
+        cli.get_usize("session-ttl-secs", server_cfg.session_ttl_secs as usize)? as u64;
+    server_cfg.write_stall_ms =
+        cli.get_usize("write-stall-ms", server_cfg.write_stall_ms as usize)? as u64;
+    // Deterministic fault injection (testing only): `AMQ_FAULTS` parses
+    // into a plan threaded through the batcher, registry, and event loop.
+    let faults = amq::server::FaultPlan::from_env().map_err(anyhow::Error::msg)?;
+    if faults.is_some() {
+        eprintln!("warning: AMQ_FAULTS is set — deterministic fault injection is ACTIVE");
+    }
     // The event loop multiplexes many clients onto one Work channel; it
     // only makes sense with continuous batching, so it implies it.
     let continuous = server_cfg.event_loop || cli.has("continuous");
@@ -214,6 +234,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         max_slots: server_cfg.max_slots,
         queue_depth: server_cfg.queue_depth,
         exec: exec_cfg,
+        request_deadline: (server_cfg.request_deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(server_cfg.request_deadline_ms)),
+        session_ttl: (server_cfg.session_ttl_secs > 0)
+            .then(|| std::time::Duration::from_secs(server_cfg.session_ttl_secs)),
+        faults: faults.clone(),
     };
     let server = if named.is_empty() {
         // Single-model path: build (or load a checkpoint) in process; the
@@ -287,6 +312,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         InferenceServer::with_registry(registry, batcher_cfg, exec)
     };
     let (tx, rx) = mpsc::channel::<Work>();
+    let counters = server.counters.clone();
     let batcher = std::thread::spawn(move || server.run(rx));
     eprintln!(
         "serving on {} ({} batching, {} front end)",
@@ -300,7 +326,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             let srv = amq::server::eventloop::serve(
                 &server_cfg.addr,
                 tx,
-                amq::server::eventloop::EventLoopConfig { loops: server_cfg.loops },
+                amq::server::eventloop::EventLoopConfig {
+                    loops: server_cfg.loops,
+                    write_stall: (server_cfg.write_stall_ms > 0)
+                        .then(|| std::time::Duration::from_millis(server_cfg.write_stall_ms)),
+                    counters: Some(counters),
+                    faults,
+                },
             )?;
             eprintln!("bound {} (event loop)", srv.addr);
             srv.join(); // serves until the process is killed
@@ -318,10 +350,24 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
 
 /// Query a running server's `STATS` endpoint (JSON by default, `--text`
 /// for the human form) — machine-readable scraping for dashboards.
+///
+/// Every socket operation is bounded: a wedged or half-dead server makes
+/// the probe fail fast instead of hanging a monitoring pipeline.
 fn cmd_stats(cli: &Cli) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
+    use std::net::ToSocketAddrs;
+    use std::time::Duration;
     let addr = cli.get_str("addr", "127.0.0.1:7860");
-    let mut conn = std::net::TcpStream::connect(&addr).with_context(|| format!("connect {addr}"))?;
+    let timeout = Duration::from_secs(5);
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve {addr}"))?
+        .next()
+        .with_context(|| format!("resolve {addr}: no addresses"))?;
+    let mut conn = std::net::TcpStream::connect_timeout(&sock, timeout)
+        .with_context(|| format!("connect {addr}"))?;
+    conn.set_read_timeout(Some(timeout))?;
+    conn.set_write_timeout(Some(timeout))?;
     writeln!(conn, "{}", if cli.has("text") { "STATS TEXT" } else { "STATS" })?;
     let mut line = String::new();
     BufReader::new(conn).read_line(&mut line)?;

@@ -128,6 +128,18 @@ pub struct Counters {
     pub shed: AtomicU64,
     pub evictions: AtomicU64,
     pub errors: AtomicU64,
+    /// Model-lane panics caught by the batcher's `catch_unwind` and
+    /// quarantined (the lane dropped, its registry entry poisoned).
+    pub lane_panics: AtomicU64,
+    /// Requests answered `ERR DEADLINE` at a timestep boundary because
+    /// they exceeded `--request-deadline-ms`.
+    pub deadline_expirations: AtomicU64,
+    /// Idle sessions dropped by the `--session-ttl-secs` sweep, exactly
+    /// as if `END` had arrived for each.
+    pub sessions_reaped: AtomicU64,
+    /// Event-loop connections closed because their write buffer stayed
+    /// unflushed past `--write-stall-ms` (slow-loris readers).
+    pub write_stall_closes: AtomicU64,
 }
 
 impl Counters {

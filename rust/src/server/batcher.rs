@@ -41,9 +41,25 @@
 //! pool (`config.exec`), which row-shards every GEMM across cores —
 //! bit-exactly, so neither batching mode nor threading is observable to
 //! clients: the tokens equal a serial `max_batch = 1` run, always.
+//!
+//! **Failure containment**: every lane timestep runs under
+//! `catch_unwind`, so a panic inside the model/kernel path poisons only
+//! that lane — its in-flight sessions answer `ERR INTERNAL`, the model's
+//! registry entry is quarantined (`ERR MODEL_POISONED` until an operator
+//! `RELOAD` succeeds), and every other lane keeps decoding bit-exactly on
+//! the same thread. Requests additionally carry an optional wall-clock
+//! deadline (`request_deadline`), checked at timestep boundaries: an
+//! expired request leaves its slot with `ERR DEADLINE` and its session
+//! drops as if `END` arrived, while the surviving co-batched slots emit
+//! exactly the tokens they would have without it (column swap-remove is
+//! already invisible to decoding). Idle sessions are reaped after
+//! `session_ttl`; both run loops tick on that interval even when idle.
+//! All of it is `Option`-gated — with the knobs off, the steady-state
+//! decode path is byte-for-byte the zero-allocation one.
 
 use std::collections::VecDeque;
 use std::fmt::Write as _;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -54,6 +70,7 @@ use crate::model::lm::{LmState, LmStateBatch, LmStepWorkspace};
 use crate::model::math::argmax;
 use crate::model::OutputBatch;
 use crate::model::RnnLm;
+use crate::server::faults::FaultPlan;
 use crate::server::registry::ModelRegistry;
 use crate::server::session::SessionStore;
 
@@ -61,7 +78,7 @@ use crate::server::session::SessionStore;
 pub const DEFAULT_MODEL: &str = "default";
 
 /// Batching knobs ([server] config section).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct BatcherConfig {
     pub max_batch: usize,
     pub batch_wait: Duration,
@@ -79,6 +96,17 @@ pub struct BatcherConfig {
     /// Worker-pool size for the batched forward (`threads = 1` ⇒ the exact
     /// serial path, `0` ⇒ auto). See [`ExecConfig`].
     pub exec: ExecConfig,
+    /// Per-request wall-clock deadline, measured from front-end arrival
+    /// (`Request::enqueued`) and checked at timestep boundaries. Expired
+    /// requests answer `ERR DEADLINE` and drop their session as if `END`
+    /// arrived. `None` = no deadline (CLI `--request-deadline-ms`).
+    pub request_deadline: Option<Duration>,
+    /// Reap sessions with no work for this long, exactly as if `END`
+    /// arrived. `None` = keep until LRU eviction (CLI `--session-ttl-secs`).
+    pub session_ttl: Option<Duration>,
+    /// Deterministic fault-injection plan (`AMQ_FAULTS`); `None` reduces
+    /// every injection seam to a branch on a null option.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for BatcherConfig {
@@ -91,6 +119,9 @@ impl Default for BatcherConfig {
             max_slots: 0,
             queue_depth: 128,
             exec: ExecConfig::auto(),
+            request_deadline: None,
+            session_ttl: None,
+            faults: None,
         }
     }
 }
@@ -123,8 +154,11 @@ pub enum Reply {
     /// `true` ⇒ the session existed and was dropped.
     End(bool),
     Stats(String),
+    /// Successful operator `RELOAD`; carries the canonical model name.
+    Reloaded(String),
     /// Request-level failure (out-of-vocab token, unknown model, model
-    /// load failure). Rendered as `ERR <message>`; the connection lives.
+    /// load failure, deadline expiry, poisoned model). Rendered as
+    /// `ERR <message>`; the connection lives.
     Error(String),
     /// Load shed: the pending queue was full when the request arrived.
     Busy { queued: usize, depth: usize },
@@ -160,6 +194,9 @@ pub enum Work {
     Score { tokens: Vec<usize>, model: Option<String>, respond: Respond },
     End { session: u64, model: Option<String>, respond: Respond },
     Stats { text: bool, respond: Respond },
+    /// Operator recovery: clear a poison quarantine and re-publish the
+    /// model from its `.amqz` path.
+    Reload { model: String, respond: Respond },
     Shutdown,
 }
 
@@ -176,6 +213,9 @@ struct SeqSlot {
     respond: Respond,
     queue_us: f64,
     joined: Instant,
+    /// Wall-clock expiry (`enqueued + request_deadline`); checked at
+    /// timestep boundaries. `None` = no deadline.
+    deadline: Option<Instant>,
     /// Finished this timestep (final emitted token consumed); freed at the
     /// end of the timestep.
     done: bool,
@@ -201,6 +241,9 @@ struct ModelLane {
     step_ws: LmStepWorkspace,
     slots: Vec<SeqSlot>,
     tokens: Vec<usize>,
+    /// Lifetime timestep count, lane-local and 1-based at the first step —
+    /// the coordinate fault plans address (`panic_lane=NAME@STEP`).
+    steps: u64,
 }
 
 impl ModelLane {
@@ -214,6 +257,7 @@ impl ModelLane {
             step_ws: LmStepWorkspace::new(),
             slots: Vec::new(),
             tokens: Vec::new(),
+            steps: 0,
         }
     }
 
@@ -226,10 +270,12 @@ impl ModelLane {
     /// Join one request into a free slot: restore (or zero) its session
     /// state, push it as a new column of the resident state batch, and
     /// queue its first input token. O(layers · hidden), at a timestep
-    /// boundary only.
-    fn join_slot(&mut self, req: Request) {
+    /// boundary only. `deadline` is the server's per-request budget,
+    /// anchored at front-end arrival so queue time counts against it.
+    fn join_slot(&mut self, req: Request, deadline: Option<Duration>) {
         let Request { session, max_new, prime, model: _, respond, enqueued } = req;
         let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+        let deadline = deadline.map(|d| enqueued + d);
         let state_buf = self.sessions.take(session).unwrap_or_else(|| self.model.zero_state());
         self.model.push_state_column(&state_buf, &mut self.step_state);
         let mut out = Vec::new();
@@ -253,9 +299,30 @@ impl ModelLane {
             respond,
             queue_us,
             joined: Instant::now(),
+            deadline,
             done: false,
             state_buf,
         });
+    }
+
+    /// Evict every slot whose deadline passed, replying `ERR DEADLINE`.
+    /// Runs between timesteps, so removal is the same column swap-remove a
+    /// normal leave does — invisible to the surviving slots' decoding. The
+    /// session is NOT saved: the client cannot know how far a half-served
+    /// request got, so the only deterministic contract is "as if `END`
+    /// arrived" — its next request re-primes from scratch.
+    fn expire_due(&mut self, now: Instant, deadline_ms: u128, counters: &Counters) {
+        for i in (0..self.slots.len()).rev() {
+            if self.slots[i].deadline.is_some_and(|d| now >= d) {
+                let slot = self.slots.swap_remove(i);
+                self.tokens.swap_remove(i);
+                self.model.swap_remove_state_column(&mut self.step_state, i);
+                Counters::inc(&counters.deadline_expirations, 1);
+                slot.respond.send(Reply::Error(format!(
+                    "DEADLINE request exceeded {deadline_ms}ms deadline"
+                )));
+            }
+        }
     }
 
     /// Free slot `i` after the timestep that consumed its final token:
@@ -345,6 +412,10 @@ pub struct InferenceServer {
     pending: VecDeque<Request>,
     pub latency: Arc<LatencyRing>,
     pub counters: Arc<Counters>,
+    /// Server birth (STATS `uptime_secs`).
+    started: Instant,
+    /// Last idle-session sweep; throttles `reap_sessions`.
+    last_reap: Instant,
 }
 
 impl InferenceServer {
@@ -357,6 +428,9 @@ impl InferenceServer {
     /// [`DEFAULT_MODEL`] in a fresh unlimited registry.
     pub fn with_exec(model: Arc<RnnLm>, config: BatcherConfig, exec: Exec) -> Self {
         let mut registry = ModelRegistry::new(0);
+        // The registry is freshly built and empty, so the one constant,
+        // valid name cannot collide — registration is infallible here.
+        #[allow(clippy::expect_used)]
         registry.insert_resident(DEFAULT_MODEL, model).expect("'default' is a valid model name");
         Self::with_registry(registry, config, exec)
     }
@@ -366,11 +440,13 @@ impl InferenceServer {
     /// config is normalized to the engine actually running, so
     /// `config.exec` can never disagree with the pool serving requests;
     /// `max_slots = 0` resolves to `max_batch`.
-    pub fn with_registry(registry: ModelRegistry, mut config: BatcherConfig, exec: Exec) -> Self {
+    pub fn with_registry(mut registry: ModelRegistry, mut config: BatcherConfig, exec: Exec) -> Self {
         config.exec = ExecConfig::with_threads(exec.threads());
         if config.max_slots == 0 {
             config.max_slots = config.max_batch;
         }
+        registry.set_faults(config.faults.clone());
+        let now = Instant::now();
         InferenceServer {
             registry,
             lanes: Vec::new(),
@@ -379,6 +455,8 @@ impl InferenceServer {
             pending: VecDeque::new(),
             latency: Arc::new(LatencyRing::new(1024)),
             counters: Arc::new(Counters::new()),
+            started: now,
+            last_reap: now,
         }
     }
 
@@ -428,7 +506,10 @@ impl InferenceServer {
     fn prepare_gen(&mut self, req: &mut Request) -> Result<(), String> {
         let name = self.registry.resolve(req.model.as_deref())?;
         self.ensure_lane(&name)?;
-        let vocab = self.lane(&name).expect("lane just ensured").model.config.vocab;
+        let vocab = match self.lane(&name) {
+            Some(l) => l.model.config.vocab,
+            None => return Err(format!("INTERNAL lane '{name}' missing after ensure")),
+        };
         if let Some(&t) = req.prime.iter().find(|&&t| t >= vocab) {
             return Err(format!("token {t} out of vocab {vocab}"));
         }
@@ -445,13 +526,52 @@ impl InferenceServer {
         }
     }
 
+    /// How often an otherwise-idle loop wakes to run the TTL sweep.
+    fn reap_tick(ttl: Duration) -> Duration {
+        ttl.clamp(Duration::from_millis(10), Duration::from_secs(1))
+    }
+
+    /// Block for the next work item. With a session TTL configured, wake
+    /// on the reap tick (sweeping idle sessions) instead of sleeping
+    /// forever; `None` = the channel disconnected.
+    fn recv_or_reap(&mut self, rx: &Receiver<Work>) -> Option<Work> {
+        let Some(ttl) = self.config.session_ttl else {
+            return rx.recv().ok();
+        };
+        loop {
+            match rx.recv_timeout(Self::reap_tick(ttl)) {
+                Ok(w) => return Some(w),
+                Err(RecvTimeoutError::Timeout) => self.reap_sessions(),
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+    }
+
+    /// Drop sessions idle past `session_ttl`, throttled to the reap tick
+    /// so the hot path isn't scanning session maps every timestep.
+    fn reap_sessions(&mut self) {
+        let Some(ttl) = self.config.session_ttl else { return };
+        let now = Instant::now();
+        if now.duration_since(self.last_reap) < Self::reap_tick(ttl) {
+            return;
+        }
+        self.last_reap = now;
+        let mut reaped = 0usize;
+        for (_, lane) in self.lanes.iter_mut() {
+            reaped += lane.sessions.reap_idle(ttl, now);
+        }
+        if reaped > 0 {
+            Counters::inc(&self.counters.sessions_reaped, reaped as u64);
+        }
+    }
+
     /// Grouped mode: drain work, collect a batch, run it to completion.
     fn run_grouped(mut self, rx: Receiver<Work>) {
         loop {
             // Block for the first item.
-            let first = match rx.recv() {
-                Ok(w) => w,
-                Err(_) => return,
+            let first = match self.recv_or_reap(&rx) {
+                Some(w) => w,
+                None => return,
             };
             let mut gens: Vec<Request> = Vec::new();
             if !self.dispatch_or_collect(first, &mut gens) {
@@ -477,6 +597,7 @@ impl InferenceServer {
             if !gens.is_empty() {
                 self.process_batch(gens);
             }
+            self.reap_sessions();
         }
     }
 
@@ -485,14 +606,14 @@ impl InferenceServer {
     fn run_continuous(mut self, rx: Receiver<Work>) {
         loop {
             if self.total_slots() == 0 && self.pending.is_empty() {
-                // Idle: block until something arrives.
-                match rx.recv() {
-                    Ok(w) => {
+                // Idle: block until something arrives (or a reap tick).
+                match self.recv_or_reap(&rx) {
+                    Some(w) => {
                         if !self.absorb(w) {
                             return;
                         }
                     }
-                    Err(_) => return,
+                    None => return,
                 }
             }
             // Drain whatever else arrived while the last timestep ran.
@@ -514,6 +635,7 @@ impl InferenceServer {
             }
             // Join pending sequences into slots freed by the last
             // timestep's leaves.
+            self.reap_sessions();
             self.admit();
             self.timestep_all();
         }
@@ -554,15 +676,24 @@ impl InferenceServer {
                 self.fail_pending(i, msg);
                 continue;
             }
-            let req = self.pending.remove(i).expect("index checked in bounds");
-            self.lane_mut(&name).expect("lane just ensured").join_slot(req);
+            let Some(req) = self.pending.remove(i) else { break };
+            let deadline = self.config.request_deadline;
+            match self.lane_mut(&name) {
+                Some(lane) => lane.join_slot(req, deadline),
+                None => {
+                    Counters::inc(&self.counters.errors, 1);
+                    req.respond.send(Reply::Error(format!(
+                        "INTERNAL lane '{name}' missing after ensure"
+                    )));
+                }
+            }
             // `remove` shifted the next unexamined request down to `i`.
         }
     }
 
     /// Drop pending request `i` with an error reply.
     fn fail_pending(&mut self, i: usize, msg: String) {
-        let req = self.pending.remove(i).expect("index checked in bounds");
+        let Some(req) = self.pending.remove(i) else { return };
         Counters::inc(&self.counters.errors, 1);
         req.respond.send(Reply::Error(msg));
     }
@@ -646,9 +777,53 @@ impl InferenceServer {
             Work::Stats { text, respond } => {
                 respond.send(Reply::Stats(self.stats_payload(text)));
             }
+            Work::Reload { model, respond } => {
+                let reply = self.reload_model(&model);
+                if matches!(reply, Reply::Error(_)) {
+                    Counters::inc(&self.counters.errors, 1);
+                }
+                respond.send(reply);
+            }
             Work::Shutdown => return false,
         }
         true
+    }
+
+    /// Operator `RELOAD <name>`: clear a poison quarantine and re-publish
+    /// the model (eager `.amqz` re-read for path-backed entries — a
+    /// corrupt file fails here, and the quarantine stays). The old lane —
+    /// with any saved sessions — is dropped: the reload is a fresh start,
+    /// exactly like an eviction. A lane mid-decode refuses, to avoid
+    /// tearing state out from under in-flight requests.
+    fn reload_model(&mut self, name: &str) -> Reply {
+        let canonical = match self.registry.resolve(Some(name)) {
+            Ok(c) => c,
+            Err(msg) => return Reply::Error(msg),
+        };
+        if self.lane(&canonical).is_some_and(|l| !l.slots.is_empty())
+            || self.pending.iter().any(|r| r.model.as_deref() == Some(canonical.as_str()))
+        {
+            return Reply::Error(format!(
+                "model '{canonical}' is mid-decode; retry RELOAD when idle"
+            ));
+        }
+        self.lanes.retain(|(n, _)| *n != canonical);
+        let lanes = &self.lanes;
+        let reloaded = self
+            .registry
+            .reload(&canonical, |n| !lanes.iter().any(|(ln, l)| ln == n && !l.slots.is_empty()));
+        match reloaded {
+            Ok((model, evicted)) => {
+                for gone in evicted {
+                    Counters::inc(&self.counters.evictions, 1);
+                    self.lanes.retain(|(n, _)| *n != gone);
+                }
+                self.lanes
+                    .push((canonical.clone(), ModelLane::new(model, self.config.max_sessions)));
+                Reply::Reloaded(canonical)
+            }
+            Err(msg) => Reply::Error(msg),
+        }
     }
 
     /// SCORE with the same admission-time model resolution and vocab
@@ -661,7 +836,10 @@ impl InferenceServer {
         if let Err(msg) = self.ensure_lane(&name) {
             return Reply::Error(msg);
         }
-        let lane_model = Arc::clone(&self.lane(&name).expect("lane just ensured").model);
+        let lane_model = match self.lane(&name) {
+            Some(l) => Arc::clone(&l.model),
+            None => return Reply::Error(format!("INTERNAL lane '{name}' missing after ensure")),
+        };
         let vocab = lane_model.config.vocab;
         if let Some(&t) = tokens.iter().find(|&&t| t >= vocab) {
             return Reply::Error(format!("token {t} out of vocab {vocab}"));
@@ -678,12 +856,16 @@ impl InferenceServer {
         let c = &self.counters;
         let sessions: usize = self.lanes.iter().map(|(_, l)| l.sessions.len()).sum();
         let session_evictions: u64 = self.lanes.iter().map(|(_, l)| l.sessions.evictions).sum();
+        let uptime_secs = self.started.elapsed().as_secs();
+        let faults_injected = self.config.faults.as_ref().map_or(0, |f| f.injected());
         if text {
             return format!(
-                "{} requests={} tokens={} batches={} timesteps={} shed={} errors={} active={} \
-                 queued={} evictions={} sessions={} models={} model_evictions={} mode={} \
-                 kernel={} threads={}",
+                "{} uptime={}s requests={} tokens={} batches={} timesteps={} shed={} errors={} \
+                 active={} queued={} evictions={} sessions={} models={} model_evictions={} \
+                 lane_panics={} deadline_expirations={} sessions_reaped={} write_stall_closes={} \
+                 faults_injected={} mode={} kernel={} threads={}",
                 snap.report("latency"),
+                uptime_secs,
                 Counters::get(&c.requests),
                 Counters::get(&c.tokens_generated),
                 Counters::get(&c.batches),
@@ -696,6 +878,11 @@ impl InferenceServer {
                 sessions,
                 self.registry.entries().len(),
                 self.registry.total_evictions,
+                Counters::get(&c.lane_panics),
+                Counters::get(&c.deadline_expirations),
+                Counters::get(&c.sessions_reaped),
+                Counters::get(&c.write_stall_closes),
+                faults_injected,
                 if self.config.continuous { "continuous" } else { "grouped" },
                 crate::kernels::backend::active(),
                 self.exec.threads(),
@@ -726,13 +913,17 @@ impl InferenceServer {
         // NaN (empty latency window) is not valid JSON; report zeros.
         let f = |v: f64| if v.is_finite() { v } else { 0.0 };
         format!(
-            "{{\"mode\":\"{}\",\"active_slots\":{},\"max_slots\":{},\"queued\":{},\
+            "{{\"mode\":\"{}\",\"uptime_secs\":{},\"active_slots\":{},\"max_slots\":{},\
+             \"queued\":{},\
              \"queue_depth\":{},\"shed\":{},\"errors\":{},\"requests\":{},\
              \"tokens_generated\":{},\"batches\":{},\"decode_timesteps\":{},\"sessions\":{},\
              \"evictions\":{},\"models\":{},\"model_evictions\":{},\
+             \"lane_panics\":{},\"deadline_expirations\":{},\"sessions_reaped\":{},\
+             \"write_stall_closes\":{},\"faults_injected\":{},\
              \"kernel\":\"{}\",\"threads\":{},\"latency_us\":{{\"count\":{},\"window\":{},\
              \"mean\":{:.1},\"p50\":{:.1},\"p95\":{:.1},\"p99\":{:.1},\"max\":{:.1}}}}}",
             if self.config.continuous { "continuous" } else { "grouped" },
+            uptime_secs,
             self.total_slots(),
             self.config.max_slots,
             self.pending.len(),
@@ -747,6 +938,11 @@ impl InferenceServer {
             session_evictions,
             models,
             self.registry.total_evictions,
+            Counters::get(&c.lane_panics),
+            Counters::get(&c.deadline_expirations),
+            Counters::get(&c.sessions_reaped),
+            Counters::get(&c.write_stall_closes),
+            faults_injected,
             crate::kernels::backend::active(),
             self.exec.threads(),
             snap.count,
@@ -762,10 +958,88 @@ impl InferenceServer {
     /// One timestep on every lane with occupied slots. Lanes step in
     /// registration order — deterministic, and independent (different
     /// models share nothing but the worker pool).
+    ///
+    /// Two containment layers wrap the step. First, with a request
+    /// deadline configured, expired slots (and expired pending requests)
+    /// are evicted *before* stepping — a removal at the boundary is
+    /// exactly a normal leave, so surviving slots decode bit-identically
+    /// to a run without the expired request. Second, each lane's step runs
+    /// under `catch_unwind`: a panicking lane is quarantined (dropped,
+    /// in-flight sessions failed, registry entry poisoned) and every other
+    /// lane — and the batcher thread itself — keeps going.
+    /// `AssertUnwindSafe` is sound because a poisoned lane is discarded
+    /// wholesale below, never observed again in a broken state.
     fn timestep_all(&mut self) {
+        if let Some(d) = self.config.request_deadline {
+            self.expire_deadlines(d);
+        }
+        let mut poisoned: Vec<String> = Vec::new();
+        {
+            let exec = &self.exec;
+            let counters = &self.counters;
+            let latency = &self.latency;
+            let faults = self.config.faults.as_deref();
+            for (name, lane) in self.lanes.iter_mut() {
+                if lane.slots.is_empty() {
+                    continue;
+                }
+                lane.steps += 1;
+                let step = lane.steps;
+                let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                    if let Some(f) = faults {
+                        f.on_lane_step(name, step);
+                    }
+                    lane.timestep(exec, counters, latency);
+                }));
+                if outcome.is_err() {
+                    poisoned.push(name.clone());
+                }
+            }
+        }
+        for name in poisoned {
+            self.quarantine(&name);
+        }
+    }
+
+    /// Evict every expired decode slot and pending request with
+    /// `ERR DEADLINE`. Runs only when a deadline is configured.
+    fn expire_deadlines(&mut self, deadline: Duration) {
+        let now = Instant::now();
+        let ms = deadline.as_millis();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].enqueued + deadline <= now {
+                if let Some(req) = self.pending.remove(i) {
+                    Counters::inc(&self.counters.deadline_expirations, 1);
+                    req.respond
+                        .send(Reply::Error(format!("DEADLINE request exceeded {ms}ms deadline")));
+                }
+            } else {
+                i += 1;
+            }
+        }
         for (_, lane) in self.lanes.iter_mut() {
-            if !lane.slots.is_empty() {
-                lane.timestep(&self.exec, &self.counters, &self.latency);
+            lane.expire_due(now, ms, &self.counters);
+        }
+    }
+
+    /// A lane panicked mid-timestep. Its decode state is unreconstructable
+    /// (the panic may have landed anywhere inside the batched forward), so
+    /// the blast radius is exactly the lane: every in-flight session
+    /// answers `ERR INTERNAL`, the lane — including the model's saved
+    /// session states, which share its fate like they do on eviction — is
+    /// dropped, and the registry entry is poisoned so later requests get
+    /// `ERR MODEL_POISONED` instead of rebuilding a lane on a model that
+    /// just proved it can panic. `RELOAD <name>` re-publishes it.
+    fn quarantine(&mut self, name: &str) {
+        Counters::inc(&self.counters.lane_panics, 1);
+        self.registry.poison(name);
+        eprintln!("lane '{name}' poisoned by a panic; quarantined until RELOAD {name}");
+        if let Some(i) = self.lanes.iter().position(|(n, _)| n == name) {
+            let (_, lane) = self.lanes.remove(i);
+            for slot in lane.slots {
+                Counters::inc(&self.counters.errors, 1);
+                slot.respond.send(Reply::Error(format!("INTERNAL lane {name} poisoned")));
             }
         }
     }
@@ -788,11 +1062,22 @@ impl InferenceServer {
         Counters::inc(&self.counters.batches, 1);
         Counters::inc(&self.counters.requests, batch.len() as u64);
         debug_assert!(self.total_slots() == 0, "grouped mode runs one batch at a time");
+        let deadline = self.config.request_deadline;
         for mut req in batch {
             match self.prepare_gen(&mut req) {
                 Ok(()) => {
-                    let name = req.model.clone().expect("prepare_gen sets the canonical name");
-                    self.lane_mut(&name).expect("lane just ensured").join_slot(req);
+                    // `prepare_gen` set the canonical name and ensured the
+                    // lane; a miss here is an internal invariant failure.
+                    let name = req.model.clone().unwrap_or_default();
+                    match self.lane_mut(&name) {
+                        Some(lane) => lane.join_slot(req, deadline),
+                        None => {
+                            Counters::inc(&self.counters.errors, 1);
+                            req.respond.send(Reply::Error(format!(
+                                "INTERNAL lane '{name}' missing after prepare"
+                            )));
+                        }
+                    }
                 }
                 Err(msg) => {
                     Counters::inc(&self.counters.errors, 1);
@@ -807,6 +1092,7 @@ impl InferenceServer {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::lm::{LmConfig, PrecisionPolicy, RnnKind};
@@ -1142,6 +1428,176 @@ mod tests {
         assert_eq!(Counters::get(&counters.shed), 0);
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn lane_panic_quarantines_and_reload_recovers() {
+        // Clean reference tokens for the post-recovery request.
+        let mut r = tiny_server_with(BatcherConfig { max_batch: 1, ..Default::default() });
+        let (req, rx) = gen_req(50, 4, vec![6, 7]);
+        r.process_batch(vec![req]);
+        let reference = recv_gen(&rx).tokens;
+
+        // Victim lane: prime 2 + decode — alive well past step 3, where
+        // the injected panic fires inside the catch_unwind seam.
+        let plan = Arc::new(FaultPlan::parse("panic_lane=default@3").unwrap());
+        let s = tiny_server_with(BatcherConfig {
+            continuous: true,
+            faults: Some(Arc::clone(&plan)),
+            ..tiny_config()
+        });
+        let counters = s.counters.clone();
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || s.run(rx));
+
+        let (victim, victim_rx) = gen_req(1, 10, vec![1, 2]);
+        tx.send(Work::Gen(victim)).unwrap();
+        match victim_rx.recv().unwrap() {
+            Reply::Error(msg) => assert_eq!(msg, "INTERNAL lane default poisoned"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Counters::get(&counters.lane_panics), 1);
+
+        // The batcher thread survived; the model is quarantined.
+        let (next, next_rx) = gen_req(2, 3, vec![1]);
+        tx.send(Work::Gen(next)).unwrap();
+        match next_rx.recv().unwrap() {
+            Reply::Error(msg) => assert!(msg.starts_with("MODEL_POISONED "), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+
+        // RELOAD clears the quarantine (pinned model: no disk involved)
+        // and a fresh session decodes bit-exactly.
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Work::Reload { model: DEFAULT_MODEL.into(), respond: Respond::Channel(rtx) })
+            .unwrap();
+        match rrx.recv().unwrap() {
+            Reply::Reloaded(name) => assert_eq!(name, DEFAULT_MODEL),
+            other => panic!("{other:?}"),
+        }
+        let (fresh, fresh_rx) = gen_req(50, 4, vec![6, 7]);
+        tx.send(Work::Gen(fresh)).unwrap();
+        assert_eq!(recv_gen(&fresh_rx).tokens, reference, "post-recovery decode diverged");
+        assert_eq!(plan.injected(), 1, "exactly the one planned panic fired");
+
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_expiry_is_bit_neutral_to_cobatched_requests() {
+        // Sequential reference for the three short requests, no victim,
+        // no faults, no deadline.
+        let scripts: Vec<(u64, usize, Vec<usize>)> =
+            (0..3).map(|i| (i as u64, 3, vec![(3 * i + 1) % 40, (7 * i + 2) % 40])).collect();
+        let mut reference = Vec::new();
+        {
+            let mut s = tiny_server_with(BatcherConfig { max_batch: 1, ..Default::default() });
+            for (sess, max_new, prime) in &scripts {
+                let (r, rx) = gen_req(*sess, *max_new, prime.clone());
+                s.process_batch(vec![r]);
+                reference.push(recv_gen(&rx).tokens);
+            }
+        }
+
+        // Faulted run: a long victim co-batched with the shorts. The
+        // shorts finish by lane step 5; at step 7 an injected stall holds
+        // the lane 2500ms, pushing the victim past its 1000ms deadline —
+        // it must leave with ERR DEADLINE at the next boundary while the
+        // shorts' tokens (already emitted) match the reference exactly.
+        // (The deadline is generous so CI scheduling jitter before the
+        // loop's first timestep can't expire the short requests.)
+        let plan = Arc::new(FaultPlan::parse("stall_lane=default@7:2500").unwrap());
+        let s = tiny_server_with(BatcherConfig {
+            continuous: true,
+            max_slots: 8,
+            request_deadline: Some(Duration::from_millis(1000)),
+            faults: Some(Arc::clone(&plan)),
+            ..tiny_config()
+        });
+        let counters = s.counters.clone();
+        let (tx, rx) = mpsc::channel();
+        let (victim, victim_rx) = gen_req(99, 3000, vec![5, 6]);
+        tx.send(Work::Gen(victim)).unwrap();
+        let rxs: Vec<_> = scripts
+            .iter()
+            .map(|(sess, max_new, prime)| {
+                let (r, rx) = gen_req(*sess, *max_new, prime.clone());
+                tx.send(Work::Gen(r)).unwrap();
+                rx
+            })
+            .collect();
+        let handle = std::thread::spawn(move || s.run(rx));
+        for (i, rx) in rxs.iter().enumerate() {
+            assert_eq!(recv_gen(rx).tokens, reference[i], "co-batched session {i} diverged");
+        }
+        match victim_rx.recv().unwrap() {
+            Reply::Error(msg) => {
+                assert_eq!(msg, "DEADLINE request exceeded 1000ms deadline");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Counters::get(&counters.deadline_expirations), 1);
+        assert_eq!(plan.injected(), 1, "the stall fired once");
+
+        // The victim's session dropped as if END arrived: a follow-up on
+        // the same id re-primes from scratch, deterministically.
+        let (end_tx, end_rx) = mpsc::channel();
+        tx.send(Work::End { session: 99, model: None, respond: Respond::Channel(end_tx) })
+            .unwrap();
+        assert!(matches!(end_rx.recv().unwrap(), Reply::End(false)));
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn idle_sessions_reap_after_ttl() {
+        let s = tiny_server_with(BatcherConfig {
+            continuous: true,
+            session_ttl: Some(Duration::from_millis(50)),
+            ..tiny_config()
+        });
+        let counters = s.counters.clone();
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || s.run(rx));
+        let (req, req_rx) = gen_req(5, 2, vec![1]);
+        tx.send(Work::Gen(req)).unwrap();
+        assert_eq!(recv_gen(&req_rx).tokens.len(), 2);
+        // Idle past the TTL: the recv timeout tick must run the sweep
+        // even though no new work arrives.
+        std::thread::sleep(Duration::from_millis(400));
+        let (end_tx, end_rx) = mpsc::channel();
+        tx.send(Work::End { session: 5, model: None, respond: Respond::Channel(end_tx) }).unwrap();
+        assert!(
+            matches!(end_rx.recv().unwrap(), Reply::End(false)),
+            "session must already be reaped"
+        );
+        assert_eq!(Counters::get(&counters.sessions_reaped), 1);
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn stats_report_uptime_and_fault_counters() {
+        let mut s = tiny_server();
+        let stats = s.stats_payload(false);
+        for key in [
+            "\"uptime_secs\":",
+            "\"lane_panics\":0",
+            "\"deadline_expirations\":0",
+            "\"sessions_reaped\":0",
+            "\"write_stall_closes\":0",
+            "\"faults_injected\":0",
+        ] {
+            assert!(stats.contains(key), "missing {key} in {stats}");
+        }
+        let text = s.stats_payload(true);
+        assert!(text.contains("lane_panics=0") && text.contains("uptime="), "{text}");
+        // RELOAD of an unknown model is a wire-ready error.
+        match s.reload_model("nope") {
+            Reply::Error(msg) => assert_eq!(msg, "unknown model 'nope'"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -8,7 +8,10 @@ use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
 use std::os::fd::{AsRawFd, RawFd};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use crate::server::faults::{FaultPlan, WriteFault};
 use crate::server::protocol::split_lines;
 pub use crate::server::protocol::MAX_LINE;
 
@@ -37,6 +40,15 @@ pub struct Connection {
     pub eof: bool,
     /// Interest currently registered with the poller (readable, writable).
     pub interest: (bool, bool),
+    /// Injected fault plan (testing only; `None` in production).
+    faults: Option<Arc<FaultPlan>>,
+    /// An injected `clog_write` fault made this socket permanently
+    /// unwritable — every flush "would block" until the stall bound closes
+    /// the connection.
+    clogged: bool,
+    /// When the write buffer first failed to drain fully (cleared the
+    /// moment it empties). Feeds the event loop's `--write-stall-ms` sweep.
+    stalled_since: Option<Instant>,
 }
 
 impl Connection {
@@ -52,7 +64,16 @@ impl Connection {
             next_serial: 0,
             eof: false,
             interest: (true, false),
+            faults: None,
+            clogged: false,
+            stalled_since: None,
         })
+    }
+
+    /// Attach an injected fault plan (read/write faults fire on this
+    /// connection's socket operations).
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
     }
 
     pub fn fd(&self) -> RawFd {
@@ -74,7 +95,14 @@ impl Connection {
     pub fn read_lines(&mut self, lines: &mut Vec<String>) -> io::Result<()> {
         let mut chunk = [0u8; 4096];
         loop {
-            match self.stream.read(&mut chunk) {
+            // Injected short read: shrink the destination to one byte so the
+            // kernel must deliver the stream in fragments (exercises the
+            // incremental line framing exactly like a trickling client).
+            let want = match &self.faults {
+                Some(f) if f.on_conn_read() => 1,
+                _ => chunk.len(),
+            };
+            match self.stream.read(&mut chunk[..want]) {
                 Ok(0) => {
                     self.eof = true;
                     break;
@@ -136,7 +164,20 @@ impl Connection {
             self.wbuf.push(b'\n');
         }
         while self.wpos < self.wbuf.len() {
-            match self.stream.write(&self.wbuf[self.wpos..]) {
+            if self.clogged {
+                break; // injected permanent WouldBlock: bytes never leave
+            }
+            let mut end = self.wbuf.len();
+            match self.faults.as_ref().map_or(WriteFault::None, |f| f.on_conn_write()) {
+                WriteFault::None => {}
+                WriteFault::Short => end = self.wpos + 1,
+                WriteFault::Error => return Err(io::ErrorKind::BrokenPipe.into()),
+                WriteFault::Clog => {
+                    self.clogged = true;
+                    continue;
+                }
+            }
+            match self.stream.write(&self.wbuf[self.wpos..end]) {
                 Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
                 Ok(n) => self.wpos += n,
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -148,7 +189,24 @@ impl Connection {
             self.wbuf.clear();
             self.wpos = 0;
         }
+        // Track how long queued bytes have been stuck: set the stall mark on
+        // the first flush that leaves the buffer non-empty, clear it the
+        // moment the buffer drains.
+        if self.wants_write() {
+            if self.stalled_since.is_none() {
+                self.stalled_since = Some(Instant::now());
+            }
+        } else {
+            self.stalled_since = None;
+        }
         Ok(())
+    }
+
+    /// How long the write buffer has been stuck non-empty, or `None` when
+    /// everything flushed. The event loop closes connections stalled past
+    /// `--write-stall-ms` (slow-loris readers holding batcher slots).
+    pub fn stalled_for(&self, now: Instant) -> Option<Duration> {
+        self.stalled_since.map(|since| now.saturating_duration_since(since))
     }
 
     /// Unflushed bytes remain (the loop should register write interest).
@@ -168,6 +226,7 @@ impl Connection {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -276,5 +335,25 @@ mod tests {
         assert_eq!(lines, vec!["STATS".to_string()], "the valid line still parses");
         drop(conn);
         let _ = writer.join().unwrap();
+    }
+
+    #[test]
+    fn clogged_write_marks_the_connection_stalled() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let _client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = Connection::new(server).unwrap();
+        conn.set_faults(Some(Arc::new(FaultPlan::parse("clog_write=1").unwrap())));
+
+        conn.push_ready("OK GEN 1,2".into());
+        conn.flush().unwrap();
+        assert!(conn.wants_write(), "clogged socket must keep its bytes queued");
+        let first = conn.stalled_for(Instant::now()).expect("stall mark set");
+        std::thread::sleep(Duration::from_millis(15));
+        let later = conn.stalled_for(Instant::now()).unwrap();
+        assert!(later > first, "stall age must grow while the buffer is stuck");
+        // The mark survives repeated flush attempts (it dates the FIRST stall).
+        conn.flush().unwrap();
+        assert!(conn.stalled_for(Instant::now()).unwrap() >= later);
     }
 }

@@ -56,11 +56,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::metrics::Counters;
+
 use super::batcher::{Reply, ReplySink, Request, Respond, Work};
+use super::faults::FaultPlan;
 use super::protocol::{format_reply, parse_request, WireRequest};
 use conn::Connection;
 use poller::{PollEvent, Poller, WakeReader, Waker};
@@ -70,12 +73,20 @@ const WAKE: u64 = u64::MAX;
 /// Poller token for the listener (loop 0 only).
 const LISTEN: u64 = u64::MAX - 1;
 
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct EventLoopConfig {
     /// Number of loop threads; 0 = auto (2 when the machine has ≥2 cores).
     /// The loops only shuffle bytes and parse lines — decode compute lives
     /// on the batcher's exec pool — so a small number is plenty.
     pub loops: usize,
+    /// Close a connection whose write buffer has been stuck non-empty this
+    /// long (a slow-loris reader would otherwise pin its replies — and the
+    /// memory behind them — forever). `None` disables the sweep.
+    pub write_stall: Option<Duration>,
+    /// Shared server counters; the loops bump `write_stall_closes` here.
+    pub counters: Option<Arc<Counters>>,
+    /// Injected fault plan (testing only; `None` in production).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl EventLoopConfig {
@@ -141,11 +152,6 @@ pub fn serve(addr: &str, work: Sender<Work>, config: EventLoopConfig) -> Result<
     let addr = listener.local_addr().context("local_addr")?;
     let nloops = config.resolved_loops();
     let shutdown = Arc::new(AtomicBool::new(false));
-    // The listener object itself moves into loop 0 below — register its fd
-    // and hand over the same object, never a dup: kqueue drops a
-    // registration when the registered fd number closes, so a
-    // register-original/move-clone split would go deaf on the BSDs.
-    let mut listener = Some(listener);
 
     // Build every loop's plumbing up front so loop 0 can hold all the
     // handoff endpoints, and so poller/waker setup errors surface here
@@ -161,7 +167,12 @@ pub fn serve(addr: &str, work: Sender<Work>, config: EventLoopConfig) -> Result<
         peers.push((inc_tx, waker.clone()));
         parts.push((poller, waker, wake_rx, inc_rx, comp_tx, comp_rx));
     }
-    poller_register_listener(&parts[0].0, listener.as_ref().expect("listener present"))?;
+    // The listener object itself moves into loop 0 below — register its fd
+    // and hand over the same object, never a dup: kqueue drops a
+    // registration when the registered fd number closes, so a
+    // register-original/move-clone split would go deaf on the BSDs.
+    poller_register_listener(&parts[0].0, &listener)?;
+    let mut listener = Some(listener);
 
     let mut handles = Vec::with_capacity(nloops);
     let wakers: Vec<Waker> = peers.iter().map(|(_, w)| w.clone()).collect();
@@ -176,6 +187,9 @@ pub fn serve(addr: &str, work: Sender<Work>, config: EventLoopConfig) -> Result<
             shutdown: shutdown.clone(),
             listener: if id == 0 { listener.take() } else { None },
             peers: if id == 0 { peers.clone() } else { Vec::new() },
+            write_stall: config.write_stall,
+            counters: config.counters.clone(),
+            faults: config.faults.clone(),
         };
         handles.push(
             std::thread::Builder::new()
@@ -207,6 +221,10 @@ struct LoopCtx {
     listener: Option<TcpListener>,
     /// Loop 0 only: handoff endpoint + waker for every loop (self included).
     peers: Vec<(Sender<TcpStream>, Waker)>,
+    /// Close connections whose write buffer has been stuck this long.
+    write_stall: Option<Duration>,
+    counters: Option<Arc<Counters>>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 fn run_loop(id: usize, mut ctx: LoopCtx) {
@@ -216,13 +234,19 @@ fn run_loop(id: usize, mut ctx: LoopCtx) {
     let mut lines: Vec<String> = Vec::new();
     let mut next_token: u64 = 0;
     let mut rr: usize = id; // stagger so multi-listener setups interleave
+    // With a stall bound the wait must tick even when no fd is ready, so a
+    // clogged connection gets noticed; a quarter of the bound keeps the
+    // close within ~25% of the configured deadline without busy-spinning.
+    let poll_timeout = ctx
+        .write_stall
+        .map(|d| (d / 4).clamp(Duration::from_millis(10), Duration::from_millis(250)));
 
     loop {
         if ctx.shutdown.load(Ordering::SeqCst) {
             return;
         }
         events.clear();
-        if ctx.poller.wait(&mut events, None).is_err() {
+        if ctx.poller.wait(&mut events, poll_timeout).is_err() {
             return;
         }
         if ctx.shutdown.load(Ordering::SeqCst) {
@@ -271,7 +295,24 @@ fn run_loop(id: usize, mut ctx: LoopCtx) {
             finalize(&ctx.poller, &mut conns, token);
         }
         while let Ok(stream) = ctx.incoming.try_recv() {
-            register_conn(&ctx.poller, &mut conns, &mut next_token, stream);
+            register_conn(&ctx.poller, &ctx.faults, &mut conns, &mut next_token, stream);
+        }
+        // Write-stall sweep: a peer that stops reading while replies are
+        // queued holds buffer memory and (for GEN) a just-finished slot's
+        // reply hostage. Past the bound the connection is closed outright.
+        if let Some(bound) = ctx.write_stall {
+            let now = Instant::now();
+            let stalled: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| c.stalled_for(now).is_some_and(|d| d >= bound))
+                .map(|(&t, _)| t)
+                .collect();
+            for token in stalled {
+                if let Some(c) = &ctx.counters {
+                    Counters::inc(&c.write_stall_closes, 1);
+                }
+                close(&ctx.poller, &mut conns, token);
+            }
         }
     }
 }
@@ -287,12 +328,18 @@ fn accept_all(
     let Some(listener) = &ctx.listener else { return };
     let nloops = ctx.peers.len().max(1);
     loop {
+        // Injected accept failure: behaves like a transient ECONNABORTED —
+        // bail out of this pass and let level-triggering retry. Clients see
+        // a delayed accept, never a refused connection.
+        if ctx.faults.as_ref().is_some_and(|f| f.on_accept()) {
+            break;
+        }
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let target = *rr % nloops;
                 *rr = rr.wrapping_add(1);
                 if target == 0 {
-                    register_conn(&ctx.poller, conns, next_token, stream);
+                    register_conn(&ctx.poller, &ctx.faults, conns, next_token, stream);
                 } else {
                     let (tx, waker) = &ctx.peers[target];
                     if tx.send(stream).is_ok() {
@@ -311,11 +358,13 @@ fn accept_all(
 
 fn register_conn(
     poller: &Poller,
+    faults: &Option<Arc<FaultPlan>>,
     conns: &mut HashMap<u64, Connection>,
     next_token: &mut u64,
     stream: TcpStream,
 ) {
-    let Ok(conn) = Connection::new(stream) else { return };
+    let Ok(mut conn) = Connection::new(stream) else { return };
+    conn.set_faults(faults.clone());
     let token = *next_token;
     *next_token += 1;
     if poller.register(conn.fd(), token, true, false).is_ok() {
@@ -353,6 +402,7 @@ fn dispatch_line(
         WireRequest::Score { tokens, model } => Work::Score { tokens, model, respond },
         WireRequest::End { session, model } => Work::End { session, model, respond },
         WireRequest::Stats { text } => Work::Stats { text, respond },
+        WireRequest::Reload { model } => Work::Reload { model, respond },
     };
     if work.send(w).is_err() {
         conn.complete(serial, "ERR server shutting down".to_string());
@@ -392,6 +442,7 @@ fn close(poller: &Poller, conns: &mut HashMap<u64, Connection>, token: u64) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::io::{BufRead, BufReader, Write};
@@ -417,6 +468,7 @@ mod tests {
                 Work::Stats { text, respond } => {
                     respond.send(Reply::Stats(if text { "text".into() } else { "{}".into() }))
                 }
+                Work::Reload { model, respond } => respond.send(Reply::Reloaded(model)),
                 Work::Shutdown => break,
             }
         }
@@ -425,7 +477,9 @@ mod tests {
     fn start_echo(loops: usize) -> (EventLoopServer, Sender<Work>, std::thread::JoinHandle<()>) {
         let (tx, rx) = channel();
         let bat = std::thread::spawn(move || echo_batcher(rx));
-        let srv = serve("127.0.0.1:0", tx.clone(), EventLoopConfig { loops }).unwrap();
+        let srv =
+            serve("127.0.0.1:0", tx.clone(), EventLoopConfig { loops, ..Default::default() })
+                .unwrap();
         (srv, tx, bat)
     }
 

@@ -1,0 +1,324 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`FaultPlan`] is the single seam every injection point consults. It is
+//! off by default — `AMQ_FAULTS` unset means every call site branches on a
+//! `None` option and does nothing else, so the steady-state decode path
+//! stays zero-cost (and zero-alloc). `amq serve` arms it from the
+//! environment via [`FaultPlan::from_env`]; tests construct plans directly
+//! with [`FaultPlan::parse`] so several plans can coexist in one test
+//! binary.
+//!
+//! Every trigger is either counter-based (the Nth event) or drawn from a
+//! seeded LCG, so a failing CI run replays exactly from its `AMQ_FAULTS`
+//! string. Plan syntax is comma-separated `key=value` pairs:
+//!
+//! | key | value | effect |
+//! |-----|-------|--------|
+//! | `panic_lane` | `NAME@STEP` | panic at entry to lane `NAME`'s `STEP`-th timestep (lane-local, 1-based; fires once) |
+//! | `stall_lane` | `NAME@STEP:MS` | sleep `MS` ms at entry to lane `NAME`'s `STEP`-th timestep (fires once; drives deterministic deadline expiry) |
+//! | `short_write` | probability `0..=1` | truncate an event-loop socket write to one byte |
+//! | `short_read` | probability `0..=1` | truncate an event-loop socket read to one byte |
+//! | `write_err` | `N` | the `N`-th socket write (global, 1-based) fails with `BrokenPipe` |
+//! | `clog_write` | `N` | the `N`-th socket write clogs its connection: that write and all later ones on the same connection pretend `WouldBlock` (simulated zero-window peer; arms `--write-stall-ms`) |
+//! | `accept_err` | `N` | the first `N` accept passes fail `EMFILE`-style (level-triggered readiness retries them, so clients see delay, not refusal) |
+//! | `load_err` | `NAME` | the next registry `.amqz` load of `NAME` fails (fires once) |
+//! | `seed` | `N` | LCG seed for the probabilistic faults (default `0x5eed`) |
+//!
+//! The plan also counts every fault it actually fires ([`injected`]) —
+//! that single counter is what STATS reports as `faults_injected`, so a
+//! test holding the same `Arc<FaultPlan>` can cross-check injected vs
+//! observed counts exactly.
+//!
+//! [`injected`]: FaultPlan::injected
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What an event-loop connection write attempt should do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteFault {
+    /// Write normally.
+    None,
+    /// Truncate to one byte (partial-write resume must reframe correctly).
+    Short,
+    /// Fail with `BrokenPipe` (peer reset mid-reply).
+    Error,
+    /// Simulated zero-window peer: this and every later write on the
+    /// connection pretend `WouldBlock`, so the write buffer never drains.
+    Clog,
+}
+
+/// A parsed, armed fault plan. See the module docs for the syntax.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    panic_lane: Option<(String, u64)>,
+    stall_lane: Option<(String, u64, u64)>,
+    short_write: f64,
+    short_read: f64,
+    write_err: u64,
+    clog_write: u64,
+    accept_err: u64,
+    load_err: Option<String>,
+    /// Runtime state: LCG cursor, global write counter, accept-failure
+    /// budget used, fire-once latches, and the injected-fault count.
+    rng: AtomicU64,
+    writes: AtomicU64,
+    accepts: AtomicU64,
+    panic_fired: AtomicU64,
+    stall_fired: AtomicU64,
+    load_fired: AtomicU64,
+    injected: AtomicU64,
+}
+
+/// Fire-once latch: true exactly on the first call.
+fn once(flag: &AtomicU64) -> bool {
+    flag.swap(1, Ordering::Relaxed) == 0
+}
+
+fn parse_count(key: &str, value: &str) -> Result<u64, String> {
+    value.parse::<u64>().map_err(|_| format!("fault {key}: want an integer, got '{value}'"))
+}
+
+fn parse_prob(key: &str, value: &str) -> Result<f64, String> {
+    let p = value
+        .parse::<f64>()
+        .map_err(|_| format!("fault {key}: want a probability, got '{value}'"))?;
+    if (0.0..=1.0).contains(&p) {
+        Ok(p)
+    } else {
+        Err(format!("fault {key}: probability out of range 0..=1: {value}"))
+    }
+}
+
+/// `NAME@STEP` → `(name, step)`.
+fn parse_at(key: &str, value: &str) -> Result<(String, u64), String> {
+    let (name, step) =
+        value.split_once('@').ok_or_else(|| format!("fault {key}: want NAME@STEP, got '{value}'"))?;
+    if name.is_empty() {
+        return Err(format!("fault {key}: empty lane name in '{value}'"));
+    }
+    Ok((name.to_string(), parse_count(key, step)?))
+}
+
+/// `NAME@STEP:MS` → `(name, step, ms)`.
+fn parse_stall(key: &str, value: &str) -> Result<(String, u64, u64), String> {
+    let (at, ms) = value
+        .split_once(':')
+        .ok_or_else(|| format!("fault {key}: want NAME@STEP:MS, got '{value}'"))?;
+    let (name, step) = parse_at(key, at)?;
+    Ok((name, step, parse_count(key, ms)?))
+}
+
+impl FaultPlan {
+    /// Parse a plan from its `AMQ_FAULTS` syntax. An empty spec is a valid
+    /// plan that never fires.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        let mut seed = 0x5eed_u64;
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) =
+                item.split_once('=').ok_or_else(|| format!("fault '{item}': want key=value"))?;
+            match key {
+                "panic_lane" => plan.panic_lane = Some(parse_at(key, value)?),
+                "stall_lane" => plan.stall_lane = Some(parse_stall(key, value)?),
+                "short_write" => plan.short_write = parse_prob(key, value)?,
+                "short_read" => plan.short_read = parse_prob(key, value)?,
+                "write_err" => plan.write_err = parse_count(key, value)?,
+                "clog_write" => plan.clog_write = parse_count(key, value)?,
+                "accept_err" => plan.accept_err = parse_count(key, value)?,
+                "load_err" => plan.load_err = Some(value.to_string()),
+                "seed" => seed = parse_count(key, value)?,
+                other => return Err(format!("unknown fault key '{other}'")),
+            }
+        }
+        plan.rng = AtomicU64::new(seed);
+        Ok(plan)
+    }
+
+    /// Read `AMQ_FAULTS`. `Ok(None)` when unset or blank (the common,
+    /// zero-cost case).
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>, String> {
+        match std::env::var("AMQ_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(Arc::new(Self::parse(&spec)?))),
+            _ => Ok(None),
+        }
+    }
+
+    /// How many faults this plan has actually fired so far. STATS reports
+    /// this verbatim as `faults_injected`.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    fn fire(&self) {
+        self.injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Advance the seeded LCG (Knuth MMIX constants, same idiom as the
+    /// quantizer fuzz) and draw a uniform in `[0, 1)`.
+    fn chance(&self, p: f64) -> bool {
+        let prev = self.rng.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+            Some(s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407))
+        });
+        let x = match prev {
+            Ok(v) | Err(v) => v.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407),
+        };
+        ((x >> 11) as f64 / (1u64 << 53) as f64) < p
+    }
+
+    /// Lane-step seam, called at entry to lane `lane`'s `step`-th timestep
+    /// (lane-local, 1-based) — inside the batcher's `catch_unwind`, so an
+    /// injected panic exercises the real quarantine path.
+    pub fn on_lane_step(&self, lane: &str, step: u64) {
+        if let Some((name, at, ms)) = &self.stall_lane {
+            if name == lane && step == *at && once(&self.stall_fired) {
+                self.fire();
+                std::thread::sleep(Duration::from_millis(*ms));
+            }
+        }
+        if let Some((name, at)) = &self.panic_lane {
+            if name == lane && step == *at && once(&self.panic_fired) {
+                self.fire();
+                panic!("injected fault: panic_lane={lane}@{step}");
+            }
+        }
+    }
+
+    /// Accept seam: true means this accept pass should fail
+    /// `EMFILE`-style. Consumes one unit of the `accept_err` budget.
+    pub fn on_accept(&self) -> bool {
+        if self.accept_err == 0 || self.accepts.load(Ordering::Relaxed) >= self.accept_err {
+            return false;
+        }
+        let n = self.accepts.fetch_add(1, Ordering::Relaxed) + 1;
+        if n <= self.accept_err {
+            self.fire();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Write seam: consulted once per actual socket write attempt.
+    /// Counter-based faults (`write_err`, `clog_write`) take priority over
+    /// the probabilistic `short_write`.
+    pub fn on_conn_write(&self) -> WriteFault {
+        if self.write_err == 0 && self.clog_write == 0 && self.short_write <= 0.0 {
+            return WriteFault::None;
+        }
+        let n = self.writes.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.write_err != 0 && n == self.write_err {
+            self.fire();
+            return WriteFault::Error;
+        }
+        if self.clog_write != 0 && n == self.clog_write {
+            self.fire();
+            return WriteFault::Clog;
+        }
+        if self.short_write > 0.0 && self.chance(self.short_write) {
+            self.fire();
+            return WriteFault::Short;
+        }
+        WriteFault::None
+    }
+
+    /// Read seam: true means truncate this socket read to one byte.
+    pub fn on_conn_read(&self) -> bool {
+        if self.short_read <= 0.0 {
+            return false;
+        }
+        if self.chance(self.short_read) {
+            self.fire();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Registry-load seam: true means the `.amqz` load of `model` should
+    /// fail (fires once per plan).
+    pub fn on_model_load(&self, model: &str) -> bool {
+        match &self.load_err {
+            Some(name) if name == model && once(&self.load_fired) => {
+                self.fire();
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_plan_and_rejections() {
+        let p = FaultPlan::parse(
+            "panic_lane=beta@17, stall_lane=alpha@3:250, short_write=0.1, short_read=0.05, \
+             write_err=4, clog_write=7, accept_err=3, load_err=beta, seed=99",
+        )
+        .unwrap();
+        assert_eq!(p.panic_lane, Some(("beta".into(), 17)));
+        assert_eq!(p.stall_lane, Some(("alpha".into(), 3, 250)));
+        assert_eq!(p.write_err, 4);
+        assert_eq!(p.accept_err, 3);
+        assert_eq!(p.load_err.as_deref(), Some("beta"));
+        assert_eq!(p.injected(), 0);
+
+        assert!(FaultPlan::parse("nope=1").is_err());
+        assert!(FaultPlan::parse("panic_lane=beta").is_err(), "missing @STEP");
+        assert!(FaultPlan::parse("short_write=1.5").is_err(), "probability range");
+        assert!(FaultPlan::parse("write_err=x").is_err());
+        assert!(FaultPlan::parse("").unwrap().panic_lane.is_none(), "empty plan is inert");
+    }
+
+    #[test]
+    fn counter_faults_fire_exactly_once_at_their_index() {
+        let p = FaultPlan::parse("write_err=2,clog_write=3").unwrap();
+        assert_eq!(p.on_conn_write(), WriteFault::None);
+        assert_eq!(p.on_conn_write(), WriteFault::Error);
+        assert_eq!(p.on_conn_write(), WriteFault::Clog);
+        assert_eq!(p.on_conn_write(), WriteFault::None);
+        assert_eq!(p.injected(), 2);
+
+        let p = FaultPlan::parse("accept_err=2").unwrap();
+        assert!(p.on_accept());
+        assert!(p.on_accept());
+        assert!(!p.on_accept(), "budget spent");
+        assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn lane_faults_match_name_and_step_and_fire_once() {
+        let p = FaultPlan::parse("panic_lane=beta@2").unwrap();
+        p.on_lane_step("alpha", 2); // wrong lane: no panic
+        p.on_lane_step("beta", 1); // wrong step: no panic
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.on_lane_step("beta", 2);
+        }));
+        assert!(caught.is_err(), "panic fires at beta@2");
+        p.on_lane_step("beta", 2); // latched: never again
+        assert_eq!(p.injected(), 1);
+
+        let p = FaultPlan::parse("load_err=beta").unwrap();
+        assert!(!p.on_model_load("alpha"));
+        assert!(p.on_model_load("beta"));
+        assert!(!p.on_model_load("beta"), "fires once");
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn probabilistic_faults_replay_from_the_seed() {
+        let draws = |seed: u64| -> Vec<bool> {
+            let p = FaultPlan::parse(&format!("short_write=0.3,seed={seed}")).unwrap();
+            (0..64).map(|_| p.on_conn_write() == WriteFault::Short).collect()
+        };
+        assert_eq!(draws(7), draws(7), "same seed, same sequence");
+        assert_ne!(draws(7), draws(8), "different seed, different sequence");
+        let hits = draws(7).iter().filter(|b| **b).count();
+        assert!(hits > 5 && hits < 40, "p=0.3 over 64 draws lands near 19, got {hits}");
+    }
+}

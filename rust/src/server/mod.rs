@@ -67,15 +67,34 @@
 //! continuous batching), `--max-slots` caps live decode slots,
 //! `--queue-depth` bounds the admission queue. `STATS` returns one-line
 //! JSON; `STATS TEXT` the human form.
+//!
+//! **Failure containment**: a panic inside a model lane's timestep is
+//! caught at the batcher loop ([`batcher`]), the lane quarantined and its
+//! registry entry poisoned until an operator `RELOAD <name>` succeeds —
+//! other lanes keep decoding bit-exactly and the batcher thread never
+//! dies. Requests can carry a server-wide deadline
+//! (`--request-deadline-ms`, answered `ERR DEADLINE` at a timestep
+//! boundary), idle sessions are reaped after `--session-ttl-secs`, and the
+//! event loop closes connections stalled past `--write-stall-ms`. All
+//! fault paths are drivable deterministically via [`faults::FaultPlan`]
+//! (`AMQ_FAULTS`, tests only).
+//!
+//! The server tree bans stray `unwrap`/`expect` on runtime paths — every
+//! fallible step must answer `ERR INTERNAL <context>` instead of killing a
+//! serving thread. (CI runs clippy with `-D warnings`, promoting these
+//! lints to errors; test modules opt out locally.)
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
 #[cfg(unix)]
 pub mod eventloop;
+pub mod faults;
 pub mod protocol;
 pub mod registry;
 pub mod session;
 pub mod tcp;
 
 pub use batcher::{BatcherConfig, InferenceServer, Reply, Request, Respond, Response, Work};
+pub use faults::FaultPlan;
 pub use registry::ModelRegistry;
 pub use session::SessionStore;

@@ -8,6 +8,7 @@
 //! END <session_id> [MODEL <name>]                 drop a session
 //! STATS                                           server metrics (one-line JSON)
 //! STATS TEXT                                      …human-readable form
+//! RELOAD <name>                                   operator: re-publish a model
 //! ```
 //!
 //! The optional trailing `MODEL <name>` selects a model from the server's
@@ -18,11 +19,16 @@
 //! fields is rejected — a request either parses completely or answers
 //! `ERR`.
 //!
+//! `RELOAD` is the operator's recovery verb: it clears a lane-panic
+//! quarantine (see `ERR MODEL_POISONED` below) and, for path-backed
+//! models, eagerly re-reads the `.amqz` from disk — a corrupt file fails
+//! the RELOAD itself. A model currently mid-decode refuses to reload.
+//!
 //! Responses:
 //! ```text
 //! OK GEN <tok,tok,...>
 //! OK SCORE <ppw>
-//! OK END | OK STATS <json-or-text> | ERR <message>
+//! OK END | OK STATS <json-or-text> | OK RELOAD <name> | ERR <message>
 //! ERR BUSY queue full (<queued>/<depth>)          load shed — retry later
 //! ```
 //!
@@ -30,7 +36,7 @@
 //!
 //! | reply                                        | cause |
 //! |----------------------------------------------|-------|
-//! | `ERR unknown verb '<v>'`                     | first word not GEN/SCORE/END/STATS |
+//! | `ERR unknown verb '<v>'`                     | first word not GEN/SCORE/END/STATS/RELOAD |
 //! | `ERR malformed session id`                   | GEN/END id not a u64 |
 //! | `ERR malformed max_new`                      | GEN count not a usize |
 //! | `ERR max_new out of range (1..=4096)`        | GEN count 0 or beyond the cap |
@@ -39,12 +45,17 @@
 //! | `ERR SCORE needs at least two tokens`        | PPW needs a transition |
 //! | `ERR unknown STATS form '<x>'`               | STATS argument other than TEXT |
 //! | `ERR MODEL needs a name`                     | trailing `MODEL` with no name |
+//! | `ERR RELOAD needs a model name`              | bare `RELOAD` |
 //! | `ERR unexpected trailing field '<x>'`        | unconsumed fields after a request |
 //! | `ERR token <t> out of vocab <v>`             | admission-time vocab check (OOV) |
 //! | `ERR unknown model '<name>'`                 | name not in the registry |
-//! | `ERR model <name>: <why>`                    | `.amqz` load failure |
+//! | `ERR model <name>: <why>`                    | `.amqz` load failure (incl. a failed RELOAD) |
+//! | `ERR model '<name>' is mid-decode; retry RELOAD when idle` | RELOAD raced in-flight requests |
 //! | `ERR no models configured`                   | registry empty / no default |
 //! | `ERR BUSY queue full (<q>/<d>)`              | admission control shed |
+//! | `ERR DEADLINE request exceeded <n>ms deadline` | `--request-deadline-ms` expiry; the session drops as if `END` arrived |
+//! | `ERR MODEL_POISONED model '<name>' …`        | the model's lane panicked; quarantined until `RELOAD <name>` succeeds |
+//! | `ERR INTERNAL <context>`                     | server-side invariant failure (e.g. the lane serving this request panicked) |
 //! | `ERR request line exceeds MAX_LINE`          | framing abuse; connection closes |
 //! | `ERR request is not UTF-8`                   | framing abuse; connection closes |
 //! | `ERR server shutting down`                   | request raced shutdown |
@@ -73,6 +84,7 @@ pub enum WireRequest {
     Score { tokens: Vec<usize>, model: Option<String> },
     End { session: u64, model: Option<String> },
     Stats { text: bool },
+    Reload { model: String },
 }
 
 pub fn parse_request(line: &str) -> Result<WireRequest> {
@@ -114,6 +126,14 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             no_trailing(&mut parts)?;
             Ok(WireRequest::Stats { text })
         }
+        "RELOAD" => {
+            let model = match parts.next() {
+                Some(name) => name.to_string(),
+                None => bail!("RELOAD needs a model name"),
+            };
+            no_trailing(&mut parts)?;
+            Ok(WireRequest::Reload { model })
+        }
         other => bail!("unknown verb '{other}'"),
     }
 }
@@ -154,6 +174,7 @@ pub fn format_reply(reply: &Reply) -> String {
             }
         }
         Reply::Stats(s) => format!("OK STATS {s}"),
+        Reply::Reloaded(name) => format!("OK RELOAD {name}"),
         Reply::Error(msg) => format!("ERR {msg}"),
         Reply::Busy { queued, depth } => format!("ERR BUSY queue full ({queued}/{depth})"),
     }
@@ -206,6 +227,7 @@ pub fn split_lines(buf: &mut Vec<u8>, lines: &mut Vec<String>) -> std::io::Resul
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -252,6 +274,20 @@ mod tests {
     }
 
     #[test]
+    fn parse_reload() {
+        assert_eq!(
+            parse_request("RELOAD ptb-2bit").unwrap(),
+            WireRequest::Reload { model: "ptb-2bit".into() }
+        );
+        assert_eq!(
+            parse_request("RELOAD").unwrap_err().to_string(),
+            "RELOAD needs a model name"
+        );
+        let err = parse_request("RELOAD m x").unwrap_err().to_string();
+        assert!(err.contains("trailing field"), "{err}");
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse_request("GEN x 10 1").is_err());
         assert!(parse_request("GEN 1 0 1").is_err());
@@ -287,6 +323,7 @@ mod tests {
         assert_eq!(format_reply(&Reply::End(true)), "OK END");
         assert_eq!(format_reply(&Reply::End(false)), "OK END (no such session)");
         assert_eq!(format_reply(&Reply::Stats("{}".into())), "OK STATS {}");
+        assert_eq!(format_reply(&Reply::Reloaded("beta".into())), "OK RELOAD beta");
         assert_eq!(
             format_reply(&Reply::Error("token 99 out of vocab 40".into())),
             "ERR token 99 out of vocab 40"

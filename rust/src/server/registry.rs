@@ -20,16 +20,25 @@
 //! states live in its lane, so eviction also forgets its sessions;
 //! clients of a swapped-out model re-prime on their next `GEN`.
 //!
+//! Entries can also be **poisoned**: when a model's decode lane panics,
+//! the batcher marks the entry here so later acquires answer
+//! `ERR MODEL_POISONED` instead of rebuilding a lane on a model that just
+//! proved it can panic. The mark is cleared only by a successful operator
+//! [`reload`] (for path-backed entries that re-reads the `.amqz` from
+//! disk, eagerly, so a corrupt file fails the `RELOAD` itself).
+//!
 //! Error values are wire-ready strings (they go out verbatim after
 //! `ERR `), matching the taxonomy in `server::protocol`.
 //!
 //! [`acquire`]: ModelRegistry::acquire
+//! [`reload`]: ModelRegistry::reload
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::data::amqz;
 use crate::model::RnnLm;
+use crate::server::faults::FaultPlan;
 
 /// One registered model.
 pub struct ModelEntry {
@@ -37,6 +46,9 @@ pub struct ModelEntry {
     /// `.amqz` source (`None` = pinned in memory).
     pub path: Option<PathBuf>,
     model: Option<Arc<RnnLm>>,
+    /// Set when this model's lane panicked; acquires refuse until a
+    /// successful `RELOAD` clears it.
+    pub poisoned: bool,
     /// Weight bytes while resident (sticky after the first load so STATS
     /// stays informative for evicted entries).
     pub bytes: usize,
@@ -68,6 +80,8 @@ pub struct ModelRegistry {
     clock: u64,
     /// Total evictions across all entries (STATS `model_evictions`).
     pub total_evictions: u64,
+    /// Fault-injection seam for `.amqz` loads (`None` = disabled).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ModelRegistry {
@@ -79,7 +93,13 @@ impl ModelRegistry {
             budget: budget_bytes,
             clock: 0,
             total_evictions: 0,
+            faults: None,
         }
+    }
+
+    /// Arm (or disarm) the fault-injection seam for disk loads.
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
     }
 
     /// Names are constrained so they embed cleanly in both the wire
@@ -118,6 +138,7 @@ impl ModelRegistry {
             name: name.to_string(),
             path,
             model,
+            poisoned: false,
             bytes,
             last_used: 0,
             hits: 0,
@@ -203,7 +224,13 @@ impl ModelRegistry {
         self.clock += 1;
         let clock = self.clock;
         let budget = self.budget;
+        let faults = self.faults.clone();
         let entry = self.entry_mut(name).ok_or_else(|| format!("unknown model '{name}'"))?;
+        if entry.poisoned {
+            return Err(format!(
+                "MODEL_POISONED model '{name}' quarantined after a lane panic; RELOAD {name} to restore"
+            ));
+        }
         entry.last_used = clock;
         let model = match &entry.model {
             Some(m) => {
@@ -214,6 +241,9 @@ impl ModelRegistry {
                 let path = entry.path.clone().ok_or_else(|| {
                     format!("model '{name}' has no source to load from")
                 })?;
+                if faults.as_ref().is_some_and(|f| f.on_model_load(name)) {
+                    return Err(format!("model {name}: injected fault: corrupt load"));
+                }
                 let model = Arc::new(
                     amqz::load_model(&path).map_err(|e| format!("model {name}: {e:#}"))?,
                 );
@@ -236,7 +266,7 @@ impl ModelRegistry {
                     .min_by_key(|e| e.last_used)
                     .map(|e| e.name.clone());
                 let Some(victim) = victim else { break };
-                let e = self.entry_mut(&victim).expect("victim came from entries");
+                let Some(e) = self.entry_mut(&victim) else { break };
                 e.model = None;
                 e.evictions += 1;
                 self.total_evictions += 1;
@@ -244,6 +274,46 @@ impl ModelRegistry {
             }
         }
         Ok((model, evicted))
+    }
+
+    /// Mark `name` (canonical) poisoned: a lane panic proved the model
+    /// unsafe to serve. Acquires refuse until [`Self::reload`] succeeds.
+    pub fn poison(&mut self, name: &str) {
+        if let Some(e) = self.entry_mut(name) {
+            e.poisoned = true;
+        }
+    }
+
+    /// Operator `RELOAD <name>` (canonical): clear the poison mark and
+    /// re-publish the entry. Path-backed entries drop their resident model
+    /// and re-read the `.amqz` **eagerly**, so a corrupt file fails the
+    /// RELOAD right now instead of the next unlucky request; pinned
+    /// entries have no disk copy, so reload just clears the mark. On
+    /// failure the previous poison state is restored.
+    pub fn reload(
+        &mut self,
+        name: &str,
+        idle: impl Fn(&str) -> bool,
+    ) -> Result<(Arc<RnnLm>, Vec<String>), String> {
+        let was_poisoned = {
+            let entry =
+                self.entry_mut(name).ok_or_else(|| format!("unknown model '{name}'"))?;
+            let was = entry.poisoned;
+            entry.poisoned = false;
+            if entry.path.is_some() {
+                entry.model = None; // force a fresh read from disk
+            }
+            was
+        };
+        match self.acquire(name, idle) {
+            Ok(r) => Ok(r),
+            Err(msg) => {
+                if let Some(e) = self.entry_mut(name) {
+                    e.poisoned = was_poisoned;
+                }
+                Err(msg)
+            }
+        }
     }
 
     /// Entries in registration order (deterministic STATS / lane
@@ -254,6 +324,7 @@ impl ModelRegistry {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::lm::{LmConfig, PrecisionPolicy};
@@ -314,6 +385,49 @@ mod tests {
         for p in [pa, pb, pc] {
             std::fs::remove_file(p).unwrap();
         }
+    }
+
+    #[test]
+    fn poisoned_entries_refuse_until_a_successful_reload() {
+        let pb = publish(4, "poison_b");
+        let mut r = ModelRegistry::new(0);
+        r.register_path("b", pb.clone()).unwrap();
+        assert!(r.acquire("b", |_| true).is_ok());
+
+        r.poison("b");
+        let err = r.acquire("b", |_| true).unwrap_err();
+        assert!(err.starts_with("MODEL_POISONED "), "{err}");
+
+        // Corrupt the file: RELOAD fails eagerly and the poison sticks.
+        let good = std::fs::read(&pb).unwrap();
+        std::fs::write(&pb, b"not an amqz file").unwrap();
+        let err = r.reload("b", |_| true).unwrap_err();
+        assert!(err.starts_with("model b:"), "{err}");
+        assert!(r.acquire("b", |_| true).unwrap_err().starts_with("MODEL_POISONED "));
+
+        // Restore the file: RELOAD clears the mark and re-reads the disk.
+        std::fs::write(&pb, &good).unwrap();
+        let loads_before = r.entry("b").unwrap().loads;
+        r.reload("b", |_| true).unwrap();
+        assert_eq!(r.entry("b").unwrap().loads, loads_before + 1, "eager re-read");
+        assert!(r.acquire("b", |_| true).is_ok());
+        std::fs::remove_file(pb).unwrap();
+    }
+
+    #[test]
+    fn injected_load_fault_fails_one_acquire_then_recovers() {
+        let pb = publish(5, "fault_b");
+        let mut r = ModelRegistry::new(0);
+        r.register_path("b", pb.clone()).unwrap();
+        let plan = Arc::new(FaultPlan::parse("load_err=b").unwrap());
+        r.set_faults(Some(Arc::clone(&plan)));
+        let err = r.acquire("b", |_| true).unwrap_err();
+        assert_eq!(err, "model b: injected fault: corrupt load");
+        assert_eq!(plan.injected(), 1);
+        // The fault fires once; the retry loads for real.
+        assert!(r.acquire("b", |_| true).is_ok());
+        assert_eq!(plan.injected(), 1);
+        std::fs::remove_file(pb).unwrap();
     }
 
     #[test]

@@ -5,14 +5,23 @@
 //! eviction; evictions are surfaced in the metrics.
 
 use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 use crate::model::lm::LmState;
+
+/// One stored session: logical recency for LRU, wall-clock recency for
+/// TTL reaping, and the recurrent state itself.
+struct Entry {
+    last_used: u64,
+    touched: Instant,
+    state: LmState,
+}
 
 /// LRU session store keyed by client-chosen session id.
 pub struct SessionStore {
     max_sessions: usize,
     clock: u64,
-    map: HashMap<u64, (u64, LmState)>, // id → (last_used, state)
+    map: HashMap<u64, Entry>,
     pub evictions: u64,
 }
 
@@ -33,27 +42,36 @@ impl SessionStore {
     /// Fetch a session's state (bumps recency), or `None` for new sessions.
     pub fn take(&mut self, id: u64) -> Option<LmState> {
         self.clock += 1;
-        self.map.remove(&id).map(|(_, s)| s)
+        self.map.remove(&id).map(|e| e.state)
     }
 
     /// Store a session's state, evicting the least-recently-used if full.
     pub fn put(&mut self, id: u64, state: LmState) {
         self.clock += 1;
         if !self.map.contains_key(&id) && self.map.len() >= self.max_sessions {
-            if let Some((&lru, _)) = self.map.iter().min_by_key(|(_, (t, _))| *t) {
+            if let Some((&lru, _)) = self.map.iter().min_by_key(|(_, e)| e.last_used) {
                 self.map.remove(&lru);
                 self.evictions += 1;
             }
         }
-        self.map.insert(id, (self.clock, state));
+        self.map.insert(id, Entry { last_used: self.clock, touched: Instant::now(), state });
     }
 
     pub fn remove(&mut self, id: u64) -> bool {
         self.map.remove(&id).is_some()
     }
+
+    /// Drop every session idle (wall clock) for at least `ttl`, exactly as
+    /// if `END` had arrived for each. Returns how many were reaped.
+    pub fn reap_idle(&mut self, ttl: Duration, now: Instant) -> usize {
+        let before = self.map.len();
+        self.map.retain(|_, e| now.duration_since(e.touched) < ttl);
+        before - self.map.len()
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::lstm::LstmState;
@@ -111,5 +129,22 @@ mod tests {
         s.put(7, st(1.0));
         assert!(s.remove(7));
         assert!(!s.remove(7));
+    }
+
+    #[test]
+    fn reap_idle_drops_only_stale_sessions() {
+        let mut s = SessionStore::new(8);
+        s.put(1, st(1.0));
+        s.put(2, st(2.0));
+        let now = Instant::now();
+        assert_eq!(s.reap_idle(Duration::from_secs(60), now), 0, "fresh sessions survive");
+        // Re-touch 2 "later", then reap with a horizon that only 1 missed.
+        std::thread::sleep(Duration::from_millis(30));
+        let two = s.take(2).unwrap();
+        s.put(2, two);
+        let reaped = s.reap_idle(Duration::from_millis(20), Instant::now());
+        assert_eq!(reaped, 1);
+        assert!(s.take(1).is_none(), "1 was idle past the TTL");
+        assert!(s.take(2).is_some(), "2 was touched recently");
     }
 }

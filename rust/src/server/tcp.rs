@@ -137,6 +137,7 @@ pub fn handle_line(line: &str, work: &Sender<Work>) -> String {
         WireRequest::Score { tokens, model } => Work::Score { tokens, model, respond },
         WireRequest::End { session, model } => Work::End { session, model, respond },
         WireRequest::Stats { text } => Work::Stats { text, respond },
+        WireRequest::Reload { model } => Work::Reload { model, respond },
     };
     if work.send(w).is_err() {
         return "ERR server shutting down".into();
@@ -148,6 +149,7 @@ pub fn handle_line(line: &str, work: &Sender<Work>) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::lm::{LmConfig, PrecisionPolicy, RnnKind};

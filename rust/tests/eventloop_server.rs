@@ -45,8 +45,8 @@ fn start_continuous(
     );
     let (tx, rx) = mpsc::channel();
     let batcher = std::thread::spawn(move || server.run(rx));
-    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), EventLoopConfig { loops: 2 })
-        .expect("event-loop bind");
+    let cfg = EventLoopConfig { loops: 2, ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
     (srv, tx, batcher)
 }
 

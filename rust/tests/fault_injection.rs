@@ -1,0 +1,453 @@
+//! Deterministic fault-injection suite over real TCP, against BOTH front
+//! ends. An injected lane panic, failed/short/clogged socket writes, and a
+//! corrupt `.amqz` reload must each be contained exactly as documented —
+//! quarantine + `RELOAD` recovery, closed connection, `ERR` reply — while
+//! a concurrent well-formed session keeps producing bit-exact output and
+//! STATS' `faults_injected` matches the plan's own count exactly.
+//!
+//! Plans come from [`FaultPlan::parse`]; when CI exports `AMQ_FAULTS` with
+//! a `seed=` entry the tests fold that seed into every plan, so a failure
+//! reproduces from the logged command line.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use amq::exec::{Exec, ExecConfig};
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Work};
+use amq::server::{tcp, FaultPlan, ModelRegistry};
+
+const VOCAB: usize = 40;
+
+/// Parse a fault plan, folding in CI's `AMQ_FAULTS` seed (if any) so the
+/// probabilistic faults replay from the environment's chosen stream.
+fn plan(spec: &str) -> Arc<FaultPlan> {
+    let mut spec = spec.to_string();
+    if let Ok(env) = std::env::var("AMQ_FAULTS") {
+        for part in env.split(',') {
+            let part = part.trim();
+            if part.starts_with("seed=") {
+                spec.push(',');
+                spec.push_str(part);
+            }
+        }
+    }
+    Arc::new(FaultPlan::parse(&spec).expect("valid fault plan"))
+}
+
+fn model(seed: u64) -> RnnLm {
+    RnnLm::random(
+        LmConfig { kind: RnnKind::Lstm, vocab: VOCAB, hidden: 16, layers: 1 },
+        seed,
+        PrecisionPolicy::quantized(2, 2),
+    )
+}
+
+/// Publish a tiny model to a temp `.amqz` the registry can load.
+fn publish(path: &Path, seed: u64) {
+    amq::data::amqz::save(path, &model(seed).to_packed().expect("pack")).expect("save amqz");
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fault_injection_{}_{tag}.amqz", std::process::id()))
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let conn = TcpStream::connect(addr).expect("connect");
+    // A wedged or panicked server must fail the test quickly, not hang it.
+    conn.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    conn
+}
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("server reply");
+    line.trim_end().to_string()
+}
+
+/// One request on a fresh connection; returns the single reply line.
+fn one_shot(addr: SocketAddr, line: &str) -> String {
+    let mut conn = connect(addr);
+    conn.write_all(line.as_bytes()).expect("send");
+    conn.write_all(b"\n").expect("send");
+    read_line(&mut BufReader::new(conn))
+}
+
+/// Two-model registry over real `.amqz` files (alpha is the default).
+fn two_model_registry(alpha: &Path, beta: &Path) -> ModelRegistry {
+    let mut registry = ModelRegistry::new(0);
+    registry.register_path("alpha", alpha.to_path_buf()).expect("register alpha");
+    registry.register_path("beta", beta.to_path_buf()).expect("register beta");
+    registry.set_default("alpha").expect("default");
+    registry
+}
+
+/// The quarantine/reload battery against one live front end. `beta_path`
+/// is corrupted and restored mid-suite to exercise a failed reload.
+fn quarantine_suite(addr: SocketAddr, fp: &Arc<FaultPlan>, beta_path: &Path, beta_seed: u64) {
+    // Ground truth from fresh sessions, before any fault fires. The beta
+    // reference comes from a clean (fault-free) in-process server over the
+    // same packed file, since beta's own first decode is the panic victim.
+    let baseline = one_shot(addr, "GEN 500 6 3,4");
+    assert!(baseline.starts_with("OK GEN "), "{baseline}");
+    let beta_ref = {
+        let mut registry = ModelRegistry::new(0);
+        registry.register_path("beta", beta_path.to_path_buf()).expect("register");
+        registry.set_default("beta").expect("default");
+        let clean = InferenceServer::with_registry(
+            registry,
+            BatcherConfig { exec: ExecConfig::serial(), ..Default::default() },
+            Exec::new(ExecConfig::serial()),
+        );
+        let (ctx, crx) = mpsc::channel::<Work>();
+        let h = std::thread::spawn(move || clean.run(crx));
+        let r = tcp::handle_line("GEN 602 6 1,2 MODEL beta", &ctx);
+        ctx.send(Work::Shutdown).expect("clean shutdown");
+        h.join().expect("clean join");
+        r
+    };
+    assert!(beta_ref.starts_with("OK GEN "), "{beta_ref}");
+
+    // A well-formed alpha client decodes concurrently with the panic; its
+    // fresh session must produce exactly the baseline tokens.
+    let concurrent = std::thread::spawn(move || one_shot(addr, "GEN 501 6 3,4"));
+
+    // The victim: beta's lane panics at its 4th decode timestep, killing
+    // only the in-flight beta session.
+    let victim = one_shot(addr, "GEN 600 10 1,2 MODEL beta");
+    assert_eq!(victim, "ERR INTERNAL lane beta poisoned");
+
+    // Subsequent beta requests are refused while quarantined.
+    let refused = one_shot(addr, "GEN 601 3 1 MODEL beta");
+    assert_eq!(
+        refused,
+        "ERR MODEL_POISONED model 'beta' quarantined after a lane panic; \
+         RELOAD beta to restore"
+    );
+
+    // RELOAD against a corrupt file fails loudly and KEEPS the quarantine.
+    std::fs::write(beta_path, b"definitely not an amqz file").expect("corrupt");
+    let failed = one_shot(addr, "RELOAD beta");
+    assert!(failed.starts_with("ERR model beta:"), "{failed}");
+    let still = one_shot(addr, "GEN 601 3 1 MODEL beta");
+    assert!(still.starts_with("ERR MODEL_POISONED "), "{still}");
+
+    // Restore the artifact; RELOAD now clears the poison and beta decodes
+    // bit-exactly against the clean reference.
+    publish(beta_path, beta_seed);
+    assert_eq!(one_shot(addr, "RELOAD beta"), "OK RELOAD beta");
+    assert_eq!(one_shot(addr, "GEN 602 6 1,2 MODEL beta"), beta_ref);
+
+    // Alpha never noticed: the concurrent session and a fresh one both
+    // bit-match the pre-fault baseline.
+    assert_eq!(concurrent.join().expect("join"), baseline, "panic must not perturb alpha");
+    assert_eq!(one_shot(addr, "GEN 503 6 3,4"), baseline);
+
+    // Exact injected-vs-observed crosscheck: one panic planned, one fired,
+    // one counted.
+    let stats = one_shot(addr, "STATS");
+    assert!(stats.contains("\"lane_panics\":1"), "{stats}");
+    assert_eq!(fp.injected(), 1, "exactly the planned panic fired");
+    assert!(stats.contains(&format!("\"faults_injected\":{}", fp.injected())), "{stats}");
+}
+
+#[test]
+fn lane_panic_quarantine_and_reload_thread_per_conn() {
+    let (alpha, beta) = (tmp("tpc_alpha"), tmp("tpc_beta"));
+    publish(&alpha, 3);
+    publish(&beta, 4);
+    let fp = plan("panic_lane=beta@4");
+    let server = InferenceServer::with_registry(
+        two_model_registry(&alpha, &beta),
+        BatcherConfig {
+            faults: Some(fp.clone()),
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+        Exec::new(ExecConfig::serial()),
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = shutdown.clone();
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let tx2: Sender<Work> = tx.clone();
+    let srv = std::thread::spawn(move || {
+        tcp::serve("127.0.0.1:0", tx2, flag, move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv().expect("bound");
+
+    quarantine_suite(addr, &fp, &beta, 4);
+
+    // Shutdown joins every thread even after a quarantine.
+    shutdown.store(true, Ordering::SeqCst);
+    srv.join().expect("front end").expect("serve ok");
+    tx.send(Work::Shutdown).expect("batcher alive");
+    batcher.join().expect("batcher joins");
+    let _ = std::fs::remove_file(&alpha);
+    let _ = std::fs::remove_file(&beta);
+}
+
+#[cfg(unix)]
+#[test]
+fn lane_panic_quarantine_and_reload_event_loop() {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let (alpha, beta) = (tmp("el_alpha"), tmp("el_beta"));
+    publish(&alpha, 3);
+    publish(&beta, 4);
+    let fp = plan("panic_lane=beta@4");
+    let server = InferenceServer::with_registry(
+        two_model_registry(&alpha, &beta),
+        BatcherConfig {
+            continuous: true,
+            max_slots: 8,
+            faults: Some(fp.clone()),
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+        Exec::new(ExecConfig::serial()),
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let cfg = EventLoopConfig { loops: 2, faults: Some(fp.clone()), ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
+
+    quarantine_suite(srv.addr, &fp, &beta, 4);
+
+    srv.shutdown();
+    tx.send(Work::Shutdown).expect("batcher alive");
+    batcher.join().expect("batcher joins");
+    let _ = std::fs::remove_file(&alpha);
+    let _ = std::fs::remove_file(&beta);
+}
+
+/// Socket-level faults (short reads, short writes) must be invisible in
+/// content: every reply of a pipelined battery equals the clean server's,
+/// byte for byte — only the fragmentation differs.
+#[cfg(unix)]
+#[test]
+fn short_reads_and_writes_stay_bit_exact() {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let battery = [
+        "GEN 1 5 2,3",
+        "SCORE 1,2,3,4",
+        "GEN 1 4 7",
+        "END 1",
+        "GEN 2 6 5",
+        "END 2",
+        "END 99",
+    ];
+    // Clean reference replies, no sockets involved.
+    let expected: Vec<String> = {
+        let clean = InferenceServer::new(
+            Arc::new(model(5)),
+            BatcherConfig { continuous: true, exec: ExecConfig::serial(), ..Default::default() },
+        );
+        let (ctx, crx) = mpsc::channel::<Work>();
+        let h = std::thread::spawn(move || clean.run(crx));
+        let replies = battery.iter().map(|line| tcp::handle_line(line, &ctx)).collect();
+        ctx.send(Work::Shutdown).expect("clean shutdown");
+        h.join().expect("clean join");
+        replies
+    };
+
+    let fp = plan("short_write=0.5,short_read=0.25");
+    let server = InferenceServer::new(
+        Arc::new(model(5)),
+        BatcherConfig {
+            continuous: true,
+            faults: Some(fp.clone()),
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let cfg = EventLoopConfig { loops: 1, faults: Some(fp.clone()), ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
+
+    // One pipelined burst so reads fragment mid-line too.
+    let mut conn = connect(srv.addr);
+    let mut payload = String::new();
+    for line in &battery {
+        payload.push_str(line);
+        payload.push('\n');
+    }
+    conn.write_all(payload.as_bytes()).expect("send");
+    let mut r = BufReader::new(conn);
+    for want in &expected {
+        assert_eq!(&read_line(&mut r), want, "fragmented I/O must not change content");
+    }
+
+    srv.shutdown();
+    tx.send(Work::Shutdown).expect("batcher alive");
+    batcher.join().expect("batcher joins");
+}
+
+/// An injected write failure kills exactly the one connection; the server
+/// keeps accepting and serving.
+#[cfg(unix)]
+#[test]
+fn failed_write_closes_one_connection_only() {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let fp = plan("write_err=1");
+    let server = InferenceServer::new(
+        Arc::new(model(5)),
+        BatcherConfig {
+            continuous: true,
+            faults: Some(fp.clone()),
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let cfg = EventLoopConfig { loops: 1, faults: Some(fp.clone()), ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
+
+    // Sacrificial connection: its first reply write errors, so the server
+    // closes it — the client sees EOF (or a reset), never a partial line.
+    let mut sac = connect(srv.addr);
+    sac.write_all(b"STATS\n").expect("send");
+    let mut buf = Vec::new();
+    match sac.read_to_end(&mut buf) {
+        Ok(n) => assert_eq!(n, 0, "failed write must close the connection, got {buf:?}"),
+        Err(_) => {} // ECONNRESET is an equally valid observation
+    }
+    assert_eq!(fp.injected(), 1);
+
+    // The next connection is served normally.
+    let ok = one_shot(srv.addr, "GEN 5 3 1");
+    assert!(ok.starts_with("OK GEN "), "{ok}");
+
+    srv.shutdown();
+    tx.send(Work::Shutdown).expect("batcher alive");
+    batcher.join().expect("batcher joins");
+}
+
+/// Injected accept failures delay accepts (level-triggered retry) but
+/// never refuse a client.
+#[cfg(unix)]
+#[test]
+fn accept_errors_delay_but_never_refuse() {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let fp = plan("accept_err=3");
+    let server = InferenceServer::new(
+        Arc::new(model(5)),
+        BatcherConfig {
+            continuous: true,
+            faults: Some(fp.clone()),
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let cfg = EventLoopConfig { loops: 1, faults: Some(fp.clone()), ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
+
+    let ok = one_shot(srv.addr, "GEN 5 3 1");
+    assert!(ok.starts_with("OK GEN "), "{ok}");
+    assert_eq!(fp.injected(), 3, "all three accept faults fired before the accept succeeded");
+
+    srv.shutdown();
+    tx.send(Work::Shutdown).expect("batcher alive");
+    batcher.join().expect("batcher joins");
+}
+
+/// A request that overstays `request_deadline` answers `ERR DEADLINE` on
+/// the wire at a timestep boundary (an injected lane stall makes it
+/// overstay deterministically).
+#[cfg(unix)]
+#[test]
+fn deadline_expires_over_the_wire() {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let fp = plan("stall_lane=default@7:2500");
+    let server = InferenceServer::new(
+        Arc::new(model(5)),
+        BatcherConfig {
+            continuous: true,
+            max_slots: 8,
+            // Generous deadline: CI jitter before the first timestep must
+            // not expire anything — only the injected 2.5 s stall can.
+            request_deadline: Some(Duration::from_millis(1000)),
+            faults: Some(fp.clone()),
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let cfg = EventLoopConfig { loops: 1, faults: Some(fp.clone()), ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
+
+    let victim = one_shot(srv.addr, "GEN 1 3000 3,4");
+    assert_eq!(victim, "ERR DEADLINE request exceeded 1000ms deadline");
+    let stats = one_shot(srv.addr, "STATS");
+    assert!(stats.contains("\"deadline_expirations\":1"), "{stats}");
+    assert!(stats.contains(&format!("\"faults_injected\":{}", fp.injected())), "{stats}");
+
+    // The lane recovers: the next request decodes normally.
+    let ok = one_shot(srv.addr, "GEN 2 3 1");
+    assert!(ok.starts_with("OK GEN "), "{ok}");
+
+    srv.shutdown();
+    tx.send(Work::Shutdown).expect("batcher alive");
+    batcher.join().expect("batcher joins");
+}
+
+/// A clogged connection (peer never drains) is closed by the write-stall
+/// sweep and counted; everyone else keeps being served.
+#[cfg(unix)]
+#[test]
+fn write_stall_closes_clogged_connection() {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let fp = plan("clog_write=1");
+    let server = InferenceServer::new(
+        Arc::new(model(5)),
+        BatcherConfig {
+            continuous: true,
+            faults: Some(fp.clone()),
+            exec: ExecConfig::serial(),
+            ..Default::default()
+        },
+    );
+    let counters = server.counters.clone();
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let cfg = EventLoopConfig {
+        loops: 1,
+        write_stall: Some(Duration::from_millis(150)),
+        counters: Some(counters),
+        faults: Some(fp.clone()),
+    };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
+
+    // Victim: its first reply clogs in the injected always-blocked socket;
+    // the sweep closes the connection once the 150 ms bound passes.
+    let mut sac = connect(srv.addr);
+    sac.write_all(b"GEN 7 3 1\n").expect("send");
+    let mut buf = Vec::new();
+    match sac.read_to_end(&mut buf) {
+        Ok(n) => assert_eq!(n, 0, "stalled connection must be closed, got {buf:?}"),
+        Err(_) => {}
+    }
+    assert_eq!(fp.injected(), 1);
+
+    // Other clients are untouched, and the close was counted.
+    let ok = one_shot(srv.addr, "GEN 8 3 1");
+    assert!(ok.starts_with("OK GEN "), "{ok}");
+    let stats = one_shot(srv.addr, "STATS");
+    assert!(stats.contains("\"write_stall_closes\":1"), "{stats}");
+
+    srv.shutdown();
+    tx.send(Work::Shutdown).expect("batcher alive");
+    batcher.join().expect("batcher joins");
+}

@@ -178,8 +178,8 @@ fn hostile_clients_get_errors_not_panics_event_loop() {
     );
     let (tx, rx) = mpsc::channel::<Work>();
     let batcher = std::thread::spawn(move || server.run(rx));
-    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), EventLoopConfig { loops: 2 })
-        .expect("event-loop bind");
+    let cfg = EventLoopConfig { loops: 2, ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
 
     suite(srv.addr);
 

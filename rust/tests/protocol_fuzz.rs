@@ -1,0 +1,162 @@
+//! Seeded fuzz harness for the wire-protocol parser (no deps, mirrors
+//! `quant_fuzz.rs`): random byte soup, truncations and single-byte
+//! mutations of valid frames, and byte-at-a-time framing via
+//! [`split_lines`]. Invariants on every case:
+//!
+//! * `parse_request` never panics — hostile input reaches the batcher
+//!   thread through this function, so a panic here is a remote crash;
+//! * every rejection maps to a **documented** error class (the taxonomy
+//!   table in `server::protocol`), never an incidental message that a
+//!   client could not act on;
+//! * `split_lines` only ever fails with the UTF-8 framing diagnostic.
+//!
+//! Deterministic LCG so every failure reproduces from the case number in
+//! the assert message.
+
+use amq::server::protocol::{parse_request, split_lines};
+
+/// Minimal 64-bit LCG (Knuth's MMIX constants) — deterministic, std-only.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Every error prefix the protocol documents (taxonomy table in
+/// `server::protocol`). A parse rejection matching none of these is a bug:
+/// either an undocumented failure mode or a typo'd diagnostic.
+const DOCUMENTED: &[&str] = &[
+    "unknown verb '",
+    "malformed session id",
+    "malformed max_new",
+    "max_new out of range (1..=4096)",
+    "malformed token list",
+    "GEN needs at least one prime token",
+    "SCORE needs at least two tokens",
+    "unknown STATS form '",
+    "MODEL needs a name",
+    "RELOAD needs a model name",
+    "unexpected trailing field '",
+];
+
+fn assert_documented(case: &str, input: &str) {
+    if let Err(e) = parse_request(input) {
+        let msg = e.to_string();
+        assert!(
+            DOCUMENTED.iter().any(|p| msg.starts_with(p)),
+            "{case}: undocumented error {msg:?} for input {input:?}"
+        );
+    }
+}
+
+/// Valid frames covering every verb and optional field — the mutation
+/// corpus.
+const VALID: &[&str] = &[
+    "GEN 42 10 1,2,3",
+    "GEN 0 1 7 MODEL ptb-2bit",
+    "GEN 18446744073709551615 4096 0",
+    "SCORE 1,2,3,4,5",
+    "SCORE 9,9 MODEL prod",
+    "END 7",
+    "END 0 MODEL a",
+    "STATS",
+    "STATS TEXT",
+    "RELOAD beta",
+];
+
+#[test]
+fn random_byte_soup_never_panics_and_errors_stay_documented() {
+    let mut rng = Lcg(0xf00d);
+    // Bytes weighted toward protocol-ish characters so the fuzzer spends
+    // its budget near the parser's branches, not deep in "unknown verb".
+    const ALPHABET: &[u8] = b"GENSCOREADSTATSRELOADMODELTEXT 0123456789,.-+\t'\\\"\x00\xff\x7f";
+    for case in 0..20_000 {
+        let len = rng.below(48);
+        let raw: Vec<u8> = (0..len)
+            .map(|_| {
+                if rng.below(8) == 0 {
+                    (rng.next() & 0xff) as u8 // occasionally: any byte at all
+                } else {
+                    ALPHABET[rng.below(ALPHABET.len())]
+                }
+            })
+            .collect();
+        let text = String::from_utf8_lossy(&raw).into_owned();
+        assert_documented(&format!("soup case {case}"), &text);
+    }
+}
+
+#[test]
+fn truncated_and_mutated_valid_frames_never_panic() {
+    // Every truncation of every valid frame.
+    for frame in VALID {
+        for cut in 0..frame.len() {
+            assert_documented(&format!("truncation of {frame:?} at {cut}"), &frame[..cut]);
+        }
+    }
+    // Seeded single-byte mutations (substitute, insert, delete).
+    let mut rng = Lcg(0x5eed);
+    for case in 0..3_000 {
+        let frame = VALID[rng.below(VALID.len())];
+        let mut bytes = frame.as_bytes().to_vec();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below(bytes.len());
+                bytes[i] = (rng.next() & 0x7f) as u8; // keep it UTF-8
+            }
+            1 => {
+                let i = rng.below(bytes.len() + 1);
+                bytes.insert(i, (rng.next() & 0x7f) as u8);
+            }
+            _ => {
+                let i = rng.below(bytes.len());
+                bytes.remove(i);
+            }
+        }
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        assert_documented(&format!("mutation case {case} of {frame:?}"), &text);
+    }
+}
+
+#[test]
+fn split_lines_fuzz_only_fails_with_the_utf8_diagnostic() {
+    let mut rng = Lcg(0xbeef);
+    for case in 0..2_000 {
+        // A soup of bytes fed one at a time — exactly how a trickling or
+        // hostile client drives the incremental framer.
+        let len = rng.below(96);
+        let raw: Vec<u8> = (0..len).map(|_| (rng.next() & 0xff) as u8).collect();
+        let mut buf = Vec::new();
+        let mut lines = Vec::new();
+        let mut rejected = false;
+        for &b in &raw {
+            buf.push(b);
+            match split_lines(&mut buf, &mut lines) {
+                Ok(()) => {}
+                Err(e) => {
+                    assert_eq!(
+                        e.to_string(),
+                        "request is not UTF-8",
+                        "case {case}: framing may only fail on UTF-8"
+                    );
+                    rejected = true;
+                    break;
+                }
+            }
+        }
+        if rejected {
+            continue;
+        }
+        // Whatever framed must round-trip into the parser without panics.
+        for line in &lines {
+            assert_documented(&format!("framed line in case {case}"), line);
+        }
+    }
+}

@@ -55,7 +55,7 @@ fn start_with(max_batch: usize, exec: ExecConfig) -> TestServer {
         let srv = amq::server::eventloop::serve(
             "127.0.0.1:0",
             tx.clone(),
-            amq::server::eventloop::EventLoopConfig { loops: 2 },
+            amq::server::eventloop::EventLoopConfig { loops: 2, ..Default::default() },
         )
         .expect("event-loop bind");
         return TestServer { addr: srv.addr, work: tx, batcher, evloop: Some(srv) };
