@@ -4,15 +4,19 @@
 //! cost model comparison — the batched-GEMM sweep over B ∈ {1, 4, 16, 64}
 //! behind the batch-first serving API (Fig. 3 right), the worker-pool
 //! thread-scaling sweep of the row-sharded GEMM (`exec` engine), the
-//! kernel-backend sweep (portable scalar vs the runtime-detected SIMD
-//! backend — bit-identical outputs, wall time only), and the
-//! fused-vs-pairwise sweep of the count primitive at both plane-length
-//! regimes (16 words = the serving shape, 128 words = Harley–Seal).
+//! kernel-backend sweep (portable scalar vs every runtime-detected SIMD
+//! backend, incl. AVX-512's two arms — bit-identical outputs, wall time
+//! only), the fused-vs-pairwise sweep of the count primitive at both
+//! plane-length regimes (16 words = the serving shape, 128 words =
+//! Harley–Seal), a measured **stream-bandwidth roof** (memcpy + triad)
+//! every shape's effective GB/s is reported against, and the
+//! **cache-tiled vs untiled** sweep at the large-vocab shape.
 //!
 //! Run: `cargo bench --bench binary_gemv [-- --quick] [--json PATH]`
 //!
 //! The final stdout line is a machine-readable JSON summary containing the
-//! batch sweep, the thread-scaling curve, the backend sweep, the
+//! batch sweep, the thread-scaling curve, the backend sweep (with per-shape
+//! `gbps` + `roof_fraction`), the bandwidth roof, the tiled sweep, the
 //! fused-block ratios, and the active kernel + detected CPU features;
 //! `--json PATH` additionally writes it to a file (CI records it as
 //! `BENCH_binary_gemv.json`) so perf trajectories can be tracked across
@@ -20,8 +24,9 @@
 
 use amq::exp::{
     costmodel, fused_vs_pairwise_sweep, gemm_backend_sweep, gemm_batch_sweep, gemm_thread_sweep,
-    kernel_tables, render_backend_sweep, render_batch_sweep, render_fused_sweep,
-    render_scalar_floor, render_thread_sweep, scalar_fp_floor, table6,
+    kernel_tables, render_backend_sweep, render_batch_sweep, render_fused_sweep, render_roof,
+    render_scalar_floor, render_thread_sweep, render_tiled_sweep, scalar_fp_floor, stream_roof,
+    table6, tiled_vs_untiled_sweep,
 };
 use amq::kernels::{backend, Kernel};
 
@@ -41,7 +46,7 @@ fn main() {
     let samples = if quick { 7 } else { 15 };
     eprintln!(
         "benchmarking binary GEMV at {shapes:?} … (kernel={}, cpu features: {})",
-        backend::active(),
+        backend::describe(backend::active()),
         backend::cpu_features().join(",")
     );
     let rows = table6(shapes, samples);
@@ -61,20 +66,36 @@ fn main() {
     let tsweep = gemm_thread_sweep(sweep_shapes, 16, 2, threads, samples.min(9));
     print!("{}", render_thread_sweep(&tsweep));
 
+    // Stream-bandwidth roof: a memcpy + triad probe over buffers far past
+    // L2. Every shape's effective GB/s (packed bytes touched / time) is
+    // reported as a fraction of this roof — the honest ceiling for a
+    // memory-bound kernel, and the context for the tiled-vs-untiled gate.
+    let roof = stream_roof(samples.min(5), quick);
+    print!("{}", render_roof(&roof));
+
     // Kernel-backend sweep: the same W2A2 B=16 GEMM forced onto every
-    // backend this host can run (scalar always; AVX2/NEON when detected).
-    // Two regimes: the serving shape (short planes — 1024 cols = 16 words,
-    // the SIMD LUT loop) and a long-plane shape (8192 cols = 128 words per
-    // plane) that engages the AVX2 Harley–Seal main loop, where the SIMD
-    // margin over scalar `popcnt` is structural.
+    // backend this host can run (scalar always; AVX2/AVX-512/NEON when
+    // detected). Two regimes: the serving shape (short planes — 1024 cols
+    // = 16 words, the SIMD LUT loop) and a long-plane shape (8192 cols =
+    // 128 words per plane) that engages the Harley–Seal main loop, where
+    // the SIMD margin over scalar `popcnt` is structural.
     let hs_shape: (usize, usize) = (256, 8192);
     let backend_shapes: Vec<(usize, usize)> = {
         let mut v = sweep_shapes.to_vec();
         v.push(hs_shape);
         v
     };
-    let ksweep = gemm_backend_sweep(&backend_shapes, 16, 2, samples.min(9));
+    let ksweep = gemm_backend_sweep(&backend_shapes, 16, 2, samples.min(9), roof.roof_gbps);
     print!("{}", render_backend_sweep(&ksweep));
+
+    // Cache-tiled vs untiled sweep at the large-vocab shape (the shape
+    // whose B=64 activation planes overflow L2): the same GEMM run with
+    // column tiling disabled (one tile), auto (detected/overridden L2),
+    // and a deliberately tiny budget — byte-identical outputs asserted
+    // inside the sweep, wall time + predicted traffic advantage reported.
+    let (tile_m, tile_n) = *shapes.last().unwrap();
+    let tiled = tiled_vs_untiled_sweep(tile_m, tile_n, 2, 64, samples.min(9), roof.roof_gbps);
+    print!("{}", render_tiled_sweep(&tiled));
 
     // Fused-vs-pairwise sweep of the count primitive itself, at the
     // serving plane length (16 words) and the Harley–Seal regime (128
@@ -185,15 +206,72 @@ fn main() {
         eprintln!("note: no SIMD backend detected — skipping the backend-speedup assertions");
     }
 
-    // Machine-readable summary (batch sweep + thread scaling + backends).
+    // Self-check (the tiling gate): at the large-vocab shape the
+    // auto-tiled GEMM must not lose to the untiled one. The work is
+    // identical when the auto tile covers the whole batch, so a small
+    // tolerance absorbs timer noise; when the batch overflows L2 the tiled
+    // walk should win outright.
+    let untiled = tiled.iter().find(|r| r.config == "untiled").expect("untiled row");
+    let auto = tiled.iter().find(|r| r.config == "auto").expect("auto row");
+    assert!(
+        auto.total_ms <= untiled.total_ms * 1.08,
+        "auto-tiled GEMM slower than untiled at {}x{} B=64: {:.3} ms vs {:.3} ms",
+        tile_m,
+        tile_n,
+        auto.total_ms,
+        untiled.total_ms
+    );
+    eprintln!(
+        "note: tiled vs untiled at {}x{} B=64: {:.2}x (tile_cols={}, predicted {:.2}x)",
+        tile_m, tile_n, auto.speedup_vs_untiled, auto.tile_cols, auto.predicted
+    );
+
+    // Self-check (the AVX-512 gate): when both 256-bit and 512-bit
+    // backends exist, AVX-512 must not lose to AVX2 at the long-plane
+    // W2A2 B=16 shape. Both may sit at the memory roof, so the gate is
+    // "not slower" with a 5% noise allowance rather than a strict win.
+    if Kernel::Avx512.is_available() && Kernel::Avx2.is_available() {
+        let row = |name: &str| {
+            ksweep
+                .iter()
+                .find(|r| r.m == hs_shape.0 && r.n == hs_shape.1 && r.backend == name)
+                .expect("backend row at the long-plane shape")
+        };
+        let (a512, a2) = (row("avx512"), row("avx2"));
+        assert!(
+            a512.total_ms <= a2.total_ms * 1.05,
+            "avx512 slower than avx2 at {}x{} B=16: {:.3} ms vs {:.3} ms (arm: {})",
+            hs_shape.0,
+            hs_shape.1,
+            a512.total_ms,
+            a2.total_ms,
+            backend::avx512_arm().unwrap_or("?")
+        );
+        eprintln!(
+            "note: avx512({}) vs avx2 at {}x{} B=16: {:.2}x",
+            backend::avx512_arm().unwrap_or("?"),
+            hs_shape.0,
+            hs_shape.1,
+            a2.total_ms / a512.total_ms
+        );
+    } else {
+        eprintln!("note: avx512+avx2 not both available — skipping the AVX-512-vs-AVX2 gate");
+    }
+
+    // Machine-readable summary (batch sweep + thread scaling + backends +
+    // bandwidth roof + tiling).
     let mut json = format!(
-        "{{\"bench\":\"binary_gemv\",\"kernel\":\"{}\",\"cpu_features\":[{}],\"batch_sweep\":[",
-        backend::active(),
+        "{{\"bench\":\"binary_gemv\",\"kernel\":\"{}\",\"cpu_features\":[{}],\"roof\":{{\"memcpy_gbps\":{:.2},\"triad_gbps\":{:.2},\"roof_gbps\":{:.2},\"buffer_bytes\":{}}},\"batch_sweep\":[",
+        backend::describe(backend::active()),
         backend::cpu_features()
             .iter()
             .map(|f| format!("\"{f}\""))
             .collect::<Vec<_>>()
-            .join(",")
+            .join(","),
+        roof.memcpy_gbps,
+        roof.triad_gbps,
+        roof.roof_gbps,
+        roof.buffer_bytes
     );
     for (i, r) in sweep.iter().enumerate() {
         if i > 0 {
@@ -220,8 +298,20 @@ fn main() {
             json.push(',');
         }
         json.push_str(&format!(
-            "{{\"m\":{},\"n\":{},\"k\":{},\"batch\":{},\"backend\":\"{}\",\"total_ms\":{:.4},\"speedup_vs_scalar\":{:.3}}}",
-            r.m, r.n, r.k, r.batch, r.backend, r.total_ms, r.speedup_vs_scalar
+            "{{\"m\":{},\"n\":{},\"k\":{},\"batch\":{},\"backend\":\"{}\",\"total_ms\":{:.4},\"speedup_vs_scalar\":{:.3},\"gbps\":{:.2},\"roof_fraction\":{:.3}}}",
+            r.m, r.n, r.k, r.batch, r.backend, r.total_ms, r.speedup_vs_scalar, r.gbps,
+            r.roof_fraction
+        ));
+    }
+    json.push_str("],\"tiled\":[");
+    for (i, r) in tiled.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "{{\"m\":{},\"n\":{},\"k\":{},\"batch\":{},\"config\":\"{}\",\"tile_cols\":{},\"total_ms\":{:.4},\"speedup_vs_untiled\":{:.3},\"gbps\":{:.2},\"roof_fraction\":{:.3},\"predicted\":{:.3}}}",
+            r.m, r.n, r.k, r.batch, r.config, r.tile_cols, r.total_ms, r.speedup_vs_untiled,
+            r.gbps, r.roof_fraction, r.predicted
         ));
     }
     json.push_str("],\"fused_block\":[");

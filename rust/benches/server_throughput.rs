@@ -335,7 +335,7 @@ fn json_summary(
 ) -> String {
     let mut s = format!(
         "{{\"bench\":\"server_throughput\",\"kernel\":\"{}\",\"cpu_features\":[{}],\"kind\":\"{}\",\"vocab\":{},\"hidden\":{},\"new_tokens\":{},\"results\":[",
-        amq::kernels::backend::active(),
+        amq::kernels::backend::describe(amq::kernels::backend::active()),
         amq::kernels::backend::cpu_features()
             .iter()
             .map(|f| format!("\"{f}\""))

@@ -88,7 +88,7 @@ impl Cli {
         }
     }
 
-    /// Parse a kernel-backend selection flag (`scalar|avx2|neon|auto`).
+    /// Parse a kernel-backend selection flag (`scalar|avx2|avx512|neon|auto`).
     /// `None` means "no explicit choice" (flag absent or `auto`) — the
     /// caller falls through to `AMQ_KERNEL` / runtime detection. Naming a
     /// backend this host cannot run is an error, never a silent fallback.

@@ -9,7 +9,7 @@
 //! addr = "127.0.0.1:7860"
 //! max_batch = 16
 //! threads = 0          # worker pool: 1 = serial, 0 = auto
-//! kernel = "auto"      # GEMM backend: scalar | avx2 | neon | auto
+//! kernel = "auto"      # GEMM backend: scalar | avx2 | avx512 | neon | auto
 //!
 //! [model]
 //! kind = "lstm"       # or "gru"
@@ -233,8 +233,9 @@ pub struct ServerConfig {
     /// Worker-pool size for the batched forward: `1` = serial, `0` = auto
     /// (`AMQ_THREADS` env or the machine's available parallelism).
     pub threads: usize,
-    /// XNOR/popcount kernel backend: `"scalar" | "avx2" | "neon"` forces
-    /// one, `"auto"` (default) defers to `AMQ_KERNEL` / runtime feature
+    /// XNOR/popcount kernel backend: `"scalar" | "avx2" | "avx512" |
+    /// "neon"` forces one, `"auto"` (default) defers to `AMQ_KERNEL` /
+    /// runtime feature
     /// detection. Validated by `Kernel::parse_choice` at launch.
     pub kernel: String,
     /// Use the multiplexed event-loop front end (implies continuous

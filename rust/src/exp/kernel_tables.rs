@@ -259,6 +259,24 @@ pub fn render_thread_sweep(rows: &[ThreadSweepRow]) -> String {
     s
 }
 
+/// Packed bytes one batched GEMM touches: every weight plane streams once
+/// (`m·k` planes) and every activation plane is read once per weight-row
+/// pass in the cache-resident ideal (`batch·k` planes, counted once) —
+/// the *useful* traffic, which is what effective GB/s should charge.
+fn gemm_packed_bytes(m: usize, n: usize, k: usize, batch: usize) -> f64 {
+    let wpp = n.div_ceil(64);
+    ((m * k + batch * k) * wpp * 8) as f64
+}
+
+/// Effective GB/s from packed bytes touched and a median wall time.
+fn effective_gbps(bytes: f64, ms: f64) -> f64 {
+    if ms > 0.0 {
+        bytes / (ms / 1e3) / 1e9
+    } else {
+        0.0
+    }
+}
+
 /// One row of the kernel-backend sweep: the same batched GEMM forced onto
 /// one backend ([`binary::PreparedGemm::set_kernel`]).
 #[derive(Clone, Debug)]
@@ -272,17 +290,26 @@ pub struct BackendSweepRow {
     pub total_ms: f64,
     /// Speedup vs the scalar row of the same shape.
     pub speedup_vs_scalar: f64,
+    /// Effective bandwidth: packed bytes touched / wall time.
+    pub gbps: f64,
+    /// `gbps / roof_gbps` — how close this shape runs to the measured
+    /// stream-bandwidth roof (0 when no roof was probed). ≥ ~0.5 means
+    /// the kernel is memory-bound and more SIMD cannot help.
+    pub roof_fraction: f64,
 }
 
 /// Sweep the batched GEMM over every kernel backend this host can run —
 /// the measurement behind the runtime-dispatch layer. All backends compute
 /// the bit-identical output (asserted here per shape, and pinned at full
 /// grid by `rust/tests/kernel_parity.rs`); only wall time differs.
+/// `roof_gbps` is the measured stream roof ([`stream_roof`]; pass 0.0 to
+/// skip the roof fraction).
 pub fn gemm_backend_sweep(
     shapes: &[(usize, usize)],
     batch: usize,
     k: usize,
     samples: usize,
+    roof_gbps: f64,
 ) -> Vec<BackendSweepRow> {
     let mut rows = Vec::new();
     for &(m, n) in shapes {
@@ -294,6 +321,7 @@ pub fn gemm_backend_sweep(
         );
         let x = rng.normal_vec(batch * n, 0.5);
         let xq = QuantizedBatch::quantize(&x, batch, n, k);
+        let bytes = gemm_packed_bytes(m, n, k, batch);
         let mut reference: Option<Vec<f32>> = None;
         let mut shape_rows = Vec::new();
         for kernel in Kernel::available() {
@@ -308,14 +336,18 @@ pub fn gemm_backend_sweep(
                 // Exactness sanity: backends agree bit-for-bit.
                 Some(want) => assert_eq!(&y, want, "backend {kernel} diverged at {m}x{n}"),
             }
+            let total_ms = r.median_ms();
+            let gbps = effective_gbps(bytes, total_ms);
             shape_rows.push(BackendSweepRow {
                 m,
                 n,
                 k,
                 batch,
                 backend: kernel.name(),
-                total_ms: r.median_ms(),
+                total_ms,
                 speedup_vs_scalar: 1.0,
+                gbps,
+                roof_fraction: if roof_gbps > 0.0 { gbps / roof_gbps } else { 0.0 },
             });
         }
         let base = shape_rows
@@ -334,12 +366,218 @@ pub fn gemm_backend_sweep(
 pub fn render_backend_sweep(rows: &[BackendSweepRow]) -> String {
     let mut s = String::from(
         "Kernel-backend sweep (bit-identical outputs, wall time only)\n\
-         Weight Size      W/A bits  Batch  Backend   Total(ms)   vs scalar\n",
+         Weight Size      W/A bits  Batch  Backend   Total(ms)   vs scalar    GB/s  of roof\n",
     );
     for r in rows {
         s.push_str(&format!(
-            "{:>7}x{:<7}  {:>5}/{:<2}  {:>5}  {:>7}   {:>9.3}   {:>7.2}x\n",
-            r.m, r.n, r.k, r.k, r.batch, r.backend, r.total_ms, r.speedup_vs_scalar
+            "{:>7}x{:<7}  {:>5}/{:<2}  {:>5}  {:>7}   {:>9.3}   {:>7.2}x  {:>6.1}  {:>6.1}%\n",
+            r.m,
+            r.n,
+            r.k,
+            r.k,
+            r.batch,
+            r.backend,
+            r.total_ms,
+            r.speedup_vs_scalar,
+            r.gbps,
+            r.roof_fraction * 100.0
+        ));
+    }
+    s
+}
+
+/// The measured memory-bandwidth roof of this host: the best of a large
+/// `memcpy` and a STREAM-style triad over buffers far larger than any
+/// cache, in GB/s. The backend and tiled sweeps report each shape's
+/// effective bandwidth as a fraction of this roof, making "are we
+/// memory-bound yet?" a tracked number instead of a guess.
+#[derive(Clone, Debug)]
+pub struct BandwidthRoof {
+    /// `memcpy` bandwidth (2 bytes moved per byte of buffer: read+write).
+    pub memcpy_gbps: f64,
+    /// Triad `a[i] = b[i] + 3·c[i]` bandwidth (3 streams).
+    pub triad_gbps: f64,
+    /// `max(memcpy, triad)` — the roof the fractions are measured against.
+    pub roof_gbps: f64,
+    /// Buffer size probed (bytes per stream).
+    pub buffer_bytes: usize,
+}
+
+/// Probe the stream-bandwidth roof. `quick` uses 16 MB streams (CI), full
+/// uses 64 MB — both far beyond L2/L3 slices, so the probe measures DRAM,
+/// not cache.
+pub fn stream_roof(samples: usize, quick: bool) -> BandwidthRoof {
+    let buffer_bytes: usize = if quick { 16 << 20 } else { 64 << 20 };
+    // memcpy over u64 words.
+    let words = buffer_bytes / 8;
+    let src: Vec<u64> = (0..words as u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+    let mut dst = vec![0u64; words];
+    let mc = bench_fn("roof memcpy", samples, || {
+        dst.copy_from_slice(&src);
+        black_box(&dst);
+    });
+    // STREAM triad over f32.
+    let floats = buffer_bytes / 4;
+    let b: Vec<f32> = (0..floats).map(|i| (i % 113) as f32).collect();
+    let c: Vec<f32> = (0..floats).map(|i| (i % 127) as f32).collect();
+    let mut a = vec![0.0f32; floats];
+    let tr = bench_fn("roof triad", samples, || {
+        for ((ai, bi), ci) in a.iter_mut().zip(&b).zip(&c) {
+            *ai = *bi + 3.0 * *ci;
+        }
+        black_box(&a);
+    });
+    let memcpy_gbps = effective_gbps(2.0 * buffer_bytes as f64, mc.median_ms());
+    let triad_gbps = effective_gbps(3.0 * buffer_bytes as f64, tr.median_ms());
+    BandwidthRoof {
+        memcpy_gbps,
+        triad_gbps,
+        roof_gbps: memcpy_gbps.max(triad_gbps),
+        buffer_bytes,
+    }
+}
+
+pub fn render_roof(r: &BandwidthRoof) -> String {
+    format!(
+        "Stream-bandwidth roof ({} MB streams): memcpy {:.1} GB/s, triad {:.1} GB/s -> roof {:.1} GB/s\n",
+        r.buffer_bytes >> 20,
+        r.memcpy_gbps,
+        r.triad_gbps,
+        r.roof_gbps
+    )
+}
+
+/// One row of the tiled-vs-untiled sweep: the same batched GEMM on the
+/// detected backend, with the column-tile budget forced per row
+/// ([`binary::PreparedGemm::set_l2_budget`]). All configurations produce
+/// byte-identical outputs (asserted in the sweep); only DRAM traffic —
+/// and so wall time — differs.
+#[derive(Clone, Debug)]
+pub struct TiledSweepRow {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    /// `"untiled"` (single tile via a `usize::MAX` budget), `"auto"` (the
+    /// detected/overridden L2 budget), or `"tiny"` (64 KB — many tiles).
+    pub config: &'static str,
+    /// The tile width (columns) this config resolved to.
+    pub tile_cols: usize,
+    pub total_ms: f64,
+    /// Speedup vs the untiled row of the same shape.
+    pub speedup_vs_untiled: f64,
+    /// Effective bandwidth: packed bytes touched / wall time.
+    pub gbps: f64,
+    /// `gbps / roof_gbps` (0 when no roof was probed).
+    pub roof_fraction: f64,
+    /// The traffic model's predicted untiled/tiled DRAM-byte ratio for
+    /// this config's budget ([`cost::tiled_traffic_advantage`]; 1.0 for
+    /// the untiled row itself).
+    pub predicted: f64,
+}
+
+/// Measure cache tiling at one shape on the detected backend: untiled
+/// (one tile), the auto budget, and a deliberately tiny budget. Outputs
+/// are asserted byte-identical across configs — tiling only reorders
+/// whole output elements — so the sweep doubles as a parity check at
+/// bench shapes.
+pub fn tiled_vs_untiled_sweep(
+    m: usize,
+    n: usize,
+    k: usize,
+    batch: usize,
+    samples: usize,
+    roof_gbps: f64,
+) -> Vec<TiledSweepRow> {
+    let mut rng = Rng::new(0x711E + m as u64);
+    let w = rng.normal_vec(m * n, 0.05);
+    let mut prep = binary::PreparedGemm::new(&RowQuantized::quantize(
+        &w,
+        m,
+        n,
+        k,
+        Method::Alternating { t: 2 },
+    ));
+    let x = rng.normal_vec(batch * n, 0.5);
+    let xq = QuantizedBatch::quantize(&x, batch, n, k);
+    let bytes = gemm_packed_bytes(m, n, k, batch);
+    let wpp = n.div_ceil(64);
+    let configs: [(&'static str, usize); 3] =
+        [("untiled", usize::MAX), ("auto", cost::l2_bytes()), ("tiny", 64 * 1024)];
+    let mut reference: Option<Vec<f32>> = None;
+    let mut rows = Vec::new();
+    for (config, budget) in configs {
+        prep.set_l2_budget(budget);
+        let mut y = vec![0.0f32; batch * m];
+        let r = bench_fn(&format!("tiled {m}x{n} b={batch} {config}"), samples, || {
+            prep.gemm(&xq, &mut y);
+            black_box(&y);
+        });
+        match &reference {
+            None => reference = Some(y.clone()),
+            // Exactness: tiling must be bit-neutral at bench shapes too.
+            Some(want) => assert_eq!(&y, want, "tiling config {config} diverged at {m}x{n}"),
+        }
+        let total_ms = r.median_ms();
+        let gbps = effective_gbps(bytes, total_ms);
+        let predicted = if config == "untiled" {
+            1.0
+        } else {
+            cost::tiled_traffic_advantage(
+                m as u64,
+                wpp as u64,
+                k as u64,
+                k as u64,
+                batch as u64,
+                budget as u64,
+                4,
+            )
+        };
+        rows.push(TiledSweepRow {
+            m,
+            n,
+            k,
+            batch,
+            config,
+            tile_cols: prep.tile_cols(k),
+            total_ms,
+            speedup_vs_untiled: 1.0,
+            gbps,
+            roof_fraction: if roof_gbps > 0.0 { gbps / roof_gbps } else { 0.0 },
+            predicted,
+        });
+    }
+    let base = rows
+        .iter()
+        .find(|r| r.config == "untiled")
+        .map(|r| r.total_ms)
+        .unwrap_or(1.0);
+    for r in &mut rows {
+        r.speedup_vs_untiled = if r.total_ms > 0.0 { base / r.total_ms } else { 1.0 };
+    }
+    rows
+}
+
+pub fn render_tiled_sweep(rows: &[TiledSweepRow]) -> String {
+    let mut s = String::from(
+        "Cache-tiled batched GEMM (byte-identical outputs, traffic only)\n\
+         Weight Size      W/A bits  Batch  Config    Tile   Total(ms)  vs untiled    GB/s  of roof  Predicted\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>7}x{:<7}  {:>5}/{:<2}  {:>5}  {:>7}  {:>5}   {:>9.3}  {:>9.2}x  {:>6.1}  {:>6.1}%  {:>8.2}x\n",
+            r.m,
+            r.n,
+            r.k,
+            r.k,
+            r.batch,
+            r.config,
+            r.tile_cols,
+            r.total_ms,
+            r.speedup_vs_untiled,
+            r.gbps,
+            r.roof_fraction * 100.0,
+            r.predicted
         ));
     }
     s
@@ -364,10 +602,11 @@ pub struct FusedSweepRow {
     pub pairwise_ms: f64,
     /// `pairwise_ms / fused_ms` — this PR's headline number at short planes.
     pub speedup: f64,
-    /// The micro-model's predicted ratio: 1.0 for scalar; for AVX2 the
-    /// cutoff model (1.0 in the Harley–Seal long-plane regime, where both
-    /// layouts share a code path); for NEON the raw ratio (its fused
-    /// kernel runs at every plane length).
+    /// The micro-model's predicted ratio: 1.0 for scalar; for AVX2 — and
+    /// the AVX-512 LUT arm — the cutoff model (1.0 in the Harley–Seal
+    /// long-plane regime, where both layouts share a code path); for NEON
+    /// and the AVX-512 `vpopcntq` arm the raw ratio (their fused kernels
+    /// run at every plane length).
     pub predicted: f64,
 }
 
@@ -459,6 +698,16 @@ pub fn fused_vs_pairwise_sweep(
                 // AVX2 falls back to the same Harley–Seal pairwise pass on
                 // long planes, so its predicted advantage has a cutoff.
                 Kernel::Avx2 => cost::fused_block_advantage(w64, k64, k64, b64),
+                // AVX-512 is arm-dependent: the vpopcntq arm runs fused at
+                // every plane length (512-bit raw ratio), the LUT arm has
+                // the same Harley–Seal cutoff as AVX2.
+                Kernel::Avx512 => {
+                    if backend::avx512_arm() == Some("vpopcntq") {
+                        cost::fused_block_ratio_512(w64, k64, k64, b64)
+                    } else {
+                        cost::fused_block_advantage_512(w64, k64, k64, b64)
+                    }
+                }
                 // NEON runs the fused kernel at every plane length.
                 Kernel::Neon => cost::fused_block_ratio(w64, k64, k64, b64),
             };
@@ -622,14 +871,53 @@ mod tests {
 
     #[test]
     fn backend_sweep_covers_available_backends_and_renders() {
-        let rows = gemm_backend_sweep(&[(64, 256)], 4, 2, 3);
+        let rows = gemm_backend_sweep(&[(64, 256)], 4, 2, 3, 10.0);
         let available = Kernel::available();
         assert_eq!(rows.len(), available.len());
         assert_eq!(rows[0].backend, "scalar");
         assert!((rows[0].speedup_vs_scalar - 1.0).abs() < 1e-9);
         assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.speedup_vs_scalar > 0.0));
+        // Effective bandwidth and roof fraction are populated and
+        // consistent (roof passed as 10 GB/s here).
+        for r in &rows {
+            assert!(r.gbps > 0.0, "{r:?}");
+            assert!((r.roof_fraction - r.gbps / 10.0).abs() < 1e-9, "{r:?}");
+        }
         let s = render_backend_sweep(&rows);
         assert!(s.contains("vs scalar"), "{s}");
+        assert!(s.contains("of roof"), "{s}");
+        // roof = 0 means "not probed": fraction 0, not NaN/inf.
+        let rows0 = gemm_backend_sweep(&[(32, 128)], 2, 2, 2, 0.0);
+        assert!(rows0.iter().all(|r| r.roof_fraction == 0.0));
+    }
+
+    #[test]
+    fn stream_roof_probe_runs() {
+        // Tiny sample count; quick buffers. The roof must be positive and
+        // the max of its two probes.
+        let r = stream_roof(2, true);
+        assert!(r.memcpy_gbps > 0.0 && r.triad_gbps > 0.0);
+        assert!((r.roof_gbps - r.memcpy_gbps.max(r.triad_gbps)).abs() < 1e-12);
+        assert_eq!(r.buffer_bytes, 16 << 20);
+        let s = render_roof(&r);
+        assert!(s.contains("roof"), "{s}");
+    }
+
+    #[test]
+    fn tiled_sweep_bit_matches_and_renders() {
+        // Small shape: the identical-outputs assert runs inside the sweep;
+        // here we check row structure, tile widths, and the predicted
+        // column. Untiled must resolve to a single tile covering the batch.
+        let rows = tiled_vs_untiled_sweep(48, 256, 2, 16, 2, 5.0);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].config, "untiled");
+        assert!((rows[0].speedup_vs_untiled - 1.0).abs() < 1e-9);
+        assert!((rows[0].predicted - 1.0).abs() < 1e-9);
+        assert!(rows[0].tile_cols >= 16);
+        assert!(rows.iter().all(|r| r.total_ms > 0.0 && r.gbps > 0.0 && r.predicted >= 1.0));
+        let s = render_tiled_sweep(&rows);
+        assert!(s.contains("vs untiled"), "{s}");
+        assert!(s.contains("Predicted"), "{s}");
     }
 
     #[test]

@@ -14,8 +14,9 @@ pub mod lm_tables;
 pub use image_tables::{table7, table8, table9};
 pub use kernel_tables::{
     costmodel, fused_vs_pairwise_sweep, gemm_backend_sweep, gemm_batch_sweep, gemm_thread_sweep,
-    render_backend_sweep, render_batch_sweep, render_fused_sweep, render_scalar_floor,
-    render_thread_sweep, scalar_fp_floor, table6,
+    render_backend_sweep, render_batch_sweep, render_fused_sweep, render_roof,
+    render_scalar_floor, render_thread_sweep, render_tiled_sweep, scalar_fp_floor, stream_roof,
+    table6, tiled_vs_untiled_sweep, BandwidthRoof, TiledSweepRow,
 };
 pub use lm_tables::{table3_4_5, train_tag};
 pub use quant_tables::table1_2;

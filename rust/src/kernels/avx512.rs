@@ -1,0 +1,495 @@
+//! AVX-512 backend: the fourth kernel, implementing the single fused
+//! batch-block primitive ([`block_counts`]) **two ways** behind runtime
+//! detection:
+//!
+//! * **`vpopcntq` arm** (`avx512f + avx512bw + avx512vpopcntdq`, Ice
+//!   Lake and later): the hardware 64-bit-lane popcount
+//!   (`_mm512_popcnt_epi64`) feeds u64-lane accumulators directly, so the
+//!   fused block kernel runs at **every** plane length — u64 lanes never
+//!   saturate, so there is no Harley–Seal cutoff, and the `k`-masked load
+//!   (`_mm512_maskz_loadu_epi64`) absorbs the word tail with zero scalar
+//!   cleanup (XOR of the masked-in zeros counts zero mismatches).
+//!
+//! * **LUT arm** (`avx512f + avx512bw` only, Skylake-X era): a 512-bit
+//!   widening of the AVX2 structure — `vpshufb` nibble-LUT byte popcount
+//!   plus `vpsadbw` folds, fused `u8`-lane block kernel below
+//!   [`HARLEY_SEAL_MIN_WORDS`], and a Harley–Seal carry-save pairwise
+//!   pass (32 words per iteration, CSAs via one `vpternlogq` each) above
+//!   it.
+//!
+//! Both arms size their fused chunks to [`FUSED_MAX_CHAINS`] = 16 chains
+//! — the 32-zmm register file holds twice AVX2's accumulator budget, so
+//! W2A2 runs a full 4-column GEMM block per chunk.
+//!
+//! Exactness: popcounts are exact integers whatever the instruction mix,
+//! so both arms produce the identical mismatch counts as the scalar
+//! kernel and the shared float reduction in `kernels::binary` makes the
+//! f32 outputs bit-identical (pinned by `rust/tests/kernel_parity.rs`,
+//! which drives each arm separately through
+//! [`super::backend::testing::avx512_block_counts_arm`]).
+//!
+//! This module is normally reached through the [`super::backend`]
+//! dispatch with an availability-resolved kernel; as a second line of
+//! defense the safe wrapper re-checks the features at runtime (cached
+//! atomic loads) and falls back to the scalar kernel — identical counts —
+//! so a misused raw `Kernel::Avx512` can never execute EVEX instructions
+//! on a CPU without them.
+
+use core::arch::x86_64::*;
+
+use super::backend::MAX_K;
+use super::scalar;
+
+/// Plane length (in words) from which the **LUT arm** switches from the
+/// fused block kernel to Harley–Seal pairwise passes, shared with AVX2
+/// via the cost model's constant so `exp::kernel_tables` predictions can
+/// never drift from what the kernel does. The `vpopcntq` arm has no such
+/// cutoff (u64-lane accumulators).
+const HARLEY_SEAL_MIN_WORDS: usize = super::cost::FUSED_SHORT_PLANE_MAX_WORDS as usize;
+
+/// Chain budget (columns × k_w × k_x) per fused-kernel chunk, derived
+/// from [`super::cost::AVX512_FUSED_MAX_CHAINS`]: EVEX exposes 32 zmm
+/// registers, so 16 chain accumulators still leave room for the held
+/// weight vectors, the activation vector, and (on the LUT arm) the LUT
+/// and nibble mask.
+const FUSED_MAX_CHAINS: usize = super::cost::AVX512_FUSED_MAX_CHAINS as usize;
+
+/// Accumulator slots the fused kernels allocate: a chunk is capped by the
+/// chain budget *or* is a single column of up to `MAX_K²` chains,
+/// whichever is larger.
+const FUSED_ACC_SLOTS: usize = if FUSED_MAX_CHAINS > MAX_K * MAX_K {
+    FUSED_MAX_CHAINS
+} else {
+    MAX_K * MAX_K
+};
+
+/// The LUT arm's fused kernel accumulates ≤ 8 per byte per 512-bit
+/// vector in `u8` lanes and must not overflow before the per-chain fold:
+/// the short-plane regime must stay under 31 vectors (31 · 8 = 248 < 256).
+const _: () = assert!(HARLEY_SEAL_MIN_WORDS <= 31 * 8);
+
+/// Runtime check for the common base of both arms (cached by std in
+/// atomics — one load + branch each). `avx512bw` is required even by the
+/// `vpopcntq` arm's dispatch contract so a single `--kernel avx512`
+/// predicate covers both.
+#[inline]
+pub(crate) fn have_avx512() -> bool {
+    is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw")
+}
+
+/// Runtime check for the native 64-bit-lane popcount extension.
+#[inline]
+pub(crate) fn have_vpopcntdq() -> bool {
+    is_x86_feature_detected!("avx512vpopcntdq")
+}
+
+/// Fused batch-block counts (AVX-512) — the backend's one count
+/// primitive; contract as in [`scalar::block_counts`]. Picks the
+/// `vpopcntq` arm when the hardware has it, the LUT arm otherwise, and
+/// scalar (identical counts) if AVX-512 is missing entirely.
+#[inline]
+pub(crate) fn block_counts(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    if !have_avx512() {
+        return scalar::block_counts(w, x_block, counts);
+    }
+    if have_vpopcntdq() {
+        // SAFETY: avx512f+avx512bw+avx512vpopcntdq all detected above.
+        unsafe { block_counts_vpopcnt(w, x_block, counts) }
+    } else {
+        // SAFETY: avx512f+avx512bw detected above.
+        unsafe { block_counts_lut(w, x_block, counts) }
+    }
+}
+
+/// Run one specific arm regardless of what [`block_counts`] would pick:
+/// `vpopcnt = true` forces the `vpopcntq` arm, `false` the LUT arm.
+/// Returns `false` (leaving `counts` untouched) when this host cannot run
+/// the requested arm — the parity suite skips-with-notice on that.
+/// Exposed to tests through `backend::testing`.
+pub(crate) fn block_counts_arm(
+    vpopcnt: bool,
+    w: &[&[u64]],
+    x_block: &[&[&[u64]]],
+    counts: &mut [u32],
+) -> bool {
+    if !have_avx512() || (vpopcnt && !have_vpopcntdq()) {
+        return false;
+    }
+    if vpopcnt {
+        // SAFETY: avx512f+avx512bw+avx512vpopcntdq all detected above.
+        unsafe { block_counts_vpopcnt(w, x_block, counts) }
+    } else {
+        // SAFETY: avx512f+avx512bw detected above.
+        unsafe { block_counts_lut(w, x_block, counts) }
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Shared 512-bit helpers. All `unsafe fn`s below require the listed
+// target features at runtime; slices are read strictly in-bounds via
+// unaligned (or k-masked) loads.
+// ---------------------------------------------------------------------------
+
+/// Load words `i..i+8` of both planes and XOR them.
+///
+/// # Safety
+/// Requires AVX-512F; `i + 8` must not exceed the planes' length.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn xor_load_512(a: *const u64, b: *const u64, i: usize) -> __m512i {
+    let va = _mm512_loadu_si512(a.add(i) as *const _);
+    let vb = _mm512_loadu_si512(b.add(i) as *const _);
+    _mm512_xor_si512(va, vb)
+}
+
+/// Load the `rem < 8` tail words (`i..i+rem`) of both planes with a
+/// k-masked load (missing lanes read as zero) and XOR them. Zero lanes
+/// XOR to zero and count zero mismatches, so the tail folds into the
+/// vector accumulators with no scalar cleanup.
+///
+/// # Safety
+/// Requires AVX-512F; `i + rem` must not exceed the planes' length and
+/// `rem < 8`.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn xor_load_tail_512(a: *const u64, b: *const u64, i: usize, rem: usize) -> __m512i {
+    let mask: __mmask8 = (1u8 << rem) - 1;
+    let va = _mm512_maskz_loadu_epi64(mask, a.add(i) as *const i64);
+    let vb = _mm512_maskz_loadu_epi64(mask, b.add(i) as *const i64);
+    _mm512_xor_si512(va, vb)
+}
+
+/// Horizontal sum of the eight u64 lanes.
+///
+/// # Safety
+/// Requires AVX-512F.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn hsum_512(v: __m512i) -> u64 {
+    _mm512_reduce_add_epi64(v) as u64
+}
+
+// ---------------------------------------------------------------------------
+// The vpopcntq arm.
+// ---------------------------------------------------------------------------
+
+/// One-pair XOR-popcount with the hardware lane popcount — the pairwise
+/// fallback of the `vpopcntq` arm for bit widths beyond `MAX_K`.
+///
+/// # Safety
+/// Requires AVX-512F+BW+VPOPCNTDQ; `a.len() == b.len()`.
+#[target_feature(enable = "avx512f,avx512bw,avx512vpopcntdq")]
+unsafe fn xor_popcount_vpopcnt(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc = _mm512_setzero_si512();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(xor_load_512(pa, pb, i)));
+        i += 8;
+    }
+    if i < n {
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(xor_load_tail_512(pa, pb, i, n - i)));
+    }
+    hsum_512(acc) as u32
+}
+
+/// The `vpopcntq` block primitive: fused at **every** plane length.
+/// Each chain's accumulator holds u64 lane sums (cannot saturate), and
+/// the masked tail load removes the scalar word tail, so long planes need
+/// no separate Harley–Seal arm — `vpopcntq` already pays exactly one
+/// popcount per vector. Widths beyond `MAX_K` (no serving shape uses
+/// them) take a pairwise pass so the accumulator array stays fixed.
+///
+/// # Safety
+/// Requires AVX-512F+BW+VPOPCNTDQ; contract as in
+/// [`scalar::block_counts`].
+#[target_feature(enable = "avx512f,avx512bw,avx512vpopcntdq")]
+unsafe fn block_counts_vpopcnt(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block.first().map_or(0, |c| c.len());
+    debug_assert_eq!(counts.len(), x_block.len() * kw * kx);
+    if kw == 0 || kx == 0 {
+        return;
+    }
+    if kw > MAX_K || kx > MAX_K {
+        for (j, xj) in x_block.iter().enumerate() {
+            for (t, wt) in w.iter().enumerate() {
+                for (s, xs) in xj.iter().enumerate() {
+                    counts[(j * kw + t) * kx + s] += xor_popcount_vpopcnt(wt, xs);
+                }
+            }
+        }
+        return;
+    }
+    let cols_per_chunk = (FUSED_MAX_CHAINS / (kw * kx)).max(1);
+    let mut j0 = 0;
+    while j0 < x_block.len() {
+        let jb = cols_per_chunk.min(x_block.len() - j0);
+        block_counts_vpopcnt_chunk(
+            w,
+            &x_block[j0..j0 + jb],
+            &mut counts[j0 * kw * kx..(j0 + jb) * kw * kx],
+        );
+        j0 += jb;
+    }
+}
+
+/// One fused chunk of the `vpopcntq` arm: every (column, w-plane,
+/// x-plane) chain gets a dedicated u64-lane accumulator; one pass over
+/// the word vectors loads each weight vector once per word index and each
+/// activation vector once per column-plane, XORs, lane-popcounts, and
+/// accumulates. The horizontal reduce is paid once per chain at the end.
+///
+/// # Safety
+/// Requires AVX-512F+BW+VPOPCNTDQ; contract as in
+/// [`scalar::block_counts`], with `x_block.len() · k_w · k_x ≤
+/// FUSED_ACC_SLOTS` and widths ≤ `MAX_K`.
+#[target_feature(enable = "avx512f,avx512bw,avx512vpopcntdq")]
+unsafe fn block_counts_vpopcnt_chunk(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block[0].len();
+    let wpp = w[0].len();
+    debug_assert!(x_block.len() * kw * kx <= FUSED_ACC_SLOTS);
+    let mut acc = [_mm512_setzero_si512(); FUSED_ACC_SLOTS];
+    let mut i = 0usize;
+    while i + 8 <= wpp {
+        let mut wv = [_mm512_setzero_si512(); MAX_K];
+        for (t, wt) in w.iter().enumerate() {
+            wv[t] = _mm512_loadu_si512(wt.as_ptr().add(i) as *const _);
+        }
+        for (j, xj) in x_block.iter().enumerate() {
+            for (s, xs) in xj.iter().enumerate() {
+                let xv = _mm512_loadu_si512(xs.as_ptr().add(i) as *const _);
+                for (t, &wt) in wv.iter().enumerate().take(kw) {
+                    let c = (j * kw + t) * kx + s;
+                    acc[c] = _mm512_add_epi64(
+                        acc[c],
+                        _mm512_popcnt_epi64(_mm512_xor_si512(wt, xv)),
+                    );
+                }
+            }
+        }
+        i += 8;
+    }
+    if i < wpp {
+        let rem = wpp - i;
+        let mask: __mmask8 = (1u8 << rem) - 1;
+        let mut wv = [_mm512_setzero_si512(); MAX_K];
+        for (t, wt) in w.iter().enumerate() {
+            wv[t] = _mm512_maskz_loadu_epi64(mask, wt.as_ptr().add(i) as *const i64);
+        }
+        for (j, xj) in x_block.iter().enumerate() {
+            for (s, xs) in xj.iter().enumerate() {
+                let xv = _mm512_maskz_loadu_epi64(mask, xs.as_ptr().add(i) as *const i64);
+                for (t, &wt) in wv.iter().enumerate().take(kw) {
+                    let c = (j * kw + t) * kx + s;
+                    acc[c] = _mm512_add_epi64(
+                        acc[c],
+                        _mm512_popcnt_epi64(_mm512_xor_si512(wt, xv)),
+                    );
+                }
+            }
+        }
+    }
+    for c in 0..x_block.len() * kw * kx {
+        counts[c] += hsum_512(acc[c]) as u32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The LUT arm (avx512f + avx512bw, no vpopcntdq).
+// ---------------------------------------------------------------------------
+
+/// Byte-wise popcount of a 512-bit vector via the `vpshufb` nibble LUT
+/// (the 16-byte table broadcast to all four 128-bit lanes).
+///
+/// # Safety
+/// Requires AVX-512F+BW.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn popcount8_512(v: __m512i) -> __m512i {
+    #[rustfmt::skip]
+    let lut = _mm512_broadcast_i32x4(_mm_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    ));
+    let mask = _mm512_set1_epi8(0x0f);
+    let lo = _mm512_and_si512(v, mask);
+    let hi = _mm512_and_si512(_mm512_srli_epi16::<4>(v), mask);
+    _mm512_add_epi8(_mm512_shuffle_epi8(lut, lo), _mm512_shuffle_epi8(lut, hi))
+}
+
+/// Carry-save adder: compresses three bit streams into (carry, sum).
+/// One `vpternlogq` per output — majority (imm 0xE8) for the carry,
+/// three-way XOR (imm 0x96) for the sum — versus AVX2's five logic ops.
+///
+/// # Safety
+/// Requires AVX-512F.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn csa_512(a: __m512i, b: __m512i, c: __m512i) -> (__m512i, __m512i) {
+    let h = _mm512_ternarylogic_epi64::<0xE8>(a, b, c);
+    let l = _mm512_ternarylogic_epi64::<0x96>(a, b, c);
+    (h, l)
+}
+
+/// Popcount the bytes of `v` and add the per-64-bit-lane sums into `acc`.
+///
+/// # Safety
+/// Requires AVX-512F+BW.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn accumulate_sad_512(acc: __m512i, v: __m512i) -> __m512i {
+    _mm512_add_epi64(acc, _mm512_sad_epu8(popcount8_512(v), _mm512_setzero_si512()))
+}
+
+/// One-pair XOR-popcount of the LUT arm: Harley–Seal carry-save main loop
+/// (32 words = 4 zmm per iteration) for long planes, LUT + `vpsadbw` loop
+/// for whole 512-bit vectors, masked-load fold for the word tail. The
+/// long-plane arm of the LUT block primitive, and its fallback for bit
+/// widths beyond `MAX_K`.
+///
+/// # Safety
+/// Requires AVX-512F+BW; `a.len() == b.len()`.
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn xor_popcount_lut(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut i = 0usize;
+    let mut total_v = _mm512_setzero_si512();
+    if n >= HARLEY_SEAL_MIN_WORDS {
+        // Main loop: 32 words (4 zmm vectors) per iteration. Two CSA
+        // levels fold the four XOR vectors plus the carried ones/twos
+        // state so only the `fours` vector is byte-popcounted per
+        // iteration (¼ of the popcount work).
+        let mut ones = _mm512_setzero_si512();
+        let mut twos = _mm512_setzero_si512();
+        let mut fours_acc = _mm512_setzero_si512();
+        while i + 32 <= n {
+            let (twos_a, ones1) =
+                csa_512(ones, xor_load_512(pa, pb, i), xor_load_512(pa, pb, i + 8));
+            let (twos_b, ones2) =
+                csa_512(ones1, xor_load_512(pa, pb, i + 16), xor_load_512(pa, pb, i + 24));
+            let (fours, twos1) = csa_512(twos, twos_a, twos_b);
+            ones = ones2;
+            twos = twos1;
+            fours_acc = accumulate_sad_512(fours_acc, fours);
+            i += 32;
+        }
+        // Flush the carried state with its binary weights:
+        // 4·fours + 2·twos + 1·ones, all still as u64×8 lane sums.
+        let twos_acc = accumulate_sad_512(_mm512_setzero_si512(), twos);
+        let ones_acc = accumulate_sad_512(_mm512_setzero_si512(), ones);
+        total_v = _mm512_add_epi64(
+            _mm512_slli_epi64::<2>(fours_acc),
+            _mm512_add_epi64(_mm512_slli_epi64::<1>(twos_acc), ones_acc),
+        );
+    }
+    // Whole vectors (the tail of the HS loop), weight 1.
+    while i + 8 <= n {
+        total_v = accumulate_sad_512(total_v, xor_load_512(pa, pb, i));
+        i += 8;
+    }
+    // Masked word tail, still in vector form (zero lanes count zero).
+    if i < n {
+        total_v = accumulate_sad_512(total_v, xor_load_tail_512(pa, pb, i, n - i));
+    }
+    hsum_512(total_v) as u32
+}
+
+/// The LUT-arm block primitive: fused short-plane kernel (columns chunked
+/// to the chain budget) or per-pair Harley–Seal passes for long planes,
+/// mirroring the AVX2 structure at twice the width. Widths beyond `MAX_K`
+/// take the pairwise arm unconditionally so the fused kernel's
+/// accumulator array stays fixed.
+///
+/// # Safety
+/// Requires AVX-512F+BW; contract as in [`scalar::block_counts`].
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn block_counts_lut(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block.first().map_or(0, |c| c.len());
+    let wpp = w.first().map_or(0, |p| p.len());
+    debug_assert_eq!(counts.len(), x_block.len() * kw * kx);
+    if kw == 0 || kx == 0 {
+        return;
+    }
+    if wpp >= HARLEY_SEAL_MIN_WORDS || kw > MAX_K || kx > MAX_K {
+        for (j, xj) in x_block.iter().enumerate() {
+            for (t, wt) in w.iter().enumerate() {
+                for (s, xs) in xj.iter().enumerate() {
+                    counts[(j * kw + t) * kx + s] += xor_popcount_lut(wt, xs);
+                }
+            }
+        }
+        return;
+    }
+    let cols_per_chunk = (FUSED_MAX_CHAINS / (kw * kx)).max(1);
+    let mut j0 = 0;
+    while j0 < x_block.len() {
+        let jb = cols_per_chunk.min(x_block.len() - j0);
+        block_counts_lut_short(
+            w,
+            &x_block[j0..j0 + jb],
+            &mut counts[j0 * kw * kx..(j0 + jb) * kw * kx],
+        );
+        j0 += jb;
+    }
+}
+
+/// The LUT arm's fused short-plane block kernel: every (column, w-plane,
+/// x-plane) chain gets a dedicated `u8`-lane accumulator; one pass over
+/// the word vectors loads each weight vector once per word index, XORs,
+/// and byte-accumulates the nibble-LUT popcounts. The `vpsadbw` fold +
+/// horizontal sum are paid once per chain at the end, never inside the
+/// word loop.
+///
+/// # Safety
+/// Requires AVX-512F+BW; contract as in [`scalar::block_counts`], with
+/// `x_block.len() · k_w · k_x ≤ FUSED_ACC_SLOTS`, widths ≤ `MAX_K`, and
+/// planes shorter than `HARLEY_SEAL_MIN_WORDS` (u8 lanes must not
+/// saturate: ≤ 7 vectors · 8 = 56 < 256).
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn block_counts_lut_short(w: &[&[u64]], x_block: &[&[&[u64]]], counts: &mut [u32]) {
+    let kw = w.len();
+    let kx = x_block[0].len();
+    let wpp = w[0].len();
+    debug_assert!(x_block.len() * kw * kx <= FUSED_ACC_SLOTS);
+    debug_assert!(wpp < HARLEY_SEAL_MIN_WORDS);
+    let mut acc8 = [_mm512_setzero_si512(); FUSED_ACC_SLOTS];
+    let mut i = 0usize;
+    while i + 8 <= wpp {
+        let mut wv = [_mm512_setzero_si512(); MAX_K];
+        for (t, wt) in w.iter().enumerate() {
+            wv[t] = _mm512_loadu_si512(wt.as_ptr().add(i) as *const _);
+        }
+        for (j, xj) in x_block.iter().enumerate() {
+            for (s, xs) in xj.iter().enumerate() {
+                let xv = _mm512_loadu_si512(xs.as_ptr().add(i) as *const _);
+                for (t, &wt) in wv.iter().enumerate().take(kw) {
+                    let c = (j * kw + t) * kx + s;
+                    acc8[c] = _mm512_add_epi8(acc8[c], popcount8_512(_mm512_xor_si512(wt, xv)));
+                }
+            }
+        }
+        i += 8;
+    }
+    // Per-chain fold (the only vpsadbw + hsum of the whole block) plus
+    // the scalar word tail.
+    let tail = i;
+    for (j, xj) in x_block.iter().enumerate() {
+        for (t, wt) in w.iter().enumerate() {
+            for (s, xs) in xj.iter().enumerate() {
+                let c = (j * kw + t) * kx + s;
+                let mut total = hsum_512(_mm512_sad_epu8(acc8[c], _mm512_setzero_si512()));
+                for ii in tail..wpp {
+                    total += u64::from((wt[ii] ^ xs[ii]).count_ones());
+                }
+                counts[c] += total as u32;
+            }
+        }
+    }
+}

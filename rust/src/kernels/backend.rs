@@ -36,6 +36,11 @@
 //!   nibble-LUT popcount and per-chain byte accumulators on short planes;
 //!   Harley–Seal carry-save pairwise passes on long planes
 //!   ([`super::avx2`]).
+//! * [`Kernel::Avx512`] — x86_64 AVX-512: two arms behind runtime
+//!   detection — native `vpopcntq` lane popcount on `avx512vpopcntdq`
+//!   hardware (fused at every plane length), or a 512-bit `vpshufb`
+//!   nibble-LUT + `vpsadbw` fallback on `avx512f+avx512bw` with a
+//!   Harley–Seal pass for long planes ([`super::avx512`]).
 //! * [`Kernel::Neon`] — aarch64 NEON: fused block kernel with `vcntq_u8`
 //!   byte popcount, `u8`-block accumulation, widening fold per chain
 //!   ([`super::neon`]).
@@ -44,10 +49,10 @@
 //!
 //! 1. an explicit choice via [`force`] — `amq serve --kernel` or the
 //!    `server.kernel` config key;
-//! 2. the `AMQ_KERNEL` environment variable (`scalar|avx2|neon|auto`);
-//! 3. runtime feature detection ([`Kernel::detect`]):
-//!    `is_x86_feature_detected!("avx2")` on x86_64, NEON (baseline) on
-//!    aarch64, scalar elsewhere.
+//! 2. the `AMQ_KERNEL` environment variable
+//!    (`scalar|avx2|avx512|neon|auto`);
+//! 3. runtime feature detection ([`Kernel::detect`]): AVX-512 before
+//!    AVX2 on x86_64, NEON (baseline) on aarch64, scalar elsewhere.
 //!
 //! Adding a backend: add an enum variant + `is_available` arm, implement
 //! **one function** — `block_counts(w, x_block, counts)` — in a new
@@ -62,6 +67,8 @@ use super::scalar;
 
 #[cfg(target_arch = "x86_64")]
 use super::avx2;
+#[cfg(target_arch = "x86_64")]
+use super::avx512;
 #[cfg(target_arch = "aarch64")]
 use super::neon;
 
@@ -82,6 +89,9 @@ pub enum Kernel {
     /// x86_64 AVX2 (`vpshufb` LUT popcount; fused block kernel on short
     /// planes, Harley–Seal on long ones).
     Avx2,
+    /// x86_64 AVX-512 (`vpopcntq` arm on `avx512vpopcntdq` hardware, a
+    /// 512-bit LUT + Harley–Seal arm on `avx512f+avx512bw`).
+    Avx512,
     /// aarch64 NEON (`vcntq_u8` fused block kernel).
     Neon,
 }
@@ -91,6 +101,7 @@ impl Kernel {
         match self {
             Kernel::Scalar => "scalar",
             Kernel::Avx2 => "avx2",
+            Kernel::Avx512 => "avx512",
             Kernel::Neon => "neon",
         }
     }
@@ -102,6 +113,8 @@ impl Kernel {
             Kernel::Scalar => true,
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx512 => avx512::have_avx512(),
             #[cfg(target_arch = "aarch64")]
             Kernel::Neon => true, // NEON is baseline on aarch64
             #[allow(unreachable_patterns)]
@@ -111,15 +124,19 @@ impl Kernel {
 
     /// Every backend this host can run, scalar first.
     pub fn available() -> Vec<Kernel> {
-        [Kernel::Scalar, Kernel::Avx2, Kernel::Neon]
+        [Kernel::Scalar, Kernel::Avx2, Kernel::Avx512, Kernel::Neon]
             .into_iter()
             .filter(|k| k.is_available())
             .collect()
     }
 
-    /// The best backend runtime detection finds on this host.
+    /// The best backend runtime detection finds on this host. AVX-512
+    /// outranks AVX2: even the LUT arm doubles the vector width with the
+    /// same per-vector op count, and the `vpopcntq` arm beats both.
     pub fn detect() -> Kernel {
-        if Kernel::Avx2.is_available() {
+        if Kernel::Avx512.is_available() {
+            Kernel::Avx512
+        } else if Kernel::Avx2.is_available() {
             Kernel::Avx2
         } else if Kernel::Neon.is_available() {
             Kernel::Neon
@@ -167,22 +184,57 @@ impl std::str::FromStr for Kernel {
         let k = match s.trim().to_ascii_lowercase().as_str() {
             "scalar" => Kernel::Scalar,
             "avx2" => Kernel::Avx2,
+            "avx512" => Kernel::Avx512,
             "neon" => Kernel::Neon,
             other => {
                 return Err(format!(
-                    "unknown kernel '{other}' (scalar|avx2|neon|auto)"
+                    "unknown kernel '{other}' (scalar|avx2|avx512|neon|auto)"
                 ))
             }
         };
         if !k.is_available() {
             let have: Vec<&str> = Kernel::available().iter().map(|k| k.name()).collect();
+            let hint = match k {
+                Kernel::Avx512 => " (needs avx512f+avx512bw)",
+                _ => "",
+            };
             return Err(format!(
-                "kernel '{}' is not available on this host (available: {})",
+                "kernel '{}' is not available on this host{} (available: {})",
                 k.name(),
+                hint,
                 have.join(", ")
             ));
         }
         Ok(k)
+    }
+}
+
+/// Which AVX-512 arm this host would run: `Some("vpopcntq")` on
+/// `avx512vpopcntdq` hardware, `Some("lut")` with only `avx512f+avx512bw`,
+/// `None` when the backend is unavailable. Startup lines and the bench
+/// JSONs record it so "which arm ran" is never a guess.
+pub fn avx512_arm() -> Option<&'static str> {
+    if !Kernel::Avx512.is_available() {
+        return None;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512::have_vpopcntdq() {
+            return Some("vpopcntq");
+        }
+        return Some("lut");
+    }
+    #[allow(unreachable_code)]
+    None
+}
+
+/// Human-readable backend descriptor for startup lines and STATS:
+/// the plain name, except `avx512` which carries its active arm
+/// (`avx512(vpopcntq)` / `avx512(lut)`).
+pub fn describe(k: Kernel) -> String {
+    match (k, avx512_arm()) {
+        (Kernel::Avx512, Some(arm)) => format!("avx512({arm})"),
+        _ => k.name().to_string(),
     }
 }
 
@@ -197,6 +249,8 @@ pub fn cpu_features() -> Vec<&'static str> {
             ("popcnt", is_x86_feature_detected!("popcnt")),
             ("avx2", is_x86_feature_detected!("avx2")),
             ("avx512f", is_x86_feature_detected!("avx512f")),
+            ("avx512bw", is_x86_feature_detected!("avx512bw")),
+            ("avx512vpopcntdq", is_x86_feature_detected!("avx512vpopcntdq")),
         ] {
             if have {
                 f.push(name);
@@ -224,6 +278,7 @@ fn code(k: Kernel) -> u8 {
         Kernel::Scalar => 1,
         Kernel::Avx2 => 2,
         Kernel::Neon => 3,
+        Kernel::Avx512 => 4,
     }
 }
 
@@ -232,6 +287,7 @@ fn from_code(c: u8) -> Option<Kernel> {
         1 => Some(Kernel::Scalar),
         2 => Some(Kernel::Avx2),
         3 => Some(Kernel::Neon),
+        4 => Some(Kernel::Avx512),
         _ => None,
     }
 }
@@ -302,10 +358,44 @@ pub(crate) fn block_counts(
         Kernel::Scalar => scalar::block_counts(w, x_block, counts),
         #[cfg(target_arch = "x86_64")]
         Kernel::Avx2 => avx2::block_counts(w, x_block, counts),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx512 => avx512::block_counts(w, x_block, counts),
         #[cfg(target_arch = "aarch64")]
         Kernel::Neon => neon::block_counts(w, x_block, counts),
         #[allow(unreachable_patterns)]
         _ => scalar::block_counts(w, x_block, counts),
+    }
+}
+
+/// Test-only hooks. `#[doc(hidden)]` — not API; the parity suite uses
+/// them to drive each AVX-512 arm explicitly (integration tests cannot
+/// force the LUT arm on `vpopcntdq` hardware through the public seam).
+#[doc(hidden)]
+pub mod testing {
+    /// Run one specific AVX-512 arm (`"vpopcntq"` / `"lut"`) against the
+    /// block-counts contract. Returns `false` — leaving `counts`
+    /// untouched — when this host cannot run the requested arm, so
+    /// callers can skip-with-notice.
+    pub fn avx512_block_counts_arm(
+        arm: &str,
+        w: &[&[u64]],
+        x_block: &[&[&[u64]]],
+        counts: &mut [u32],
+    ) -> bool {
+        let vpopcnt = match arm {
+            "vpopcntq" => true,
+            "lut" => false,
+            _ => return false,
+        };
+        #[cfg(target_arch = "x86_64")]
+        {
+            super::avx512::block_counts_arm(vpopcnt, w, x_block, counts)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (vpopcnt, w, x_block, counts);
+            false
+        }
     }
 }
 
@@ -335,16 +425,51 @@ mod tests {
         assert_eq!(Kernel::parse_choice("scalar").unwrap(), Some(Kernel::Scalar));
         assert!("wat".parse::<Kernel>().is_err());
         // Named-but-unavailable backends must error, not silently remap.
-        for k in [Kernel::Avx2, Kernel::Neon] {
+        for k in [Kernel::Avx2, Kernel::Avx512, Kernel::Neon] {
             if !k.is_available() {
                 assert!(k.name().parse::<Kernel>().is_err(), "{k}");
             }
         }
     }
 
+    /// The satellite error-path contract: forcing `avx512` on a host
+    /// without it must be a clear, actionable parse error (what's
+    /// missing + what's available) — the strict `FromStr` is exactly
+    /// what `amq serve --kernel avx512` hits at startup, so old hardware
+    /// gets a message, never a SIGILL. `parse_choice` must carry the
+    /// same error, and on supporting hosts both must succeed.
+    #[test]
+    fn avx512_unavailable_is_a_clear_error_not_a_sigill() {
+        if Kernel::Avx512.is_available() {
+            assert_eq!("avx512".parse::<Kernel>().unwrap(), Kernel::Avx512);
+            assert_eq!(Kernel::parse_choice("avx512").unwrap(), Some(Kernel::Avx512));
+            assert!(avx512_arm().is_some());
+            return;
+        }
+        let err = "avx512".parse::<Kernel>().unwrap_err();
+        assert!(err.contains("not available"), "{err}");
+        assert!(err.contains("avx512f+avx512bw"), "{err}");
+        assert!(err.contains("available: "), "{err}");
+        assert!(err.contains("scalar"), "{err}");
+        let err2 = Kernel::parse_choice("avx512").unwrap_err();
+        assert_eq!(err, err2);
+        assert_eq!(avx512_arm(), None);
+        // And even a misused raw variant degrades to scalar counts, not
+        // a SIGILL: resolve() plus the in-backend runtime re-check.
+        assert_eq!(Kernel::Avx512.resolve(), Kernel::Scalar);
+        let w_plane = [0u64; 4];
+        let x_plane = [u64::MAX; 4];
+        let w: [&[u64]; 1] = [&w_plane];
+        let col: [&[u64]; 1] = [&x_plane];
+        let block: [&[&[u64]]; 1] = [&col];
+        let mut got = [0u32; 1];
+        block_counts(Kernel::Avx512, &w, &block, &mut got);
+        assert_eq!(got[0], 256);
+    }
+
     #[test]
     fn unavailable_resolves_to_scalar() {
-        for k in [Kernel::Avx2, Kernel::Neon] {
+        for k in [Kernel::Avx2, Kernel::Avx512, Kernel::Neon] {
             if !k.is_available() {
                 assert_eq!(k.resolve(), Kernel::Scalar);
             }
@@ -362,8 +487,35 @@ mod tests {
         if Kernel::Avx2.is_available() {
             assert!(f.contains(&"avx2"));
         }
+        if Kernel::Avx512.is_available() {
+            assert!(f.contains(&"avx512f"));
+            assert!(f.contains(&"avx512bw"));
+        }
         if Kernel::Neon.is_available() {
             assert!(f.contains(&"neon"));
+        }
+    }
+
+    /// `describe` carries the active AVX-512 arm; the arm is consistent
+    /// with `cpu_features` and availability.
+    #[test]
+    fn describe_and_arm_are_consistent() {
+        assert_eq!(describe(Kernel::Scalar), "scalar");
+        assert_eq!(describe(Kernel::Avx2), "avx2");
+        match avx512_arm() {
+            Some("vpopcntq") => {
+                assert!(cpu_features().contains(&"avx512vpopcntdq"));
+                assert_eq!(describe(Kernel::Avx512), "avx512(vpopcntq)");
+            }
+            Some("lut") => {
+                assert!(!cpu_features().contains(&"avx512vpopcntdq"));
+                assert_eq!(describe(Kernel::Avx512), "avx512(lut)");
+            }
+            Some(other) => panic!("unexpected arm {other}"),
+            None => {
+                assert!(!Kernel::Avx512.is_available());
+                assert_eq!(describe(Kernel::Avx512), "avx512");
+            }
         }
     }
 

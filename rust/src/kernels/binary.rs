@@ -25,6 +25,7 @@
 
 use crate::exec::{Exec, SendPtr};
 use crate::kernels::backend::{self, Kernel, MAX_K};
+use crate::kernels::cost;
 use crate::model::batch::OutputBatch;
 use crate::quant::{alternating, Method, Quantized, QuantizedBatch, RowQuantized};
 
@@ -99,6 +100,10 @@ pub struct PreparedGemm {
     data: Vec<u64>,
     alphas: Vec<f32>, // rows * k
     kernel: Kernel,
+    /// L2 byte budget the batched driver sizes its column tiles against
+    /// ([`cost::l2_bytes`] at construction; overridable per instance for
+    /// tests/benches via [`Self::set_l2_budget`]).
+    l2_budget: usize,
 }
 
 /// Historical name of [`PreparedGemm`] from the single-vector era; the
@@ -116,6 +121,19 @@ const GEMM_BLOCK: usize = 4;
 /// correctness never depends on the partition (each output element has
 /// exactly one producer).
 const GEMM_MIN_ROWS_PER_TASK: usize = 1;
+
+/// Byte cap on the next-row software prefetch: enough to cover the packed
+/// planes of every serving shape (W2 at 1024 cols = 256 bytes per row),
+/// small enough not to flood the L1 fill buffers on huge-row matrices
+/// where the hardware streamer takes over anyway.
+const PREFETCH_ROW_MAX_BYTES: usize = 4096;
+
+/// The batch-tile width serving would use for a `cols`-column layer with
+/// `k_x`-bit activations, at the process-wide L2 budget — the number the
+/// `amq serve` startup line and STATS report (see [`cost::tile_cols`]).
+pub fn serving_tile_cols(cols: usize, k_x: usize) -> usize {
+    cost::tile_cols(cols.div_ceil(64), k_x, cost::l2_bytes(), GEMM_BLOCK)
+}
 
 impl PreparedGemm {
     /// Build on the process-wide active backend ([`backend::active`]).
@@ -139,6 +157,7 @@ impl PreparedGemm {
             data,
             alphas: w.alphas.clone(),
             kernel: kernel.resolve(),
+            l2_budget: cost::l2_bytes(),
         }
     }
 
@@ -189,6 +208,7 @@ impl PreparedGemm {
             data,
             alphas,
             kernel: backend::active().resolve(),
+            l2_budget: cost::l2_bytes(),
         })
     }
 
@@ -213,6 +233,28 @@ impl PreparedGemm {
     /// bit-identical — only wall time changes.
     pub fn set_kernel(&mut self, kernel: Kernel) {
         self.kernel = kernel.resolve();
+    }
+
+    /// The L2 byte budget the batched driver tiles against.
+    pub fn l2_budget(&self) -> usize {
+        self.l2_budget
+    }
+
+    /// Override the tile budget (tests/benches — e.g. `usize::MAX` forces
+    /// a single tile, tiny values force many). Outputs stay bit-identical
+    /// at any budget: tiling only reorders whole output elements, each of
+    /// which is produced by exactly one `block_counts` call and one
+    /// element-local float reduction. Only wall time changes.
+    pub fn set_l2_budget(&mut self, bytes: usize) {
+        self.l2_budget = bytes.max(1);
+    }
+
+    /// Batch-tile width (columns) the batched driver uses for activations
+    /// of depth `k_x`: wide enough to amortize the weight stream, narrow
+    /// enough that the tile's packed activation planes stay L2-resident
+    /// (see [`cost::tile_cols`]).
+    pub fn tile_cols(&self, k_x: usize) -> usize {
+        cost::tile_cols(self.words_per_plane, k_x, self.l2_budget, GEMM_BLOCK)
     }
 
     /// The plane slices of row `r`, gathered into `wp[..k]`.
@@ -302,11 +344,13 @@ impl PreparedGemm {
     /// Batched XNOR/popcount GEMM: `Y[b] = Ŵ x̂[b]` for every column of the
     /// batch, `y` row-major `batch × rows` (serial engine).
     ///
-    /// All batch blocks of a weight row complete before the next row is
-    /// touched, so the packed weight planes stream from memory **once per
-    /// batch** — the concatenated layout of Fig. 3 (right). Each output is
-    /// reduced in exactly the order of [`Self::gemv`], so `gemm` bit-matches
-    /// `gemv` column by column.
+    /// All batch blocks of a weight row's **tile** complete before the next
+    /// row is touched, so the packed weight planes stream from memory once
+    /// per L2-sized batch tile — one tile covers the whole batch at serving
+    /// sizes, the concatenated layout of Fig. 3 (right) — while the tile's
+    /// activation planes stay cache-resident. Each output is reduced in
+    /// exactly the order of [`Self::gemv`], so `gemm` bit-matches `gemv`
+    /// column by column at any tile size.
     pub fn gemm(&self, x: &QuantizedBatch, y: &mut [f32]) {
         self.gemm_exec(x, y, &Exec::serial());
     }
@@ -327,48 +371,93 @@ impl PreparedGemm {
         });
     }
 
-    /// The one batched driver, over output rows `r0..r1`: for each weight
-    /// row, hand `GEMM_BLOCK`-column blocks to the fused count primitive
-    /// and run the shared float reduction. Writes only indices
-    /// `y[b·rows + r]` with `r ∈ [r0, r1)` — the disjoint-write contract
-    /// of the row sharding.
+    /// Prefetch the leading packed bytes of row `r`'s planes (capped at
+    /// [`PREFETCH_ROW_MAX_BYTES`]) so the next row's weight stream is
+    /// already in flight while the current row computes. x86_64 only
+    /// (`prefetcht0` is baseline SSE there); a no-op elsewhere. Purely a
+    /// hint — no architectural effect, so correctness is untouched.
+    #[inline]
+    fn prefetch_row_planes(&self, r: usize, r_end: usize) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if r >= r_end {
+                return;
+            }
+            use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            let wpp = self.words_per_plane;
+            let row = &self.data[r * self.k * wpp..(r + 1) * self.k * wpp];
+            let bytes = (row.len() * 8).min(PREFETCH_ROW_MAX_BYTES);
+            let base = row.as_ptr() as *const i8;
+            let mut off = 0usize;
+            while off < bytes {
+                // SAFETY: off < bytes ≤ the row slice's byte length, so the
+                // address is in-bounds; prefetch reads nothing architecturally.
+                unsafe { _mm_prefetch::<_MM_HINT_T0>(base.add(off)) };
+                off += 64;
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (r, r_end);
+        }
+    }
+
+    /// The one batched driver, over output rows `r0..r1`, **column-tiled**:
+    /// the batch is cut into [`Self::tile_cols`]-wide tiles whose packed
+    /// activation planes fit (half) the L2 budget; within a tile, each
+    /// weight row's planes are loaded once, prefetching the next row's,
+    /// and `GEMM_BLOCK`-column blocks go to the fused count primitive
+    /// followed by the shared float reduction. At serving batch sizes the
+    /// whole batch is one tile and the loop is identical to the untiled
+    /// driver; at large batches the tile keeps activations cache-resident
+    /// instead of re-streaming them from DRAM once per row. Bit-exact at
+    /// any tile size: tiling only reorders whole output elements. Writes
+    /// only indices `y[b·rows + r]` with `r ∈ [r0, r1)` — the
+    /// disjoint-write contract of the row sharding.
     fn gemm_rows(&self, x: &QuantizedBatch, out: &SendPtr<f32>, r0: usize, r1: usize) {
         let (kw, kx) = (self.k, x.k);
         let n = self.cols as i32;
+        let tile = self.tile_cols(kx);
         let mut wp: [&[u64]; MAX_K] = [&[]; MAX_K];
         let mut counts = [0u32; GEMM_BLOCK * MAX_K * MAX_K];
-        for r in r0..r1 {
-            self.row_planes(r, &mut wp);
-            let mut b0 = 0;
-            while b0 < x.batch {
-                let bb = GEMM_BLOCK.min(x.batch - b0);
-                // Per-column plane slices of this batch block.
-                let mut planes: [[&[u64]; MAX_K]; GEMM_BLOCK] = [[&[]; MAX_K]; GEMM_BLOCK];
-                for (j, pj) in planes.iter_mut().enumerate().take(bb) {
-                    for (s, slot) in pj.iter_mut().enumerate().take(kx) {
-                        *slot = x.plane_words(b0 + j, s);
-                    }
-                }
-                let cols: [&[&[u64]]; GEMM_BLOCK] = std::array::from_fn(|j| &planes[j][..kx]);
-                let cnt = &mut counts[..bb * kw * kx];
-                cnt.fill(0);
-                backend::block_counts(self.kernel, &wp[..kw], &cols[..bb], cnt);
-                for j in 0..bb {
-                    let b = b0 + j;
-                    let mut acc = 0.0f32;
-                    for t in 0..kw {
-                        let mut inner = 0.0f32;
-                        let row_c = &cnt[(j * kw + t) * kx..(j * kw + t + 1) * kx];
-                        for (s, &c) in row_c.iter().enumerate() {
-                            inner += x.alpha(b, s) * (n - 2 * c as i32) as f32;
+        let mut c0 = 0usize;
+        while c0 < x.batch {
+            let c1 = (c0 + tile).min(x.batch);
+            for r in r0..r1 {
+                self.row_planes(r, &mut wp);
+                self.prefetch_row_planes(r + 1, r1);
+                let mut b0 = c0;
+                while b0 < c1 {
+                    let bb = GEMM_BLOCK.min(c1 - b0);
+                    // Per-column plane slices of this batch block.
+                    let mut planes: [[&[u64]; MAX_K]; GEMM_BLOCK] = [[&[]; MAX_K]; GEMM_BLOCK];
+                    for (j, pj) in planes.iter_mut().enumerate().take(bb) {
+                        for (s, slot) in pj.iter_mut().enumerate().take(kx) {
+                            *slot = x.plane_words(b0 + j, s);
                         }
-                        acc += self.alphas[r * kw + t] * inner;
                     }
-                    // SAFETY: r ∈ [r0, r1) — this task's disjoint row range.
-                    unsafe { out.write(b * self.rows + r, acc) };
+                    let cols: [&[&[u64]]; GEMM_BLOCK] = std::array::from_fn(|j| &planes[j][..kx]);
+                    let cnt = &mut counts[..bb * kw * kx];
+                    cnt.fill(0);
+                    backend::block_counts(self.kernel, &wp[..kw], &cols[..bb], cnt);
+                    for j in 0..bb {
+                        let b = b0 + j;
+                        let mut acc = 0.0f32;
+                        for t in 0..kw {
+                            let mut inner = 0.0f32;
+                            let row_c = &cnt[(j * kw + t) * kx..(j * kw + t + 1) * kx];
+                            for (s, &c) in row_c.iter().enumerate() {
+                                inner += x.alpha(b, s) * (n - 2 * c as i32) as f32;
+                            }
+                            acc += self.alphas[r * kw + t] * inner;
+                        }
+                        // SAFETY: r ∈ [r0, r1) — this task's disjoint row range.
+                        unsafe { out.write(b * self.rows + r, acc) };
+                    }
+                    b0 += bb;
                 }
-                b0 += bb;
             }
+            c0 = c1;
         }
     }
 
@@ -635,10 +724,60 @@ mod tests {
         }
     }
 
+    /// Tiling is bit-neutral by construction: every budget — from one
+    /// tile per GEMM_BLOCK to a single tile for the whole batch — must
+    /// produce byte-identical outputs, on the serial and threaded paths.
+    #[test]
+    fn tiling_is_bit_neutral_across_budgets() {
+        let mut rng = Rng::new(109);
+        let (m, n, kw, kx) = (13, 200, 2, 2);
+        let w = rng.normal_vec(m * n, 0.3);
+        let wq = RowQuantized::quantize(&w, m, n, kw, Method::Alternating { t: 2 });
+        for batch in [1usize, 5, 17, 64] {
+            let xq = QuantizedBatch::quantize(&rng.normal_vec(batch * n, 1.0), batch, n, kx);
+            let mut reference = PreparedGemm::new(&wq);
+            reference.set_l2_budget(usize::MAX); // single tile
+            assert!(reference.tile_cols(kx) >= batch);
+            let mut want = vec![0.0f32; batch * m];
+            reference.gemm(&xq, &mut want);
+            for budget in [1usize, 64, 4096, 1 << 20] {
+                let mut prep = PreparedGemm::new(&wq);
+                prep.set_l2_budget(budget);
+                let mut got = vec![0.0f32; batch * m];
+                prep.gemm(&xq, &mut got);
+                assert_eq!(got, want, "budget={budget} batch={batch}");
+                let exec = Exec::new(crate::exec::ExecConfig::with_threads(3));
+                let mut got_mt = vec![0.0f32; batch * m];
+                prep.gemm_exec(&xq, &mut got_mt, &exec);
+                assert_eq!(got_mt, want, "threaded budget={budget} batch={batch}");
+            }
+        }
+    }
+
+    /// The instance tile width honors the budget override and matches the
+    /// cost-model helper the startup line reports.
+    #[test]
+    fn tile_cols_follows_the_budget() {
+        let wq = RowQuantized::quantize(&[0.5; 2 * 1024], 2, 1024, 2, Method::Greedy);
+        let mut prep = PreparedGemm::new(&wq);
+        assert_eq!(prep.tile_cols(2), cost::tile_cols(16, 2, prep.l2_budget(), GEMM_BLOCK));
+        prep.set_l2_budget(1); // degenerate: clamps to one GEMM_BLOCK
+        assert_eq!(prep.tile_cols(2), GEMM_BLOCK);
+        // 512 KB budget, 1024 cols (16 words), k_x=2: 256 KB / 256 B per
+        // column = 1024 columns per tile.
+        prep.set_l2_budget(512 * 1024);
+        assert_eq!(prep.tile_cols(2), 1024);
+        // serving_tile_cols is the same formula at the process-wide budget.
+        assert_eq!(
+            serving_tile_cols(1024, 2),
+            cost::tile_cols(16, 2, cost::l2_bytes(), GEMM_BLOCK)
+        );
+    }
+
     #[test]
     fn unavailable_kernel_resolves_to_scalar_on_construction() {
         let wq = RowQuantized::quantize(&[0.5; 12], 3, 4, 2, Method::Greedy);
-        for k in [Kernel::Avx2, Kernel::Neon] {
+        for k in [Kernel::Avx2, Kernel::Avx512, Kernel::Neon] {
             if !k.is_available() {
                 let prep = PreparedGemm::with_kernel(&wq, k);
                 assert_eq!(prep.kernel(), Kernel::Scalar);

@@ -74,17 +74,30 @@ pub fn memory_saving(m: u64, n: u64, k: u64) -> f64 {
 // ratio next to the measured one.
 // ---------------------------------------------------------------------------
 
-/// Words per plane at which the AVX2 backend switches the block primitive
-/// from the fused short-plane kernel to Harley–Seal pairwise passes.
-/// This is the **single source of truth**: `kernels::avx2` derives its
-/// `HARLEY_SEAL_MIN_WORDS` from it, so model and kernel cannot drift.
-/// Beyond it, fused and pairwise are the same AVX2 code path and the
-/// predicted advantage is 1. (NEON runs the fused kernel at every plane
-/// length — see [`fused_block_ratio`].)
+/// Words per plane at which the AVX2 backend — and the AVX-512 LUT arm —
+/// switch the block primitive from the fused short-plane kernel to
+/// Harley–Seal pairwise passes.
+/// This is the **single source of truth**: `kernels::avx2` and
+/// `kernels::avx512` derive their `HARLEY_SEAL_MIN_WORDS` from it, so
+/// model and kernel cannot drift. Beyond it, fused and pairwise are the
+/// same code path for those arms and the predicted advantage is 1. (NEON,
+/// and the AVX-512 `vpopcntq` arm, run the fused kernel at every plane
+/// length — see [`fused_block_ratio`] / [`fused_block_ratio_512`].)
 pub const FUSED_SHORT_PLANE_MAX_WORDS: u64 = 64;
+
+/// Fused-kernel chain budget (columns × k_w × k_x per chunk) of the
+/// AVX-512 backend. x86_64 with EVEX has **32 zmm registers** — twice
+/// AVX2's 16 ymm — so the 512-bit fused kernel can hold twice the chain
+/// accumulators (16) plus the held weight vectors, the LUT, and the mask
+/// in registers: W2A2 runs a full GEMM_BLOCK of 4 columns per chunk
+/// instead of AVX2's 2. `kernels::avx512` derives its `FUSED_MAX_CHAINS`
+/// from this constant so model and kernel cannot drift.
+pub const AVX512_FUSED_MAX_CHAINS: u64 = 16;
 
 /// 64-bit words per 256-bit SIMD vector.
 const WORDS_PER_VEC: u64 = 4;
+/// 64-bit words per 512-bit SIMD vector (the AVX-512 arms).
+const WORDS_PER_VEC_512: u64 = 8;
 /// Ops per chain per vector shared by both layouts: XOR + nibble-LUT byte
 /// popcount (mask, shift, mask, 2 shuffles, add) + byte accumulate.
 const CHAIN_OPS: u64 = 8;
@@ -94,12 +107,24 @@ const REDUCTION_OPS: u64 = 10;
 /// handling, accumulator init).
 const PASS_OVERHEAD_OPS: u64 = 8;
 
+/// [`pairwise_block_ops`] parameterized on the vector width.
+fn pairwise_block_ops_w(words: u64, k_w: u64, k_h: u64, b: u64, words_per_vec: u64) -> u64 {
+    let vecs = words.div_ceil(words_per_vec);
+    let chains = b * k_w * k_h;
+    chains * (vecs * (CHAIN_OPS + 2) + REDUCTION_OPS + PASS_OVERHEAD_OPS)
+}
+
+/// [`fused_block_ops`] parameterized on the vector width.
+fn fused_block_ops_w(words: u64, k_w: u64, k_h: u64, b: u64, words_per_vec: u64) -> u64 {
+    let vecs = words.div_ceil(words_per_vec);
+    let chains = b * k_w * k_h;
+    vecs * (k_w + b * k_h + chains * CHAIN_OPS) + chains * REDUCTION_OPS + PASS_OVERHEAD_OPS
+}
+
 /// SIMD-op estimate of the **pairwise** layout: every chain is an
 /// independent pass that reloads both planes and reduces on its own.
 pub fn pairwise_block_ops(words: u64, k_w: u64, k_h: u64, b: u64) -> u64 {
-    let vecs = words.div_ceil(WORDS_PER_VEC);
-    let chains = b * k_w * k_h;
-    chains * (vecs * (CHAIN_OPS + 2) + REDUCTION_OPS + PASS_OVERHEAD_OPS)
+    pairwise_block_ops_w(words, k_w, k_h, b, WORDS_PER_VEC)
 }
 
 /// SIMD-op estimate of the **fused** block layout: per vector index, k_w
@@ -107,9 +132,7 @@ pub fn pairwise_block_ops(words: u64, k_w: u64, k_h: u64, b: u64) -> u64 {
 /// weight plane; each chain still does its popcount pipeline, but folds
 /// and reduces once at the end of the block.
 pub fn fused_block_ops(words: u64, k_w: u64, k_h: u64, b: u64) -> u64 {
-    let vecs = words.div_ceil(WORDS_PER_VEC);
-    let chains = b * k_w * k_h;
-    vecs * (k_w + b * k_h + chains * CHAIN_OPS) + chains * REDUCTION_OPS + PASS_OVERHEAD_OPS
+    fused_block_ops_w(words, k_w, k_h, b, WORDS_PER_VEC)
 }
 
 /// Raw predicted ratio of the two layouts, with no plane-length cutoff —
@@ -131,6 +154,139 @@ pub fn fused_block_advantage(words: u64, k_w: u64, k_h: u64, b: u64) -> f64 {
         return 1.0;
     }
     fused_block_ratio(words, k_w, k_h, b)
+}
+
+/// [`fused_block_ratio`] for a 512-bit backend — the model for the
+/// AVX-512 `vpopcntq` arm, which runs the fused kernel at every plane
+/// length (u64-lane accumulators never saturate, masked loads kill the
+/// scalar tail, so there is no Harley–Seal cutoff).
+pub fn fused_block_ratio_512(words: u64, k_w: u64, k_h: u64, b: u64) -> f64 {
+    if k_w * k_h * b == 0 {
+        return 1.0;
+    }
+    pairwise_block_ops_w(words, k_w, k_h, b, WORDS_PER_VEC_512) as f64
+        / fused_block_ops_w(words, k_w, k_h, b, WORDS_PER_VEC_512) as f64
+}
+
+/// [`fused_block_advantage`] for the AVX-512 **LUT** arm, which mirrors
+/// the AVX2 structure: fused below [`FUSED_SHORT_PLANE_MAX_WORDS`],
+/// Harley–Seal pairwise at and above it (ratio exactly 1).
+pub fn fused_block_advantage_512(words: u64, k_w: u64, k_h: u64, b: u64) -> f64 {
+    if words >= FUSED_SHORT_PLANE_MAX_WORDS {
+        return 1.0;
+    }
+    fused_block_ratio_512(words, k_w, k_h, b)
+}
+
+// ---------------------------------------------------------------------------
+// Cache-tiling term: plane bytes vs L2 residency.
+//
+// `binary::PreparedGemm::gemm_rows` tiles the batch columns so that the
+// packed activation planes of one tile (tile_cols × k_x × words × 8
+// bytes) stay L2-resident while every weight row streams over them once.
+// Untiled, a matrix whose activation block exceeds L2 re-fetches the
+// activations from memory once per GEMM_BLOCK-column group; tiled, the
+// weights stream once per tile and the activations are read from cache.
+// The traffic model below predicts the DRAM-byte advantage so the bench
+// can print predicted-vs-measured next to each other.
+// ---------------------------------------------------------------------------
+
+/// Default L2 budget (bytes) when detection finds nothing: 512 KB is a
+/// conservative floor across the x86_64/aarch64 serving fleet.
+pub const DEFAULT_L2_BYTES: usize = 512 * 1024;
+
+/// Parse an `AMQ_L2_KB`-style override: a positive integer in KiB.
+pub fn parse_l2_kb(s: &str) -> Result<usize, String> {
+    match s.trim().parse::<usize>() {
+        Ok(kb) if kb > 0 => Ok(kb * 1024),
+        _ => Err(format!(
+            "invalid AMQ_L2_KB '{s}': expected a positive integer (KiB)"
+        )),
+    }
+}
+
+/// Read the per-core L2 size from Linux sysfs (`cache/index2/size`,
+/// e.g. "512K" / "1024K" / "2M"). Returns `None` off Linux or when the
+/// file is absent/unparseable.
+fn sysfs_l2_bytes() -> Option<usize> {
+    let s = std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cache/index2/size").ok()?;
+    let s = s.trim();
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    let n: usize = digits.parse().ok()?;
+    (n > 0).then_some(n * mult)
+}
+
+/// The L2 byte budget the tiler sizes against, resolved once per process:
+/// `AMQ_L2_KB` override > Linux sysfs detection > [`DEFAULT_L2_BYTES`].
+/// A malformed override falls back to detection with a warning rather
+/// than aborting serving.
+pub fn l2_bytes() -> usize {
+    static L2: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *L2.get_or_init(|| {
+        if let Ok(s) = std::env::var("AMQ_L2_KB") {
+            match parse_l2_kb(&s) {
+                Ok(bytes) => return bytes,
+                Err(e) => eprintln!("amq: warning: {e}; falling back to detection"),
+            }
+        }
+        sysfs_l2_bytes().unwrap_or(DEFAULT_L2_BYTES)
+    })
+}
+
+/// Batch-tile width (columns) for a GEMM whose activation planes are
+/// `words_per_plane`-word, `k_x`-deep: the widest multiple of `block`
+/// whose packed activations fit half the L2 budget (the other half is
+/// left to the streaming weight row and the outputs). Never below
+/// `block` — a serving-sized batch is a single tile and the loop
+/// structure degenerates to the untiled one.
+pub fn tile_cols(words_per_plane: usize, k_x: usize, l2_budget: usize, block: usize) -> usize {
+    let block = block.max(1);
+    let per_col = k_x.max(1) * words_per_plane.max(1) * 8;
+    let fit = (l2_budget / 2) / per_col;
+    (fit / block * block).max(block)
+}
+
+/// Predicted DRAM-traffic ratio untiled/tiled for an `rows ×
+/// (words·64)` weight matrix at batch `b`: ≥ 1, and exactly 1 whenever
+/// the whole activation block already fits the tile budget (one tile —
+/// the code path is identical). Traffic is modeled in packed bytes. The
+/// untiled loop is row-outer: each row walks the full activation block,
+/// so when that block exceeds the budget the activations re-stream from
+/// DRAM once per row while weights stream once. Tiled, the activations
+/// of one tile stay cache-resident across every row, at the price of
+/// re-streaming the weights once per tile.
+pub fn tiled_traffic_advantage(
+    rows: u64,
+    words_per_plane: u64,
+    k_w: u64,
+    k_x: u64,
+    b: u64,
+    l2_budget: u64,
+    block: u64,
+) -> f64 {
+    let w_bytes = rows * k_w * words_per_plane * 8;
+    let a_bytes = b * k_x * words_per_plane * 8;
+    if a_bytes <= l2_budget / 2 {
+        return 1.0; // single tile: tiled and untiled are the same loop
+    }
+    let tile = tile_cols(
+        words_per_plane as usize,
+        k_x as usize,
+        l2_budget as usize,
+        block as usize,
+    ) as u64;
+    let tiles = b.div_ceil(tile);
+    // Untiled: weights stream once (row-major, each row touched once);
+    // the over-budget activation block re-streams once per row.
+    let untiled = w_bytes + rows * a_bytes;
+    // Tiled: weights stream once per tile; each tile's activations are
+    // fetched once and then served from cache for all rows.
+    let tiled = tiles * w_bytes + a_bytes;
+    untiled as f64 / tiled as f64
 }
 
 #[cfg(test)]
@@ -207,5 +363,78 @@ mod tests {
         }
         assert_eq!(fused_block_advantage(FUSED_SHORT_PLANE_MAX_WORDS, 2, 2, 4), 1.0);
         assert_eq!(fused_block_advantage(128, 2, 2, 4), 1.0);
+    }
+
+    #[test]
+    fn avx512_fused_model_mirrors_avx2_shape() {
+        // Same qualitative behavior at 512 bits: strict win at the
+        // serving shape, exactly 1 for the LUT arm past the HS cutoff,
+        // while the vpopcnt-arm ratio stays defined (> 1) everywhere.
+        assert!(fused_block_advantage_512(16, 2, 2, 4) > 1.1);
+        assert_eq!(fused_block_advantage_512(FUSED_SHORT_PLANE_MAX_WORDS, 2, 2, 4), 1.0);
+        assert!(fused_block_ratio_512(128, 2, 2, 4) >= 1.0);
+        // Twice the chain budget of AVX2's 8 — the 32-zmm file.
+        assert_eq!(AVX512_FUSED_MAX_CHAINS, 16);
+    }
+
+    #[test]
+    fn l2_override_parsing() {
+        assert_eq!(parse_l2_kb("512"), Ok(512 * 1024));
+        assert_eq!(parse_l2_kb(" 1024\n"), Ok(1024 * 1024));
+        assert!(parse_l2_kb("0").is_err());
+        assert!(parse_l2_kb("-3").is_err());
+        assert!(parse_l2_kb("lots").is_err());
+        assert!(parse_l2_kb("").is_err());
+    }
+
+    #[test]
+    fn l2_bytes_is_positive_and_stable() {
+        let a = l2_bytes();
+        assert!(a > 0);
+        assert_eq!(a, l2_bytes(), "OnceLock must cache the resolution");
+    }
+
+    #[test]
+    fn tile_cols_properties() {
+        // Fits half the budget, floors to a block multiple, never
+        // below one block.
+        let block = 4;
+        for &(wpp, kx, l2) in &[
+            (16usize, 2usize, 512 * 1024usize),
+            (128, 4, 256 * 1024),
+            (657, 3, 64 * 1024),
+            (1, 1, 1024),
+        ] {
+            let t = tile_cols(wpp, kx, l2, block);
+            assert!(t >= block, "tile {t} below block at {wpp}/{kx}/{l2}");
+            assert_eq!(t % block, 0, "tile {t} not a block multiple");
+            if t > block {
+                assert!(
+                    t * kx * wpp * 8 <= l2 / 2,
+                    "tile {t} overflows the half-L2 budget at {wpp}/{kx}/{l2}"
+                );
+            }
+        }
+        // Degenerate budget: clamps to one block rather than zero.
+        assert_eq!(tile_cols(1024, 4, 1, 4), 4);
+    }
+
+    #[test]
+    fn tiled_advantage_is_one_when_activations_fit() {
+        // Serving shape: 16-word planes, B up to 64 — activations are a
+        // few KB, one tile, identical code path, ratio exactly 1.
+        assert_eq!(tiled_traffic_advantage(4096, 16, 2, 2, 64, 512 * 1024, 4), 1.0);
+    }
+
+    #[test]
+    fn tiled_advantage_grows_past_the_budget() {
+        // Long planes and a batch whose activation block blows a small
+        // budget: tiling must predict strictly less DRAM traffic.
+        let adv = tiled_traffic_advantage(4096, 1024, 2, 2, 1024, 64 * 1024, 4);
+        assert!(adv > 1.0, "predicted tiled advantage {adv}");
+        // A roomier budget means wider tiles and fewer weight re-streams:
+        // the advantage must not shrink.
+        let adv2 = tiled_traffic_advantage(4096, 1024, 2, 2, 1024, 256 * 1024, 4);
+        assert!(adv2 >= adv, "{adv2} < {adv}");
     }
 }

@@ -10,15 +10,32 @@
 //!   batch-block primitive** (`block_counts(w, x_block, counts)`): the
 //!   portable scalar reference ([`scalar`]), AVX2 (`vpshufb` nibble-LUT
 //!   popcount; per-chain byte accumulators on short planes, Harley–Seal
-//!   carry-save on long ones — `avx2`, x86_64), and NEON (`vcntq_u8`
-//!   fused block kernel — `neon`, aarch64). Selection order: forced
-//!   choice (`--kernel` / `server.kernel`) > `AMQ_KERNEL` env > feature
-//!   detection. Every backend is bit-exact against scalar
+//!   carry-save on long ones — `avx2`, x86_64), AVX-512 (two arms behind
+//!   runtime detection: native `vpopcntq` lane popcount on
+//!   `avx512vpopcntdq` hardware, fused at every plane length, or a
+//!   512-bit LUT + Harley–Seal fallback on `avx512f+avx512bw` —
+//!   `avx512`, x86_64), and NEON (`vcntq_u8` fused block kernel —
+//!   `neon`, aarch64). Selection order: forced choice (`--kernel` /
+//!   `server.kernel`) > `AMQ_KERNEL` env > feature detection (AVX-512
+//!   before AVX2). Every backend is bit-exact against scalar
 //!   (`rust/tests/kernel_parity.rs`); a new backend is exactly one
 //!   function.
 //! * [`cost`] — the analytic operation-count model of §3/§4 (binary vs
 //!   non-binary op counts, theoretical speedup γ) plus the block-kernel
-//!   micro-model (fused block vs pairwise plane passes).
+//!   micro-model (fused block vs pairwise plane passes) and the
+//!   cache-tiling term (L2 detection/`AMQ_L2_KB` override, batch-tile
+//!   width, predicted DRAM-traffic advantage) that sizes
+//!   [`binary::PreparedGemm`]'s column tiles.
+//!
+//! **The tiling layer** lives above the count primitive, in
+//! [`binary::PreparedGemm::gemm_rows`]: batch columns are tiled so one
+//! tile's packed activation planes stay L2-resident while every weight
+//! row streams over them once, with software prefetch of the next row's
+//! planes (x86_64; no-op elsewhere). Tiling only reorders **whole output
+//! elements** — each element's counts still come from exactly one
+//! `block_counts` call and the float reduction is element-local — so
+//! every backend stays bit-exact at any tile size (pinned across
+//! `AMQ_L2_KB` overrides by the parity suite).
 
 pub mod backend;
 pub mod binary;
@@ -28,6 +45,8 @@ pub(crate) mod scalar;
 
 #[cfg(target_arch = "x86_64")]
 pub(crate) mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx512;
 #[cfg(target_arch = "aarch64")]
 pub(crate) mod neon;
 

@@ -12,6 +12,7 @@
 //! amq quantize --bits 2 [--method alternating[:cycles]] [--checkpoint f.amqt]
 //! amq bench    table1|table2|table3|table4|table5|table6|table7|table8|table9|costmodel
 //! amq stats    --addr host:port [--text]  (query a running server's STATS)
+//! amq kernels  (print active/available kernel backends, CPU features, tiling)
 //! ```
 //!
 //! `--event-loop` swaps the thread-per-connection front end for the
@@ -75,7 +76,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: amq <serve|publish|train|quantize|bench|stats> [options]\n\
+    "usage: amq <serve|publish|train|quantize|bench|stats|kernels> [options]\n\
      run `amq <subcommand> --help` conventions in README.md"
 }
 
@@ -87,6 +88,7 @@ fn run(cli: Cli) -> Result<()> {
         "quantize" => cmd_quantize(&cli),
         "bench" => cmd_bench(&cli),
         "stats" => cmd_stats(&cli),
+        "kernels" => cmd_kernels(&cli),
         "" => {
             println!("{}", usage());
             Ok(())
@@ -259,8 +261,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 RnnLm::random_exec(model_cfg.lm, model_cfg.seed, policy, &exec)
             }
         };
+        let tile = model
+            .a_bits()
+            .map(|a| amq::kernels::binary::serving_tile_cols(model.config.hidden, a).to_string())
+            .unwrap_or_else(|| "-".into());
         eprintln!(
-            "model: {} vocab={} hidden={} {} ({} weight bytes, kernel={}, {} exec threads)",
+            "model: {} vocab={} hidden={} {} ({} weight bytes, kernel={}, l2={}KB \
+             tile_cols={tile}, {} exec threads)",
             model.config.kind.name(),
             model.config.vocab,
             model.config.hidden,
@@ -270,7 +277,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 "FP".into()
             },
             model.bytes(),
-            kernel,
+            amq::kernels::backend::describe(kernel),
+            amq::kernels::cost::l2_bytes() / 1024,
             exec.threads()
         );
         InferenceServer::with_exec(Arc::new(model), batcher_cfg, exec)
@@ -296,9 +304,14 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             registry.default_name().map(str::to_string).context("no models registered")?;
         let t0 = Instant::now();
         let (model, _) = registry.acquire(&default, |_| true).map_err(anyhow::Error::msg)?;
+        let tile = model
+            .a_bits()
+            .map(|a| amq::kernels::binary::serving_tile_cols(model.config.hidden, a).to_string())
+            .unwrap_or_else(|| "-".into());
         eprintln!(
             "registry: {} models, default '{default}' ({} vocab={} hidden={}, {} bytes, \
-             loaded in {:.1} ms), budget {} (kernel={}, {} exec threads)",
+             loaded in {:.1} ms), budget {} (kernel={}, l2={}KB tile_cols={tile}, \
+             {} exec threads)",
             named.len(),
             model.config.kind.name(),
             model.config.vocab,
@@ -306,7 +319,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             model.bytes(),
             t0.elapsed().as_secs_f64() * 1e3,
             if budget == 0 { "unlimited".to_string() } else { format!("{budget} bytes") },
-            kernel,
+            amq::kernels::backend::describe(kernel),
+            amq::kernels::cost::l2_bytes() / 1024,
             exec.threads()
         );
         InferenceServer::with_registry(registry, batcher_cfg, exec)
@@ -346,6 +360,30 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let res = tcp::serve(&server_cfg.addr, tx, shutdown, |a| eprintln!("bound {a}"));
     let _ = batcher.join();
     res
+}
+
+/// Print the kernel-backend inventory: the resolved active backend (with
+/// the AVX-512 arm when that is what's running), every backend this host
+/// can execute, the detected CPU features, and the cache parameters the
+/// batched GEMM tiles against. CI greps this output to decide whether a
+/// forced `AMQ_KERNEL=avx512` test leg can run on the host; respects
+/// `AMQ_KERNEL` / `AMQ_L2_KB` like the server.
+fn cmd_kernels(_cli: &Cli) -> Result<()> {
+    use amq::kernels::backend;
+    println!("active: {}", backend::describe(backend::active()));
+    println!(
+        "available: {}",
+        backend::available().iter().map(|k| k.name()).collect::<Vec<_>>().join(" ")
+    );
+    println!("cpu_features: {}", backend::cpu_features().join(","));
+    let l2 = amq::kernels::cost::l2_bytes();
+    println!("l2_kb: {}", l2 / 1024);
+    // The batch-tile widths serving resolves at the two reference layer
+    // shapes (hidden product, Harley–Seal regime) with 2-bit activations.
+    for cols in [1024usize, 8192] {
+        println!("tile_cols[{cols}c,a2]: {}", amq::kernels::binary::serving_tile_cols(cols, 2));
+    }
+    Ok(())
 }
 
 /// Query a running server's `STATS` endpoint (JSON by default, `--text`

@@ -335,6 +335,15 @@ impl Linear {
         self.op().cols()
     }
 
+    /// Activation bit width the layer quantizes its inputs at online
+    /// (`None` for dense layers).
+    pub fn a_bits(&self) -> Option<usize> {
+        match self {
+            Linear::Dense(_) => None,
+            Linear::Quant(q) => Some(q.k_a),
+        }
+    }
+
     /// `y = W x` for one vector (B = 1 wrapper; the trainer's path). For
     /// quantized layers this quantizes `x` online first.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {

@@ -791,6 +791,13 @@ impl RnnLm {
             .sum();
         self.embedding.bytes() + cell_bytes + self.softmax.bytes() + self.softmax_bias.len() * 4
     }
+
+    /// Activation bit width of the quantized serving path (`None` when
+    /// the model serves full precision) — what the startup line and STATS
+    /// resolve the batch-tile width against.
+    pub fn a_bits(&self) -> Option<usize> {
+        self.softmax.a_bits()
+    }
 }
 
 #[cfg(test)]

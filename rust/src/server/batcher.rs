@@ -863,7 +863,7 @@ impl InferenceServer {
                 "{} uptime={}s requests={} tokens={} batches={} timesteps={} shed={} errors={} \
                  active={} queued={} evictions={} sessions={} models={} model_evictions={} \
                  lane_panics={} deadline_expirations={} sessions_reaped={} write_stall_closes={} \
-                 faults_injected={} mode={} kernel={} threads={}",
+                 faults_injected={} mode={} kernel={} l2_kb={} threads={}",
                 snap.report("latency"),
                 uptime_secs,
                 Counters::get(&c.requests),
@@ -884,7 +884,8 @@ impl InferenceServer {
                 Counters::get(&c.write_stall_closes),
                 faults_injected,
                 if self.config.continuous { "continuous" } else { "grouped" },
-                crate::kernels::backend::active(),
+                crate::kernels::backend::describe(crate::kernels::backend::active()),
+                crate::kernels::cost::l2_bytes() / 1024,
                 self.exec.threads(),
             );
         }
@@ -920,7 +921,8 @@ impl InferenceServer {
              \"evictions\":{},\"models\":{},\"model_evictions\":{},\
              \"lane_panics\":{},\"deadline_expirations\":{},\"sessions_reaped\":{},\
              \"write_stall_closes\":{},\"faults_injected\":{},\
-             \"kernel\":\"{}\",\"threads\":{},\"latency_us\":{{\"count\":{},\"window\":{},\
+             \"kernel\":\"{}\",\"l2_kb\":{},\"threads\":{},\
+             \"latency_us\":{{\"count\":{},\"window\":{},\
              \"mean\":{:.1},\"p50\":{:.1},\"p95\":{:.1},\"p99\":{:.1},\"max\":{:.1}}}}}",
             if self.config.continuous { "continuous" } else { "grouped" },
             uptime_secs,
@@ -943,7 +945,8 @@ impl InferenceServer {
             Counters::get(&c.sessions_reaped),
             Counters::get(&c.write_stall_closes),
             faults_injected,
-            crate::kernels::backend::active(),
+            crate::kernels::backend::describe(crate::kernels::backend::active()),
+            crate::kernels::cost::l2_bytes() / 1024,
             self.exec.threads(),
             snap.count,
             snap.count.min(self.latency.capacity()),
@@ -1318,6 +1321,7 @@ mod tests {
         assert!(stats.contains("\"requests\":2"), "{stats}");
         assert!(stats.contains("\"mode\":\"grouped\""), "{stats}");
         assert!(stats.contains("\"kernel\":\"") && stats.contains("\"threads\":"), "{stats}");
+        assert!(stats.contains("\"l2_kb\":"), "{stats}");
         assert!(stats.contains("\"latency_us\":{\"count\":1,"), "{stats}");
         assert!(stats.contains("\"errors\":0"), "{stats}");
         assert!(
@@ -1330,6 +1334,7 @@ mod tests {
         let Reply::Stats(stats) = mrx.recv().unwrap() else { panic!() };
         assert!(stats.contains("requests=2"), "{stats}");
         assert!(stats.contains("kernel=") && stats.contains("threads="), "{stats}");
+        assert!(stats.contains("l2_kb="), "{stats}");
         assert!(stats.contains("models=1"), "{stats}");
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();

@@ -1,12 +1,15 @@
 //! Cross-backend exactness contract of the kernel dispatch layer: every
-//! available backend (scalar, AVX2, NEON) must reproduce the scalar
-//! kernel's f32 outputs with **no tolerance** (`assert_eq!` on f32), for
-//! every (method, k_w, k_x, B) grid point — including column counts that
-//! are not multiples of 64 (tail words), column counts large enough to
-//! engage the SIMD main loops (Harley–Seal blocks on AVX2, the u8-block
-//! loop on NEON), batch sizes that are not multiples of the GEMM batch
-//! block (partial blocks through the fused primitive), and asymmetric
-//! k_w ≠ k_x widths — and for every thread count of the execution engine.
+//! available backend (scalar, AVX2, AVX-512 — both arms — and NEON) must
+//! reproduce the scalar kernel's f32 outputs with **no tolerance**
+//! (`assert_eq!` on f32), for every (method, k_w, k_x, B) grid point —
+//! including column counts that are not multiples of 64 (tail words),
+//! column counts large enough to engage the SIMD main loops (Harley–Seal
+//! blocks on AVX2/AVX-512, the u8-block loop on NEON), batch sizes that
+//! are not multiples of the GEMM batch block (partial blocks through the
+//! fused primitive), and asymmetric k_w ≠ k_x widths — for every thread
+//! count of the execution engine, and for every cache-tiling budget
+//! (tiling reorders whole output elements only, so it can never change
+//! a bit).
 //!
 //! Why this can hold exactly: backends only change how the integer
 //! mismatch counts `popcount(w ⊕ x)` are computed, and those are exact in
@@ -124,6 +127,119 @@ fn fused_block_partial_batches_and_asymmetric_widths_bitmatch_scalar() {
                         "{kernel} k_w={k_w} k_x={k_x} m={m} n={n} B={batch}"
                     );
                 }
+            }
+        }
+    }
+}
+
+/// Both AVX-512 arms — native `vpopcntq` and the 512-bit LUT +
+/// Harley–Seal fallback — must produce the exact integer mismatch counts
+/// of an independent scalar popcount, over the full grid: k_w/k_x ∈
+/// {1..4}², batch blocks that end in partial GEMM blocks (B ∈ {1, 3, 5,
+/// 7, 17}), and plane lengths covering single words, the 8-word vector
+/// boundary, vector tails, the Harley–Seal threshold (63/64/65 words),
+/// and a long multi-block length (130). Each arm runs through the
+/// `#[doc(hidden)]` test hook so the LUT arm is exercised even on
+/// `vpopcntdq` hardware; an arm the host lacks is skipped with a notice
+/// (the hook returns `false`), never silently passed.
+#[test]
+fn avx512_both_arms_bitmatch_scalar_at_count_level() {
+    use amq::kernels::backend::testing::avx512_block_counts_arm;
+    let mut rng = Rng::new(0xA512);
+    for arm in ["vpopcntq", "lut"] {
+        // One-shot availability probe on a trivial block; the hook leaves
+        // counts untouched and returns false when the host lacks the arm.
+        let probe = [0u64; 1];
+        let pw: [&[u64]; 1] = [&probe];
+        let pc: [&[u64]; 1] = [&probe];
+        let pb: [&[&[u64]]; 1] = [&pc];
+        if !avx512_block_counts_arm(arm, &pw, &pb, &mut [0u32; 1]) {
+            eprintln!(
+                "notice: host cannot run the avx512 {arm} arm — skipping its count-parity grid"
+            );
+            continue;
+        }
+        for words in [1usize, 2, 7, 8, 9, 16, 63, 64, 65, 130] {
+            for k_w in 1..=4usize {
+                for k_x in 1..=4usize {
+                    // Long planes only at the paper's widths to keep the
+                    // grid affordable; short planes run all 16 combos.
+                    if words > 16 && !(k_w == 2 && k_x == 2) {
+                        continue;
+                    }
+                    for batch in [1usize, 3, 5, 7, 17] {
+                        let wplanes: Vec<Vec<u64>> = (0..k_w)
+                            .map(|_| (0..words).map(|_| rng.next_u64()).collect())
+                            .collect();
+                        let xplanes: Vec<Vec<u64>> = (0..batch * k_x)
+                            .map(|_| (0..words).map(|_| rng.next_u64()).collect())
+                            .collect();
+                        let w: Vec<&[u64]> = wplanes.iter().map(|p| &p[..]).collect();
+                        let cols: Vec<Vec<&[u64]>> = (0..batch)
+                            .map(|j| (0..k_x).map(|s| &xplanes[j * k_x + s][..]).collect())
+                            .collect();
+                        let x_block: Vec<&[&[u64]]> = cols.iter().map(|c| &c[..]).collect();
+                        // Independent reference: plain u64 xor + count_ones.
+                        let mut want = vec![0u32; batch * k_w * k_x];
+                        for (j, col) in cols.iter().enumerate() {
+                            for (t, wp) in wplanes.iter().enumerate() {
+                                for (s, xp) in col.iter().enumerate() {
+                                    want[(j * k_w + t) * k_x + s] = wp
+                                        .iter()
+                                        .zip(xp.iter())
+                                        .map(|(&a, &b)| (a ^ b).count_ones())
+                                        .sum();
+                                }
+                            }
+                        }
+                        let mut got = vec![0u32; batch * k_w * k_x];
+                        assert!(
+                            avx512_block_counts_arm(arm, &w, &x_block, &mut got),
+                            "arm {arm} disappeared mid-grid"
+                        );
+                        assert_eq!(
+                            got, want,
+                            "avx512({arm}) k_w={k_w} k_x={k_x} words={words} B={batch}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Column tiling must never change a bit: the batched GEMM run with a
+/// tiny L2 budget (many tiles), a huge one (a single tile), and the
+/// detected default must produce identical f32 outputs on every
+/// available backend — including batch sizes that do not divide evenly
+/// into any tile. This is the `AMQ_L2_KB ∈ {tiny, huge}` contract of the
+/// tiling layer, driven through the per-instance budget override.
+#[test]
+fn tiled_gemm_bitmatches_untiled_across_budgets_and_backends() {
+    let mut rng = Rng::new(0x7113D);
+    let (m, n, k) = (17, 1090, 2);
+    let w = rng.normal_vec(m * n, 0.3);
+    let wq = RowQuantized::quantize(&w, m, n, k, Method::Alternating { t: 2 });
+    for batch in [1usize, 5, 17, 64] {
+        let x = rng.normal_vec(batch * n, 1.0);
+        let xq = QuantizedBatch::quantize(&x, batch, n, k);
+        // Untiled reference: scalar backend, one tile covering the batch.
+        let mut reference = PreparedGemm::with_kernel(&wq, Kernel::Scalar);
+        reference.set_l2_budget(usize::MAX);
+        let mut want = vec![0.0f32; batch * m];
+        reference.gemm(&xq, &mut want);
+        for kernel in backends_under_test() {
+            for budget in [1usize, 64 * 1024, usize::MAX] {
+                let mut prep = PreparedGemm::with_kernel(&wq, kernel);
+                prep.set_l2_budget(budget);
+                let mut got = vec![0.0f32; batch * m];
+                prep.gemm(&xq, &mut got);
+                assert_eq!(got, want, "{kernel} budget={budget} B={batch}");
+                // And under the threaded driver at the same budget.
+                let exec = Exec::new(ExecConfig::with_threads(3));
+                let mut got_t = vec![0.0f32; batch * m];
+                prep.gemm_exec(&xq, &mut got_t, &exec);
+                assert_eq!(got_t, want, "{kernel} budget={budget} B={batch} threaded");
             }
         }
     }
