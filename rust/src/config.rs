@@ -263,6 +263,13 @@ pub struct ServerConfig {
     /// Event-loop only: close a connection whose write buffer stays stuck
     /// longer than this. 0 = never. CLI: `--write-stall-ms`.
     pub write_stall_ms: u64,
+    /// Where `DRAIN`/SIGTERM snapshots live sessions (`.amqs`). `None`
+    /// refuses `DRAIN` with `ERR DRAINING no snapshot path configured`.
+    /// CLI: `--snapshot`.
+    pub snapshot: Option<String>,
+    /// How long a drain lets in-flight decodes finish before cutting the
+    /// stragglers with `ERR DRAINING`. CLI: `--drain-deadline-ms`.
+    pub drain_deadline_ms: u64,
 }
 
 impl ServerConfig {
@@ -287,6 +294,8 @@ impl ServerConfig {
             request_deadline_ms: c.get_usize("server.request_deadline_ms", 0) as u64,
             session_ttl_secs: c.get_usize("server.session_ttl_secs", 0) as u64,
             write_stall_ms: c.get_usize("server.write_stall_ms", 0) as u64,
+            snapshot: c.values.get("server.snapshot").and_then(|v| v.as_str()).map(String::from),
+            drain_deadline_ms: c.get_usize("server.drain_deadline_ms", 5000) as u64,
         }
     }
 }
@@ -345,6 +354,8 @@ queue_depth = 64
 request_deadline_ms = 2000
 session_ttl_secs = 600
 write_stall_ms = 5000
+snapshot = "runs/live.amqs"
+drain_deadline_ms = 1500
 [model]
 kind = "gru"
 hidden = 512
@@ -376,6 +387,8 @@ quantized = true
             (s.request_deadline_ms, s.session_ttl_secs, s.write_stall_ms),
             (2000, 600, 5000)
         );
+        assert_eq!(s.snapshot.as_deref(), Some("runs/live.amqs"));
+        assert_eq!(s.drain_deadline_ms, 1500);
         let m = ModelConfig::from_config(&c).unwrap();
         assert_eq!(m.lm.kind, RnnKind::Gru);
         assert_eq!(m.lm.hidden, 512);
@@ -392,6 +405,8 @@ quantized = true
         assert!(!s.event_loop);
         assert_eq!((s.loops, s.max_slots, s.queue_depth), (0, 0, 128));
         assert_eq!((s.request_deadline_ms, s.session_ttl_secs, s.write_stall_ms), (0, 0, 0));
+        assert!(s.snapshot.is_none(), "drain snapshotting is opt-in");
+        assert_eq!(s.drain_deadline_ms, 5000);
     }
 
     #[test]

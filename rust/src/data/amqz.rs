@@ -1,4 +1,4 @@
-//! `.amqz` — the zero-copy packed-model format.
+//! `.amqz` — the zero-copy packed-model format, crash-safe since v2.
 //!
 //! `amq publish` pays the quantization cost **once**, writing the packed
 //! `u64` planes and `f32` alphas in exactly the `[row][plane][word]`
@@ -6,18 +6,21 @@
 //! with a **single bulk read into a `u64` arena** — no parsing loop over
 //! weights, no requantization — so cold start moves O(file size) bytes
 //! and nothing else. `rust/tests/amqz_roundtrip.rs` pins the loaded model
-//! bit-identical to the parse-and-requantize path and gates the cold-load
-//! speedup.
+//! bit-identical to the quantize path and gates the cold-load speedup.
 //!
 //! Layout (all integers little-endian, every section 8-byte aligned):
 //! ```text
-//! magic "AMQZ" | u32 version=1
+//! magic "AMQZ" | u32 version=2
 //! u8 kind (0=lstm, 1=gru) | u8 w_bits | u8 a_bits | u8 method (0=alternating)
 //! u32 layers | u64 vocab | u64 hidden
 //! matrix  embedding                      (vocab × hidden)
 //! per layer: matrix wx | matrix wh | f32vec bias
 //! matrix  softmax                        (vocab × hidden)
 //! f32vec  softmax_bias                   (vocab)
+//! trailer (v2): u32 crc32c[section]      (one per section, walk order)
+//!               pad to 8
+//!               magic "AMQC" | u32 section_count
+//!               u32 file_crc32c | u32 0  (crc of every byte before it)
 //!
 //! matrix: u64 rows | u64 cols | u64 k
 //!         f32 alphas[rows·k] | pad to 8
@@ -25,16 +28,30 @@
 //! f32vec: u64 len | f32 data[len] | pad to 8
 //! ```
 //!
+//! **Durability.** [`save`] is atomic: the whole file is encoded in
+//! memory, written to a same-directory temp file, fsynced, renamed over
+//! the destination, and the directory entry is fsynced — a crash at any
+//! point leaves either the previous file or the complete new one on disk,
+//! never a hybrid. The v2 trailer is parseable from the **end** of the
+//! file, so a torn write (truncation, bit rot past the rename) is caught
+//! before any section is trusted: the loader verifies the whole-file
+//! CRC32C and every per-section CRC32C and refuses with a typed
+//! [`CorruptModel`] naming the damaged section — the registry surfaces it
+//! as `ERR MODEL_CORRUPT <name> <section>`. v1 files (no trailer) still
+//! load, with an `unverified` warning on stderr.
+//!
 //! The arena is a `Vec<u64>`, so every `u64` field is read by aligned
 //! indexing (`u64::from_le`, a no-op on little-endian hosts) and the
 //! plane words are copied out of the arena as whole slices. `f32`s are
 //! extracted from the words by bit-twiddling. Shape and tail-bit
-//! invariants are validated as sections are walked, so truncated or
-//! corrupt files fail with an error instead of panicking.
+//! invariants are validated as sections are walked — including agreement
+//! with the header config — so truncated or corrupt files fail with an
+//! error instead of panicking.
 
+use std::fmt;
 use std::fs::File;
-use std::io::{BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -42,59 +59,86 @@ use crate::kernels::binary::PreparedGemm;
 use crate::model::lm::{LmConfig, PackedLayer, PackedLmParts, RnnKind};
 use crate::model::RnnLm;
 use crate::quant::RowQuantized;
+use crate::server::faults::FaultPlan;
+use crate::util::crc::crc32c;
 
 const MAGIC: u32 = u32::from_le_bytes(*b"AMQZ");
-const VERSION: u32 = 1;
+/// Current format version: v2 adds the checksum trailer. v1 (no trailer,
+/// identical body layout) is still readable.
+const VERSION: u32 = 2;
+const VERSION_UNVERIFIED: u32 = 1;
+/// Magic of the v2 checksum trailer, sitting 16 bytes before end-of-file.
+const TRAILER_MAGIC: u32 = u32::from_le_bytes(*b"AMQC");
 /// Method tag in the header: alternating minimization (the only quantizer
 /// the serving GEMM needs to know about — all methods share the plane
 /// format, so new tags only gate provenance, not decoding).
 const METHOD_ALTERNATING: u8 = 0;
 
+/// A checksum-verified load failure: the file is structurally present but
+/// its bytes do not match what was published. `section` names the first
+/// damaged section (`"file"`/`"trailer"` when the damage is outside the
+/// body walk). The registry downcasts this to answer
+/// `ERR MODEL_CORRUPT <name> <section>` instead of a generic load error.
+#[derive(Debug, Clone)]
+pub struct CorruptModel {
+    pub section: String,
+    pub detail: String,
+}
+
+impl fmt::Display for CorruptModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "section {}: {}", self.section, self.detail)
+    }
+}
+
+impl std::error::Error for CorruptModel {}
+
+fn corrupt(section: &str, detail: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(CorruptModel { section: section.to_string(), detail: detail.into() })
+}
+
 // ---------------------------------------------------------------- writing
 
 fn write_matrix(
-    w: &mut impl Write,
+    w: &mut Vec<u8>,
     rows: usize,
     cols: usize,
     k: usize,
     alphas: &[f32],
     words: &[u64],
-) -> Result<()> {
+) {
     debug_assert_eq!(alphas.len(), rows * k);
     debug_assert_eq!(words.len(), rows * k * cols.div_ceil(64));
     for dim in [rows, cols, k] {
-        w.write_all(&(dim as u64).to_le_bytes())?;
+        w.extend_from_slice(&(dim as u64).to_le_bytes());
     }
-    write_f32s_padded(w, alphas)?;
+    write_f32s_padded(w, alphas);
     for word in words {
-        w.write_all(&word.to_le_bytes())?;
+        w.extend_from_slice(&word.to_le_bytes());
     }
-    Ok(())
 }
 
-fn write_f32s_padded(w: &mut impl Write, data: &[f32]) -> Result<()> {
+fn write_f32s_padded(w: &mut Vec<u8>, data: &[f32]) {
     for x in data {
-        w.write_all(&x.to_bits().to_le_bytes())?;
+        w.extend_from_slice(&x.to_bits().to_le_bytes());
     }
     if data.len() % 2 == 1 {
-        w.write_all(&[0u8; 4])?;
+        w.extend_from_slice(&[0u8; 4]);
     }
-    Ok(())
 }
 
-fn write_vec(w: &mut impl Write, data: &[f32]) -> Result<()> {
-    w.write_all(&(data.len() as u64).to_le_bytes())?;
-    write_f32s_padded(w, data)
+fn write_vec(w: &mut Vec<u8>, data: &[f32]) {
+    w.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    write_f32s_padded(w, data);
 }
 
-/// Write a published model. The packed planes and alphas go out verbatim
-/// from the serving layout, so [`load`] can adopt them without rebuilding.
-pub fn save(path: &Path, parts: &PackedLmParts) -> Result<()> {
-    let mut w = BufWriter::new(
-        File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    w.write_all(&MAGIC.to_le_bytes())?;
-    w.write_all(&VERSION.to_le_bytes())?;
+/// Encode the complete v2 file — header, sections, checksum trailer — as
+/// one in-memory buffer (the unit the atomic publish writes and the fault
+/// seams mutate).
+fn encode(parts: &PackedLmParts) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
     let kind = match parts.config.kind {
         RnnKind::Lstm => 0u8,
         RnnKind::Gru => 1u8,
@@ -103,26 +147,117 @@ pub fn save(path: &Path, parts: &PackedLmParts) -> Result<()> {
         parts.w_bits >= 1 && parts.w_bits <= 255 && parts.a_bits >= 1 && parts.a_bits <= 255,
         "bit widths must fit a byte"
     );
-    w.write_all(&[kind, parts.w_bits as u8, parts.a_bits as u8, METHOD_ALTERNATING])?;
-    w.write_all(&(parts.config.layers as u32).to_le_bytes())?;
-    w.write_all(&(parts.config.vocab as u64).to_le_bytes())?;
-    w.write_all(&(parts.config.hidden as u64).to_le_bytes())?;
+    buf.extend_from_slice(&[kind, parts.w_bits as u8, parts.a_bits as u8, METHOD_ALTERNATING]);
+    buf.extend_from_slice(&(parts.config.layers as u32).to_le_bytes());
+    buf.extend_from_slice(&(parts.config.vocab as u64).to_le_bytes());
+    buf.extend_from_slice(&(parts.config.hidden as u64).to_le_bytes());
+
+    let mut crcs: Vec<u32> = Vec::new();
+    let mut start = buf.len();
+    let mut close_section = |buf: &[u8], start: &mut usize, crcs: &mut Vec<u32>| {
+        crcs.push(crc32c(&buf[*start..]));
+        *start = buf.len();
+    };
+
     let e = &parts.embedding;
     let mut ewords = Vec::with_capacity(e.rows * e.k * e.cols.div_ceil(64));
     for plane in &e.planes {
         ewords.extend_from_slice(plane.words());
     }
-    write_matrix(&mut w, e.rows, e.cols, e.k, &e.alphas, &ewords)?;
+    write_matrix(&mut buf, e.rows, e.cols, e.k, &e.alphas, &ewords);
+    close_section(&buf, &mut start, &mut crcs);
     for layer in &parts.layers {
         for m in [&layer.wx, &layer.wh] {
-            write_matrix(&mut w, m.rows, m.cols, m.k, m.alphas(), m.plane_words())?;
+            write_matrix(&mut buf, m.rows, m.cols, m.k, m.alphas(), m.plane_words());
+            close_section(&buf, &mut start, &mut crcs);
         }
-        write_vec(&mut w, &layer.bias)?;
+        write_vec(&mut buf, &layer.bias);
+        close_section(&buf, &mut start, &mut crcs);
     }
     let s = &parts.softmax;
-    write_matrix(&mut w, s.rows, s.cols, s.k, s.alphas(), s.plane_words())?;
-    write_vec(&mut w, &parts.softmax_bias)?;
-    w.flush().with_context(|| format!("writing {}", path.display()))
+    write_matrix(&mut buf, s.rows, s.cols, s.k, s.alphas(), s.plane_words());
+    close_section(&buf, &mut start, &mut crcs);
+    write_vec(&mut buf, &parts.softmax_bias);
+    close_section(&buf, &mut start, &mut crcs);
+
+    for crc in &crcs {
+        buf.extend_from_slice(&crc.to_le_bytes());
+    }
+    if crcs.len() % 2 == 1 {
+        buf.extend_from_slice(&[0u8; 4]);
+    }
+    buf.extend_from_slice(&TRAILER_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&(crcs.len() as u32).to_le_bytes());
+    let file_crc = crc32c(&buf);
+    buf.extend_from_slice(&file_crc.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]);
+    Ok(buf)
+}
+
+/// Write a published model atomically: encode in memory, write a
+/// same-directory temp file, fsync, rename over `path`, fsync the
+/// directory. A `kill -9` at any instant leaves either the old artifact
+/// or the complete new one — the destination path never names a partial
+/// file. The packed planes and alphas go out verbatim from the serving
+/// layout, so [`load`] can adopt them without rebuilding.
+pub fn save(path: &Path, parts: &PackedLmParts) -> Result<()> {
+    save_with_faults(path, parts, None)
+}
+
+/// [`save`] with an injected fault plan (testing only): `torn_write=N`
+/// truncates the published bytes at offset N (simulating post-rename bit
+/// rot / a torn medium — the checksum trailer must catch it at load),
+/// `bitflip=OFF:MASK` XORs one byte, `fsync_err` fails the publish at the
+/// fsync boundary, leaving the previous artifact untouched.
+pub fn save_with_faults(
+    path: &Path,
+    parts: &PackedLmParts,
+    faults: Option<&FaultPlan>,
+) -> Result<()> {
+    let mut bytes = encode(parts)?;
+    if let Some(fp) = faults {
+        if let Some(n) = fp.on_publish_torn_write() {
+            bytes.truncate(n.min(bytes.len()));
+        }
+        if let Some((off, mask)) = fp.on_publish_bitflip() {
+            if !bytes.is_empty() {
+                let i = off % bytes.len();
+                bytes[i] ^= mask;
+            }
+        }
+    }
+
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let name = path.file_name().context("publish path has no file name")?;
+    let tmp = dir.join(format!("{}.tmp.{}", name.to_string_lossy(), std::process::id()));
+    let result = (|| -> Result<()> {
+        let mut f =
+            File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        if let Some(fp) = faults {
+            if fp.on_publish_fsync_err() {
+                bail!("injected fault: fsync failed publishing {}", path.display());
+            }
+        }
+        f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        // Make the rename itself durable. Directories open as plain files
+        // on unix; where they don't, the rename is still atomic — only
+        // its durability guarantee weakens, so this is best-effort.
+        if let Ok(d) = File::open(&dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
 }
 
 // ---------------------------------------------------------------- loading
@@ -132,9 +267,21 @@ pub fn save(path: &Path, parts: &PackedLmParts) -> Result<()> {
 /// bytes), so values come out by word indexing, never byte reassembly.
 struct Cursor<'a> {
     arena: &'a [u64],
-    /// File length in bytes (the arena's last word may be partial).
+    /// Walkable length in bytes (the body for v2 — the trailer is parsed
+    /// separately — or the whole file for v1).
     len: usize,
     off: usize,
+}
+
+/// One aligned `u32` at byte offset `at` (must be 4-aligned and in range).
+fn u32_at(arena: &[u64], at: usize) -> u32 {
+    debug_assert_eq!(at % 4, 0);
+    let word = u64::from_le(arena[at / 8]);
+    if at % 8 == 0 {
+        word as u32
+    } else {
+        (word >> 32) as u32
+    }
 }
 
 impl Cursor<'_> {
@@ -149,9 +296,7 @@ impl Cursor<'_> {
 
     fn u32(&mut self) -> Result<u32> {
         let at = self.take(4)?;
-        debug_assert_eq!(at % 4, 0);
-        let word = u64::from_le(self.arena[at / 8]);
-        Ok(if at % 8 == 0 { word as u32 } else { (word >> 32) as u32 })
+        Ok(u32_at(self.arena, at))
     }
 
     fn u64(&mut self) -> Result<u64> {
@@ -208,26 +353,37 @@ impl Cursor<'_> {
     }
 }
 
-/// Load a published model's packed parts: one metadata read, one bulk
-/// `read_exact` into a `u64` arena, then section walks that only copy
-/// plane/alpha buffers out — no parse, no requantize.
-pub fn load(path: &Path) -> Result<PackedLmParts> {
-    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let len = f.metadata()?.len();
-    let len = usize::try_from(len).context("file too large for this host")?;
-    ensure!(len >= 32, "not an .amqz file (shorter than the header)");
-    let mut arena = vec![0u64; len.div_ceil(8)];
-    // SAFETY: u8 has no alignment or validity requirements, and the byte
-    // view covers exactly the `len` bytes inside the arena's allocation.
-    let bytes = unsafe { std::slice::from_raw_parts_mut(arena.as_mut_ptr().cast::<u8>(), len) };
-    f.read_exact(bytes).with_context(|| format!("reading {}", path.display()))?;
-    drop(f);
+/// Per-section checksum verification state for a v2 walk.
+struct Verifier<'a> {
+    /// Raw file bytes (checksums cover the on-disk byte stream).
+    bytes: &'a [u8],
+    /// Expected per-section CRCs from the trailer, in walk order.
+    expected: &'a [u32],
+    seen: usize,
+}
 
-    let mut c = Cursor { arena: &arena, len, off: 0 };
-    let magic = c.u32()?;
-    ensure!(magic == MAGIC, "not an .amqz file (bad magic)");
-    let version = c.u32()?;
-    ensure!(version == VERSION, "unsupported .amqz version {version} (expected {VERSION})");
+impl Verifier<'_> {
+    fn section(&mut self, name: &str, start: usize, end: usize) -> Result<()> {
+        if self.seen >= self.expected.len() {
+            return Err(corrupt("trailer", "more sections than trailer checksums"));
+        }
+        let got = crc32c(&self.bytes[start..end]);
+        let want = self.expected[self.seen];
+        if got != want {
+            return Err(corrupt(
+                name,
+                format!("checksum mismatch (stored {want:#010x}, computed {got:#010x})"),
+            ));
+        }
+        self.seen += 1;
+        Ok(())
+    }
+}
+
+/// Walk the body sections (cursor positioned just past magic+version),
+/// verifying each against the trailer checksums when `verifier` is armed,
+/// and validating every section's shape against the header config.
+fn parse_body(c: &mut Cursor, mut verifier: Option<&mut Verifier>) -> Result<PackedLmParts> {
     let [kind, w_bits, a_bits, method] = c.u32()?.to_le_bytes();
     let kind = match kind {
         0 => RnnKind::Lstm,
@@ -242,26 +398,67 @@ pub fn load(path: &Path) -> Result<PackedLmParts> {
     let hidden = usize::try_from(c.u64()?).context("hidden overflows usize")?;
     ensure!(layers >= 1 && vocab >= 1 && hidden >= 1, "degenerate model shape");
     let config = LmConfig { kind, vocab, hidden, layers };
+    let gates = kind.gates();
 
+    let mut verify = |name: &str, start: usize, end: usize| -> Result<()> {
+        match verifier.as_deref_mut() {
+            Some(v) => v.section(name, start, end),
+            None => Ok(()),
+        }
+    };
+    let shape = |name: &str, rows: usize, cols: usize, k: usize, wr: usize, wc: usize| {
+        ensure!(
+            rows == wr && cols == wc && k == w_bits,
+            "{name} shape {rows}x{cols} k={k} disagrees with header config {wr}x{wc} k={w_bits}"
+        );
+        Ok(())
+    };
+
+    let start = c.off;
     let (rows, cols, k, alphas, words) = c.matrix()?;
+    verify("embedding", start, c.off)?;
+    shape("embedding", rows, cols, k, vocab, hidden)?;
     let embedding = RowQuantized::from_raw_parts(rows, cols, k, alphas, &words)
         .map_err(|e| anyhow::anyhow!("embedding: {e}"))?;
     let mut packed_layers = Vec::with_capacity(layers);
     for l in 0..layers {
+        let start = c.off;
         let (rows, cols, k, alphas, words) = c.matrix()?;
+        verify(&format!("layer {l} wx"), start, c.off)?;
+        shape(&format!("layer {l} wx"), rows, cols, k, gates * hidden, hidden)?;
         let wx = PreparedGemm::from_raw_parts(rows, cols, k, words, alphas)
             .map_err(|e| anyhow::anyhow!("layer {l} wx: {e}"))?;
+        let start = c.off;
         let (rows, cols, k, alphas, words) = c.matrix()?;
+        verify(&format!("layer {l} wh"), start, c.off)?;
+        shape(&format!("layer {l} wh"), rows, cols, k, gates * hidden, hidden)?;
         let wh = PreparedGemm::from_raw_parts(rows, cols, k, words, alphas)
             .map_err(|e| anyhow::anyhow!("layer {l} wh: {e}"))?;
+        let start = c.off;
         let bias = c.vec()?;
+        verify(&format!("layer {l} bias"), start, c.off)?;
+        ensure!(
+            bias.len() == gates * hidden,
+            "layer {l} bias length {} disagrees with header config {}",
+            bias.len(),
+            gates * hidden
+        );
         packed_layers.push(PackedLayer { wx, wh, bias });
     }
+    let start = c.off;
     let (rows, cols, k, alphas, words) = c.matrix()?;
+    verify("softmax", start, c.off)?;
+    shape("softmax", rows, cols, k, vocab, hidden)?;
     let softmax = PreparedGemm::from_raw_parts(rows, cols, k, words, alphas)
         .map_err(|e| anyhow::anyhow!("softmax: {e}"))?;
+    let start = c.off;
     let softmax_bias = c.vec()?;
-    ensure!(c.off == len, "{} trailing bytes after the model payload", len - c.off);
+    verify("softmax_bias", start, c.off)?;
+    ensure!(
+        softmax_bias.len() == vocab,
+        "softmax_bias length {} disagrees with header vocab {vocab}",
+        softmax_bias.len()
+    );
     Ok(PackedLmParts {
         config,
         w_bits,
@@ -273,6 +470,105 @@ pub fn load(path: &Path) -> Result<PackedLmParts> {
     })
 }
 
+/// Load a published model's packed parts: one metadata read, one bulk
+/// `read_exact` into a `u64` arena, checksum verification (v2), then
+/// section walks that only copy plane/alpha buffers out — no parse, no
+/// requantize. Corruption is refused with a downcastable [`CorruptModel`]
+/// naming the first damaged section; v1 files load with an `unverified`
+/// stderr warning.
+pub fn load(path: &Path) -> Result<PackedLmParts> {
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let len = f.metadata()?.len();
+    let len = usize::try_from(len).context("file too large for this host")?;
+    ensure!(len >= 32, "not an .amqz file (shorter than the header)");
+    let mut arena = vec![0u64; len.div_ceil(8)];
+    // SAFETY: u8 has no alignment or validity requirements, and the byte
+    // view covers exactly the `len` bytes inside the arena's allocation.
+    let bytes = unsafe { std::slice::from_raw_parts_mut(arena.as_mut_ptr().cast::<u8>(), len) };
+    f.read_exact(bytes).with_context(|| format!("reading {}", path.display()))?;
+    drop(f);
+    // SAFETY: same allocation as above, now as a shared view for checksums.
+    let bytes = unsafe { std::slice::from_raw_parts(arena.as_ptr().cast::<u8>(), len) };
+
+    ensure!(u32_at(&arena, 0) == MAGIC, "not an .amqz file (bad magic)");
+    let version = u32_at(&arena, 4);
+    if version == VERSION_UNVERIFIED {
+        eprintln!(
+            "amqz: {} is a v1 file with no checksums — loaded unverified \
+             (republish to upgrade)",
+            path.display()
+        );
+        let mut c = Cursor { arena: &arena, len, off: 8 };
+        let parts = parse_body(&mut c, None)?;
+        ensure!(c.off == len, "{} trailing bytes after the model payload", len - c.off);
+        return Ok(parts);
+    }
+    ensure!(
+        version == VERSION,
+        "unsupported .amqz version {version} (expected {VERSION} or {VERSION_UNVERIFIED})"
+    );
+
+    // v2: parse the trailer from the end of the file, verify the whole
+    // file before trusting anything section-local.
+    if len < 32 + 24 || len % 8 != 0 {
+        return Err(corrupt("trailer", "file too short or misaligned for the checksum trailer"));
+    }
+    if u32_at(&arena, len - 16) != TRAILER_MAGIC {
+        return Err(corrupt(
+            "trailer",
+            "checksum trailer missing or damaged (torn write or truncation)",
+        ));
+    }
+    let count = u32_at(&arena, len - 12) as usize;
+    let file_crc = u32_at(&arena, len - 8);
+    let crc_area = match count.checked_mul(4).map(|b| b + if count % 2 == 1 { 4 } else { 0 }) {
+        Some(b) => b,
+        None => return Err(corrupt("trailer", "section count overflows")),
+    };
+    let body_len = match len.checked_sub(crc_area + 16) {
+        Some(b) if b >= 32 => b,
+        _ => return Err(corrupt("trailer", "section count exceeds the file size")),
+    };
+    let crc_ok = crc32c(&bytes[..len - 8]) == file_crc;
+    let expected: Vec<u32> = (0..count).map(|i| u32_at(&arena, body_len + 4 * i)).collect();
+
+    let mut verifier = Verifier { bytes, expected: &expected, seen: 0 };
+    let mut c = Cursor { arena: &arena, len: body_len, off: 8 };
+    let walked = parse_body(&mut c, Some(&mut verifier)).and_then(|parts| {
+        ensure!(
+            c.off == body_len,
+            "{} trailing bytes after the model payload",
+            body_len - c.off
+        );
+        ensure!(
+            verifier.seen == expected.len(),
+            "trailer lists {} sections, file has {}",
+            expected.len(),
+            verifier.seen
+        );
+        Ok(parts)
+    });
+    match walked {
+        Ok(parts) => {
+            if !crc_ok {
+                // Every section verified but the whole-file CRC did not:
+                // the damage is in the header or the trailer itself.
+                return Err(corrupt("file", "whole-file checksum mismatch outside any section"));
+            }
+            Ok(parts)
+        }
+        Err(e) => {
+            if !crc_ok && e.downcast_ref::<CorruptModel>().is_none() {
+                // The walk failed structurally AND the file checksum says
+                // the bytes are not what was published — report corruption,
+                // not a writer bug.
+                return Err(corrupt("file", format!("checksum mismatch; walk failed: {e:#}")));
+            }
+            Err(e)
+        }
+    }
+}
+
 /// [`load`] + [`RnnLm::from_packed`]: file → serving model in one call.
 pub fn load_model(path: &Path) -> Result<RnnLm> {
     RnnLm::from_packed(load(path)?)
@@ -280,6 +576,7 @@ pub fn load_model(path: &Path) -> Result<RnnLm> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::lm::PrecisionPolicy;
@@ -291,6 +588,17 @@ mod tests {
     fn tiny_model(kind: RnnKind) -> RnnLm {
         let config = LmConfig { kind, vocab: 50, hidden: 24, layers: 1 };
         RnnLm::random(config, 7, PrecisionPolicy::quantized(2, 2))
+    }
+
+    /// Trailer length for a 1-layer model: 6 sections → 24 CRC bytes (even
+    /// count, no pad) + 16 trailer-end bytes.
+    const TRAILER_LEN_1_LAYER: usize = 6 * 4 + 16;
+
+    fn corrupt_section(err: &anyhow::Error) -> String {
+        err.downcast_ref::<CorruptModel>()
+            .unwrap_or_else(|| panic!("expected CorruptModel, got: {err:#}"))
+            .section
+            .clone()
     }
 
     #[test]
@@ -336,12 +644,116 @@ mod tests {
             assert!(load(&path).is_err(), "truncation at {cut} must error");
         }
 
-        // Trailing junk.
+        // Trailing junk between the payload and where the trailer is
+        // expected breaks the end-anchored trailer parse.
         let mut long = good.clone();
         long.extend_from_slice(&[0u8; 16]);
         std::fs::write(&path, &long).unwrap();
-        assert!(load(&path).unwrap_err().to_string().contains("trailing"));
+        assert_eq!(corrupt_section(&load(&path).unwrap_err()), "trailer");
 
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn single_bit_flips_name_the_damaged_section() {
+        let model = tiny_model(RnnKind::Lstm);
+        let path = tmp("bitflip");
+        save(&path, &model.to_packed().unwrap()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let body_len = good.len() - TRAILER_LEN_1_LAYER;
+
+        // Offset 100 sits in the embedding alphas (first section).
+        let mut b = good.clone();
+        b[100] ^= 0x40;
+        std::fs::write(&path, &b).unwrap();
+        assert_eq!(corrupt_section(&load(&path).unwrap_err()), "embedding");
+
+        // A flip near the end of the body lands in softmax_bias.
+        let mut b = good.clone();
+        b[body_len - 5] ^= 0x01;
+        std::fs::write(&path, &b).unwrap();
+        assert_eq!(corrupt_section(&load(&path).unwrap_err()), "softmax_bias");
+
+        // A flip in the header (vocab field) fails the whole-file CRC and
+        // reports "file" even though the section walk itself derails.
+        let mut b = good.clone();
+        b[16] ^= 0x10;
+        std::fs::write(&path, &b).unwrap();
+        assert_eq!(corrupt_section(&load(&path).unwrap_err()), "file");
+
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn v1_files_load_unverified_and_bit_identical() {
+        let model = tiny_model(RnnKind::Gru);
+        let parts = model.to_packed().unwrap();
+        let path = tmp("v1");
+        save(&path, &parts).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // A v1 file is the v2 body with the version field rolled back and
+        // no trailer — the layouts are byte-identical by construction.
+        let mut v1 = good[..good.len() - TRAILER_LEN_1_LAYER].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &v1).unwrap();
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(loaded.embedding.planes, parts.embedding.planes);
+        assert_eq!(loaded.softmax.plane_words(), parts.softmax.plane_words());
+        assert_eq!(loaded.softmax_bias, parts.softmax_bias);
+    }
+
+    #[test]
+    fn failed_publish_leaves_the_previous_artifact_intact() {
+        let path = tmp("atomic");
+        let old = tiny_model(RnnKind::Lstm);
+        save(&path, &old.to_packed().unwrap()).unwrap();
+        let before = std::fs::read(&path).unwrap();
+
+        // The replacement publish dies at fsync: the destination must be
+        // byte-identical to the previous artifact and the temp file gone.
+        let fp = FaultPlan::parse("fsync_err=1").unwrap();
+        let new = tiny_model(RnnKind::Gru);
+        let err = save_with_faults(&path, &new.to_packed().unwrap(), Some(&fp)).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err:#}");
+        assert_eq!(fp.injected(), 1);
+        assert_eq!(std::fs::read(&path).unwrap(), before, "old artifact must survive");
+        let dir = path.parent().unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| {
+                n.starts_with(&*path.file_name().unwrap().to_string_lossy())
+                    && n.contains(".tmp.")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must be cleaned up: {leftovers:?}");
+        assert!(load(&path).is_ok());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_and_bitflipped_publishes_are_refused_at_load() {
+        // Torn write: the file ends mid-body, so the end-anchored trailer
+        // is gone and the loader refuses before trusting any section.
+        let path = tmp("torn");
+        let fp = FaultPlan::parse("torn_write=200").unwrap();
+        save_with_faults(&path, &tiny_model(RnnKind::Lstm).to_packed().unwrap(), Some(&fp))
+            .unwrap();
+        assert_eq!(fp.injected(), 1);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 200);
+        assert_eq!(corrupt_section(&load(&path).unwrap_err()), "trailer");
+        std::fs::remove_file(&path).unwrap();
+
+        // Bit flip: the per-section CRC names the damaged section.
+        let path = tmp("flip_publish");
+        let fp = FaultPlan::parse("bitflip=100:0x20").unwrap();
+        save_with_faults(&path, &tiny_model(RnnKind::Lstm).to_packed().unwrap(), Some(&fp))
+            .unwrap();
+        assert_eq!(fp.injected(), 1);
+        assert_eq!(corrupt_section(&load(&path).unwrap_err()), "embedding");
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -1,21 +1,40 @@
 //! Named-tensor binary checkpoint format, shared with the Layer-2 Python
-//! side (`python/compile/tensorio.py`).
+//! side (`python/compile/tensorio.py`), plus the `AMQS` session-snapshot
+//! container used by graceful drain/restore.
 //!
-//! Layout (little-endian):
+//! Tensor layout (little-endian):
 //! ```text
 //! magic "AMQT" | u32 version | u32 tensor_count
 //! per tensor: u32 name_len | name bytes | u32 ndim | u64 dims… | f32 data…
+//! ```
+//!
+//! Session-snapshot layout (little-endian, see [`SessionSnapshot`]):
+//! ```text
+//! magic "AMQS" | u32 version | u32 model_count
+//! per model: u32 name_len | name bytes
+//!            u8 kind (0=lstm, 1=gru) | u8×3 pad
+//!            u32 layers | u64 hidden | u64 session_count
+//!            per session: u64 id
+//!                         u32 hist_len | u64 tokens[hist_len]
+//!                         f32 state[layers · hidden · (2 lstm | 1 gru)]
+//! u32 crc32c of every preceding byte
 //! ```
 
 use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::lm::RnnKind;
+use crate::util::crc::crc32c;
 
 const MAGIC: &[u8; 4] = b"AMQT";
 const VERSION: u32 = 1;
+
+const SNAP_MAGIC: &[u8; 4] = b"AMQS";
+const SNAP_VERSION: u32 = 1;
 
 /// A named tensor: shape + row-major f32 data.
 #[derive(Clone, Debug, PartialEq)]
@@ -127,6 +146,203 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+// ------------------------------------------------------- session snapshots
+
+/// One drained session: client-chosen id, its capped token history, and the
+/// recurrent state flattened to `f32`s (LSTM: per layer `h` then `c`; GRU:
+/// per layer `h`). The layout is defined entirely by the owning
+/// [`ModelSessions`] header, so restore is a bit-exact memcpy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionRecord {
+    pub id: u64,
+    pub history: Vec<usize>,
+    pub state: Vec<f32>,
+}
+
+/// All drained sessions of one model lane, with enough of the model config
+/// to refuse a restore onto a lane with a different shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSessions {
+    pub model: String,
+    pub kind: RnnKind,
+    pub layers: usize,
+    pub hidden: usize,
+    pub sessions: Vec<SessionRecord>,
+}
+
+impl ModelSessions {
+    /// Flat `f32` length every session state of this lane must have.
+    pub fn state_len(&self) -> usize {
+        let per_layer = match self.kind {
+            RnnKind::Lstm => 2 * self.hidden,
+            RnnKind::Gru => self.hidden,
+        };
+        self.layers * per_layer
+    }
+}
+
+/// A drain-time snapshot of every live session, written atomically with a
+/// whole-file CRC32C so a crash during drain can never leave a snapshot
+/// that restores garbage state.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SessionSnapshot {
+    pub models: Vec<ModelSessions>,
+}
+
+/// Write `bytes` atomically: same-directory temp file + fsync + rename +
+/// best-effort directory fsync (same discipline as `data::amqz::save`).
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let name = path.file_name().context("snapshot path has no file name")?;
+    let tmp = dir.join(format!("{}.tmp.{}", name.to_string_lossy(), std::process::id()));
+    let result = (|| -> Result<()> {
+        let mut f = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        if let Ok(d) = File::open(&dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Byte cursor for snapshot decoding (unaligned little-endian reads).
+struct SnapCursor<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl SnapCursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        let end = self.off.checked_add(n).context("snapshot field overflows")?;
+        ensure!(end <= self.bytes.len(), "snapshot truncated");
+        let s = &self.bytes[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(n.checked_mul(4).context("state size overflows")?)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
+impl SessionSnapshot {
+    fn encode(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(SNAP_MAGIC);
+        buf.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.models.len() as u32).to_le_bytes());
+        for m in &self.models {
+            buf.extend_from_slice(&(m.model.len() as u32).to_le_bytes());
+            buf.extend_from_slice(m.model.as_bytes());
+            let kind = match m.kind {
+                RnnKind::Lstm => 0u8,
+                RnnKind::Gru => 1u8,
+            };
+            buf.extend_from_slice(&[kind, 0, 0, 0]);
+            buf.extend_from_slice(&(m.layers as u32).to_le_bytes());
+            buf.extend_from_slice(&(m.hidden as u64).to_le_bytes());
+            buf.extend_from_slice(&(m.sessions.len() as u64).to_le_bytes());
+            let want = m.state_len();
+            for s in &m.sessions {
+                ensure!(
+                    s.state.len() == want,
+                    "session {} state length {} != lane state length {want}",
+                    s.id,
+                    s.state.len()
+                );
+                buf.extend_from_slice(&s.id.to_le_bytes());
+                buf.extend_from_slice(&(s.history.len() as u32).to_le_bytes());
+                for &t in &s.history {
+                    buf.extend_from_slice(&(t as u64).to_le_bytes());
+                }
+                for &x in &s.state {
+                    buf.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+        }
+        buf.extend_from_slice(&crc32c(&buf).to_le_bytes());
+        Ok(buf)
+    }
+
+    /// Atomically write the checksummed snapshot.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.encode()?)
+    }
+
+    /// Load and CRC-verify a snapshot. Any damage — truncation, bit rot, a
+    /// torn write that escaped the atomic rename — is refused.
+    pub fn load(path: &Path) -> Result<SessionSnapshot> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        ensure!(bytes.len() >= 16, "not a session snapshot (too short)");
+        let (body, tail) = bytes.split_at(bytes.len() - 4);
+        let stored = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let got = crc32c(body);
+        ensure!(
+            got == stored,
+            "session snapshot checksum mismatch (stored {stored:#010x}, computed {got:#010x})"
+        );
+        let mut c = SnapCursor { bytes: body, off: 0 };
+        ensure!(c.take(4)? == SNAP_MAGIC, "not a session snapshot (bad magic)");
+        let version = c.u32()?;
+        ensure!(version == SNAP_VERSION, "unsupported snapshot version {version}");
+        let model_count = c.u32()? as usize;
+        let mut models = Vec::with_capacity(model_count.min(1024));
+        for _ in 0..model_count {
+            let name_len = c.u32()? as usize;
+            ensure!(name_len <= 64, "model name too long ({name_len})");
+            let name = std::str::from_utf8(c.take(name_len)?)
+                .context("model name not utf8")?
+                .to_string();
+            let kind = match c.take(4)?[0] {
+                0 => RnnKind::Lstm,
+                1 => RnnKind::Gru,
+                other => bail!("unknown model kind tag {other}"),
+            };
+            let layers = c.u32()? as usize;
+            let hidden = usize::try_from(c.u64()?).context("hidden overflows usize")?;
+            let session_count = usize::try_from(c.u64()?).context("count overflows usize")?;
+            let mut m = ModelSessions { model: name, kind, layers, hidden, sessions: Vec::new() };
+            let state_len = m.state_len();
+            for _ in 0..session_count {
+                let id = c.u64()?;
+                let hist_len = c.u32()? as usize;
+                let mut history = Vec::with_capacity(hist_len.min(4096));
+                for _ in 0..hist_len {
+                    history.push(usize::try_from(c.u64()?).context("token overflows usize")?);
+                }
+                let state = c.f32s(state_len)?;
+                m.sessions.push(SessionRecord { id, history, state });
+            }
+            models.push(m);
+        }
+        ensure!(c.off == body.len(), "trailing bytes after the snapshot payload");
+        Ok(SessionSnapshot { models })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +379,111 @@ mod tests {
     #[should_panic]
     fn shape_data_mismatch_panics() {
         Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    fn snap_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("amqs_unit_{}_{tag}.amqs", std::process::id()))
+    }
+
+    #[test]
+    fn session_snapshot_roundtrips_bit_exactly() {
+        // Awkward floats on purpose: negative zero and a subnormal must
+        // survive the trip bit-for-bit (restore is a memcpy, not a parse).
+        let snap = SessionSnapshot {
+            models: vec![
+                ModelSessions {
+                    model: "alpha".into(),
+                    kind: RnnKind::Lstm,
+                    layers: 2,
+                    hidden: 3,
+                    sessions: vec![
+                        SessionRecord {
+                            id: 7,
+                            history: vec![1, 2, 3],
+                            state: vec![-0.0, 1.5e-42, 0.25, -1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0],
+                        },
+                        SessionRecord { id: 8, history: vec![], state: vec![0.5; 12] },
+                    ],
+                },
+                ModelSessions {
+                    model: "beta".into(),
+                    kind: RnnKind::Gru,
+                    layers: 1,
+                    hidden: 4,
+                    sessions: vec![SessionRecord {
+                        id: 1,
+                        history: vec![9],
+                        state: vec![0.1, 0.2, 0.3, 0.4],
+                    }],
+                },
+            ],
+        };
+        let path = snap_path("roundtrip");
+        snap.save(&path).unwrap();
+        let loaded = SessionSnapshot::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(loaded.models.len(), snap.models.len());
+        for (a, b) in loaded.models.iter().zip(&snap.models) {
+            assert_eq!((&a.model, a.kind, a.layers, a.hidden), (&b.model, b.kind, b.layers, b.hidden));
+            for (x, y) in a.sessions.iter().zip(&b.sessions) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.history, y.history);
+                let xb: Vec<u32> = x.state.iter().map(|v| v.to_bits()).collect();
+                let yb: Vec<u32> = y.state.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(xb, yb, "state must roundtrip bit-exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let path = snap_path("empty");
+        let snap = SessionSnapshot::default();
+        snap.save(&path).unwrap();
+        assert_eq!(SessionSnapshot::load(&path).unwrap(), snap);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_or_truncated_snapshots_are_refused() {
+        let snap = SessionSnapshot {
+            models: vec![ModelSessions {
+                model: "m".into(),
+                kind: RnnKind::Gru,
+                layers: 1,
+                hidden: 2,
+                sessions: vec![SessionRecord { id: 3, history: vec![4, 5], state: vec![1.0, 2.0] }],
+            }],
+        };
+        let path = snap_path("corrupt");
+        snap.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        for at in [4, 16, good.len() / 2, good.len() - 2] {
+            let mut bad = good.clone();
+            bad[at] ^= 0x08;
+            std::fs::write(&path, &bad).unwrap();
+            let err = SessionSnapshot::load(&path).unwrap_err();
+            assert!(err.to_string().contains("checksum mismatch"), "flip at {at}: {err:#}");
+        }
+        for cut in [0, 3, good.len() / 2, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(SessionSnapshot::load(&path).is_err(), "truncation at {cut}");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mismatched_state_length_refuses_to_encode() {
+        let snap = SessionSnapshot {
+            models: vec![ModelSessions {
+                model: "m".into(),
+                kind: RnnKind::Lstm,
+                layers: 1,
+                hidden: 4,
+                sessions: vec![SessionRecord { id: 1, history: vec![], state: vec![0.0; 3] }],
+            }],
+        };
+        assert!(snap.save(&snap_path("badlen")).is_err());
     }
 }

@@ -38,6 +38,13 @@
 //! `--write-stall-ms` (event loop) closes connections that stop reading
 //! their replies. `AMQ_FAULTS` (testing only) injects deterministic faults
 //! — see `server::faults`.
+//!
+//! Zero-downtime ops: `--snapshot <f.amqs>` arms graceful drain — a `DRAIN`
+//! line or SIGTERM stops admission (`ERR DRAINING`), finishes in-flight
+//! decodes up to `--drain-deadline-ms`, and serializes live sessions to the
+//! checksummed snapshot; `--restore <f.amqs>` revives them at the next
+//! start, continuing bit-exactly. `HEALTH` answers `ok|degraded|draining`
+//! front-end-side even when the batcher thread is wedged.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -155,6 +162,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         cli.get_usize("session-ttl-secs", server_cfg.session_ttl_secs as usize)? as u64;
     server_cfg.write_stall_ms =
         cli.get_usize("write-stall-ms", server_cfg.write_stall_ms as usize)? as u64;
+    if let Some(p) = cli.get("snapshot") {
+        server_cfg.snapshot = Some(p.to_string());
+    }
+    server_cfg.drain_deadline_ms =
+        cli.get_usize("drain-deadline-ms", server_cfg.drain_deadline_ms as usize)? as u64;
     // Deterministic fault injection (testing only): `AMQ_FAULTS` parses
     // into a plan threaded through the batcher, registry, and event loop.
     let faults = amq::server::FaultPlan::from_env().map_err(anyhow::Error::msg)?;
@@ -241,6 +253,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         session_ttl: (server_cfg.session_ttl_secs > 0)
             .then(|| std::time::Duration::from_secs(server_cfg.session_ttl_secs)),
         faults: faults.clone(),
+        snapshot_path: server_cfg.snapshot.as_ref().map(PathBuf::from),
+        drain_deadline: std::time::Duration::from_millis(server_cfg.drain_deadline_ms),
     };
     let server = if named.is_empty() {
         // Single-model path: build (or load a checkpoint) in process; the
@@ -325,6 +339,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         );
         InferenceServer::with_registry(registry, batcher_cfg, exec)
     };
+    let mut server = server;
+    // `--restore <f.amqs>`: revive the sessions a previous instance drained
+    // into its snapshot, before any request can race them. Refusing (dirty
+    // store, checksum mismatch, shape mismatch) is a startup error — a
+    // half-restored server would silently violate bit-exactness.
+    if let Some(p) = cli.get("restore") {
+        let n = server
+            .restore_sessions(std::path::Path::new(p))
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("--restore {p}"))?;
+        eprintln!("restored {n} session(s) from {p}");
+    }
+    let health = server.health.clone();
     let (tx, rx) = mpsc::channel::<Work>();
     let counters = server.counters.clone();
     let batcher = std::thread::spawn(move || server.run(rx));
@@ -334,22 +361,36 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         if continuous { "continuous" } else { "grouped" },
         if server_cfg.event_loop { "event-loop" } else { "thread-per-conn" },
     );
+    #[cfg(unix)]
+    term::install();
     if server_cfg.event_loop {
         #[cfg(unix)]
         {
             let srv = amq::server::eventloop::serve(
                 &server_cfg.addr,
-                tx,
+                tx.clone(),
                 amq::server::eventloop::EventLoopConfig {
                     loops: server_cfg.loops,
                     write_stall: (server_cfg.write_stall_ms > 0)
                         .then(|| std::time::Duration::from_millis(server_cfg.write_stall_ms)),
                     counters: Some(counters),
                     faults,
+                    health: Some(health),
                 },
             )?;
             eprintln!("bound {} (event loop)", srv.addr);
-            srv.join(); // serves until the process is killed
+            // Serve until SIGTERM: drain live sessions into the snapshot,
+            // then shut the loops down. Without a signal this loop is the
+            // old "serve until killed" behavior.
+            loop {
+                if term::fired() {
+                    drain_on_term(&tx);
+                    srv.shutdown();
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            let _ = tx.send(Work::Shutdown);
             let _ = batcher.join();
             return Ok(());
         }
@@ -357,9 +398,72 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         bail!("--event-loop needs epoll/kqueue (unix-only); use the default front end");
     }
     let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let res = tcp::serve(&server_cfg.addr, tx, shutdown, |a| eprintln!("bound {a}"));
+    #[cfg(unix)]
+    {
+        // SIGTERM watcher: drain, then flip the accept loop's flag so
+        // `serve` joins its handlers and returns.
+        let flag = shutdown.clone();
+        let drain_tx = tx.clone();
+        std::thread::spawn(move || loop {
+            if term::fired() {
+                drain_on_term(&drain_tx);
+                flag.store(true, std::sync::atomic::Ordering::SeqCst);
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+    }
+    let res = tcp::serve_with_health(&server_cfg.addr, tx.clone(), shutdown, Some(health), |a| {
+        eprintln!("bound {a}")
+    });
+    let _ = tx.send(Work::Shutdown);
     let _ = batcher.join();
     res
+}
+
+/// Send `DRAIN` to the batcher on SIGTERM and report the outcome — the
+/// same path a `DRAIN` wire line takes, so kill-initiated and
+/// operator-initiated drains are indistinguishable to the snapshot.
+fn drain_on_term(tx: &mpsc::Sender<Work>) {
+    eprintln!("SIGTERM: draining…");
+    let (rtx, rrx) = mpsc::channel();
+    if tx.send(Work::Drain { respond: amq::server::Respond::Channel(rtx) }).is_err() {
+        eprintln!("drain: batcher already gone");
+        return;
+    }
+    match rrx.recv() {
+        Ok(reply) => eprintln!("drain: {}", amq::server::protocol::format_reply(&reply)),
+        Err(_) => eprintln!("drain: batcher dropped the request"),
+    }
+}
+
+/// SIGTERM latch: raw `signal(2)` against libc (same std-only FFI spirit
+/// as the event loop's poller) flips an atomic the serving loops poll. A
+/// handler may only do async-signal-safe work, so the drain itself runs on
+/// a normal thread that watches the latch.
+#[cfg(unix)]
+mod term {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(SIGTERM, on_term);
+        }
+    }
+
+    pub fn fired() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
 }
 
 /// Print the kernel-backend inventory: the resolved active backend (with
@@ -461,7 +565,14 @@ fn cmd_publish(cli: &Cli) -> Result<()> {
     };
     let quantize_ms = t0.elapsed().as_secs_f64() * 1e3;
     let parts = model.to_packed()?;
-    amqz::save(&out, &parts)?;
+    // `AMQ_FAULTS` (testing only) arms the publish path's torn-write /
+    // bitflip / fsync seams — CI's chaos leg proves a mangled publish is
+    // refused at load instead of served.
+    let faults = amq::server::FaultPlan::from_env().map_err(anyhow::Error::msg)?;
+    if faults.is_some() {
+        eprintln!("warning: AMQ_FAULTS is set — publish fault injection is ACTIVE");
+    }
+    amqz::save_with_faults(&out, &parts, faults.as_deref())?;
     let file_bytes = std::fs::metadata(&out)?.len();
     println!(
         "published {} vocab={} hidden={} layers={} W{}A{} → {}: {} bytes on disk \

@@ -140,6 +140,15 @@ pub struct Counters {
     /// Event-loop connections closed because their write buffer stayed
     /// unflushed past `--write-stall-ms` (slow-loris readers).
     pub write_stall_closes: AtomicU64,
+    /// `DRAIN` requests (wire verb or SIGTERM) that completed a snapshot.
+    pub drains: AtomicU64,
+    /// Sessions serialized into drain snapshots.
+    pub sessions_snapshotted: AtomicU64,
+    /// Sessions revived from `--restore` snapshots at startup.
+    pub sessions_restored: AtomicU64,
+    /// Model loads refused because checksum verification failed
+    /// (`ERR MODEL_CORRUPT`) — non-zero means a bad artifact is on disk.
+    pub corrupt_loads_rejected: AtomicU64,
 }
 
 impl Counters {

@@ -44,7 +44,7 @@ impl RnnKind {
 
 /// Model hyper-parameters (paper §5: PTB h=300, WikiText-2 h=512,
 /// Text8 h=1024; one hidden layer).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LmConfig {
     pub kind: RnnKind,
     pub vocab: usize,
@@ -99,6 +99,56 @@ enum Cell {
 pub enum LmState {
     Lstm(Vec<LstmState>),
     Gru(Vec<Vec<f32>>),
+}
+
+impl LmState {
+    /// Flatten to the session-snapshot layout: LSTM emits per layer `h`
+    /// then `c`, GRU per layer `h`. The inverse is [`LmState::from_flat`];
+    /// both are straight copies, so a snapshot/restore cycle is bit-exact.
+    pub fn flatten(&self) -> Vec<f32> {
+        match self {
+            LmState::Lstm(layers) => {
+                let mut out = Vec::with_capacity(layers.iter().map(|l| 2 * l.h.len()).sum());
+                for l in layers {
+                    out.extend_from_slice(&l.h);
+                    out.extend_from_slice(&l.c);
+                }
+                out
+            }
+            LmState::Gru(layers) => layers.concat(),
+        }
+    }
+
+    /// Rebuild a state from its [`LmState::flatten`] layout. Refuses a
+    /// buffer whose length disagrees with the config.
+    pub fn from_flat(
+        kind: RnnKind,
+        layers: usize,
+        hidden: usize,
+        data: &[f32],
+    ) -> Result<LmState, String> {
+        let per_layer = match kind {
+            RnnKind::Lstm => 2 * hidden,
+            RnnKind::Gru => hidden,
+        };
+        if data.len() != layers * per_layer {
+            return Err(format!(
+                "state length {} != {layers} layers x {per_layer} ({} {hidden}-wide)",
+                data.len(),
+                kind.name()
+            ));
+        }
+        Ok(match kind {
+            RnnKind::Lstm => LmState::Lstm(
+                data.chunks_exact(per_layer)
+                    .map(|ch| LstmState { h: ch[..hidden].to_vec(), c: ch[hidden..].to_vec() })
+                    .collect(),
+            ),
+            RnnKind::Gru => {
+                LmState::Gru(data.chunks_exact(per_layer).map(<[f32]>::to_vec).collect())
+            }
+        })
+    }
 }
 
 /// Recurrent state for a batch of `B` independent sessions, one entry per

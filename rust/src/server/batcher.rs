@@ -56,14 +56,34 @@
 //! `session_ttl`; both run loops tick on that interval even when idle.
 //! All of it is `Option`-gated — with the knobs off, the steady-state
 //! decode path is byte-for-byte the zero-allocation one.
+//!
+//! **Graceful drain** ([`Work::Drain`], wire `DRAIN`, or SIGTERM in
+//! `main`): admission stops (`ERR DRAINING`), in-flight decodes run to
+//! completion up to `drain_deadline` (stragglers answer `ERR DRAINING`
+//! like a deadline expiry), then every saved session — state plus its
+//! recent token history — is serialized to `snapshot_path` as a
+//! checksummed, atomically-published `.amqs` file
+//! ([`crate::data::checkpoint::SessionSnapshot`]). A restarted server
+//! passes that file to [`InferenceServer::restore_sessions`] and every
+//! revived session continues **bit-exactly** where it stopped; the
+//! snapshot/restore pair is a no-op on the decode path itself. The server
+//! keeps answering non-generation verbs after a drain, so operators can
+//! poll `STATS` while the load balancer bleeds connections.
+//!
+//! **Liveness** ([`HealthMonitor`]): the loop beats once per scheduling
+//! pass and each lane once per timestep. Front ends answer `HEALTH` from
+//! the shared monitor without touching the work channel, so a wedged
+//! batcher is exactly what the probe can still report.
 
 use std::collections::VecDeque;
 use std::fmt::Write as _;
 use std::panic::{self, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::data::checkpoint::{ModelSessions, SessionRecord, SessionSnapshot};
 use crate::exec::{Exec, ExecConfig};
 use crate::metrics::{Counters, LatencyRing};
 use crate::model::lm::{LmState, LmStateBatch, LmStepWorkspace};
@@ -71,6 +91,7 @@ use crate::model::math::argmax;
 use crate::model::OutputBatch;
 use crate::model::RnnLm;
 use crate::server::faults::FaultPlan;
+use crate::server::health::HealthMonitor;
 use crate::server::registry::ModelRegistry;
 use crate::server::session::SessionStore;
 
@@ -107,6 +128,13 @@ pub struct BatcherConfig {
     /// Deterministic fault-injection plan (`AMQ_FAULTS`); `None` reduces
     /// every injection seam to a branch on a null option.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Where `DRAIN` writes the session snapshot (CLI `--snapshot`).
+    /// `None` = drains are refused (there is nowhere durable to put the
+    /// sessions, so silently dropping them would be a lie).
+    pub snapshot_path: Option<PathBuf>,
+    /// How long a drain lets in-flight decodes finish before cutting the
+    /// stragglers off with `ERR DRAINING` (CLI `--drain-deadline-ms`).
+    pub drain_deadline: Duration,
 }
 
 impl Default for BatcherConfig {
@@ -122,6 +150,8 @@ impl Default for BatcherConfig {
             request_deadline: None,
             session_ttl: None,
             faults: None,
+            snapshot_path: None,
+            drain_deadline: Duration::from_millis(5000),
         }
     }
 }
@@ -156,6 +186,8 @@ pub enum Reply {
     Stats(String),
     /// Successful operator `RELOAD`; carries the canonical model name.
     Reloaded(String),
+    /// Successful `DRAIN`: how many sessions were snapshotted, and where.
+    Drained { sessions: u64, path: String },
     /// Request-level failure (out-of-vocab token, unknown model, model
     /// load failure, deadline expiry, poisoned model). Rendered as
     /// `ERR <message>`; the connection lives.
@@ -197,6 +229,10 @@ pub enum Work {
     /// Operator recovery: clear a poison quarantine and re-publish the
     /// model from its `.amqz` path.
     Reload { model: String, respond: Respond },
+    /// Graceful drain: stop admission, finish in-flight decodes up to the
+    /// drain deadline, snapshot every saved session to `snapshot_path`.
+    /// The server keeps answering non-generation verbs afterwards.
+    Drain { respond: Respond },
     Shutdown,
 }
 
@@ -317,6 +353,9 @@ impl ModelLane {
                 let slot = self.slots.swap_remove(i);
                 self.tokens.swap_remove(i);
                 self.model.swap_remove_state_column(&mut self.step_state, i);
+                // "As if END arrived" includes the token history: `take`
+                // at join already dropped the state, this clears the rest.
+                self.sessions.remove(slot.session);
                 Counters::inc(&counters.deadline_expirations, 1);
                 slot.respond.send(Reply::Error(format!(
                     "DEADLINE request exceeded {deadline_ms}ms deadline"
@@ -338,6 +377,10 @@ impl ModelLane {
         Counters::inc(&counters.tokens_generated, slot.out.len() as u64);
         latency.record(Duration::from_secs_f64((slot.queue_us + compute_us) / 1e6));
         self.sessions.put(slot.session, slot.state_buf);
+        // Record what this slot fed the model (prime then emissions) so a
+        // drain snapshot can show where the session left off.
+        self.sessions.append_history(slot.session, &slot.prime);
+        self.sessions.append_history(slot.session, &slot.out);
         slot.respond.send(Reply::Gen(Response {
             tokens: slot.out,
             queue_us: slot.queue_us,
@@ -412,6 +455,11 @@ pub struct InferenceServer {
     pending: VecDeque<Request>,
     pub latency: Arc<LatencyRing>,
     pub counters: Arc<Counters>,
+    /// Shared liveness state; front ends answer `HEALTH` from their clone
+    /// of this without ever touching the work channel.
+    pub health: Arc<HealthMonitor>,
+    /// Set by the first `DRAIN`; new generations answer `ERR DRAINING`.
+    draining: bool,
     /// Server birth (STATS `uptime_secs`).
     started: Instant,
     /// Last idle-session sweep; throttles `reap_sessions`.
@@ -455,6 +503,8 @@ impl InferenceServer {
             pending: VecDeque::new(),
             latency: Arc::new(LatencyRing::new(1024)),
             counters: Arc::new(Counters::new()),
+            health: Arc::new(HealthMonitor::default()),
+            draining: false,
             started: now,
             last_reap: now,
         }
@@ -485,11 +535,21 @@ impl InferenceServer {
     /// wire-ready message.
     fn ensure_lane(&mut self, name: &str) -> Result<(), String> {
         let lanes = &self.lanes;
-        let (model, evicted) = self
+        let acquired = self
             .registry
-            .acquire(name, |n| !lanes.iter().any(|(ln, l)| ln == n && !l.slots.is_empty()))?;
+            .acquire(name, |n| !lanes.iter().any(|(ln, l)| ln == n && !l.slots.is_empty()));
+        let (model, evicted) = match acquired {
+            Ok(v) => v,
+            Err(msg) => {
+                if msg.starts_with("MODEL_CORRUPT") {
+                    Counters::inc(&self.counters.corrupt_loads_rejected, 1);
+                }
+                return Err(msg);
+            }
+        };
         for gone in evicted {
             Counters::inc(&self.counters.evictions, 1);
+            self.health.lane_gone(&gone);
             self.lanes.retain(|(n, _)| *n != gone);
         }
         if self.lane(name).is_none() {
@@ -635,6 +695,7 @@ impl InferenceServer {
             }
             // Join pending sequences into slots freed by the last
             // timestep's leaves.
+            self.health.beat_loop();
             self.reap_sessions();
             self.admit();
             self.timestep_all();
@@ -705,7 +766,10 @@ impl InferenceServer {
     fn absorb(&mut self, w: Work) -> bool {
         match w {
             Work::Gen(mut req) => {
-                if self.pending.len() >= self.config.queue_depth {
+                if self.draining {
+                    Counters::inc(&self.counters.errors, 1);
+                    req.respond.send(Reply::Error(Self::draining_msg()));
+                } else if self.pending.len() >= self.config.queue_depth {
                     Counters::inc(&self.counters.shed, 1);
                     req.respond.send(Reply::Busy {
                         queued: self.pending.len(),
@@ -739,7 +803,22 @@ impl InferenceServer {
     fn dispatch_or_collect(&mut self, w: Work, gens: &mut Vec<Request>) -> bool {
         match w {
             Work::Gen(r) => {
-                gens.push(r);
+                if self.draining {
+                    Counters::inc(&self.counters.errors, 1);
+                    r.respond.send(Reply::Error(Self::draining_msg()));
+                } else {
+                    gens.push(r);
+                }
+                true
+            }
+            Work::Drain { respond } => {
+                // Finish the group collected so far first, so the drain
+                // point is a clean request boundary and those sessions'
+                // final states make it into the snapshot.
+                if !gens.is_empty() {
+                    self.process_batch(std::mem::take(gens));
+                }
+                self.drain(respond);
                 true
             }
             other => self.control(other),
@@ -784,6 +863,7 @@ impl InferenceServer {
                 }
                 respond.send(reply);
             }
+            Work::Drain { respond } => self.drain(respond),
             Work::Shutdown => return false,
         }
         true
@@ -816,14 +896,161 @@ impl InferenceServer {
             Ok((model, evicted)) => {
                 for gone in evicted {
                     Counters::inc(&self.counters.evictions, 1);
+                    self.health.lane_gone(&gone);
                     self.lanes.retain(|(n, _)| *n != gone);
                 }
                 self.lanes
                     .push((canonical.clone(), ModelLane::new(model, self.config.max_sessions)));
                 Reply::Reloaded(canonical)
             }
-            Err(msg) => Reply::Error(msg),
+            Err(msg) => {
+                if msg.starts_with("MODEL_CORRUPT") {
+                    Counters::inc(&self.counters.corrupt_loads_rejected, 1);
+                }
+                Reply::Error(msg)
+            }
         }
+    }
+
+    /// The wire-ready refusal every generation gets once a drain started.
+    fn draining_msg() -> String {
+        "DRAINING server is draining; retry against another instance".to_string()
+    }
+
+    /// `DRAIN` (wire verb or SIGTERM): stop admitting generations, run the
+    /// in-flight decodes to completion up to `drain_deadline` — the same
+    /// timestep loop as normal serving, so finishing under drain is
+    /// bit-exact — then snapshot every saved session to `snapshot_path`.
+    /// Stragglers past the deadline answer `ERR DRAINING` and their
+    /// sessions drop (the client cannot know how far they got). The queue
+    /// is flushed the same way. Non-generation verbs keep working after.
+    fn drain(&mut self, respond: Respond) {
+        let Some(path) = self.config.snapshot_path.clone() else {
+            Counters::inc(&self.counters.errors, 1);
+            respond.send(Reply::Error(
+                "DRAINING no snapshot path configured (start with --snapshot <path>)".into(),
+            ));
+            return;
+        };
+        self.draining = true;
+        self.health.set_draining();
+        let cutoff = Instant::now() + self.config.drain_deadline;
+        while self.total_slots() > 0 && Instant::now() < cutoff {
+            self.timestep_all();
+        }
+        for (_, lane) in self.lanes.iter_mut() {
+            while let Some(i) = lane.slots.len().checked_sub(1) {
+                let slot = lane.slots.swap_remove(i);
+                lane.tokens.swap_remove(i);
+                lane.model.swap_remove_state_column(&mut lane.step_state, i);
+                lane.sessions.remove(slot.session);
+                Counters::inc(&self.counters.errors, 1);
+                slot.respond.send(Reply::Error(Self::draining_msg()));
+            }
+        }
+        while let Some(req) = self.pending.pop_front() {
+            Counters::inc(&self.counters.errors, 1);
+            req.respond.send(Reply::Error(Self::draining_msg()));
+        }
+        match self.snapshot_sessions(&path) {
+            Ok(count) => {
+                Counters::inc(&self.counters.drains, 1);
+                Counters::inc(&self.counters.sessions_snapshotted, count);
+                respond
+                    .send(Reply::Drained { sessions: count, path: path.display().to_string() });
+            }
+            Err(msg) => {
+                Counters::inc(&self.counters.errors, 1);
+                respond.send(Reply::Error(msg));
+            }
+        }
+    }
+
+    /// Serialize every saved session (state + capped history) to `path`,
+    /// sorted by session id within each lane so identical server states
+    /// produce identical snapshot bytes. Lanes whose registry entry is
+    /// poisoned are skipped with a counted warning: a panic may have left
+    /// their states damaged, and faithfully restoring damage is still
+    /// damage.
+    fn snapshot_sessions(&mut self, path: &Path) -> Result<u64, String> {
+        let mut snapshot = SessionSnapshot::default();
+        let mut count = 0u64;
+        let mut skipped = 0usize;
+        for (name, lane) in &self.lanes {
+            if self.registry.entries().iter().any(|e| e.name == *name && e.poisoned) {
+                skipped += 1;
+                eprintln!(
+                    "drain: skipping poisoned lane '{name}' ({} sessions not snapshotted)",
+                    lane.sessions.len()
+                );
+                continue;
+            }
+            let cfg = lane.model.config;
+            let mut sessions: Vec<SessionRecord> = lane
+                .sessions
+                .iter()
+                .map(|(id, state, history)| SessionRecord {
+                    id,
+                    history: history.to_vec(),
+                    state: state.flatten(),
+                })
+                .collect();
+            sessions.sort_by_key(|s| s.id);
+            count += sessions.len() as u64;
+            snapshot.models.push(ModelSessions {
+                model: name.clone(),
+                kind: cfg.kind,
+                layers: cfg.layers,
+                hidden: cfg.hidden,
+                sessions,
+            });
+        }
+        if skipped > 0 {
+            eprintln!("drain: {skipped} poisoned lane(s) skipped");
+        }
+        snapshot.save(path).map_err(|e| format!("DRAINING snapshot failed: {e:#}"))?;
+        Ok(count)
+    }
+
+    /// Revive sessions from a drain snapshot (`--restore <path>`). Must
+    /// run before serving starts: a server that already holds sessions or
+    /// in-flight work refuses the whole restore (a dirty restore would
+    /// silently mix two histories). Every snapshotted model must resolve
+    /// to a lane with exactly the shape the states were saved under.
+    /// Restored states are bit-exact — a revived session's next tokens
+    /// equal an uninterrupted run's.
+    pub fn restore_sessions(&mut self, path: &Path) -> Result<u64, String> {
+        if self.total_slots() > 0
+            || !self.pending.is_empty()
+            || self.lanes.iter().any(|(_, l)| !l.sessions.is_empty())
+        {
+            return Err("dirty restore refused: server already has live sessions".into());
+        }
+        let snapshot = SessionSnapshot::load(path)
+            .map_err(|e| format!("restoring {}: {e:#}", path.display()))?;
+        let mut count = 0u64;
+        for m in snapshot.models {
+            let name = self.registry.resolve(Some(&m.model))?;
+            self.ensure_lane(&name)?;
+            let Some(lane) = self.lane_mut(&name) else {
+                return Err(format!("INTERNAL lane '{name}' missing after ensure"));
+            };
+            let cfg = lane.model.config;
+            if cfg.kind != m.kind || cfg.layers != m.layers || cfg.hidden != m.hidden {
+                return Err(format!(
+                    "snapshot model '{}' is shaped {:?}/{} layers/{} hidden but the serving \
+                     model is {:?}/{} layers/{} hidden; refusing to restore mismatched states",
+                    m.model, m.kind, m.layers, m.hidden, cfg.kind, cfg.layers, cfg.hidden
+                ));
+            }
+            for s in m.sessions {
+                let state = LmState::from_flat(cfg.kind, cfg.layers, cfg.hidden, &s.state)?;
+                lane.sessions.restore(s.id, state, s.history);
+                count += 1;
+            }
+        }
+        Counters::inc(&self.counters.sessions_restored, count);
+        Ok(count)
     }
 
     /// SCORE with the same admission-time model resolution and vocab
@@ -863,7 +1090,8 @@ impl InferenceServer {
                 "{} uptime={}s requests={} tokens={} batches={} timesteps={} shed={} errors={} \
                  active={} queued={} evictions={} sessions={} models={} model_evictions={} \
                  lane_panics={} deadline_expirations={} sessions_reaped={} write_stall_closes={} \
-                 faults_injected={} mode={} kernel={} l2_kb={} threads={}",
+                 faults_injected={} drains={} sessions_snapshotted={} sessions_restored={} \
+                 corrupt_loads_rejected={} health={} mode={} kernel={} l2_kb={} threads={}",
                 snap.report("latency"),
                 uptime_secs,
                 Counters::get(&c.requests),
@@ -883,6 +1111,11 @@ impl InferenceServer {
                 Counters::get(&c.sessions_reaped),
                 Counters::get(&c.write_stall_closes),
                 faults_injected,
+                Counters::get(&c.drains),
+                Counters::get(&c.sessions_snapshotted),
+                Counters::get(&c.sessions_restored),
+                Counters::get(&c.corrupt_loads_rejected),
+                self.health.status().0,
                 if self.config.continuous { "continuous" } else { "grouped" },
                 crate::kernels::backend::describe(crate::kernels::backend::active()),
                 crate::kernels::cost::l2_bytes() / 1024,
@@ -921,6 +1154,8 @@ impl InferenceServer {
              \"evictions\":{},\"models\":{},\"model_evictions\":{},\
              \"lane_panics\":{},\"deadline_expirations\":{},\"sessions_reaped\":{},\
              \"write_stall_closes\":{},\"faults_injected\":{},\
+             \"drains\":{},\"sessions_snapshotted\":{},\"sessions_restored\":{},\
+             \"corrupt_loads_rejected\":{},\"health\":\"{}\",\
              \"kernel\":\"{}\",\"l2_kb\":{},\"threads\":{},\
              \"latency_us\":{{\"count\":{},\"window\":{},\
              \"mean\":{:.1},\"p50\":{:.1},\"p95\":{:.1},\"p99\":{:.1},\"max\":{:.1}}}}}",
@@ -945,6 +1180,11 @@ impl InferenceServer {
             Counters::get(&c.sessions_reaped),
             Counters::get(&c.write_stall_closes),
             faults_injected,
+            Counters::get(&c.drains),
+            Counters::get(&c.sessions_snapshotted),
+            Counters::get(&c.sessions_restored),
+            Counters::get(&c.corrupt_loads_rejected),
+            self.health.status().0,
             crate::kernels::backend::describe(crate::kernels::backend::active()),
             crate::kernels::cost::l2_bytes() / 1024,
             self.exec.threads(),
@@ -973,6 +1213,7 @@ impl InferenceServer {
     /// `AssertUnwindSafe` is sound because a poisoned lane is discarded
     /// wholesale below, never observed again in a broken state.
     fn timestep_all(&mut self) {
+        self.health.beat_loop();
         if let Some(d) = self.config.request_deadline {
             self.expire_deadlines(d);
         }
@@ -981,6 +1222,7 @@ impl InferenceServer {
             let exec = &self.exec;
             let counters = &self.counters;
             let latency = &self.latency;
+            let health = &self.health;
             let faults = self.config.faults.as_deref();
             for (name, lane) in self.lanes.iter_mut() {
                 if lane.slots.is_empty() {
@@ -996,6 +1238,10 @@ impl InferenceServer {
                 }));
                 if outcome.is_err() {
                     poisoned.push(name.clone());
+                } else {
+                    // Post-step beat: a stalled or wedged step never beats,
+                    // which is exactly what flips HEALTH to degraded.
+                    health.beat_lane(name, lane.steps, lane.slots.len());
                 }
             }
         }
@@ -1037,6 +1283,7 @@ impl InferenceServer {
     fn quarantine(&mut self, name: &str) {
         Counters::inc(&self.counters.lane_panics, 1);
         self.registry.poison(name);
+        self.health.lane_gone(name);
         eprintln!("lane '{name}' poisoned by a panic; quarantined until RELOAD {name}");
         if let Some(i) = self.lanes.iter().position(|(n, _)| n == name) {
             let (_, lane) = self.lanes.remove(i);
@@ -1593,11 +1840,17 @@ mod tests {
             "\"sessions_reaped\":0",
             "\"write_stall_closes\":0",
             "\"faults_injected\":0",
+            "\"drains\":0",
+            "\"sessions_snapshotted\":0",
+            "\"sessions_restored\":0",
+            "\"corrupt_loads_rejected\":0",
+            "\"health\":\"ok\"",
         ] {
             assert!(stats.contains(key), "missing {key} in {stats}");
         }
         let text = s.stats_payload(true);
         assert!(text.contains("lane_panics=0") && text.contains("uptime="), "{text}");
+        assert!(text.contains("drains=0") && text.contains("health=ok"), "{text}");
         // RELOAD of an unknown model is a wire-ready error.
         match s.reload_model("nope") {
             Reply::Error(msg) => assert_eq!(msg, "unknown model 'nope'"),
@@ -1647,5 +1900,201 @@ mod tests {
         assert_eq!(Counters::get(&counters.shed), 1);
         tx.send(Work::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    fn drain_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("batcher_drain_{}_{tag}.amqs", std::process::id()))
+    }
+
+    #[test]
+    fn drain_snapshots_sessions_and_restore_continues_bit_exactly() {
+        let path = drain_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+
+        // Reference: two requests on one session, no restart in between.
+        let mut a = tiny_server();
+        let (r1, rx1) = gen_req(9, 3, vec![4]);
+        a.process_batch(vec![r1]);
+        let first_ref = recv_gen(&rx1).tokens;
+        let (r2, rx2) = gen_req(9, 3, vec![11]);
+        a.process_batch(vec![r2]);
+        let second_ref = recv_gen(&rx2).tokens;
+
+        // Interrupted run: first request, then DRAIN.
+        let mut s = tiny_server_with(BatcherConfig {
+            snapshot_path: Some(path.clone()),
+            ..tiny_config()
+        });
+        let (r1, rx1) = gen_req(9, 3, vec![4]);
+        s.process_batch(vec![r1]);
+        assert_eq!(recv_gen(&rx1).tokens, first_ref);
+        let (dtx, drx) = mpsc::channel();
+        s.drain(Respond::Channel(dtx));
+        match drx.recv().unwrap() {
+            Reply::Drained { sessions, path: p } => {
+                assert_eq!(sessions, 1);
+                assert_eq!(p, path.display().to_string());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Counters::get(&s.counters.drains), 1);
+        assert_eq!(Counters::get(&s.counters.sessions_snapshotted), 1);
+
+        // Admission is closed now.
+        let (late, late_rx) = gen_req(10, 2, vec![1]);
+        assert!(s.absorb(Work::Gen(late)));
+        match late_rx.recv().unwrap() {
+            Reply::Error(msg) => assert!(msg.starts_with("DRAINING "), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+
+        // The snapshot carries the session's history: prime + emissions.
+        let snap = SessionSnapshot::load(&path).unwrap();
+        assert_eq!(snap.models.len(), 1);
+        let rec = &snap.models[0].sessions[0];
+        assert_eq!(rec.id, 9);
+        let mut expect_hist = vec![4usize];
+        expect_hist.extend_from_slice(&first_ref);
+        assert_eq!(rec.history, expect_hist);
+
+        // Restore into a fresh server: the revived session's continuation
+        // is byte-identical to the never-restarted reference.
+        let mut fresh = tiny_server();
+        assert_eq!(fresh.restore_sessions(&path).unwrap(), 1);
+        assert_eq!(Counters::get(&fresh.counters.sessions_restored), 1);
+        let (r2, rx2) = gen_req(9, 3, vec![11]);
+        fresh.process_batch(vec![r2]);
+        assert_eq!(recv_gen(&rx2).tokens, second_ref, "restored continuation diverged");
+
+        // A second restore onto the now-dirty server refuses.
+        let err = fresh.restore_sessions(&path).unwrap_err();
+        assert!(err.starts_with("dirty restore refused"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn drain_refuses_without_a_path_and_handles_empty_stores() {
+        let mut s = tiny_server();
+        let (dtx, drx) = mpsc::channel();
+        s.drain(Respond::Channel(dtx));
+        match drx.recv().unwrap() {
+            Reply::Error(msg) => assert!(msg.starts_with("DRAINING no snapshot path"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+
+        // With a path but no sessions: an empty snapshot publishes and
+        // restores cleanly.
+        let path = drain_path("empty");
+        let _ = std::fs::remove_file(&path);
+        let mut s = tiny_server_with(BatcherConfig {
+            snapshot_path: Some(path.clone()),
+            ..tiny_config()
+        });
+        let (dtx, drx) = mpsc::channel();
+        s.drain(Respond::Channel(dtx));
+        match drx.recv().unwrap() {
+            Reply::Drained { sessions, .. } => assert_eq!(sessions, 0),
+            other => panic!("{other:?}"),
+        }
+        let mut fresh = tiny_server();
+        assert_eq!(fresh.restore_sessions(&path).unwrap(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn poisoned_lanes_are_skipped_by_the_snapshot() {
+        let path = drain_path("poison");
+        let _ = std::fs::remove_file(&path);
+        let mut s = tiny_server_with(BatcherConfig {
+            snapshot_path: Some(path.clone()),
+            ..tiny_config()
+        });
+        let (r, rx) = gen_req(1, 2, vec![3]);
+        s.process_batch(vec![r]);
+        recv_gen(&rx);
+        // A panic between requests poisons the entry; the lane's saved
+        // state is suspect, so the drain must not persist it.
+        s.registry.poison(DEFAULT_MODEL);
+        let (dtx, drx) = mpsc::channel();
+        s.drain(Respond::Channel(dtx));
+        match drx.recv().unwrap() {
+            Reply::Drained { sessions, .. } => {
+                assert_eq!(sessions, 0, "poisoned lane must be skipped");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Counters::get(&s.counters.sessions_snapshotted), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mid_flight_drain_cuts_stragglers_and_drops_their_sessions() {
+        let path = drain_path("cut");
+        let _ = std::fs::remove_file(&path);
+        // Zero drain deadline: anything still in flight when DRAIN lands
+        // is cut off with ERR DRAINING instead of running to completion.
+        let s = tiny_server_with(BatcherConfig {
+            continuous: true,
+            snapshot_path: Some(path.clone()),
+            drain_deadline: Duration::from_millis(0),
+            ..tiny_config()
+        });
+        let counters = s.counters.clone();
+        let (tx, rx) = mpsc::channel();
+        // Stuffed before the loop starts: the huge request is in a slot
+        // (or the queue) when the drain arrives right behind it.
+        let (victim, victim_rx) = gen_req(3, 100_000, vec![1, 2]);
+        tx.send(Work::Gen(victim)).unwrap();
+        let (dtx, drx) = mpsc::channel();
+        tx.send(Work::Drain { respond: Respond::Channel(dtx) }).unwrap();
+        let handle = std::thread::spawn(move || s.run(rx));
+        match victim_rx.recv().unwrap() {
+            Reply::Error(msg) => assert!(msg.starts_with("DRAINING "), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        match drx.recv().unwrap() {
+            Reply::Drained { sessions, .. } => {
+                assert_eq!(sessions, 0, "a cut session must not be snapshotted");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Counters::get(&counters.drains), 1);
+        // Non-generation verbs still answer after the drain.
+        let (stx, srx) = mpsc::channel();
+        tx.send(Work::Stats { text: false, respond: Respond::Channel(stx) }).unwrap();
+        let Reply::Stats(stats) = srx.recv().unwrap() else { panic!() };
+        assert!(stats.contains("\"drains\":1"), "{stats}");
+        assert!(stats.contains("\"health\":\"draining\""), "{stats}");
+        tx.send(Work::Shutdown).unwrap();
+        handle.join().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn restore_refuses_a_shape_mismatched_snapshot() {
+        let path = drain_path("shape");
+        let _ = std::fs::remove_file(&path);
+        let mut s = tiny_server_with(BatcherConfig {
+            snapshot_path: Some(path.clone()),
+            ..tiny_config()
+        });
+        let (r, rx) = gen_req(1, 2, vec![3]);
+        s.process_batch(vec![r]);
+        recv_gen(&rx);
+        let (dtx, drx) = mpsc::channel();
+        s.drain(Respond::Channel(dtx));
+        assert!(matches!(drx.recv().unwrap(), Reply::Drained { sessions: 1, .. }));
+
+        // Same model name, different architecture: the restore must refuse
+        // rather than pour LSTM floats into a GRU state.
+        let gru = RnnLm::random(
+            LmConfig { kind: RnnKind::Gru, vocab: 40, hidden: 16, layers: 1 },
+            5,
+            PrecisionPolicy::quantized(2, 2),
+        );
+        let mut other = InferenceServer::new(Arc::new(gru), tiny_config());
+        let err = other.restore_sessions(&path).unwrap_err();
+        assert!(err.contains("refusing to restore"), "{err}");
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -64,6 +64,7 @@ use crate::metrics::Counters;
 
 use super::batcher::{Reply, ReplySink, Request, Respond, Work};
 use super::faults::FaultPlan;
+use super::health::HealthMonitor;
 use super::protocol::{format_reply, parse_request, WireRequest};
 use conn::Connection;
 use poller::{PollEvent, Poller, WakeReader, Waker};
@@ -87,6 +88,10 @@ pub struct EventLoopConfig {
     pub counters: Option<Arc<Counters>>,
     /// Injected fault plan (testing only; `None` in production).
     pub faults: Option<Arc<FaultPlan>>,
+    /// Shared health monitor: `HEALTH` lines are answered loop-side,
+    /// never via the work channel, so a wedged batcher cannot wedge the
+    /// probe that reports it. `None` answers `ERR INTERNAL`.
+    pub health: Option<Arc<HealthMonitor>>,
 }
 
 impl EventLoopConfig {
@@ -190,6 +195,7 @@ pub fn serve(addr: &str, work: Sender<Work>, config: EventLoopConfig) -> Result<
             write_stall: config.write_stall,
             counters: config.counters.clone(),
             faults: config.faults.clone(),
+            health: config.health.clone(),
         };
         handles.push(
             std::thread::Builder::new()
@@ -225,6 +231,7 @@ struct LoopCtx {
     write_stall: Option<Duration>,
     counters: Option<Arc<Counters>>,
     faults: Option<Arc<FaultPlan>>,
+    health: Option<Arc<HealthMonitor>>,
 }
 
 fn run_loop(id: usize, mut ctx: LoopCtx) {
@@ -267,7 +274,14 @@ fn run_loop(id: usize, mut ctx: LoopCtx) {
                             // so leaving them here would replay them on the
                             // next peer's read.
                             for line in lines.drain(..) {
-                                dispatch_line(conn, token, &line, &ctx.work, &sink);
+                                dispatch_line(
+                                    conn,
+                                    token,
+                                    &line,
+                                    &ctx.work,
+                                    &sink,
+                                    ctx.health.as_deref(),
+                                );
                             }
                             if let Err(e) = framing {
                                 // Framing abuse (oversized line, non-UTF-8)
@@ -374,12 +388,15 @@ fn register_conn(
 
 /// Parse one request line and route it: malformed lines answer in place,
 /// valid ones reserve an in-order reply slot and go to the batcher.
+/// `HEALTH` answers loop-side from the shared monitor — it must respond
+/// even when the batcher thread is wedged.
 fn dispatch_line(
     conn: &mut Connection,
     token: u64,
     line: &str,
     work: &Sender<Work>,
     sink: &Arc<dyn ReplySink>,
+    health: Option<&HealthMonitor>,
 ) {
     let req = match parse_request(line) {
         Ok(req) => req,
@@ -388,6 +405,13 @@ fn dispatch_line(
             return;
         }
     };
+    if matches!(req, WireRequest::Health) {
+        conn.push_ready(match health {
+            Some(h) => format!("OK HEALTH {}", h.wire_line()),
+            None => "ERR INTERNAL no health monitor wired to this front end".to_string(),
+        });
+        return;
+    }
     let serial = conn.push_waiting();
     let respond = Respond::Sink { sink: sink.clone(), conn: token, serial };
     let w = match req {
@@ -403,6 +427,8 @@ fn dispatch_line(
         WireRequest::End { session, model } => Work::End { session, model, respond },
         WireRequest::Stats { text } => Work::Stats { text, respond },
         WireRequest::Reload { model } => Work::Reload { model, respond },
+        WireRequest::Drain => Work::Drain { respond },
+        WireRequest::Health => unreachable!("HEALTH short-circuits above"),
     };
     if work.send(w).is_err() {
         conn.complete(serial, "ERR server shutting down".to_string());
@@ -469,6 +495,9 @@ mod tests {
                     respond.send(Reply::Stats(if text { "text".into() } else { "{}".into() }))
                 }
                 Work::Reload { model, respond } => respond.send(Reply::Reloaded(model)),
+                Work::Drain { respond } => {
+                    respond.send(Reply::Drained { sessions: 0, path: "/dev/null".into() })
+                }
                 Work::Shutdown => break,
             }
         }

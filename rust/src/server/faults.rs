@@ -22,6 +22,9 @@
 //! | `clog_write` | `N` | the `N`-th socket write clogs its connection: that write and all later ones on the same connection pretend `WouldBlock` (simulated zero-window peer; arms `--write-stall-ms`) |
 //! | `accept_err` | `N` | the first `N` accept passes fail `EMFILE`-style (level-triggered readiness retries them, so clients see delay, not refusal) |
 //! | `load_err` | `NAME` | the next registry `.amqz` load of `NAME` fails (fires once) |
+//! | `torn_write` | `N` | truncate the next published `.amqz` at byte offset `N` (fires once; simulates a torn write / post-publish bit rot that the checksum trailer must refuse at load) |
+//! | `bitflip` | `OFF:MASK` | XOR the published byte at offset `OFF` with `MASK` (hex `0x..` or decimal; fires once; the per-section CRC must name the damaged section) |
+//! | `fsync_err` | flag (bare or `=1`) | the next publish fails at its fsync boundary (fires once; the previous artifact must survive untouched) |
 //! | `seed` | `N` | LCG seed for the probabilistic faults (default `0x5eed`) |
 //!
 //! The plan also counts every fault it actually fires ([`injected`]) —
@@ -60,6 +63,9 @@ pub struct FaultPlan {
     clog_write: u64,
     accept_err: u64,
     load_err: Option<String>,
+    torn_write: Option<u64>,
+    bitflip: Option<(u64, u8)>,
+    fsync_err: bool,
     /// Runtime state: LCG cursor, global write counter, accept-failure
     /// budget used, fire-once latches, and the injected-fault count.
     rng: AtomicU64,
@@ -68,6 +74,9 @@ pub struct FaultPlan {
     panic_fired: AtomicU64,
     stall_fired: AtomicU64,
     load_fired: AtomicU64,
+    torn_fired: AtomicU64,
+    bitflip_fired: AtomicU64,
+    fsync_fired: AtomicU64,
     injected: AtomicU64,
 }
 
@@ -110,6 +119,23 @@ fn parse_stall(key: &str, value: &str) -> Result<(String, u64, u64), String> {
     Ok((name, step, parse_count(key, ms)?))
 }
 
+/// `OFF:MASK` → `(offset, mask)`, mask in decimal or `0x..` hex.
+fn parse_bitflip(key: &str, value: &str) -> Result<(u64, u8), String> {
+    let (off, mask) = value
+        .split_once(':')
+        .ok_or_else(|| format!("fault {key}: want OFF:MASK, got '{value}'"))?;
+    let off = parse_count(key, off)?;
+    let mask = match mask.strip_prefix("0x").or_else(|| mask.strip_prefix("0X")) {
+        Some(hex) => u8::from_str_radix(hex, 16)
+            .map_err(|_| format!("fault {key}: want a byte mask, got '{mask}'"))?,
+        None => mask.parse::<u8>().map_err(|_| format!("fault {key}: want a byte mask, got '{mask}'"))?,
+    };
+    if mask == 0 {
+        return Err(format!("fault {key}: mask 0 flips nothing"));
+    }
+    Ok((off, mask))
+}
+
 impl FaultPlan {
     /// Parse a plan from its `AMQ_FAULTS` syntax. An empty spec is a valid
     /// plan that never fires.
@@ -117,6 +143,10 @@ impl FaultPlan {
         let mut plan = FaultPlan::default();
         let mut seed = 0x5eed_u64;
         for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if item == "fsync_err" {
+                plan.fsync_err = true;
+                continue;
+            }
             let (key, value) =
                 item.split_once('=').ok_or_else(|| format!("fault '{item}': want key=value"))?;
             match key {
@@ -128,6 +158,9 @@ impl FaultPlan {
                 "clog_write" => plan.clog_write = parse_count(key, value)?,
                 "accept_err" => plan.accept_err = parse_count(key, value)?,
                 "load_err" => plan.load_err = Some(value.to_string()),
+                "torn_write" => plan.torn_write = Some(parse_count(key, value)?),
+                "bitflip" => plan.bitflip = Some(parse_bitflip(key, value)?),
+                "fsync_err" => plan.fsync_err = parse_count(key, value)? != 0,
                 "seed" => seed = parse_count(key, value)?,
                 other => return Err(format!("unknown fault key '{other}'")),
             }
@@ -247,6 +280,40 @@ impl FaultPlan {
             _ => false,
         }
     }
+
+    /// Publish seam: truncate the encoded `.amqz` at this byte offset
+    /// before it hits disk (fires once per plan).
+    pub fn on_publish_torn_write(&self) -> Option<usize> {
+        match self.torn_write {
+            Some(n) if once(&self.torn_fired) => {
+                self.fire();
+                Some(n as usize)
+            }
+            _ => None,
+        }
+    }
+
+    /// Publish seam: XOR one byte of the encoded `.amqz` (fires once).
+    pub fn on_publish_bitflip(&self) -> Option<(usize, u8)> {
+        match self.bitflip {
+            Some((off, mask)) if once(&self.bitflip_fired) => {
+                self.fire();
+                Some((off as usize, mask))
+            }
+            _ => None,
+        }
+    }
+
+    /// Publish seam: true means this publish fails at its fsync boundary
+    /// (fires once). The caller must leave the previous artifact intact.
+    pub fn on_publish_fsync_err(&self) -> bool {
+        if self.fsync_err && once(&self.fsync_fired) {
+            self.fire();
+            true
+        } else {
+            false
+        }
+    }
 }
 
 #[cfg(test)]
@@ -273,6 +340,34 @@ mod tests {
         assert!(FaultPlan::parse("short_write=1.5").is_err(), "probability range");
         assert!(FaultPlan::parse("write_err=x").is_err());
         assert!(FaultPlan::parse("").unwrap().panic_lane.is_none(), "empty plan is inert");
+
+        let p = FaultPlan::parse("torn_write=4096, bitflip=64:0x80, fsync_err").unwrap();
+        assert_eq!(p.torn_write, Some(4096));
+        assert_eq!(p.bitflip, Some((64, 0x80)));
+        assert!(p.fsync_err);
+        assert!(FaultPlan::parse("fsync_err=1").unwrap().fsync_err, "key=value form too");
+        assert!(!FaultPlan::parse("fsync_err=0").unwrap().fsync_err);
+        assert!(FaultPlan::parse("bitflip=10").is_err(), "missing :MASK");
+        assert!(FaultPlan::parse("bitflip=10:0").is_err(), "mask 0 flips nothing");
+        assert!(FaultPlan::parse("bitflip=10:0xzz").is_err());
+    }
+
+    #[test]
+    fn publish_faults_fire_exactly_once() {
+        let p = FaultPlan::parse("torn_write=100,bitflip=5:0x01,fsync_err").unwrap();
+        assert_eq!(p.on_publish_torn_write(), Some(100));
+        assert_eq!(p.on_publish_torn_write(), None, "latched");
+        assert_eq!(p.on_publish_bitflip(), Some((5, 0x01)));
+        assert_eq!(p.on_publish_bitflip(), None, "latched");
+        assert!(p.on_publish_fsync_err());
+        assert!(!p.on_publish_fsync_err(), "latched");
+        assert_eq!(p.injected(), 3);
+
+        let inert = FaultPlan::parse("seed=1").unwrap();
+        assert_eq!(inert.on_publish_torn_write(), None);
+        assert_eq!(inert.on_publish_bitflip(), None);
+        assert!(!inert.on_publish_fsync_err());
+        assert_eq!(inert.injected(), 0);
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Watchdog health: liveness signals the serving loop publishes and the
+//! front ends read **without going through the work channel** — a `HEALTH`
+//! probe must answer even when the batcher thread is wedged, which is
+//! exactly the situation it exists to report.
+//!
+//! The batcher beats [`HealthMonitor::beat_loop`] once per scheduling pass
+//! and [`HealthMonitor::beat_lane`] once per lane timestep. The verdict is
+//! load-aware: a silent loop with no occupied decode slots is just idle
+//! (`ok`), the same silence with sessions mid-decode is `degraded` with
+//! the stuck lane named. `DRAIN`/SIGTERM flips the monitor to `draining`,
+//! which wins over everything else — probes and load balancers see the
+//! instance leave rotation before admission actually stops.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Silence threshold on an occupied lane before `HEALTH` reports
+/// `degraded`. Generously above any sane timestep (which is µs–ms scale).
+pub const DEFAULT_STUCK: Duration = Duration::from_secs(2);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthStatus {
+    Ok,
+    Degraded,
+    Draining,
+}
+
+impl fmt::Display for HealthStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            HealthStatus::Ok => "ok",
+            HealthStatus::Degraded => "degraded",
+            HealthStatus::Draining => "draining",
+        })
+    }
+}
+
+/// Last-seen progress of one model lane.
+struct LaneBeat {
+    name: String,
+    /// `now_ms` at the lane's last completed timestep (0 = never stepped).
+    last_ms: u64,
+    steps: u64,
+    occupied: usize,
+}
+
+/// Shared liveness state: one writer (the batcher thread), many readers
+/// (front-end connections answering `HEALTH`, the monitor thread in
+/// `main`). Atomics plus one short-critical-section mutex — reading a
+/// verdict never blocks on decode work.
+pub struct HealthMonitor {
+    started: Instant,
+    stuck_after_ms: u64,
+    /// `now_ms + 1` at the loop's last pass (0 = never beat).
+    loop_beat_ms: AtomicU64,
+    draining: AtomicBool,
+    lanes: Mutex<Vec<LaneBeat>>,
+}
+
+impl Default for HealthMonitor {
+    fn default() -> Self {
+        Self::new(DEFAULT_STUCK)
+    }
+}
+
+impl HealthMonitor {
+    pub fn new(stuck_after: Duration) -> Self {
+        HealthMonitor {
+            started: Instant::now(),
+            stuck_after_ms: stuck_after.as_millis().max(1) as u64,
+            loop_beat_ms: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            lanes: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// The batcher's scheduling pass heartbeat.
+    pub fn beat_loop(&self) {
+        self.loop_beat_ms.store(self.now_ms() + 1, Ordering::Relaxed);
+    }
+
+    /// One lane finished a timestep (or reported its idle occupancy).
+    pub fn beat_lane(&self, name: &str, steps: u64, occupied: usize) {
+        let now = self.now_ms();
+        let mut lanes = self.lanes.lock().unwrap();
+        match lanes.iter_mut().find(|l| l.name == name) {
+            Some(l) => {
+                l.last_ms = now;
+                l.steps = steps;
+                l.occupied = occupied;
+            }
+            None => lanes.push(LaneBeat { name: name.to_string(), last_ms: now, steps, occupied }),
+        }
+    }
+
+    /// A lane was dropped (quarantine, eviction): forget its beat so a
+    /// dead lane cannot keep the verdict degraded forever.
+    pub fn lane_gone(&self, name: &str) {
+        self.lanes.lock().unwrap().retain(|l| l.name != name);
+    }
+
+    /// Flip to draining: wins over every other verdict, never unflips.
+    pub fn set_draining(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Current verdict plus a human detail string.
+    pub fn status(&self) -> (HealthStatus, String) {
+        if self.is_draining() {
+            return (HealthStatus::Draining, String::new());
+        }
+        let now = self.now_ms();
+        let lanes = self.lanes.lock().unwrap();
+        // A lane with occupied slots must keep stepping; silence past the
+        // threshold means the decode thread is wedged (or a step is
+        // pathologically slow — equally worth paging about).
+        let mut worst: Option<(&str, u64)> = None;
+        for l in lanes.iter().filter(|l| l.occupied > 0) {
+            let silent = now.saturating_sub(l.last_ms);
+            if silent > self.stuck_after_ms {
+                match worst {
+                    Some((_, w)) if silent <= w => {}
+                    _ => worst = Some((&l.name, silent)),
+                }
+            }
+        }
+        if let Some((name, silent)) = worst {
+            return (HealthStatus::Degraded, format!("lane={name} stuck_ms={silent}"));
+        }
+        let occupied: usize = lanes.iter().map(|l| l.occupied).sum();
+        let loop_beat = self.loop_beat_ms.load(Ordering::Relaxed);
+        if occupied > 0 && loop_beat > 0 {
+            let silent = now.saturating_sub(loop_beat - 1);
+            if silent > self.stuck_after_ms {
+                return (HealthStatus::Degraded, format!("loop stuck_ms={silent}"));
+            }
+        }
+        (HealthStatus::Ok, String::new())
+    }
+
+    /// The `HEALTH` wire payload (after `OK HEALTH `).
+    pub fn wire_line(&self) -> String {
+        let (status, detail) = self.status();
+        let uptime = self.started.elapsed().as_secs();
+        if detail.is_empty() {
+            format!("{status} uptime={uptime}s")
+        } else {
+            format!("{status} {detail} uptime={uptime}s")
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_silence_is_ok_but_occupied_silence_degrades() {
+        let m = HealthMonitor::new(Duration::from_millis(20));
+        m.beat_loop();
+        m.beat_lane("alpha", 1, 0);
+        assert_eq!(m.status().0, HealthStatus::Ok, "no occupancy, silence is idle");
+
+        m.beat_lane("alpha", 2, 3); // three slots mid-decode...
+        std::thread::sleep(Duration::from_millis(40)); // ...then silence
+        let (status, detail) = m.status();
+        assert_eq!(status, HealthStatus::Degraded);
+        assert!(detail.starts_with("lane=alpha stuck_ms="), "{detail}");
+        assert!(m.wire_line().starts_with("degraded lane=alpha "), "{}", m.wire_line());
+
+        // Progress resumes: verdict recovers without any reset call.
+        m.beat_lane("alpha", 3, 3);
+        m.beat_loop();
+        assert_eq!(m.status().0, HealthStatus::Ok);
+
+        // The lane drains to empty: silence is fine again.
+        m.beat_lane("alpha", 4, 0);
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(m.status().0, HealthStatus::Ok);
+    }
+
+    #[test]
+    fn removed_lanes_stop_counting_and_draining_wins() {
+        let m = HealthMonitor::new(Duration::from_millis(10));
+        m.beat_lane("beta", 5, 2);
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(m.status().0, HealthStatus::Degraded);
+        m.lane_gone("beta");
+        assert_eq!(m.status().0, HealthStatus::Ok, "quarantined lane must not page forever");
+
+        m.beat_lane("beta", 6, 2);
+        m.set_draining();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(m.status().0, HealthStatus::Draining, "draining wins over degraded");
+        assert!(m.is_draining());
+        assert!(m.wire_line().starts_with("draining"));
+    }
+}

@@ -89,6 +89,7 @@ pub mod batcher;
 #[cfg(unix)]
 pub mod eventloop;
 pub mod faults;
+pub mod health;
 pub mod protocol;
 pub mod registry;
 pub mod session;
@@ -96,5 +97,6 @@ pub mod tcp;
 
 pub use batcher::{BatcherConfig, InferenceServer, Reply, Request, Respond, Response, Work};
 pub use faults::FaultPlan;
+pub use health::{HealthMonitor, HealthStatus};
 pub use registry::ModelRegistry;
 pub use session::SessionStore;

@@ -9,7 +9,19 @@
 //! STATS                                           server metrics (one-line JSON)
 //! STATS TEXT                                      …human-readable form
 //! RELOAD <name>                                   operator: re-publish a model
+//! DRAIN                                           operator: stop admission, snapshot sessions
+//! HEALTH                                          liveness probe (see below)
 //! ```
+//!
+//! `DRAIN` is the zero-downtime-ops verb (also triggered by SIGTERM): new
+//! generations answer `ERR DRAINING`, in-flight decodes finish up to the
+//! drain deadline, and every saved session is serialized to the server's
+//! `--snapshot` path — a restarted server started with `--restore` revives
+//! them bit-exactly. `HEALTH` is answered **by the front end itself** from
+//! the shared [`crate::server::HealthMonitor`], never via the batcher's
+//! work channel, so a wedged batcher thread is precisely what the probe
+//! can still report (`ok`, `degraded` with the stuck lane named, or
+//! `draining`).
 //!
 //! The optional trailing `MODEL <name>` selects a model from the server's
 //! registry (`amq serve --model name=path.amqz`, repeatable); omitting it
@@ -29,6 +41,8 @@
 //! OK GEN <tok,tok,...>
 //! OK SCORE <ppw>
 //! OK END | OK STATS <json-or-text> | OK RELOAD <name> | ERR <message>
+//! OK DRAIN <sessions> <path>                      sessions snapshotted, where
+//! OK HEALTH <status> [detail] uptime=<n>s         status ∈ ok|degraded|draining
 //! ERR BUSY queue full (<queued>/<depth>)          load shed — retry later
 //! ```
 //!
@@ -54,6 +68,8 @@
 //! | `ERR no models configured`                   | registry empty / no default |
 //! | `ERR BUSY queue full (<q>/<d>)`              | admission control shed |
 //! | `ERR DEADLINE request exceeded <n>ms deadline` | `--request-deadline-ms` expiry; the session drops as if `END` arrived |
+//! | `ERR DRAINING <why>`                         | server is draining: new generations refused, stragglers cut at the drain deadline, or `DRAIN` with no `--snapshot` path |
+//! | `ERR MODEL_CORRUPT <name> <section>: <why>`  | checksum verification refused a damaged `.amqz` (the failed section is named), or a republished file's config disagrees with the serving lane |
 //! | `ERR MODEL_POISONED model '<name>' …`        | the model's lane panicked; quarantined until `RELOAD <name>` succeeds |
 //! | `ERR INTERNAL <context>`                     | server-side invariant failure (e.g. the lane serving this request panicked) |
 //! | `ERR request line exceeds MAX_LINE`          | framing abuse; connection closes |
@@ -85,6 +101,10 @@ pub enum WireRequest {
     End { session: u64, model: Option<String> },
     Stats { text: bool },
     Reload { model: String },
+    Drain,
+    /// Answered front-end-side from the shared `HealthMonitor`; never
+    /// enters the batcher's work channel.
+    Health,
 }
 
 pub fn parse_request(line: &str) -> Result<WireRequest> {
@@ -134,6 +154,14 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             no_trailing(&mut parts)?;
             Ok(WireRequest::Reload { model })
         }
+        "DRAIN" => {
+            no_trailing(&mut parts)?;
+            Ok(WireRequest::Drain)
+        }
+        "HEALTH" => {
+            no_trailing(&mut parts)?;
+            Ok(WireRequest::Health)
+        }
         other => bail!("unknown verb '{other}'"),
     }
 }
@@ -175,6 +203,7 @@ pub fn format_reply(reply: &Reply) -> String {
         }
         Reply::Stats(s) => format!("OK STATS {s}"),
         Reply::Reloaded(name) => format!("OK RELOAD {name}"),
+        Reply::Drained { sessions, path } => format!("OK DRAIN {sessions} {path}"),
         Reply::Error(msg) => format!("ERR {msg}"),
         Reply::Busy { queued, depth } => format!("ERR BUSY queue full ({queued}/{depth})"),
     }
@@ -288,6 +317,16 @@ mod tests {
     }
 
     #[test]
+    fn parse_drain_and_health() {
+        assert_eq!(parse_request("DRAIN").unwrap(), WireRequest::Drain);
+        assert_eq!(parse_request("HEALTH").unwrap(), WireRequest::Health);
+        for line in ["DRAIN now", "HEALTH TEXT", "DRAIN MODEL m"] {
+            let err = parse_request(line).unwrap_err().to_string();
+            assert!(err.contains("trailing field"), "{line:?} → {err}");
+        }
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse_request("GEN x 10 1").is_err());
         assert!(parse_request("GEN 1 0 1").is_err());
@@ -324,6 +363,10 @@ mod tests {
         assert_eq!(format_reply(&Reply::End(false)), "OK END (no such session)");
         assert_eq!(format_reply(&Reply::Stats("{}".into())), "OK STATS {}");
         assert_eq!(format_reply(&Reply::Reloaded("beta".into())), "OK RELOAD beta");
+        assert_eq!(
+            format_reply(&Reply::Drained { sessions: 3, path: "/tmp/s.amqs".into() }),
+            "OK DRAIN 3 /tmp/s.amqs"
+        );
         assert_eq!(
             format_reply(&Reply::Error("token 99 out of vocab 40".into())),
             "ERR token 99 out of vocab 40"

@@ -37,6 +37,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::data::amqz;
+use crate::model::lm::LmConfig;
 use crate::model::RnnLm;
 use crate::server::faults::FaultPlan;
 
@@ -54,6 +55,11 @@ pub struct ModelEntry {
     pub bytes: usize,
     /// Logical timestamp of the last acquire — the LRU key.
     last_used: u64,
+    /// The config this entry's serving lane was built for, pinned at the
+    /// first load. A republished `.amqz` whose header disagrees is refused
+    /// on implicit re-acquire (the lane's saved session states are shaped
+    /// for this config); an explicit `RELOAD` adopts the new config.
+    expected: Option<LmConfig>,
     /// Requests served while resident (admission-time acquires).
     pub hits: u64,
     /// Cold loads from disk.
@@ -134,6 +140,7 @@ impl ModelRegistry {
             return Err(format!("model name '{name}' already registered"));
         }
         let bytes = model.as_ref().map_or(0, |m| m.bytes());
+        let expected = model.as_ref().map(|m| m.config);
         self.entries.push(ModelEntry {
             name: name.to_string(),
             path,
@@ -141,6 +148,7 @@ impl ModelRegistry {
             poisoned: false,
             bytes,
             last_used: 0,
+            expected,
             hits: 0,
             loads: 0,
             evictions: 0,
@@ -244,9 +252,25 @@ impl ModelRegistry {
                 if faults.as_ref().is_some_and(|f| f.on_model_load(name)) {
                     return Err(format!("model {name}: injected fault: corrupt load"));
                 }
-                let model = Arc::new(
-                    amqz::load_model(&path).map_err(|e| format!("model {name}: {e:#}"))?,
-                );
+                let model = Arc::new(amqz::load_model(&path).map_err(|e| {
+                    match e.downcast_ref::<amqz::CorruptModel>() {
+                        // Checksum-verified damage gets its own wire-ready
+                        // taxonomy entry, naming the failed section.
+                        Some(c) => format!("MODEL_CORRUPT {name} {}: {}", c.section, c.detail),
+                        None => format!("model {name}: {e:#}"),
+                    }
+                })?);
+                match entry.expected {
+                    Some(cfg) if cfg != model.config => {
+                        return Err(format!(
+                            "MODEL_CORRUPT {name} header: on-disk config {:?} disagrees \
+                             with the serving lane's {cfg:?}; RELOAD {name} to adopt a \
+                             republished model",
+                            model.config
+                        ));
+                    }
+                    _ => entry.expected = Some(model.config),
+                }
                 entry.model = Some(Arc::clone(&model));
                 entry.bytes = model.bytes();
                 entry.loads += 1;
@@ -295,13 +319,14 @@ impl ModelRegistry {
         name: &str,
         idle: impl Fn(&str) -> bool,
     ) -> Result<(Arc<RnnLm>, Vec<String>), String> {
-        let was_poisoned = {
+        let (was_poisoned, was_expected) = {
             let entry =
                 self.entry_mut(name).ok_or_else(|| format!("unknown model '{name}'"))?;
-            let was = entry.poisoned;
+            let was = (entry.poisoned, entry.expected);
             entry.poisoned = false;
             if entry.path.is_some() {
                 entry.model = None; // force a fresh read from disk
+                entry.expected = None; // an explicit RELOAD may change config
             }
             was
         };
@@ -310,6 +335,7 @@ impl ModelRegistry {
             Err(msg) => {
                 if let Some(e) = self.entry_mut(name) {
                     e.poisoned = was_poisoned;
+                    e.expected = was_expected;
                 }
                 Err(msg)
             }
@@ -428,6 +454,51 @@ mod tests {
         assert!(r.acquire("b", |_| true).is_ok());
         assert_eq!(plan.injected(), 1);
         std::fs::remove_file(pb).unwrap();
+    }
+
+    #[test]
+    fn corrupt_files_are_refused_with_the_model_corrupt_taxonomy() {
+        let pb = publish(6, "corrupt_b");
+        let mut r = ModelRegistry::new(0);
+        r.register_path("b", pb.clone()).unwrap();
+        // Flip one byte mid-file: a per-section CRC catches it and the
+        // error is wire-ready (`ERR MODEL_CORRUPT <name> <section>`).
+        let mut bytes = std::fs::read(&pb).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x04;
+        std::fs::write(&pb, &bytes).unwrap();
+        let err = r.acquire("b", |_| true).unwrap_err();
+        assert!(err.starts_with("MODEL_CORRUPT b "), "{err}");
+        std::fs::remove_file(pb).unwrap();
+    }
+
+    #[test]
+    fn config_changes_are_refused_on_reacquire_but_adopted_by_reload() {
+        let (pa, pb) = (publish(7, "cfg_a"), publish(8, "cfg_b"));
+        let one = tiny(1).bytes();
+        let mut r = ModelRegistry::new(one + one / 2);
+        r.register_path("a", pa.clone()).unwrap();
+        r.register_path("b", pb.clone()).unwrap();
+        r.acquire("a", |_| true).unwrap();
+        let (_, ev) = r.acquire("b", |_| true).unwrap();
+        assert_eq!(ev, vec!["a".to_string()], "budget fits ~1.5 models");
+
+        // Republish `a` with a different hidden size while it is evicted:
+        // its lane's saved sessions are shaped for the old config, so a
+        // silent swap on re-acquire must be refused.
+        let config = LmConfig { kind: RnnKind::Gru, vocab: 30, hidden: 16, layers: 1 };
+        let bigger = RnnLm::random(config, 9, PrecisionPolicy::quantized(2, 2));
+        crate::data::amqz::save(&pa, &bigger.to_packed().unwrap()).unwrap();
+        let err = r.acquire("a", |_| true).unwrap_err();
+        assert!(err.starts_with("MODEL_CORRUPT a header:"), "{err}");
+
+        // An explicit operator RELOAD adopts the republished config.
+        let (m, _) = r.reload("a", |_| true).unwrap();
+        assert_eq!(m.config.hidden, 16);
+        assert!(r.acquire("a", |_| true).is_ok());
+        for p in [pa, pb] {
+            std::fs::remove_file(p).unwrap();
+        }
     }
 
     #[test]

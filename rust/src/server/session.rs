@@ -3,11 +3,23 @@
 //! Each conversation keeps its recurrent state (`h`, `c`) server-side so a
 //! follow-up request continues where the last one stopped. Bounded with LRU
 //! eviction; evictions are surfaced in the metrics.
+//!
+//! Alongside the state, the store keeps a short **token history** per
+//! session (the most recent [`HISTORY_CAP`] prime + generated tokens).
+//! History lives in its own map so it survives the `take`/`put` cycle a
+//! session goes through while occupying a decode slot; it dies with the
+//! session (END, LRU eviction, TTL reaping). Drain-time snapshots persist
+//! it next to the state so a restored server can show where each revived
+//! session left off.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use crate::model::lm::LmState;
+
+/// Most recent tokens retained per session (prime + generated, oldest
+/// dropped first). Bounds snapshot size without touching decode state.
+pub const HISTORY_CAP: usize = 64;
 
 /// One stored session: logical recency for LRU, wall-clock recency for
 /// TTL reaping, and the recurrent state itself.
@@ -22,13 +34,21 @@ pub struct SessionStore {
     max_sessions: usize,
     clock: u64,
     map: HashMap<u64, Entry>,
+    /// Token history, kept out of `Entry` so it survives `take`.
+    histories: HashMap<u64, Vec<usize>>,
     pub evictions: u64,
 }
 
 impl SessionStore {
     pub fn new(max_sessions: usize) -> Self {
         assert!(max_sessions >= 1);
-        SessionStore { max_sessions, clock: 0, map: HashMap::new(), evictions: 0 }
+        SessionStore {
+            max_sessions,
+            clock: 0,
+            map: HashMap::new(),
+            histories: HashMap::new(),
+            evictions: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -40,6 +60,7 @@ impl SessionStore {
     }
 
     /// Fetch a session's state (bumps recency), or `None` for new sessions.
+    /// The session's history stays behind — it is rejoined on `put`.
     pub fn take(&mut self, id: u64) -> Option<LmState> {
         self.clock += 1;
         self.map.remove(&id).map(|e| e.state)
@@ -51,13 +72,30 @@ impl SessionStore {
         if !self.map.contains_key(&id) && self.map.len() >= self.max_sessions {
             if let Some((&lru, _)) = self.map.iter().min_by_key(|(_, e)| e.last_used) {
                 self.map.remove(&lru);
+                self.histories.remove(&lru);
                 self.evictions += 1;
             }
         }
         self.map.insert(id, Entry { last_used: self.clock, touched: Instant::now(), state });
     }
 
+    /// Append decoded tokens to a stored session's history, keeping the
+    /// most recent [`HISTORY_CAP`]. Call after `put` — history for a
+    /// session with no stored state would leak.
+    pub fn append_history(&mut self, id: u64, tokens: &[usize]) {
+        if !self.map.contains_key(&id) {
+            return;
+        }
+        let h = self.histories.entry(id).or_default();
+        h.extend_from_slice(tokens);
+        if h.len() > HISTORY_CAP {
+            let excess = h.len() - HISTORY_CAP;
+            h.drain(..excess);
+        }
+    }
+
     pub fn remove(&mut self, id: u64) -> bool {
+        self.histories.remove(&id);
         self.map.remove(&id).is_some()
     }
 
@@ -65,8 +103,31 @@ impl SessionStore {
     /// if `END` had arrived for each. Returns how many were reaped.
     pub fn reap_idle(&mut self, ttl: Duration, now: Instant) -> usize {
         let before = self.map.len();
-        self.map.retain(|_, e| now.duration_since(e.touched) < ttl);
+        let histories = &mut self.histories;
+        self.map.retain(|id, e| {
+            let keep = now.duration_since(e.touched) < ttl;
+            if !keep {
+                histories.remove(id);
+            }
+            keep
+        });
         before - self.map.len()
+    }
+
+    /// Every stored session with its state and history, in unspecified
+    /// order (drain snapshots sort by id for determinism).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &LmState, &[usize])> {
+        self.map.iter().map(|(&id, e)| {
+            (id, &e.state, self.histories.get(&id).map_or(&[][..], Vec::as_slice))
+        })
+    }
+
+    /// Revive a snapshotted session: state + history in one call.
+    pub fn restore(&mut self, id: u64, state: LmState, history: Vec<usize>) {
+        self.put(id, state);
+        if !history.is_empty() {
+            self.histories.insert(id, history);
+        }
     }
 }
 
@@ -146,5 +207,45 @@ mod tests {
         assert_eq!(reaped, 1);
         assert!(s.take(1).is_none(), "1 was idle past the TTL");
         assert!(s.take(2).is_some(), "2 was touched recently");
+    }
+
+    #[test]
+    fn history_survives_take_put_and_caps_at_the_limit() {
+        let mut s = SessionStore::new(4);
+        s.put(1, st(1.0));
+        s.append_history(1, &[10, 11, 12]);
+        // A decode cycle: the state leaves for a slot and comes back.
+        let state = s.take(1).unwrap();
+        s.put(1, state);
+        s.append_history(1, &[13]);
+        let got: Vec<(u64, Vec<usize>)> =
+            s.iter().map(|(id, _, h)| (id, h.to_vec())).collect();
+        assert_eq!(got, vec![(1, vec![10, 11, 12, 13])]);
+
+        // Overflow keeps only the most recent HISTORY_CAP tokens.
+        let many: Vec<usize> = (0..HISTORY_CAP + 9).collect();
+        s.append_history(1, &many);
+        let (_, _, h) = s.iter().next().unwrap();
+        assert_eq!(h.len(), HISTORY_CAP);
+        assert_eq!(h[h.len() - 1], HISTORY_CAP + 8, "newest token retained");
+
+        // History dies with the session.
+        s.remove(1);
+        s.put(1, st(2.0));
+        let (_, _, h) = s.iter().next().unwrap();
+        assert!(h.is_empty(), "END must clear history");
+
+        // Histories are never appended for unknown sessions.
+        s.append_history(99, &[1]);
+        assert!(s.iter().all(|(id, _, _)| id != 99));
+    }
+
+    #[test]
+    fn restore_revives_state_and_history_together() {
+        let mut s = SessionStore::new(4);
+        s.restore(5, st(0.25), vec![7, 8]);
+        let (_, _, h) = s.iter().next().unwrap();
+        assert_eq!(h, &[7, 8]);
+        assert_eq!(s.take(5).unwrap(), st(0.25));
     }
 }

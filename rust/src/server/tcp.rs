@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Request, Respond, Work};
+use super::health::HealthMonitor;
 use super::protocol::{format_reply, parse_request, split_lines, WireRequest, MAX_LINE};
 
 /// Bind and serve until `shutdown` flips (spawns a thread per connection,
@@ -30,6 +31,19 @@ pub fn serve(
     shutdown: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
+    serve_with_health(addr, work, shutdown, None, on_bound)
+}
+
+/// [`serve`] with a shared [`HealthMonitor`]: `HEALTH` lines are answered
+/// directly by the connection handler — never via the work channel — so a
+/// wedged batcher thread cannot wedge the probe that reports it.
+pub fn serve_with_health(
+    addr: &str,
+    work: Sender<Work>,
+    shutdown: Arc<AtomicBool>,
+    health: Option<Arc<HealthMonitor>>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
@@ -39,8 +53,9 @@ pub fn serve(
             Ok((stream, _peer)) => {
                 let tx = work.clone();
                 let flag = shutdown.clone();
+                let hm = health.clone();
                 handlers.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, tx, flag);
+                    let _ = handle_conn_with(stream, tx, flag, hm);
                 }));
                 // Reap finished handlers so the vec stays proportional to
                 // *live* connections, not connections ever accepted.
@@ -68,6 +83,17 @@ pub fn serve(
 /// valid pipelined line cannot disarm the oversize guard and a client
 /// cannot grow the buffer without bound.
 pub fn handle_conn(stream: TcpStream, work: Sender<Work>, shutdown: Arc<AtomicBool>) -> Result<()> {
+    handle_conn_with(stream, work, shutdown, None)
+}
+
+/// [`handle_conn`] with the shared health monitor (see
+/// [`serve_with_health`]).
+pub fn handle_conn_with(
+    stream: TcpStream,
+    work: Sender<Work>,
+    shutdown: Arc<AtomicBool>,
+    health: Option<Arc<HealthMonitor>>,
+) -> Result<()> {
     // A short read timeout keeps the handler responsive to shutdown while
     // the client is idle.
     stream.set_read_timeout(Some(Duration::from_millis(100)))?;
@@ -102,7 +128,7 @@ pub fn handle_conn(stream: TcpStream, work: Sender<Work>, shutdown: Arc<AtomicBo
             Err(e) => return Err(e.into()),
         }
         for line in lines.drain(..) {
-            let reply = handle_line(&line, &work);
+            let reply = handle_line_with(&line, &work, health.as_deref());
             writer.write_all(reply.as_bytes())?;
             writer.write_all(b"\n")?;
         }
@@ -119,10 +145,27 @@ pub fn handle_conn(stream: TcpStream, work: Sender<Work>, shutdown: Arc<AtomicBo
 /// Pure request→reply step (unit-testable without sockets): parse, send to
 /// the batcher with a rendezvous channel, block for the reply, format it.
 pub fn handle_line(line: &str, work: &Sender<Work>) -> String {
+    handle_line_with(line, work, None)
+}
+
+/// [`handle_line`] with the shared health monitor. `HEALTH` short-circuits
+/// here — it must answer even when the batcher thread is wedged, so it
+/// never enters the work channel.
+pub fn handle_line_with(
+    line: &str,
+    work: &Sender<Work>,
+    health: Option<&HealthMonitor>,
+) -> String {
     let req = match parse_request(line) {
         Ok(req) => req,
         Err(e) => return format!("ERR {e}"),
     };
+    if matches!(req, WireRequest::Health) {
+        return match health {
+            Some(h) => format!("OK HEALTH {}", h.wire_line()),
+            None => "ERR INTERNAL no health monitor wired to this front end".into(),
+        };
+    }
     let (tx, rx) = mpsc::channel();
     let respond = Respond::Channel(tx);
     let w = match req {
@@ -138,6 +181,8 @@ pub fn handle_line(line: &str, work: &Sender<Work>) -> String {
         WireRequest::End { session, model } => Work::End { session, model, respond },
         WireRequest::Stats { text } => Work::Stats { text, respond },
         WireRequest::Reload { model } => Work::Reload { model, respond },
+        WireRequest::Drain => Work::Drain { respond },
+        WireRequest::Health => unreachable!("HEALTH short-circuits above"),
     };
     if work.send(w).is_err() {
         return "ERR server shutting down".into();

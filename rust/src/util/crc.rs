@@ -1,0 +1,152 @@
+//! CRC32C (Castagnoli, reflected polynomial `0x82F63B78`) — the checksum
+//! guarding every `.amqz` section and session-snapshot file. Software
+//! slice-by-8, std-only: eight 256-entry tables built at compile time, the
+//! hot loop folds 8 input bytes per iteration with no data-dependent
+//! branches. iSCSI/RFC 3720 test vectors pin the exact bit order below.
+//!
+//! Why CRC32C and not a cryptographic hash: the threat model is torn
+//! writes, truncation, and bit rot — not an adversary forging a model file
+//! — and a 4-byte checksum per section keeps the format overhead
+//! negligible while detecting every burst error a crash can plausibly
+//! produce.
+
+const POLY: u32 = 0x82F6_3B78;
+
+/// `TABLES[k][b]`: the CRC contribution of byte value `b` seen `k` bytes
+/// before the end of an 8-byte group.
+static TABLES: [[u32; 256]; 8] = build_tables();
+
+const fn build_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            j += 1;
+        }
+        t[0][i] = crc;
+        i += 1;
+    }
+    let mut k = 1;
+    while k < 8 {
+        let mut i = 0;
+        while i < 256 {
+            let prev = t[k - 1][i];
+            t[k][i] = (prev >> 8) ^ t[0][(prev & 0xff) as usize];
+            i += 1;
+        }
+        k += 1;
+    }
+    t
+}
+
+/// CRC32C of `data` in one call.
+pub fn crc32c(data: &[u8]) -> u32 {
+    crc32c_append(0, data)
+}
+
+/// Continue a CRC32C over more bytes: `crc32c_append(crc32c(a), b) ==
+/// crc32c(a ++ b)`. Lets writers checksum sections as they stream them out
+/// and readers verify ranges of a larger arena without copying.
+pub fn crc32c_append(crc: u32, data: &[u8]) -> u32 {
+    let mut crc = !crc;
+    let mut groups = data.chunks_exact(8);
+    for g in groups.by_ref() {
+        let low = crc ^ u32::from_le_bytes([g[0], g[1], g[2], g[3]]);
+        crc = TABLES[7][(low & 0xff) as usize]
+            ^ TABLES[6][((low >> 8) & 0xff) as usize]
+            ^ TABLES[5][((low >> 16) & 0xff) as usize]
+            ^ TABLES[4][(low >> 24) as usize]
+            ^ TABLES[3][g[4] as usize]
+            ^ TABLES[2][g[5] as usize]
+            ^ TABLES[1][g[6] as usize]
+            ^ TABLES[0][g[7] as usize];
+    }
+    for &b in groups.remainder() {
+        crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xff) as usize];
+    }
+    !crc
+}
+
+/// Streaming hasher over the same function (writers that produce a file in
+/// several `write` calls).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Crc32c {
+    state: u32,
+}
+
+impl Crc32c {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        self.state = crc32c_append(self.state, data);
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bit-at-a-time reference — the definition the tables must match.
+    fn reference(data: &[u8]) -> u32 {
+        let mut crc = !0u32;
+        for &b in data {
+            crc ^= b as u32;
+            for _ in 0..8 {
+                crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            }
+        }
+        !crc
+    }
+
+    #[test]
+    fn known_answer_vectors() {
+        // The canonical check value plus the RFC 3720 (iSCSI) vectors.
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+        assert_eq!(crc32c(b"a"), 0xC1D0_4330);
+        assert_eq!(crc32c(&[0u8; 32]), 0x8A91_36AA);
+        assert_eq!(crc32c(&[0xffu8; 32]), 0x62A8_AB43);
+        let ascending: Vec<u8> = (0u8..32).collect();
+        assert_eq!(crc32c(&ascending), 0x46DD_794E);
+        let descending: Vec<u8> = (0u8..32).rev().collect();
+        assert_eq!(crc32c(&descending), 0x113F_DB5C);
+    }
+
+    #[test]
+    fn slice_by_8_matches_bitwise_reference_at_every_length() {
+        // Lengths straddling the 8-byte grouping, pseudo-random content.
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let data: Vec<u8> = (0..257)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 56) as u8
+            })
+            .collect();
+        for len in 0..data.len() {
+            assert_eq!(crc32c(&data[..len]), reference(&data[..len]), "length {len}");
+        }
+    }
+
+    #[test]
+    fn append_composes_and_streaming_hasher_agrees() {
+        let data = b"alternating multi-bit quantization for recurrent neural networks";
+        for split in 0..data.len() {
+            let (a, b) = data.split_at(split);
+            assert_eq!(crc32c_append(crc32c(a), b), crc32c(data), "split {split}");
+        }
+        let mut h = Crc32c::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finish(), crc32c(data));
+    }
+}

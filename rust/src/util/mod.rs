@@ -5,6 +5,7 @@
 //! so these substrates are implemented in-tree instead of pulling `rand`,
 //! `criterion`, or `proptest`.
 
+pub mod crc;
 pub mod prop;
 pub mod rng;
 pub mod stats;

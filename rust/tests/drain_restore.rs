@@ -1,0 +1,269 @@
+//! Zero-downtime ops, end to end over real TCP on BOTH front ends:
+//!
+//! * **drain → snapshot → restart → restore is byte-identical**: a session
+//!   generated on instance A, drained to a checksummed `.amqs` snapshot,
+//!   and revived on a fresh instance B must produce exactly the tokens the
+//!   same session would have produced on one uninterrupted server — zero
+//!   tolerance, compared reply-line for reply-line.
+//! * **mid-decode drains cut stragglers**: a generation still in a slot
+//!   when the drain deadline lapses answers `ERR DRAINING` and its session
+//!   is dropped (the client cannot know how far it got), while the drain
+//!   itself still completes and snapshots what remains.
+//! * **a torn publish is refused at load**: `save_with_faults` with
+//!   `torn_write=N` mangles a published `.amqz`; serving it must answer
+//!   `ERR MODEL_CORRUPT <name> <section>: …` — and the STATS counters
+//!   (`faults_injected`, `corrupt_loads_rejected`) must cross-check against
+//!   the plan's own fire count exactly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use amq::data::amqz;
+use amq::exec::{Exec, ExecConfig};
+use amq::model::lm::{LmConfig, PrecisionPolicy, RnnKind, RnnLm};
+use amq::server::batcher::{BatcherConfig, InferenceServer, Work};
+use amq::server::{tcp, FaultPlan, ModelRegistry};
+
+const VOCAB: usize = 40;
+
+fn model() -> Arc<RnnLm> {
+    Arc::new(RnnLm::random(
+        LmConfig { kind: RnnKind::Lstm, vocab: VOCAB, hidden: 16, layers: 1 },
+        5,
+        PrecisionPolicy::quantized(2, 2),
+    ))
+}
+
+fn temp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("drain_restore_{}_{tag}", std::process::id()))
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    conn
+}
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("server reply");
+    line.trim_end().to_string()
+}
+
+/// One request on a fresh connection; returns the single reply line.
+fn one_shot(addr: SocketAddr, line: &str) -> String {
+    let mut conn = connect(addr);
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    read_line(&mut BufReader::new(conn))
+}
+
+/// A live front end serving one batcher; `stop` tears the whole stack down.
+struct Running {
+    addr: SocketAddr,
+    stop: Box<dyn FnOnce()>,
+}
+
+fn spawn_tcp(server: InferenceServer) -> Running {
+    let health = server.health.clone();
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = shutdown.clone();
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let tx2 = tx.clone();
+    let srv = std::thread::spawn(move || {
+        tcp::serve_with_health("127.0.0.1:0", tx2, flag, Some(health), move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv().unwrap();
+    Running {
+        addr,
+        stop: Box::new(move || {
+            shutdown.store(true, Ordering::SeqCst);
+            srv.join().unwrap().unwrap();
+            tx.send(Work::Shutdown).unwrap();
+            batcher.join().unwrap();
+        }),
+    }
+}
+
+#[cfg(unix)]
+fn spawn_eventloop(server: InferenceServer) -> Running {
+    use amq::server::eventloop::{self, EventLoopConfig};
+    let health = server.health.clone();
+    let (tx, rx) = mpsc::channel::<Work>();
+    let batcher = std::thread::spawn(move || server.run(rx));
+    let cfg = EventLoopConfig { loops: 2, health: Some(health), ..Default::default() };
+    let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
+    let addr = srv.addr;
+    Running {
+        addr,
+        stop: Box::new(move || {
+            srv.shutdown();
+            tx.send(Work::Shutdown).unwrap();
+            batcher.join().unwrap();
+        }),
+    }
+}
+
+fn cfg(continuous: bool, snapshot: Option<PathBuf>) -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 4,
+        continuous,
+        max_slots: 4,
+        queue_depth: 16,
+        exec: ExecConfig::serial(),
+        snapshot_path: snapshot,
+        drain_deadline: Duration::from_millis(2000),
+        ..Default::default()
+    }
+}
+
+/// The full rolling-restart cycle against one front end. The reference is
+/// an uninterrupted server answering the same two sequential requests on
+/// one session — the drained-and-restored pair must match it reply-line
+/// for reply-line.
+fn drain_restore_cycle(tag: &str, continuous: bool, spawn: &dyn Fn(InferenceServer) -> Running) {
+    let snap = temp(&format!("snap_{tag}.amqs"));
+    let m = model();
+
+    let reference = spawn(InferenceServer::new(m.clone(), cfg(continuous, None)));
+    let first_ref = one_shot(reference.addr, "GEN 9 3 4");
+    let second_ref = one_shot(reference.addr, "GEN 9 3 11");
+    assert!(first_ref.starts_with("OK GEN "), "{first_ref}");
+    assert!(second_ref.starts_with("OK GEN "), "{second_ref}");
+    (reference.stop)();
+
+    // Instance A: serve the first request, then drain.
+    let a = spawn(InferenceServer::new(m.clone(), cfg(continuous, Some(snap.clone()))));
+    assert_eq!(one_shot(a.addr, "GEN 9 3 4"), first_ref, "{tag}: pre-drain decode diverged");
+    let drained = one_shot(a.addr, "DRAIN");
+    assert!(drained.starts_with("OK DRAIN 1 "), "{tag}: one saved session: {drained}");
+    assert_eq!(
+        one_shot(a.addr, "GEN 10 3 4"),
+        "ERR DRAINING server is draining; retry against another instance",
+        "{tag}: admission must stop after a drain"
+    );
+    let health = one_shot(a.addr, "HEALTH");
+    assert!(health.starts_with("OK HEALTH draining"), "{tag}: {health}");
+    let stats = one_shot(a.addr, "STATS");
+    assert!(stats.contains("\"drains\":1"), "{tag}: {stats}");
+    assert!(stats.contains("\"sessions_snapshotted\":1"), "{tag}: {stats}");
+    assert!(stats.contains("\"health\":\"draining\""), "{tag}: {stats}");
+    (a.stop)();
+
+    // Instance B: fresh process stand-in — restore before serving, then
+    // the session's next request must continue bit-exactly.
+    let mut fresh = InferenceServer::new(m.clone(), cfg(continuous, Some(snap.clone())));
+    assert_eq!(fresh.restore_sessions(&snap).unwrap(), 1, "{tag}: one session to revive");
+    let b = spawn(fresh);
+    assert_eq!(
+        one_shot(b.addr, "GEN 9 3 11"),
+        second_ref,
+        "{tag}: restored continuation must be byte-identical to the uninterrupted run"
+    );
+    let stats = one_shot(b.addr, "STATS");
+    assert!(stats.contains("\"sessions_restored\":1"), "{tag}: {stats}");
+    assert!(stats.contains("\"health\":\"ok\""), "{tag}: a restored server is healthy: {stats}");
+    (b.stop)();
+    std::fs::remove_file(&snap).ok();
+}
+
+#[test]
+fn drain_restore_is_byte_identical_thread_per_conn() {
+    drain_restore_cycle("tcp", false, &spawn_tcp);
+}
+
+#[cfg(unix)]
+#[test]
+fn drain_restore_is_byte_identical_event_loop() {
+    drain_restore_cycle("eventloop", true, &spawn_eventloop);
+}
+
+#[cfg(unix)]
+#[test]
+fn mid_decode_drain_cuts_stragglers_over_tcp() {
+    let snap = temp("snap_cut.amqs");
+    let mut config = cfg(true, Some(snap.clone()));
+    config.drain_deadline = Duration::from_millis(0);
+    let srv = spawn_eventloop(InferenceServer::new(model(), config));
+
+    // One pipelined write: a generation too long to finish inside a zero
+    // drain deadline, then the drain. In-order replies: the straggler is
+    // cut first, then the drain reports zero saved sessions (the cut
+    // session dropped — the client cannot know how far it got).
+    let mut conn = connect(srv.addr);
+    conn.write_all(b"GEN 77 4096 1\nDRAIN\n").unwrap();
+    let mut r = BufReader::new(conn);
+    assert_eq!(
+        read_line(&mut r),
+        "ERR DRAINING server is draining; retry against another instance"
+    );
+    let drained = read_line(&mut r);
+    assert!(drained.starts_with("OK DRAIN 0 "), "cut sessions are not snapshotted: {drained}");
+    drop(r);
+
+    let stats = one_shot(srv.addr, "STATS");
+    assert!(stats.contains("\"drains\":1"), "{stats}");
+    assert!(stats.contains("\"sessions_snapshotted\":0"), "{stats}");
+    (srv.stop)();
+    std::fs::remove_file(&snap).ok();
+}
+
+#[test]
+fn torn_publish_is_refused_at_load_with_model_corrupt() {
+    let m = model();
+    let good_path = temp("good.amqz");
+    let torn_path = temp("torn.amqz");
+    amqz::save(&good_path, &m.to_packed().unwrap()).unwrap();
+
+    // One plan is both the publish mangler and the serving batcher's
+    // plan, so STATS `faults_injected` counts exactly the torn write and
+    // the test can cross-check injected vs rejected with no slack.
+    let plan = Arc::new(FaultPlan::parse("torn_write=96").unwrap());
+    amqz::save_with_faults(&torn_path, &m.to_packed().unwrap(), Some(plan.as_ref())).unwrap();
+    assert_eq!(plan.injected(), 1, "the torn write must have fired");
+
+    let mut registry = ModelRegistry::new(0);
+    registry.register_path("good", good_path.clone()).unwrap();
+    registry.register_path("torn", torn_path.clone()).unwrap();
+    registry.set_default("good").unwrap();
+    let server = InferenceServer::with_registry(
+        registry,
+        BatcherConfig {
+            max_batch: 2,
+            exec: ExecConfig::serial(),
+            faults: Some(plan.clone()),
+            ..Default::default()
+        },
+        Exec::serial(),
+    );
+    let srv = spawn_tcp(server);
+
+    let ok = one_shot(srv.addr, "GEN 1 3 2 MODEL good");
+    assert!(ok.starts_with("OK GEN "), "the intact publish serves: {ok}");
+    // Both the lazy first-use load and the eager RELOAD must refuse the
+    // mangled file with the wire taxonomy naming the damaged section.
+    let err = one_shot(srv.addr, "GEN 2 3 2 MODEL torn");
+    assert!(err.starts_with("ERR MODEL_CORRUPT torn "), "{err}");
+    let err = one_shot(srv.addr, "RELOAD torn");
+    assert!(err.starts_with("ERR MODEL_CORRUPT torn "), "{err}");
+
+    let stats = one_shot(srv.addr, "STATS");
+    assert!(stats.contains("\"corrupt_loads_rejected\":2"), "{stats}");
+    assert!(
+        stats.contains(&format!("\"faults_injected\":{}", plan.injected())),
+        "STATS must report exactly the plan's fire count: {stats}"
+    );
+    assert_eq!(plan.injected(), 1, "serving a torn file consults no further fault seams");
+    (srv.stop)();
+    std::fs::remove_file(&good_path).ok();
+    std::fs::remove_file(&torn_path).ok();
+}

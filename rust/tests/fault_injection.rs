@@ -427,6 +427,7 @@ fn write_stall_closes_clogged_connection() {
         write_stall: Some(Duration::from_millis(150)),
         counters: Some(counters),
         faults: Some(fp.clone()),
+        ..Default::default()
     };
     let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
 

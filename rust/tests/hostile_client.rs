@@ -123,6 +123,18 @@ fn suite(addr: SocketAddr) {
     let mut rest = Vec::new();
     assert_eq!(r.read_to_end(&mut rest).expect("clean close"), 0);
 
+    // --- Durability verbs under abuse: trailing operands reject with the
+    // documented taxonomy, a DRAIN on a server with no snapshot path
+    // refuses without wedging admission, and HEALTH answers front-end-side.
+    assert_eq!(one_shot(addr, "DRAIN now"), "ERR unexpected trailing field 'now'");
+    assert_eq!(one_shot(addr, "HEALTH TEXT"), "ERR unexpected trailing field 'TEXT'");
+    assert_eq!(
+        one_shot(addr, "DRAIN"),
+        "ERR DRAINING no snapshot path configured (start with --snapshot <path>)"
+    );
+    let health = one_shot(addr, "HEALTH");
+    assert!(health.starts_with("OK HEALTH ok uptime="), "unarmed DRAIN must not flip: {health}");
+
     // The concurrent well-formed session was bit-exact throughout.
     assert_eq!(concurrent.join().unwrap(), baseline, "hostile traffic must not perturb decode");
 
@@ -131,6 +143,8 @@ fn suite(addr: SocketAddr) {
     let stats = one_shot(addr, "STATS");
     assert!(stats.starts_with("OK STATS {"), "{stats}");
     assert!(stats.contains("\"errors\":"), "{stats}");
+    assert!(stats.contains("\"health\":\"ok\""), "{stats}");
+    assert!(stats.contains("\"drains\":0"), "refused drains must not count: {stats}");
     assert_eq!(one_shot(addr, "GEN 502 6 3,4"), baseline);
 }
 
@@ -140,6 +154,7 @@ fn hostile_clients_get_errors_not_panics_thread_per_conn() {
         model(),
         BatcherConfig { max_batch: 4, exec: ExecConfig::serial(), ..Default::default() },
     );
+    let health = server.health.clone();
     let (tx, rx) = mpsc::channel::<Work>();
     let batcher = std::thread::spawn(move || server.run(rx));
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -147,7 +162,7 @@ fn hostile_clients_get_errors_not_panics_thread_per_conn() {
     let (addr_tx, addr_rx) = mpsc::channel();
     let tx2: Sender<Work> = tx.clone();
     let srv = std::thread::spawn(move || {
-        tcp::serve("127.0.0.1:0", tx2, flag, move |a| {
+        tcp::serve_with_health("127.0.0.1:0", tx2, flag, Some(health), move |a| {
             let _ = addr_tx.send(a);
         })
     });
@@ -176,9 +191,10 @@ fn hostile_clients_get_errors_not_panics_event_loop() {
             ..Default::default()
         },
     );
+    let health = server.health.clone();
     let (tx, rx) = mpsc::channel::<Work>();
     let batcher = std::thread::spawn(move || server.run(rx));
-    let cfg = EventLoopConfig { loops: 2, ..Default::default() };
+    let cfg = EventLoopConfig { loops: 2, health: Some(health), ..Default::default() };
     let srv = eventloop::serve("127.0.0.1:0", tx.clone(), cfg).expect("event-loop bind");
 
     suite(srv.addr);

@@ -69,7 +69,22 @@ const VALID: &[&str] = &[
     "STATS",
     "STATS TEXT",
     "RELOAD beta",
+    "DRAIN",
+    "HEALTH",
 ];
+
+#[test]
+fn drain_and_health_reject_trailing_fields_with_documented_errors() {
+    // The zero-argument verbs: any operand is a documented trailing-field
+    // rejection, never a silent ignore (a typo'd `DRAIN <model>` must not
+    // drain the whole server).
+    assert!(amq::server::protocol::parse_request("DRAIN").is_ok());
+    assert!(amq::server::protocol::parse_request("HEALTH").is_ok());
+    for bad in ["DRAIN now", "HEALTH TEXT", "DRAIN MODEL m", "HEALTH 1"] {
+        let msg = amq::server::protocol::parse_request(bad).unwrap_err().to_string();
+        assert!(msg.starts_with("unexpected trailing field '"), "{bad}: {msg}");
+    }
+}
 
 #[test]
 fn random_byte_soup_never_panics_and_errors_stay_documented() {
